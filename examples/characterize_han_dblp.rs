@@ -1,0 +1,50 @@
+//! The paper's deep-dive configuration: HAN on DBLP — Table 3 metrics,
+//! Fig 4 roofline placement, and the stage/kernel-type breakdowns, in
+//! one run.
+//!
+//! ```sh
+//! cargo run --release --example characterize_han_dblp [-- --scale 0.5]
+//! ```
+
+use hgnn_char::cli::Args;
+use hgnn_char::datasets::{self, DatasetId};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::gpumodel::{roofline, GpuModel};
+use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::profiler::StageId;
+use hgnn_char::report;
+
+fn main() -> hgnn_char::Result<()> {
+    let args = Args::flags_from_env();
+    let scale = args.scale()?;
+    let hg = datasets::build(DatasetId::Dblp, &scale)?;
+    println!("{}", hg.stats_line());
+    let plan = models::han_plan(&hg, &ModelConfig::default())?;
+    println!("{}\n", plan.describe(&hg));
+
+    let mut engine = Engine::new(Backend::native());
+    let run = engine.run(&plan, &hg)?;
+
+    // -- Fig 2 row + Fig 3 rows ------------------------------------------
+    println!("{}", report::fig2_row("HAN", "DB", &run.profile));
+    print!("{}", report::fig3_rows("HAN", "DB", &run.profile));
+    println!();
+
+    // -- Table 3 ------------------------------------------------------------
+    for stage in StageId::GPU_STAGES {
+        println!("{}", report::table3_stage(stage, &run.profile.kernel_table(stage)));
+    }
+
+    // -- Fig 4 roofline -------------------------------------------------------
+    let gpu = GpuModel::default();
+    let mut points = Vec::new();
+    for stage in StageId::GPU_STAGES {
+        for (name, m, _) in run.profile.kernel_table(stage) {
+            if !points.iter().any(|p: &roofline::RooflinePoint| p.name == name) {
+                points.push(roofline::place(&gpu.spec, &name, m.ai, m.achieved_gflops));
+            }
+        }
+    }
+    println!("{}", roofline::ascii_chart(&gpu.spec, &points));
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! The paper's §4.5 comparison study (Fig 5): what makes HGNN execution
+//! different from GNN execution — dropout sweep, metapath sweep, and the
+//! parallel-NA timeline with its NA→SA barrier.
+//!
+//! ```sh
+//! cargo run --release --example hgnn_vs_gnn [-- --scale ci]
+//! ```
+
+use hgnn_char::cli::Args;
+use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
+use hgnn_char::datasets::{self, DatasetId};
+use hgnn_char::engine::Backend;
+use hgnn_char::models::{self, sweeps, ModelConfig};
+use hgnn_char::report;
+
+fn main() -> hgnn_char::Result<()> {
+    let args = Args::flags_from_env();
+    let scale = args.scale()?;
+
+    println!("== Fig 5(a): NA time vs edge dropout (HAN vs GCN, Reddit-sim) ==");
+    for (label, series) in sweeps::fig5a_dropout_sweep(&scale)? {
+        println!(
+            "{}",
+            report::sweep_series(&label, "dropout", "NA (modeled ms)", &series)
+        );
+    }
+
+    println!("== Fig 5(b): NA time vs #metapaths (HAN, DBLP) ==");
+    let series = sweeps::fig5b_metapath_sweep(&scale)?;
+    println!(
+        "{}",
+        report::sweep_series("HAN-DB", "#metapaths", "NA (modeled ms)", &series)
+    );
+
+    println!("== Fig 5(c): timeline — inter-subgraph parallelism + barrier ==");
+    let hg = datasets::build(DatasetId::Dblp, &scale)?;
+    let plan = models::han_plan(&hg, &ModelConfig::default())?;
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let run = coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 4 })?;
+    println!("{}", run.profile.timeline().render(96));
+    println!("{}", run.report.summary());
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! The paper's §4.6 exploration (Fig 6) as an interactive-style tool:
+//! walk metapaths of growing length over each HG, report sparsity,
+//! instance counts, and the fitted §5 correlation model; then sweep the
+//! metapath count and report total time.
+//!
+//! ```sh
+//! cargo run --release --example metapath_explorer [-- --scale 0.25]
+//! ```
+
+use hgnn_char::cli::Args;
+use hgnn_char::datasets::{self, DatasetId};
+use hgnn_char::metapath::{count_instances, fit_sparsity_model, sparsity::sparsity_sweep, Metapath};
+use hgnn_char::models::sweeps;
+use hgnn_char::report;
+
+fn main() -> hgnn_char::Result<()> {
+    let args = Args::flags_from_env();
+    let scale = args.scale()?;
+
+    for (dataset, seed) in
+        [(DatasetId::Imdb, "MAM"), (DatasetId::Acm, "PAP"), (DatasetId::Dblp, "APA")]
+    {
+        let hg = datasets::build(dataset, &scale)?;
+        println!("== {} ==", hg.stats_line());
+        let pts = sparsity_sweep(&hg, seed, 3)?;
+        for p in &pts {
+            let mp = Metapath::parse(&p.name)?;
+            let instances = count_instances(&hg, &mp)?;
+            println!(
+                "  {:<12} len {:>2}  nnz {:>10}  sparsity {:.4}  instances {}",
+                p.name,
+                p.length,
+                p.nnz,
+                p.sparsity,
+                hgnn_char::util::human_count(instances as f64),
+            );
+        }
+        if let Some(model) = fit_sparsity_model(&pts) {
+            println!(
+                "  fitted §5 model: log10(density) = {:.3} + {:.3}·len  (r² {:.3})",
+                model.intercept, model.slope, model.r2
+            );
+            println!(
+                "  extrapolation: predicted sparsity at len 8 = {:.4}\n",
+                model.predict_sparsity(8)
+            );
+        }
+    }
+
+    println!("== Fig 6(b): total time vs #metapaths (HAN, DBLP) ==");
+    let series = sweeps::fig6b_total_time_sweep(&scale)?;
+    println!(
+        "{}",
+        report::sweep_series("HAN-DB", "#metapaths", "total (modeled ms)", &series)
+    );
+    Ok(())
+}

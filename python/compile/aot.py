@@ -1,0 +1,225 @@
+"""AOT pipeline: lower the L2 JAX models (with L1 Pallas kernels inside)
+to HLO **text** artifacts the Rust PJRT runtime loads.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs `<name>.hlo.txt` per artifact plus `manifest.json` (parsed by
+rust/src/runtime/manifest.rs). HLO text — not `.serialize()` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Artifact shapes mirror the Rust CI-scale datasets (DatasetScale::ci():
+topology and feature dims / 16) so integration tests can feed real
+graph tensors; see rust/tests/integration_runtime.rs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+HIDDEN = 64
+SEM = 128
+
+# CI-scale dataset dimensions (must match rust DatasetScale::ci():
+# round(count/16), feature dims round(dim/16) floored at 4).
+IMDB_CI_MOVIES = round(4278 / 16)  # 267
+IMDB_CI_MOVIE_FEAT = round(3066 / 16)  # 192
+REDDIT_CI_NODES = round(232965 / 10 / 16)  # 1456
+REDDIT_CI_FEAT = round(602 / 16)  # 38
+ELL_K = 64  # padded neighbor slots per node
+
+
+def spec(rows: int, cols: int):
+    return jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def han_imdb_ci():
+    """Full HAN forward at IMDB CI scale, P=2 metapaths (MDM, MAM)."""
+    n, feat = IMDB_CI_MOVIES, IMDB_CI_MOVIE_FEAT
+
+    def fn(x, w_proj, idx0, mask0, idx1, mask1, al0, ar0, al1, ar1, sem_w, sem_b, sem_q):
+        adjs = [M.EllAdj(idx0, mask0), M.EllAdj(idx1, mask1)]
+        z = M.han_forward(
+            x,
+            w_proj,
+            adjs,
+            [al0.reshape(-1), al1.reshape(-1)],
+            [ar0.reshape(-1), ar1.reshape(-1)],
+            sem_w,
+            sem_b.reshape(-1),
+            sem_q,
+        )
+        return (z,)
+
+    inputs = [
+        ("x_movie", n, feat),
+        ("w_proj", feat, HIDDEN),
+        ("ell_idx_mdm", n, ELL_K),
+        ("ell_mask_mdm", n, ELL_K),
+        ("ell_idx_mam", n, ELL_K),
+        ("ell_mask_mam", n, ELL_K),
+        ("attn_l_mdm", 1, HIDDEN),
+        ("attn_r_mdm", 1, HIDDEN),
+        ("attn_l_mam", 1, HIDDEN),
+        ("attn_r_mam", 1, HIDDEN),
+        ("sem_w", HIDDEN, SEM),
+        ("sem_b", 1, SEM),
+        ("sem_q", SEM, 1),
+    ]
+    outputs = [("z", n, HIDDEN)]
+    return "han_imdb_ci_full", "han", "imdb", "full", fn, inputs, outputs
+
+
+def gcn_reddit_ci():
+    """GCN baseline forward at Reddit-sim CI scale."""
+    n, feat = REDDIT_CI_NODES, REDDIT_CI_FEAT
+
+    def fn(x, w_proj, idx, mask):
+        return (M.gcn_forward(x, w_proj, M.EllAdj(idx, mask)),)
+
+    inputs = [
+        ("x", n, feat),
+        ("w_proj", feat, HIDDEN),
+        ("ell_idx", n, ELL_K),
+        ("ell_mask", n, ELL_K),
+    ]
+    outputs = [("z", n, HIDDEN)]
+    return "gcn_reddit_ci_full", "gcn", "reddit", "full", fn, inputs, outputs
+
+
+def kernel_dense_matmul():
+    """Standalone Pallas tiled matmul (runtime microbench)."""
+
+    def fn(a, b):
+        from compile.kernels.dense import dense_matmul
+
+        return (dense_matmul(a, b),)
+
+    inputs = [("a", 128, 256), ("b", 256, 64)]
+    outputs = [("c", 128, 64)]
+    return "kernel_dense_matmul", "kernel", "none", "dense_matmul", fn, inputs, outputs
+
+
+def kernel_ell_spmm():
+    """Standalone Pallas ELL segment reduction. `gathered` travels as
+    2-D [N*K, F] (the Rust runtime speaks 2-D) and is reshaped inside."""
+    n, k, f = 256, 16, 64
+
+    def fn(gathered2d, weights, mask):
+        from compile.kernels.ellspmm import ell_spmm
+
+        return (ell_spmm(gathered2d.reshape(n, k, f), weights, mask),)
+
+    inputs = [("gathered", n * k, f), ("weights", n, k), ("mask", n, k)]
+    outputs = [("out", n, f)]
+    return "kernel_ell_spmm", "kernel", "none", "ell_spmm", fn, inputs, outputs
+
+
+ARTIFACTS: Sequence[Callable] = (
+    han_imdb_ci,
+    gcn_reddit_ci,
+    kernel_dense_matmul,
+    kernel_ell_spmm,
+)
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for make in ARTIFACTS:
+        name, model, dataset, stage, fn, inputs, outputs = make()
+        example = [spec(r, c) for (_, r, c) in inputs]
+        print(f"lowering {name} ({len(inputs)} inputs)...", flush=True)
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "model": model,
+                "dataset": dataset,
+                "stage": stage,
+                "inputs": [
+                    {"name": n_, "shape": [r, c]} for (n_, r, c) in inputs
+                ],
+                "outputs": [
+                    {"name": n_, "shape": [r, c]} for (n_, r, c) in outputs
+                ],
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out_dir}/manifest.json")
+    return manifest
+
+
+def hlo_stats(text: str) -> dict:
+    """Instruction histogram of an HLO module — the L2 perf-pass audit
+    (EXPERIMENTS.md §Perf): fusion quality shows up as few, large fusion
+    ops and no stray transpose/copy chains."""
+    import re
+
+    ops: dict = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(%\S+|ROOT \S+)? ?\S* = \S+ (\w+)\(", line)
+        if m:
+            ops[m.group(2)] = ops.get(m.group(2), 0) + 1
+    total = sum(ops.values())
+    return {"total_instructions": total, "ops": ops}
+
+
+def print_stats(out_dir: str) -> None:
+    """`python -m compile.aot --stats`: per-artifact HLO op histogram."""
+    with open(os.path.join(out_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    for entry in manifest["artifacts"]:
+        with open(os.path.join(out_dir, entry["file"])) as f:
+            stats = hlo_stats(f.read())
+        top = sorted(stats["ops"].items(), key=lambda kv: -kv[1])[:8]
+        print(f"{entry['name']}: {stats['total_instructions']} instructions")
+        for op, n in top:
+            print(f"    {op:<24} {n}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--stats", action="store_true", help="print HLO op histograms")
+    args = ap.parse_args()
+    if args.stats:
+        print_stats(args.out_dir)
+    else:
+        build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: tiled dense matmul (the paper's `sgemm`).
+
+TPU adaptation of the CUDA threadblock-tiled sgemm (DESIGN.md
+§Hardware-Adaptation): output tiles of (bm, bn) are produced by a
+sequential K-loop over (bm, bk)x(bk, bn) VMEM-resident operand tiles —
+the HBM<->VMEM schedule is expressed entirely through BlockSpec index
+maps, with the K axis as the innermost grid dimension so the output
+block is revisited and accumulated in place (the "reduction tree" the
+paper identifies as the dominant compute shape).
+
+VMEM budget per grid step (fp32):
+    bm*bk + bk*bn + bm*bn floats = (64*256 + 256*128 + 64*128) * 4
+    = 64 KiB + 128 KiB + 32 KiB = 224 KiB  << 16 MiB VMEM.
+MXU: the (bm, bk) x (bk, bn) inner matmul maps onto 128x128 systolic
+passes with full lanes when bn is a multiple of 128.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowering emits plain HLO (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (fp32). Chosen in the L1 perf pass — see
+# EXPERIMENTS.md §Perf for the iteration log.
+BM, BK, BN = 64, 256, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def dense_matmul(x: jax.Array, w: jax.Array, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """`x @ w` via the Pallas tiled kernel; arbitrary 2-D shapes.
+
+    Inputs are zero-padded up to tile multiples inside the jit (XLA fuses
+    the pad/slice with neighbors), so callers never see the tiling.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm_, bk_, bn_ = min(bm, _ceil_mult(m, 8)), min(bk, _ceil_mult(k, 8)), min(bn, _ceil_mult(n, 8))
+    mp, kp, np_ = _round_up(m, bm_), _round_up(k, bk_), _round_up(n, bn_)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    """Smallest multiple of `m` >= x (used to shrink tiles for tiny dims)."""
+    return _round_up(max(x, 1), m)
+
+
+def dense_matmul_bias(x: jax.Array, w: jax.Array, b: jax.Array, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Fused linear layer: `x @ w + b` (bias add fuses into the epilogue)."""
+    return dense_matmul(x, w, bm=bm, bk=bk, bn=bn) + b.reshape(1, -1)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernels: element-wise maps (the paper's `uEleWise`).
+
+Only ELU is needed as a standalone kernel (GAT output activation); the
+remaining EW work in the models (tanh, broadcast scaling) fuses into
+neighboring XLA ops at L2 and would gain nothing from a hand kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _elu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.where(x >= 0, x, jnp.expm1(x))
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def elu(x: jax.Array, *, bn: int = BLOCK_ROWS):
+    """ELU over a 2-D tensor via a row-blocked Pallas map."""
+    n, f = x.shape
+    bn_ = min(bn, n)
+    np_ = _round_up(n, bn_)
+    xp = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _elu_kernel,
+        grid=(np_ // bn_,),
+        in_specs=[pl.BlockSpec((bn_, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn_, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, f), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: masked ELL segment reduction (the paper's `SpMMCsr`).
+
+TPU adaptation of the warp-per-row CSR SpMM (DESIGN.md
+§Hardware-Adaptation): CUDA's dynamic row lengths become an ELL layout —
+every node row is padded to K neighbor slots with a validity mask — so
+the reduction has the static shape Pallas/MXU need. The irregular gather
+itself (`x[idx]`) is hoisted to L2 as an XLA `take`; the Pallas kernel
+owns the hot reduction:
+
+    out[n, f] = sum_k  w[n, k] * mask[n, k] * gathered[n, k, f]
+
+VMEM per grid step: (bn*K*F + 2*bn*K + bn*F) * 4 bytes; with the default
+bn=8, K<=128, F<=128 that is <= 4.5 MiB, inside the 16 MiB budget.
+The K-axis reduction is a lane-dimension tree sum (reduction-tree
+compute graph, as the paper highlights for all dominant kernels).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_NODES = 64  # node rows per grid step (perf pass: 8 -> 32 -> 64, see EXPERIMENTS.md)
+
+
+def _ellspmm_kernel(g_ref, w_ref, m_ref, o_ref):
+    g = g_ref[...]  # [bn, K, F]
+    w = (w_ref[...] * m_ref[...])[..., None]  # [bn, K, 1]
+    o_ref[...] = jnp.sum(g * w, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def ell_spmm(gathered: jax.Array, weights: jax.Array, mask: jax.Array, *, bn: int = BN_NODES):
+    """Masked weighted reduction over the ELL K axis.
+
+    gathered: [N, K, F] neighbor features (already gathered at L2)
+    weights:  [N, K]    per-slot weights (attention or 1/deg)
+    mask:     [N, K]    1.0 for valid slots, 0.0 for padding
+    returns   [N, F]
+    """
+    n, k, f = gathered.shape
+    assert weights.shape == (n, k) and mask.shape == (n, k)
+    bn_ = min(bn, n)
+    np_ = _round_up(n, bn_)
+    g = jnp.pad(gathered, ((0, np_ - n), (0, 0), (0, 0)))
+    w = jnp.pad(weights, ((0, np_ - n), (0, 0)))
+    m = jnp.pad(mask, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _ellspmm_kernel,
+        grid=(np_ // bn_,),
+        in_specs=[
+            pl.BlockSpec((bn_, k, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn_, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn_, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn_, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, f), jnp.float32),
+        interpret=True,
+    )(g, w, m)
+    return out[:n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

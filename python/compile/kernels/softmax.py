@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: masked segment softmax over the ELL K axis
+(DGL's `edge_softmax`).
+
+    w[n, k] = exp(e[n,k] - max_k e[n,:]) / sum_k exp(...)    over valid k
+
+Padding slots carry NEG_INF logits (from `sddmm_ell`) and therefore get
+exactly zero weight; rows with no valid slots produce all-zero weights
+(guarded denominator) rather than NaN — mirroring DGL's behavior on
+isolated nodes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_NODES = 64
+
+
+def _segsoftmax_kernel(e_ref, m_ref, o_ref):
+    e = e_ref[...]  # [bn, K]
+    m = m_ref[...]  # [bn, K]
+    mx = jnp.max(e, axis=1, keepdims=True)
+    ex = jnp.exp(e - mx) * m
+    denom = jnp.sum(ex, axis=1, keepdims=True)
+    o_ref[...] = ex / jnp.maximum(denom, 1e-20)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def seg_softmax(logits: jax.Array, mask: jax.Array, *, bn: int = BN_NODES):
+    """Masked softmax over axis 1. logits/mask: [N, K] -> weights [N, K]."""
+    n, k = logits.shape
+    assert mask.shape == (n, k)
+    bn_ = min(bn, n)
+    np_ = _round_up(n, bn_)
+    e = jnp.pad(logits, ((0, np_ - n), (0, 0)))
+    m = jnp.pad(mask, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _segsoftmax_kernel,
+        grid=(np_ // bn_,),
+        in_specs=[
+            pl.BlockSpec((bn_, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn_, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn_, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, k), jnp.float32),
+        interpret=True,
+    )(e, m)
+    return out[:n]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,158 @@
+"""L2: the HGNN forward passes in JAX, calling the L1 Pallas kernels.
+
+The stages mirror rust/src/engine/stages.rs exactly (same math, ELL
+instead of CSR) so the PJRT artifacts and the native Rust engine agree
+numerically — rust/tests/integration_runtime.rs asserts it.
+
+Adjacency enters as ELL arrays (`idx` [N, K] int-valued, `mask` [N, K]
+float) because Pallas needs static shapes; indices travel as f32 (the
+Rust runtime feeds f32 literals; values < 2^24 are exact) and are cast
+on entry.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dense import dense_matmul, dense_matmul_bias
+from compile.kernels.elementwise import elu
+from compile.kernels.ellspmm import ell_spmm
+from compile.kernels.sddmm import sddmm_ell
+from compile.kernels.softmax import seg_softmax
+
+
+class EllAdj(NamedTuple):
+    """One metapath subgraph in ELL form."""
+
+    idx: jax.Array  # [N, K] neighbor row ids (f32-carried ints)
+    mask: jax.Array  # [N, K] 1.0 valid / 0.0 padding
+
+
+def _gather_rows(h: jax.Array, idx: jax.Array) -> jax.Array:
+    """L2 irregular gather (XLA take): [N_src, F], [N, K] -> [N, K, F]."""
+    return jnp.take(h, idx.astype(jnp.int32), axis=0)
+
+
+def han_na_one_subgraph(
+    h: jax.Array,
+    adj: EllAdj,
+    attn_l: jax.Array,
+    attn_r: jax.Array,
+    slope: float = 0.2,
+) -> jax.Array:
+    """HAN Neighbor Aggregation for one metapath subgraph (GAT).
+
+    Mirrors the kernel sequence the paper profiles: attention terms
+    (broadcast-mul + reduce), SDDMM, edge softmax, weighted SpMM, ELU.
+    """
+    s_dst = jnp.sum(h * attn_l.reshape(1, -1), axis=1)  # [N]
+    s_src = jnp.sum(h * attn_r.reshape(1, -1), axis=1)  # [N]
+    s_src_g = jnp.take(s_src, adj.idx.astype(jnp.int32), axis=0)  # [N, K]
+    logits = sddmm_ell(s_dst, s_src_g, adj.mask, slope=slope)
+    weights = seg_softmax(logits, adj.mask)
+    gathered = _gather_rows(h, adj.idx)  # [N, K, F]
+    agg = ell_spmm(gathered, weights, adj.mask)
+    return elu(agg)
+
+
+def mean_na_one_subgraph(h_src: jax.Array, adj: EllAdj) -> jax.Array:
+    """R-GCN / GCN mean Neighbor Aggregation for one subgraph."""
+    deg = jnp.sum(adj.mask, axis=1, keepdims=True)  # [N, 1]
+    weights = adj.mask / jnp.maximum(deg, 1.0)
+    gathered = _gather_rows(h_src, adj.idx)
+    return ell_spmm(gathered, weights, adj.mask)
+
+
+def semantic_attention(
+    na_results: Sequence[jax.Array],
+    sem_w: jax.Array,
+    sem_b: jax.Array,
+    sem_q: jax.Array,
+) -> jax.Array:
+    """HAN Semantic Aggregation: the paper's §4.4 pipeline.
+
+    Concat -> sgemm(+bias) -> tanh -> sgemm -> per-metapath mean ->
+    softmax -> broadcast scale -> Reduce.
+    """
+    p = len(na_results)
+    n, f = na_results[0].shape
+    stacked = jnp.concatenate(na_results, axis=0)  # [P*N, F]  (Concat, DR)
+    t = jnp.tanh(dense_matmul_bias(stacked, sem_w, sem_b))  # sgemm + uEleWise
+    scores = dense_matmul(t, sem_q).reshape(p, n)  # sgemm
+    beta_raw = jnp.mean(scores, axis=1)  # Reduce
+    beta = jax.nn.softmax(beta_raw)  # uEleWise
+    scaled = stacked * jnp.repeat(beta, n)[:, None]  # vEleWise
+    return jnp.sum(scaled.reshape(p, n, f), axis=0)  # Reduce
+
+
+def han_forward(
+    x: jax.Array,
+    w_proj: jax.Array,
+    adjs: Sequence[EllAdj],
+    attn_l: Sequence[jax.Array],
+    attn_r: Sequence[jax.Array],
+    sem_w: jax.Array,
+    sem_b: jax.Array,
+    sem_q: jax.Array,
+    slope: float = 0.2,
+):
+    """Full HAN inference: FP -> NA per metapath -> SA."""
+    h = dense_matmul(x, w_proj)  # ② FP (sgemm)
+    na = [
+        han_na_one_subgraph(h, adj, al, ar, slope)  # ③ NA
+        for adj, al, ar in zip(adjs, attn_l, attn_r)
+    ]
+    return semantic_attention(na, sem_w, sem_b, sem_q)  # ④ SA
+
+
+def gcn_forward(x: jax.Array, w_proj: jax.Array, adj: EllAdj):
+    """GCN baseline: FP then mean NA (no SA)."""
+    h = dense_matmul(x, w_proj)
+    return mean_na_one_subgraph(h, adj)
+
+
+def rgcn_forward(
+    xs: Sequence[jax.Array],
+    w_projs: Sequence[jax.Array],
+    adjs: Sequence[EllAdj],
+    src_of: Sequence[int],
+    dst_rows: Sequence[int],
+    target_relations: Sequence[int],
+):
+    """R-GCN: per-type FP, per-relation mean NA, sum SA over the
+    relations targeting the output type.
+
+    src_of[r]  — node-type index of relation r's source side
+    dst_rows[r] — row count of relation r's destination side (static)
+    target_relations — relation indices summed into the output
+    """
+    hs = [dense_matmul(x, w) for x, w in zip(xs, w_projs)]
+    na = [mean_na_one_subgraph(hs[src_of[r]], adjs[r]) for r in range(len(adjs))]
+    del dst_rows  # shapes are static; kept for call-site documentation
+    out = na[target_relations[0]]
+    for r in target_relations[1:]:
+        out = out + na[r]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ELL preprocessing (build-time only; the Rust side has its own in
+# graph/sparse.rs — to_ell — with identical truncation semantics)
+# ---------------------------------------------------------------------------
+
+
+def csr_to_ell(indptr, indices, n_rows: int, k: int):
+    """Convert CSR arrays to (idx, mask) ELL numpy arrays with row
+    truncation at k (deterministic prefix, matching Csr::to_ell)."""
+    import numpy as np
+
+    idx = np.zeros((n_rows, k), dtype=np.float32)
+    mask = np.zeros((n_rows, k), dtype=np.float32)
+    for r in range(n_rows):
+        row = indices[indptr[r] : indptr[r + 1]][:k]
+        idx[r, : len(row)] = row
+        mask[r, : len(row)] = 1.0
+    return idx, mask

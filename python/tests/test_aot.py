@@ -1,0 +1,86 @@
+"""AOT pipeline smoke tests: lowering to HLO text and manifest schema.
+
+The full round-trip (HLO text -> rust PJRT -> numerics) is covered by
+rust/tests/integration_runtime.rs; here we validate the Python side in
+isolation so `pytest` fails fast when a jax upgrade breaks lowering.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platforms", "cpu")
+
+
+class TestHloEmission:
+    def test_tiny_pallas_fn_lowers_to_hlo_text(self):
+        def fn(a, b):
+            from compile.kernels.dense import dense_matmul
+
+            return (dense_matmul(a, b),)
+
+        lowered = jax.jit(fn).lower(aot.spec(16, 16), aot.spec(16, 16))
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), text[:80]
+        # jax >= 0.5 ids must have been reassigned by the text path —
+        # the text parser guarantees this; just check it is plain text
+        assert "ENTRY" in text
+
+    def test_artifact_defs_are_consistent(self):
+        for make in aot.ARTIFACTS:
+            name, model, dataset, stage, fn, inputs, outputs = make()
+            assert name and model and dataset and stage
+            assert len(inputs) >= 1 and len(outputs) >= 1
+            for n_, r, c in inputs + outputs:
+                assert isinstance(n_, str) and r > 0 and c > 0
+
+    def test_build_all_writes_manifest(self, tmp_path):
+        # build only the two kernel artifacts (fast) by monkeypatching
+        import compile.aot as A
+
+        saved = A.ARTIFACTS
+        try:
+            A.ARTIFACTS = (A.kernel_dense_matmul, A.kernel_ell_spmm)
+            manifest = A.build_all(str(tmp_path))
+        finally:
+            A.ARTIFACTS = saved
+        assert len(manifest["artifacts"]) == 2
+        on_disk = json.loads((tmp_path / "manifest.json").read_text())
+        assert on_disk == manifest
+        for entry in on_disk["artifacts"]:
+            hlo = (tmp_path / entry["file"]).read_text()
+            assert hlo.startswith("HloModule")
+            for spec_ in entry["inputs"] + entry["outputs"]:
+                assert len(spec_["shape"]) == 2
+
+    def test_ci_dims_match_rust_datasetscale(self):
+        # DatasetScale::ci() == round(x/16); these constants must agree
+        # with rust/src/datasets (integration_runtime feeds real tensors)
+        assert aot.IMDB_CI_MOVIES == round(4278 / 16)
+        assert aot.IMDB_CI_MOVIE_FEAT == round(3066 / 16)
+        assert aot.REDDIT_CI_NODES == round(232965 / 10 / 16)
+        assert aot.REDDIT_CI_FEAT == round(602 / 16)
+
+
+class TestEllPreprocessing:
+    def test_csr_to_ell_matches_rust_semantics(self):
+        import numpy as np
+
+        # same example as rust graph::sparse tests
+        indptr = np.array([0, 2, 2, 5])
+        indices = np.array([1, 3, 0, 1, 2])
+        idx, mask = M.csr_to_ell(indptr, indices, 3, 3)
+        assert mask.sum() == 5
+        idx2, mask2 = M.csr_to_ell(indptr, indices, 3, 2)
+        assert mask2.sum() == 4  # one truncated
+
+    def test_han_artifact_shapes_execute(self):
+        # run the exact artifact function with real arrays (small adj)
+        name, _, _, _, fn, inputs, outputs = aot.han_imdb_ci()
+        args = [jnp.zeros((r, c), jnp.float32) for (_, r, c) in inputs]
+        (z,) = fn(*args)
+        assert z.shape == tuple(outputs[0][1:])

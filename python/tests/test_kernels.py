@@ -1,0 +1,216 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases cover the paper-relevant sizes and
+the degenerate edges (all-masked rows, single row, non-tile-multiple
+dims).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense_matmul, dense_matmul_bias
+from compile.kernels.elementwise import elu
+from compile.kernels.ellspmm import ell_spmm
+from compile.kernels.sddmm import sddmm_ell
+from compile.kernels.softmax import seg_softmax
+
+jax.config.update("jax_platforms", "cpu")
+
+HYPO = settings(max_examples=12, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def assert_close(a, b, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# dense_matmul
+# ---------------------------------------------------------------------------
+
+
+class TestDenseMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [(1, 1, 1), (64, 256, 128), (67, 190, 33), (128, 64, 64), (267, 192, 64)],
+    )
+    def test_fixed_shapes(self, m, k, n):
+        x, w = rand(0, m, k), rand(1, k, n)
+        assert_close(dense_matmul(x, w), ref.dense_matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    @HYPO
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        x, w = rand(seed, m, k), rand(seed + 1, k, n)
+        assert_close(dense_matmul(x, w), ref.dense_matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_bias(self):
+        x, w = rand(2, 32, 48), rand(3, 48, 16)
+        b = rand(4, 16)
+        assert_close(
+            dense_matmul_bias(x, w, b),
+            ref.dense_matmul_bias_ref(x, w, b),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_zeros(self):
+        x = jnp.zeros((16, 16))
+        w = rand(5, 16, 16)
+        assert_close(dense_matmul(x, w), jnp.zeros((16, 16)))
+
+    def test_one_hot_selects_rows(self):
+        # one-hot features (DBLP-style) select weight rows exactly
+        x = jnp.eye(8, dtype=jnp.float32)
+        w = rand(6, 8, 12)
+        assert_close(dense_matmul(x, w), w)
+
+
+# ---------------------------------------------------------------------------
+# ell_spmm
+# ---------------------------------------------------------------------------
+
+
+def random_ell(seed, n, k, n_src):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n_src, size=(n, k)).astype(np.float32)
+    mask = (rng.random((n, k)) < 0.7).astype(np.float32)
+    return jnp.asarray(idx), jnp.asarray(mask)
+
+
+class TestEllSpmm:
+    @pytest.mark.parametrize("n,k,f", [(8, 4, 16), (267, 64, 64), (9, 1, 8), (1, 16, 128)])
+    def test_fixed_shapes(self, n, k, f):
+        idx, mask = random_ell(n * k, n, k, n)
+        h = rand(7, n, f)
+        gathered = jnp.take(h, idx.astype(jnp.int32), axis=0)
+        w = jnp.abs(rand(8, n, k))
+        assert_close(
+            ell_spmm(gathered, w, mask),
+            ref.ell_spmm_ref(gathered, w, mask),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @HYPO
+    @given(
+        n=st.integers(1, 64),
+        k=st.integers(1, 32),
+        f=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, n, k, f, seed):
+        idx, mask = random_ell(seed, n, k, max(n, 2))
+        gathered = rand(seed, n, k, f)
+        w = rand(seed + 1, n, k)
+        assert_close(
+            ell_spmm(gathered, w, mask),
+            ref.ell_spmm_ref(gathered, w, mask),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_fully_masked_row_is_zero(self):
+        gathered = rand(9, 4, 8, 16)
+        w = jnp.ones((4, 8))
+        mask = jnp.zeros((4, 8)).at[1:].set(1.0)
+        out = ell_spmm(gathered, w, mask)
+        assert_close(out[0], jnp.zeros(16))
+
+    def test_uniform_weights_mean_equivalence(self):
+        # mean NA: weights 1/deg reproduces the mean of valid neighbors
+        n, k, f = 6, 5, 8
+        idx, mask = random_ell(11, n, k, n)
+        h = rand(12, n, f)
+        gathered = jnp.take(h, idx.astype(jnp.int32), axis=0)
+        deg = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        out = ell_spmm(gathered, mask / deg, mask)
+        manual = (gathered * mask[..., None]).sum(axis=1) / deg
+        assert_close(out, manual, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sddmm + seg_softmax
+# ---------------------------------------------------------------------------
+
+
+class TestSddmmSoftmax:
+    @pytest.mark.parametrize("n,k", [(4, 4), (267, 64), (1, 1), (100, 7)])
+    def test_sddmm_matches_ref(self, n, k):
+        s_dst = rand(13, n).reshape(n)
+        s_src_g = rand(14, n, k)
+        _, mask = random_ell(15, n, k, n)
+        assert_close(
+            sddmm_ell(s_dst, s_src_g, mask),
+            ref.sddmm_ell_ref(s_dst, s_src_g, mask),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @HYPO
+    @given(n=st.integers(1, 64), k=st.integers(1, 32), seed=st.integers(0, 2**16))
+    def test_softmax_hypothesis(self, n, k, seed):
+        logits = rand(seed, n, k)
+        _, mask = random_ell(seed + 1, n, k, 4)
+        masked_logits = jnp.where(mask > 0, logits, ref.NEG_INF)
+        assert_close(
+            seg_softmax(masked_logits, mask),
+            ref.seg_softmax_ref(masked_logits, mask),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_softmax_rows_sum_to_one(self):
+        n, k = 10, 8
+        logits = rand(16, n, k)
+        mask = jnp.ones((n, k))
+        w = seg_softmax(logits, mask)
+        assert_close(w.sum(axis=1), jnp.ones(n), rtol=1e-5, atol=1e-5)
+
+    def test_softmax_all_masked_row_is_zero(self):
+        logits = jnp.full((2, 4), ref.NEG_INF)
+        mask = jnp.zeros((2, 4))
+        w = seg_softmax(logits, mask)
+        assert_close(w, jnp.zeros((2, 4)))
+
+    def test_sddmm_negative_slope(self):
+        s_dst = jnp.array([-1.0])
+        s_src = jnp.array([[-1.0]])
+        mask = jnp.ones((1, 1))
+        out = sddmm_ell(s_dst, s_src, mask, slope=0.1)
+        assert_close(out, jnp.array([[-0.2]]), rtol=1e-6, atol=1e-7)
+
+    def test_softmax_stability_large_logits(self):
+        logits = jnp.array([[1e4, 1e4]])
+        mask = jnp.ones((1, 2))
+        w = seg_softmax(logits, mask)
+        assert_close(w, jnp.array([[0.5, 0.5]]), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# elu
+# ---------------------------------------------------------------------------
+
+
+class TestElu:
+    @HYPO
+    @given(n=st.integers(1, 300), f=st.integers(1, 80), seed=st.integers(0, 2**16))
+    def test_hypothesis(self, n, f, seed):
+        x = rand(seed, n, f) * 3.0
+        assert_close(elu(x), ref.elu_ref(x), rtol=1e-5, atol=1e-6)
+
+    def test_identity_for_positive(self):
+        x = jnp.abs(rand(17, 8, 8)) + 0.1
+        assert_close(elu(x), x)

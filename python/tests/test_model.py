@@ -1,0 +1,134 @@
+"""L2 correctness: model forwards — shapes, stage semantics, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def toy_ell(seed, n, k):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, size=(n, k)).astype(np.float32)
+    mask = (rng.random((n, k)) < 0.6).astype(np.float32)
+    return M.EllAdj(jnp.asarray(idx), jnp.asarray(mask))
+
+
+class TestHan:
+    N, FEAT, H, K, S = 23, 17, 16, 6, 32
+
+    def params(self):
+        return dict(
+            x=rand(0, self.N, self.FEAT),
+            w_proj=rand(1, self.FEAT, self.H),
+            adjs=[toy_ell(2, self.N, self.K), toy_ell(3, self.N, self.K)],
+            attn_l=[rand(4, self.H), rand(5, self.H)],
+            attn_r=[rand(6, self.H), rand(7, self.H)],
+            sem_w=rand(8, self.H, self.S),
+            sem_b=rand(9, self.S),
+            sem_q=rand(10, self.S, 1),
+        )
+
+    def test_output_shape(self):
+        z = M.han_forward(**self.params())
+        assert z.shape == (self.N, self.H)
+        assert bool(jnp.isfinite(z).all())
+
+    def test_sa_is_convex_combination_of_na(self):
+        p = self.params()
+        h = ref.dense_matmul_ref(p["x"], p["w_proj"])
+        na = [
+            M.han_na_one_subgraph(h, adj, al, ar)
+            for adj, al, ar in zip(p["adjs"], p["attn_l"], p["attn_r"])
+        ]
+        z = M.semantic_attention(na, p["sem_w"], p["sem_b"], p["sem_q"])
+        lo = jnp.minimum(na[0], na[1]) - 1e-5
+        hi = jnp.maximum(na[0], na[1]) + 1e-5
+        assert bool(((z >= lo) & (z <= hi)).all())
+
+    def test_attention_weights_respond_to_structure(self):
+        # empty adjacency (all-masked) produces ELU(0)=0 NA output
+        p = self.params()
+        h = ref.dense_matmul_ref(p["x"], p["w_proj"])
+        empty = M.EllAdj(jnp.zeros((self.N, self.K)), jnp.zeros((self.N, self.K)))
+        na = M.han_na_one_subgraph(h, empty, p["attn_l"][0], p["attn_r"][0])
+        np.testing.assert_allclose(np.asarray(na), 0.0, atol=1e-6)
+
+    def test_jit_lowers(self):
+        # the exact path aot.py takes: jit + lower + HLO text
+        p = self.params()
+
+        def fn(x, w):
+            return (M.han_forward(
+                x, w, p["adjs"], p["attn_l"], p["attn_r"], p["sem_w"], p["sem_b"], p["sem_q"]
+            ),)
+
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((self.N, self.FEAT), jnp.float32),
+            jax.ShapeDtypeStruct((self.FEAT, self.H), jnp.float32),
+        )
+        text = str(lowered.compiler_ir("stablehlo"))
+        assert "stablehlo" in text or "module" in text
+
+
+class TestMeanNa:
+    def test_matches_manual_mean(self):
+        n, k, f = 9, 4, 8
+        adj = toy_ell(20, n, k)
+        h = rand(21, n, f)
+        out = M.mean_na_one_subgraph(h, adj)
+        gathered = jnp.take(h, adj.idx.astype(jnp.int32), axis=0)
+        deg = jnp.maximum(adj.mask.sum(axis=1, keepdims=True), 1.0)
+        manual = (gathered * adj.mask[..., None]).sum(axis=1) / deg
+        np.testing.assert_allclose(np.asarray(out), np.asarray(manual), rtol=1e-5, atol=1e-5)
+
+    def test_gcn_forward_shape(self):
+        n, feat, h = 31, 12, 16
+        z = M.gcn_forward(rand(22, n, feat), rand(23, feat, h), toy_ell(24, n, h))
+        assert z.shape == (n, h)
+
+
+class TestRgcn:
+    def test_sum_over_target_relations(self):
+        # two node types; rel0: t1 -> t0, rel1: t0 -> t0
+        n0, n1, f0, f1, h, k = 7, 5, 6, 4, 8, 3
+        xs = [rand(30, n0, f0), rand(31, n1, f1)]
+        ws = [rand(32, f0, h), rand(33, f1, h)]
+        rng = np.random.default_rng(34)
+        adj0 = M.EllAdj(
+            jnp.asarray(rng.integers(0, n1, (n0, k)).astype(np.float32)),
+            jnp.asarray((rng.random((n0, k)) < 0.5).astype(np.float32)),
+        )
+        adj1 = M.EllAdj(
+            jnp.asarray(rng.integers(0, n0, (n0, k)).astype(np.float32)),
+            jnp.asarray((rng.random((n0, k)) < 0.5).astype(np.float32)),
+        )
+        out = M.rgcn_forward(xs, ws, [adj0, adj1], src_of=[1, 0], dst_rows=[n0, n0],
+                             target_relations=[0, 1])
+        assert out.shape == (n0, h)
+        # manual: sum of the two mean aggregations
+        na0 = M.mean_na_one_subgraph(ref.dense_matmul_ref(xs[1], ws[1]), adj0)
+        na1 = M.mean_na_one_subgraph(ref.dense_matmul_ref(xs[0], ws[0]), adj1)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(na0 + na1), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestCsrToEll:
+    def test_roundtrip_and_truncation(self):
+        indptr = np.array([0, 2, 2, 5])
+        indices = np.array([1, 3, 0, 1, 2])
+        idx, mask = M.csr_to_ell(indptr, indices, 3, 2)
+        assert mask[0].tolist() == [1.0, 1.0]
+        assert mask[1].tolist() == [0.0, 0.0]
+        # row 2 truncated to first 2 of 3
+        assert idx[2].tolist() == [0.0, 1.0]
+        assert mask[2].tolist() == [1.0, 1.0]

@@ -1,0 +1,67 @@
+//! Bench: **§5 guideline ablations** — quantify the paper's proposed
+//! software optimizations with the coordinator's schedule policies:
+//!
+//! 1. execution-bound-aware kernel mixing (overlap compute-bound DM with
+//!    memory-bound TB/EW/DR kernels);
+//! 2. subgraph-level FP+NA fusion;
+//! 3. inter-subgraph parallelism (the Fig 5c observation applied).
+//!
+//! Reported numbers are modeled-T4 makespans; wallclock of the native
+//! execution is also shown for the record.
+//!
+//! Run: `cargo bench --bench ablation_scheduling`
+
+use hgnn_char::bench::{bench, header, BenchConfig};
+use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::Backend;
+use hgnn_char::models::{self, ModelConfig, ModelId};
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.5)
+    }
+}
+
+fn main() {
+    header(
+        "§5 guideline ablations — scheduling policies",
+        "sequential vs inter-subgraph parallel vs fused vs bound-aware mixing",
+    );
+    let cfg = BenchConfig::from_env();
+    let policies = [
+        SchedulePolicy::Sequential,
+        SchedulePolicy::InterSubgraphParallel { workers: 4 },
+        SchedulePolicy::FusedSubgraph { workers: 4 },
+        SchedulePolicy::BoundAwareMixing { workers: 4 },
+    ];
+    for model in [ModelId::Han, ModelId::Rgcn] {
+        for dataset in [DatasetId::Dblp, DatasetId::Acm] {
+            println!("\n### {} on {} ###", model.name(), dataset.name());
+            let hg = datasets::build(dataset, &scale()).unwrap();
+            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+            let coord = Coordinator::new(Backend::native_no_traces());
+            let mut baseline = None;
+            for policy in policies {
+                let r = bench(
+                    &format!("{} wall", policy.label()),
+                    &BenchConfig { iters: cfg.iters.min(3), ..cfg.clone() },
+                    || coord.run(&plan, &hg, policy).unwrap(),
+                );
+                let run = coord.run(&plan, &hg, policy).unwrap();
+                let makespan = run.report.modeled_makespan_ns;
+                let base = *baseline.get_or_insert(makespan);
+                println!(
+                    "  {}   vs-seq {:.2}x   ({})",
+                    run.report.summary(),
+                    base / makespan.max(1.0),
+                    r.line()
+                );
+            }
+        }
+    }
+    println!("\n(ablation reading: the gap between 'sequential' and the other rows is");
+    println!(" the modeled benefit of each §5 guideline on this workload mix)");
+}

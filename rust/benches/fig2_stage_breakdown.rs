@@ -1,0 +1,73 @@
+//! Bench: regenerate **Fig 2** — execution-time breakdown of the
+//! inference phase across {RGCN, HAN, MAGNN} × {IMDB, ACM, DBLP}.
+//!
+//! Paper reference values (averages across models/datasets):
+//! FP 19%, NA 74%, SA 7%; Subgraph Build excluded (CPU-side).
+//!
+//! Run: `cargo bench --bench fig2_stage_breakdown`
+//! (QUICK_BENCH=1 switches to CI scale.)
+
+use hgnn_char::bench::{bench, header, BenchConfig};
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::profiler::{Profile, StageId};
+use hgnn_char::report;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::paper()
+    }
+}
+
+fn main() {
+    header(
+        "Fig 2 — stage time breakdown",
+        "inference stage shares (modeled T4) per model x dataset",
+    );
+    let cfg = BenchConfig::from_env();
+    let mut profiles: Vec<Profile> = Vec::new();
+    for model in ModelId::HGNNS {
+        for dataset in DatasetId::HETERO {
+            let hg = datasets::build(dataset, &scale()).unwrap();
+            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+            let mut engine = Engine::new(Backend::native_no_traces());
+            // wallclock of the native execution (for the bench harness)
+            let r = bench(
+                &format!("{}/{}", model.name(), dataset.abbrev()),
+                &BenchConfig { iters: cfg.iters.min(3), ..cfg.clone() },
+                || engine.run(&plan, &hg).unwrap(),
+            );
+            println!("{}", r.line());
+            let run = engine.run(&plan, &hg).unwrap();
+            println!("  {}", report::fig2_row(model.name(), dataset.abbrev(), &run.profile));
+            profiles.push(run.profile);
+        }
+    }
+    let refs: Vec<&Profile> = profiles.iter().collect();
+    let avg = report::average_stage_pct(&refs);
+    println!("\n=== Fig 2 reproduction summary (average) ===");
+    println!(
+        "{}",
+        report::compare("FP share", 19.0, avg[&StageId::FeatureProjection], "%")
+    );
+    println!(
+        "{}",
+        report::compare("NA share", 74.0, avg[&StageId::NeighborAggregation], "%")
+    );
+    println!(
+        "{}",
+        report::compare("SA share", 7.0, avg[&StageId::SemanticAggregation], "%")
+    );
+    let na = avg[&StageId::NeighborAggregation];
+    println!(
+        "\npaper claim 'Neighbor Aggregation dominates': {}",
+        if na > avg[&StageId::FeatureProjection] && na > avg[&StageId::SemanticAggregation] {
+            "REPRODUCED"
+        } else {
+            "NOT reproduced at this scale"
+        }
+    );
+}

@@ -1,0 +1,66 @@
+//! Bench: regenerate **Fig 3** — execution-time breakdown by CUDA-kernel
+//! type (DM / TB / EW / DR) within each stage, per model and dataset.
+//!
+//! Paper qualitative reference: FP ≈ pure DM; NA ≈ TB + EW;
+//! SA ≈ DM + EW + DR (with DR = the expensive Concat).
+//!
+//! Run: `cargo bench --bench fig3_kernel_types`
+
+use hgnn_char::bench::header;
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::kernels::KernelType;
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::profiler::StageId;
+use hgnn_char::report;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::paper()
+    }
+}
+
+fn main() {
+    header(
+        "Fig 3 — kernel-type breakdown per stage",
+        "DM / TB / EW / DR shares of each stage (modeled T4)",
+    );
+    let mut checks_passed = 0;
+    let mut checks_total = 0;
+    for model in ModelId::HGNNS {
+        for dataset in DatasetId::HETERO {
+            let hg = datasets::build(dataset, &scale()).unwrap();
+            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+            print!("{}", report::fig3_rows(model.name(), dataset.abbrev(), &run.profile));
+
+            // structural checks against the paper's qualitative claims
+            let ktt = run.profile.kernel_type_times();
+            let share = |stage: StageId, t: KernelType| -> f64 {
+                let total: f64 = KernelType::ALL
+                    .iter()
+                    .map(|&k| ktt.get(&(stage, k)).copied().unwrap_or(0.0))
+                    .sum();
+                if total == 0.0 {
+                    return 0.0;
+                }
+                100.0 * ktt.get(&(stage, t)).copied().unwrap_or(0.0) / total
+            };
+            checks_total += 2;
+            if share(StageId::FeatureProjection, KernelType::DenseMatmul) > 99.0 {
+                checks_passed += 1;
+            }
+            if share(StageId::NeighborAggregation, KernelType::TopologyBased)
+                + share(StageId::NeighborAggregation, KernelType::ElementWise)
+                > 90.0
+            {
+                checks_passed += 1;
+            }
+        }
+    }
+    println!("\n=== Fig 3 reproduction summary ===");
+    println!("  FP=DM and NA=TB+EW checks: {checks_passed}/{checks_total} passed");
+    println!("  (paper: FP dominated by sgemm; NA by SpMM/SDDMM/elementwise)");
+}

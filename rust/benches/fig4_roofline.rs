@@ -1,0 +1,78 @@
+//! Bench: regenerate **Fig 4** — every major kernel of HAN-on-DBLP
+//! placed on the T4's single-precision roofline.
+//!
+//! Paper reference points: ridge at 9.37 FLOP/B; sgemm AI 26.8 (above
+//! the ridge, compute-bound); SpMMCsr 0.49, SDDMM 0.14, uEleWise 0.1,
+//! Reduce 0.34 (all memory-bound).
+//!
+//! Run: `cargo bench --bench fig4_roofline`
+
+use std::collections::BTreeMap;
+
+use hgnn_char::bench::header;
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::gpumodel::{roofline, GpuModel};
+use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::profiler::StageId;
+use hgnn_char::report;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::paper()
+    }
+}
+
+fn main() {
+    header(
+        "Fig 4 — kernels on the FP32 roofline (HAN, DBLP)",
+        "AI and achieved GFLOP/s per kernel, modeled T4",
+    );
+    let hg = datasets::build(DatasetId::Dblp, &scale()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let gpu = GpuModel::default();
+
+    // aggregate by kernel name across stages (the paper plots one point
+    // per kernel)
+    let mut by_name: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for stage in StageId::GPU_STAGES {
+        for (name, m, _) in run.profile.kernel_table(stage) {
+            // keep the heaviest instance per name
+            let entry = by_name.entry(name).or_insert((m.ai, m.achieved_gflops));
+            if m.achieved_gflops > entry.1 {
+                *entry = (m.ai, m.achieved_gflops);
+            }
+        }
+    }
+    let points: Vec<_> = by_name
+        .iter()
+        .map(|(name, &(ai, gf))| roofline::place(&gpu.spec, name, ai, gf))
+        .collect();
+    println!("{}", roofline::ascii_chart(&gpu.spec, &points));
+
+    println!("=== Fig 4 reproduction summary ===");
+    println!("{}", report::compare("roofline ridge", 9.37, gpu.spec.ridge_ai(), " F/B"));
+    let paper_ai: &[(&str, f64, bool)] = &[
+        ("sgemm", 26.8, true),
+        ("SpMMCsr", 0.49, false),
+        ("SDDMMCoo", 0.14, false),
+        ("uEleWise", 0.1, false),
+        ("Reduce", 0.34, false),
+    ];
+    let mut bound_ok = 0;
+    for (name, ai_paper, compute_bound) in paper_ai {
+        if let Some(p) = points.iter().find(|p| p.name == *name) {
+            println!("{}", report::compare(&format!("{name} AI"), *ai_paper, p.ai, " F/B"));
+            if p.compute_bound == *compute_bound {
+                bound_ok += 1;
+            }
+        }
+    }
+    println!(
+        "  memory/compute-bound classification matches paper: {bound_ok}/{} kernels",
+        paper_ai.len()
+    );
+}

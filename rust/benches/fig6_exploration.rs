@@ -1,0 +1,92 @@
+//! Bench: regenerate **Fig 6** — the execution-exploration studies.
+//!
+//! * (a) subgraph sparsity falls as metapath length grows, on all three
+//!   HGs; plus the §5 guideline-3 correlation model fit.
+//! * (b) total execution time rises with the number of metapaths.
+//!
+//! Run: `cargo bench --bench fig6_exploration`
+
+use hgnn_char::bench::header;
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::metapath::{fit_sparsity_model, sparsity::sparsity_sweep};
+use hgnn_char::models::sweeps;
+use hgnn_char::report;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::paper()
+    }
+}
+
+fn main() {
+    header(
+        "Fig 6 — exploration",
+        "(a) sparsity vs metapath length + correlation model  (b) total time vs #metapaths",
+    );
+
+    // ---------------- (a) sparsity sweep ---------------------------------
+    println!("--- Fig 6(a): subgraph sparsity vs metapath length ---");
+    let mut all_decreasing = true;
+    for (seed, dataset) in
+        [("MAM", DatasetId::Imdb), ("PAP", DatasetId::Acm), ("APA", DatasetId::Dblp)]
+    {
+        let hg = datasets::build(dataset, &scale()).unwrap();
+        let pts = sparsity_sweep(&hg, seed, 3).unwrap();
+        let series: Vec<(f64, f64)> =
+            pts.iter().map(|p| (p.length as f64, p.sparsity)).collect();
+        println!(
+            "{}",
+            report::sweep_series(
+                &format!("{} (seed {})", dataset.abbrev(), seed),
+                "metapath length",
+                "sparsity",
+                &series
+            )
+        );
+        all_decreasing &= series.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-12);
+        if let Some(model) = fit_sparsity_model(&pts) {
+            println!(
+                "  §5 guideline-3 model: log10(density) = {:.3} + {:.3}·len, r² = {:.3}",
+                model.intercept, model.slope, model.r2
+            );
+            for p in &pts {
+                println!(
+                    "    len {}: measured sparsity {:.4}, model {:.4}",
+                    p.length,
+                    p.sparsity,
+                    model.predict_sparsity(p.length)
+                );
+            }
+        }
+        println!();
+    }
+    println!(
+        "paper claim 'sparsity decreases with metapath length': {}\n",
+        if all_decreasing { "REPRODUCED (all 3 datasets)" } else { "NOT reproduced" }
+    );
+
+    // ---------------- (b) total time sweep --------------------------------
+    println!("--- Fig 6(b): total time vs #metapaths (HAN, DBLP) ---");
+    let sweep_scale = if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.5) // full model on 6 metapaths: keep tractable
+    };
+    let pts = sweeps::fig6b_total_time_sweep(&sweep_scale).unwrap();
+    println!(
+        "{}",
+        report::sweep_series("HAN-DB", "#metapaths", "total time (modeled ms)", &pts)
+    );
+    let rising = pts.windows(2).all(|w| w[1].1 >= w[0].1 * 0.999);
+    println!(
+        "paper claim 'total time increases with #metapaths': {}",
+        if rising { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    println!(
+        "growth 1 → {} metapaths: {:.1}x",
+        pts.len(),
+        pts.last().unwrap().1 / pts[0].1.max(1e-9)
+    );
+}

@@ -1,0 +1,92 @@
+//! Bench: kernel substrate microbenchmarks — wallclock throughput of the
+//! native kernels (the L3 perf-pass instrument) plus the PJRT-compiled
+//! Pallas kernels when artifacts are present.
+//!
+//! This is the before/after harness for EXPERIMENTS.md §Perf: sgemm
+//! blocking variants, SpMM over increasing density, and the AOT kernel
+//! round-trip cost.
+//!
+//! Run: `cargo bench --bench kernel_microbench`
+
+use hgnn_char::bench::{bench, header, BenchConfig};
+use hgnn_char::graph::sparse::Coo;
+use hgnn_char::kernels::dense::{sgemm_compute, sgemm_naive, GemmBlocking};
+use hgnn_char::kernels::sparse_ops::{spmm_csr, SpmmReduce};
+use hgnn_char::kernels::Ctx;
+use hgnn_char::tensor::Tensor;
+use hgnn_char::util::Pcg32;
+
+fn main() {
+    header(
+        "kernel microbenchmarks",
+        "native kernel wallclock + PJRT AOT kernel round-trip",
+    );
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("QUICK_BENCH").is_ok();
+    let mut rng = Pcg32::seeded(1234);
+
+    // ---------------- sgemm blocking sweep -------------------------------
+    println!("--- sgemm (m=k=1024, n=64): blocking variants ---");
+    let (m, k, n) = if quick { (256, 256, 64) } else { (1024, 1024, 64) };
+    let a = Tensor::randn(m, k, 1.0, &mut rng);
+    let b = Tensor::randn(k, n, 1.0, &mut rng);
+    let gflops = |nanos: f64| 2.0 * m as f64 * k as f64 * n as f64 / nanos;
+    if quick {
+        let r = bench("sgemm naive", &cfg, || sgemm_naive(&a, &b));
+        println!("{}   {:.2} GF/s", r.line(), gflops(r.wall.median));
+    } else {
+        let r = bench("sgemm naive (baseline)", &cfg, || sgemm_naive(&a, &b));
+        println!("{}   {:.2} GF/s", r.line(), gflops(r.wall.median));
+    }
+    for (mc, nc, kc) in [(32, 64, 64), (64, 256, 256), (128, 256, 512), (64, 512, 128)] {
+        let blk = GemmBlocking { mc, nc, kc };
+        let r = bench(&format!("sgemm blocked {mc}x{nc}x{kc}"), &cfg, || {
+            sgemm_compute(&a, &b, blk)
+        });
+        println!("{}   {:.2} GF/s", r.line(), gflops(r.wall.median));
+    }
+
+    // ---------------- SpMM density sweep ----------------------------------
+    println!("\n--- SpMMCsr: density sweep (n=4096 nodes, f=64) ---");
+    let nodes = if quick { 512 } else { 4096 };
+    let f = 64;
+    let x = Tensor::randn(nodes, f, 1.0, &mut rng);
+    for avg_deg in [2usize, 8, 32, 128] {
+        let mut edges = Vec::with_capacity(nodes * avg_deg);
+        for d in 0..nodes as u32 {
+            for _ in 0..avg_deg {
+                edges.push((d, rng.gen_range(nodes) as u32));
+            }
+        }
+        let adj = Coo::from_edges(nodes, nodes, edges).unwrap().to_csr();
+        let nnz = adj.nnz();
+        let r = bench(&format!("spmm avg_deg={avg_deg} (nnz={nnz})"), &cfg, || {
+            let mut ctx = Ctx::default();
+            spmm_csr(&mut ctx, &adj, &x, None, SpmmReduce::Sum).unwrap()
+        });
+        let gbps = (nnz * f * 4) as f64 / r.wall.median;
+        println!("{}   gather {gbps:.2} GB/s", r.line());
+    }
+
+    // ---------------- PJRT AOT kernels -------------------------------------
+    println!("\n--- PJRT AOT Pallas kernels (requires `make artifacts`) ---");
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("  (skipped: artifacts not built)");
+        return;
+    }
+    let rt = hgnn_char::runtime::PjrtRuntime::new(root).unwrap();
+    let art = rt.compile_by_name("kernel_dense_matmul").unwrap();
+    let a = Tensor::randn(128, 256, 1.0, &mut rng);
+    let b = Tensor::randn(256, 64, 1.0, &mut rng);
+    let r = bench("pjrt dense_matmul 128x256x64", &cfg, || art.execute(&[&a, &b]).unwrap());
+    println!("{}", r.line());
+    let art = rt.compile_by_name("kernel_ell_spmm").unwrap();
+    let gathered = Tensor::randn(256 * 16, 64, 1.0, &mut rng);
+    let weights = Tensor::randn(256, 16, 1.0, &mut rng);
+    let mask = Tensor::full(256, 16, 1.0);
+    let r = bench("pjrt ell_spmm 256x16x64", &cfg, || {
+        art.execute(&[&gathered, &weights, &mask]).unwrap()
+    });
+    println!("{}", r.line());
+}

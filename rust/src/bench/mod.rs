@@ -1,0 +1,135 @@
+//! Bench harness (criterion is not in the offline vendor set).
+//!
+//! Provides warmup + repeated timing with robust statistics, wallclock
+//! budgeting, and a uniform report format. Every `[[bench]]` target in
+//! Cargo.toml is a `harness = false` binary built on this module.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Per-iteration wallclock statistics (nanoseconds).
+    pub wall: Summary,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl BenchResult {
+    /// One-line report.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (median {:>12}, mad {:>10}, n={})",
+            self.name,
+            crate::util::human_time(self.wall.mean),
+            crate::util::human_time(self.wall.median),
+            crate::util::human_time(self.wall.mad),
+            self.iters,
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup_iters: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Hard per-benchmark wallclock budget in seconds; measurement stops
+    /// early once exceeded (keeps paper-scale benches tractable on CI).
+    pub budget_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 1, iters: 5, budget_secs: 60.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for smoke runs (`QUICK_BENCH=1`).
+    pub fn quick() -> BenchConfig {
+        BenchConfig { warmup_iters: 0, iters: 2, budget_secs: 10.0 }
+    }
+
+    /// Select quick mode when the `QUICK_BENCH` env var is set.
+    pub fn from_env() -> BenchConfig {
+        if std::env::var("QUICK_BENCH").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        }
+    }
+}
+
+/// Measure a closure. The closure's return value is passed through a
+/// black-box sink so the optimizer cannot elide the work.
+pub fn bench<T>(name: &str, config: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..config.warmup_iters {
+        sink(f());
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(config.iters);
+    for _ in 0..config.iters.max(1) {
+        let t0 = Instant::now();
+        sink(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if started.elapsed().as_secs_f64() > config.budget_secs {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), wall: Summary::of(&samples), iters: samples.len() }
+}
+
+/// Optimizer-opaque value sink (std::hint::black_box wrapper).
+#[inline]
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header every bench binary prints.
+pub fn header(figure: &str, description: &str) {
+    println!("==================================================================");
+    println!("hgnn-char bench: {figure}");
+    println!("  {description}");
+    println!("  (times are modeled NVIDIA T4 latencies unless marked 'wall')");
+    println!("==================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 3, budget_secs: 5.0 };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 3);
+        assert!(r.wall.mean > 0.0);
+        assert!(r.line().contains("spin"));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 1000, budget_secs: 0.05 };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.iters < 1000, "budget should cut iterations, ran {}", r.iters);
+    }
+
+    #[test]
+    fn quick_config() {
+        let q = BenchConfig::quick();
+        assert!(q.iters < BenchConfig::default().iters);
+    }
+}

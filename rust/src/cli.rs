@@ -1,0 +1,192 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `hgnn-char <command> [positional...] [--flag [value]]...`.
+//! Flags with no following value (or followed by another flag) are
+//! booleans.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    /// First token (the subcommand).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` / `--switch` flags.
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        if let Some(first) = iter.next() {
+            args.command = first;
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let value = match iter.peek() {
+                    Some(next) if !next.starts_with("--") => iter.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                args.flags.insert(key.to_string(), value);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse flags only (no leading subcommand) — what examples use, so
+    /// `cargo run --example foo -- --scale ci` works.
+    pub fn flags_from_env() -> Args {
+        Args::parse(std::iter::once(String::new()).chain(std::env::args().skip(1)))
+    }
+
+    /// String flag with default.
+    pub fn flag_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Usize flag with default.
+    pub fn flag_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    /// f64 flag with default.
+    pub fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
+    pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
+        match self.flag_str("scale", "paper").as_str() {
+            "paper" => Ok(crate::datasets::DatasetScale::paper()),
+            "ci" => Ok(crate::datasets::DatasetScale::ci()),
+            other => {
+                let f: f64 = other
+                    .parse()
+                    .map_err(|_| Error::config(format!("--scale '{other}'")))?;
+                if f <= 0.0 || f > 1.0 {
+                    return Err(Error::config("--scale factor must be in (0, 1]"));
+                }
+                Ok(crate::datasets::DatasetScale::factor(f))
+            }
+        }
+    }
+}
+
+/// The top-level usage text.
+pub const USAGE: &str = "\
+hgnn-char — characterizing & understanding HGNNs (paper reproduction)
+
+USAGE: hgnn-char <command> [options]
+
+COMMANDS:
+  list                           datasets, models, metapaths
+  run --model M --dataset D      profile one inference run
+      [--scale paper|ci|F] [--policy seq|par|fused|mix] [--workers N]
+  figure <2|3|4|5a|5b|5c|6a|6b>  regenerate a paper figure
+      [--scale ...]
+  table <3>                      regenerate a paper table
+  timeline --model M --dataset D render the Fig 5c-style timeline
+  artifacts [--dir artifacts]    list AOT artifacts + PJRT platform
+  serve [--requests N]           demo of the batched serving loop
+  help                           this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = parse("run --model han --dataset imdb --verbose");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.flag_str("model", ""), "han");
+        assert_eq!(a.flag_str("dataset", ""), "imdb");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("figure 5a --scale ci");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positional, vec!["5a"]);
+        assert_eq!(a.flag_str("scale", "paper"), "ci");
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse("run --workers 4 --dropout 0.5");
+        assert_eq!(a.flag_usize("workers", 1).unwrap(), 4);
+        assert_eq!(a.flag_f64("dropout", 0.0).unwrap(), 0.5);
+        assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
+        let bad = parse("run --workers nope");
+        assert!(bad.flag_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn scale_parsing() {
+        assert_eq!(parse("x --scale ci").scale().unwrap(), crate::datasets::DatasetScale::ci());
+        assert_eq!(
+            parse("x").scale().unwrap(),
+            crate::datasets::DatasetScale::paper()
+        );
+        let custom = parse("x --scale 0.5").scale().unwrap();
+        assert!((custom.topo_factor - 0.5).abs() < 1e-12);
+        assert!(parse("x --scale 2.0").scale().is_err());
+        assert!(parse("x --scale nah").scale().is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn usage_mentions_every_command() {
+        for cmd in ["list", "run", "figure", "table", "timeline", "artifacts", "serve"] {
+            assert!(USAGE.contains(cmd), "usage missing {cmd}");
+        }
+    }
+
+    #[test]
+    fn flags_only_parse() {
+        let a = Args::parse(
+            ["", "--scale", "ci"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(a.flag_str("scale", "paper"), "ci");
+        assert!(a.positional.is_empty());
+    }
+}

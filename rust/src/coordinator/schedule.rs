@@ -1,0 +1,252 @@
+//! Schedule analysis: LPT assignment, modeled makespan, and the
+//! execution-bound-aware mixing model (§5 guideline 1).
+
+use std::collections::BTreeMap;
+
+use crate::gpumodel::GpuModel;
+use crate::kernels::KernelType;
+use crate::profiler::{Profile, StageId};
+use crate::coordinator::SchedulePolicy;
+
+/// Longest-processing-time-first assignment of `costs` onto `workers`
+/// bins; returns the worker index per item.
+pub fn lpt_assign(costs: &[f64], workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap());
+    let mut load = vec![0.0f64; workers];
+    let mut assignment = vec![0usize; costs.len()];
+    for i in order {
+        let (w, _) = load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assignment[i] = w;
+        load[w] += costs[i];
+    }
+    assignment
+}
+
+/// Modeled schedule analysis of one coordinated run.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    /// Policy analyzed.
+    pub policy: SchedulePolicy,
+    /// Worker count used.
+    pub workers: usize,
+    /// Modeled serial time (sum of all kernels) — the DGL baseline.
+    pub modeled_serial_ns: f64,
+    /// Modeled makespan under the policy.
+    pub modeled_makespan_ns: f64,
+    /// serial / makespan.
+    pub speedup: f64,
+    /// Modeled NA-stage makespan alone (Fig 5c discussion).
+    pub na_makespan_ns: f64,
+    /// Where (modeled ns) the NA→SA barrier falls.
+    pub barrier_at_ns: f64,
+}
+
+impl ScheduleReport {
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<22} makespan {:>12}  (serial {:>12}, speedup {:.2}x)",
+            self.policy.label(),
+            crate::util::human_time(self.modeled_makespan_ns),
+            crate::util::human_time(self.modeled_serial_ns),
+            self.speedup
+        )
+    }
+}
+
+/// Analyze a worker-attributed profile under a policy.
+///
+/// * serial time = Σ modeled kernel times (single stream);
+/// * per-stage parallel time = max over workers of that worker's Σ;
+/// * mixing: within the FP+NA window, DM kernels are compute-bound and
+///   TB/EW/DR kernels memory-bound; co-running them takes
+///   `max(Σ_dm, Σ_mem)` instead of `Σ_dm + Σ_mem` — the idealized bound
+///   of §5 guideline 1 (perfect overlap, no interference), reported as
+///   such in the ablation.
+pub fn analyze(
+    profile: &Profile,
+    workers: usize,
+    mixing: bool,
+    policy: SchedulePolicy,
+    _gpu: &GpuModel,
+) -> ScheduleReport {
+    let modeled = |k: &crate::profiler::ProfiledKernel| -> f64 {
+        k.metrics.as_ref().map(|m| m.time_ns).unwrap_or(0.0)
+    };
+    let serial: f64 = profile.kernels.iter().map(modeled).sum();
+
+    // per-stage per-worker sums
+    let mut stage_worker: BTreeMap<(StageId, usize), f64> = BTreeMap::new();
+    for k in &profile.kernels {
+        *stage_worker.entry((k.stage, k.worker)).or_insert(0.0) += modeled(k);
+    }
+    let stage_makespan = |stage: StageId| -> f64 {
+        stage_worker
+            .iter()
+            .filter(|((s, _), _)| *s == stage)
+            .map(|(_, &t)| t)
+            .fold(0.0, f64::max)
+    };
+
+    let fp = stage_makespan(StageId::FeatureProjection);
+    let na = stage_makespan(StageId::NeighborAggregation);
+    let sa = stage_makespan(StageId::SemanticAggregation);
+
+    let (fp_na, na_end) = if mixing {
+        // idealized co-run of compute-bound vs memory-bound kernels over
+        // the FP+NA window, still respecting the worker split for NA
+        let window: Vec<&crate::profiler::ProfiledKernel> = profile
+            .kernels
+            .iter()
+            .filter(|k| {
+                matches!(
+                    k.stage,
+                    StageId::FeatureProjection | StageId::NeighborAggregation
+                )
+            })
+            .collect();
+        let compute: f64 = window
+            .iter()
+            .filter(|k| k.exec.ktype == KernelType::DenseMatmul)
+            .map(|k| modeled(k))
+            .sum();
+        let memory: f64 = window
+            .iter()
+            .filter(|k| k.exec.ktype != KernelType::DenseMatmul)
+            .map(|k| modeled(k))
+            .sum();
+        // memory side still parallelizes over workers; compute side is a
+        // single co-scheduled stream
+        let mem_parallel = memory / workers.max(1) as f64;
+        let t = compute.max(mem_parallel).max(na / workers.max(1) as f64);
+        (t, t)
+    } else {
+        (fp + na, fp + na)
+    };
+
+    let makespan = fp_na + sa;
+    ScheduleReport {
+        policy,
+        workers,
+        modeled_serial_ns: serial,
+        modeled_makespan_ns: makespan,
+        speedup: if makespan > 0.0 { serial / makespan } else { 1.0 },
+        na_makespan_ns: na,
+        barrier_at_ns: na_end,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpumodel::GpuModel;
+    use crate::kernels::{KernelCounters, KernelExec};
+
+    #[test]
+    fn lpt_balances() {
+        let costs = vec![5.0, 3.0, 3.0, 2.0, 1.0];
+        let a = lpt_assign(&costs, 2);
+        let mut load = [0.0f64; 2];
+        for (i, &w) in a.iter().enumerate() {
+            load[w] += costs[i];
+        }
+        // LPT on these costs gives a 7/7 split
+        assert!((load[0] - load[1]).abs() < 1.01, "loads {load:?}");
+    }
+
+    #[test]
+    fn lpt_single_worker() {
+        let a = lpt_assign(&[1.0, 2.0], 1);
+        assert_eq!(a, vec![0, 0]);
+        let empty = lpt_assign(&[], 4);
+        assert!(empty.is_empty());
+    }
+
+    fn mk_profile(workers: usize) -> Profile {
+        let mut p = Profile::default();
+        let exec = |ktype| KernelExec {
+            name: "k",
+            ktype,
+            counters: KernelCounters {
+                flops: 1_000_000,
+                bytes_read: 4_000_000,
+                bytes_written: 4_000_000,
+            },
+            wall_nanos: 100,
+            trace: None,
+        };
+        p.record(
+            vec![exec(KernelType::DenseMatmul)],
+            StageId::FeatureProjection,
+            None,
+            0,
+            0,
+        );
+        for w in 0..workers {
+            p.record(
+                vec![exec(KernelType::TopologyBased)],
+                StageId::NeighborAggregation,
+                Some("sg"),
+                w,
+                0,
+            );
+        }
+        p.record(
+            vec![exec(KernelType::ElementWise)],
+            StageId::SemanticAggregation,
+            None,
+            0,
+            0,
+        );
+        p.attach_metrics(&GpuModel::default());
+        p
+    }
+
+    #[test]
+    fn parallel_na_shrinks_makespan() {
+        let p1 = mk_profile(1);
+        // p2 has the same NA work split over 2 workers... approximate by
+        // comparing 2-worker profile with twice the subgraphs
+        let r1 = analyze(&p1, 1, false, SchedulePolicy::Sequential, &GpuModel::default());
+        let p2 = mk_profile(2);
+        let r2 = analyze(
+            &p2,
+            2,
+            false,
+            SchedulePolicy::InterSubgraphParallel { workers: 2 },
+            &GpuModel::default(),
+        );
+        // r2 has 2 NA kernels but same makespan contribution as r1's one
+        assert!(r2.na_makespan_ns <= r2.modeled_serial_ns);
+        assert!(r1.modeled_makespan_ns <= r1.modeled_serial_ns + 1e-9);
+        assert!(r2.modeled_makespan_ns < r2.modeled_serial_ns, "overlap should help");
+    }
+
+    #[test]
+    fn mixing_bounded_by_max_resource() {
+        let p = mk_profile(1);
+        let plain = analyze(&p, 1, false, SchedulePolicy::Sequential, &GpuModel::default());
+        let mixed = analyze(
+            &p,
+            1,
+            true,
+            SchedulePolicy::BoundAwareMixing { workers: 1 },
+            &GpuModel::default(),
+        );
+        assert!(mixed.modeled_makespan_ns <= plain.modeled_makespan_ns + 1e-9);
+        assert!(mixed.speedup >= plain.speedup - 1e-9);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let p = mk_profile(1);
+        let r = analyze(&p, 1, false, SchedulePolicy::Sequential, &GpuModel::default());
+        assert!(r.summary().contains("sequential"));
+    }
+}

@@ -1,0 +1,278 @@
+//! Batched inference serving loop — the end-to-end driver substrate.
+//!
+//! A minimal but real serving path in the vLLM-router mold: clients
+//! submit embedding requests for target nodes; a dispatcher thread
+//! batches them (size- and time-bounded dynamic batching) and hands each
+//! batch to an executor (the PJRT-compiled HAN forward in
+//! `examples/e2e_inference.rs`, or the native engine in tests). Python
+//! never appears on this path.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::{Error, Result};
+
+/// A single embedding request.
+#[derive(Debug)]
+pub struct Request {
+    /// Target node id to embed.
+    pub node_id: u32,
+    /// Submission timestamp.
+    pub submitted: Instant,
+    /// Completion channel: receives the embedding row.
+    pub reply: mpsc::Sender<Vec<f32>>,
+}
+
+/// Dynamic batching configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the dispatcher waits to fill a batch.
+    pub flush_after: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 32, flush_after: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Completed request count.
+    pub completed: u64,
+    /// Executed batch count.
+    pub batches: u64,
+    /// End-to-end latency summary (nanoseconds).
+    pub latency: Summary,
+    /// Requests per second over the serving window.
+    pub throughput_rps: f64,
+    /// Mean batch size.
+    pub mean_batch: f64,
+}
+
+/// Batch executor: given the node ids of one batch, return one embedding
+/// row per id. Implemented over PJRT in the e2e example. Deliberately
+/// not `Send` — the executor lives entirely inside the dispatcher thread
+/// (constructed there via [`Server::start_with`]), which is what lets
+/// PJRT executables (Rc internals) serve requests.
+pub trait BatchExecutor {
+    /// Execute one batch.
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
+}
+
+impl<F> BatchExecutor for F
+where
+    F: FnMut(&[u32]) -> Result<Vec<Vec<f32>>>,
+{
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        self(node_ids)
+    }
+}
+
+/// The serving coordinator: owns the dispatcher thread.
+pub struct Server {
+    tx: Option<mpsc::Sender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<RawStats>>,
+    started: Instant,
+}
+
+#[derive(Debug, Default)]
+struct RawStats {
+    completed: u64,
+    batches: u64,
+    latencies_ns: Vec<f64>,
+    batch_sizes: Vec<usize>,
+}
+
+impl Server {
+    /// Start the dispatcher with the given (Send) executor.
+    pub fn start(config: ServeConfig, executor: impl BatchExecutor + Send + 'static) -> Server {
+        Self::start_with(config, move || executor)
+    }
+
+    /// Start the dispatcher, constructing the executor *inside* the
+    /// dispatcher thread. Needed for executors that are not `Send` —
+    /// the PJRT loaded executable holds `Rc` internals, so the e2e
+    /// driver compiles its artifact in-thread via this entry point.
+    pub fn start_with<E, F>(config: ServeConfig, make_executor: F) -> Server
+    where
+        E: BatchExecutor + 'static,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stats = Arc::new(Mutex::new(RawStats::default()));
+        let stats_w = Arc::clone(&stats);
+        let handle = std::thread::spawn(move || {
+            let mut executor = make_executor();
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                // block for the first request of a batch
+                let first = if pending.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => None, // channel closed: drain and exit
+                    }
+                } else {
+                    None
+                };
+                if let Some(r) = first {
+                    pending.push(r);
+                } else if pending.is_empty() {
+                    break;
+                }
+                // fill the batch until max_batch or flush_after expires
+                let deadline = Instant::now() + config.flush_after;
+                while pending.len() < config.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                // execute
+                let batch: Vec<Request> = std::mem::take(&mut pending);
+                let ids: Vec<u32> = batch.iter().map(|r| r.node_id).collect();
+                match executor.execute(&ids) {
+                    Ok(rows) => {
+                        let done = Instant::now();
+                        let mut s = stats_w.lock().unwrap();
+                        s.batches += 1;
+                        s.batch_sizes.push(batch.len());
+                        for (req, row) in batch.into_iter().zip(rows) {
+                            s.completed += 1;
+                            s.latencies_ns
+                                .push(done.duration_since(req.submitted).as_nanos() as f64);
+                            let _ = req.reply.send(row);
+                        }
+                    }
+                    Err(e) => {
+                        log::error!("batch execution failed: {e}");
+                        // drop the batch; clients see a closed channel
+                    }
+                }
+            }
+        });
+        Server { tx: Some(tx), handle: Some(handle), stats, started: Instant::now() }
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, node_id: u32) -> Result<mpsc::Receiver<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::Runtime("server stopped".into()))?
+            .send(Request { node_id, submitted: Instant::now(), reply })
+            .map_err(|_| Error::Runtime("dispatcher gone".into()))?;
+        Ok(rx)
+    }
+
+    /// Stop accepting requests, drain, and return final statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let s = self.stats.lock().unwrap();
+        ServeStats {
+            completed: s.completed,
+            batches: s.batches,
+            latency: Summary::of(&s.latencies_ns),
+            throughput_rps: if elapsed > 0.0 { s.completed as f64 / elapsed } else { 0.0 },
+            mean_batch: if s.batch_sizes.is_empty() {
+                0.0
+            } else {
+                s.batch_sizes.iter().sum::<usize>() as f64 / s.batch_sizes.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_executor(ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        Ok(ids.iter().map(|&i| vec![i as f32, 2.0 * i as f32]).collect())
+    }
+
+    #[test]
+    fn serves_and_replies() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let rx = server.submit(7).unwrap();
+        let row = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(row, vec![7.0, 14.0]);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.batches, 1);
+        assert!(stats.latency.median > 0.0);
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let server = Server::start(
+            ServeConfig { max_batch: 8, flush_after: Duration::from_millis(50) },
+            echo_executor,
+        );
+        let rxs: Vec<_> = (0..8).map(|i| server.submit(i).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let row = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(row[0], i as f32);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 8);
+        // with a generous flush window most requests share batches
+        assert!(stats.batches <= 8);
+        assert!(stats.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            rxs.push(server.submit(i).unwrap());
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 20);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn executor_error_drops_batch() {
+        let server = Server::start(
+            ServeConfig::default(),
+            |_ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+                Err(Error::Runtime("boom".into()))
+            },
+        );
+        let rx = server.submit(1).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        for i in 0..50 {
+            let rx = server.submit(i).unwrap();
+            let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 50);
+        assert!(stats.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Verbatim Table 2 statistics of the paper's heterogeneous datasets.
+//!
+//! Each [`HeteroSpec`] pins: node types (name, tag, count, raw feature
+//! dim) and relations (name, src tag, dst tag, edge count, degree model).
+//! The synthesis in `synth.rs` reproduces these numbers exactly.
+
+/// How destination-node degrees are distributed for a relation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DegreeModel {
+    /// Every destination node has exactly one source neighbor
+    /// (functional relations: each movie has one director, each paper one
+    /// venue / one subject). Requires `edges == dst.count`.
+    OnePerDst,
+    /// Heavy-tailed (Zipf-ish) degrees with the given exponent; total
+    /// edge count is matched exactly.
+    PowerLaw(f64),
+}
+
+/// A node type row of Table 2.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    /// Type name (e.g. `"movie"`).
+    pub name: &'static str,
+    /// Metapath tag (e.g. `'M'`).
+    pub tag: char,
+    /// Node count.
+    pub count: usize,
+    /// Raw feature dimension.
+    pub feat_dim: usize,
+    /// True when features are (row % dim) one-hot rather than dense random
+    /// — Table 2's identity-feature types (feat_dim derived from a count).
+    pub one_hot: bool,
+}
+
+/// A relation row of Table 2 (directed `src -> dst`).
+#[derive(Debug, Clone, Copy)]
+pub struct RelationSpec {
+    /// Relation name as printed in the paper, `"<src>-<dst>"`.
+    pub name: &'static str,
+    /// Source node-type tag.
+    pub src: char,
+    /// Destination node-type tag.
+    pub dst: char,
+    /// Exact edge count.
+    pub edges: usize,
+    /// Degree distribution of destination nodes.
+    pub degree: DegreeModel,
+}
+
+/// Full dataset specification.
+#[derive(Debug, Clone, Copy)]
+pub struct HeteroSpec {
+    /// Dataset name.
+    pub name: &'static str,
+    /// Node type rows.
+    pub nodes: &'static [NodeSpec],
+    /// Relation rows.
+    pub relations: &'static [RelationSpec],
+}
+
+/// IMDB: 4278 movies / 2081 directors / 5257 actors;
+/// M features dense 3066-dim; D and A one-hot (dim == count).
+pub const IMDB: HeteroSpec = HeteroSpec {
+    name: "IMDB",
+    nodes: &[
+        NodeSpec { name: "movie", tag: 'M', count: 4278, feat_dim: 3066, one_hot: false },
+        NodeSpec { name: "director", tag: 'D', count: 2081, feat_dim: 2081, one_hot: true },
+        NodeSpec { name: "actor", tag: 'A', count: 5257, feat_dim: 5257, one_hot: true },
+    ],
+    relations: &[
+        // Each movie has exactly one director; actors per movie ~3.
+        RelationSpec { name: "D-M", src: 'D', dst: 'M', edges: 4278, degree: DegreeModel::OnePerDst },
+        RelationSpec { name: "M-D", src: 'M', dst: 'D', edges: 4278, degree: DegreeModel::PowerLaw(2.1) },
+        RelationSpec { name: "A-M", src: 'A', dst: 'M', edges: 12828, degree: DegreeModel::PowerLaw(2.1) },
+        RelationSpec { name: "M-A", src: 'M', dst: 'A', edges: 12828, degree: DegreeModel::PowerLaw(2.1) },
+    ],
+};
+
+/// ACM: 5912 authors / 3025 papers / 57 subjects; all features 1902-dim
+/// (bag-of-words projected, per the paper).
+pub const ACM: HeteroSpec = HeteroSpec {
+    name: "ACM",
+    nodes: &[
+        NodeSpec { name: "author", tag: 'A', count: 5912, feat_dim: 1902, one_hot: false },
+        NodeSpec { name: "paper", tag: 'P', count: 3025, feat_dim: 1902, one_hot: false },
+        NodeSpec { name: "subject", tag: 'S', count: 57, feat_dim: 1902, one_hot: false },
+    ],
+    relations: &[
+        RelationSpec { name: "A-P", src: 'A', dst: 'P', edges: 9936, degree: DegreeModel::PowerLaw(2.2) },
+        RelationSpec { name: "P-A", src: 'P', dst: 'A', edges: 9936, degree: DegreeModel::PowerLaw(2.2) },
+        RelationSpec { name: "S-P", src: 'S', dst: 'P', edges: 3025, degree: DegreeModel::OnePerDst },
+        RelationSpec { name: "P-S", src: 'P', dst: 'S', edges: 3025, degree: DegreeModel::PowerLaw(1.6) },
+    ],
+};
+
+/// DBLP: 4057 authors / 14328 papers / 7723 terms / 20 venues;
+/// A dense 334-dim; P, T, V one-hot.
+pub const DBLP: HeteroSpec = HeteroSpec {
+    name: "DBLP",
+    nodes: &[
+        NodeSpec { name: "author", tag: 'A', count: 4057, feat_dim: 334, one_hot: false },
+        NodeSpec { name: "paper", tag: 'P', count: 14328, feat_dim: 14328, one_hot: true },
+        NodeSpec { name: "term", tag: 'T', count: 7723, feat_dim: 7723, one_hot: true },
+        NodeSpec { name: "venue", tag: 'V', count: 20, feat_dim: 20, one_hot: true },
+    ],
+    relations: &[
+        RelationSpec { name: "A-P", src: 'A', dst: 'P', edges: 19645, degree: DegreeModel::PowerLaw(2.3) },
+        RelationSpec { name: "P-A", src: 'P', dst: 'A', edges: 19645, degree: DegreeModel::PowerLaw(2.3) },
+        RelationSpec { name: "T-P", src: 'T', dst: 'P', edges: 85810, degree: DegreeModel::PowerLaw(2.0) },
+        RelationSpec { name: "P-T", src: 'P', dst: 'T', edges: 85810, degree: DegreeModel::PowerLaw(2.0) },
+        RelationSpec { name: "V-P", src: 'V', dst: 'P', edges: 14328, degree: DegreeModel::OnePerDst },
+        RelationSpec { name: "P-V", src: 'P', dst: 'V', edges: 14328, degree: DegreeModel::PowerLaw(1.4) },
+    ],
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_spec(spec: &HeteroSpec) {
+        // relation endpoints reference declared tags
+        let tags: Vec<char> = spec.nodes.iter().map(|n| n.tag).collect();
+        for r in spec.relations {
+            assert!(tags.contains(&r.src), "{}: src {}", spec.name, r.src);
+            assert!(tags.contains(&r.dst), "{}: dst {}", spec.name, r.dst);
+            if let DegreeModel::OnePerDst = r.degree {
+                let dst = spec.nodes.iter().find(|n| n.tag == r.dst).unwrap();
+                assert_eq!(r.edges, dst.count, "{}: OnePerDst needs edges==dst", r.name);
+            }
+        }
+        // forward/backward edge counts match (paper lists both directions)
+        for r in spec.relations {
+            if let Some(rev) = spec
+                .relations
+                .iter()
+                .find(|q| q.src == r.dst && q.dst == r.src)
+            {
+                assert_eq!(r.edges, rev.edges, "{}: asymmetric counts", r.name);
+            }
+        }
+    }
+
+    #[test]
+    fn specs_are_consistent() {
+        check_spec(&IMDB);
+        check_spec(&ACM);
+        check_spec(&DBLP);
+    }
+
+    #[test]
+    fn table2_exact_numbers() {
+        assert_eq!(IMDB.nodes[0].count, 4278);
+        assert_eq!(IMDB.nodes[1].count, 2081);
+        assert_eq!(IMDB.nodes[2].count, 5257);
+        assert_eq!(IMDB.relations[2].edges, 12828);
+        assert_eq!(ACM.nodes[0].count, 5912);
+        assert_eq!(ACM.relations[0].edges, 9936);
+        assert_eq!(DBLP.nodes[1].count, 14328);
+        assert_eq!(DBLP.relations[2].edges, 85810);
+        assert_eq!(DBLP.nodes[0].feat_dim, 334);
+    }
+}

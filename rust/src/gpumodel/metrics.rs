@@ -1,0 +1,297 @@
+//! Per-kernel metric derivation — the model's Nsight Compute stand-in.
+//!
+//! For every [`KernelExec`] this derives the Table 3 columns:
+//! modeled time, AI, % of peak performance, DRAM bandwidth utilization,
+//! shared-memory bandwidth utilization and L2 hit rate. The latency model
+//! is a calibrated roofline: `t = launch + max(t_compute, t_dram, t_l2)`.
+
+use crate::gpumodel::cache::simulate_gather;
+use crate::gpumodel::GpuModel;
+use crate::kernels::{KernelExec, KernelType};
+
+/// Modeled metrics for one kernel invocation (Table 3 columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelMetrics {
+    /// Kernel name.
+    pub name: &'static str,
+    /// Kernel class.
+    pub ktype: KernelType,
+    /// Modeled execution time, nanoseconds.
+    pub time_ns: f64,
+    /// Arithmetic intensity, FLOP per DRAM byte.
+    pub ai: f64,
+    /// Achieved GFLOP/s.
+    pub achieved_gflops: f64,
+    /// Percentage of peak FP32 performance.
+    pub peak_perf_pct: f64,
+    /// DRAM bandwidth utilization percentage.
+    pub dram_bw_util_pct: f64,
+    /// Shared-memory bandwidth utilization percentage (DM kernels).
+    pub smem_bw_util_pct: f64,
+    /// L2 hit rate percentage.
+    pub l2_hit_pct: f64,
+    /// Modeled DRAM traffic in bytes.
+    pub dram_bytes: u64,
+    /// Logical traffic in bytes (operands touched once).
+    pub logical_bytes: u64,
+    /// Exact FLOPs.
+    pub flops: u64,
+}
+
+/// Derive metrics for a kernel sequence.
+pub fn analyze_kernels(model: &GpuModel, kernels: &[KernelExec]) -> Vec<KernelMetrics> {
+    kernels.iter().map(|k| analyze_one(model, k)).collect()
+}
+
+fn analyze_one(model: &GpuModel, k: &KernelExec) -> KernelMetrics {
+    let spec = &model.spec;
+    let cal = &model.cal;
+    let logical = k.counters.bytes_read + k.counters.bytes_written;
+
+    // --- DRAM traffic + L2 hit rate per kernel class -------------------
+    let (dram_bytes, l2_hit_pct, l2_traffic) = match (k.ktype, &k.trace) {
+        (_, Some(trace)) if !trace.rows.is_empty() => {
+            // TB / gather kernels: replay the gather through the effective
+            // L2; everything else in the kernel is streaming.
+            let eff_capacity =
+                (spec.l2_bytes as f64 * cal.l2_effective_fraction) as usize;
+            let sim = simulate_gather(
+                trace,
+                eff_capacity,
+                spec.l2_assoc,
+                spec.l2_line,
+                cal.concurrent_streams,
+            );
+            let streaming = logical.saturating_sub(sim.logical_bytes);
+            // streaming sectors hit on the second half of each line
+            let stream_hits = 0.5;
+            let total_accesses = sim.logical_bytes + streaming;
+            let combined_hit = if total_accesses == 0 {
+                0.0
+            } else {
+                (sim.hit_rate_pct / 100.0 * sim.logical_bytes as f64
+                    + stream_hits * streaming as f64)
+                    / total_accesses as f64
+                    * 100.0
+            };
+            (sim.dram_bytes + streaming, combined_hit, logical)
+        }
+        (KernelType::DenseMatmul, _) => {
+            // Tiled-GEMM memory hierarchy: operands stream DRAM→L2 once
+            // (high temporal reuse across threadblock tiles), and the
+            // register/shared-memory tiling means each L2-read byte
+            // feeds ~TILE FMAs — so L2 traffic is flops-proportional,
+            // far below the register-level operand demand.
+            const TILE: f64 = 64.0;
+            let dram = logical; // each operand + output once
+            // 2 operand reads per FMA pair (2 flops), amortized by TILE
+            let l2_traffic = ((k.counters.flops as f64 * 4.0 / TILE).max(dram as f64)) as u64;
+            let hit = (100.0 * (1.0 - dram as f64 / l2_traffic.max(1) as f64)).clamp(0.0, 99.0);
+            (dram, hit, l2_traffic)
+        }
+        (KernelType::ElementWise, _) | (KernelType::DataRearrange, _) | (_, None) => {
+            // pure streaming: compulsory DRAM traffic; sector-in-line
+            // reuse yields ~50% sector hit rate
+            (logical, 50.0, logical)
+        }
+        (KernelType::TopologyBased, _) => (logical, 50.0, logical),
+    };
+
+    // --- latency roofline ----------------------------------------------
+    let mem_eff = match k.ktype {
+        KernelType::DenseMatmul => cal.stream_mem_eff,
+        KernelType::TopologyBased => cal.gather_mem_eff,
+        KernelType::ElementWise => cal.stream_mem_eff,
+        KernelType::DataRearrange => cal.copy_mem_eff,
+    };
+    let t_dram = dram_bytes as f64 / (spec.dram_gbps * mem_eff); // ns (B / (GB/s) = ns)
+    let t_l2 = l2_traffic as f64 / spec.l2_gbps;
+    let t_compute = match k.ktype {
+        KernelType::DenseMatmul => {
+            // occupancy: small problems cannot fill 40 SMs
+            let elems_out = (k.counters.bytes_written / 4).max(1);
+            let tiles = (elems_out as f64 / (64.0 * 64.0)).max(1.0);
+            let occupancy = (tiles / (2.0 * spec.sm_count as f64)).min(1.0);
+            k.counters.flops as f64 / (spec.fp32_gflops * cal.dm_compute_eff * occupancy)
+        }
+        // non-DM FP pipes run far below peak on scattered data; memory
+        // terms dominate anyway, a 10% compute ceiling avoids div-by-tiny
+        _ => k.counters.flops as f64 / (spec.fp32_gflops * 0.10),
+    };
+    let time_ns = spec.launch_overhead_ns + t_compute.max(t_dram).max(t_l2);
+
+    let achieved_gflops = k.counters.flops as f64 / time_ns; // FLOP/ns == GFLOP/s
+    let smem_bytes = match k.ktype {
+        KernelType::DenseMatmul => {
+            // each FMA pair reads 2 operands; register reuse divides
+            k.counters.flops as f64 * 4.0 / cal.dm_register_reuse
+        }
+        _ => 0.0,
+    };
+
+    KernelMetrics {
+        name: k.name,
+        ktype: k.ktype,
+        time_ns,
+        // Arithmetic intensity over *logical* traffic (operands touched
+        // once), the convention under which the paper's Fig 4 numbers
+        // (sgemm 26.8, SpMM 0.49, uEleWise 0.1, Reduce 0.34 FLOP/B)
+        // reproduce and which is stable across dataset scales — DRAM-
+        // measured AI would swing with cache residency of small tables.
+        ai: if logical == 0 { 0.0 } else { k.counters.flops as f64 / logical as f64 },
+        achieved_gflops,
+        peak_perf_pct: 100.0 * achieved_gflops / spec.fp32_gflops,
+        dram_bw_util_pct: 100.0 * (dram_bytes as f64 / time_ns) / spec.dram_gbps,
+        smem_bw_util_pct: 100.0 * (smem_bytes / time_ns) / spec.smem_gbps,
+        l2_hit_pct,
+        dram_bytes,
+        logical_bytes: logical,
+        flops: k.counters.flops,
+    }
+}
+
+/// Aggregate metrics of several invocations of the same kernel
+/// (time-weighted where that is meaningful).
+pub fn aggregate(metrics: &[KernelMetrics]) -> Option<KernelMetrics> {
+    let first = metrics.first()?;
+    let total_time: f64 = metrics.iter().map(|m| m.time_ns).sum();
+    let total_flops: u64 = metrics.iter().map(|m| m.flops).sum();
+    let total_dram: u64 = metrics.iter().map(|m| m.dram_bytes).sum();
+    let total_logical: u64 = metrics.iter().map(|m| m.logical_bytes).sum();
+    let wavg = |f: fn(&KernelMetrics) -> f64| -> f64 {
+        if total_time == 0.0 {
+            return 0.0;
+        }
+        metrics.iter().map(|m| f(m) * m.time_ns).sum::<f64>() / total_time
+    };
+    Some(KernelMetrics {
+        name: first.name,
+        ktype: first.ktype,
+        time_ns: total_time,
+        ai: if total_logical == 0 {
+            0.0
+        } else {
+            total_flops as f64 / total_logical as f64
+        },
+        achieved_gflops: if total_time == 0.0 { 0.0 } else { total_flops as f64 / total_time },
+        peak_perf_pct: wavg(|m| m.peak_perf_pct),
+        dram_bw_util_pct: wavg(|m| m.dram_bw_util_pct),
+        smem_bw_util_pct: wavg(|m| m.smem_bw_util_pct),
+        l2_hit_pct: wavg(|m| m.l2_hit_pct),
+        dram_bytes: total_dram,
+        logical_bytes: total_logical,
+        flops: total_flops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{GatherTrace, KernelCounters};
+
+    fn model() -> GpuModel {
+        GpuModel::default()
+    }
+
+    fn exec(
+        name: &'static str,
+        ktype: KernelType,
+        flops: u64,
+        read: u64,
+        written: u64,
+        trace: Option<GatherTrace>,
+    ) -> KernelExec {
+        KernelExec {
+            name,
+            ktype,
+            counters: KernelCounters { flops, bytes_read: read, bytes_written: written },
+            wall_nanos: 0,
+            trace,
+        }
+    }
+
+    #[test]
+    fn big_gemm_near_peak() {
+        // 2048^3 gemm: heavily compute bound
+        let n = 2048u64;
+        let k = exec(
+            "sgemm",
+            KernelType::DenseMatmul,
+            2 * n * n * n,
+            2 * n * n * 4,
+            n * n * 4,
+            None,
+        );
+        let m = analyze_kernels(&model(), &[k]);
+        assert!(m[0].peak_perf_pct > 85.0, "peak {}", m[0].peak_perf_pct);
+        assert!(m[0].ai > 9.375, "ai {}", m[0].ai);
+        assert!(m[0].l2_hit_pct > 80.0, "l2 {}", m[0].l2_hit_pct);
+        assert!(m[0].smem_bw_util_pct > 1.0 && m[0].smem_bw_util_pct < 100.0);
+    }
+
+    #[test]
+    fn tiny_gemm_occupancy_limited() {
+        // 64x64x64: one tile, cannot fill the GPU
+        let k = exec(
+            "sgemm",
+            KernelType::DenseMatmul,
+            2 * 64 * 64 * 64,
+            2 * 64 * 64 * 4,
+            64 * 64 * 4,
+            None,
+        );
+        let m = analyze_kernels(&model(), &[k]);
+        assert!(m[0].peak_perf_pct < 10.0, "tiny gemm peak {}", m[0].peak_perf_pct);
+    }
+
+    #[test]
+    fn elementwise_memory_bound() {
+        let n = 64 * 1024 * 1024u64;
+        let k = exec("uEleWise", KernelType::ElementWise, n / 4, n, n, None);
+        let m = analyze_kernels(&model(), &[k]);
+        assert!(m[0].ai < 1.0);
+        assert!(m[0].peak_perf_pct < 5.0);
+        assert!(m[0].dram_bw_util_pct > 70.0, "bw {}", m[0].dram_bw_util_pct);
+        assert_eq!(m[0].l2_hit_pct, 50.0);
+    }
+
+    #[test]
+    fn gather_thrash_raises_dram_traffic() {
+        // random gather over a table far larger than effective L2
+        let table_rows = 1_000_000u32; // 256 MB table
+        let rows: Vec<u32> =
+            (0..200_000u32).map(|i| (i.wrapping_mul(2654435761)) % table_rows).collect();
+        let gather_bytes = 200_000u64 * 256;
+        let k = exec(
+            "SpMMCsr",
+            KernelType::TopologyBased,
+            200_000 * 64,
+            gather_bytes + 200_000 * 8,
+            100_000 * 256,
+            Some(GatherTrace { row_bytes: 256, rows }),
+        );
+        let m = analyze_kernels(&model(), &[k]);
+        assert!(m[0].l2_hit_pct < 40.0, "thrash l2 {}", m[0].l2_hit_pct);
+        assert!(m[0].dram_bw_util_pct > 50.0, "bw {}", m[0].dram_bw_util_pct);
+        assert!(m[0].ai < 1.0, "ai {}", m[0].ai);
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let k = exec("uEleWise", KernelType::ElementWise, 8, 32, 32, None);
+        let m = analyze_kernels(&model(), &[k]);
+        assert!(m[0].time_ns >= model().spec.launch_overhead_ns);
+    }
+
+    #[test]
+    fn aggregate_weighted() {
+        let k1 = exec("Reduce", KernelType::ElementWise, 1000, 8_000_000, 4_000, None);
+        let k2 = exec("Reduce", KernelType::ElementWise, 1000, 8_000_000, 4_000, None);
+        let ms = analyze_kernels(&model(), &[k1, k2]);
+        let agg = aggregate(&ms).unwrap();
+        assert_eq!(agg.flops, 2000);
+        assert!((agg.time_ns - 2.0 * ms[0].time_ns).abs() < 1e-6);
+        assert!((agg.dram_bw_util_pct - ms[0].dram_bw_util_pct).abs() < 1e-6);
+        assert!(aggregate(&[]).is_none());
+    }
+}

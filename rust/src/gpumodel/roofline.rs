@@ -1,0 +1,145 @@
+//! Roofline model (paper Fig 4).
+//!
+//! Attainable performance at arithmetic intensity `ai` is
+//! `min(peak, ai × bandwidth)`; the ridge sits at `peak / bandwidth`
+//! (9.37 FLOP/byte for the paper's T4 operating point). Kernels above the
+//! ridge are compute-bound (sgemm at 26.8 FLOP/byte), kernels below are
+//! memory-bound (SpMMCsr at 0.49, uEleWise at 0.1, Reduce at 0.34).
+
+use crate::gpumodel::spec::T4Spec;
+
+/// One kernel's placement on the roofline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflinePoint {
+    /// Kernel name.
+    pub name: String,
+    /// Arithmetic intensity, FLOP / DRAM byte.
+    pub ai: f64,
+    /// Achieved GFLOP/s (modeled).
+    pub achieved_gflops: f64,
+    /// Attainable GFLOP/s at this AI.
+    pub attainable_gflops: f64,
+    /// True when the kernel sits at/above the ridge.
+    pub compute_bound: bool,
+}
+
+/// Attainable FLOP/s (in GFLOP/s) at a given arithmetic intensity.
+pub fn attainable_flops(spec: &T4Spec, ai: f64) -> f64 {
+    (ai * spec.dram_gbps).min(spec.fp32_gflops)
+}
+
+/// Build a roofline point for a kernel.
+pub fn place(spec: &T4Spec, name: &str, ai: f64, achieved_gflops: f64) -> RooflinePoint {
+    RooflinePoint {
+        name: name.to_string(),
+        ai,
+        achieved_gflops,
+        attainable_gflops: attainable_flops(spec, ai),
+        compute_bound: ai >= spec.ridge_ai(),
+    }
+}
+
+/// Render an ASCII log-log roofline chart with the given points
+/// (x: AI from 0.01 to 100, y: GFLOP/s from 1 to peak).
+pub fn ascii_chart(spec: &T4Spec, points: &[RooflinePoint]) -> String {
+    const W: usize = 72;
+    const H: usize = 20;
+    let x_min = 0.01f64.log10();
+    let x_max = 100f64.log10();
+    let y_min = 1f64.log10();
+    let y_max = (spec.fp32_gflops * 1.5).log10();
+    let to_col = |ai: f64| -> usize {
+        let t = (ai.max(0.011).log10() - x_min) / (x_max - x_min);
+        ((t * (W - 1) as f64).round() as isize).clamp(0, W as isize - 1) as usize
+    };
+    let to_row = |gf: f64| -> usize {
+        let t = (gf.max(1.01).log10() - y_min) / (y_max - y_min);
+        let r = ((1.0 - t) * (H - 1) as f64).round() as isize;
+        r.clamp(0, H as isize - 1) as usize
+    };
+    let mut grid = vec![vec![' '; W]; H];
+    // draw the roof
+    for col in 0..W {
+        let ai = 10f64.powf(x_min + (x_max - x_min) * col as f64 / (W - 1) as f64);
+        let roof = attainable_flops(spec, ai);
+        grid[to_row(roof)][col] = '-';
+    }
+    // ridge marker
+    let ridge_col = to_col(spec.ridge_ai());
+    for (row, grow) in grid.iter_mut().enumerate() {
+        if row % 2 == 0 {
+            let c = &mut grow[ridge_col];
+            if *c == ' ' {
+                *c = ':';
+            }
+        }
+    }
+    // points (labelled by first letter)
+    for p in points {
+        let c = p.name.chars().next().unwrap_or('*');
+        grid[to_row(p.achieved_gflops)][to_col(p.ai)] = c;
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "GFLOP/s (log)  peak={:.0}  ridge AI={:.2} FLOP/B\n",
+        spec.fp32_gflops,
+        spec.ridge_ai()
+    ));
+    for row in grid {
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:<36}AI (FLOP/byte, log) ->\n", "0.01"));
+    for p in points {
+        out.push_str(&format!(
+            "  {} = {:<12} AI {:>8.2}  achieved {:>9.1} GF/s  attainable {:>9.1}  [{}]\n",
+            p.name.chars().next().unwrap_or('*'),
+            p.name,
+            p.ai,
+            p.achieved_gflops,
+            p.attainable_gflops,
+            if p.compute_bound { "compute-bound" } else { "memory-bound" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        let spec = T4Spec::t4();
+        assert!((attainable_flops(&spec, 0.1) - 32.0).abs() < 1e-9);
+        assert_eq!(attainable_flops(&spec, 100.0), spec.fp32_gflops);
+        assert!(
+            (attainable_flops(&spec, spec.ridge_ai()) - spec.fp32_gflops).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn placement_bound_classification() {
+        let spec = T4Spec::t4();
+        let gemm = place(&spec, "sgemm", 26.8, 2877.0);
+        assert!(gemm.compute_bound);
+        let spmm = place(&spec, "SpMMCsr", 0.49, 117.0);
+        assert!(!spmm.compute_bound);
+        assert!(spmm.attainable_gflops < 200.0);
+    }
+
+    #[test]
+    fn chart_renders_all_points() {
+        let spec = T4Spec::t4();
+        let pts = vec![
+            place(&spec, "sgemm", 26.8, 2877.0),
+            place(&spec, "SpMMCsr", 0.49, 117.0),
+            place(&spec, "uEleWise", 0.1, 27.0),
+        ];
+        let chart = ascii_chart(&spec, &pts);
+        assert!(chart.contains("sgemm"));
+        assert!(chart.contains("memory-bound"));
+        assert!(chart.contains("compute-bound"));
+        assert!(chart.lines().count() > 20);
+    }
+}

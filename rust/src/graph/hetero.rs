@@ -1,0 +1,332 @@
+//! The typed heterogeneous-graph container.
+//!
+//! Mirrors the paper's Table 2 structure: a set of node types each with a
+//! count and a raw feature dimension (features may differ per type — the
+//! reason the Feature Projection stage exists), and a set of relations
+//! (typed edge sets) stored as CSR blocks `dst_type x src_type`.
+
+use std::collections::HashMap;
+
+use crate::graph::sparse::Csr;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Index of a node type within a [`HeteroGraph`].
+pub type NodeTypeId = usize;
+/// Index of a relation within a [`HeteroGraph`].
+pub type RelationId = usize;
+
+/// A node type: name, cardinality and raw feature dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeType {
+    /// Human name, e.g. `"movie"`.
+    pub name: String,
+    /// Short tag used in metapath strings, e.g. `'M'`.
+    pub tag: char,
+    /// Number of nodes of this type.
+    pub count: usize,
+    /// Raw feature dimension of this type (pre-projection).
+    pub feat_dim: usize,
+}
+
+/// A relation (typed edge set): directed `src_type -> dst_type` edges,
+/// stored as a CSR with one row per *destination* node (the layout
+/// neighbor aggregation consumes).
+#[derive(Debug, Clone)]
+pub struct Relation {
+    /// Human name, e.g. `"M-D"` (movie to director).
+    pub name: String,
+    /// Source node type.
+    pub src: NodeTypeId,
+    /// Destination node type.
+    pub dst: NodeTypeId,
+    /// Adjacency: `adj.n_rows == dst.count`, `adj.n_cols == src.count`,
+    /// `adj.row(d)` = source neighbors of destination node `d`.
+    pub adj: Csr,
+}
+
+/// Heterogeneous graph: typed nodes with per-type features + typed edges.
+#[derive(Debug, Clone)]
+pub struct HeteroGraph {
+    /// Dataset name, e.g. `"IMDB"`.
+    pub name: String,
+    node_types: Vec<NodeType>,
+    relations: Vec<Relation>,
+    /// Per-type raw feature matrices `[count, feat_dim]`.
+    features: Vec<Tensor>,
+    tag_index: HashMap<char, NodeTypeId>,
+    name_index: HashMap<String, NodeTypeId>,
+    rel_index: HashMap<(NodeTypeId, NodeTypeId), Vec<RelationId>>,
+}
+
+impl HeteroGraph {
+    /// All node types.
+    pub fn node_types(&self) -> &[NodeType] {
+        &self.node_types
+    }
+
+    /// All relations.
+    pub fn relations(&self) -> &[Relation] {
+        &self.relations
+    }
+
+    /// Node type by id.
+    pub fn node_type(&self, id: NodeTypeId) -> &NodeType {
+        &self.node_types[id]
+    }
+
+    /// Relation by id.
+    pub fn relation(&self, id: RelationId) -> &Relation {
+        &self.relations[id]
+    }
+
+    /// Raw features of a node type.
+    pub fn features(&self, id: NodeTypeId) -> &Tensor {
+        &self.features[id]
+    }
+
+    /// Look up a node type by its metapath tag (e.g. `'M'`).
+    pub fn type_by_tag(&self, tag: char) -> Result<NodeTypeId> {
+        self.tag_index
+            .get(&tag)
+            .copied()
+            .ok_or_else(|| Error::NotFound(format!("node type tag '{tag}' in {}", self.name)))
+    }
+
+    /// Look up a node type by name.
+    pub fn type_by_name(&self, name: &str) -> Result<NodeTypeId> {
+        self.name_index
+            .get(name)
+            .copied()
+            .ok_or_else(|| Error::NotFound(format!("node type '{name}' in {}", self.name)))
+    }
+
+    /// Relations going `src -> dst` (usually zero or one).
+    pub fn relations_between(&self, src: NodeTypeId, dst: NodeTypeId) -> &[RelationId] {
+        self.rel_index.get(&(src, dst)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Total node count across all types.
+    pub fn total_nodes(&self) -> usize {
+        self.node_types.iter().map(|t| t.count).sum()
+    }
+
+    /// Total edge count across all relations.
+    pub fn total_edges(&self) -> usize {
+        self.relations.iter().map(|r| r.adj.nnz()).sum()
+    }
+
+    /// Total raw feature bytes (f32).
+    pub fn feature_bytes(&self) -> usize {
+        self.features.iter().map(|f| f.bytes()).sum()
+    }
+
+    /// One-line statistics string (used by dataset listings).
+    pub fn stats_line(&self) -> String {
+        format!(
+            "{}: {} node types ({} nodes), {} relations ({} edges), {} feature data",
+            self.name,
+            self.node_types.len(),
+            self.total_nodes(),
+            self.relations.len(),
+            self.total_edges(),
+            crate::util::human_bytes(self.feature_bytes() as f64),
+        )
+    }
+
+    /// Return a copy with every relation's edges dropped independently
+    /// with probability `p` (deterministic in `seed`) — the Fig 5(a)
+    /// dropout sweep's graph transform.
+    pub fn dropout_edges(&self, p: f64, seed: u64) -> HeteroGraph {
+        let mut out = self.clone();
+        for (i, rel) in out.relations.iter_mut().enumerate() {
+            let mut rng = crate::util::Pcg32::new(seed, i as u64);
+            rel.adj = rel.adj.dropout(p, &mut rng);
+        }
+        out
+    }
+
+    /// Validate the whole container (shapes, CSR structure, index maps).
+    pub fn validate(&self) -> Result<()> {
+        if self.node_types.len() != self.features.len() {
+            return Err(Error::shape("features/node_types length mismatch"));
+        }
+        for (i, t) in self.node_types.iter().enumerate() {
+            let f = &self.features[i];
+            if f.shape() != (t.count, t.feat_dim) {
+                return Err(Error::shape(format!(
+                    "features[{}] shape {:?} != ({}, {})",
+                    t.name,
+                    f.shape(),
+                    t.count,
+                    t.feat_dim
+                )));
+            }
+        }
+        for r in &self.relations {
+            r.adj.validate()?;
+            if r.adj.n_rows != self.node_types[r.dst].count
+                || r.adj.n_cols != self.node_types[r.src].count
+            {
+                return Err(Error::shape(format!(
+                    "relation {} adjacency {}x{} vs dst {} src {}",
+                    r.name,
+                    r.adj.n_rows,
+                    r.adj.n_cols,
+                    self.node_types[r.dst].count,
+                    self.node_types[r.src].count
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder for [`HeteroGraph`].
+#[derive(Debug)]
+pub struct HeteroGraphBuilder {
+    name: String,
+    node_types: Vec<NodeType>,
+    relations: Vec<Relation>,
+    features: Vec<Tensor>,
+}
+
+impl HeteroGraphBuilder {
+    /// Start building a graph with the given dataset name.
+    pub fn new(name: impl Into<String>) -> Self {
+        HeteroGraphBuilder {
+            name: name.into(),
+            node_types: Vec::new(),
+            relations: Vec::new(),
+            features: Vec::new(),
+        }
+    }
+
+    /// Add a node type with its feature matrix; returns its id.
+    pub fn add_node_type(
+        &mut self,
+        name: impl Into<String>,
+        tag: char,
+        features: Tensor,
+    ) -> NodeTypeId {
+        let id = self.node_types.len();
+        self.node_types.push(NodeType {
+            name: name.into(),
+            tag,
+            count: features.rows(),
+            feat_dim: features.cols(),
+        });
+        self.features.push(features);
+        id
+    }
+
+    /// Add a relation; `adj` must be `dst.count x src.count`. Returns its id.
+    pub fn add_relation(
+        &mut self,
+        name: impl Into<String>,
+        src: NodeTypeId,
+        dst: NodeTypeId,
+        adj: Csr,
+    ) -> RelationId {
+        let id = self.relations.len();
+        self.relations.push(Relation { name: name.into(), src, dst, adj });
+        id
+    }
+
+    /// Finalize; validates all invariants.
+    pub fn build(self) -> Result<HeteroGraph> {
+        let mut tag_index = HashMap::new();
+        let mut name_index = HashMap::new();
+        for (i, t) in self.node_types.iter().enumerate() {
+            if tag_index.insert(t.tag, i).is_some() {
+                return Err(Error::config(format!("duplicate node tag '{}'", t.tag)));
+            }
+            if name_index.insert(t.name.clone(), i).is_some() {
+                return Err(Error::config(format!("duplicate node type '{}'", t.name)));
+            }
+        }
+        let mut rel_index: HashMap<(NodeTypeId, NodeTypeId), Vec<RelationId>> = HashMap::new();
+        for (i, r) in self.relations.iter().enumerate() {
+            rel_index.entry((r.src, r.dst)).or_default().push(i);
+        }
+        let g = HeteroGraph {
+            name: self.name,
+            node_types: self.node_types,
+            relations: self.relations,
+            features: self.features,
+            tag_index,
+            name_index,
+            rel_index,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+
+    fn tiny_graph() -> HeteroGraph {
+        let mut b = HeteroGraphBuilder::new("tiny");
+        let m = b.add_node_type("movie", 'M', Tensor::full(3, 4, 1.0));
+        let d = b.add_node_type("director", 'D', Tensor::full(2, 5, 2.0));
+        let adj = Coo::from_edges(3, 2, vec![(0, 0), (1, 0), (2, 1)]).unwrap().to_csr();
+        b.add_relation("D-M", d, m, adj.clone());
+        b.add_relation("M-D", m, d, adj.transposed());
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn build_and_lookup() {
+        let g = tiny_graph();
+        assert_eq!(g.total_nodes(), 5);
+        assert_eq!(g.total_edges(), 6);
+        assert_eq!(g.type_by_tag('M').unwrap(), 0);
+        assert_eq!(g.type_by_name("director").unwrap(), 1);
+        assert!(g.type_by_tag('X').is_err());
+        assert_eq!(g.relations_between(1, 0), &[0]);
+        assert_eq!(g.relations_between(0, 0), &[] as &[usize]);
+    }
+
+    #[test]
+    fn duplicate_tags_rejected() {
+        let mut b = HeteroGraphBuilder::new("dup");
+        b.add_node_type("a", 'A', Tensor::zeros(1, 1));
+        b.add_node_type("b", 'A', Tensor::zeros(1, 1));
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn bad_relation_shape_rejected() {
+        let mut b = HeteroGraphBuilder::new("bad");
+        let m = b.add_node_type("m", 'M', Tensor::zeros(3, 2));
+        let d = b.add_node_type("d", 'D', Tensor::zeros(2, 2));
+        // adjacency claims 4 destination rows but dst type has 3 nodes
+        let adj = Csr::empty(4, 2);
+        b.add_relation("bad", d, m, adj);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn stats_line_mentions_name() {
+        let g = tiny_graph();
+        assert!(g.stats_line().contains("tiny"));
+    }
+
+    #[test]
+    fn dropout_edges_thins_all_relations() {
+        let g = tiny_graph();
+        let none = g.dropout_edges(1.0, 1);
+        assert_eq!(none.total_edges(), 0);
+        let all = g.dropout_edges(0.0, 1);
+        assert_eq!(all.total_edges(), g.total_edges());
+        all.validate().unwrap();
+        none.validate().unwrap();
+        // deterministic in the seed
+        let a = g.dropout_edges(0.5, 7);
+        let b = g.dropout_edges(0.5, 7);
+        assert_eq!(a.total_edges(), b.total_edges());
+    }
+}

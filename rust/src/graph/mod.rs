@@ -1,0 +1,19 @@
+//! Heterogeneous-graph data structures.
+//!
+//! A heterogeneous graph (HG) has typed nodes and typed edges
+//! ("relations"). The paper's workloads split an HG into per-relation
+//! bipartite blocks (R-GCN's relation walk) or per-metapath homogeneous
+//! subgraphs (HAN / MAGNN's metapath walk); both produce sparse adjacency
+//! structures consumed by the aggregation kernels. This module provides:
+//!
+//! * [`sparse`] — COO / CSR / ELL sparse matrix formats with conversions,
+//!   boolean sparse-sparse product (for metapath composition), and
+//!   topology statistics.
+//! * [`hetero`] — the typed-graph container ([`HeteroGraph`]) with node
+//!   types, per-type feature matrices, and per-relation CSR blocks.
+
+pub mod hetero;
+pub mod sparse;
+
+pub use hetero::{HeteroGraph, HeteroGraphBuilder, NodeType, NodeTypeId, Relation, RelationId};
+pub use sparse::{Coo, Csr, Ell};

@@ -1,0 +1,465 @@
+//! Sparse adjacency formats: COO, CSR and ELL (padded rows).
+//!
+//! * **COO** is the edge-list form datasets are generated in and the form
+//!   the `SDDMMCoo` kernel consumes (paper §4.1, TB-Type).
+//! * **CSR** is what the `SpMMCsr` neighbor-aggregation kernel consumes
+//!   and what metapath composition (boolean CSR·CSR) operates on.
+//! * **ELL** pads every row to a fixed width `k`; it is the format the
+//!   Pallas kernels need (static shapes) and mirrors how GPU SpMM kernels
+//!   regularize row lengths. Rows longer than `k` are truncated by
+//!   *deterministic top-k by column id* — truncation statistics are
+//!   reported so experiments can size `k` to avoid loss.
+
+use crate::{Error, Result};
+
+/// Coordinate-format sparse matrix (edge list), sorted by (row, col).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    /// Number of rows (destination nodes).
+    pub n_rows: usize,
+    /// Number of columns (source nodes).
+    pub n_cols: usize,
+    /// Row index per nonzero.
+    pub rows: Vec<u32>,
+    /// Column index per nonzero.
+    pub cols: Vec<u32>,
+}
+
+impl Coo {
+    /// Build from an unsorted edge list; sorts and deduplicates.
+    pub fn from_edges(n_rows: usize, n_cols: usize, mut edges: Vec<(u32, u32)>) -> Result<Coo> {
+        for &(r, c) in &edges {
+            if r as usize >= n_rows || c as usize >= n_cols {
+                return Err(Error::shape(format!(
+                    "edge ({r},{c}) out of bounds {n_rows}x{n_cols}"
+                )));
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        let (rows, cols) = edges.into_iter().unzip();
+        Ok(Coo { n_rows, n_cols, rows, cols })
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Density = nnz / (rows*cols); sparsity = 1 - density.
+    pub fn density(&self) -> f64 {
+        if self.n_rows == 0 || self.n_cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0u32; self.n_rows + 1];
+        for &r in &self.rows {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            indptr,
+            indices: self.cols.clone(),
+        }
+    }
+}
+
+/// Compressed-sparse-row adjacency. Column indices within a row are sorted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Number of rows.
+    pub n_rows: usize,
+    /// Number of columns.
+    pub n_cols: usize,
+    /// Row pointer array, length `n_rows + 1`.
+    pub indptr: Vec<u32>,
+    /// Column indices, length `nnz`.
+    pub indices: Vec<u32>,
+}
+
+impl Csr {
+    /// Empty matrix with no nonzeros.
+    pub fn empty(n_rows: usize, n_cols: usize) -> Csr {
+        Csr { n_rows, n_cols, indptr: vec![0; n_rows + 1], indices: Vec::new() }
+    }
+
+    /// Identity adjacency (self loops) over `n` nodes.
+    pub fn identity(n: usize) -> Csr {
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            indptr: (0..=n as u32).collect(),
+            indices: (0..n as u32).collect(),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Neighbors (column ids) of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r] as usize..self.indptr[r + 1] as usize]
+    }
+
+    /// Out-degree of row `r`.
+    #[inline]
+    pub fn degree(&self, r: usize) -> usize {
+        (self.indptr[r + 1] - self.indptr[r]) as usize
+    }
+
+    /// Mean degree over rows.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_rows == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.n_rows as f64
+    }
+
+    /// Maximum row degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_rows).map(|r| self.degree(r)).max().unwrap_or(0)
+    }
+
+    /// Sparsity = 1 - nnz/(rows·cols). The quantity Fig 6(a) tracks.
+    pub fn sparsity(&self) -> f64 {
+        if self.n_rows == 0 || self.n_cols == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Structural validation: monotone indptr, in-bounds sorted indices.
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.n_rows + 1 {
+            return Err(Error::shape("indptr length"));
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() as usize != self.indices.len() {
+            return Err(Error::shape("indptr endpoints"));
+        }
+        for w in self.indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err(Error::shape("indptr not monotone"));
+            }
+        }
+        for r in 0..self.n_rows {
+            let row = self.row(r);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::shape(format!("row {r} indices not strictly sorted")));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= self.n_cols {
+                    return Err(Error::shape(format!("row {r} col {last} out of bounds")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose (CSR of the reverse edges).
+    pub fn transposed(&self) -> Csr {
+        let mut indptr = vec![0u32; self.n_cols + 1];
+        for &c in &self.indices {
+            indptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut cursor = indptr.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        for r in 0..self.n_rows {
+            for &c in self.row(r) {
+                let slot = cursor[c as usize];
+                indices[slot as usize] = r as u32;
+                cursor[c as usize] += 1;
+            }
+        }
+        Csr { n_rows: self.n_cols, n_cols: self.n_rows, indptr, indices }
+    }
+
+    /// Boolean sparse–sparse product `self · other` (pattern only).
+    ///
+    /// This is the metapath-composition primitive: the adjacency of
+    /// metapath `t1 → t2 → t3` is `A(t1,t2) · A(t2,t3)` with boolean
+    /// semiring. Classic two-pass Gustavson with a dense marker array.
+    pub fn bool_matmul(&self, other: &Csr) -> Result<Csr> {
+        if self.n_cols != other.n_rows {
+            return Err(Error::shape(format!(
+                "bool_matmul inner dims {} vs {}",
+                self.n_cols, other.n_rows
+            )));
+        }
+        let n_rows = self.n_rows;
+        let n_cols = other.n_cols;
+        let mut indptr = vec![0u32; n_rows + 1];
+        let mut indices: Vec<u32> = Vec::new();
+        // marker[c] == current row id  ⇒  column c already emitted
+        let mut marker = vec![u32::MAX; n_cols];
+        let mut scratch: Vec<u32> = Vec::new();
+        for r in 0..n_rows {
+            scratch.clear();
+            for &mid in self.row(r) {
+                for &c in other.row(mid as usize) {
+                    if marker[c as usize] != r as u32 {
+                        marker[c as usize] = r as u32;
+                        scratch.push(c);
+                    }
+                }
+            }
+            scratch.sort_unstable();
+            indices.extend_from_slice(&scratch);
+            indptr[r + 1] = indices.len() as u32;
+        }
+        Ok(Csr { n_rows, n_cols, indptr, indices })
+    }
+
+    /// Drop each nonzero independently with probability `p`, deterministic
+    /// in `rng`. Used by the Fig 5(a) edge-dropout sweep.
+    pub fn dropout(&self, p: f64, rng: &mut crate::util::Pcg32) -> Csr {
+        let mut indptr = vec![0u32; self.n_rows + 1];
+        let mut indices = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            for &c in self.row(r) {
+                if rng.gen_f64() >= p {
+                    indices.push(c);
+                }
+            }
+            indptr[r + 1] = indices.len() as u32;
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, indptr, indices }
+    }
+
+    /// Convert to ELL with row width `k`. Returns the ELL and the number
+    /// of nonzeros truncated away (0 when `k >= max_degree`).
+    pub fn to_ell(&self, k: usize) -> (Ell, usize) {
+        let mut col_idx = vec![0u32; self.n_rows * k];
+        let mut mask = vec![false; self.n_rows * k];
+        let mut truncated = 0usize;
+        for r in 0..self.n_rows {
+            let row = self.row(r);
+            let take = row.len().min(k);
+            truncated += row.len() - take;
+            for (j, &c) in row[..take].iter().enumerate() {
+                col_idx[r * k + j] = c;
+                mask[r * k + j] = true;
+            }
+        }
+        (
+            Ell { n_rows: self.n_rows, n_cols: self.n_cols, k, col_idx, mask },
+            truncated,
+        )
+    }
+
+    /// Convert to COO (sorted by construction).
+    pub fn to_coo(&self) -> Coo {
+        let mut rows = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            rows.extend(std::iter::repeat_n(r as u32, self.degree(r)));
+        }
+        Coo {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            rows,
+            cols: self.indices.clone(),
+        }
+    }
+}
+
+/// ELL (ELLPACK) padded-row adjacency: every row stores exactly `k`
+/// (column, valid) slots. The static-shape format the Pallas kernels use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    /// Number of rows.
+    pub n_rows: usize,
+    /// Number of columns.
+    pub n_cols: usize,
+    /// Padded row width.
+    pub k: usize,
+    /// `n_rows * k` column ids (garbage where `!mask`).
+    pub col_idx: Vec<u32>,
+    /// `n_rows * k` validity flags.
+    pub mask: Vec<bool>,
+}
+
+impl Ell {
+    /// Valid-slot count (equals the source CSR nnz minus truncation).
+    pub fn nnz(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    /// Slots (valid or not) for row `r`.
+    pub fn row_slots(&self, r: usize) -> (&[u32], &[bool]) {
+        (&self.col_idx[r * self.k..(r + 1) * self.k], &self.mask[r * self.k..(r + 1) * self.k])
+    }
+
+    /// Convert back to CSR (drops padding; inverse of [`Csr::to_ell`]
+    /// up to the truncation it applied).
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0u32; self.n_rows + 1];
+        let mut indices = Vec::with_capacity(self.nnz());
+        for r in 0..self.n_rows {
+            let (cols, mask) = self.row_slots(r);
+            for (c, &m) in cols.iter().zip(mask) {
+                if m {
+                    indices.push(*c);
+                }
+            }
+            indptr[r + 1] = indices.len() as u32;
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, indptr, indices }
+    }
+
+    /// Padding overhead ratio: total slots / valid slots.
+    pub fn pad_overhead(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return f64::INFINITY;
+        }
+        (self.n_rows * self.k) as f64 / nnz as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn sample_csr() -> Csr {
+        // 3x4:
+        // row0: cols 1,3
+        // row1: (empty)
+        // row2: cols 0,1,2
+        Coo::from_edges(3, 4, vec![(0, 3), (0, 1), (2, 0), (2, 1), (2, 2)])
+            .unwrap()
+            .to_csr()
+    }
+
+    #[test]
+    fn coo_sorts_and_dedups() {
+        let coo = Coo::from_edges(2, 2, vec![(1, 0), (0, 1), (1, 0)]).unwrap();
+        assert_eq!(coo.nnz(), 2);
+        assert_eq!(coo.rows, vec![0, 1]);
+        assert_eq!(coo.cols, vec![1, 0]);
+    }
+
+    #[test]
+    fn coo_bounds_checked() {
+        assert!(Coo::from_edges(2, 2, vec![(2, 0)]).is_err());
+        assert!(Coo::from_edges(2, 2, vec![(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn csr_roundtrip_and_stats() {
+        let csr = sample_csr();
+        csr.validate().unwrap();
+        assert_eq!(csr.nnz(), 5);
+        assert_eq!(csr.row(0), &[1, 3]);
+        assert_eq!(csr.row(1), &[] as &[u32]);
+        assert_eq!(csr.degree(2), 3);
+        assert_eq!(csr.max_degree(), 3);
+        assert!((csr.avg_degree() - 5.0 / 3.0).abs() < 1e-12);
+        assert!((csr.sparsity() - (1.0 - 5.0 / 12.0)).abs() < 1e-12);
+        let coo = csr.to_coo();
+        assert_eq!(coo.to_csr(), csr);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let csr = sample_csr();
+        let tt = csr.transposed().transposed();
+        assert_eq!(tt, csr);
+        csr.transposed().validate().unwrap();
+    }
+
+    #[test]
+    fn bool_matmul_identity() {
+        let csr = sample_csr();
+        let id = Csr::identity(4);
+        let prod = csr.bool_matmul(&id).unwrap();
+        assert_eq!(prod, csr);
+    }
+
+    #[test]
+    fn bool_matmul_two_hop() {
+        // A: 0->1, B: 1->2  ⇒  A·B: 0->2
+        let a = Coo::from_edges(2, 2, vec![(0, 1)]).unwrap().to_csr();
+        let b = Coo::from_edges(2, 3, vec![(1, 2)]).unwrap().to_csr();
+        let p = a.bool_matmul(&b).unwrap();
+        assert_eq!(p.n_rows, 2);
+        assert_eq!(p.n_cols, 3);
+        assert_eq!(p.row(0), &[2]);
+        assert_eq!(p.nnz(), 1);
+    }
+
+    #[test]
+    fn bool_matmul_dedups_paths() {
+        // two distinct 2-hop paths 0->{1,2}->3 must yield a single nonzero
+        let a = Coo::from_edges(1, 3, vec![(0, 1), (0, 2)]).unwrap().to_csr();
+        let b = Coo::from_edges(3, 4, vec![(1, 3), (2, 3)]).unwrap().to_csr();
+        let p = a.bool_matmul(&b).unwrap();
+        assert_eq!(p.row(0), &[3]);
+    }
+
+    #[test]
+    fn bool_matmul_dim_check() {
+        let a = Csr::identity(3);
+        let b = Csr::identity(4);
+        assert!(a.bool_matmul(&b).is_err());
+    }
+
+    #[test]
+    fn dropout_rates() {
+        let mut rng = Pcg32::seeded(9);
+        let big = Coo::from_edges(
+            100,
+            100,
+            (0..100u32).flat_map(|r| (0..50u32).map(move |c| (r, c))).collect(),
+        )
+        .unwrap()
+        .to_csr();
+        let kept = big.dropout(0.5, &mut rng);
+        let ratio = kept.nnz() as f64 / big.nnz() as f64;
+        assert!((ratio - 0.5).abs() < 0.05, "keep ratio {ratio}");
+        let all = big.dropout(0.0, &mut rng);
+        assert_eq!(all.nnz(), big.nnz());
+        let none = big.dropout(1.0, &mut rng);
+        assert_eq!(none.nnz(), 0);
+        kept.validate().unwrap();
+    }
+
+    #[test]
+    fn ell_padding_and_truncation() {
+        let csr = sample_csr();
+        let (ell, trunc) = csr.to_ell(3);
+        assert_eq!(trunc, 0);
+        assert_eq!(ell.nnz(), csr.nnz());
+        let (cols, mask) = ell.row_slots(0);
+        assert_eq!(&cols[..2], &[1, 3]);
+        assert_eq!(mask, &[true, true, false]);
+        // k smaller than max degree truncates
+        let (ell2, trunc2) = csr.to_ell(2);
+        assert_eq!(trunc2, 1);
+        assert_eq!(ell2.nnz(), 4);
+        assert!(ell2.pad_overhead() >= 1.0);
+    }
+
+    #[test]
+    fn identity_validates() {
+        Csr::identity(10).validate().unwrap();
+        Csr::empty(5, 7).validate().unwrap();
+    }
+}

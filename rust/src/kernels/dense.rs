@@ -1,0 +1,238 @@
+//! DM-Type kernels: dense–dense matrix multiplication (`sgemm`).
+//!
+//! The paper's Feature Projection stage is almost entirely `sgemm`
+//! (97.4% of FP time for HAN-DBLP, Table 3), and Semantic Aggregation's
+//! attention-weight computation is `sgemm` again. The native
+//! implementation here is a cache-blocked, 8-wide-unrolled matmul —
+//! the L3 perf pass iterates on the blocking (see EXPERIMENTS.md §Perf).
+
+use crate::kernels::{timed, Ctx, KernelCounters, KernelType};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Cache-blocking parameters for [`sgemm`]. Tuned in the perf pass.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmBlocking {
+    /// Rows of A per macro-tile.
+    pub mc: usize,
+    /// Columns of B per macro-tile.
+    pub nc: usize,
+    /// Shared K extent per macro-tile.
+    pub kc: usize,
+}
+
+impl Default for GemmBlocking {
+    fn default() -> Self {
+        // Measured best on the perf pass (EXPERIMENTS.md §Perf):
+        // 128x256x512 with the 2-row micro-kernel — 14.1 GF/s vs 5.4 at
+        // the previous 64x256x256 default on 1024x1024x64.
+        GemmBlocking { mc: 128, nc: 256, kc: 512 }
+    }
+}
+
+/// FLOP count of an (m,k)x(k,n) matmul: one mul + one add per MAC.
+#[inline]
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> u64 {
+    2 * m as u64 * k as u64 * n as u64
+}
+
+/// `sgemm`: `out = a · b`. DM-Type.
+///
+/// Counters follow the GPU convention the paper's Nsight numbers use:
+/// logical reads are the A and B operands once each (on-chip reuse is the
+/// cache model's job), writes are the output once.
+pub fn sgemm(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> Result<Tensor> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb {
+        return Err(Error::shape(format!("sgemm: a is {m}x{ka}, b is {kb}x{n}")));
+    }
+    let (out, nanos) = timed(|| sgemm_compute(a, b, blocking));
+    let counters = KernelCounters {
+        flops: gemm_flops(m, ka, n),
+        bytes_read: (a.bytes() + b.bytes()) as u64,
+        bytes_written: out.bytes() as u64,
+    };
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos, None);
+    Ok(out)
+}
+
+/// `sgemm` + broadcast bias add fused (DGL lowers Linear to this shape).
+pub fn sgemm_bias(
+    ctx: &mut Ctx,
+    a: &Tensor,
+    b: &Tensor,
+    bias: &[f32],
+    blocking: GemmBlocking,
+) -> Result<Tensor> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb {
+        return Err(Error::shape(format!("sgemm_bias: a is {m}x{ka}, b is {kb}x{n}")));
+    }
+    if bias.len() != n {
+        return Err(Error::shape(format!("bias len {} != n {}", bias.len(), n)));
+    }
+    let (mut out, nanos) = timed(|| sgemm_compute(a, b, blocking));
+    let (_, bias_nanos) = timed(|| {
+        for r in 0..m {
+            let row = out.row_mut(r);
+            for (o, &bv) in row.iter_mut().zip(bias) {
+                *o += bv;
+            }
+        }
+    });
+    let counters = KernelCounters {
+        flops: gemm_flops(m, ka, n) + (m * n) as u64,
+        bytes_read: (a.bytes() + b.bytes() + bias.len() * 4) as u64,
+        bytes_written: out.bytes() as u64,
+    };
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos + bias_nanos, None);
+    Ok(out)
+}
+
+/// The blocked compute core (no instrumentation). Public so benches can
+/// compare blockings directly.
+pub fn sgemm_compute(a: &Tensor, b: &Tensor, blk: GemmBlocking) -> Tensor {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut out = Tensor::zeros(m, n);
+    let av = a.as_slice();
+    let bv = b.as_slice();
+    let ov = out.as_mut_slice();
+
+    for jc in (0..n).step_by(blk.nc) {
+        let nc = blk.nc.min(n - jc);
+        for pc in (0..k).step_by(blk.kc) {
+            let kc = blk.kc.min(k - pc);
+            for ic in (0..m).step_by(blk.mc) {
+                let mc = blk.mc.min(m - ic);
+                // micro kernel: 2 rows of A at a time against the B
+                // panel — halves the O-row traffic per FMA and gives
+                // the vectorizer two independent accumulator streams.
+                // Sparse A rows (one-hot features) still take the
+                // zero-skip path, but only when the whole pair is zero.
+                let mut i = ic;
+                while i + 1 < ic + mc {
+                    let (a0, a1) = (&av[i * k + pc..], &av[(i + 1) * k + pc..]);
+                    for p in 0..kc {
+                        let (v0, v1) = (a0[p], a1[p]);
+                        if v0 == 0.0 && v1 == 0.0 {
+                            continue; // one-hot feature rows hit this often
+                        }
+                        let brow = &bv[(pc + p) * n + jc..(pc + p) * n + jc + nc];
+                        let (o0, o1) = ov.split_at_mut((i + 1) * n);
+                        let o0 = &mut o0[i * n + jc..i * n + jc + nc];
+                        let o1 = &mut o1[jc..jc + nc];
+                        for ((x0, x1), &b) in o0.iter_mut().zip(o1.iter_mut()).zip(brow) {
+                            *x0 += v0 * b;
+                            *x1 += v1 * b;
+                        }
+                    }
+                    i += 2;
+                }
+                // odd tail row
+                if i < ic + mc {
+                    let arow = &av[i * k + pc..i * k + pc + kc];
+                    for (p, &aval) in arow.iter().enumerate() {
+                        if aval == 0.0 {
+                            continue;
+                        }
+                        let brow = &bv[(pc + p) * n + jc..(pc + p) * n + jc + nc];
+                        let orow = &mut ov[i * n + jc..i * n + jc + nc];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += aval * b;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Naive triple-loop reference (for correctness tests and the perf
+/// baseline in EXPERIMENTS.md §Perf).
+pub fn sgemm_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut out = Tensor::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.get(i, p) * b.get(p, j);
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Pcg32::seeded(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (65, 130, 31)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let blocked = sgemm_compute(&a, &b, GemmBlocking::default());
+            let naive = sgemm_naive(&a, &b);
+            assert!(
+                blocked.allclose(&naive, 1e-4, 1e-5),
+                "mismatch at {m}x{k}x{n}: {}",
+                blocked.max_abs_diff(&naive).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn sgemm_counters() {
+        let mut ctx = Ctx::default();
+        let a = Tensor::full(4, 3, 1.0);
+        let b = Tensor::full(3, 5, 2.0);
+        let out = sgemm(&mut ctx, &a, &b, GemmBlocking::default()).unwrap();
+        assert_eq!(out.shape(), (4, 5));
+        assert_eq!(out.get(0, 0), 6.0);
+        let e = &ctx.events[0];
+        assert_eq!(e.name, "sgemm");
+        assert_eq!(e.ktype, KernelType::DenseMatmul);
+        assert_eq!(e.counters.flops, 2 * 4 * 3 * 5);
+        assert_eq!(e.counters.bytes_read, (4 * 3 + 3 * 5) * 4);
+        assert_eq!(e.counters.bytes_written, 4 * 5 * 4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut ctx = Ctx::default();
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(4, 5);
+        assert!(sgemm(&mut ctx, &a, &b, GemmBlocking::default()).is_err());
+    }
+
+    #[test]
+    fn bias_fused() {
+        let mut ctx = Ctx::default();
+        let a = Tensor::full(2, 2, 1.0);
+        let b = Tensor::full(2, 2, 1.0);
+        let out = sgemm_bias(&mut ctx, &a, &b, &[10.0, 20.0], GemmBlocking::default()).unwrap();
+        assert_eq!(out.get(0, 0), 12.0);
+        assert_eq!(out.get(1, 1), 22.0);
+        assert!(sgemm_bias(&mut ctx, &a, &b, &[1.0], GemmBlocking::default()).is_err());
+    }
+
+    #[test]
+    fn one_hot_fast_path_correct() {
+        // one-hot A exercises the aval==0 skip
+        let mut rng = Pcg32::seeded(22);
+        let a = Tensor::one_hot(10, 6);
+        let b = Tensor::randn(6, 4, 1.0, &mut rng);
+        let blocked = sgemm_compute(&a, &b, GemmBlocking::default());
+        let naive = sgemm_naive(&a, &b);
+        assert!(blocked.allclose(&naive, 1e-5, 1e-6));
+    }
+}

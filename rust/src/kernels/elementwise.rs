@@ -1,0 +1,340 @@
+//! EW-Type kernels: element-wise compute and reductions.
+//!
+//! Named after their CUDA counterparts in the paper's profile:
+//! `unrolled_elementwise_kernel` (uEleWise — unary maps),
+//! `vectorized_elementwise_kernel` (vEleWise — binary maps), and
+//! `reduce_kernel` (Reduce). All are memory-bound with arithmetic
+//! intensity well under 1 FLOP/byte (paper Fig 4: 0.1–0.34).
+
+use crate::kernels::{timed, Ctx, KernelCounters, KernelType};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Unary element-wise ops (lowered as `uEleWise`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UnaryOp {
+    /// tanh activation (HAN's semantic-attention MLP).
+    Tanh,
+    /// ELU activation (GAT layer output).
+    Elu,
+    /// Leaky ReLU with the given negative slope.
+    LeakyRelu(f32),
+    /// Exponential.
+    Exp,
+    /// Multiply by scalar.
+    Scale(f32),
+}
+
+impl UnaryOp {
+    #[inline]
+    fn apply(self, x: f32) -> f32 {
+        match self {
+            UnaryOp::Tanh => x.tanh(),
+            UnaryOp::Elu => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    x.exp_m1()
+                }
+            }
+            UnaryOp::LeakyRelu(s) => {
+                if x >= 0.0 {
+                    x
+                } else {
+                    s * x
+                }
+            }
+            UnaryOp::Exp => x.exp(),
+            UnaryOp::Scale(s) => s * x,
+        }
+    }
+
+    /// FLOPs charged per element (transcendentals cost > 1 on GPU too,
+    /// but Nsight counts retired FP instructions; 1 is the convention the
+    /// paper's AI numbers imply for these kernels).
+    fn flops_per_elem(self) -> u64 {
+        1
+    }
+}
+
+/// Binary element-wise ops (lowered as `vEleWise`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinaryOp {
+    /// Element-wise addition.
+    Add,
+    /// Element-wise multiplication.
+    Mul,
+}
+
+/// `uEleWise`: unary map over a tensor.
+pub fn unary(ctx: &mut Ctx, x: &Tensor, op: UnaryOp) -> Tensor {
+    let (out, nanos) = timed(|| {
+        let mut out = x.clone();
+        for v in out.as_mut_slice() {
+            *v = op.apply(*v);
+        }
+        out
+    });
+    let n = x.len() as u64;
+    let counters = KernelCounters {
+        flops: n * op.flops_per_elem(),
+        bytes_read: n * 4,
+        bytes_written: n * 4,
+    };
+    ctx.push("uEleWise", KernelType::ElementWise, counters, nanos, None);
+    out
+}
+
+/// `vEleWise`: binary map over two same-shape tensors.
+pub fn binary(ctx: &mut Ctx, a: &Tensor, b: &Tensor, op: BinaryOp) -> Result<Tensor> {
+    if a.shape() != b.shape() {
+        return Err(Error::shape(format!("vEleWise: {:?} vs {:?}", a.shape(), b.shape())));
+    }
+    let (out, nanos) = timed(|| {
+        let mut out = a.clone();
+        for (o, &bv) in out.as_mut_slice().iter_mut().zip(b.as_slice()) {
+            match op {
+                BinaryOp::Add => *o += bv,
+                BinaryOp::Mul => *o *= bv,
+            }
+        }
+        out
+    });
+    let n = a.len() as u64;
+    let counters =
+        KernelCounters { flops: n, bytes_read: 2 * n * 4, bytes_written: n * 4 };
+    ctx.push("vEleWise", KernelType::ElementWise, counters, nanos, None);
+    Ok(out)
+}
+
+/// Broadcast a per-row scalar across columns and multiply
+/// (`vEleWise` with broadcasting — how attention weights scale stacked
+/// per-metapath embeddings in Semantic Aggregation).
+pub fn scale_rows(ctx: &mut Ctx, x: &Tensor, row_scale: &[f32]) -> Result<Tensor> {
+    if row_scale.len() != x.rows() {
+        return Err(Error::shape(format!(
+            "scale_rows: {} scales for {} rows",
+            row_scale.len(),
+            x.rows()
+        )));
+    }
+    let (out, nanos) = timed(|| {
+        let mut out = x.clone();
+        for (r, &s) in row_scale.iter().enumerate() {
+            for v in out.row_mut(r) {
+                *v *= s;
+            }
+        }
+        out
+    });
+    let n = x.len() as u64;
+    let counters = KernelCounters {
+        flops: n,
+        bytes_read: n * 4 + row_scale.len() as u64 * 4,
+        bytes_written: n * 4,
+    };
+    ctx.push("vEleWise", KernelType::ElementWise, counters, nanos, None);
+    Ok(out)
+}
+
+/// `Reduce`: sum over groups of `group` consecutive rows.
+///
+/// Input `[g * n, f]` → output `[n, f]` with
+/// `out[i] = Σ_{j<g} x[j * n + i]` — exactly how DGL reduces the stacked
+/// `[P, N, F]` per-metapath tensor over the metapath axis in Semantic
+/// Aggregation (P = group count, stacked contiguously).
+pub fn reduce_grouped_rows(ctx: &mut Ctx, x: &Tensor, group: usize) -> Result<Tensor> {
+    if group == 0 || x.rows() % group != 0 {
+        return Err(Error::shape(format!(
+            "reduce: {} rows not divisible into {} groups",
+            x.rows(),
+            group
+        )));
+    }
+    let n = x.rows() / group;
+    let f = x.cols();
+    let (out, nanos) = timed(|| {
+        let mut out = Tensor::zeros(n, f);
+        for g in 0..group {
+            for i in 0..n {
+                let src = x.row(g * n + i);
+                let dst = out.row_mut(i);
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+        out
+    });
+    let counters = KernelCounters {
+        flops: x.len() as u64,
+        bytes_read: x.len() as u64 * 4,
+        bytes_written: (n * f) as u64 * 4,
+    };
+    ctx.push("Reduce", KernelType::ElementWise, counters, nanos, None);
+    Ok(out)
+}
+
+/// `Reduce` over columns: row-mean of a matrix → one scalar per row
+/// (HAN's semantic attention averages node scores per metapath).
+pub fn reduce_rows_mean(ctx: &mut Ctx, x: &Tensor) -> Vec<f32> {
+    let (out, nanos) = timed(|| {
+        let inv = 1.0 / x.cols().max(1) as f32;
+        (0..x.rows())
+            .map(|r| x.row(r).iter().sum::<f32>() * inv)
+            .collect::<Vec<f32>>()
+    });
+    let counters = KernelCounters {
+        flops: x.len() as u64 + x.rows() as u64,
+        bytes_read: x.len() as u64 * 4,
+        bytes_written: x.rows() as u64 * 4,
+    };
+    ctx.push("Reduce", KernelType::ElementWise, counters, nanos, None);
+    out
+}
+
+/// Row-wise dot with a broadcast vector: `out[i] = Σ_j x[i,j] * a[j]`.
+///
+/// This is how DGL's GATConv computes attention terms
+/// (`(feat * attn).sum(-1)`): a broadcast `vEleWise` multiply followed by
+/// a `Reduce` over the feature axis — two EW kernels, *not* an sgemm,
+/// which is why the paper's Table 3 NA stage contains no DM kernel.
+pub fn rowwise_dot(ctx: &mut Ctx, x: &Tensor, a: &[f32]) -> Result<Vec<f32>> {
+    if a.len() != x.cols() {
+        return Err(Error::shape(format!(
+            "rowwise_dot: vector len {} vs {} cols",
+            a.len(),
+            x.cols()
+        )));
+    }
+    let n = x.len() as u64;
+    // ① vEleWise: broadcast multiply
+    let (prod, mul_nanos) = timed(|| {
+        let mut prod = x.clone();
+        for r in 0..prod.rows() {
+            for (v, &av) in prod.row_mut(r).iter_mut().zip(a) {
+                *v *= av;
+            }
+        }
+        prod
+    });
+    ctx.push(
+        "vEleWise",
+        KernelType::ElementWise,
+        KernelCounters {
+            flops: n,
+            bytes_read: n * 4 + a.len() as u64 * 4,
+            bytes_written: n * 4,
+        },
+        mul_nanos,
+        None,
+    );
+    // ② Reduce: sum over the feature axis
+    let (out, red_nanos) = timed(|| {
+        (0..prod.rows())
+            .map(|r| prod.row(r).iter().sum::<f32>())
+            .collect::<Vec<f32>>()
+    });
+    ctx.push(
+        "Reduce",
+        KernelType::ElementWise,
+        KernelCounters {
+            flops: n,
+            bytes_read: n * 4,
+            bytes_written: x.rows() as u64 * 4,
+        },
+        red_nanos,
+        None,
+    );
+    Ok(out)
+}
+
+/// Row-wise softmax of a small matrix (semantic attention over P
+/// metapaths; P is tiny so this is an EW kernel, not TB).
+pub fn softmax_vec(ctx: &mut Ctx, x: &[f32]) -> Vec<f32> {
+    let (out, nanos) = timed(|| {
+        let maxv = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = x.iter().map(|&v| (v - maxv).exp()).collect();
+        let denom: f32 = exps.iter().sum();
+        exps.iter().map(|e| e / denom).collect::<Vec<f32>>()
+    });
+    let n = x.len() as u64;
+    let counters =
+        KernelCounters { flops: 4 * n, bytes_read: n * 4, bytes_written: n * 4 };
+    ctx.push("uEleWise", KernelType::ElementWise, counters, nanos, None);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unary_ops() {
+        let mut ctx = Ctx::default();
+        let x = Tensor::from_vec(1, 4, vec![-2.0, -0.5, 0.0, 2.0]).unwrap();
+        let lr = unary(&mut ctx, &x, UnaryOp::LeakyRelu(0.1));
+        assert_eq!(lr.as_slice(), &[-0.2, -0.05, 0.0, 2.0]);
+        let sc = unary(&mut ctx, &x, UnaryOp::Scale(2.0));
+        assert_eq!(sc.as_slice(), &[-4.0, -1.0, 0.0, 4.0]);
+        let elu = unary(&mut ctx, &x, UnaryOp::Elu);
+        assert!(elu.get(0, 0) > -1.0 && elu.get(0, 0) < 0.0);
+        assert_eq!(elu.get(0, 3), 2.0);
+        assert_eq!(ctx.events.len(), 3);
+        assert!(ctx.events.iter().all(|e| e.name == "uEleWise"));
+    }
+
+    #[test]
+    fn binary_ops_and_shape_check() {
+        let mut ctx = Ctx::default();
+        let a = Tensor::full(2, 2, 3.0);
+        let b = Tensor::full(2, 2, 4.0);
+        assert_eq!(binary(&mut ctx, &a, &b, BinaryOp::Add).unwrap().get(0, 0), 7.0);
+        assert_eq!(binary(&mut ctx, &a, &b, BinaryOp::Mul).unwrap().get(1, 1), 12.0);
+        let c = Tensor::zeros(3, 2);
+        assert!(binary(&mut ctx, &a, &c, BinaryOp::Add).is_err());
+    }
+
+    #[test]
+    fn scale_rows_broadcast() {
+        let mut ctx = Ctx::default();
+        let x = Tensor::full(3, 2, 1.0);
+        let out = scale_rows(&mut ctx, &x, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out.row(2), &[3.0, 3.0]);
+        assert!(scale_rows(&mut ctx, &x, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn reduce_grouped() {
+        let mut ctx = Ctx::default();
+        // 2 groups of 2 rows, f=2: group0 = rows 0..2, group1 = rows 2..4
+        let x = Tensor::from_vec(4, 2, vec![1., 1., 2., 2., 10., 10., 20., 20.]).unwrap();
+        let out = reduce_grouped_rows(&mut ctx, &x, 2).unwrap();
+        assert_eq!(out.shape(), (2, 2));
+        assert_eq!(out.row(0), &[11.0, 11.0]);
+        assert_eq!(out.row(1), &[22.0, 22.0]);
+        assert!(reduce_grouped_rows(&mut ctx, &x, 3).is_err());
+        assert_eq!(ctx.events[0].name, "Reduce");
+    }
+
+    #[test]
+    fn reduce_rows_mean_values() {
+        let mut ctx = Ctx::default();
+        let x = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let m = reduce_rows_mean(&mut ctx, &x);
+        assert!((m[0] - 2.0).abs() < 1e-6);
+        assert!((m[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_vec_sums_to_one() {
+        let mut ctx = Ctx::default();
+        let s = softmax_vec(&mut ctx, &[1.0, 2.0, 3.0]);
+        let sum: f32 = s.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+        // stability at large magnitudes
+        let s2 = softmax_vec(&mut ctx, &[1e4, 1e4]);
+        assert!((s2[0] - 0.5).abs() < 1e-6);
+    }
+}

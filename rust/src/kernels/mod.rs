@@ -1,0 +1,219 @@
+//! The kernel substrate — the operations HGNN execution decomposes into.
+//!
+//! The paper classifies every CUDA kernel in the profile into four types
+//! (§4.1); we reproduce the taxonomy verbatim and name our kernels after
+//! their CUDA counterparts:
+//!
+//! | Type | Paper examples | Here |
+//! |---|---|---|
+//! | **DM** dense–dense matmul | `sgemm` | [`dense::sgemm`] |
+//! | **TB** topology-based | `SpMMCsr`, `SDDMMCoo` | [`sparse_ops`] |
+//! | **EW** element-wise | `uEleWise`, `vEleWise`, `Reduce` | [`elementwise`] |
+//! | **DR** data rearrangement | `Concat` (CatArrayBatchedCopy) | [`rearrange`] |
+//!
+//! Every kernel executes real f32 math on the CPU **and** reports exact
+//! operation counters ([`KernelCounters`]): FLOPs, logical bytes read and
+//! written, and — for irregular TB kernels — the gather trace that the
+//! T4 cache model replays. Wallclock is recorded per invocation; modeled
+//! GPU time is derived later by [`crate::gpumodel`].
+
+pub mod dense;
+pub mod elementwise;
+pub mod rearrange;
+pub mod sparse_ops;
+
+/// The paper's four kernel classes (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelType {
+    /// Dense–dense matrix multiplication (compute-bound, regular).
+    DenseMatmul,
+    /// Graph-topology-based (memory-bound, irregular access).
+    TopologyBased,
+    /// Element-wise / reduction (memory-bound, low AI).
+    ElementWise,
+    /// Data rearrangement (memory-bound, pure movement).
+    DataRearrange,
+}
+
+impl KernelType {
+    /// Paper abbreviation: DM / TB / EW / DR.
+    pub fn abbrev(self) -> &'static str {
+        match self {
+            KernelType::DenseMatmul => "DM",
+            KernelType::TopologyBased => "TB",
+            KernelType::ElementWise => "EW",
+            KernelType::DataRearrange => "DR",
+        }
+    }
+
+    /// All types, in the paper's presentation order.
+    pub const ALL: [KernelType; 4] = [
+        KernelType::DenseMatmul,
+        KernelType::TopologyBased,
+        KernelType::ElementWise,
+        KernelType::DataRearrange,
+    ];
+}
+
+/// Exact operation counters for one kernel invocation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KernelCounters {
+    /// Floating-point operations performed (mul+add counted separately).
+    pub flops: u64,
+    /// Logical bytes read (before any cache).
+    pub bytes_read: u64,
+    /// Logical bytes written.
+    pub bytes_written: u64,
+}
+
+impl KernelCounters {
+    /// Arithmetic intensity in FLOP/byte over total traffic.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let bytes = self.bytes_read + self.bytes_written;
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / bytes as f64
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&mut self, other: &KernelCounters) {
+        self.flops += other.flops;
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+    }
+}
+
+/// Irregular gather trace: row ids gathered from a feature matrix, in
+/// access order. The cache model expands each row into `row_bytes` of
+/// contiguous lines at `row * row_bytes` within a private address space.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GatherTrace {
+    /// Bytes per gathered row (feature row width * 4).
+    pub row_bytes: u32,
+    /// Gathered row ids in access order.
+    pub rows: Vec<u32>,
+}
+
+/// One executed kernel: identity, class, counters, wallclock and trace.
+#[derive(Debug, Clone)]
+pub struct KernelExec {
+    /// Kernel name (CUDA-counterpart naming: `sgemm`, `SpMMCsr`, ...).
+    pub name: &'static str,
+    /// Kernel class.
+    pub ktype: KernelType,
+    /// Exact counters.
+    pub counters: KernelCounters,
+    /// CPU wallclock nanoseconds of the native execution.
+    pub wall_nanos: u64,
+    /// Irregular gather trace (TB kernels only).
+    pub trace: Option<GatherTrace>,
+}
+
+/// Collects [`KernelExec`] records during kernel execution; the engine
+/// drains it into the profiler with stage attribution.
+#[derive(Debug, Default)]
+pub struct Ctx {
+    /// Executed kernels, in issue order.
+    pub events: Vec<KernelExec>,
+    /// When false, gather traces are dropped to save memory (benches that
+    /// only need time breakdowns).
+    pub record_traces: bool,
+}
+
+impl Ctx {
+    /// Context that records gather traces (needed for Table 3 / Fig 4).
+    pub fn with_traces() -> Ctx {
+        Ctx { events: Vec::new(), record_traces: true }
+    }
+
+    /// Record one kernel execution.
+    pub fn push(
+        &mut self,
+        name: &'static str,
+        ktype: KernelType,
+        counters: KernelCounters,
+        wall_nanos: u64,
+        trace: Option<GatherTrace>,
+    ) {
+        let trace = if self.record_traces { trace } else { None };
+        self.events.push(KernelExec { name, ktype, counters, wall_nanos, trace });
+    }
+
+    /// Total counters across all recorded kernels.
+    pub fn totals(&self) -> KernelCounters {
+        let mut t = KernelCounters::default();
+        for e in &self.events {
+            t.merge(&e.counters);
+        }
+        t
+    }
+
+    /// Drain all events out of the context.
+    pub fn drain(&mut self) -> Vec<KernelExec> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Time a closure, returning (result, elapsed nanoseconds).
+#[inline]
+pub(crate) fn timed<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_nanos() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ai_computation() {
+        let c = KernelCounters { flops: 100, bytes_read: 40, bytes_written: 10 };
+        assert!((c.arithmetic_intensity() - 2.0).abs() < 1e-12);
+        assert_eq!(KernelCounters::default().arithmetic_intensity(), 0.0);
+    }
+
+    #[test]
+    fn ctx_records_and_totals() {
+        let mut ctx = Ctx::default();
+        ctx.push(
+            "k1",
+            KernelType::ElementWise,
+            KernelCounters { flops: 5, bytes_read: 8, bytes_written: 8 },
+            100,
+            None,
+        );
+        ctx.push(
+            "k2",
+            KernelType::DenseMatmul,
+            KernelCounters { flops: 10, bytes_read: 4, bytes_written: 4 },
+            200,
+            None,
+        );
+        let t = ctx.totals();
+        assert_eq!(t.flops, 15);
+        assert_eq!(t.bytes_read, 12);
+        assert_eq!(ctx.drain().len(), 2);
+        assert!(ctx.events.is_empty());
+    }
+
+    #[test]
+    fn trace_dropped_unless_enabled() {
+        let mut ctx = Ctx::default();
+        let trace = GatherTrace { row_bytes: 256, rows: vec![1, 2, 3] };
+        ctx.push("k", KernelType::TopologyBased, KernelCounters::default(), 1, Some(trace.clone()));
+        assert!(ctx.events[0].trace.is_none());
+        let mut ctx2 = Ctx::with_traces();
+        ctx2.push("k", KernelType::TopologyBased, KernelCounters::default(), 1, Some(trace));
+        assert!(ctx2.events[0].trace.is_some());
+    }
+
+    #[test]
+    fn abbrevs() {
+        assert_eq!(KernelType::DenseMatmul.abbrev(), "DM");
+        assert_eq!(KernelType::TopologyBased.abbrev(), "TB");
+        assert_eq!(KernelType::ElementWise.abbrev(), "EW");
+        assert_eq!(KernelType::DataRearrange.abbrev(), "DR");
+    }
+}

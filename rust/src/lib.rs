@@ -1,0 +1,104 @@
+//! # hgnn-char
+//!
+//! A full-stack reproduction of *"Characterizing and Understanding HGNNs on
+//! GPUs"* (Yan et al., 2022): heterogeneous-graph neural-network workloads
+//! (RGCN, HAN, MAGNN, plus a GCN baseline), the kernel substrate their
+//! execution decomposes into (DM / TB / EW / DR kernel types), a
+//! trace-driven NVIDIA T4 performance model standing in for Nsight
+//! Compute, and a characterization harness that regenerates every figure
+//! and table of the paper's evaluation.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the Rust coordinator: dataset synthesis,
+//!   metapath subgraph building, the staged execution engine, the
+//!   inter-subgraph scheduler, the profiler and GPU model, and the PJRT
+//!   runtime that loads AOT-compiled JAX/Pallas artifacts.
+//! * **L2 (`python/compile/model.py`)** — JAX stage functions lowered once
+//!   to HLO text (`make artifacts`), never on the request path.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the paper's
+//!   hot-spots (tiled matmul, ELL segment-reduce SpMM, SDDMM, segment
+//!   softmax), `interpret=True`, validated against pure-jnp oracles.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hgnn_char::prelude::*;
+//! use hgnn_char::{datasets, models};
+//!
+//! // Build the DBLP heterogeneous graph at the paper's published scale.
+//! let hg = datasets::build(DatasetId::Dblp, &DatasetScale::paper()).unwrap();
+//! // HAN execution plan: metapath subgraphs + FP/NA/SA stages.
+//! let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+//! // Run on the native backend with full profiling.
+//! let mut engine = Engine::new(Backend::native());
+//! let run = engine.run(&plan, &hg).unwrap();
+//! println!("{}", run.profile.stage_breakdown());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod engine;
+pub mod gpumodel;
+pub mod graph;
+pub mod kernels;
+pub mod metapath;
+pub mod models;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A dataset, model, metapath or kernel was configured inconsistently.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+    /// Shapes of tensors/graphs fed to a kernel do not line up.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// A named entity (dataset, node type, artifact, ...) was not found.
+    #[error("not found: {0}")]
+    NotFound(String),
+    /// PJRT runtime failures (compile/execute/transfer).
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// I/O failures (artifact files, report output).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper: configuration error from anything displayable.
+    pub fn config(msg: impl std::fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+    /// Helper: shape error from anything displayable.
+    pub fn shape(msg: impl std::fmt::Display) -> Self {
+        Error::Shape(msg.to_string())
+    }
+}
+
+/// One-stop imports for examples, benches and downstream users.
+pub mod prelude {
+    pub use crate::datasets::{self, DatasetId, DatasetScale};
+    pub use crate::gpumodel::{GpuModel, T4Spec};
+    pub use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
+    pub use crate::metapath::{Metapath, SubgraphSet};
+    pub use crate::profiler::{Profile, StageId};
+    pub use crate::report;
+    pub use crate::tensor::Tensor;
+    pub use crate::{Error, Result};
+    // Filled in as the corresponding modules land:
+    pub use crate::coordinator::*;
+    pub use crate::engine::*;
+    pub use crate::models::*;
+}

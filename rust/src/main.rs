@@ -1,0 +1,305 @@
+//! `hgnn-char` — the command-line entry point of the L3 coordinator.
+//!
+//! See [`hgnn_char::cli::USAGE`] for the command grammar. The figure and
+//! table commands regenerate the paper's evaluation artifacts from the
+//! native substrate + T4 model; `artifacts`/`serve` exercise the PJRT
+//! runtime on the AOT JAX/Pallas computations.
+
+use hgnn_char::cli::{Args, USAGE};
+use hgnn_char::coordinator::{Coordinator, SchedulePolicy, ServeConfig, Server};
+use hgnn_char::datasets::{self, DatasetId};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::gpumodel::{roofline, GpuModel};
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::profiler::StageId;
+use hgnn_char::report;
+use hgnn_char::runtime::PjrtRuntime;
+use hgnn_char::Result;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "list" => cmd_list(),
+        "run" => cmd_run(args),
+        "figure" => cmd_figure(args),
+        "table" => cmd_table(args),
+        "timeline" => cmd_timeline(args),
+        "artifacts" => cmd_artifacts(args),
+        "serve" => cmd_serve(args),
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("datasets:");
+    for id in [DatasetId::Imdb, DatasetId::Acm, DatasetId::Dblp, DatasetId::RedditSim] {
+        let hg = datasets::build(id, &hgnn_char::datasets::DatasetScale::ci())?;
+        println!("  {:<12} ({})  {}", id.name(), id.abbrev(), hg.stats_line());
+        if !id.default_metapaths().is_empty() {
+            println!("    metapaths: {}", id.default_metapaths().join(", "));
+        }
+    }
+    println!("models: RGCN, HAN, MAGNN (HGNNs) + GCN (baseline)");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = ModelId::parse(&args.flag_str("model", "han"))?;
+    let dataset = DatasetId::parse(&args.flag_str("dataset", "imdb"))?;
+    let scale = args.scale()?;
+    let workers = args.flag_usize("workers", 4)?;
+    let policy = match args.flag_str("policy", "seq").as_str() {
+        "seq" => SchedulePolicy::Sequential,
+        "par" => SchedulePolicy::InterSubgraphParallel { workers },
+        "fused" => SchedulePolicy::FusedSubgraph { workers },
+        "mix" => SchedulePolicy::BoundAwareMixing { workers },
+        other => return Err(hgnn_char::Error::config(format!("--policy '{other}'"))),
+    };
+    let hg = datasets::build(dataset, &scale)?;
+    println!("{}", hg.stats_line());
+    let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
+    println!("{}", plan.describe(&hg));
+    let coord = Coordinator::new(Backend::native());
+    let run = coord.run(&plan, &hg, policy)?;
+    println!("\n{}", run.profile.stage_breakdown());
+    println!("{}", run.report.summary());
+    println!("\nkernel table (NA stage):");
+    println!(
+        "{}",
+        report::table3_stage(
+            StageId::NeighborAggregation,
+            &run.profile.kernel_table(StageId::NeighborAggregation)
+        )
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("2");
+    let scale = args.scale()?;
+    match which {
+        "2" => figure2(&scale),
+        "3" => figure3(&scale),
+        "4" => figure4(&scale),
+        "5a" | "5b" | "5c" => figure5(which, &scale),
+        "6a" | "6b" => figure6(which, &scale),
+        other => Err(hgnn_char::Error::config(format!("figure '{other}'"))),
+    }
+}
+
+fn figure2(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+    println!("Fig 2: execution time breakdown of inference (modeled T4)");
+    let mut profiles = Vec::new();
+    for model in ModelId::HGNNS {
+        for dataset in DatasetId::HETERO {
+            let hg = datasets::build(dataset, scale)?;
+            let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
+            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+            println!("{}", report::fig2_row(model.name(), dataset.abbrev(), &run.profile));
+            profiles.push(run.profile);
+        }
+    }
+    let refs: Vec<&hgnn_char::profiler::Profile> = profiles.iter().collect();
+    let avg = report::average_stage_pct(&refs);
+    println!("\naverage across models/datasets (paper: FP 19%, NA 74%, SA 7%):");
+    for (s, v) in avg {
+        println!("  {:<22} {v:>5.1}%", s.name());
+    }
+    Ok(())
+}
+
+fn figure3(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+    println!("Fig 3: execution time breakdown by CUDA-kernel type (modeled T4)");
+    for model in ModelId::HGNNS {
+        for dataset in DatasetId::HETERO {
+            let hg = datasets::build(dataset, scale)?;
+            let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
+            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+            print!("{}", report::fig3_rows(model.name(), dataset.abbrev(), &run.profile));
+        }
+    }
+    Ok(())
+}
+
+fn figure4(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+    println!("Fig 4: kernels on the FP32 roofline — HAN on DBLP (modeled T4)");
+    let hg = datasets::build(DatasetId::Dblp, scale)?;
+    let plan = models::han_plan(&hg, &ModelConfig::default())?;
+    let run = Engine::new(Backend::native()).run(&plan, &hg)?;
+    let model = GpuModel::default();
+    let mut points = Vec::new();
+    for stage in StageId::GPU_STAGES {
+        for (name, m, _) in run.profile.kernel_table(stage) {
+            points.push(roofline::place(&model.spec, &name, m.ai, m.achieved_gflops));
+        }
+    }
+    points.dedup_by(|a, b| a.name == b.name);
+    println!("{}", roofline::ascii_chart(&model.spec, &points));
+    Ok(())
+}
+
+fn figure5(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+    match which {
+        "5a" => {
+            println!("Fig 5a: NA time vs edge dropout (HAN vs GCN, Reddit-sim)");
+            let pts = models::sweeps::fig5a_dropout_sweep(scale)?;
+            for (label, series) in pts {
+                println!(
+                    "{}",
+                    report::sweep_series(&label, "dropout", "NA time (ms)", &series)
+                );
+            }
+        }
+        "5b" => {
+            println!("Fig 5b: NA time vs #metapaths (HAN, DBLP)");
+            let series = models::sweeps::fig5b_metapath_sweep(scale)?;
+            println!(
+                "{}",
+                report::sweep_series("HAN-DB", "#metapaths", "NA time (ms)", &series)
+            );
+        }
+        "5c" => {
+            println!("Fig 5c: NA/SA timeline with inter-subgraph parallelism + barrier");
+            let hg = datasets::build(DatasetId::Dblp, scale)?;
+            let plan = models::han_plan(&hg, &ModelConfig::default())?;
+            let coord = Coordinator::new(Backend::native_no_traces());
+            let run =
+                coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 4 })?;
+            println!("{}", run.profile.timeline().render(96));
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn figure6(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+    match which {
+        "6a" => {
+            println!("Fig 6a: subgraph sparsity vs metapath length");
+            for (seed, dataset) in
+                [("MAM", DatasetId::Imdb), ("PAP", DatasetId::Acm), ("APA", DatasetId::Dblp)]
+            {
+                let hg = datasets::build(dataset, scale)?;
+                let pts = hgnn_char::metapath::sparsity::sparsity_sweep(&hg, seed, 3)?;
+                let series: Vec<(f64, f64)> =
+                    pts.iter().map(|p| (p.length as f64, p.sparsity)).collect();
+                println!(
+                    "{}",
+                    report::sweep_series(
+                        &format!("{} seed {}", dataset.abbrev(), seed),
+                        "length",
+                        "sparsity",
+                        &series
+                    )
+                );
+                if let Some(model) = hgnn_char::metapath::fit_sparsity_model(&pts) {
+                    println!(
+                        "  §5 correlation model: log10(density) = {:.3} + {:.3}*len (r2 {:.3})\n",
+                        model.intercept, model.slope, model.r2
+                    );
+                }
+            }
+        }
+        "6b" => {
+            println!("Fig 6b: total execution time vs #metapaths (HAN, DBLP)");
+            let series = models::sweeps::fig6b_total_time_sweep(scale)?;
+            println!(
+                "{}",
+                report::sweep_series("HAN-DB", "#metapaths", "total (ms)", &series)
+            );
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("3");
+    if which != "3" {
+        return Err(hgnn_char::Error::config(format!("table '{which}' (only 3 exists)")));
+    }
+    let scale = args.scale()?;
+    println!("Table 3: profiling of major kernels, HAN on DBLP (modeled T4)");
+    let hg = datasets::build(DatasetId::Dblp, &scale)?;
+    let plan = models::han_plan(&hg, &ModelConfig::default())?;
+    let run = Engine::new(Backend::native()).run(&plan, &hg)?;
+    for stage in StageId::GPU_STAGES {
+        println!("{}", report::table3_stage(stage, &run.profile.kernel_table(stage)));
+    }
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let model = ModelId::parse(&args.flag_str("model", "han"))?;
+    let dataset = DatasetId::parse(&args.flag_str("dataset", "dblp"))?;
+    let workers = args.flag_usize("workers", 4)?;
+    let hg = datasets::build(dataset, &args.scale()?)?;
+    let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let run = coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers })?;
+    println!("{}", run.profile.timeline().render(96));
+    println!("{}", run.report.summary());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.flag_str("dir", "artifacts");
+    let rt = PjrtRuntime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = rt.manifest()?;
+    println!("{} artifacts in {dir}/:", manifest.entries.len());
+    for e in &manifest.entries {
+        println!(
+            "  {:<28} model={:<6} dataset={:<6} stage={:<12} inputs={} outputs={}",
+            e.name,
+            e.model,
+            e.dataset,
+            e.stage,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.flag_usize("requests", 64)?;
+    let hg = datasets::build(DatasetId::Imdb, &hgnn_char::datasets::DatasetScale::ci())?;
+    let plan = models::han_plan(&hg, &ModelConfig::default())?;
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+    let embeddings = run.output;
+    let server = Server::start(ServeConfig::default(), move |ids: &[u32]| {
+        Ok(ids
+            .iter()
+            .map(|&i| embeddings.row(i as usize % embeddings.rows().max(1)).to_vec())
+            .collect())
+    });
+    let receivers: Vec<_> = (0..n as u32).map(|i| server.submit(i)).collect::<Result<_>>()?;
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches (mean batch {:.1}), p50 latency {}, throughput {:.0} req/s",
+        stats.completed,
+        stats.batches,
+        stats.mean_batch,
+        hgnn_char::util::human_time(stats.latency.median),
+        stats.throughput_rps
+    );
+    Ok(())
+}

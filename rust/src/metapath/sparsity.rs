@@ -1,0 +1,141 @@
+//! Sparsity-vs-metapath-length analysis.
+//!
+//! Fig 6(a) of the paper shows subgraph sparsity *decreasing* as metapath
+//! length increases (longer paths reach more neighbors). §5's third
+//! guideline proposes a correlation model quantifying that relation so
+//! sparsity-aware optimizations can be configured without materializing
+//! the subgraph. We fit `log10(density) = a + b * length` by OLS, which
+//! linearizes the multiplicative fan-out of path composition.
+
+use crate::graph::HeteroGraph;
+use crate::metapath::{walk_metapath, Metapath};
+use crate::util::stats::ols;
+use crate::Result;
+
+/// One measured (metapath, sparsity) observation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityPoint {
+    /// Metapath name, e.g. `"MDMDM"`.
+    pub name: String,
+    /// Length in hops.
+    pub length: usize,
+    /// Measured sparsity `1 - nnz/(n*n)`.
+    pub sparsity: f64,
+    /// Measured nnz of the subgraph adjacency.
+    pub nnz: usize,
+}
+
+/// The §5 guideline-3 correlation model: predicts subgraph density from
+/// metapath length, `log10(density) ≈ intercept + slope * length`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityModel {
+    /// OLS intercept (log10 density at length 0).
+    pub intercept: f64,
+    /// OLS slope per hop (positive: density grows with length).
+    pub slope: f64,
+    /// Goodness of fit on the training points.
+    pub r2: f64,
+}
+
+impl SparsityModel {
+    /// Predicted density for a metapath of the given hop length.
+    pub fn predict_density(&self, length: usize) -> f64 {
+        10f64.powf(self.intercept + self.slope * length as f64).clamp(0.0, 1.0)
+    }
+
+    /// Predicted sparsity (1 - density).
+    pub fn predict_sparsity(&self, length: usize) -> f64 {
+        1.0 - self.predict_density(length)
+    }
+}
+
+/// Measure sparsity for metapaths formed by repeating a symmetric seed
+/// pattern, e.g. seed `"MDM"` → `MDM`, `MDMDM`, `MDMDMDM`, ... up to
+/// `max_len` repetitions. This is the Fig 6(a) sweep.
+pub fn sparsity_sweep(
+    hg: &HeteroGraph,
+    seed: &str,
+    repeats: usize,
+) -> Result<Vec<SparsityPoint>> {
+    let mut points = Vec::new();
+    let mut name = seed.to_string();
+    for _ in 0..repeats {
+        let mp = Metapath::parse(&name)?;
+        let adj = walk_metapath(hg, &mp)?;
+        points.push(SparsityPoint {
+            name: mp.name(),
+            length: mp.len(),
+            sparsity: adj.sparsity(),
+            nnz: adj.nnz(),
+        });
+        // extend by one seed period, dropping the duplicated junction tag:
+        // "MDM" + "DM" -> "MDMDM"
+        name.push_str(&seed[1..]);
+    }
+    Ok(points)
+}
+
+/// Fit the correlation model to measured points (needs ≥ 2 points with
+/// nonzero density).
+pub fn fit_sparsity_model(points: &[SparsityPoint]) -> Option<SparsityModel> {
+    let usable: Vec<&SparsityPoint> = points.iter().filter(|p| p.sparsity < 1.0).collect();
+    if usable.len() < 2 {
+        return None;
+    }
+    let xs: Vec<f64> = usable.iter().map(|p| p.length as f64).collect();
+    let ys: Vec<f64> = usable
+        .iter()
+        .map(|p| (1.0 - p.sparsity).max(1e-300).log10())
+        .collect();
+    let (a, b, r2) = ols(&xs, &ys);
+    Some(SparsityModel { intercept: a, slope: b, r2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+
+    #[test]
+    fn sweep_lengths_grow_by_seed_period() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let pts = sparsity_sweep(&hg, "MDM", 3).unwrap();
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].length, 2);
+        assert_eq!(pts[1].length, 4);
+        assert_eq!(pts[2].length, 6);
+        assert_eq!(pts[1].name, "MDMDM");
+    }
+
+    #[test]
+    fn sparsity_decreases_with_length() {
+        // the paper's Fig 6(a) claim, on synthetic IMDB
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let pts = sparsity_sweep(&hg, "MAM", 3).unwrap();
+        for w in pts.windows(2) {
+            assert!(
+                w[1].sparsity <= w[0].sparsity + 1e-12,
+                "sparsity should not increase: {} -> {}",
+                w[0].sparsity,
+                w[1].sparsity
+            );
+        }
+    }
+
+    #[test]
+    fn model_fits_and_predicts_monotonically() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let pts = sparsity_sweep(&hg, "MAM", 3).unwrap();
+        let model = fit_sparsity_model(&pts).expect("fit");
+        assert!(model.slope >= 0.0, "density grows with length, slope {}", model.slope);
+        assert!(model.predict_density(2) <= model.predict_density(6) + 1e-12);
+        assert!(model.r2 >= 0.0 && model.r2 <= 1.0);
+    }
+
+    #[test]
+    fn fit_requires_two_points() {
+        assert!(fit_sparsity_model(&[]).is_none());
+        let p = SparsityPoint { name: "X".into(), length: 2, sparsity: 0.5, nnz: 10 };
+        assert!(fit_sparsity_model(&[p]).is_none());
+    }
+}

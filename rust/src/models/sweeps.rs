@@ -1,0 +1,161 @@
+//! Parameter sweeps behind Figs 5(a), 5(b) and 6(b).
+//!
+//! * **Fig 5a** — Neighbor Aggregation time as edge dropout decreases
+//!   (i.e. average #neighbors increases), HAN vs GCN on Reddit-sim.
+//! * **Fig 5b** — NA time as the number of metapaths grows (HAN, DBLP).
+//! * **Fig 6b** — total execution time as the number of metapaths grows.
+//!
+//! All y-values are modeled T4 milliseconds (DESIGN.md §4); x-axes match
+//! the paper. Shared by the CLI (`hgnn-char figure ...`) and the bench
+//! targets.
+
+use crate::datasets::{self, DatasetId, DatasetScale};
+use crate::engine::{Backend, Engine};
+use crate::metapath::{self, Metapath};
+use crate::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
+use crate::profiler::StageId;
+use crate::Result;
+
+/// Dropout rates the paper sweeps (decreasing ⇒ denser graph).
+pub const FIG5A_DROPOUTS: [f64; 5] = [0.9, 0.75, 0.5, 0.25, 0.0];
+
+/// DBLP metapath pool used for the #metapath sweeps. All author-endpoint,
+/// ordered the way the paper adds "one more metapath".
+pub const DBLP_METAPATH_POOL: [&str; 6] =
+    ["APA", "APVPA", "APTPA", "APAPA", "APVPAPA", "APTPAPA"];
+
+/// Modeled NA milliseconds of one plan.
+fn na_ms(plan: &ModelPlan, hg: &crate::graph::HeteroGraph) -> Result<f64> {
+    let mut engine = Engine::new(Backend::native_no_traces());
+    let (_, profile) = engine.run_na_only(plan, hg)?;
+    Ok(profile
+        .stage_times()
+        .get(&StageId::NeighborAggregation)
+        .copied()
+        .unwrap_or(0.0)
+        / 1e6)
+}
+
+/// Build a HAN-style plan over a homogeneous graph's single relation
+/// (GAT NA on the full edge set) — "HAN with one metapath" as the paper
+/// runs it on Reddit.
+fn han_on_homogeneous(
+    hg: &crate::graph::HeteroGraph,
+    config: &ModelConfig,
+) -> Result<ModelPlan> {
+    let subgraphs = metapath::build_relation_subgraphs(hg);
+    let weights = ModelWeights::init(ModelId::Han, hg, &subgraphs, config);
+    Ok(ModelPlan {
+        model: ModelId::Han,
+        config: config.clone(),
+        subgraphs,
+        weights,
+        target: 0,
+    })
+}
+
+/// Fig 5a: for HAN and GCN on Reddit-sim, NA time per dropout rate.
+/// Returns one `(label, series)` per model; series x = dropout rate.
+pub fn fig5a_dropout_sweep(scale: &DatasetScale) -> Result<Vec<(String, Vec<(f64, f64)>)>> {
+    let base = datasets::build(DatasetId::RedditSim, scale)?;
+    let config = ModelConfig::default();
+    let mut han_series = Vec::new();
+    let mut gcn_series = Vec::new();
+    for &p in &FIG5A_DROPOUTS {
+        let hg = base.dropout_edges(p, 0xD20);
+        let han = han_on_homogeneous(&hg, &config)?;
+        han_series.push((p, na_ms(&han, &hg)?));
+        let gcn = models::gcn_plan(&hg, &config)?;
+        gcn_series.push((p, na_ms(&gcn, &hg)?));
+    }
+    Ok(vec![
+        ("HAN (GAT NA)".to_string(), han_series),
+        ("GCN".to_string(), gcn_series),
+    ])
+}
+
+/// Fig 5b: HAN on DBLP, NA time vs number of metapaths (1..=pool).
+pub fn fig5b_metapath_sweep(scale: &DatasetScale) -> Result<Vec<(f64, f64)>> {
+    let hg = datasets::build(DatasetId::Dblp, scale)?;
+    let config = ModelConfig::default();
+    let mut series = Vec::new();
+    for k in 1..=DBLP_METAPATH_POOL.len() {
+        let paths: Vec<Metapath> = DBLP_METAPATH_POOL[..k]
+            .iter()
+            .map(|s| Metapath::parse(s))
+            .collect::<Result<_>>()?;
+        let plan = models::han_plan_with(&hg, &config, &paths)?;
+        series.push((k as f64, na_ms(&plan, &hg)?));
+    }
+    Ok(series)
+}
+
+/// Fig 6b: HAN on DBLP, *total* modeled time vs number of metapaths.
+pub fn fig6b_total_time_sweep(scale: &DatasetScale) -> Result<Vec<(f64, f64)>> {
+    let hg = datasets::build(DatasetId::Dblp, scale)?;
+    let config = ModelConfig::default();
+    let mut series = Vec::new();
+    for k in 1..=DBLP_METAPATH_POOL.len() {
+        let paths: Vec<Metapath> = DBLP_METAPATH_POOL[..k]
+            .iter()
+            .map(|s| Metapath::parse(s))
+            .collect::<Result<_>>()?;
+        let plan = models::han_plan_with(&hg, &config, &paths)?;
+        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+        series.push((k as f64, run.profile.total_modeled_ns() / 1e6));
+    }
+    Ok(series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scale() -> DatasetScale {
+        DatasetScale { topo_factor: 1.0 / 64.0, feat_factor: 1.0 / 32.0, ..DatasetScale::ci() }
+    }
+
+    #[test]
+    fn fig5a_na_time_increases_as_dropout_decreases() {
+        let series = fig5a_dropout_sweep(&tiny_scale()).unwrap();
+        assert_eq!(series.len(), 2);
+        for (label, pts) in &series {
+            assert_eq!(pts.len(), FIG5A_DROPOUTS.len());
+            // dropout decreases along the sweep => NA time must rise
+            assert!(
+                pts.last().unwrap().1 > pts.first().unwrap().1,
+                "{label}: NA time should grow as edges are kept: {pts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig5a_han_slower_than_gcn() {
+        // GAT NA does strictly more kernel work than mean NA
+        let series = fig5a_dropout_sweep(&tiny_scale()).unwrap();
+        let han_t = series[0].1.last().unwrap().1;
+        let gcn_t = series[1].1.last().unwrap().1;
+        assert!(han_t > gcn_t, "HAN {han_t} vs GCN {gcn_t}");
+    }
+
+    #[test]
+    fn fig5b_monotone_in_metapaths() {
+        let series = fig5b_metapath_sweep(&tiny_scale()).unwrap();
+        assert_eq!(series.len(), DBLP_METAPATH_POOL.len());
+        for w in series.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1 * 0.999,
+                "NA time should not shrink with more metapaths: {series:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig6b_total_exceeds_na_sweep() {
+        let total = fig6b_total_time_sweep(&tiny_scale()).unwrap();
+        let na = fig5b_metapath_sweep(&tiny_scale()).unwrap();
+        for (t, n) in total.iter().zip(&na) {
+            assert!(t.1 >= n.1, "total {t:?} must be >= NA-only {n:?}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Deterministic model parameter initialization.
+//!
+//! Inference-phase characterization does not need trained weights — the
+//! kernel mix and data volumes are weight-independent — but the PJRT and
+//! native backends must agree numerically, so parameters are generated
+//! deterministically (seeded PCG, Glorot-ish scale) and can be exported
+//! byte-identically to the Python AOT side.
+
+use std::collections::BTreeMap;
+
+use crate::graph::HeteroGraph;
+use crate::metapath::SubgraphSet;
+use crate::models::{ModelConfig, ModelId};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// All learned parameters of a plan.
+#[derive(Debug, Clone, Default)]
+pub struct ModelWeights {
+    /// Feature Projection: per node type (by id), `[feat_dim, hidden]`.
+    /// For R-GCN the projection is per *relation* source type but shared
+    /// weights per type keep the kernel mix identical; OpenHGNN does the
+    /// same for the input layer.
+    pub proj: BTreeMap<usize, Tensor>,
+    /// R-GCN only: learned per-type node embeddings `[count, hidden]`.
+    /// OpenHGNN's RGCN does not consume raw bag-of-words features — every
+    /// node type gets a trainable `hidden`-dim embedding, and FP projects
+    /// that (a small `[N,h]x[h,h]` sgemm). Empty for other models.
+    pub embed: BTreeMap<usize, Tensor>,
+    /// Per-subgraph GAT attention vector for destination side `[hidden]`.
+    pub attn_l: Vec<Vec<f32>>,
+    /// Per-subgraph GAT attention vector for source side `[hidden]`.
+    pub attn_r: Vec<Vec<f32>>,
+    /// Per-subgraph MAGNN edge-attention matrix `[hidden, 1]` applied to
+    /// encoded instances (empty for other models).
+    pub inst_attn: Vec<Tensor>,
+    /// Semantic attention MLP: `[hidden, semantic_dim]`.
+    pub sem_w: Option<Tensor>,
+    /// Semantic attention bias `[semantic_dim]`.
+    pub sem_b: Vec<f32>,
+    /// Semantic attention query vector `[semantic_dim, 1]`.
+    pub sem_q: Option<Tensor>,
+}
+
+impl ModelWeights {
+    /// Initialize weights for a (model, graph, subgraphs, config) tuple.
+    pub fn init(
+        model: ModelId,
+        hg: &HeteroGraph,
+        subgraphs: &SubgraphSet,
+        config: &ModelConfig,
+    ) -> ModelWeights {
+        let mut w = ModelWeights::default();
+        let h = config.hidden_dim;
+
+        // projection per node type that appears as a subgraph source or
+        // destination (R-GCN touches everything; HAN only the endpoint)
+        let mut used_types: Vec<usize> = subgraphs
+            .subgraphs
+            .iter()
+            .flat_map(|s| [s.src_type, s.dst_type])
+            .collect();
+        used_types.sort_unstable();
+        used_types.dedup();
+        for ty in used_types {
+            if model == ModelId::Rgcn {
+                // OpenHGNN RGCN: learned hidden-dim embeddings per type,
+                // projected by an [h, h] relation weight.
+                let count = hg.node_type(ty).count;
+                let scale = (1.0 / h as f32).sqrt();
+                let mut erng = Pcg32::new(config.seed, 0x5000 + ty as u64);
+                w.embed.insert(ty, Tensor::randn(count, h, scale, &mut erng));
+                let mut rng = Pcg32::new(config.seed, 0x1000 + ty as u64);
+                w.proj.insert(ty, Tensor::randn(h, h, scale, &mut rng));
+            } else {
+                let dim = hg.node_type(ty).feat_dim;
+                let scale = (2.0 / (dim + h) as f32).sqrt();
+                let mut rng = Pcg32::new(config.seed, 0x1000 + ty as u64);
+                w.proj.insert(ty, Tensor::randn(dim, h, scale, &mut rng));
+            }
+        }
+
+        // per-subgraph attention parameters
+        if model.uses_attention() {
+            for (i, _) in subgraphs.subgraphs.iter().enumerate() {
+                let mut rng = Pcg32::new(config.seed, 0x2000 + i as u64);
+                let scale = (1.0 / h as f32).sqrt();
+                w.attn_l.push((0..h).map(|_| rng.gen_normal() * scale).collect());
+                w.attn_r.push((0..h).map(|_| rng.gen_normal() * scale).collect());
+                if model == ModelId::Magnn {
+                    let mut irng = Pcg32::new(config.seed, 0x3000 + i as u64);
+                    w.inst_attn.push(Tensor::randn(h, 1, scale, &mut irng));
+                }
+            }
+            // semantic attention (stage ④)
+            let mut rng = Pcg32::new(config.seed, 0x4000);
+            let s = config.semantic_dim;
+            let scale = (2.0 / (h + s) as f32).sqrt();
+            w.sem_w = Some(Tensor::randn(h, s, scale, &mut rng));
+            w.sem_b = (0..s).map(|_| rng.gen_normal() * 0.01).collect();
+            w.sem_q = Some(Tensor::randn(s, 1, (1.0 / s as f32).sqrt(), &mut rng));
+        }
+        w
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let mut n = 0;
+        n += self.proj.values().map(|t| t.len()).sum::<usize>();
+        n += self.embed.values().map(|t| t.len()).sum::<usize>();
+        n += self.attn_l.iter().map(|v| v.len()).sum::<usize>();
+        n += self.attn_r.iter().map(|v| v.len()).sum::<usize>();
+        n += self.inst_attn.iter().map(|t| t.len()).sum::<usize>();
+        n += self.sem_w.as_ref().map(|t| t.len()).unwrap_or(0);
+        n += self.sem_b.len();
+        n += self.sem_q.as_ref().map(|t| t.len()).unwrap_or(0);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models;
+
+    #[test]
+    fn han_weights_shapes() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let cfg = ModelConfig::default();
+        let plan = models::han_plan(&hg, &cfg).unwrap();
+        let w = &plan.weights;
+        // only the movie endpoint type needs projection
+        assert_eq!(w.proj.len(), 1);
+        let m_ty = hg.type_by_tag('M').unwrap();
+        assert_eq!(
+            w.proj[&m_ty].shape(),
+            (hg.node_type(m_ty).feat_dim, cfg.hidden_dim)
+        );
+        assert_eq!(w.attn_l.len(), 2);
+        assert_eq!(w.attn_l[0].len(), cfg.hidden_dim);
+        assert!(w.sem_w.is_some());
+        assert_eq!(w.sem_b.len(), cfg.semantic_dim);
+        assert!(w.inst_attn.is_empty());
+    }
+
+    #[test]
+    fn rgcn_projects_every_type_from_embeddings() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let cfg = ModelConfig::default();
+        let plan = models::rgcn_plan(&hg, &cfg).unwrap();
+        assert_eq!(plan.weights.proj.len(), hg.node_types().len());
+        assert_eq!(plan.weights.embed.len(), hg.node_types().len());
+        for (ty, e) in &plan.weights.embed {
+            assert_eq!(e.shape(), (hg.node_type(*ty).count, cfg.hidden_dim));
+            assert_eq!(plan.weights.proj[ty].shape(), (cfg.hidden_dim, cfg.hidden_dim));
+        }
+        assert!(plan.weights.attn_l.is_empty());
+        assert!(plan.weights.sem_w.is_none());
+    }
+
+    #[test]
+    fn magnn_has_instance_attention() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::magnn_plan(&hg, &ModelConfig::default()).unwrap();
+        assert_eq!(plan.weights.inst_attn.len(), plan.num_subgraphs());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let hg = datasets::build(DatasetId::Acm, &DatasetScale::ci()).unwrap();
+        let cfg = ModelConfig::default();
+        let a = models::han_plan(&hg, &cfg).unwrap().weights;
+        let b = models::han_plan(&hg, &cfg).unwrap().weights;
+        assert_eq!(a.attn_l, b.attn_l);
+        for (k, t) in &a.proj {
+            assert!(t.allclose(&b.proj[k], 0.0, 0.0));
+        }
+        assert!(a.param_count() > 0);
+        assert_eq!(a.param_count(), b.param_count());
+    }
+}

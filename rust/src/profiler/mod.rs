@@ -1,0 +1,342 @@
+//! Profiling infrastructure — the Nsight Systems stand-in.
+//!
+//! Attributes every executed kernel to (stage, subgraph, worker), keeps
+//! wallclock begin/end timestamps for timeline rendering (Fig 5c), and
+//! aggregates into the breakdowns the paper reports: per-stage execution
+//! time (Fig 2), per-kernel-type time within each stage (Fig 3), and the
+//! per-kernel metric table (Table 3).
+//!
+//! Two time bases coexist:
+//! * **wall** — CPU nanoseconds of the native Rust kernels (real, but a
+//!   CPU is not a T4);
+//! * **modeled** — the [`crate::gpumodel`] T4 latency per kernel, which is
+//!   the basis every paper-figure bench reports (DESIGN.md §4).
+
+pub mod timeline;
+
+use std::collections::BTreeMap;
+
+use crate::gpumodel::{GpuModel, KernelMetrics};
+use crate::kernels::{KernelExec, KernelType};
+
+pub use timeline::{Timeline, TimelineSpan};
+
+/// The paper's execution stages (§2). `SubgraphBuild` runs on the CPU
+/// before inference and is excluded from GPU breakdowns, as in Fig 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum StageId {
+    /// ① Subgraph Build (CPU-side; excluded from the GPU profile).
+    SubgraphBuild,
+    /// ② Feature Projection.
+    FeatureProjection,
+    /// ③ Neighbor Aggregation.
+    NeighborAggregation,
+    /// ④ Semantic Aggregation.
+    SemanticAggregation,
+}
+
+impl StageId {
+    /// The GPU-profiled stages, in paper order.
+    pub const GPU_STAGES: [StageId; 3] = [
+        StageId::FeatureProjection,
+        StageId::NeighborAggregation,
+        StageId::SemanticAggregation,
+    ];
+
+    /// Paper abbreviation.
+    pub fn abbrev(self) -> &'static str {
+        match self {
+            StageId::SubgraphBuild => "SB",
+            StageId::FeatureProjection => "FP",
+            StageId::NeighborAggregation => "NA",
+            StageId::SemanticAggregation => "SA",
+        }
+    }
+
+    /// Full stage name as the paper prints it.
+    pub fn name(self) -> &'static str {
+        match self {
+            StageId::SubgraphBuild => "Subgraph Build",
+            StageId::FeatureProjection => "Feature Projection",
+            StageId::NeighborAggregation => "Neighbor Aggregation",
+            StageId::SemanticAggregation => "Semantic Aggregation",
+        }
+    }
+}
+
+/// One profiled kernel: execution record + attribution + modeled metrics.
+#[derive(Debug, Clone)]
+pub struct ProfiledKernel {
+    /// The raw execution record.
+    pub exec: KernelExec,
+    /// Stage this kernel belongs to.
+    pub stage: StageId,
+    /// Subgraph (metapath/relation) name, when stage work is per-subgraph.
+    pub subgraph: Option<String>,
+    /// Worker/stream index that issued the kernel (0 when sequential).
+    pub worker: usize,
+    /// Wallclock begin, nanoseconds since profile start.
+    pub wall_begin: u64,
+    /// Modeled T4 metrics (filled by [`Profile::attach_metrics`]).
+    pub metrics: Option<KernelMetrics>,
+}
+
+/// A complete profile of one inference run.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    /// All profiled kernels in issue order.
+    pub kernels: Vec<ProfiledKernel>,
+    /// CPU nanoseconds spent in Subgraph Build (stage ①).
+    pub subgraph_build_nanos: u64,
+}
+
+impl Profile {
+    /// Record a batch of kernel executions under one attribution.
+    pub fn record(
+        &mut self,
+        execs: Vec<KernelExec>,
+        stage: StageId,
+        subgraph: Option<&str>,
+        worker: usize,
+        wall_begin: u64,
+    ) {
+        let mut at = wall_begin;
+        for exec in execs {
+            let dur = exec.wall_nanos;
+            self.kernels.push(ProfiledKernel {
+                exec,
+                stage,
+                subgraph: subgraph.map(|s| s.to_string()),
+                worker,
+                wall_begin: at,
+                metrics: None,
+            });
+            at += dur;
+        }
+    }
+
+    /// Run the GPU model over every kernel and attach metrics.
+    pub fn attach_metrics(&mut self, model: &GpuModel) {
+        for pk in &mut self.kernels {
+            let m = model.analyze(std::slice::from_ref(&pk.exec));
+            pk.metrics = m.into_iter().next();
+        }
+    }
+
+    /// Modeled nanoseconds of one kernel (0 when metrics not attached).
+    fn modeled_ns(pk: &ProfiledKernel) -> f64 {
+        pk.metrics.as_ref().map(|m| m.time_ns).unwrap_or(0.0)
+    }
+
+    /// Total modeled time across GPU stages.
+    pub fn total_modeled_ns(&self) -> f64 {
+        self.kernels.iter().map(Self::modeled_ns).sum()
+    }
+
+    /// Total wallclock time of native kernels.
+    pub fn total_wall_ns(&self) -> u64 {
+        self.kernels.iter().map(|k| k.exec.wall_nanos).sum()
+    }
+
+    /// Per-stage modeled time (Fig 2 input).
+    pub fn stage_times(&self) -> BTreeMap<StageId, f64> {
+        let mut out = BTreeMap::new();
+        for pk in &self.kernels {
+            *out.entry(pk.stage).or_insert(0.0) += Self::modeled_ns(pk);
+        }
+        out
+    }
+
+    /// Per-stage percentage breakdown over GPU stages (Fig 2).
+    pub fn stage_percentages(&self) -> BTreeMap<StageId, f64> {
+        let times = self.stage_times();
+        let total: f64 = StageId::GPU_STAGES
+            .iter()
+            .map(|s| times.get(s).copied().unwrap_or(0.0))
+            .sum();
+        let mut out = BTreeMap::new();
+        for s in StageId::GPU_STAGES {
+            let t = times.get(&s).copied().unwrap_or(0.0);
+            out.insert(s, if total == 0.0 { 0.0 } else { 100.0 * t / total });
+        }
+        out
+    }
+
+    /// Per-(stage, kernel-type) modeled time (Fig 3 input).
+    pub fn kernel_type_times(&self) -> BTreeMap<(StageId, KernelType), f64> {
+        let mut out = BTreeMap::new();
+        for pk in &self.kernels {
+            *out.entry((pk.stage, pk.exec.ktype)).or_insert(0.0) += Self::modeled_ns(pk);
+        }
+        out
+    }
+
+    /// Per-kernel-name aggregation within a stage (Table 3 input):
+    /// returns (name, aggregated metrics, % of stage time), sorted by
+    /// descending time share.
+    pub fn kernel_table(&self, stage: StageId) -> Vec<(String, KernelMetrics, f64)> {
+        let mut by_name: BTreeMap<&'static str, Vec<KernelMetrics>> = BTreeMap::new();
+        for pk in &self.kernels {
+            if pk.stage == stage {
+                if let Some(m) = &pk.metrics {
+                    by_name.entry(pk.exec.name).or_default().push(m.clone());
+                }
+            }
+        }
+        let stage_total: f64 = by_name.values().flatten().map(|m| m.time_ns).sum();
+        let mut rows: Vec<(String, KernelMetrics, f64)> = by_name
+            .into_iter()
+            .filter_map(|(name, ms)| {
+                crate::gpumodel::metrics::aggregate(&ms).map(|agg| {
+                    let share = if stage_total == 0.0 {
+                        0.0
+                    } else {
+                        100.0 * agg.time_ns / stage_total
+                    };
+                    (name.to_string(), agg, share)
+                })
+            })
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows
+    }
+
+    /// Human-readable stage breakdown (quickstart output).
+    pub fn stage_breakdown(&self) -> String {
+        let pct = self.stage_percentages();
+        let times = self.stage_times();
+        let mut out = String::from("stage breakdown (modeled T4 time):\n");
+        for s in StageId::GPU_STAGES {
+            out.push_str(&format!(
+                "  {:<22} {:>8.1}%  {}\n",
+                s.name(),
+                pct.get(&s).copied().unwrap_or(0.0),
+                crate::util::human_time(times.get(&s).copied().unwrap_or(0.0)),
+            ));
+        }
+        out.push_str(&format!(
+            "  (Subgraph Build on CPU: {}, excluded as in the paper)\n",
+            crate::util::human_time(self.subgraph_build_nanos as f64)
+        ));
+        out
+    }
+
+    /// Build a modeled-time timeline (Fig 5c input): one lane per
+    /// (worker, stage), spans scheduled at each kernel's modeled start.
+    pub fn timeline(&self) -> Timeline {
+        timeline::build_timeline(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{Ctx, KernelCounters};
+
+    fn fake_exec(name: &'static str, ktype: KernelType, wall: u64) -> KernelExec {
+        KernelExec {
+            name,
+            ktype,
+            counters: KernelCounters {
+                flops: 1_000_000,
+                bytes_read: 8_000_000,
+                bytes_written: 4_000_000,
+            },
+            wall_nanos: wall,
+            trace: None,
+        }
+    }
+
+    fn sample_profile() -> Profile {
+        let mut p = Profile::default();
+        p.record(
+            vec![fake_exec("sgemm", KernelType::DenseMatmul, 100)],
+            StageId::FeatureProjection,
+            None,
+            0,
+            0,
+        );
+        p.record(
+            vec![
+                fake_exec("SpMMCsr", KernelType::TopologyBased, 500),
+                fake_exec("SpMMCsr", KernelType::TopologyBased, 400),
+            ],
+            StageId::NeighborAggregation,
+            Some("MDM"),
+            0,
+            100,
+        );
+        p.record(
+            vec![fake_exec("Concat", KernelType::DataRearrange, 50)],
+            StageId::SemanticAggregation,
+            None,
+            0,
+            1000,
+        );
+        p.attach_metrics(&GpuModel::default());
+        p
+    }
+
+    #[test]
+    fn record_orders_wall_begin() {
+        let p = sample_profile();
+        assert_eq!(p.kernels[1].wall_begin, 100);
+        assert_eq!(p.kernels[2].wall_begin, 600); // 100 + 500
+        assert_eq!(p.total_wall_ns(), 1050);
+    }
+
+    #[test]
+    fn stage_percentages_sum_to_100() {
+        let p = sample_profile();
+        let pct = p.stage_percentages();
+        let sum: f64 = pct.values().sum();
+        assert!((sum - 100.0).abs() < 1e-6, "sum {sum}");
+        // NA has two identical kernels; with equal counters each stage's
+        // share is proportional to kernel count
+        assert!(pct[&StageId::NeighborAggregation] > pct[&StageId::FeatureProjection]);
+    }
+
+    #[test]
+    fn kernel_type_times_keyed_correctly() {
+        let p = sample_profile();
+        let ktt = p.kernel_type_times();
+        assert!(ktt
+            .contains_key(&(StageId::NeighborAggregation, KernelType::TopologyBased)));
+        assert!(!ktt.contains_key(&(StageId::FeatureProjection, KernelType::TopologyBased)));
+    }
+
+    #[test]
+    fn kernel_table_shares() {
+        let p = sample_profile();
+        let rows = p.kernel_table(StageId::NeighborAggregation);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, "SpMMCsr");
+        assert!((rows[0].2 - 100.0).abs() < 1e-6);
+        assert!(p.kernel_table(StageId::SubgraphBuild).is_empty());
+    }
+
+    #[test]
+    fn breakdown_renders() {
+        let p = sample_profile();
+        let s = p.stage_breakdown();
+        assert!(s.contains("Neighbor Aggregation"));
+        assert!(s.contains("Subgraph Build"));
+    }
+
+    #[test]
+    fn record_from_ctx_drain() {
+        let mut ctx = Ctx::default();
+        ctx.push(
+            "uEleWise",
+            KernelType::ElementWise,
+            KernelCounters::default(),
+            42,
+            None,
+        );
+        let mut p = Profile::default();
+        p.record(ctx.drain(), StageId::SemanticAggregation, None, 1, 7);
+        assert_eq!(p.kernels.len(), 1);
+        assert_eq!(p.kernels[0].worker, 1);
+        assert_eq!(p.kernels[0].wall_begin, 7);
+    }
+}

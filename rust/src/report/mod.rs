@@ -1,0 +1,319 @@
+//! Report rendering: ASCII tables, CSV, and paper-figure printers.
+//!
+//! Every bench target funnels through here so the figures/tables come out
+//! in the same format: a header naming the paper artifact, the measured
+//! series, and (where the paper gives numbers) the paper's value next to
+//! ours for an honest comparison.
+
+use std::collections::BTreeMap;
+
+use crate::gpumodel::KernelMetrics;
+use crate::kernels::KernelType;
+use crate::profiler::{Profile, StageId};
+use crate::util::fmt::{pad_left, pad_right};
+
+/// A simple ASCII table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with padding; first column left-aligned, rest right-aligned.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncols {
+                let cell = if i == 0 {
+                    pad_right(&cells[i], widths[i])
+                } else {
+                    pad_left(&cells[i], widths[i])
+                };
+                line.push_str(&cell);
+                line.push_str(" | ");
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("|{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "|";
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// An ASCII horizontal bar chart for percentage breakdowns
+/// (the Fig 2 / Fig 3 stacked bars, unrolled).
+pub fn bar_chart(title: &str, series: &[(String, f64)], width: usize) -> String {
+    let max = series.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-9);
+    let mut out = format!("{title}\n");
+    for (label, value) in series {
+        let bars = ((value / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<24} {:>8.1}  {}\n",
+            label,
+            value,
+            "█".repeat(bars)
+        ));
+    }
+    out
+}
+
+/// Render the Fig 2 stage breakdown for one (model, dataset) run.
+pub fn fig2_row(model: &str, dataset: &str, profile: &Profile) -> String {
+    let pct = profile.stage_percentages();
+    format!(
+        "{:<7} {:<4} | FP {:>5.1}% | NA {:>5.1}% | SA {:>5.1}%",
+        model,
+        dataset,
+        pct.get(&StageId::FeatureProjection).copied().unwrap_or(0.0),
+        pct.get(&StageId::NeighborAggregation).copied().unwrap_or(0.0),
+        pct.get(&StageId::SemanticAggregation).copied().unwrap_or(0.0),
+    )
+}
+
+/// Render the Fig 3 per-stage kernel-type breakdown for one run.
+pub fn fig3_rows(model: &str, dataset: &str, profile: &Profile) -> String {
+    let ktt = profile.kernel_type_times();
+    let mut out = String::new();
+    for stage in StageId::GPU_STAGES {
+        let total: f64 = KernelType::ALL
+            .iter()
+            .map(|&t| ktt.get(&(stage, t)).copied().unwrap_or(0.0))
+            .sum();
+        if total == 0.0 {
+            continue;
+        }
+        let mut parts = Vec::new();
+        for t in KernelType::ALL {
+            let v = ktt.get(&(stage, t)).copied().unwrap_or(0.0);
+            parts.push(format!("{} {:>5.1}%", t.abbrev(), 100.0 * v / total));
+        }
+        out.push_str(&format!(
+            "{:<7} {:<4} {:<3} | {}\n",
+            model,
+            dataset,
+            stage.abbrev(),
+            parts.join(" | ")
+        ));
+    }
+    out
+}
+
+/// Render a Table 3-style kernel metrics table for one stage.
+pub fn table3_stage(stage: StageId, rows: &[(String, KernelMetrics, f64)]) -> String {
+    let mut t = Table::new(&[
+        "Kernel",
+        "Type",
+        "Time(%)",
+        "PeakPerf(%)",
+        "DRAM BW(%)",
+        "SMEM BW(%)",
+        "L2 Hit(%)",
+        "AI(F/B)",
+    ]);
+    for (name, m, share) in rows {
+        t.row(&[
+            name.clone(),
+            m.ktype.abbrev().to_string(),
+            format!("{share:.1}"),
+            format!("{:.1}", m.peak_perf_pct),
+            format!("{:.1}", m.dram_bw_util_pct),
+            format!("{:.1}", m.smem_bw_util_pct),
+            format!("{:.1}", m.l2_hit_pct),
+            format!("{:.2}", m.ai),
+        ]);
+    }
+    format!("{} ({})\n{}", stage.name(), stage.abbrev(), t.render())
+}
+
+/// Paper-vs-measured comparison row for EXPERIMENTS.md.
+pub fn compare(metric: &str, paper: f64, measured: f64, unit: &str) -> String {
+    let ratio = if paper != 0.0 { measured / paper } else { f64::NAN };
+    format!(
+        "  {:<42} paper {:>9.2}{:<7} measured {:>9.2}{:<7} ratio {:>5.2}",
+        metric, paper, unit, measured, unit, ratio
+    )
+}
+
+/// Series printer for sweep figures (Fig 5a/5b/6a/6b): x, y pairs plus a
+/// monotonicity note.
+pub fn sweep_series(title: &str, xlabel: &str, ylabel: &str, pts: &[(f64, f64)]) -> String {
+    let mut out = format!("{title}\n  {xlabel:>16} | {ylabel}\n");
+    for (x, y) in pts {
+        out.push_str(&format!("  {x:>16.3} | {y:.4}\n"));
+    }
+    let increasing = pts.windows(2).all(|w| w[1].1 >= w[0].1 - 1e-12);
+    let decreasing = pts.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-12);
+    out.push_str(&format!(
+        "  trend: {}\n",
+        if increasing {
+            "monotonically increasing"
+        } else if decreasing {
+            "monotonically decreasing"
+        } else {
+            "non-monotone"
+        }
+    ));
+    out
+}
+
+/// Group modeled stage times over several runs into a map for averaging.
+pub fn average_stage_pct(profiles: &[&Profile]) -> BTreeMap<StageId, f64> {
+    let mut acc: BTreeMap<StageId, f64> = BTreeMap::new();
+    for p in profiles {
+        for (s, v) in p.stage_percentages() {
+            *acc.entry(s).or_insert(0.0) += v;
+        }
+    }
+    for v in acc.values_mut() {
+        *v /= profiles.len().max(1) as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rendering() {
+        let mut t = Table::new(&["Kernel", "Time"]);
+        t.row(&["sgemm".into(), "97.4".into()]);
+        t.row(&["SpMMCsr".into(), "85.9".into()]);
+        let r = t.render();
+        assert!(r.contains("sgemm"));
+        assert!(r.lines().count() == 4);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Kernel,Time\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x,y".into()]);
+        t.row(&["q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart("test", &[("a".into(), 100.0), ("b".into(), 50.0)], 10);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].matches('█').count() == 10);
+        assert!(lines[2].matches('█').count() == 5);
+    }
+
+    #[test]
+    fn sweep_trend_detection() {
+        let up = sweep_series("t", "x", "y", &[(1.0, 1.0), (2.0, 2.0)]);
+        assert!(up.contains("increasing"));
+        let down = sweep_series("t", "x", "y", &[(1.0, 2.0), (2.0, 1.0)]);
+        assert!(down.contains("decreasing"));
+        let mixed = sweep_series("t", "x", "y", &[(1.0, 1.0), (2.0, 3.0), (3.0, 2.0)]);
+        assert!(mixed.contains("non-monotone"));
+    }
+
+    #[test]
+    fn compare_ratio() {
+        let s = compare("NA share", 74.0, 70.0, "%");
+        assert!(s.contains("0.95"));
+    }
+
+    #[test]
+    fn average_stage_pct_of_uniform_profiles() {
+        use crate::engine::{Backend, Engine};
+        use crate::models::{self, ModelConfig};
+        let hg = crate::datasets::build(
+            crate::datasets::DatasetId::Imdb,
+            &crate::datasets::DatasetScale::ci(),
+        )
+        .unwrap();
+        let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+        let mut engine = Engine::new(Backend::native_no_traces());
+        let a = engine.run(&plan, &hg).unwrap().profile;
+        let b = engine.run(&plan, &hg).unwrap().profile;
+        let avg = average_stage_pct(&[&a, &b]);
+        // identical runs => average equals each run's percentages
+        for (s, v) in a.stage_percentages() {
+            assert!((avg[&s] - v).abs() < 1e-9);
+        }
+        let total: f64 = avg.values().sum();
+        assert!((total - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fig2_and_fig3_renderers_shape() {
+        use crate::engine::{Backend, Engine};
+        use crate::models::{self, ModelConfig};
+        let hg = crate::datasets::build(
+            crate::datasets::DatasetId::Acm,
+            &crate::datasets::DatasetScale::ci(),
+        )
+        .unwrap();
+        let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        let row = fig2_row("HAN", "AC", &run.profile);
+        assert!(row.contains("FP") && row.contains("NA") && row.contains("SA"));
+        let rows = fig3_rows("HAN", "AC", &run.profile);
+        assert_eq!(rows.lines().count(), 3, "one line per GPU stage");
+        assert!(rows.contains("DM") && rows.contains("TB"));
+    }
+}

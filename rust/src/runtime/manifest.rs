@@ -1,0 +1,184 @@
+//! The artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` lists every lowered computation with its
+//! model/dataset/stage identity and the dense input/output tensor specs
+//! the Rust side must honor. Shapes are static — one artifact per
+//! (model, dataset-scale, stage) tuple.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One named tensor: `[rows, cols]` f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Logical name (`"x_movie"`, `"w_proj"`, ...).
+    pub name: String,
+    /// Shape (2-D).
+    pub shape: [usize; 2],
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Unique artifact name, e.g. `"han_imdb_full"`.
+    pub name: String,
+    /// HLO text file, relative to the artifact root.
+    pub file: String,
+    /// Model ("han", "rgcn", "gcn").
+    pub model: String,
+    /// Dataset ("imdb", ...).
+    pub dataset: String,
+    /// Stage ("fp" | "na" | "sa" | "full" | kernel name).
+    pub stage: String,
+    /// Ordered input tensor specs.
+    pub inputs: Vec<TensorSpec>,
+    /// Ordered output tensor specs.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    /// All artifacts.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Runtime(format!(
+                "read manifest {}: {e} (run `make artifacts` first)",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse from a JSON string.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let arr = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| Error::config("manifest missing 'artifacts' array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for item in arr {
+            entries.push(parse_entry(item)?);
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All artifacts for a (model, dataset) pair.
+    pub fn for_model_dataset(&self, model: &str, dataset: &str) -> Vec<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.model == model && e.dataset == dataset)
+            .collect()
+    }
+}
+
+fn parse_entry(item: &Json) -> Result<ArtifactEntry> {
+    let field = |k: &str| -> Result<String> {
+        item.get(k)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::config(format!("manifest entry missing '{k}'")))
+    };
+    let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+        let arr = item
+            .get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::config(format!("manifest entry missing '{k}'")))?;
+        arr.iter()
+            .map(|spec| {
+                let name = spec
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unnamed")
+                    .to_string();
+                let shape = spec
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::config("tensor spec missing 'shape'"))?;
+                if shape.len() != 2 {
+                    return Err(Error::config(format!(
+                        "tensor '{name}' is {}-d; runtime handles 2-d",
+                        shape.len()
+                    )));
+                }
+                Ok(TensorSpec {
+                    name,
+                    shape: [
+                        shape[0].as_usize().unwrap_or(0),
+                        shape[1].as_usize().unwrap_or(0),
+                    ],
+                })
+            })
+            .collect()
+    };
+    Ok(ArtifactEntry {
+        name: field("name")?,
+        file: field("file")?,
+        model: field("model")?,
+        dataset: field("dataset")?,
+        stage: field("stage")?,
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "han_imdb_full",
+          "file": "han_imdb_full.hlo.txt",
+          "model": "han", "dataset": "imdb", "stage": "full",
+          "inputs": [
+            {"name": "x_movie", "shape": [267, 192]},
+            {"name": "w_proj", "shape": [192, 64]}
+          ],
+          "outputs": [{"name": "z", "shape": [267, 64]}]
+        },
+        {
+          "name": "kernel_matmul",
+          "file": "kernel_matmul.hlo.txt",
+          "model": "kernel", "dataset": "none", "stage": "dense_matmul",
+          "inputs": [{"name": "a", "shape": [64, 64]}, {"name": "b", "shape": [64, 64]}],
+          "outputs": [{"name": "c", "shape": [64, 64]}]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("han_imdb_full").unwrap();
+        assert_eq!(e.inputs[0].shape, [267, 192]);
+        assert_eq!(e.outputs[0].name, "z");
+        assert!(m.find("missing").is_none());
+        assert_eq!(m.for_model_dataset("han", "imdb").len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts":[{"name":"x"}]}"#).is_err());
+        let bad_shape = r#"{"artifacts":[{"name":"x","file":"f","model":"m",
+          "dataset":"d","stage":"s",
+          "inputs":[{"name":"a","shape":[1,2,3]}],"outputs":[]}]}"#;
+        assert!(Manifest::parse(bad_shape).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load and execute AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering each
+//! (model, dataset, stage) JAX function to **HLO text** under
+//! `artifacts/` plus a `manifest.json` describing inputs and shapes. This
+//! module is the only place that touches the `xla` crate: it loads the
+//! text, compiles it on the PJRT CPU client, and executes it from the L3
+//! hot path. Python never runs at inference time.
+//!
+//! HLO *text* (not serialized `HloModuleProto`) is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+/// A compiled PJRT executable plus its metadata.
+pub struct CompiledArtifact {
+    /// Manifest entry this was compiled from.
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for CompiledArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledArtifact").field("entry", &self.entry).finish()
+    }
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// Artifact directory root.
+    pub root: PathBuf,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime").field("root", &self.root).finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(root: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtRuntime { client, root: root.as_ref().to_path_buf() })
+    }
+
+    /// PJRT platform name (`"cpu"` here; the paper's testbed says `"cuda"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load the artifact manifest from `<root>/manifest.json`.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(self.root.join("manifest.json"))
+    }
+
+    /// Load + compile one artifact by manifest entry.
+    pub fn compile(&self, entry: &ArtifactEntry) -> Result<CompiledArtifact> {
+        let path = self.root.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", entry.name)))?;
+        Ok(CompiledArtifact { entry: entry.clone(), exe })
+    }
+
+    /// Load + compile an artifact by name.
+    pub fn compile_by_name(&self, name: &str) -> Result<CompiledArtifact> {
+        let manifest = self.manifest()?;
+        let entry = manifest
+            .find(name)
+            .ok_or_else(|| Error::NotFound(format!("artifact '{name}'")))?;
+        self.compile(entry)
+    }
+}
+
+impl CompiledArtifact {
+    /// Execute with dense `f32` tensor inputs; returns the tuple of
+    /// output tensors (jax lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::shape(format!(
+                "artifact {} expects {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.entry.inputs) {
+            if t.shape() != (spec.shape[0], spec.shape[1]) {
+                return Err(Error::shape(format!(
+                    "artifact {} input '{}': expected {:?}, got {:?}",
+                    self.entry.name,
+                    spec.name,
+                    spec.shape,
+                    t.shape()
+                )));
+            }
+            let lit = xla::Literal::vec1(t.as_slice())
+                .reshape(&[t.rows() as i64, t.cols() as i64])
+                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.entry.name)))?;
+        let buffer = &result[0][0];
+        let tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("to_tuple: {e}")))?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| Error::Runtime(format!("shape: {e}")))?;
+                let dims = shape.dims();
+                let (rows, cols) = match dims.len() {
+                    0 => (1, 1),
+                    1 => (dims[0] as usize, 1),
+                    2 => (dims[0] as usize, dims[1] as usize),
+                    _ => {
+                        // collapse leading dims
+                        let last = *dims.last().unwrap() as usize;
+                        (
+                            dims[..dims.len() - 1].iter().product::<i64>() as usize,
+                            last,
+                        )
+                    }
+                };
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+                Tensor::from_vec(rows, cols, data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs (they require `make artifacts`).
+    // Here we test the pieces that do not need artifacts.
+
+    #[test]
+    fn client_creation_and_platform() {
+        let rt = PjrtRuntime::new("/nonexistent").unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.manifest().is_err(), "missing manifest must error");
+    }
+
+    #[test]
+    fn compile_missing_artifact_errors() {
+        let rt = PjrtRuntime::new("/tmp").unwrap();
+        let entry = ArtifactEntry {
+            name: "nope".into(),
+            file: "nope.hlo.txt".into(),
+            model: "han".into(),
+            dataset: "imdb".into(),
+            stage: "full".into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert!(rt.compile(&entry).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Dense 2-D `f32` tensors.
+//!
+//! Everything the paper's workloads move through kernels is a dense
+//! matrix of node features (`[num_nodes, feat_dim]`), a projection matrix
+//! (`[in_dim, out_dim]`), or a stack of per-metapath results
+//! (`[num_metapaths * num_nodes, feat_dim]` after `Concat`). A small
+//! owned row-major matrix type is all the substrate needs; keeping it
+//! minimal makes FLOP/byte accounting in [`crate::kernels`] exact.
+
+use crate::{Error, Result};
+
+/// Row-major owned `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f32) -> Tensor {
+        Tensor { rows, cols, data: vec![value; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Tensor> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "buffer len {} != {}x{}",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Tensor { rows, cols, data })
+    }
+
+    /// Random-normal tensor (Glorot-ish scale `s`), deterministic in `rng`.
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut crate::util::Pcg32) -> Tensor {
+        let data = (0..rows * cols).map(|_| rng.gen_normal() * scale).collect();
+        Tensor { rows, cols, data }
+    }
+
+    /// Identity-like one-hot features: row i has a 1.0 at column `i % cols`.
+    /// This mirrors how DBLP assigns one-hot features to paper nodes.
+    pub fn one_hot(rows: usize, cols: usize) -> Tensor {
+        let mut t = Tensor::zeros(rows, cols);
+        for i in 0..rows {
+            let c = i % cols;
+            t.data[i * cols + c] = 1.0;
+        }
+        t
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes (f32).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Immutable raw buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Immutable view of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable view of row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element write.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Copy `src` into row `r`.
+    pub fn set_row(&mut self, r: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.cols);
+        self.row_mut(r).copy_from_slice(src);
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Take a contiguous row range `[start, end)` as a new tensor.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Result<Tensor> {
+        if start > end || end > self.rows {
+            return Err(Error::shape(format!(
+                "row slice {start}..{end} out of 0..{}",
+                self.rows
+            )));
+        }
+        Ok(Tensor {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        })
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute element difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(format!(
+                "shapes {:?} vs {:?}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Approximate equality with combined absolute/relative tolerance:
+    /// `|a-b| <= atol + rtol * |b|` elementwise.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Stack tensors vertically (all must share `cols`).
+pub fn vstack(parts: &[&Tensor]) -> Result<Tensor> {
+    if parts.is_empty() {
+        return Err(Error::shape("vstack of zero tensors"));
+    }
+    let cols = parts[0].cols();
+    let mut rows = 0;
+    for p in parts {
+        if p.cols() != cols {
+            return Err(Error::shape(format!("vstack cols {} vs {}", p.cols(), cols)));
+        }
+        rows += p.rows();
+    }
+    let mut data = Vec::with_capacity(rows * cols);
+    for p in parts {
+        data.extend_from_slice(p.as_slice());
+    }
+    Tensor::from_vec(rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn construction_and_access() {
+        let mut t = Tensor::zeros(2, 3);
+        assert_eq!(t.shape(), (2, 3));
+        t.set(1, 2, 5.0);
+        assert_eq!(t.get(1, 2), 5.0);
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(11);
+        let t = Tensor::randn(4, 7, 1.0, &mut rng);
+        let tt = t.transposed().transposed();
+        assert!(t.allclose(&tt, 0.0, 0.0));
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let t = Tensor::one_hot(10, 4);
+        for r in 0..10 {
+            let s: f32 = t.row(r).iter().sum();
+            assert_eq!(s, 1.0);
+        }
+    }
+
+    #[test]
+    fn slice_rows_bounds() {
+        let t = Tensor::full(5, 2, 1.0);
+        let s = t.slice_rows(1, 4).unwrap();
+        assert_eq!(s.shape(), (3, 2));
+        assert!(t.slice_rows(4, 6).is_err());
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let a = Tensor::full(2, 3, 1.0);
+        let b = Tensor::full(1, 3, 2.0);
+        let v = vstack(&[&a, &b]).unwrap();
+        assert_eq!(v.shape(), (3, 3));
+        assert_eq!(v.get(2, 0), 2.0);
+        let c = Tensor::full(1, 4, 0.0);
+        assert!(vstack(&[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::full(1, 1, 1.0);
+        let b = Tensor::full(1, 1, 1.0 + 1e-6);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+    }
+}

@@ -1,0 +1,96 @@
+//! Human-readable formatting of times, byte counts and plain counts used
+//! by the report renderers and the bench harness.
+
+/// Format a duration given in nanoseconds, picking a sensible unit.
+pub fn human_time(nanos: f64) -> String {
+    let abs = nanos.abs();
+    if abs < 1e3 {
+        format!("{nanos:.1} ns")
+    } else if abs < 1e6 {
+        format!("{:.2} µs", nanos / 1e3)
+    } else if abs < 1e9 {
+        format!("{:.2} ms", nanos / 1e6)
+    } else {
+        format!("{:.3} s", nanos / 1e9)
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn human_bytes(bytes: f64) -> String {
+    let abs = bytes.abs();
+    if abs < 1024.0 {
+        format!("{bytes:.0} B")
+    } else if abs < 1024.0 * 1024.0 {
+        format!("{:.2} KiB", bytes / 1024.0)
+    } else if abs < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MiB", bytes / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", bytes / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Format a plain count with SI suffixes (1.2K, 3.4M, ...).
+pub fn human_count(count: f64) -> String {
+    let abs = count.abs();
+    if abs < 1e3 {
+        format!("{count:.0}")
+    } else if abs < 1e6 {
+        format!("{:.2}K", count / 1e3)
+    } else if abs < 1e9 {
+        format!("{:.2}M", count / 1e6)
+    } else {
+        format!("{:.2}G", count / 1e9)
+    }
+}
+
+/// Left-pad to width (for simple ASCII tables).
+pub fn pad_left(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(width - s.len()), s)
+    }
+}
+
+/// Right-pad to width.
+pub fn pad_right(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{}{}", s, " ".repeat(width - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_units() {
+        assert_eq!(human_time(12.0), "12.0 ns");
+        assert_eq!(human_time(1_500.0), "1.50 µs");
+        assert_eq!(human_time(2_500_000.0), "2.50 ms");
+        assert_eq!(human_time(3_210_000_000.0), "3.210 s");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(human_bytes(100.0), "100 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KiB");
+        assert_eq!(human_bytes(3.0 * 1024.0 * 1024.0), "3.00 MiB");
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(human_count(999.0), "999");
+        assert_eq!(human_count(1_200.0), "1.20K");
+        assert_eq!(human_count(3_400_000.0), "3.40M");
+    }
+
+    #[test]
+    fn padding() {
+        assert_eq!(pad_left("ab", 4), "  ab");
+        assert_eq!(pad_right("ab", 4), "ab  ");
+        assert_eq!(pad_left("abcd", 2), "abcd");
+    }
+}

@@ -1,0 +1,48 @@
+//! Small self-contained utilities: deterministic RNG, statistics helpers,
+//! human-readable formatting. The offline vendor set has no `rand`,
+//! `statrs` or similar, so these are hand-rolled and unit-tested here.
+
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use fmt::{human_bytes, human_count, human_time};
+pub use json::Json;
+pub use rng::Pcg32;
+pub use stats::Summary;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

@@ -1,0 +1,222 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The vendored crate set has no `rand`, so dataset synthesis and the
+//! property-testing framework use this small, well-known PCG32 generator
+//! (O'Neill 2014) seeded through splitmix64. Determinism matters: the
+//! synthetic IMDB/ACM/DBLP graphs must be bit-identical across runs so
+//! that benchmark numbers are comparable run-to-run.
+
+/// splitmix64 — used to expand a user seed into PCG state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG32 (XSH-RR variant): 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id. Different stream
+    /// ids give statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed;
+        let init_state = splitmix64(&mut sm);
+        let mut smi = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(seed);
+        // standard PCG stream selection: odd increment, full 63 bits of
+        // stream entropy (a plain `| 1` can collide adjacent streams)
+        let init_inc = (splitmix64(&mut sm) ^ splitmix64(&mut smi)) << 1 | 1;
+        let mut rng = Pcg32 { state: 0, inc: init_inc };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` using Lemire's unbiased method.
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        // 64-bit multiply-shift; bias is < 2^-32, negligible for synthesis.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn gen_normal(&mut self) -> f32 {
+        let u1 = self.gen_f64().max(1e-12);
+        let u2 = self.gen_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Sample from Zipf-like power-law over `[0, n)` with exponent `alpha`
+    /// via inverse-CDF on a precomputed table is overkill here; we use the
+    /// standard approximate transform `floor(n * u^(1/(1-alpha)))` variant
+    /// that yields heavy-tailed degrees appropriate for graph synthesis.
+    pub fn gen_powerlaw(&mut self, n: usize, alpha: f64) -> usize {
+        debug_assert!(n > 0);
+        debug_assert!(alpha > 1.0);
+        let u = self.gen_f64().max(1e-12);
+        // Pareto-ish: x = u^(-1/(alpha-1)) in [1, inf); fold into [0, n).
+        let x = u.powf(-1.0 / (alpha - 1.0)) - 1.0;
+        let idx = x as usize;
+        idx.min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `[0, n)` (k <= n), sorted.
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        if k * 3 > n {
+            // dense: shuffle a full index vector
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx.sort_unstable();
+            idx
+        } else {
+            // sparse: rejection sample
+            let mut seen = std::collections::BTreeSet::new();
+            while seen.len() < k {
+                seen.insert(self.gen_range(n));
+            }
+            seen.into_iter().collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 0);
+        let mut b = Pcg32::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "independent streams should rarely collide");
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let v = rng.gen_range(13);
+            assert!(v < 13);
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut rng = Pcg32::seeded(2);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let v = rng.gen_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn powerlaw_heavy_tail() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 1000;
+        let samples: Vec<usize> = (0..50_000).map(|_| rng.gen_powerlaw(n, 2.2)).collect();
+        let zeros = samples.iter().filter(|&&x| x == 0).count();
+        let tail = samples.iter().filter(|&&x| x > 100).count();
+        assert!(zeros > samples.len() / 3, "mode should be at 0, got {zeros}");
+        assert!(tail > 0, "tail should be populated");
+    }
+
+    #[test]
+    fn choose_distinct_properties() {
+        let mut rng = Pcg32::seeded(5);
+        for (n, k) in [(10, 10), (100, 3), (50, 25), (1, 1), (7, 0)] {
+            let picked = rng.choose_distinct(n, k);
+            assert_eq!(picked.len(), k);
+            assert!(picked.windows(2).all(|w| w[0] < w[1]), "sorted+distinct");
+            assert!(picked.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seeded(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,133 @@
+//! Coordinator integration: scheduling policies over real models —
+//! numerical equivalence, modeled-makespan ordering, timeline shape
+//! (Fig 5c) and the §5 guideline ablations.
+
+use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::Backend;
+use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::profiler::StageId;
+
+fn setup(
+    dataset: DatasetId,
+) -> (hgnn_char::graph::HeteroGraph, hgnn_char::models::ModelPlan) {
+    let hg = datasets::build(dataset, &DatasetScale::factor(0.25)).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    (hg, plan)
+}
+
+#[test]
+fn policies_numerically_equivalent_at_scale() {
+    let (hg, plan) = setup(DatasetId::Dblp);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
+    for policy in [
+        SchedulePolicy::InterSubgraphParallel { workers: 3 },
+        SchedulePolicy::FusedSubgraph { workers: 3 },
+        SchedulePolicy::BoundAwareMixing { workers: 3 },
+    ] {
+        let run = coord.run(&plan, &hg, policy).unwrap();
+        assert!(
+            run.output.allclose(&seq.output, 1e-3, 1e-4),
+            "{}: max diff {}",
+            policy.label(),
+            run.output.max_abs_diff(&seq.output).unwrap()
+        );
+    }
+}
+
+#[test]
+fn inter_subgraph_parallelism_improves_makespan() {
+    // Fig 5c observation: NA subgraphs are independent => parallel
+    // streams shorten the modeled NA phase.
+    let (hg, plan) = setup(DatasetId::Dblp);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
+    let par = coord
+        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 3 })
+        .unwrap();
+    assert!(
+        par.report.modeled_makespan_ns < seq.report.modeled_makespan_ns,
+        "parallel {:.0} !< sequential {:.0}",
+        par.report.modeled_makespan_ns,
+        seq.report.modeled_makespan_ns
+    );
+    assert!(par.report.speedup > 1.0);
+}
+
+#[test]
+fn timeline_shows_parallel_na_and_barrier() {
+    let (hg, plan) = setup(DatasetId::Dblp);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let par = coord
+        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 3 })
+        .unwrap();
+    let tl = par.profile.timeline();
+    assert!(tl.has_cross_lane_overlap(), "NA lanes must overlap (Fig 5c)");
+    assert_eq!(tl.barriers.len(), 1, "exactly one NA→SA barrier");
+    let (label, at) = &tl.barriers[0];
+    assert!(label.contains("NA"));
+    // every SA span starts at/after the barrier
+    for spans in tl.lanes.values() {
+        for s in spans {
+            if s.stage == StageId::SemanticAggregation {
+                assert!(
+                    s.begin_ns >= *at - 1.0,
+                    "SA span at {} before barrier {at}",
+                    s.begin_ns
+                );
+            }
+        }
+    }
+    let rendered = tl.render(80);
+    assert!(rendered.contains("barrier"));
+}
+
+#[test]
+fn mixing_beats_plain_parallel_in_model() {
+    // §5 guideline 1 (idealized overlap bound)
+    let (hg, plan) = setup(DatasetId::Imdb);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let par = coord
+        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 2 })
+        .unwrap();
+    let mix = coord
+        .run(&plan, &hg, SchedulePolicy::BoundAwareMixing { workers: 2 })
+        .unwrap();
+    assert!(
+        mix.report.modeled_makespan_ns <= par.report.modeled_makespan_ns + 1.0,
+        "mixing {:.0} vs parallel {:.0}",
+        mix.report.modeled_makespan_ns,
+        par.report.modeled_makespan_ns
+    );
+}
+
+#[test]
+fn fused_schedule_distributes_fp() {
+    // §5 guideline 2: no serial FP phase; projections ride inside NA tasks
+    let (hg, plan) = setup(DatasetId::Imdb);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let fused = coord.run(&plan, &hg, SchedulePolicy::FusedSubgraph { workers: 2 }).unwrap();
+    let fp_kernels = fused
+        .profile
+        .kernels
+        .iter()
+        .filter(|k| k.stage == StageId::FeatureProjection)
+        .count();
+    assert_eq!(fp_kernels, 0, "fused run should attribute projections to NA tasks");
+    // and it still contains sgemm work somewhere
+    assert!(fused.profile.kernels.iter().any(|k| k.exec.name == "sgemm"));
+}
+
+#[test]
+fn single_worker_parallel_equals_sequential_makespan() {
+    let (hg, plan) = setup(DatasetId::Acm);
+    let coord = Coordinator::new(Backend::native_no_traces());
+    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
+    let par1 = coord
+        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 1 })
+        .unwrap();
+    let rel_diff = (seq.report.modeled_makespan_ns - par1.report.modeled_makespan_ns).abs()
+        / seq.report.modeled_makespan_ns.max(1.0);
+    assert!(rel_diff < 1e-9, "1-worker parallel == sequential, diff {rel_diff}");
+}

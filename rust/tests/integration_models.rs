@@ -1,0 +1,125 @@
+//! Cross-model integration: every model on every dataset it supports,
+//! checking output sanity, kernel taxonomy coverage and Table 1's stage
+//! structure.
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::kernels::KernelType;
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::profiler::StageId;
+
+fn ci() -> DatasetScale {
+    DatasetScale::ci()
+}
+
+#[test]
+fn full_matrix_runs_and_is_finite() {
+    for model in ModelId::HGNNS {
+        for dataset in DatasetId::HETERO {
+            let hg = datasets::build(dataset, &ci()).unwrap();
+            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+            assert!(
+                run.output.as_slice().iter().all(|v| v.is_finite()),
+                "{model:?}/{dataset:?} produced non-finite values"
+            );
+            assert!(run.output.frob_norm() > 0.0, "{model:?}/{dataset:?} all-zero");
+        }
+    }
+}
+
+#[test]
+fn table1_stage_operations() {
+    // Table 1: RGCN = mean NA + sum SA (no attention kernels);
+    // HAN/MAGNN = GAT NA + attention-sum SA.
+    let hg = datasets::build(DatasetId::Acm, &ci()).unwrap();
+    let cfg = ModelConfig::default();
+
+    let rgcn = models::rgcn_plan(&hg, &cfg).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&rgcn, &hg).unwrap();
+    let rgcn_names: std::collections::BTreeSet<&str> =
+        run.profile.kernels.iter().map(|k| k.exec.name).collect();
+    assert!(!rgcn_names.contains("SDDMMCoo"), "RGCN has no attention SDDMM");
+    assert!(!rgcn_names.contains("edge_softmax"), "RGCN has no edge softmax");
+
+    let han = models::han_plan(&hg, &cfg).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&han, &hg).unwrap();
+    let han_names: std::collections::BTreeSet<&str> =
+        run.profile.kernels.iter().map(|k| k.exec.name).collect();
+    for expected in ["sgemm", "SpMMCsr", "SDDMMCoo", "edge_softmax", "uEleWise", "vEleWise", "Reduce", "Concat"] {
+        assert!(han_names.contains(expected), "HAN profile missing {expected}");
+    }
+}
+
+#[test]
+fn all_four_kernel_types_appear_in_han() {
+    let hg = datasets::build(DatasetId::Imdb, &ci()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let types: std::collections::BTreeSet<KernelType> =
+        run.profile.kernels.iter().map(|k| k.exec.ktype).collect();
+    for t in KernelType::ALL {
+        assert!(types.contains(&t), "missing kernel type {t:?}");
+    }
+}
+
+#[test]
+fn rgcn_output_independent_of_relation_order_scale() {
+    // deterministic weights => two fresh builds agree exactly
+    let hg = datasets::build(DatasetId::Dblp, &ci()).unwrap();
+    let cfg = ModelConfig::default();
+    let a = Engine::new(Backend::native_no_traces())
+        .run(&models::rgcn_plan(&hg, &cfg).unwrap(), &hg)
+        .unwrap();
+    let b = Engine::new(Backend::native_no_traces())
+        .run(&models::rgcn_plan(&hg, &cfg).unwrap(), &hg)
+        .unwrap();
+    assert!(a.output.allclose(&b.output, 0.0, 0.0));
+}
+
+#[test]
+fn hidden_dim_scales_output_width() {
+    let hg = datasets::build(DatasetId::Imdb, &ci()).unwrap();
+    for hidden in [16, 32, 128] {
+        let cfg = ModelConfig { hidden_dim: hidden, ..ModelConfig::default() };
+        let plan = models::han_plan(&hg, &cfg).unwrap();
+        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        assert_eq!(run.output.cols(), hidden);
+    }
+}
+
+#[test]
+fn more_metapaths_more_na_kernels() {
+    let hg = datasets::build(DatasetId::Dblp, &ci()).unwrap();
+    let cfg = ModelConfig::default();
+    let count_na = |k: usize| -> usize {
+        let paths: Vec<_> = hgnn_char::models::sweeps::DBLP_METAPATH_POOL[..k]
+            .iter()
+            .map(|s| hgnn_char::metapath::Metapath::parse(s).unwrap())
+            .collect();
+        let plan = models::han_plan_with(&hg, &cfg, &paths).unwrap();
+        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        run.profile
+            .kernels
+            .iter()
+            .filter(|kk| kk.stage == StageId::NeighborAggregation)
+            .count()
+    };
+    let one = count_na(1);
+    let three = count_na(3);
+    assert_eq!(three, 3 * one, "NA kernel count scales with #metapaths");
+}
+
+#[test]
+fn gcn_has_no_semantic_stage_work() {
+    let hg = datasets::build(DatasetId::RedditSim, &ci()).unwrap();
+    let plan = models::gcn_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let sa: Vec<_> = run
+        .profile
+        .kernels
+        .iter()
+        .filter(|k| k.stage == StageId::SemanticAggregation)
+        .collect();
+    assert!(sa.is_empty(), "GCN must skip SA, found {} kernels", sa.len());
+}

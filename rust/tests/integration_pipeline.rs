@@ -1,0 +1,144 @@
+//! End-to-end pipeline integration at realistic (quarter-paper) scale:
+//! the paper's headline observations must hold structurally.
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::kernels::KernelType;
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::profiler::StageId;
+
+fn quarter() -> DatasetScale {
+    DatasetScale::factor(0.25)
+}
+
+#[test]
+fn na_dominates_han_dblp_at_scale() {
+    // Fig 2's headline: Neighbor Aggregation takes most of HGNN time.
+    // HAN on DBLP (the Table 3 configuration) at quarter scale.
+    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let pct = run.profile.stage_percentages();
+    let na = pct[&StageId::NeighborAggregation];
+    assert!(
+        na > 50.0,
+        "NA should dominate HAN-DBLP: FP {:.1} NA {:.1} SA {:.1}",
+        pct[&StageId::FeatureProjection],
+        na,
+        pct[&StageId::SemanticAggregation]
+    );
+}
+
+#[test]
+fn fp_is_dm_dominated_na_is_tb_ew_dominated() {
+    // Fig 3's claim: FP is DM-type; NA is TB+EW-type; SA contains DR.
+    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let ktt = run.profile.kernel_type_times();
+    let share = |stage: StageId, t: KernelType| -> f64 {
+        let total: f64 = KernelType::ALL
+            .iter()
+            .map(|&k| ktt.get(&(stage, k)).copied().unwrap_or(0.0))
+            .sum();
+        100.0 * ktt.get(&(stage, t)).copied().unwrap_or(0.0) / total.max(1e-12)
+    };
+    assert!(
+        share(StageId::FeatureProjection, KernelType::DenseMatmul) > 99.0,
+        "FP is pure sgemm"
+    );
+    let na_tb = share(StageId::NeighborAggregation, KernelType::TopologyBased);
+    let na_ew = share(StageId::NeighborAggregation, KernelType::ElementWise);
+    assert!(
+        na_tb + na_ew > 95.0,
+        "NA is TB+EW dominated: TB {na_tb:.1} EW {na_ew:.1}"
+    );
+    assert!(
+        share(StageId::SemanticAggregation, KernelType::DataRearrange) > 1.0,
+        "SA contains the Concat DR kernel"
+    );
+}
+
+#[test]
+fn spmm_is_the_na_hotspot_with_low_ai() {
+    // Table 3: SpMMCsr dominates NA, with AI well below the ridge.
+    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let rows = run.profile.kernel_table(StageId::NeighborAggregation);
+    let (top_name, top_metrics, top_share) = &rows[0];
+    assert_eq!(top_name, "SpMMCsr", "NA hotspot: {rows:?}");
+    assert!(*top_share > 50.0, "SpMMCsr share {top_share:.1}%");
+    assert!(
+        top_metrics.ai < 9.375,
+        "SpMM memory-bound (AI {:.2} below ridge)",
+        top_metrics.ai
+    );
+    assert!(top_metrics.peak_perf_pct < 15.0, "SpMM far from peak");
+}
+
+#[test]
+fn sgemm_compute_bound_on_big_projection() {
+    // Fig 4: the FP sgemm sits above the roofline ridge. HAN on IMDB at
+    // paper scale projects the dense 3066-dim movie features — a
+    // [4278, 3066] x [3066, 64] sgemm that fills the T4.
+    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::paper()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let rows = run.profile.kernel_table(StageId::FeatureProjection);
+    let (_, m, _) = &rows[0];
+    assert!(m.ai > 9.375, "FP sgemm AI {:.1} above ridge", m.ai);
+    assert!(m.peak_perf_pct > 50.0, "FP sgemm near peak: {:.1}%", m.peak_perf_pct);
+}
+
+#[test]
+fn magnn_na_exceeds_han_na() {
+    // MAGNN's instance encoding makes NA strictly heavier (paper: MAGNN
+    // NA shares are the largest across models).
+    let hg = datasets::build(DatasetId::Imdb, &quarter()).unwrap();
+    let config = ModelConfig::default();
+    let han = models::han_plan(&hg, &config).unwrap();
+    let magnn = models::magnn_plan(&hg, &config).unwrap();
+    let mut engine = Engine::new(Backend::native_no_traces());
+    let t_han = engine.run(&han, &hg).unwrap().profile.stage_times()
+        [&StageId::NeighborAggregation];
+    let t_magnn = engine.run(&magnn, &hg).unwrap().profile.stage_times()
+        [&StageId::NeighborAggregation];
+    assert!(t_magnn > t_han, "MAGNN NA {t_magnn} vs HAN NA {t_han}");
+}
+
+#[test]
+fn sparsity_decreases_with_metapath_length_all_datasets() {
+    // Fig 6a across all three HGs at quarter scale.
+    for (seed, dataset) in
+        [("MAM", DatasetId::Imdb), ("PAP", DatasetId::Acm), ("APA", DatasetId::Dblp)]
+    {
+        let hg = datasets::build(dataset, &quarter()).unwrap();
+        let pts = hgnn_char::metapath::sparsity::sparsity_sweep(&hg, seed, 3).unwrap();
+        for w in pts.windows(2) {
+            assert!(
+                w[1].sparsity <= w[0].sparsity + 1e-12,
+                "{dataset:?}: sparsity rose {} -> {}",
+                w[0].sparsity,
+                w[1].sparsity
+            );
+        }
+        // the §5 correlation model fits well
+        if let Some(model) = hgnn_char::metapath::fit_sparsity_model(&pts) {
+            assert!(model.r2 > 0.6, "{dataset:?}: weak fit r2={}", model.r2);
+            assert!(model.slope >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn subgraph_build_excluded_from_gpu_stages() {
+    let hg = datasets::build(DatasetId::Acm, &DatasetScale::ci()).unwrap();
+    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    assert!(run.profile.subgraph_build_nanos > 0, "SB time recorded");
+    assert!(
+        run.profile.kernels.iter().all(|k| k.stage != StageId::SubgraphBuild),
+        "no GPU kernels attributed to Subgraph Build"
+    );
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime integration: load the AOT JAX/Pallas artifacts, execute
+//! them with real graph tensors, and assert numeric agreement with the
+//! native Rust engine.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! CI runs `make test`, which builds artifacts first).
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::graph::Csr;
+use hgnn_char::metapath::{Metapath, Subgraph, SubgraphSet};
+use hgnn_char::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
+use hgnn_char::runtime::PjrtRuntime;
+use hgnn_char::tensor::Tensor;
+
+const ELL_K: usize = 64;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::new(root).expect("PJRT client"))
+}
+
+/// ELL arrays (idx, mask) as f32 tensors for a CSR, truncated at K.
+fn ell_tensors(adj: &Csr, k: usize) -> (Tensor, Tensor, Csr) {
+    let (ell, _) = adj.to_ell(k);
+    let mut idx = Tensor::zeros(adj.n_rows, k);
+    let mut mask = Tensor::zeros(adj.n_rows, k);
+    for r in 0..adj.n_rows {
+        let (cols, valid) = ell.row_slots(r);
+        for j in 0..k {
+            idx.set(r, j, cols[j] as f32);
+            mask.set(r, j, if valid[j] { 1.0 } else { 0.0 });
+        }
+    }
+    let truncated_csr = ell.to_csr();
+    (idx, mask, truncated_csr)
+}
+
+fn vec_tensor(rows: usize, cols: usize, v: &[f32]) -> Tensor {
+    Tensor::from_vec(rows, cols, v.to_vec()).unwrap()
+}
+
+#[test]
+fn kernel_dense_matmul_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.compile_by_name("kernel_dense_matmul").expect("compile");
+    let mut rng = hgnn_char::util::Pcg32::seeded(99);
+    let a = Tensor::randn(128, 256, 1.0, &mut rng);
+    let b = Tensor::randn(256, 64, 1.0, &mut rng);
+    let out = art.execute(&[&a, &b]).expect("execute");
+    assert_eq!(out.len(), 1);
+    let native = hgnn_char::kernels::dense::sgemm_naive(&a, &b);
+    assert!(
+        out[0].allclose(&native, 1e-3, 1e-3),
+        "pallas matmul vs native: max diff {}",
+        out[0].max_abs_diff(&native).unwrap()
+    );
+}
+
+#[test]
+fn kernel_ell_spmm_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.compile_by_name("kernel_ell_spmm").expect("compile");
+    let (n, k, f) = (256usize, 16usize, 64usize);
+    let mut rng = hgnn_char::util::Pcg32::seeded(7);
+    let gathered = Tensor::randn(n * k, f, 1.0, &mut rng);
+    let weights = Tensor::randn(n, k, 1.0, &mut rng);
+    let mut mask = Tensor::zeros(n, k);
+    for r in 0..n {
+        for j in 0..k {
+            mask.set(r, j, if rng.gen_f32() < 0.6 { 1.0 } else { 0.0 });
+        }
+    }
+    let out = art.execute(&[&gathered, &weights, &mask]).expect("execute");
+    // native oracle: masked weighted sum over the K axis
+    let mut expect = Tensor::zeros(n, f);
+    for r in 0..n {
+        for j in 0..k {
+            let w = weights.get(r, j) * mask.get(r, j);
+            if w != 0.0 {
+                let src = gathered.row(r * k + j);
+                for (o, &v) in expect.row_mut(r).iter_mut().zip(src) {
+                    *o += w * v;
+                }
+            }
+        }
+    }
+    assert!(
+        out[0].allclose(&expect, 1e-4, 1e-4),
+        "ell_spmm vs oracle: {}",
+        out[0].max_abs_diff(&expect).unwrap()
+    );
+}
+
+/// Build the HAN-IMDB CI plan whose adjacency is ELL-truncated exactly
+/// like the artifact inputs, so native and PJRT compute the same math.
+fn han_imdb_truncated_plan(
+) -> (hgnn_char::graph::HeteroGraph, ModelPlan, Vec<(Tensor, Tensor)>) {
+    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let config = ModelConfig::default();
+    let base = models::han_plan(&hg, &config).unwrap();
+    let mut ells = Vec::new();
+    let mut subgraphs = Vec::new();
+    for sg in &base.subgraphs.subgraphs {
+        let (idx, mask, trunc) = ell_tensors(&sg.adj, ELL_K);
+        ells.push((idx, mask));
+        subgraphs.push(Subgraph {
+            metapath: Some(Metapath::parse(&sg.name).unwrap()),
+            name: sg.name.clone(),
+            dst_type: sg.dst_type,
+            src_type: sg.src_type,
+            adj: trunc,
+        });
+    }
+    let subgraphs = SubgraphSet { subgraphs, build_nanos: 0 };
+    let weights = ModelWeights::init(ModelId::Han, &hg, &subgraphs, &config);
+    let plan = ModelPlan {
+        model: ModelId::Han,
+        config,
+        subgraphs,
+        weights,
+        target: base.target,
+    };
+    (hg, plan, ells)
+}
+
+#[test]
+fn han_full_model_artifact_matches_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.compile_by_name("han_imdb_ci_full").expect("compile");
+    let (hg, plan, ells) = han_imdb_truncated_plan();
+
+    // native execution on the identical (truncated) adjacency
+    let native = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+
+    // PJRT execution with the same weights + ELL tensors
+    let m_ty = hg.type_by_tag('M').unwrap();
+    let x = hg.features(m_ty);
+    let w = &plan.weights.proj[&m_ty];
+    let h = plan.config.hidden_dim;
+    let s = plan.config.semantic_dim;
+    let al0 = vec_tensor(1, h, &plan.weights.attn_l[0]);
+    let ar0 = vec_tensor(1, h, &plan.weights.attn_r[0]);
+    let al1 = vec_tensor(1, h, &plan.weights.attn_l[1]);
+    let ar1 = vec_tensor(1, h, &plan.weights.attn_r[1]);
+    let sem_w = plan.weights.sem_w.as_ref().unwrap();
+    let sem_b = vec_tensor(1, s, &plan.weights.sem_b);
+    let sem_q = plan.weights.sem_q.as_ref().unwrap();
+    let out = art
+        .execute(&[
+            x, w, &ells[0].0, &ells[0].1, &ells[1].0, &ells[1].1, &al0, &ar0, &al1, &ar1,
+            sem_w, &sem_b, sem_q,
+        ])
+        .expect("execute HAN artifact");
+
+    assert_eq!(out[0].shape(), native.output.shape());
+    assert!(
+        out[0].allclose(&native.output, 1e-3, 1e-3),
+        "PJRT vs native HAN output: max diff {}",
+        out[0].max_abs_diff(&native.output).unwrap()
+    );
+}
+
+#[test]
+fn gcn_artifact_matches_native_engine() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.compile_by_name("gcn_reddit_ci_full").expect("compile");
+    let hg = datasets::build(DatasetId::RedditSim, &DatasetScale::ci()).unwrap();
+    let config = ModelConfig::default();
+    let base = models::gcn_plan(&hg, &config).unwrap();
+    let (idx, mask, trunc) = ell_tensors(&base.subgraphs.subgraphs[0].adj, ELL_K);
+    // native on truncated adjacency
+    let subgraphs = SubgraphSet {
+        subgraphs: vec![Subgraph {
+            metapath: None,
+            name: "U-U".into(),
+            dst_type: 0,
+            src_type: 0,
+            adj: trunc,
+        }],
+        build_nanos: 0,
+    };
+    let weights = ModelWeights::init(ModelId::Gcn, &hg, &subgraphs, &config);
+    let plan = ModelPlan { model: ModelId::Gcn, config, subgraphs, weights, target: 0 };
+    let native = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+
+    let x = hg.features(0);
+    let w = &plan.weights.proj[&0];
+    let out = art.execute(&[x, w, &idx, &mask]).expect("execute GCN artifact");
+    assert!(
+        out[0].allclose(&native.output, 1e-3, 1e-3),
+        "PJRT vs native GCN: max diff {}",
+        out[0].max_abs_diff(&native.output).unwrap()
+    );
+}
+
+#[test]
+fn artifact_input_shape_validation() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.compile_by_name("kernel_dense_matmul").expect("compile");
+    let wrong = Tensor::zeros(2, 2);
+    assert!(art.execute(&[&wrong, &wrong]).is_err(), "shape mismatch must error");
+    let a = Tensor::zeros(128, 256);
+    assert!(art.execute(&[&a]).is_err(), "arity mismatch must error");
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    for name in [
+        "han_imdb_ci_full",
+        "gcn_reddit_ci_full",
+        "kernel_dense_matmul",
+        "kernel_ell_spmm",
+    ] {
+        assert!(manifest.find(name).is_some(), "missing artifact {name}");
+    }
+}

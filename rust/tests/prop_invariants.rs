@@ -1,0 +1,241 @@
+//! Property-based invariants over the substrate and coordinator, via the
+//! mini-proptest framework in `hgnn_char::testutil`.
+
+use hgnn_char::graph::sparse::Csr;
+use hgnn_char::kernels::elementwise::{reduce_grouped_rows, softmax_vec};
+use hgnn_char::kernels::sparse_ops::{edge_softmax, sddmm_coo, spmm_csr, SpmmReduce};
+use hgnn_char::kernels::Ctx;
+use hgnn_char::coordinator::lpt_assign;
+use hgnn_char::tensor::Tensor;
+use hgnn_char::testutil::{check, CsrStrategy, Pair, Strategy, TensorStrategy};
+use hgnn_char::util::Pcg32;
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_csr_transpose_involution() {
+    check("transpose∘transpose = id", 11, CASES, &CsrStrategy::default(), |csr| {
+        csr.transposed().transposed() == *csr
+    });
+}
+
+#[test]
+fn prop_csr_roundtrip_coo() {
+    check("csr -> coo -> csr = id", 12, CASES, &CsrStrategy::default(), |csr| {
+        csr.to_coo().to_csr() == *csr
+    });
+}
+
+#[test]
+fn prop_ell_roundtrip_when_k_sufficient() {
+    check("ell roundtrip at k = max_degree", 13, CASES, &CsrStrategy::default(), |csr| {
+        let k = csr.max_degree().max(1);
+        let (ell, trunc) = csr.to_ell(k);
+        trunc == 0 && ell.to_csr() == *csr
+    });
+}
+
+#[test]
+fn prop_bool_matmul_identity_neutral() {
+    check("A · I = A", 14, CASES, &CsrStrategy::default(), |csr| {
+        let id = Csr::identity(csr.n_cols);
+        csr.bool_matmul(&id).map(|p| p == *csr).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_bool_matmul_associative() {
+    // (A·B)·C == A·(B·C) over the boolean semiring — the property that
+    // makes metapath composition order-independent.
+    struct Triple;
+    impl Strategy for Triple {
+        type Value = (Csr, Csr, Csr);
+        fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+            let dims: Vec<usize> = (0..4).map(|_| 1 + rng.gen_range(12)).collect();
+            let mk = |rng: &mut Pcg32, r: usize, c: usize| {
+                let nnz = rng.gen_range(r * c + 1);
+                let edges: Vec<(u32, u32)> = (0..nnz)
+                    .map(|_| (rng.gen_range(r) as u32, rng.gen_range(c) as u32))
+                    .collect();
+                hgnn_char::graph::sparse::Coo::from_edges(r, c, edges)
+                    .unwrap()
+                    .to_csr()
+            };
+            (
+                mk(rng, dims[0], dims[1]),
+                mk(rng, dims[1], dims[2]),
+                mk(rng, dims[2], dims[3]),
+            )
+        }
+    }
+    check("bool matmul associativity", 24, 40, &Triple, |(a, b, c)| {
+        let left = a.bool_matmul(b).unwrap().bool_matmul(c).unwrap();
+        let right = a.bool_matmul(&b.bool_matmul(c).unwrap()).unwrap();
+        left == right
+    });
+}
+
+#[test]
+fn prop_spmm_linear_in_weights() {
+    // spmm(2w) = 2 * spmm(w)
+    let strat = CsrStrategy { max_rows: 20, max_cols: 20, max_density: 0.4 };
+    check("spmm linearity", 15, 40, &strat, |csr| {
+        let mut rng = Pcg32::seeded(csr.nnz() as u64 + 17);
+        let x = Tensor::randn(csr.n_cols, 6, 1.0, &mut rng);
+        let w: Vec<f32> = (0..csr.nnz()).map(|_| rng.gen_f32()).collect();
+        let w2: Vec<f32> = w.iter().map(|v| 2.0 * v).collect();
+        let mut ctx = Ctx::default();
+        let a = spmm_csr(&mut ctx, csr, &x, Some(&w), SpmmReduce::Sum).unwrap();
+        let b = spmm_csr(&mut ctx, csr, &x, Some(&w2), SpmmReduce::Sum).unwrap();
+        let mut a2 = a.clone();
+        for v in a2.as_mut_slice() {
+            *v *= 2.0;
+        }
+        b.allclose(&a2, 1e-4, 1e-5)
+    });
+}
+
+#[test]
+fn prop_spmm_mean_bounded_by_inputs() {
+    // mean aggregation stays inside [min, max] of the gathered features
+    let strat = CsrStrategy { max_rows: 16, max_cols: 16, max_density: 0.5 };
+    check("mean in range", 16, 40, &strat, |csr| {
+        let mut rng = Pcg32::seeded(csr.nnz() as u64 + 3);
+        let x = Tensor::randn(csr.n_cols, 4, 1.0, &mut rng);
+        let lo = x.as_slice().iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = x.as_slice().iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut ctx = Ctx::default();
+        let out = spmm_csr(&mut ctx, csr, &x, None, SpmmReduce::Mean).unwrap();
+        (0..csr.n_rows).all(|r| {
+            if csr.degree(r) == 0 {
+                // isolated nodes aggregate to exactly zero
+                return out.row(r).iter().all(|&v| v == 0.0);
+            }
+            out.row(r).iter().all(|&v| v >= lo - 1e-5 && v <= hi + 1e-5)
+        })
+    });
+}
+
+#[test]
+fn prop_edge_softmax_partition_of_unity() {
+    check("edge softmax sums to 1 per non-empty row", 17, CASES, &CsrStrategy::default(), |csr| {
+        let mut rng = Pcg32::seeded(csr.nnz() as u64 + 29);
+        let s_dst: Vec<f32> = (0..csr.n_rows).map(|_| rng.gen_normal()).collect();
+        let s_src: Vec<f32> = (0..csr.n_cols).map(|_| rng.gen_normal()).collect();
+        let mut ctx = Ctx::default();
+        let logits = sddmm_coo(&mut ctx, csr, &s_dst, &s_src, 0.2).unwrap();
+        let w = edge_softmax(&mut ctx, csr, &logits).unwrap();
+        (0..csr.n_rows).all(|d| {
+            let lo = csr.indptr[d] as usize;
+            let hi = csr.indptr[d + 1] as usize;
+            if lo == hi {
+                return true;
+            }
+            let sum: f32 = w[lo..hi].iter().sum();
+            (sum - 1.0).abs() < 1e-4 && w[lo..hi].iter().all(|&v| (0.0..=1.0).contains(&v))
+        })
+    });
+}
+
+#[test]
+fn prop_softmax_vec_invariant_to_shift() {
+    let strat = TensorStrategy { max_rows: 1, max_cols: 16, scale: 5.0 };
+    check("softmax shift invariance", 18, CASES, &strat, |t| {
+        let mut ctx = Ctx::default();
+        let a = softmax_vec(&mut ctx, t.as_slice());
+        let shifted: Vec<f32> = t.as_slice().iter().map(|v| v + 3.5).collect();
+        let b = softmax_vec(&mut ctx, &shifted);
+        a.iter().zip(&b).all(|(x, y)| (x - y).abs() < 1e-5)
+    });
+}
+
+#[test]
+fn prop_reduce_grouped_matches_manual_sum() {
+    let strat = TensorStrategy { max_rows: 12, max_cols: 8, scale: 2.0 };
+    check("grouped reduce = manual", 19, CASES, &strat, |t| {
+        // duplicate the tensor 3x as groups; reduce must equal 3*t
+        let parts = [t, t, t];
+        let refs: Vec<&Tensor> = parts.to_vec();
+        let mut ctx = Ctx::default();
+        let stacked = hgnn_char::kernels::rearrange::concat_rows(&mut ctx, &refs).unwrap();
+        let out = reduce_grouped_rows(&mut ctx, &stacked, 3).unwrap();
+        let mut expect = (*t).clone();
+        for v in expect.as_mut_slice() {
+            *v *= 3.0;
+        }
+        out.allclose(&expect, 1e-5, 1e-5)
+    });
+}
+
+#[test]
+fn prop_lpt_covers_all_and_is_balancedish() {
+    struct CostStrategy;
+    impl Strategy for CostStrategy {
+        type Value = (Vec<f64>, usize);
+        fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+            let n = 1 + rng.gen_range(20);
+            let costs = (0..n).map(|_| 1.0 + rng.gen_f64() * 99.0).collect();
+            let workers = 1 + rng.gen_range(6);
+            (costs, workers)
+        }
+    }
+    check("lpt assignment", 20, CASES, &CostStrategy, |(costs, workers)| {
+        let assign = lpt_assign(costs, *workers);
+        if assign.len() != costs.len() {
+            return false;
+        }
+        if !assign.iter().all(|&w| w < *workers) {
+            return false;
+        }
+        // makespan within 2x of the lower bound (LPT guarantees 4/3 + ...)
+        let mut load = vec![0.0f64; *workers];
+        for (i, &w) in assign.iter().enumerate() {
+            load[w] += costs[i];
+        }
+        let makespan = load.iter().cloned().fold(0.0, f64::max);
+        let total: f64 = costs.iter().sum();
+        let lb = (total / *workers as f64).max(costs.iter().cloned().fold(0.0, f64::max));
+        makespan <= 2.0 * lb + 1e-9
+    });
+}
+
+#[test]
+fn prop_gather_trace_rows_match_csr_indices() {
+    check("spmm trace = csr indices", 21, CASES, &CsrStrategy::default(), |csr| {
+        let mut rng = Pcg32::seeded(5);
+        let x = Tensor::randn(csr.n_cols, 4, 1.0, &mut rng);
+        let mut ctx = Ctx::with_traces();
+        spmm_csr(&mut ctx, csr, &x, None, SpmmReduce::Sum).unwrap();
+        let trace = ctx.events[0].trace.as_ref().unwrap();
+        trace.rows == csr.indices
+    });
+}
+
+#[test]
+fn prop_dropout_is_subset_with_rate() {
+    check("dropout subset", 22, CASES, &CsrStrategy::default(), |csr| {
+        let mut rng = Pcg32::seeded(csr.n_rows as u64);
+        let kept = csr.dropout(0.5, &mut rng);
+        if kept.validate().is_err() || kept.nnz() > csr.nnz() {
+            return false;
+        }
+        // every kept edge existed
+        (0..kept.n_rows).all(|r| {
+            let orig = csr.row(r);
+            kept.row(r).iter().all(|c| orig.contains(c))
+        })
+    });
+}
+
+#[test]
+fn prop_pair_strategy_spmm_shape_errors_detected() {
+    // shape mismatches must error, never panic
+    let strat = Pair(CsrStrategy::default(), TensorStrategy::default());
+    check("spmm shape safety", 23, CASES, &strat, |(csr, x)| {
+        let mut ctx = Ctx::default();
+        match spmm_csr(&mut ctx, csr, x, None, SpmmReduce::Sum) {
+            Ok(out) => x.rows() == csr.n_cols && out.shape() == (csr.n_rows, x.cols()),
+            Err(_) => x.rows() != csr.n_cols,
+        }
+    });
+}
