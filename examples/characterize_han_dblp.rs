@@ -7,23 +7,25 @@
 //! ```
 
 use hgnn_char::cli::Args;
-use hgnn_char::datasets::{self, DatasetId};
-use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::datasets::DatasetId;
 use hgnn_char::gpumodel::{roofline, GpuModel};
-use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
+use hgnn_char::session::{Profiling, Session};
 
 fn main() -> hgnn_char::Result<()> {
     let args = Args::flags_from_env();
-    let scale = args.scale()?;
-    let hg = datasets::build(DatasetId::Dblp, &scale)?;
-    println!("{}", hg.stats_line());
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    println!("{}\n", plan.describe(&hg));
+    let mut session = Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(args.scale()?)
+        .model(ModelId::Han)
+        .profiling(Profiling::Traces)
+        .build()?;
+    println!("{}", session.graph().stats_line());
+    println!("{}\n", session.plan().describe(session.graph()));
 
-    let mut engine = Engine::new(Backend::native());
-    let run = engine.run(&plan, &hg)?;
+    let run = session.run()?;
 
     // -- Fig 2 row + Fig 3 rows ------------------------------------------
     println!("{}", report::fig2_row("HAN", "DB", &run.profile));

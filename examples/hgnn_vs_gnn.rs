@@ -7,11 +7,10 @@
 //! ```
 
 use hgnn_char::cli::Args;
-use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
-use hgnn_char::datasets::{self, DatasetId};
-use hgnn_char::engine::Backend;
-use hgnn_char::models::{self, sweeps, ModelConfig};
+use hgnn_char::datasets::DatasetId;
+use hgnn_char::models::{sweeps, ModelId};
 use hgnn_char::report;
+use hgnn_char::session::{SchedulePolicy, Session};
 
 fn main() -> hgnn_char::Result<()> {
     let args = Args::flags_from_env();
@@ -33,10 +32,13 @@ fn main() -> hgnn_char::Result<()> {
     );
 
     println!("== Fig 5(c): timeline — inter-subgraph parallelism + barrier ==");
-    let hg = datasets::build(DatasetId::Dblp, &scale)?;
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let run = coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 4 })?;
+    let run = Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(scale)
+        .model(ModelId::Han)
+        .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+        .build()?
+        .run()?;
     println!("{}", run.profile.timeline().render(96));
     println!("{}", run.report.summary());
     Ok(())

@@ -1,30 +1,30 @@
-//! Quickstart: build a dataset, run HAN, print the paper-style profile.
+//! Quickstart: one `Session` — build a dataset, run HAN, print the
+//! paper-style profile, then swap the schedule policy on the same
+//! session state.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
-use hgnn_char::models::{self, ModelConfig};
-use hgnn_char::profiler::StageId;
-use hgnn_char::report;
+use hgnn_char::prelude::*;
 
 fn main() -> hgnn_char::Result<()> {
-    // 1. Synthesize IMDB at the paper's published statistics (Table 2).
-    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::paper())?;
-    println!("{}\n", hg.stats_line());
+    // 1. One session composes dataset × model × backend × schedule ×
+    //    profiling, and owns graph + plan + cached state across runs.
+    //    IMDB is synthesized at the paper's published statistics
+    //    (Table 2); the plan is HAN over the MDM + MAM metapaths.
+    let mut session = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .model(ModelId::Han)
+        .profiling(Profiling::Traces)
+        .build()?;
+    println!("{}\n", session.graph().stats_line());
+    println!("{}\n", session.plan().describe(session.graph()));
 
-    // 2. Build the HAN execution plan: Subgraph Build (metapath walk on
-    //    MDM + MAM) plus deterministic weights.
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    println!("{}\n", plan.describe(&hg));
+    // 2. Run inference on the native backend with full profiling.
+    let run = session.run()?;
 
-    // 3. Run inference on the native substrate with full profiling.
-    let mut engine = Engine::new(Backend::native());
-    let run = engine.run(&plan, &hg)?;
-
-    // 4. The paper's three analyses, one call each.
+    // 3. The paper's three analyses, one call each.
     println!("{}", run.profile.stage_breakdown());
     println!("kernel table for Neighbor Aggregation (cf. paper Table 3):");
     println!(
@@ -40,5 +40,11 @@ fn main() -> hgnn_char::Result<()> {
         run.output.cols(),
         run.output.frob_norm()
     );
+
+    // 4. Same session, different schedule: the plan, weights and graph
+    //    are reused — only the execution policy changes.
+    session.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 });
+    let par = session.run()?;
+    println!("\n{}", par.report.summary());
     Ok(())
 }

@@ -12,10 +12,9 @@
 //! Run: `cargo bench --bench ablation_scheduling`
 
 use hgnn_char::bench::{bench, header, BenchConfig};
-use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::Backend;
-use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::session::{SchedulePolicy, Session};
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -31,26 +30,27 @@ fn main() {
         "sequential vs inter-subgraph parallel vs fused vs bound-aware mixing",
     );
     let cfg = BenchConfig::from_env();
-    let policies = [
-        SchedulePolicy::Sequential,
-        SchedulePolicy::InterSubgraphParallel { workers: 4 },
-        SchedulePolicy::FusedSubgraph { workers: 4 },
-        SchedulePolicy::BoundAwareMixing { workers: 4 },
-    ];
+    let policies = SchedulePolicy::all(4);
     for model in [ModelId::Han, ModelId::Rgcn] {
         for dataset in [DatasetId::Dblp, DatasetId::Acm] {
             println!("\n### {} on {} ###", model.name(), dataset.name());
-            let hg = datasets::build(dataset, &scale()).unwrap();
-            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
-            let coord = Coordinator::new(Backend::native_no_traces());
+            // one session per (model, dataset): the policy swaps between
+            // runs while graph/plan/scratch are reused
+            let mut session = Session::builder()
+                .dataset(dataset)
+                .scale(scale())
+                .model(model)
+                .build()
+                .unwrap();
             let mut baseline = None;
             for policy in policies {
+                session.set_schedule(policy);
                 let r = bench(
                     &format!("{} wall", policy.label()),
                     &BenchConfig { iters: cfg.iters.min(3), ..cfg.clone() },
-                    || coord.run(&plan, &hg, policy).unwrap(),
+                    || session.run().unwrap(),
                 );
-                let run = coord.run(&plan, &hg, policy).unwrap();
+                let run = session.run().unwrap();
                 let makespan = run.report.modeled_makespan_ns;
                 let base = *baseline.get_or_insert(makespan);
                 println!(

@@ -8,11 +8,11 @@
 //! (QUICK_BENCH=1 switches to CI scale.)
 
 use hgnn_char::bench::{bench, header, BenchConfig};
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
-use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::{Profile, StageId};
 use hgnn_char::report;
+use hgnn_char::session::Session;
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -31,17 +31,21 @@ fn main() {
     let mut profiles: Vec<Profile> = Vec::new();
     for model in ModelId::HGNNS {
         for dataset in DatasetId::HETERO {
-            let hg = datasets::build(dataset, &scale()).unwrap();
-            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
-            let mut engine = Engine::new(Backend::native_no_traces());
-            // wallclock of the native execution (for the bench harness)
+            let mut session = Session::builder()
+                .dataset(dataset)
+                .scale(scale())
+                .model(model)
+                .build()
+                .unwrap();
+            // wallclock of the native execution (for the bench harness);
+            // the session reuses graph/plan/scratch across iterations
             let r = bench(
                 &format!("{}/{}", model.name(), dataset.abbrev()),
                 &BenchConfig { iters: cfg.iters.min(3), ..cfg.clone() },
-                || engine.run(&plan, &hg).unwrap(),
+                || session.run().unwrap(),
             );
             println!("{}", r.line());
-            let run = engine.run(&plan, &hg).unwrap();
+            let run = session.run().unwrap();
             println!("  {}", report::fig2_row(model.name(), dataset.abbrev(), &run.profile));
             profiles.push(run.profile);
         }

@@ -7,12 +7,12 @@
 //! Run: `cargo bench --bench fig3_kernel_types`
 
 use hgnn_char::bench::header;
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
 use hgnn_char::kernels::KernelType;
-use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
+use hgnn_char::session::Session;
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -31,9 +31,14 @@ fn main() {
     let mut checks_total = 0;
     for model in ModelId::HGNNS {
         for dataset in DatasetId::HETERO {
-            let hg = datasets::build(dataset, &scale()).unwrap();
-            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
-            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+            let run = Session::builder()
+                .dataset(dataset)
+                .scale(scale())
+                .model(model)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
             print!("{}", report::fig3_rows(model.name(), dataset.abbrev(), &run.profile));
 
             // structural checks against the paper's qualitative claims

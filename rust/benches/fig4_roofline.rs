@@ -10,12 +10,13 @@
 use std::collections::BTreeMap;
 
 use hgnn_char::bench::header;
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::datasets::DatasetScale;
+use hgnn_char::datasets::DatasetId;
 use hgnn_char::gpumodel::{roofline, GpuModel};
-use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
+use hgnn_char::session::{Profiling, Session};
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -30,9 +31,15 @@ fn main() {
         "Fig 4 — kernels on the FP32 roofline (HAN, DBLP)",
         "AI and achieved GFLOP/s per kernel, modeled T4",
     );
-    let hg = datasets::build(DatasetId::Dblp, &scale()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let run = Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(scale())
+        .model(ModelId::Han)
+        .profiling(Profiling::Traces)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     let gpu = GpuModel::default();
 
     // aggregate by kernel name across stages (the paper plots one point

@@ -10,11 +10,10 @@
 //! Run: `cargo bench --bench fig5_hgnn_vs_gnn`
 
 use hgnn_char::bench::header;
-use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::Backend;
-use hgnn_char::models::{self, sweeps, ModelConfig};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::{sweeps, ModelId};
 use hgnn_char::report;
+use hgnn_char::session::{SchedulePolicy, Session};
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -69,11 +68,14 @@ fn main() {
 
     // ---------------- (c) timeline ---------------------------------------
     println!("--- Fig 5(c): timeline (HAN, DBLP, 4 NA streams) ---");
-    let hg = datasets::build(DatasetId::Dblp, &scale()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let run = coord
-        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 4 })
+    let run = Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(scale())
+        .model(ModelId::Han)
+        .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+        .build()
+        .unwrap()
+        .run()
         .unwrap();
     let tl = run.profile.timeline();
     println!("{}", tl.render(96));

@@ -9,10 +9,12 @@
 //! Run: `cargo bench --bench kernel_microbench`
 
 use hgnn_char::bench::{bench, header, BenchConfig};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
 use hgnn_char::graph::sparse::Coo;
 use hgnn_char::kernels::dense::{sgemm_compute, sgemm_naive, GemmBlocking};
 use hgnn_char::kernels::sparse_ops::{spmm_csr, SpmmReduce};
 use hgnn_char::kernels::Ctx;
+use hgnn_char::session::Session;
 use hgnn_char::tensor::Tensor;
 use hgnn_char::util::Pcg32;
 
@@ -67,6 +69,44 @@ fn main() {
         let gbps = (nnz * f * 4) as f64 / r.wall.median;
         println!("{}   gather {gbps:.2} GB/s", r.line());
     }
+
+    // ---------------- Session repeat-run reuse -----------------------------
+    // The seed rebuilt graph + plan + engine at every call site
+    // (`Engine::new(Backend::native_no_traces())` ~30 times across the
+    // tree); a Session builds once and reuses plan, weights, and the
+    // kernel-context scratch across runs. Three rungs of reuse:
+    //   cold      — rebuild everything per iteration (seed behavior)
+    //   warm      — one session, full forward per iteration
+    //   batch     — one session, cached embeddings served per iteration
+    println!("\n--- Session repeat-run reuse (HAN/IMDB, ci scale) ---");
+    let scfg = BenchConfig { iters: cfg.iters.min(5), ..cfg.clone() };
+    let r_cold = bench("cold: rebuild session per run", &scfg, || {
+        Session::builder()
+            .dataset(DatasetId::Imdb)
+            .scale(DatasetScale::ci())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    });
+    println!("{}", r_cold.line());
+    let mut session = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .build()
+        .unwrap();
+    let r_warm = bench("warm: reused session, full run", &scfg, || session.run().unwrap());
+    println!("{}", r_warm.line());
+    let ids: Vec<u32> = (0..64).collect();
+    let r_batch = bench("batch: cached embeddings, 64 ids", &scfg, || {
+        session.run_batch(&ids).unwrap()
+    });
+    println!("{}", r_batch.line());
+    println!(
+        "repeat-run speedup: warm {:.2}x, batch {:.0}x vs cold rebuild",
+        r_cold.wall.median / r_warm.wall.median.max(1.0),
+        r_cold.wall.median / r_batch.wall.median.max(1.0),
+    );
 
     // ---------------- PJRT AOT kernels -------------------------------------
     println!("\n--- PJRT AOT Pallas kernels (requires `make artifacts`) ---");

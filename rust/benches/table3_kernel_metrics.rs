@@ -15,11 +15,11 @@
 //! Run: `cargo bench --bench table3_kernel_metrics`
 
 use hgnn_char::bench::header;
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
-use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
+use hgnn_char::session::{Profiling, Session};
 
 fn scale() -> DatasetScale {
     if std::env::var("QUICK_BENCH").is_ok() {
@@ -34,9 +34,15 @@ fn main() {
         "Table 3 — per-kernel metrics (HAN, DBLP)",
         "modeled Nsight-Compute-style counters per kernel",
     );
-    let hg = datasets::build(DatasetId::Dblp, &scale()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let run = Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(scale())
+        .model(ModelId::Han)
+        .profiling(Profiling::Traces)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
 
     for stage in StageId::GPU_STAGES {
         println!("{}", report::table3_stage(stage, &run.profile.kernel_table(stage)));

@@ -1,8 +1,9 @@
 //! Tiny CLI argument parser (clap is not in the offline vendor set).
 //!
 //! Grammar: `hgnn-char <command> [positional...] [--flag [value]]...`.
-//! Flags with no following value (or followed by another flag) are
-//! booleans.
+//! Both `--key value` and `--key=value` bind; a value token may be a
+//! negative number (`--offset -3`, `--offset=-3`). Flags with no
+//! following value (or followed by another flag) are booleans.
 
 use std::collections::BTreeMap;
 
@@ -29,6 +30,12 @@ impl Args {
         }
         while let Some(tok) = iter.next() {
             if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` binds inline (empty value allowed:
+                // `--name=` is the empty string, not a boolean)
+                if let Some((key, value)) = key.split_once('=') {
+                    args.flags.insert(key.to_string(), value.to_string());
+                    continue;
+                }
                 let value = match iter.peek() {
                     Some(next) if !next.starts_with("--") => iter.next().unwrap(),
                     _ => "true".to_string(),
@@ -59,6 +66,17 @@ impl Args {
 
     /// Usize flag with default.
     pub fn flag_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::config(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    /// i64 flag with default (accepts negative values: `--shift -3` or
+    /// `--shift=-3`).
+    pub fn flag_i64(&self, key: &str, default: i64) -> Result<i64> {
         match self.flags.get(key) {
             None => Ok(default),
             Some(v) => v
@@ -172,6 +190,46 @@ mod tests {
     fn empty_args() {
         let a = Args::parse(Vec::<String>::new());
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn key_equals_value_syntax() {
+        let a = parse("run --model=han --workers=4 --dropout=0.5 --verbose");
+        assert_eq!(a.flag_str("model", ""), "han");
+        assert_eq!(a.flag_usize("workers", 1).unwrap(), 4);
+        assert_eq!(a.flag_f64("dropout", 0.0).unwrap(), 0.5);
+        assert!(a.has("verbose"));
+        // the '=' form must NOT create a mangled "model=han" key
+        assert!(!a.has("model=han"));
+        // and must not steal the next token
+        let b = parse("figure 5a --scale=ci");
+        assert_eq!(b.positional, vec!["5a"]);
+        assert_eq!(b.scale().unwrap(), crate::datasets::DatasetScale::ci());
+    }
+
+    #[test]
+    fn equals_value_edge_cases() {
+        // empty value stays the empty string (distinct from boolean true)
+        let a = parse("x --name=");
+        assert_eq!(a.flag_str("name", "def"), "");
+        // only the first '=' splits
+        let a = parse("x --expr=a=b");
+        assert_eq!(a.flag_str("expr", ""), "a=b");
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // space-separated: a negative number is a value, not a flag
+        let a = parse("run --shift -3 --temp -0.5");
+        assert_eq!(a.flag_i64("shift", 0).unwrap(), -3);
+        assert_eq!(a.flag_f64("temp", 0.0).unwrap(), -0.5);
+        // '=' form
+        let a = parse("run --shift=-7 --temp=-2.25");
+        assert_eq!(a.flag_i64("shift", 0).unwrap(), -7);
+        assert_eq!(a.flag_f64("temp", 0.0).unwrap(), -2.25);
+        // defaults & errors
+        assert_eq!(a.flag_i64("missing", -1).unwrap(), -1);
+        assert!(parse("run --shift=nope").flag_i64("shift", 0).is_err());
     }
 
     #[test]

@@ -1,83 +1,37 @@
-//! The L3 coordinator: scheduling policies over the staged execution.
+//! The L3 coordinator — scheduling analysis plus deprecated shims.
 //!
 //! The paper's §4.5/§5 observations are about *schedules*, not kernels:
 //! Neighbor Aggregation of different subgraphs is independent
-//! (inter-subgraph parallelism, Fig 5c), a hard barrier separates NA from
-//! SA, and the §5 guidelines propose execution-bound-aware kernel mixing
-//! and subgraph-level FP+NA fusion. This module implements those
-//! schedules over the engine's stage entry points:
+//! (inter-subgraph parallelism, Fig 5c), a hard barrier separates NA
+//! from SA, and the §5 guidelines propose execution-bound-aware kernel
+//! mixing and subgraph-level FP+NA fusion. Those schedules are now
+//! implemented once, in [`crate::session::exec`], and reached through
+//! [`crate::session::Session`] with any [`SchedulePolicy`] × any
+//! [`crate::session::ExecBackend`]. What remains here:
 //!
-//! * [`SchedulePolicy::Sequential`] — DGL's default serial stream (what
-//!   the paper profiles).
-//! * [`SchedulePolicy::InterSubgraphParallel`] — NA subgraphs spread over
-//!   `workers` concurrent streams (LPT assignment).
-//! * [`SchedulePolicy::FusedSubgraph`] — §5 guideline 2: each worker task
-//!   fuses a subgraph's Feature Projection with its Neighbor Aggregation,
-//!   so FP work overlaps other subgraphs' NA instead of serializing.
-//! * [`SchedulePolicy::BoundAwareMixing`] — §5 guideline 1: co-schedule
-//!   compute-bound (DM) kernels with memory-bound (TB/EW/DR) kernels;
-//!   modeled co-run time is `max` of the two resource demands.
-//!
-//! Native execution happens on real threads (crossbeam scoped); the
-//! *makespan* numbers reported for the ablations come from the modeled
-//! T4 schedule, which is the honest instrument available without the
-//! paper's hardware (DESIGN.md §4).
+//! * [`schedule`] — LPT assignment and the modeled-makespan analysis
+//!   ([`ScheduleReport`]), the instrument behind the ablations;
+//! * [`serve`] — the dynamic-batching serving loop, which executes
+//!   batches through a session;
+//! * [`Coordinator`] — a thin, deprecated wrapper kept so existing
+//!   `Coordinator::new(backend).run(plan, hg, policy)` call sites keep
+//!   working; it forwards to the session executor.
 
 pub mod schedule;
 pub mod serve;
 
-use std::collections::BTreeMap;
-
-use crossbeam_utils::thread as cb_thread;
-
-use crate::engine::{feature_projection, neighbor_aggregation, semantic_aggregation, Backend};
+use crate::engine::Backend;
 use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
-use crate::kernels::dense::GemmBlocking;
-use crate::kernels::Ctx;
 use crate::models::ModelPlan;
-use crate::profiler::{Profile, StageId};
+use crate::profiler::Profile;
+use crate::session::{exec, NativeBackend};
 use crate::tensor::Tensor;
-use crate::{Error, Result};
+use crate::Result;
 
+pub use crate::session::SchedulePolicy;
 pub use schedule::{lpt_assign, ScheduleReport};
 pub use serve::{ServeConfig, ServeStats, Server};
-
-/// How the coordinator schedules the stages.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SchedulePolicy {
-    /// Serial FP → NA(sg0..sgP) → SA, single stream.
-    Sequential,
-    /// FP serial, NA subgraphs across `workers` streams, barrier, SA.
-    InterSubgraphParallel {
-        /// Concurrent NA streams.
-        workers: usize,
-    },
-    /// Per-subgraph (FP+NA) fused tasks across `workers` streams.
-    FusedSubgraph {
-        /// Concurrent task streams.
-        workers: usize,
-    },
-    /// Inter-subgraph parallel + compute/memory co-scheduling analysis.
-    BoundAwareMixing {
-        /// Concurrent NA streams.
-        workers: usize,
-    },
-}
-
-impl SchedulePolicy {
-    /// Short label for reports.
-    pub fn label(self) -> String {
-        match self {
-            SchedulePolicy::Sequential => "sequential".into(),
-            SchedulePolicy::InterSubgraphParallel { workers } => {
-                format!("inter-subgraph x{workers}")
-            }
-            SchedulePolicy::FusedSubgraph { workers } => format!("fused-subgraph x{workers}"),
-            SchedulePolicy::BoundAwareMixing { workers } => format!("bound-aware-mix x{workers}"),
-        }
-    }
-}
 
 /// Coordinator output: results + profile + schedule analysis.
 #[derive(Debug)]
@@ -92,37 +46,27 @@ pub struct CoordRun {
     pub report: ScheduleReport,
 }
 
-/// The coordinator.
+/// The coordinator — a deprecated shim over the session executor; see
+/// the module docs. New code: [`crate::session::Session`] with
+/// `.schedule(policy)`.
 #[derive(Debug)]
 pub struct Coordinator {
-    backend: Backend,
+    backend: NativeBackend,
     gpu: GpuModel,
 }
 
 impl Coordinator {
     /// New coordinator over a backend with the default T4 model.
+    ///
+    /// **Deprecated:** build a [`crate::session::Session`] instead.
     pub fn new(backend: Backend) -> Coordinator {
-        Coordinator { backend, gpu: GpuModel::default() }
+        Coordinator { backend: NativeBackend::from(backend), gpu: GpuModel::default() }
     }
 
     /// Override the GPU model.
     pub fn with_gpu_model(mut self, gpu: GpuModel) -> Coordinator {
         self.gpu = gpu;
         self
-    }
-
-    fn blocking(&self) -> GemmBlocking {
-        match self.backend {
-            Backend::Native { blocking, .. } => blocking,
-        }
-    }
-
-    fn mk_ctx(&self) -> Ctx {
-        match self.backend {
-            Backend::Native { record_traces, .. } => {
-                Ctx { events: Vec::new(), record_traces }
-            }
-        }
     }
 
     /// Execute a plan under a scheduling policy.
@@ -132,218 +76,17 @@ impl Coordinator {
         hg: &HeteroGraph,
         policy: SchedulePolicy,
     ) -> Result<CoordRun> {
-        match policy {
-            SchedulePolicy::Sequential => self.run_scheduled(plan, hg, 1, false, policy),
-            SchedulePolicy::InterSubgraphParallel { workers } => {
-                self.run_scheduled(plan, hg, workers.max(1), false, policy)
-            }
-            SchedulePolicy::FusedSubgraph { workers } => {
-                self.run_fused(plan, hg, workers.max(1), policy)
-            }
-            SchedulePolicy::BoundAwareMixing { workers } => {
-                self.run_scheduled(plan, hg, workers.max(1), true, policy)
-            }
-        }
-    }
-
-    /// FP serial → NA across workers (real threads) → barrier → SA.
-    fn run_scheduled(
-        &self,
-        plan: &ModelPlan,
-        hg: &HeteroGraph,
-        workers: usize,
-        mixing: bool,
-        policy: SchedulePolicy,
-    ) -> Result<CoordRun> {
-        let blocking = self.blocking();
-        let mut profile = Profile {
-            subgraph_build_nanos: plan.subgraphs.build_nanos,
-            ..Default::default()
+        let mut scratch = crate::kernels::Ctx {
+            events: Vec::new(),
+            record_traces: self.backend.record_traces,
         };
-
-        // ② FP (single stream, worker 0)
-        let mut ctx = self.mk_ctx();
-        let projected = feature_projection(&mut ctx, plan, hg, blocking)?;
-        profile.record(ctx.drain(), StageId::FeatureProjection, None, 0, 0);
-
-        // estimate per-subgraph NA cost for LPT assignment (nnz is the
-        // dominant cost driver for every NA variant)
-        let costs: Vec<f64> = plan
-            .subgraphs
-            .subgraphs
-            .iter()
-            .map(|sg| sg.adj.nnz() as f64 + 1.0)
-            .collect();
-        let assignment = lpt_assign(&costs, workers);
-
-        // ③ NA on real threads, one per worker
-        let p = plan.num_subgraphs();
-        let mut results: Vec<Option<(usize, Vec<crate::kernels::KernelExec>, Tensor)>> =
-            (0..p).map(|_| None).collect();
-        let record_traces = matches!(self.backend, Backend::Native { record_traces: true, .. });
-        let worker_outputs: Result<Vec<Vec<(usize, Vec<crate::kernels::KernelExec>, Tensor)>>> =
-            cb_thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for w in 0..workers {
-                    let my_subgraphs: Vec<usize> = (0..p)
-                        .filter(|&i| assignment[i] == w)
-                        .collect();
-                    let projected = &projected;
-                    let handle = scope.spawn(move |_| -> Result<Vec<_>> {
-                        let mut out = Vec::new();
-                        for i in my_subgraphs {
-                            let mut wctx =
-                                Ctx { events: Vec::new(), record_traces };
-                            let t = neighbor_aggregation(
-                                &mut wctx, plan, i, projected, blocking,
-                            )?;
-                            out.push((i, wctx.drain(), t));
-                        }
-                        Ok(out)
-                    });
-                    handles.push(handle);
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("NA worker panicked"))
-                    .collect()
-            })
-            .expect("thread scope");
-        for per_worker in worker_outputs? {
-            for (i, events, t) in per_worker {
-                results[i] = Some((i, events, t));
-            }
-        }
-        let mut na_results = Vec::with_capacity(p);
-        for (i, slot) in results.into_iter().enumerate() {
-            let (_, events, t) = slot.ok_or_else(|| {
-                Error::config(format!("subgraph {i} was never scheduled"))
-            })?;
-            profile.record(
-                events,
-                StageId::NeighborAggregation,
-                Some(&plan.subgraphs.subgraphs[i].name),
-                assignment[i],
-                0,
-            );
-            na_results.push(t);
-        }
-
-        // barrier, then ④ SA on worker 0
-        let mut ctx = self.mk_ctx();
-        let output = semantic_aggregation(&mut ctx, plan, &na_results, blocking)?;
-        profile.record(ctx.drain(), StageId::SemanticAggregation, None, 0, 0);
-
-        profile.attach_metrics(&self.gpu);
-        let report = schedule::analyze(&profile, workers, mixing, policy, &self.gpu);
-        Ok(CoordRun { output, na_results, profile, report })
-    }
-
-    /// §5 guideline 2: per-subgraph fused (FP + NA) tasks.
-    ///
-    /// Each worker projects the types *its* subgraphs need (first use
-    /// wins; shared types are projected once, by the worker that reaches
-    /// them first in task order) and runs NA immediately — FP no longer
-    /// serializes ahead of all NA.
-    fn run_fused(
-        &self,
-        plan: &ModelPlan,
-        hg: &HeteroGraph,
-        workers: usize,
-        policy: SchedulePolicy,
-    ) -> Result<CoordRun> {
-        let blocking = self.blocking();
-        let mut profile = Profile {
-            subgraph_build_nanos: plan.subgraphs.build_nanos,
-            ..Default::default()
-        };
-
-        // assign subgraphs to workers by cost (nnz + projection need)
-        let costs: Vec<f64> = plan
-            .subgraphs
-            .subgraphs
-            .iter()
-            .map(|sg| sg.adj.nnz() as f64 + 1.0)
-            .collect();
-        let assignment = lpt_assign(&costs, workers);
-
-        // each worker owns the projections its tasks need; types shared
-        // across workers are projected redundantly — that duplication is
-        // the fusion trade-off the ablation quantifies.
-        let p = plan.num_subgraphs();
-        let record_traces = matches!(self.backend, Backend::Native { record_traces: true, .. });
-        type TaskOut = (usize, Vec<crate::kernels::KernelExec>, Tensor);
-        let worker_outputs: Result<Vec<Vec<TaskOut>>> = cb_thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for w in 0..workers {
-                let my_subgraphs: Vec<usize> =
-                    (0..p).filter(|&i| assignment[i] == w).collect();
-                let handle = scope.spawn(move |_| -> Result<Vec<TaskOut>> {
-                    let mut out = Vec::new();
-                    let mut local_proj: BTreeMap<usize, Tensor> = BTreeMap::new();
-                    for i in my_subgraphs {
-                        let mut wctx = Ctx { events: Vec::new(), record_traces };
-                        let sg = &plan.subgraphs.subgraphs[i];
-                        for ty in [sg.src_type, sg.dst_type] {
-                            if !local_proj.contains_key(&ty) {
-                                if let Some(w_ty) = plan.weights.proj.get(&ty) {
-                                    let x = plan
-                                        .weights
-                                        .embed
-                                        .get(&ty)
-                                        .unwrap_or_else(|| hg.features(ty));
-                                    let h = crate::kernels::dense::sgemm(
-                                        &mut wctx, x, w_ty, blocking,
-                                    )?;
-                                    local_proj.insert(ty, h);
-                                }
-                            }
-                        }
-                        let t = neighbor_aggregation(
-                            &mut wctx, plan, i, &local_proj, blocking,
-                        )?;
-                        out.push((i, wctx.drain(), t));
-                    }
-                    Ok(out)
-                });
-                handles.push(handle);
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("fused worker panicked"))
-                .collect()
+        let run = exec::execute(&self.backend, &self.gpu, plan, hg, policy, &mut scratch)?;
+        Ok(CoordRun {
+            output: run.output,
+            na_results: run.na_results,
+            profile: run.profile,
+            report: run.report,
         })
-        .expect("thread scope");
-
-        let mut results: Vec<Option<Tensor>> = (0..p).map(|_| None).collect();
-        for per_worker in worker_outputs? {
-            for (i, events, t) in per_worker {
-                // fused tasks attribute *all* their kernels (including the
-                // projection sgemms) to NA — that is what fusion means
-                // for the schedule
-                profile.record(
-                    events,
-                    StageId::NeighborAggregation,
-                    Some(&plan.subgraphs.subgraphs[i].name),
-                    assignment[i],
-                    0,
-                );
-                results[i] = Some(t);
-            }
-        }
-        let na_results: Vec<Tensor> = results
-            .into_iter()
-            .enumerate()
-            .map(|(i, r)| r.ok_or_else(|| Error::config(format!("subgraph {i} missing"))))
-            .collect::<Result<_>>()?;
-
-        let mut ctx = self.mk_ctx();
-        let output = semantic_aggregation(&mut ctx, plan, &na_results, blocking)?;
-        profile.record(ctx.drain(), StageId::SemanticAggregation, None, 0, 0);
-
-        profile.attach_metrics(&self.gpu);
-        let report = schedule::analyze(&profile, workers, false, policy, &self.gpu);
-        Ok(CoordRun { output, na_results, profile, report })
     }
 }
 
@@ -351,7 +94,8 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::datasets::{self, DatasetId, DatasetScale};
-    use crate::models::{self, ModelConfig, ModelId};
+    use crate::models::{self, ModelConfig};
+    use crate::profiler::StageId;
 
     fn setup() -> (HeteroGraph, ModelPlan) {
         let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();

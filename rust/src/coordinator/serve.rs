@@ -3,14 +3,18 @@
 //! A minimal but real serving path in the vLLM-router mold: clients
 //! submit embedding requests for target nodes; a dispatcher thread
 //! batches them (size- and time-bounded dynamic batching) and hands each
-//! batch to an executor (the PJRT-compiled HAN forward in
-//! `examples/e2e_inference.rs`, or the native engine in tests). Python
-//! never appears on this path.
+//! batch to an executor. The canonical executor is a
+//! [`crate::session::Session`] built *inside* the dispatcher thread via
+//! [`Server::start_session`] — any backend (native or PJRT) × any
+//! schedule policy, with the plan, weights and compiled artifacts reused
+//! across batches instead of rebuilt per call. Python never appears on
+//! this path.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::session::SessionBuilder;
 use crate::util::stats::Summary;
 use crate::{Error, Result};
 
@@ -156,13 +160,32 @@ impl Server {
                         }
                     }
                     Err(e) => {
-                        log::error!("batch execution failed: {e}");
+                        eprintln!("serve: batch execution failed: {e}");
                         // drop the batch; clients see a closed channel
                     }
                 }
             }
         });
         Server { tx: Some(tx), handle: Some(handle), stats, started: Instant::now() }
+    }
+
+    /// Start the dispatcher around a [`crate::session::Session`] built
+    /// from `builder` *inside* the dispatcher thread — the one serving
+    /// entry point for any backend × any schedule policy. Non-`Send`
+    /// backends (PJRT executables hold `Rc` internals) are constructed
+    /// where they run; the session's plan, weights, compiled artifacts
+    /// and cached embeddings are reused across batches. If the session
+    /// fails to build, every batch reports the build error.
+    pub fn start_session(config: ServeConfig, builder: SessionBuilder) -> Server {
+        Self::start_with(config, move || {
+            let mut session = builder.build().map_err(|e| e.to_string());
+            move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+                match session.as_mut() {
+                    Ok(s) => s.run_batch(ids),
+                    Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+                }
+            }
+        })
     }
 
     /// Submit a request; returns the reply receiver.
@@ -176,14 +199,13 @@ impl Server {
         Ok(rx)
     }
 
-    /// Stop accepting requests, drain, and return final statistics.
-    pub fn shutdown(mut self) -> ServeStats {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    /// Snapshot of the current statistics without stopping the server.
+    pub fn stats_snapshot(&self) -> ServeStats {
         let elapsed = self.started.elapsed().as_secs_f64();
-        let s = self.stats.lock().unwrap();
+        Self::mk_stats(&self.stats.lock().unwrap(), elapsed)
+    }
+
+    fn mk_stats(s: &RawStats, elapsed: f64) -> ServeStats {
         ServeStats {
             completed: s.completed,
             batches: s.batches,
@@ -195,6 +217,33 @@ impl Server {
                 s.batch_sizes.iter().sum::<usize>() as f64 / s.batch_sizes.len() as f64
             },
         }
+    }
+
+    /// Stop accepting requests, drain the queue, and join the
+    /// dispatcher. Idempotent with [`Drop`]: `shutdown` after an
+    /// implicit drop-join returns whatever completed.
+    fn stop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting requests, drain, and return final statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let s = self.stats.lock().unwrap();
+        Self::mk_stats(&s, elapsed)
+    }
+}
+
+impl Drop for Server {
+    /// Dropping a server without calling [`Server::shutdown`] still
+    /// drains in-flight requests and joins the dispatcher — no detached
+    /// thread, no lost replies.
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
@@ -274,5 +323,73 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.completed, 50);
         assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn drop_joins_dispatcher_and_drains() {
+        // dropping without shutdown() must still deliver every pending
+        // reply — Drop closes the channel and joins the dispatcher
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let rxs: Vec<_> = (0..20).map(|i| server.submit(i).unwrap()).collect();
+        drop(server);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let row = rx.try_recv().expect("drop must drain pending requests");
+            assert_eq!(row[0], i as f32);
+        }
+    }
+
+    #[test]
+    fn idle_shutdown_reports_empty_stats() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.batches, 0);
+        assert_eq!(stats.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn stats_snapshot_does_not_stop() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let rx = server.submit(3).unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let snap = server.stats_snapshot();
+        assert!(snap.completed >= 1);
+        // server still serves after a snapshot
+        let rx = server.submit(4).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn serves_through_a_session() {
+        use crate::datasets::{DatasetId, DatasetScale};
+        use crate::session::Session;
+        let builder = Session::builder()
+            .dataset(DatasetId::Imdb)
+            .scale(DatasetScale::ci());
+        let server = Server::start_session(ServeConfig::default(), builder);
+        let rxs: Vec<_> = (0..16).map(|i| server.submit(i).unwrap()).collect();
+        for rx in rxs {
+            let row = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(!row.is_empty());
+            assert!(row.iter().all(|v| v.is_finite()));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 16);
+        // the session runs the forward once and reuses it across batches,
+        // so 16 requests complete in (far) fewer forward passes than 16
+        assert!(stats.batches <= 16);
+    }
+
+    #[test]
+    fn session_build_failure_reported_per_batch() {
+        use crate::session::Session;
+        // no graph source: builder.build() fails inside the dispatcher
+        let server = Server::start_session(ServeConfig::default(), Session::builder());
+        let rx = server.submit(0).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert!(rx.try_recv().is_err(), "failed batches drop their replies");
     }
 }

@@ -1,11 +1,18 @@
-//! The staged execution engine.
+//! The staged execution engine — now a thin, deprecated shim.
 //!
-//! Walks a [`ModelPlan`] through the paper's stages ②–④ on the native
-//! kernel substrate, recording every kernel into a [`Profile`] with
-//! (stage, subgraph) attribution, then attaches modeled-T4 metrics. The
-//! coordinator (L3's scheduling contribution) reuses the per-stage entry
-//! points for parallel and fused schedules; this module is the plain
-//! sequential reference execution.
+//! The execution surface lives in [`crate::session`]: a [`Session`]
+//! composes a pluggable [`ExecBackend`] with a [`SchedulePolicy`] and a
+//! profiling level, and caches plan/graph/compiled state across runs.
+//! [`Engine`] survives as a compatibility wrapper that forwards the old
+//! `run(plan, hg)` shape to the session executor's sequential schedule;
+//! the per-stage entry points ([`feature_projection`] & friends) remain
+//! the shared substrate both the session's [`NativeBackend`] and direct
+//! callers use.
+//!
+//! [`Session`]: crate::session::Session
+//! [`ExecBackend`]: crate::session::ExecBackend
+//! [`SchedulePolicy`]: crate::session::SchedulePolicy
+//! [`NativeBackend`]: crate::session::NativeBackend
 
 pub mod stages;
 
@@ -14,17 +21,20 @@ use crate::graph::HeteroGraph;
 use crate::kernels::dense::GemmBlocking;
 use crate::kernels::Ctx;
 use crate::models::ModelPlan;
-use crate::profiler::{Profile, StageId};
+use crate::profiler::Profile;
+use crate::session::{exec, NativeBackend, SchedulePolicy};
 use crate::tensor::Tensor;
 use crate::Result;
 
 pub use stages::{feature_projection, neighbor_aggregation, semantic_aggregation};
 
-/// Execution backend selector.
+/// Execution backend selector — the legacy single-variant enum.
 ///
-/// `Native` runs the Rust kernel substrate (full profiling fidelity).
-/// The AOT PJRT path lives in [`crate::runtime`] and executes whole-model
-/// artifacts; integration tests assert both agree numerically.
+/// **Deprecated:** new code should pass a
+/// [`crate::session::NativeBackend`] (or any
+/// [`crate::session::ExecBackend`]) to [`crate::session::Session`]. This
+/// enum survives only to keep `Engine::new(Backend::native())` call
+/// sites compiling; it converts losslessly into a `NativeBackend`.
 #[derive(Debug, Clone)]
 pub enum Backend {
     /// Native Rust kernels with exact counters and gather traces.
@@ -49,29 +59,45 @@ impl Backend {
     }
 }
 
+impl From<Backend> for NativeBackend {
+    fn from(b: Backend) -> NativeBackend {
+        match b {
+            Backend::Native { blocking, record_traces } => {
+                NativeBackend { blocking, record_traces }
+            }
+        }
+    }
+}
+
 /// Everything a run produces.
 #[derive(Debug)]
 pub struct RunArtifacts {
     /// Final embeddings of the plan's target node type.
     pub output: Tensor,
     /// Per-subgraph Neighbor Aggregation results (kept for inspection
-    /// and for coordinator scheduling experiments).
+    /// and for scheduling experiments).
     pub na_results: Vec<Tensor>,
     /// The full kernel-level profile with modeled T4 metrics attached.
     pub profile: Profile,
 }
 
-/// The sequential staged engine.
+/// The sequential staged engine — a deprecated shim over the session
+/// executor ([`crate::session::exec`]); see the module docs.
 #[derive(Debug)]
 pub struct Engine {
-    backend: Backend,
+    backend: NativeBackend,
     gpu: GpuModel,
+    scratch: Ctx,
 }
 
 impl Engine {
     /// Create an engine over a backend with the default T4 model.
+    ///
+    /// **Deprecated:** build a [`crate::session::Session`] instead.
     pub fn new(backend: Backend) -> Engine {
-        Engine { backend, gpu: GpuModel::default() }
+        let backend = NativeBackend::from(backend);
+        let scratch = Ctx { events: Vec::new(), record_traces: backend.record_traces };
+        Engine { backend, gpu: GpuModel::default(), scratch }
     }
 
     /// Replace the GPU model (custom calibration experiments).
@@ -85,63 +111,20 @@ impl Engine {
         &self.gpu
     }
 
-    fn ctx(&self) -> Ctx {
-        match self.backend {
-            Backend::Native { record_traces, .. } => {
-                Ctx { events: Vec::new(), record_traces }
-            }
-        }
-    }
-
-    fn blocking(&self) -> GemmBlocking {
-        match self.backend {
-            Backend::Native { blocking, .. } => blocking,
-        }
-    }
-
     /// Run inference, profiling every kernel. Sequential schedule:
     /// FP → NA per subgraph in order → SA (the DGL execution the paper
-    /// profiles; the coordinator offers the parallel/fused schedules).
+    /// profiles; other schedules are reached through
+    /// [`crate::session::Session`]).
     pub fn run(&mut self, plan: &ModelPlan, hg: &HeteroGraph) -> Result<RunArtifacts> {
-        let mut profile = Profile {
-            subgraph_build_nanos: plan.subgraphs.build_nanos,
-            ..Default::default()
-        };
-        let blocking = self.blocking();
-        let mut wall_cursor = 0u64;
-
-        // ② Feature Projection
-        let mut ctx = self.ctx();
-        let projected = feature_projection(&mut ctx, plan, hg, blocking)?;
-        wall_cursor = record_advance(&mut profile, &mut ctx, StageId::FeatureProjection, None, wall_cursor);
-
-        // ③ Neighbor Aggregation, per subgraph
-        let mut na_results = Vec::with_capacity(plan.num_subgraphs());
-        for i in 0..plan.num_subgraphs() {
-            let name = plan.subgraphs.subgraphs[i].name.clone();
-            let out = neighbor_aggregation(&mut ctx, plan, i, &projected, blocking)?;
-            wall_cursor = record_advance(
-                &mut profile,
-                &mut ctx,
-                StageId::NeighborAggregation,
-                Some(&name),
-                wall_cursor,
-            );
-            na_results.push(out);
-        }
-
-        // ④ Semantic Aggregation
-        let output = semantic_aggregation(&mut ctx, plan, &na_results, blocking)?;
-        let _ = record_advance(
-            &mut profile,
-            &mut ctx,
-            StageId::SemanticAggregation,
-            None,
-            wall_cursor,
-        );
-
-        profile.attach_metrics(&self.gpu);
-        Ok(RunArtifacts { output, na_results, profile })
+        let run = exec::execute(
+            &self.backend,
+            &self.gpu,
+            plan,
+            hg,
+            SchedulePolicy::Sequential,
+            &mut self.scratch,
+        )?;
+        Ok(RunArtifacts { output: run.output, na_results: run.na_results, profile: run.profile })
     }
 
     /// Run only FP + NA (the Fig 5a/5b sweeps time NA in isolation).
@@ -150,46 +133,8 @@ impl Engine {
         plan: &ModelPlan,
         hg: &HeteroGraph,
     ) -> Result<(Vec<Tensor>, Profile)> {
-        let mut profile = Profile {
-            subgraph_build_nanos: plan.subgraphs.build_nanos,
-            ..Default::default()
-        };
-        let blocking = self.blocking();
-        let mut ctx = self.ctx();
-        let projected = feature_projection(&mut ctx, plan, hg, blocking)?;
-        let mut cursor =
-            record_advance(&mut profile, &mut ctx, StageId::FeatureProjection, None, 0);
-        let mut na_results = Vec::new();
-        for i in 0..plan.num_subgraphs() {
-            let name = plan.subgraphs.subgraphs[i].name.clone();
-            let out = neighbor_aggregation(&mut ctx, plan, i, &projected, blocking)?;
-            cursor = record_advance(
-                &mut profile,
-                &mut ctx,
-                StageId::NeighborAggregation,
-                Some(&name),
-                cursor,
-            );
-            na_results.push(out);
-        }
-        profile.attach_metrics(&self.gpu);
-        Ok((na_results, profile))
+        exec::run_na_only(&self.backend, &self.gpu, plan, hg, &mut self.scratch)
     }
-}
-
-/// Drain ctx events into the profile under one attribution; returns the
-/// advanced wallclock cursor.
-fn record_advance(
-    profile: &mut Profile,
-    ctx: &mut Ctx,
-    stage: StageId,
-    subgraph: Option<&str>,
-    cursor: u64,
-) -> u64 {
-    let events = ctx.drain();
-    let dur: u64 = events.iter().map(|e| e.wall_nanos).sum();
-    profile.record(events, stage, subgraph, 0, cursor);
-    cursor + dur
 }
 
 #[cfg(test)]
@@ -197,6 +142,7 @@ mod tests {
     use super::*;
     use crate::datasets::{self, DatasetId, DatasetScale};
     use crate::models::{self, ModelConfig, ModelId};
+    use crate::profiler::StageId;
 
     fn run_model(model: ModelId, dataset: DatasetId) -> RunArtifacts {
         let hg = datasets::build(dataset, &DatasetScale::ci()).unwrap();
@@ -280,5 +226,26 @@ mod tests {
             .kernels
             .iter()
             .all(|k| k.stage != StageId::SemanticAggregation));
+    }
+
+    #[test]
+    fn shim_matches_session() {
+        // the deprecated Engine shim and the Session API must produce
+        // identical results for the sequential schedule
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+        let from_engine = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+        let mut session = crate::session::Session::builder()
+            .graph(hg)
+            .plan(plan)
+            .profiling(crate::session::Profiling::Traces)
+            .build()
+            .unwrap();
+        let from_session = session.run().unwrap();
+        assert!(from_engine.output.allclose(&from_session.output, 0.0, 0.0));
+        assert_eq!(
+            from_engine.profile.kernels.len(),
+            from_session.profile.kernels.len()
+        );
     }
 }

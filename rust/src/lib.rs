@@ -11,9 +11,10 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the Rust coordinator: dataset synthesis,
-//!   metapath subgraph building, the staged execution engine, the
-//!   inter-subgraph scheduler, the profiler and GPU model, and the PJRT
-//!   runtime that loads AOT-compiled JAX/Pallas artifacts.
+//!   metapath subgraph building, the [`session`] execution surface
+//!   (schedule policies over a pluggable backend), the profiler and GPU
+//!   model, and the PJRT runtime that loads AOT-compiled JAX/Pallas
+//!   artifacts.
 //! * **L2 (`python/compile/model.py`)** — JAX stage functions lowered once
 //!   to HLO text (`make artifacts`), never on the request path.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the paper's
@@ -22,19 +23,47 @@
 //!
 //! ## Quick start
 //!
+//! Everything executes through a [`session::Session`]: a builder that
+//! composes *dataset × model × backend × schedule × profiling* and owns
+//! the graph, plan and all cached state across runs.
+//!
 //! ```no_run
 //! use hgnn_char::prelude::*;
-//! use hgnn_char::{datasets, models};
 //!
-//! // Build the DBLP heterogeneous graph at the paper's published scale.
-//! let hg = datasets::build(DatasetId::Dblp, &DatasetScale::paper()).unwrap();
-//! // HAN execution plan: metapath subgraphs + FP/NA/SA stages.
-//! let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-//! // Run on the native backend with full profiling.
-//! let mut engine = Engine::new(Backend::native());
-//! let run = engine.run(&plan, &hg).unwrap();
+//! // DBLP at the paper's published scale, HAN plan, native backend,
+//! // inter-subgraph-parallel schedule, full trace profiling.
+//! let mut session = Session::builder()
+//!     .dataset(DatasetId::Dblp)
+//!     .model(ModelId::Han)
+//!     .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+//!     .profiling(Profiling::Traces)
+//!     .build()?;
+//! let run = session.run()?;
 //! println!("{}", run.profile.stage_breakdown());
+//! println!("{}", run.report.summary());
+//!
+//! // Batched serving through the same session state (plan, weights and
+//! // compiled artifacts are reused across batches):
+//! let server = Session::builder()
+//!     .dataset(DatasetId::Imdb)
+//!     .scale(DatasetScale::ci())
+//!     .serve(ServeConfig::default());
+//! let reply = server.submit(42)?;
+//! # let _ = reply;
+//! # Ok::<(), hgnn_char::Error>(())
 //! ```
+//!
+//! Custom execution strategies implement [`session::ExecBackend`]; the
+//! trait contract and migration notes from the old `Engine`/
+//! `Coordinator` entry points are documented in `docs/API.md`.
+//!
+//! ## Features
+//!
+//! * `pjrt` — links the `xla` crate and enables real PJRT
+//!   compilation/execution of the AOT artifacts. Off by default so the
+//!   crate builds offline with zero dependencies; without it the PJRT
+//!   paths construct and read manifests but report runtime errors on
+//!   compile/execute (call sites treat that as "artifacts unavailable").
 
 pub mod bench;
 pub mod cli;
@@ -49,28 +78,51 @@ pub mod models;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod testutil;
 pub mod util;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A dataset, model, metapath or kernel was configured inconsistently.
-    #[error("invalid configuration: {0}")]
     Config(String),
     /// Shapes of tensors/graphs fed to a kernel do not line up.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// A named entity (dataset, node type, artifact, ...) was not found.
-    #[error("not found: {0}")]
     NotFound(String),
     /// PJRT runtime failures (compile/execute/transfer).
-    #[error("runtime: {0}")]
     Runtime(String),
     /// I/O failures (artifact files, report output).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::NotFound(msg) => write!(f, "not found: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -97,8 +149,32 @@ pub mod prelude {
     pub use crate::report;
     pub use crate::tensor::Tensor;
     pub use crate::{Error, Result};
-    // Filled in as the corresponding modules land:
+    // The execution surface: Session + backends + policies.
+    pub use crate::session::*;
+    // Legacy shims (Engine / Coordinator) and shared types.
     pub use crate::coordinator::*;
     pub use crate::engine::*;
     pub use crate::models::*;
+}
+
+#[cfg(test)]
+mod error_tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Error::config("x").to_string(), "invalid configuration: x");
+        assert_eq!(Error::shape("y").to_string(), "shape mismatch: y");
+        assert_eq!(Error::NotFound("z".into()).to_string(), "not found: z");
+        assert_eq!(Error::Runtime("r".into()).to_string(), "runtime: r");
+    }
+
+    #[test]
+    fn io_conversion_and_source() {
+        use std::error::Error as StdError;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(e.to_string().starts_with("io:"));
+        assert!(e.source().is_some());
+        assert!(Error::config("c").source().is_none());
+    }
 }

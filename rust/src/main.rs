@@ -1,19 +1,19 @@
 //! `hgnn-char` — the command-line entry point of the L3 coordinator.
 //!
-//! See [`hgnn_char::cli::USAGE`] for the command grammar. The figure and
-//! table commands regenerate the paper's evaluation artifacts from the
-//! native substrate + T4 model; `artifacts`/`serve` exercise the PJRT
-//! runtime on the AOT JAX/Pallas computations.
+//! See [`hgnn_char::cli::USAGE`] for the command grammar. Every command
+//! executes through a [`Session`]: the figure and table commands
+//! regenerate the paper's evaluation artifacts from the native substrate
+//! + T4 model; `artifacts` inspects the AOT manifest and `serve`
+//! exercises the batched serving loop over a session.
 
 use hgnn_char::cli::{Args, USAGE};
-use hgnn_char::coordinator::{Coordinator, SchedulePolicy, ServeConfig, Server};
-use hgnn_char::datasets::{self, DatasetId};
-use hgnn_char::engine::{Backend, Engine};
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
 use hgnn_char::gpumodel::{roofline, GpuModel};
-use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::models::{self, ModelId};
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
 use hgnn_char::runtime::PjrtRuntime;
+use hgnn_char::session::{Profiling, SchedulePolicy, ServeConfig, Session};
 use hgnn_char::Result;
 
 fn main() {
@@ -44,10 +44,22 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// Parse the shared `--policy`/`--workers` pair.
+fn policy_from(args: &Args) -> Result<SchedulePolicy> {
+    let workers = args.flag_usize("workers", 4)?;
+    match args.flag_str("policy", "seq").as_str() {
+        "seq" => Ok(SchedulePolicy::Sequential),
+        "par" => Ok(SchedulePolicy::InterSubgraphParallel { workers }),
+        "fused" => Ok(SchedulePolicy::FusedSubgraph { workers }),
+        "mix" => Ok(SchedulePolicy::BoundAwareMixing { workers }),
+        other => Err(hgnn_char::Error::config(format!("--policy '{other}'"))),
+    }
+}
+
 fn cmd_list() -> Result<()> {
     println!("datasets:");
     for id in [DatasetId::Imdb, DatasetId::Acm, DatasetId::Dblp, DatasetId::RedditSim] {
-        let hg = datasets::build(id, &hgnn_char::datasets::DatasetScale::ci())?;
+        let hg = datasets::build(id, &DatasetScale::ci())?;
         println!("  {:<12} ({})  {}", id.name(), id.abbrev(), hg.stats_line());
         if !id.default_metapaths().is_empty() {
             println!("    metapaths: {}", id.default_metapaths().join(", "));
@@ -60,21 +72,16 @@ fn cmd_list() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let model = ModelId::parse(&args.flag_str("model", "han"))?;
     let dataset = DatasetId::parse(&args.flag_str("dataset", "imdb"))?;
-    let scale = args.scale()?;
-    let workers = args.flag_usize("workers", 4)?;
-    let policy = match args.flag_str("policy", "seq").as_str() {
-        "seq" => SchedulePolicy::Sequential,
-        "par" => SchedulePolicy::InterSubgraphParallel { workers },
-        "fused" => SchedulePolicy::FusedSubgraph { workers },
-        "mix" => SchedulePolicy::BoundAwareMixing { workers },
-        other => return Err(hgnn_char::Error::config(format!("--policy '{other}'"))),
-    };
-    let hg = datasets::build(dataset, &scale)?;
-    println!("{}", hg.stats_line());
-    let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
-    println!("{}", plan.describe(&hg));
-    let coord = Coordinator::new(Backend::native());
-    let run = coord.run(&plan, &hg, policy)?;
+    let mut session = Session::builder()
+        .dataset(dataset)
+        .scale(args.scale()?)
+        .model(model)
+        .schedule(policy_from(args)?)
+        .profiling(Profiling::Traces)
+        .build()?;
+    println!("{}", session.graph().stats_line());
+    println!("{}", session.plan().describe(session.graph()));
+    let run = session.run()?;
     println!("\n{}", run.profile.stage_breakdown());
     println!("{}", run.report.summary());
     println!("\nkernel table (NA stage):");
@@ -101,14 +108,28 @@ fn cmd_figure(args: &Args) -> Result<()> {
     }
 }
 
-fn figure2(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+/// One sequential native run (counters only) — the common figure input.
+fn profile_run(
+    model: ModelId,
+    dataset: DatasetId,
+    scale: &DatasetScale,
+    profiling: Profiling,
+) -> Result<hgnn_char::session::SessionRun> {
+    Session::builder()
+        .dataset(dataset)
+        .scale(scale.clone())
+        .model(model)
+        .profiling(profiling)
+        .build()?
+        .run()
+}
+
+fn figure2(scale: &DatasetScale) -> Result<()> {
     println!("Fig 2: execution time breakdown of inference (modeled T4)");
     let mut profiles = Vec::new();
     for model in ModelId::HGNNS {
         for dataset in DatasetId::HETERO {
-            let hg = datasets::build(dataset, scale)?;
-            let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
-            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+            let run = profile_run(model, dataset, scale, Profiling::Counters)?;
             println!("{}", report::fig2_row(model.name(), dataset.abbrev(), &run.profile));
             profiles.push(run.profile);
         }
@@ -122,24 +143,20 @@ fn figure2(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
     Ok(())
 }
 
-fn figure3(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+fn figure3(scale: &DatasetScale) -> Result<()> {
     println!("Fig 3: execution time breakdown by CUDA-kernel type (modeled T4)");
     for model in ModelId::HGNNS {
         for dataset in DatasetId::HETERO {
-            let hg = datasets::build(dataset, scale)?;
-            let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
-            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+            let run = profile_run(model, dataset, scale, Profiling::Counters)?;
             print!("{}", report::fig3_rows(model.name(), dataset.abbrev(), &run.profile));
         }
     }
     Ok(())
 }
 
-fn figure4(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+fn figure4(scale: &DatasetScale) -> Result<()> {
     println!("Fig 4: kernels on the FP32 roofline — HAN on DBLP (modeled T4)");
-    let hg = datasets::build(DatasetId::Dblp, scale)?;
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    let run = Engine::new(Backend::native()).run(&plan, &hg)?;
+    let run = profile_run(ModelId::Han, DatasetId::Dblp, scale, Profiling::Traces)?;
     let model = GpuModel::default();
     let mut points = Vec::new();
     for stage in StageId::GPU_STAGES {
@@ -152,7 +169,7 @@ fn figure4(scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
     Ok(())
 }
 
-fn figure5(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+fn figure5(which: &str, scale: &DatasetScale) -> Result<()> {
     match which {
         "5a" => {
             println!("Fig 5a: NA time vs edge dropout (HAN vs GCN, Reddit-sim)");
@@ -174,11 +191,13 @@ fn figure5(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()>
         }
         "5c" => {
             println!("Fig 5c: NA/SA timeline with inter-subgraph parallelism + barrier");
-            let hg = datasets::build(DatasetId::Dblp, scale)?;
-            let plan = models::han_plan(&hg, &ModelConfig::default())?;
-            let coord = Coordinator::new(Backend::native_no_traces());
-            let run =
-                coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 4 })?;
+            let run = Session::builder()
+                .dataset(DatasetId::Dblp)
+                .scale(scale.clone())
+                .model(ModelId::Han)
+                .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+                .build()?
+                .run()?;
             println!("{}", run.profile.timeline().render(96));
         }
         _ => unreachable!(),
@@ -186,7 +205,7 @@ fn figure5(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()>
     Ok(())
 }
 
-fn figure6(which: &str, scale: &hgnn_char::datasets::DatasetScale) -> Result<()> {
+fn figure6(which: &str, scale: &DatasetScale) -> Result<()> {
     match which {
         "6a" => {
             println!("Fig 6a: subgraph sparsity vs metapath length");
@@ -234,9 +253,7 @@ fn cmd_table(args: &Args) -> Result<()> {
     }
     let scale = args.scale()?;
     println!("Table 3: profiling of major kernels, HAN on DBLP (modeled T4)");
-    let hg = datasets::build(DatasetId::Dblp, &scale)?;
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    let run = Engine::new(Backend::native()).run(&plan, &hg)?;
+    let run = profile_run(ModelId::Han, DatasetId::Dblp, &scale, Profiling::Traces)?;
     for stage in StageId::GPU_STAGES {
         println!("{}", report::table3_stage(stage, &run.profile.kernel_table(stage)));
     }
@@ -247,10 +264,13 @@ fn cmd_timeline(args: &Args) -> Result<()> {
     let model = ModelId::parse(&args.flag_str("model", "han"))?;
     let dataset = DatasetId::parse(&args.flag_str("dataset", "dblp"))?;
     let workers = args.flag_usize("workers", 4)?;
-    let hg = datasets::build(dataset, &args.scale()?)?;
-    let plan = models::build_plan(model, &hg, &ModelConfig::default())?;
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let run = coord.run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers })?;
+    let run = Session::builder()
+        .dataset(dataset)
+        .scale(args.scale()?)
+        .model(model)
+        .schedule(SchedulePolicy::InterSubgraphParallel { workers })
+        .build()?
+        .run()?;
     println!("{}", run.profile.timeline().render(96));
     println!("{}", run.report.summary());
     Ok(())
@@ -278,16 +298,14 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.flag_usize("requests", 64)?;
-    let hg = datasets::build(DatasetId::Imdb, &hgnn_char::datasets::DatasetScale::ci())?;
-    let plan = models::han_plan(&hg, &ModelConfig::default())?;
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
-    let embeddings = run.output;
-    let server = Server::start(ServeConfig::default(), move |ids: &[u32]| {
-        Ok(ids
-            .iter()
-            .map(|&i| embeddings.row(i as usize % embeddings.rows().max(1)).to_vec())
-            .collect())
-    });
+    // the whole serving path — session construction, the one-time
+    // forward, and per-batch row gathers — lives behind the dispatcher
+    let server = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(ModelId::Han)
+        .schedule(policy_from(args)?)
+        .serve(ServeConfig::default());
     let receivers: Vec<_> = (0..n as u32).map(|i| server.submit(i)).collect::<Result<_>>()?;
     for rx in receivers {
         let _ = rx.recv();

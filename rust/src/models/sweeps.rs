@@ -10,10 +10,11 @@
 //! targets.
 
 use crate::datasets::{self, DatasetId, DatasetScale};
-use crate::engine::{Backend, Engine};
+use crate::gpumodel::GpuModel;
 use crate::metapath::{self, Metapath};
 use crate::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
 use crate::profiler::StageId;
+use crate::session::{exec, ExecBackend, NativeBackend, SchedulePolicy};
 use crate::Result;
 
 /// Dropout rates the paper sweeps (decreasing ⇒ denser graph).
@@ -24,10 +25,13 @@ pub const FIG5A_DROPOUTS: [f64; 5] = [0.9, 0.75, 0.5, 0.25, 0.0];
 pub const DBLP_METAPATH_POOL: [&str; 6] =
     ["APA", "APVPA", "APTPA", "APAPA", "APVPAPA", "APTPAPA"];
 
-/// Modeled NA milliseconds of one plan.
+/// Modeled NA milliseconds of one plan (FP+NA through the session
+/// executor on the native backend, counters only).
 fn na_ms(plan: &ModelPlan, hg: &crate::graph::HeteroGraph) -> Result<f64> {
-    let mut engine = Engine::new(Backend::native_no_traces());
-    let (_, profile) = engine.run_na_only(plan, hg)?;
+    let backend = NativeBackend::new();
+    let mut ctx = backend.make_ctx();
+    let (_, profile) =
+        exec::run_na_only(&backend, &GpuModel::default(), plan, hg, &mut ctx)?;
     Ok(profile
         .stage_times()
         .get(&StageId::NeighborAggregation)
@@ -101,7 +105,16 @@ pub fn fig6b_total_time_sweep(scale: &DatasetScale) -> Result<Vec<(f64, f64)>> {
             .map(|s| Metapath::parse(s))
             .collect::<Result<_>>()?;
         let plan = models::han_plan_with(&hg, &config, &paths)?;
-        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg)?;
+        let backend = NativeBackend::new();
+        let mut ctx = backend.make_ctx();
+        let run = exec::execute(
+            &backend,
+            &GpuModel::default(),
+            &plan,
+            &hg,
+            SchedulePolicy::Sequential,
+            &mut ctx,
+        )?;
         series.push((k as f64, run.profile.total_modeled_ns() / 1e6));
     }
     Ok(series)

@@ -94,14 +94,28 @@ impl Profile {
     /// Record a batch of kernel executions under one attribution.
     pub fn record(
         &mut self,
-        execs: Vec<KernelExec>,
+        mut execs: Vec<KernelExec>,
+        stage: StageId,
+        subgraph: Option<&str>,
+        worker: usize,
+        wall_begin: u64,
+    ) {
+        self.record_drain(&mut execs, stage, subgraph, worker, wall_begin);
+    }
+
+    /// Record by draining an event buffer in place — the buffer's
+    /// allocation survives, so a session-held [`crate::kernels::Ctx`]
+    /// stops allocating after its first run.
+    pub fn record_drain(
+        &mut self,
+        execs: &mut Vec<KernelExec>,
         stage: StageId,
         subgraph: Option<&str>,
         worker: usize,
         wall_begin: u64,
     ) {
         let mut at = wall_begin;
-        for exec in execs {
+        for exec in execs.drain(..) {
             let dur = exec.wall_nanos;
             self.kernels.push(ProfiledKernel {
                 exec,

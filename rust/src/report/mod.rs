@@ -279,17 +279,14 @@ mod tests {
 
     #[test]
     fn average_stage_pct_of_uniform_profiles() {
-        use crate::engine::{Backend, Engine};
-        use crate::models::{self, ModelConfig};
-        let hg = crate::datasets::build(
-            crate::datasets::DatasetId::Imdb,
-            &crate::datasets::DatasetScale::ci(),
-        )
-        .unwrap();
-        let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-        let mut engine = Engine::new(Backend::native_no_traces());
-        let a = engine.run(&plan, &hg).unwrap().profile;
-        let b = engine.run(&plan, &hg).unwrap().profile;
+        use crate::session::Session;
+        let mut session = Session::builder()
+            .dataset(crate::datasets::DatasetId::Imdb)
+            .scale(crate::datasets::DatasetScale::ci())
+            .build()
+            .unwrap();
+        let a = session.run().unwrap().profile;
+        let b = session.run().unwrap().profile;
         let avg = average_stage_pct(&[&a, &b]);
         // identical runs => average equals each run's percentages
         for (s, v) in a.stage_percentages() {
@@ -301,15 +298,14 @@ mod tests {
 
     #[test]
     fn fig2_and_fig3_renderers_shape() {
-        use crate::engine::{Backend, Engine};
-        use crate::models::{self, ModelConfig};
-        let hg = crate::datasets::build(
-            crate::datasets::DatasetId::Acm,
-            &crate::datasets::DatasetScale::ci(),
-        )
-        .unwrap();
-        let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        use crate::session::Session;
+        let run = Session::builder()
+            .dataset(crate::datasets::DatasetId::Acm)
+            .scale(crate::datasets::DatasetScale::ci())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
         let row = fig2_row("HAN", "AC", &run.profile);
         assert!(row.contains("FP") && row.contains("NA") && row.contains("SA"));
         let rows = fig3_rows("HAN", "AC", &run.profile);

@@ -11,20 +11,49 @@
 //! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md).
+//!
+//! ## The `pjrt` feature
+//!
+//! The `xla` crate (and its bundled PJRT runtime) is a heavyweight,
+//! non-crates.io dependency. It is gated behind the **`pjrt`** cargo
+//! feature so the default build is dependency-free: without the feature,
+//! [`PjrtRuntime`] still constructs and reads manifests, but
+//! `compile`/`execute` report a clear [`Error::Runtime`]. Call sites and
+//! tests treat that exactly like a missing artifact directory.
 
 pub mod manifest;
 
 use std::path::{Path, PathBuf};
 
+use crate::graph::Csr;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
-pub use manifest::{ArtifactEntry, Manifest};
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+
+/// ELL arrays (idx, mask) as f32 tensors for a CSR, truncated at `k`
+/// slots per row, plus the truncated CSR (for native cross-checks on the
+/// identical adjacency). This is the input convention of the AOT
+/// artifacts' gather stage.
+pub fn ell_inputs(adj: &Csr, k: usize) -> (Tensor, Tensor, Csr) {
+    let (ell, _) = adj.to_ell(k);
+    let mut idx = Tensor::zeros(adj.n_rows, k);
+    let mut mask = Tensor::zeros(adj.n_rows, k);
+    for r in 0..adj.n_rows {
+        let (cols, valid) = ell.row_slots(r);
+        for j in 0..k {
+            idx.set(r, j, cols[j] as f32);
+            mask.set(r, j, if valid[j] { 1.0 } else { 0.0 });
+        }
+    }
+    (idx, mask, ell.to_csr())
+}
 
 /// A compiled PJRT executable plus its metadata.
 pub struct CompiledArtifact {
     /// Manifest entry this was compiled from.
     pub entry: ArtifactEntry,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -36,6 +65,7 @@ impl std::fmt::Debug for CompiledArtifact {
 
 /// The PJRT runtime: one CPU client, many compiled executables.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     /// Artifact directory root.
     pub root: PathBuf,
@@ -48,16 +78,33 @@ impl std::fmt::Debug for PjrtRuntime {
 }
 
 impl PjrtRuntime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
+    /// Create a PJRT runtime rooted at an artifact directory. With the
+    /// `pjrt` feature this starts a CPU PJRT client; without it, the
+    /// runtime can still read manifests but not compile or execute.
     pub fn new(root: impl AsRef<Path>) -> Result<PjrtRuntime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
-        Ok(PjrtRuntime { client, root: root.as_ref().to_path_buf() })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+            Ok(PjrtRuntime { client, root: root.as_ref().to_path_buf() })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(PjrtRuntime { root: root.as_ref().to_path_buf() })
+        }
     }
 
-    /// PJRT platform name (`"cpu"` here; the paper's testbed says `"cuda"`).
+    /// PJRT platform name (`"cpu"` here; the paper's testbed says
+    /// `"cuda"`). Without the `pjrt` feature: `"unavailable"`.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable (built without the 'pjrt' feature)".to_string()
+        }
     }
 
     /// Load the artifact manifest from `<root>/manifest.json`.
@@ -66,6 +113,7 @@ impl PjrtRuntime {
     }
 
     /// Load + compile one artifact by manifest entry.
+    #[cfg(feature = "pjrt")]
     pub fn compile(&self, entry: &ArtifactEntry) -> Result<CompiledArtifact> {
         let path = self.root.join(&entry.file);
         let proto = xla::HloModuleProto::from_text_file(
@@ -78,6 +126,18 @@ impl PjrtRuntime {
             .compile(&comp)
             .map_err(|e| Error::Runtime(format!("compile {}: {e}", entry.name)))?;
         Ok(CompiledArtifact { entry: entry.clone(), exe })
+    }
+
+    /// Load + compile one artifact by manifest entry (stub: the crate
+    /// was built without the `pjrt` feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compile(&self, entry: &ArtifactEntry) -> Result<CompiledArtifact> {
+        Err(Error::Runtime(format!(
+            "cannot compile artifact '{}': hgnn-char was built without the \
+             'pjrt' feature (rebuild with `--features pjrt` and the xla crate \
+             available)",
+            entry.name
+        )))
     }
 
     /// Load + compile an artifact by name.
@@ -93,6 +153,7 @@ impl PjrtRuntime {
 impl CompiledArtifact {
     /// Execute with dense `f32` tensor inputs; returns the tuple of
     /// output tensors (jax lowers with `return_tuple=True`).
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.entry.inputs.len() {
             return Err(Error::shape(format!(
@@ -155,6 +216,15 @@ impl CompiledArtifact {
             })
             .collect()
     }
+
+    /// Execute stub (the crate was built without the `pjrt` feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        Err(Error::Runtime(format!(
+            "cannot execute artifact '{}': built without the 'pjrt' feature",
+            self.entry.name
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -166,10 +236,13 @@ mod tests {
     // Here we test the pieces that do not need artifacts.
 
     #[test]
-    fn client_creation_and_platform() {
+    fn client_creation_and_missing_manifest() {
         let rt = PjrtRuntime::new("/nonexistent").unwrap();
-        assert_eq!(rt.platform(), "cpu");
         assert!(rt.manifest().is_err(), "missing manifest must error");
+        #[cfg(feature = "pjrt")]
+        assert_eq!(rt.platform(), "cpu");
+        #[cfg(not(feature = "pjrt"))]
+        assert!(rt.platform().contains("unavailable"));
     }
 
     #[test]
@@ -185,5 +258,27 @@ mod tests {
             outputs: vec![],
         };
         assert!(rt.compile(&entry).is_err());
+    }
+
+    #[test]
+    fn ell_inputs_shapes_and_mask() {
+        let adj = crate::graph::sparse::Coo::from_edges(
+            3,
+            4,
+            vec![(0, 0), (0, 2), (1, 3), (0, 1)],
+        )
+        .unwrap()
+        .to_csr();
+        let (idx, mask, trunc) = ell_inputs(&adj, 2);
+        assert_eq!(idx.shape(), (3, 2));
+        assert_eq!(mask.shape(), (3, 2));
+        // row 0 had degree 3, truncated to 2 slots
+        assert_eq!(mask.row(0), &[1.0, 1.0]);
+        // row 1 has one valid slot
+        assert_eq!(mask.get(1, 0), 1.0);
+        assert_eq!(mask.get(1, 1), 0.0);
+        // row 2 is empty
+        assert_eq!(mask.row(2), &[0.0, 0.0]);
+        assert_eq!(trunc.nnz(), 3, "one edge truncated away");
     }
 }

@@ -1,0 +1,506 @@
+//! The pluggable execution-backend trait and its two implementations.
+//!
+//! [`ExecBackend`] is the object-safe contract every backend satisfies:
+//! the three GPU stage entry points of the paper (② Feature Projection,
+//! ③ Neighbor Aggregation per subgraph, ④ Semantic Aggregation) plus
+//! capability flags the session's scheduler consults before committing
+//! to a plan of execution. Two backends ship in-tree:
+//!
+//! * [`NativeBackend`] — the Rust kernel substrate with exact counters
+//!   and gather traces; thread-safe, so every [`SchedulePolicy`]
+//!   (including real-thread inter-subgraph parallelism) applies.
+//! * [`PjrtBackend`] — an adapter over [`crate::runtime::PjrtRuntime`]
+//!   that executes AOT-compiled JAX/Pallas artifacts. Whole-model
+//!   artifacts (the `*_full` entries of the manifest) are served through
+//!   [`ExecBackend::run_full`]; per-stage artifacts, when lowered, are
+//!   resolved by (model, dataset, stage) manifest lookup. Compiled
+//!   executables are cached for the session's lifetime, so repeated
+//!   runs and batches never recompile (HiHGNN's cross-run reusability
+//!   argument, arXiv:2307.12765).
+//!
+//! [`SchedulePolicy`]: super::SchedulePolicy
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::engine::stages;
+use crate::graph::{HeteroGraph, NodeTypeId};
+use crate::kernels::dense::{sgemm, GemmBlocking};
+use crate::kernels::Ctx;
+use crate::models::ModelPlan;
+use crate::runtime::{ell_inputs, ArtifactEntry, CompiledArtifact, PjrtRuntime};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Per-type projected features (stage-② output), keyed by node type id.
+pub type Projected = BTreeMap<NodeTypeId, Tensor>;
+
+/// What a backend can do — consulted by the session scheduler before it
+/// commits to threads, trace-dependent analyses, or whole-model runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCaps {
+    /// Neighbor Aggregation of different subgraphs may be driven from
+    /// concurrent threads ([`ExecBackend::as_sync`] returns `Some`).
+    /// When false, parallel policies still apply — subgraphs are
+    /// assigned to *virtual* workers and the modeled schedule is
+    /// analyzed identically — but native execution stays on one thread.
+    pub parallel_na: bool,
+    /// Kernel events carry gather traces for the L2 cache model
+    /// (Table 3 / Fig 4 fidelity).
+    pub records_traces: bool,
+    /// The backend can execute a whole-model forward in one call
+    /// ([`ExecBackend::run_full`] returns `Some`). The session prefers
+    /// that path: the artifact's internal schedule subsumes the policy.
+    pub whole_model: bool,
+}
+
+/// Object-safe execution backend: the paper's stage entry points plus
+/// capability flags. See `docs/API.md` for the full contract; in short:
+///
+/// * stage methods must be deterministic for fixed inputs;
+/// * `neighbor_aggregation` for distinct subgraphs must be independent
+///   (the Fig 5c property the parallel schedules exploit);
+/// * every kernel a stage executes is recorded into the provided [`Ctx`]
+///   so the profiler can attribute it;
+/// * `as_sync` returns `Some(self)` only if the stage entry points are
+///   safe to call from multiple threads concurrently.
+pub trait ExecBackend: std::fmt::Debug {
+    /// Short backend name for reports (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Capability flags.
+    fn caps(&self) -> BackendCaps;
+
+    /// A fresh kernel-recording context configured for this backend
+    /// (trace recording on/off, etc.).
+    fn make_ctx(&self) -> Ctx;
+
+    /// Stage ②: project every node type the plan touches.
+    fn feature_projection(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+    ) -> Result<Projected>;
+
+    /// Project a single node type (used by fused FP+NA tasks). Returns
+    /// `Ok(None)` when the plan has no projection weight for the type.
+    fn project_type(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        ty: NodeTypeId,
+    ) -> Result<Option<Tensor>>;
+
+    /// Stage ③ for one subgraph of the plan.
+    fn neighbor_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        subgraph: usize,
+        projected: &Projected,
+    ) -> Result<Tensor>;
+
+    /// Stage ④: combine per-subgraph NA results into final embeddings.
+    fn semantic_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        na_results: &[Tensor],
+    ) -> Result<Tensor>;
+
+    /// Whole-model fast path: execute the entire forward in one call,
+    /// returning `Ok(None)` when the backend has no such path for this
+    /// plan. Backends with `caps().whole_model` override this.
+    fn run_full(&self, _plan: &ModelPlan, _hg: &HeteroGraph) -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
+    /// Thread-safe view of this backend, used by real-thread parallel
+    /// schedules. `None` (the default) makes the session fall back to
+    /// virtual-worker execution for parallel policies.
+    fn as_sync(&self) -> Option<&dyn SyncExecBackend> {
+        None
+    }
+}
+
+/// Marker trait for backends whose stage entry points may be called
+/// from multiple threads concurrently.
+pub trait SyncExecBackend: ExecBackend + Sync {}
+
+// ---------------------------------------------------------------------------
+// NativeBackend
+// ---------------------------------------------------------------------------
+
+/// The native Rust kernel substrate (full profiling fidelity).
+#[derive(Debug, Clone, Default)]
+pub struct NativeBackend {
+    /// sgemm cache-blocking parameters.
+    pub blocking: GemmBlocking,
+    /// Record gather traces for the L2 cache model (Table 3 / Fig 4
+    /// need this; plain breakdowns skip it to save memory).
+    pub record_traces: bool,
+}
+
+impl NativeBackend {
+    /// Native backend without trace recording (lighter memory).
+    pub fn new() -> NativeBackend {
+        NativeBackend::default()
+    }
+
+    /// Enable/disable gather-trace recording.
+    pub fn with_traces(mut self, record: bool) -> NativeBackend {
+        self.record_traces = record;
+        self
+    }
+
+    /// Override the sgemm blocking parameters.
+    pub fn with_blocking(mut self, blocking: GemmBlocking) -> NativeBackend {
+        self.blocking = blocking;
+        self
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            parallel_na: true,
+            records_traces: self.record_traces,
+            whole_model: false,
+        }
+    }
+
+    fn make_ctx(&self) -> Ctx {
+        Ctx { events: Vec::new(), record_traces: self.record_traces }
+    }
+
+    fn feature_projection(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+    ) -> Result<Projected> {
+        stages::feature_projection(ctx, plan, hg, self.blocking)
+    }
+
+    fn project_type(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        ty: NodeTypeId,
+    ) -> Result<Option<Tensor>> {
+        match plan.weights.proj.get(&ty) {
+            None => Ok(None),
+            Some(w) => {
+                let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
+                Ok(Some(sgemm(ctx, x, w, self.blocking)?))
+            }
+        }
+    }
+
+    fn neighbor_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        subgraph: usize,
+        projected: &Projected,
+    ) -> Result<Tensor> {
+        stages::neighbor_aggregation(ctx, plan, subgraph, projected, self.blocking)
+    }
+
+    fn semantic_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        na_results: &[Tensor],
+    ) -> Result<Tensor> {
+        stages::semantic_aggregation(ctx, plan, na_results, self.blocking)
+    }
+
+    fn as_sync(&self) -> Option<&dyn SyncExecBackend> {
+        Some(self)
+    }
+}
+
+impl SyncExecBackend for NativeBackend {}
+
+// ---------------------------------------------------------------------------
+// PjrtBackend
+// ---------------------------------------------------------------------------
+
+/// Adapter over [`PjrtRuntime`]: executes AOT JAX/Pallas artifacts.
+///
+/// Stage entry points resolve per-stage artifacts by manifest lookup
+/// `(model, dataset, stage)`; the `aot.py` pipeline currently lowers
+/// whole-model artifacts only, so those calls report [`Error::NotFound`]
+/// until per-stage artifacts are lowered, and the session uses the
+/// [`ExecBackend::run_full`] path instead. Compiled executables are
+/// cached per session.
+pub struct PjrtBackend {
+    rt: PjrtRuntime,
+    /// Compiled artifacts by name — the session-scoped compile cache.
+    cache: RefCell<BTreeMap<String, CompiledArtifact>>,
+}
+
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend")
+            .field("root", &self.rt.root)
+            .field("cached", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+impl PjrtBackend {
+    /// Create a PJRT backend rooted at an artifact directory. Fails when
+    /// the crate was built without the `pjrt` feature or the PJRT client
+    /// cannot start.
+    pub fn new(root: impl AsRef<Path>) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: PjrtRuntime::new(root)?, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// The artifact directory this backend loads from.
+    pub fn root(&self) -> &PathBuf {
+        &self.rt.root
+    }
+
+    /// Manifest entry for `(plan.model, hg dataset, stage)`, or an error
+    /// naming what was searched.
+    fn find_entry(&self, plan: &ModelPlan, hg: &HeteroGraph, stage: &str) -> Result<ArtifactEntry> {
+        let model = plan.model.name().to_ascii_lowercase();
+        let dataset = hg.name.to_ascii_lowercase();
+        let manifest = self.rt.manifest()?;
+        manifest
+            .entries
+            .iter()
+            .find(|e| e.model == model && e.dataset == dataset && e.stage == stage)
+            .cloned()
+            .ok_or_else(|| {
+                Error::NotFound(format!(
+                    "no '{stage}' artifact for model '{model}' on dataset '{dataset}' \
+                     in {} (run `make artifacts`)",
+                    self.rt.root.display()
+                ))
+            })
+    }
+
+    /// Compile (or fetch from the session cache) and use one artifact.
+    fn with_artifact<R>(
+        &self,
+        entry: &ArtifactEntry,
+        f: impl FnOnce(&CompiledArtifact) -> Result<R>,
+    ) -> Result<R> {
+        let mut cache = self.cache.borrow_mut();
+        if !cache.contains_key(&entry.name) {
+            let compiled = self.rt.compile(entry)?;
+            cache.insert(entry.name.clone(), compiled);
+        }
+        f(&cache[&entry.name])
+    }
+
+    /// Assemble the whole-model artifact's ordered input list from the
+    /// plan + graph, following the `aot.py` lowering convention:
+    /// `[x_target, w_proj_target, (ell_idx, ell_mask) per subgraph,
+    /// (attn_l, attn_r) per subgraph, sem_w, sem_b, sem_q]`, with the
+    /// attention/semantic tail present only for attention models.
+    fn full_inputs(&self, entry: &ArtifactEntry, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Vec<Tensor>> {
+        let p = plan.num_subgraphs();
+        if entry.inputs.len() < 2 + 2 * p {
+            return Err(Error::shape(format!(
+                "artifact {} declares {} inputs; plan needs at least {} \
+                 (x, w, 2 ELL tensors per subgraph)",
+                entry.name,
+                entry.inputs.len(),
+                2 + 2 * p
+            )));
+        }
+        // ELL width comes from the artifact's static shapes.
+        let ell_k = entry.inputs[2].shape[1];
+        let x = hg.features(plan.target).clone();
+        // Artifacts are lowered per (model, dataset-SCALE, stage); the
+        // manifest's dataset field does not carry the scale, so catch a
+        // scale mismatch here with a message that names the cause
+        // instead of failing deep inside shape validation.
+        if x.shape() != (entry.inputs[0].shape[0], entry.inputs[0].shape[1]) {
+            return Err(Error::shape(format!(
+                "artifact {} was lowered for features {:?} but the session \
+                 graph has {:?} — dataset scale mismatch (artifacts are \
+                 per-scale; e.g. *_ci_* artifacts need DatasetScale::ci())",
+                entry.name,
+                entry.inputs[0].shape,
+                x.shape()
+            )));
+        }
+        let w = plan
+            .weights
+            .proj
+            .get(&plan.target)
+            .ok_or_else(|| Error::config("plan has no projection weight for its target type"))?
+            .clone();
+        let mut inputs = vec![x, w];
+        for sg in &plan.subgraphs.subgraphs {
+            let (idx, mask, _) = ell_inputs(&sg.adj, ell_k);
+            inputs.push(idx);
+            inputs.push(mask);
+        }
+        if plan.model.uses_attention() {
+            let h = plan.config.hidden_dim;
+            let s = plan.config.semantic_dim;
+            for i in 0..p {
+                inputs.push(Tensor::from_vec(1, h, plan.weights.attn_l[i].clone())?);
+                inputs.push(Tensor::from_vec(1, h, plan.weights.attn_r[i].clone())?);
+            }
+            inputs.push(
+                plan.weights
+                    .sem_w
+                    .clone()
+                    .ok_or_else(|| Error::config("attention plan missing sem_w"))?,
+            );
+            inputs.push(Tensor::from_vec(1, s, plan.weights.sem_b.clone())?);
+            inputs.push(
+                plan.weights
+                    .sem_q
+                    .clone()
+                    .ok_or_else(|| Error::config("attention plan missing sem_q"))?,
+            );
+        }
+        Ok(inputs)
+    }
+
+    fn unsupported_stage(&self, plan: &ModelPlan, hg: &HeteroGraph, stage: &str) -> Error {
+        match self.find_entry(plan, hg, stage) {
+            Ok(_) => Error::Runtime(format!(
+                "per-stage PJRT execution of '{stage}' is not wired up yet"
+            )),
+            Err(e) => e,
+        }
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps { parallel_na: false, records_traces: false, whole_model: true }
+    }
+
+    fn make_ctx(&self) -> Ctx {
+        Ctx::default()
+    }
+
+    fn feature_projection(
+        &self,
+        _ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+    ) -> Result<Projected> {
+        Err(self.unsupported_stage(plan, hg, "fp"))
+    }
+
+    fn project_type(
+        &self,
+        _ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        _ty: NodeTypeId,
+    ) -> Result<Option<Tensor>> {
+        Err(self.unsupported_stage(plan, hg, "fp"))
+    }
+
+    fn neighbor_aggregation(
+        &self,
+        _ctx: &mut Ctx,
+        plan: &ModelPlan,
+        _subgraph: usize,
+        _projected: &Projected,
+    ) -> Result<Tensor> {
+        Err(Error::NotFound(format!(
+            "no 'na' artifact for model '{}' (whole-model PJRT execution \
+             is available via Session::run / run_full)",
+            plan.model.name()
+        )))
+    }
+
+    fn semantic_aggregation(
+        &self,
+        _ctx: &mut Ctx,
+        plan: &ModelPlan,
+        _na_results: &[Tensor],
+    ) -> Result<Tensor> {
+        Err(Error::NotFound(format!(
+            "no 'sa' artifact for model '{}' (whole-model PJRT execution \
+             is available via Session::run / run_full)",
+            plan.model.name()
+        )))
+    }
+
+    fn run_full(&self, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Option<Tensor>> {
+        let entry = self.find_entry(plan, hg, "full")?;
+        let inputs = self.full_inputs(&entry, plan, hg)?;
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let outputs = self.with_artifact(&entry, |art| art.execute(&refs))?;
+        outputs
+            .into_iter()
+            .next()
+            .map(Some)
+            .ok_or_else(|| Error::Runtime(format!("artifact {} returned no outputs", entry.name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models::{self, ModelConfig, ModelId};
+
+    #[test]
+    fn native_backend_caps_and_ctx() {
+        let b = NativeBackend::new().with_traces(true);
+        assert!(b.caps().parallel_na);
+        assert!(b.caps().records_traces);
+        assert!(!b.caps().whole_model);
+        assert!(b.make_ctx().record_traces);
+        assert!(b.as_sync().is_some());
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn native_backend_stage_roundtrip() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(ModelId::Han, &hg, &ModelConfig::default()).unwrap();
+        let b = NativeBackend::new();
+        let mut ctx = b.make_ctx();
+        let proj = b.feature_projection(&mut ctx, &plan, &hg).unwrap();
+        let na0 = b.neighbor_aggregation(&mut ctx, &plan, 0, &proj).unwrap();
+        let na1 = b.neighbor_aggregation(&mut ctx, &plan, 1, &proj).unwrap();
+        let out = b.semantic_aggregation(&mut ctx, &plan, &[na0, na1]).unwrap();
+        assert!(out.frob_norm() > 0.0);
+        // whole-model path is a native no-op
+        assert!(b.run_full(&plan, &hg).unwrap().is_none());
+    }
+
+    #[test]
+    fn native_project_type_matches_fp() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(ModelId::Han, &hg, &ModelConfig::default()).unwrap();
+        let b = NativeBackend::new();
+        let mut ctx = b.make_ctx();
+        let proj = b.feature_projection(&mut ctx, &plan, &hg).unwrap();
+        for (&ty, expect) in &proj {
+            let got = b.project_type(&mut ctx, &plan, &hg, ty).unwrap().unwrap();
+            assert!(got.allclose(expect, 0.0, 0.0));
+        }
+        // a type with no projection weight
+        let missing = hg.node_types().len() + 7;
+        assert!(b.project_type(&mut ctx, &plan, &hg, missing).unwrap().is_none());
+    }
+}

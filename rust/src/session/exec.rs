@@ -1,0 +1,417 @@
+//! The session's schedule executor: one code path driving any
+//! [`ExecBackend`] under any [`SchedulePolicy`].
+//!
+//! This subsumes what `Engine::run` (sequential) and the old
+//! `Coordinator` (parallel / fused / mixing) used to implement
+//! separately. Policies that spread Neighbor Aggregation over workers
+//! use real threads when the backend is thread-safe
+//! ([`ExecBackend::as_sync`]); otherwise the same worker assignment is
+//! executed on one thread ("virtual workers") and the modeled schedule
+//! analysis — the honest instrument, per DESIGN.md §4 — is identical.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::schedule::{self, lpt_assign, ScheduleReport};
+use crate::gpumodel::GpuModel;
+use crate::graph::HeteroGraph;
+use crate::kernels::{Ctx, KernelExec};
+use crate::models::ModelPlan;
+use crate::profiler::{Profile, StageId};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::backend::{ExecBackend, Projected, SyncExecBackend};
+use super::SchedulePolicy;
+
+/// Everything one staged execution produces.
+#[derive(Debug)]
+pub struct StagedRun {
+    /// Final embeddings of the plan's target node type.
+    pub output: Tensor,
+    /// Per-subgraph Neighbor Aggregation results.
+    pub na_results: Vec<Tensor>,
+    /// Kernel-level profile (worker-attributed, modeled metrics attached).
+    pub profile: Profile,
+    /// Modeled schedule analysis.
+    pub report: ScheduleReport,
+}
+
+/// Per-subgraph NA cost estimate for LPT assignment (nnz dominates every
+/// NA variant).
+fn na_costs(plan: &ModelPlan) -> Vec<f64> {
+    plan.subgraphs
+        .subgraphs
+        .iter()
+        .map(|sg| sg.adj.nnz() as f64 + 1.0)
+        .collect()
+}
+
+/// Drain ctx events into the profile under one attribution; returns the
+/// advanced wallclock cursor.
+fn record_advance(
+    profile: &mut Profile,
+    ctx: &mut Ctx,
+    stage: StageId,
+    subgraph: Option<&str>,
+    worker: usize,
+    cursor: u64,
+) -> u64 {
+    let dur: u64 = ctx.events.iter().map(|e| e.wall_nanos).sum();
+    profile.record_drain(&mut ctx.events, stage, subgraph, worker, cursor);
+    cursor + dur
+}
+
+/// Execute `plan` on `backend` under `policy`. `scratch` is the
+/// session-owned kernel context reused across runs (its event buffer's
+/// allocation survives, so repeat runs skip the warm-up allocations).
+pub fn execute(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    policy: SchedulePolicy,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    // a previous run that errored mid-stage may have left events behind;
+    // they must not leak into this run's profile
+    scratch.events.clear();
+    match policy {
+        SchedulePolicy::Sequential => run_sequential(backend, gpu, plan, hg, scratch),
+        SchedulePolicy::InterSubgraphParallel { workers } => {
+            run_scheduled(backend, gpu, plan, hg, workers.max(1), false, policy, scratch)
+        }
+        SchedulePolicy::BoundAwareMixing { workers } => {
+            run_scheduled(backend, gpu, plan, hg, workers.max(1), true, policy, scratch)
+        }
+        SchedulePolicy::FusedSubgraph { workers } => {
+            run_fused(backend, gpu, plan, hg, workers.max(1), policy, scratch)
+        }
+    }
+}
+
+/// FP + NA only (the Fig 5a/5b sweeps time NA in isolation).
+pub fn run_na_only(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    scratch: &mut Ctx,
+) -> Result<(Vec<Tensor>, Profile)> {
+    scratch.events.clear();
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+    let projected = backend.feature_projection(scratch, plan, hg)?;
+    let mut cursor =
+        record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
+    let mut na_results = Vec::with_capacity(plan.num_subgraphs());
+    for i in 0..plan.num_subgraphs() {
+        let name = plan.subgraphs.subgraphs[i].name.clone();
+        let out = backend.neighbor_aggregation(scratch, plan, i, &projected)?;
+        cursor = record_advance(
+            &mut profile,
+            scratch,
+            StageId::NeighborAggregation,
+            Some(name.as_str()),
+            0,
+            cursor,
+        );
+        na_results.push(out);
+    }
+    profile.attach_metrics(gpu);
+    Ok((na_results, profile))
+}
+
+/// Serial FP → NA(sg0..sgP) → SA, single stream (the DGL execution the
+/// paper profiles).
+fn run_sequential(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+    let projected = backend.feature_projection(scratch, plan, hg)?;
+    let mut cursor =
+        record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
+    let mut na_results = Vec::with_capacity(plan.num_subgraphs());
+    for i in 0..plan.num_subgraphs() {
+        let name = plan.subgraphs.subgraphs[i].name.clone();
+        let out = backend.neighbor_aggregation(scratch, plan, i, &projected)?;
+        cursor = record_advance(
+            &mut profile,
+            scratch,
+            StageId::NeighborAggregation,
+            Some(name.as_str()),
+            0,
+            cursor,
+        );
+        na_results.push(out);
+    }
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    let _ = record_advance(
+        &mut profile,
+        scratch,
+        StageId::SemanticAggregation,
+        None,
+        0,
+        cursor,
+    );
+    profile.attach_metrics(gpu);
+    let report =
+        schedule::analyze(&profile, 1, false, SchedulePolicy::Sequential, gpu);
+    Ok(StagedRun { output, na_results, profile, report })
+}
+
+type TaskOut = (usize, Vec<KernelExec>, Tensor);
+
+/// FP serial → NA across workers → barrier → SA.
+#[allow(clippy::too_many_arguments)]
+fn run_scheduled(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    workers: usize,
+    mixing: bool,
+    policy: SchedulePolicy,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+
+    // ② FP (single stream, worker 0)
+    let projected = backend.feature_projection(scratch, plan, hg)?;
+    record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
+
+    let assignment = lpt_assign(&na_costs(plan), workers);
+    let p = plan.num_subgraphs();
+
+    // ③ NA spread over workers (real threads when the backend allows)
+    let mut task_outs: Vec<Option<TaskOut>> = (0..p).map(|_| None).collect();
+    let worker_outputs = match backend.as_sync() {
+        Some(sync) if workers > 1 => {
+            parallel_na(sync, plan, &projected, &assignment, workers)?
+        }
+        _ => virtual_na(backend, plan, &projected, &assignment, workers)?,
+    };
+    for per_worker in worker_outputs {
+        for (i, events, t) in per_worker {
+            task_outs[i] = Some((i, events, t));
+        }
+    }
+    let mut na_results = Vec::with_capacity(p);
+    for (i, slot) in task_outs.into_iter().enumerate() {
+        let (_, events, t) = slot
+            .ok_or_else(|| Error::config(format!("subgraph {i} was never scheduled")))?;
+        profile.record(
+            events,
+            StageId::NeighborAggregation,
+            Some(plan.subgraphs.subgraphs[i].name.as_str()),
+            assignment[i],
+            0,
+        );
+        na_results.push(t);
+    }
+
+    // barrier, then ④ SA on worker 0
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+
+    profile.attach_metrics(gpu);
+    let report = schedule::analyze(&profile, workers, mixing, policy, gpu);
+    Ok(StagedRun { output, na_results, profile, report })
+}
+
+/// NA tasks on real threads, one per worker.
+fn parallel_na(
+    backend: &dyn SyncExecBackend,
+    plan: &ModelPlan,
+    projected: &Projected,
+    assignment: &[usize],
+    workers: usize,
+) -> Result<Vec<Vec<TaskOut>>> {
+    let p = assignment.len();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let my_subgraphs: Vec<usize> =
+                (0..p).filter(|&i| assignment[i] == w).collect();
+            handles.push(scope.spawn(move || -> Result<Vec<TaskOut>> {
+                let mut out = Vec::new();
+                for i in my_subgraphs {
+                    let mut wctx = backend.make_ctx();
+                    let t = backend.neighbor_aggregation(&mut wctx, plan, i, projected)?;
+                    out.push((i, wctx.drain(), t));
+                }
+                Ok(out)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("NA worker panicked"))
+            .collect()
+    })
+}
+
+/// NA tasks executed on the calling thread, attributed to their assigned
+/// (virtual) workers — used for backends without a thread-safe view.
+fn virtual_na(
+    backend: &dyn ExecBackend,
+    plan: &ModelPlan,
+    projected: &Projected,
+    assignment: &[usize],
+    workers: usize,
+) -> Result<Vec<Vec<TaskOut>>> {
+    let p = assignment.len();
+    let mut out: Vec<Vec<TaskOut>> = (0..workers).map(|_| Vec::new()).collect();
+    for w in 0..workers {
+        for i in (0..p).filter(|&i| assignment[i] == w) {
+            let mut wctx = backend.make_ctx();
+            let t = backend.neighbor_aggregation(&mut wctx, plan, i, projected)?;
+            out[w].push((i, wctx.drain(), t));
+        }
+    }
+    Ok(out)
+}
+
+/// §5 guideline 2: per-subgraph fused (FP + NA) tasks.
+///
+/// Each worker projects the types *its* subgraphs need (first use wins
+/// within a worker); types shared across workers are projected
+/// redundantly — that duplication is the fusion trade-off the ablation
+/// quantifies. Fused tasks attribute all their kernels (including the
+/// projection sgemms) to NA: that is what fusion means for the schedule.
+fn run_fused(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    workers: usize,
+    policy: SchedulePolicy,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+    let assignment = lpt_assign(&na_costs(plan), workers);
+    let p = plan.num_subgraphs();
+
+    let worker_outputs = match backend.as_sync() {
+        Some(sync) if workers > 1 => {
+            parallel_fused(sync, plan, hg, &assignment, workers)?
+        }
+        _ => virtual_fused(backend, plan, hg, &assignment, workers)?,
+    };
+
+    let mut results: Vec<Option<Tensor>> = (0..p).map(|_| None).collect();
+    for per_worker in worker_outputs {
+        for (i, events, t) in per_worker {
+            profile.record(
+                events,
+                StageId::NeighborAggregation,
+                Some(plan.subgraphs.subgraphs[i].name.as_str()),
+                assignment[i],
+                0,
+            );
+            results[i] = Some(t);
+        }
+    }
+    let na_results: Vec<Tensor> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.ok_or_else(|| Error::config(format!("subgraph {i} missing"))))
+        .collect::<Result<_>>()?;
+
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+
+    profile.attach_metrics(gpu);
+    let report = schedule::analyze(&profile, workers, false, policy, gpu);
+    Ok(StagedRun { output, na_results, profile, report })
+}
+
+/// One fused (FP+NA) task: project the subgraph's endpoint types into
+/// the worker-local map if absent, then aggregate. Generic over the
+/// (possibly unsized) backend so both `dyn ExecBackend` and
+/// `dyn SyncExecBackend` callers work without trait upcasting.
+fn fused_task<B: ExecBackend + ?Sized>(
+    backend: &B,
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    local_proj: &mut Projected,
+    i: usize,
+) -> Result<Tensor> {
+    let sg = &plan.subgraphs.subgraphs[i];
+    for ty in [sg.src_type, sg.dst_type] {
+        if let std::collections::btree_map::Entry::Vacant(slot) = local_proj.entry(ty) {
+            if let Some(h) = backend.project_type(ctx, plan, hg, ty)? {
+                slot.insert(h);
+            }
+        }
+    }
+    backend.neighbor_aggregation(ctx, plan, i, local_proj)
+}
+
+/// Fused tasks on real threads.
+fn parallel_fused(
+    backend: &dyn SyncExecBackend,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    assignment: &[usize],
+    workers: usize,
+) -> Result<Vec<Vec<TaskOut>>> {
+    let p = assignment.len();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let my_subgraphs: Vec<usize> =
+                (0..p).filter(|&i| assignment[i] == w).collect();
+            handles.push(scope.spawn(move || -> Result<Vec<TaskOut>> {
+                let mut out = Vec::new();
+                let mut local_proj: Projected = BTreeMap::new();
+                for i in my_subgraphs {
+                    let mut wctx = backend.make_ctx();
+                    let t = fused_task(backend, &mut wctx, plan, hg, &mut local_proj, i)?;
+                    out.push((i, wctx.drain(), t));
+                }
+                Ok(out)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fused worker panicked"))
+            .collect()
+    })
+}
+
+/// Fused tasks on the calling thread with per-virtual-worker projection
+/// maps (same redundancy semantics as the threaded path).
+fn virtual_fused(
+    backend: &dyn ExecBackend,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    assignment: &[usize],
+    workers: usize,
+) -> Result<Vec<Vec<TaskOut>>> {
+    let p = assignment.len();
+    let mut out: Vec<Vec<TaskOut>> = (0..workers).map(|_| Vec::new()).collect();
+    for w in 0..workers {
+        let mut local_proj: Projected = BTreeMap::new();
+        for i in (0..p).filter(|&i| assignment[i] == w) {
+            let mut wctx = backend.make_ctx();
+            let t = fused_task(backend, &mut wctx, plan, hg, &mut local_proj, i)?;
+            out[w].push((i, wctx.drain(), t));
+        }
+    }
+    Ok(out)
+}

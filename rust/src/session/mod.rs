@@ -1,0 +1,599 @@
+//! The unified execution surface: one [`Session`] owns the graph, the
+//! plan, the GPU model and the compiled/cached state, and composes
+//! *backend × schedule × profiling* behind a builder.
+//!
+//! The paper's core finding is that HGNN execution is a schedule over
+//! stages, not a single kernel stream; a session makes that schedule a
+//! first-class, swappable policy ([`SchedulePolicy`]) over a pluggable
+//! execution backend ([`ExecBackend`]), and keeps everything reusable
+//! across runs and served batches (plan, weights, compiled artifacts,
+//! kernel-context scratch) instead of rebuilding per call.
+//!
+//! ```no_run
+//! use hgnn_char::prelude::*;
+//!
+//! let mut session = Session::builder()
+//!     .dataset(DatasetId::Dblp)
+//!     .model(ModelId::Han)
+//!     .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+//!     .profiling(Profiling::Traces)
+//!     .build()?;
+//! let run = session.run()?;
+//! println!("{}", run.profile.stage_breakdown());
+//! println!("{}", run.report.summary());
+//! # Ok::<(), hgnn_char::Error>(())
+//! ```
+
+pub mod backend;
+pub mod exec;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::coordinator::schedule::{self, ScheduleReport};
+use crate::datasets::{self, DatasetId, DatasetScale};
+use crate::gpumodel::GpuModel;
+use crate::graph::HeteroGraph;
+use crate::kernels::Ctx;
+use crate::models::{self, ModelConfig, ModelId, ModelPlan};
+use crate::profiler::Profile;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+pub use backend::{BackendCaps, ExecBackend, NativeBackend, PjrtBackend, Projected, SyncExecBackend};
+pub use crate::coordinator::serve::{ServeConfig, ServeStats, Server};
+pub use exec::StagedRun;
+
+/// How the session schedules the stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Serial FP → NA(sg0..sgP) → SA, single stream (what the paper
+    /// profiles on DGL).
+    Sequential,
+    /// FP serial, NA subgraphs across `workers` streams, barrier, SA
+    /// (the Fig 5c observation applied).
+    InterSubgraphParallel {
+        /// Concurrent NA streams.
+        workers: usize,
+    },
+    /// Per-subgraph (FP+NA) fused tasks across `workers` streams
+    /// (§5 guideline 2).
+    FusedSubgraph {
+        /// Concurrent task streams.
+        workers: usize,
+    },
+    /// Inter-subgraph parallel + compute/memory co-scheduling analysis
+    /// (§5 guideline 1).
+    BoundAwareMixing {
+        /// Concurrent NA streams.
+        workers: usize,
+    },
+}
+
+impl SchedulePolicy {
+    /// Every policy shape at a given worker count (test/report sweeps).
+    pub fn all(workers: usize) -> [SchedulePolicy; 4] {
+        [
+            SchedulePolicy::Sequential,
+            SchedulePolicy::InterSubgraphParallel { workers },
+            SchedulePolicy::FusedSubgraph { workers },
+            SchedulePolicy::BoundAwareMixing { workers },
+        ]
+    }
+
+    /// Short label for reports.
+    pub fn label(self) -> String {
+        match self {
+            SchedulePolicy::Sequential => "sequential".into(),
+            SchedulePolicy::InterSubgraphParallel { workers } => {
+                format!("inter-subgraph x{workers}")
+            }
+            SchedulePolicy::FusedSubgraph { workers } => format!("fused-subgraph x{workers}"),
+            SchedulePolicy::BoundAwareMixing { workers } => format!("bound-aware-mix x{workers}"),
+        }
+    }
+}
+
+/// Profiling depth for a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Profiling {
+    /// Exact counters per kernel, no gather traces (cheapest useful
+    /// level; stage/type breakdowns are exact).
+    #[default]
+    Counters,
+    /// Counters + gather traces — required for the L2 cache model
+    /// behind Table 3 and the Fig 4 roofline.
+    Traces,
+}
+
+/// Which backend the builder instantiates. Kept as a spec (rather than a
+/// built backend) so a builder can be shipped across threads — e.g. into
+/// the serving dispatcher — and construct non-`Send` backends like PJRT
+/// in place.
+pub enum BackendSpec {
+    /// Native Rust kernels; trace recording follows [`Profiling`].
+    Native(NativeBackend),
+    /// PJRT over an AOT artifact directory.
+    Pjrt {
+        /// Artifact directory containing `manifest.json`.
+        root: PathBuf,
+    },
+    /// Any user-provided backend.
+    Custom(Box<dyn ExecBackend + Send>),
+}
+
+impl std::fmt::Debug for BackendSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendSpec::Native(b) => f.debug_tuple("Native").field(b).finish(),
+            BackendSpec::Pjrt { root } => f.debug_struct("Pjrt").field("root", root).finish(),
+            BackendSpec::Custom(b) => f.debug_tuple("Custom").field(b).finish(),
+        }
+    }
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        BackendSpec::Native(NativeBackend::default())
+    }
+}
+
+impl From<NativeBackend> for BackendSpec {
+    fn from(b: NativeBackend) -> Self {
+        BackendSpec::Native(b)
+    }
+}
+
+impl From<Box<dyn ExecBackend + Send>> for BackendSpec {
+    fn from(b: Box<dyn ExecBackend + Send>) -> Self {
+        BackendSpec::Custom(b)
+    }
+}
+
+/// Everything one [`Session::run`] produces.
+#[derive(Debug)]
+pub struct SessionRun {
+    /// Final embeddings of the plan's target node type.
+    pub output: Tensor,
+    /// Per-subgraph Neighbor Aggregation results (empty on whole-model
+    /// backends, whose artifact fuses the stages).
+    pub na_results: Vec<Tensor>,
+    /// Kernel-level profile with modeled T4 metrics (empty on
+    /// whole-model backends — profiling is a staged-backend capability).
+    pub profile: Profile,
+    /// Modeled schedule analysis.
+    pub report: ScheduleReport,
+    /// End-to-end wallclock of this run, nanoseconds.
+    pub wall_nanos: u64,
+}
+
+/// Builder for [`Session`]. See the module docs for the canonical
+/// incantation; every knob has a sensible default except the graph
+/// source (`dataset` / `graph` / `plan` + `graph`).
+#[derive(Debug, Default)]
+pub struct SessionBuilder {
+    dataset: Option<DatasetId>,
+    scale: Option<DatasetScale>,
+    graph: Option<HeteroGraph>,
+    plan: Option<ModelPlan>,
+    model: Option<ModelId>,
+    config: ModelConfig,
+    backend: BackendSpec,
+    policy: SchedulePolicy,
+    profiling: Profiling,
+    gpu: Option<GpuModel>,
+}
+
+impl Default for SchedulePolicy {
+    fn default() -> Self {
+        SchedulePolicy::Sequential
+    }
+}
+
+impl SessionBuilder {
+    /// Synthesize this dataset as the session graph.
+    pub fn dataset(mut self, id: DatasetId) -> Self {
+        self.dataset = Some(id);
+        self
+    }
+
+    /// Dataset scale (defaults to [`DatasetScale::paper`]).
+    pub fn scale(mut self, scale: DatasetScale) -> Self {
+        self.scale = Some(scale);
+        self
+    }
+
+    /// Use an already-built graph instead of synthesizing one.
+    pub fn graph(mut self, hg: HeteroGraph) -> Self {
+        self.graph = Some(hg);
+        self
+    }
+
+    /// Use an already-built plan (skips `model`/`config`-driven plan
+    /// construction; the graph must still be provided).
+    pub fn plan(mut self, plan: ModelPlan) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// Which model to plan (defaults to HAN).
+    pub fn model(mut self, model: ModelId) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Model hyper-parameters.
+    pub fn config(mut self, config: ModelConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Execution backend (defaults to [`NativeBackend`]).
+    pub fn backend(mut self, spec: impl Into<BackendSpec>) -> Self {
+        self.backend = spec.into();
+        self
+    }
+
+    /// Sugar: PJRT backend over an artifact directory.
+    pub fn pjrt(mut self, root: impl Into<PathBuf>) -> Self {
+        self.backend = BackendSpec::Pjrt { root: root.into() };
+        self
+    }
+
+    /// Schedule policy (defaults to [`SchedulePolicy::Sequential`]).
+    pub fn schedule(mut self, policy: SchedulePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Profiling depth (defaults to [`Profiling::Counters`]).
+    pub fn profiling(mut self, profiling: Profiling) -> Self {
+        self.profiling = profiling;
+        self
+    }
+
+    /// Override the GPU model (custom calibration experiments).
+    pub fn gpu_model(mut self, gpu: GpuModel) -> Self {
+        self.gpu = Some(gpu);
+        self
+    }
+
+    /// Build the session: synthesize/adopt the graph, build the plan,
+    /// instantiate the backend.
+    pub fn build(self) -> Result<Session> {
+        let scale = self.scale.unwrap_or_else(DatasetScale::paper);
+        let hg = match (self.graph, self.dataset) {
+            (Some(hg), _) => hg,
+            (None, Some(id)) => datasets::build(id, &scale)?,
+            (None, None) => {
+                return Err(Error::config(
+                    "SessionBuilder needs a graph source: .dataset(..), .graph(..), \
+                     or .plan(..) with .graph(..)",
+                ))
+            }
+        };
+        let plan = match self.plan {
+            Some(plan) => plan,
+            None => {
+                let model = self.model.unwrap_or(ModelId::Han);
+                models::build_plan(model, &hg, &self.config)?
+            }
+        };
+        let backend: Box<dyn ExecBackend> = match self.backend {
+            BackendSpec::Native(native) => {
+                // the profiling level can only *add* trace recording to a
+                // user-configured native backend, never strip it
+                let record =
+                    native.record_traces || matches!(self.profiling, Profiling::Traces);
+                Box::new(native.with_traces(record))
+            }
+            BackendSpec::Pjrt { root } => Box::new(PjrtBackend::new(root)?),
+            BackendSpec::Custom(custom) => custom,
+        };
+        let scratch = backend.make_ctx();
+        Ok(Session {
+            hg,
+            plan,
+            backend,
+            gpu: self.gpu.unwrap_or_default(),
+            policy: self.policy,
+            profiling: self.profiling,
+            scratch,
+            cached_output: None,
+            runs: 0,
+        })
+    }
+
+    /// Build the session *inside the serving dispatcher thread* and
+    /// serve batched embedding requests through it. This is the one
+    /// serving entry point: any backend (PJRT backends are constructed
+    /// in-thread, which is what their non-`Send` internals require) ×
+    /// any schedule policy, with the plan, weights and compiled
+    /// artifacts reused across batches.
+    pub fn serve(self, config: ServeConfig) -> Server {
+        Server::start_session(config, self)
+    }
+}
+
+/// A session: the single execution surface over backend × schedule ×
+/// profiling. Owns the graph, plan, GPU model and all cached state.
+#[derive(Debug)]
+pub struct Session {
+    hg: HeteroGraph,
+    plan: ModelPlan,
+    backend: Box<dyn ExecBackend>,
+    gpu: GpuModel,
+    policy: SchedulePolicy,
+    profiling: Profiling,
+    /// Kernel context reused across runs (event-buffer allocation
+    /// survives between runs).
+    scratch: Ctx,
+    /// Last full-graph embeddings, reused by [`Session::run_batch`].
+    cached_output: Option<Tensor>,
+    runs: u64,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The session graph.
+    pub fn graph(&self) -> &HeteroGraph {
+        &self.hg
+    }
+
+    /// The session plan.
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    /// The backend's short name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The backend's capability flags.
+    pub fn backend_caps(&self) -> BackendCaps {
+        self.backend.caps()
+    }
+
+    /// The schedule policy in effect.
+    pub fn policy(&self) -> SchedulePolicy {
+        self.policy
+    }
+
+    /// The profiling depth in effect.
+    pub fn profiling(&self) -> Profiling {
+        self.profiling
+    }
+
+    /// The GPU model in use.
+    pub fn gpu_model(&self) -> &GpuModel {
+        &self.gpu
+    }
+
+    /// Completed run count (runs + batch-triggered runs).
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Swap the schedule policy between runs (the compiled/cached state
+    /// is schedule-independent, so nothing is invalidated).
+    pub fn set_schedule(&mut self, policy: SchedulePolicy) {
+        self.policy = policy;
+    }
+
+    /// Run inference under the session policy.
+    ///
+    /// Whole-model backends (`caps().whole_model`) execute their fused
+    /// artifact — the artifact's internal schedule subsumes the policy —
+    /// and report an empty kernel profile; staged backends run the full
+    /// scheduler with per-kernel attribution.
+    pub fn run(&mut self) -> Result<SessionRun> {
+        let t0 = Instant::now();
+        let run = if self.backend.caps().whole_model {
+            match self.backend.run_full(&self.plan, &self.hg)? {
+                Some(output) => {
+                    let profile = Profile::default();
+                    let report =
+                        schedule::analyze(&profile, 1, false, self.policy, &self.gpu);
+                    StagedRun { output, na_results: Vec::new(), profile, report }
+                }
+                None => self.run_staged()?,
+            }
+        } else {
+            self.run_staged()?
+        };
+        self.runs += 1;
+        Ok(SessionRun {
+            output: run.output,
+            na_results: run.na_results,
+            profile: run.profile,
+            report: run.report,
+            wall_nanos: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    fn run_staged(&mut self) -> Result<StagedRun> {
+        exec::execute(
+            self.backend.as_ref(),
+            &self.gpu,
+            &self.plan,
+            &self.hg,
+            self.policy,
+            &mut self.scratch,
+        )
+    }
+
+    /// Run only FP + NA (the Fig 5a/5b sweeps time NA in isolation).
+    pub fn run_na_only(&mut self) -> Result<(Vec<Tensor>, Profile)> {
+        let out = exec::run_na_only(
+            self.backend.as_ref(),
+            &self.gpu,
+            &self.plan,
+            &self.hg,
+            &mut self.scratch,
+        )?;
+        self.runs += 1;
+        Ok(out)
+    }
+
+    /// Embedding rows for a batch of target node ids. The full-graph
+    /// forward runs (at most) once and its output is cached (moved, not
+    /// cloned) and reused across batches until [`Session::invalidate`];
+    /// ids wrap modulo the output rows, as the serving path has always
+    /// done. Plain [`Session::run`] calls do not touch this cache — the
+    /// cost of caching is paid only by the batch path that reads it.
+    pub fn run_batch(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        if self.cached_output.is_none() {
+            let run = self.run()?;
+            self.cached_output = Some(run.output);
+        }
+        let z = self.cached_output.as_ref().expect("populated above");
+        let n = z.rows().max(1);
+        Ok(node_ids.iter().map(|&i| z.row(i as usize % n).to_vec()).collect())
+    }
+
+    /// Drop the cached embeddings (e.g. after a feature-store refresh);
+    /// the next [`Session::run_batch`] recomputes them.
+    pub fn invalidate(&mut self) {
+        self.cached_output = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::StageId;
+
+    fn ci_builder() -> SessionBuilder {
+        Session::builder()
+            .dataset(DatasetId::Imdb)
+            .scale(DatasetScale::ci())
+            .model(ModelId::Han)
+    }
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let session = ci_builder().build().unwrap();
+        assert_eq!(session.backend_name(), "native");
+        assert_eq!(session.policy(), SchedulePolicy::Sequential);
+        assert_eq!(session.profiling(), Profiling::Counters);
+        assert_eq!(session.runs(), 0);
+        assert_eq!(session.plan().model, ModelId::Han);
+    }
+
+    #[test]
+    fn builder_requires_graph_source() {
+        assert!(Session::builder().build().is_err());
+    }
+
+    #[test]
+    fn run_produces_profile_and_output() {
+        let mut session = ci_builder().build().unwrap();
+        let run = session.run().unwrap();
+        assert!(run.output.frob_norm() > 0.0);
+        assert_eq!(run.na_results.len(), 2);
+        assert!(!run.profile.kernels.is_empty());
+        let pct = run.profile.stage_percentages();
+        assert!((pct.values().sum::<f64>() - 100.0).abs() < 1e-6);
+        assert_eq!(session.runs(), 1);
+    }
+
+    #[test]
+    fn profiling_traces_reach_the_kernels() {
+        let mut traced = ci_builder().profiling(Profiling::Traces).build().unwrap();
+        let run = traced.run().unwrap();
+        assert!(
+            run.profile.kernels.iter().any(|k| k.exec.trace.is_some()),
+            "Profiling::Traces must record gather traces"
+        );
+        let mut plain = ci_builder().build().unwrap();
+        let run = plain.run().unwrap();
+        assert!(run.profile.kernels.iter().all(|k| k.exec.trace.is_none()));
+    }
+
+    #[test]
+    fn policies_agree_through_session() {
+        let mut seq = ci_builder().build().unwrap();
+        let baseline = seq.run().unwrap();
+        for policy in [
+            SchedulePolicy::InterSubgraphParallel { workers: 2 },
+            SchedulePolicy::FusedSubgraph { workers: 2 },
+            SchedulePolicy::BoundAwareMixing { workers: 2 },
+        ] {
+            let mut s = ci_builder().schedule(policy).build().unwrap();
+            let run = s.run().unwrap();
+            assert!(
+                run.output.allclose(&baseline.output, 1e-4, 1e-5),
+                "{} diverges from sequential",
+                policy.label()
+            );
+        }
+    }
+
+    #[test]
+    fn set_schedule_swaps_between_runs() {
+        let mut session = ci_builder().build().unwrap();
+        let seq = session.run().unwrap();
+        session.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 2 });
+        let par = session.run().unwrap();
+        assert!(par.output.allclose(&seq.output, 1e-4, 1e-5));
+        assert!(par.report.modeled_makespan_ns <= seq.report.modeled_makespan_ns + 1.0);
+        assert_eq!(session.runs(), 2);
+    }
+
+    #[test]
+    fn fused_policy_attributes_fp_to_na() {
+        let mut session = ci_builder()
+            .schedule(SchedulePolicy::FusedSubgraph { workers: 2 })
+            .build()
+            .unwrap();
+        let run = session.run().unwrap();
+        let fp = run
+            .profile
+            .kernels
+            .iter()
+            .filter(|k| k.stage == StageId::FeatureProjection)
+            .count();
+        assert_eq!(fp, 0);
+        assert!(run.profile.kernels.iter().any(|k| k.exec.name == "sgemm"));
+    }
+
+    #[test]
+    fn run_batch_reuses_cached_output() {
+        let mut session = ci_builder().build().unwrap();
+        let rows = session.run_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(session.runs(), 1);
+        // second batch: no new run
+        let again = session.run_batch(&[5_000_000]).unwrap();
+        assert_eq!(session.runs(), 1);
+        assert_eq!(again.len(), 1);
+        // invalidation forces a recompute
+        session.invalidate();
+        let _ = session.run_batch(&[0]).unwrap();
+        assert_eq!(session.runs(), 2);
+    }
+
+    #[test]
+    fn pjrt_spec_without_artifacts_fails_cleanly() {
+        let err = ci_builder().pjrt("/nonexistent-artifacts").build();
+        // Either the PJRT client is unavailable (no `pjrt` feature) or
+        // the directory has no manifest — both must surface as errors,
+        // never panics. With a real client the build itself succeeds and
+        // the first run fails on the missing manifest.
+        if let Ok(mut session) = err {
+            assert!(session.run().is_err());
+        }
+    }
+
+    #[test]
+    fn policy_labels_and_all() {
+        assert_eq!(SchedulePolicy::Sequential.label(), "sequential");
+        assert!(SchedulePolicy::FusedSubgraph { workers: 3 }.label().contains('3'));
+        assert_eq!(SchedulePolicy::all(2).len(), 4);
+    }
+}

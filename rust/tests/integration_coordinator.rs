@@ -1,32 +1,33 @@
-//! Coordinator integration: scheduling policies over real models —
-//! numerical equivalence, modeled-makespan ordering, timeline shape
-//! (Fig 5c) and the §5 guideline ablations.
+//! Schedule-policy integration over real models — numerical
+//! equivalence, modeled-makespan ordering, timeline shape (Fig 5c) and
+//! the §5 guideline ablations — driven through `Session` with
+//! `set_schedule` swapping policies over one set of cached state.
 
-use hgnn_char::coordinator::{Coordinator, SchedulePolicy};
-use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::Backend;
-use hgnn_char::models::{self, ModelConfig};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
 use hgnn_char::profiler::StageId;
+use hgnn_char::session::{SchedulePolicy, Session};
 
-fn setup(
-    dataset: DatasetId,
-) -> (hgnn_char::graph::HeteroGraph, hgnn_char::models::ModelPlan) {
-    let hg = datasets::build(dataset, &DatasetScale::factor(0.25)).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    (hg, plan)
+fn session(dataset: DatasetId) -> Session {
+    Session::builder()
+        .dataset(dataset)
+        .scale(DatasetScale::factor(0.25))
+        .model(ModelId::Han)
+        .build()
+        .unwrap()
 }
 
 #[test]
 fn policies_numerically_equivalent_at_scale() {
-    let (hg, plan) = setup(DatasetId::Dblp);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
+    let mut s = session(DatasetId::Dblp);
+    let seq = s.run().unwrap();
     for policy in [
         SchedulePolicy::InterSubgraphParallel { workers: 3 },
         SchedulePolicy::FusedSubgraph { workers: 3 },
         SchedulePolicy::BoundAwareMixing { workers: 3 },
     ] {
-        let run = coord.run(&plan, &hg, policy).unwrap();
+        s.set_schedule(policy);
+        let run = s.run().unwrap();
         assert!(
             run.output.allclose(&seq.output, 1e-3, 1e-4),
             "{}: max diff {}",
@@ -40,12 +41,10 @@ fn policies_numerically_equivalent_at_scale() {
 fn inter_subgraph_parallelism_improves_makespan() {
     // Fig 5c observation: NA subgraphs are independent => parallel
     // streams shorten the modeled NA phase.
-    let (hg, plan) = setup(DatasetId::Dblp);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
-    let par = coord
-        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 3 })
-        .unwrap();
+    let mut s = session(DatasetId::Dblp);
+    let seq = s.run().unwrap();
+    s.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 3 });
+    let par = s.run().unwrap();
     assert!(
         par.report.modeled_makespan_ns < seq.report.modeled_makespan_ns,
         "parallel {:.0} !< sequential {:.0}",
@@ -57,11 +56,9 @@ fn inter_subgraph_parallelism_improves_makespan() {
 
 #[test]
 fn timeline_shows_parallel_na_and_barrier() {
-    let (hg, plan) = setup(DatasetId::Dblp);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let par = coord
-        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 3 })
-        .unwrap();
+    let mut s = session(DatasetId::Dblp);
+    s.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 3 });
+    let par = s.run().unwrap();
     let tl = par.profile.timeline();
     assert!(tl.has_cross_lane_overlap(), "NA lanes must overlap (Fig 5c)");
     assert_eq!(tl.barriers.len(), 1, "exactly one NA→SA barrier");
@@ -69,12 +66,12 @@ fn timeline_shows_parallel_na_and_barrier() {
     assert!(label.contains("NA"));
     // every SA span starts at/after the barrier
     for spans in tl.lanes.values() {
-        for s in spans {
-            if s.stage == StageId::SemanticAggregation {
+        for span in spans {
+            if span.stage == StageId::SemanticAggregation {
                 assert!(
-                    s.begin_ns >= *at - 1.0,
+                    span.begin_ns >= *at - 1.0,
                     "SA span at {} before barrier {at}",
-                    s.begin_ns
+                    span.begin_ns
                 );
             }
         }
@@ -86,14 +83,11 @@ fn timeline_shows_parallel_na_and_barrier() {
 #[test]
 fn mixing_beats_plain_parallel_in_model() {
     // §5 guideline 1 (idealized overlap bound)
-    let (hg, plan) = setup(DatasetId::Imdb);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let par = coord
-        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 2 })
-        .unwrap();
-    let mix = coord
-        .run(&plan, &hg, SchedulePolicy::BoundAwareMixing { workers: 2 })
-        .unwrap();
+    let mut s = session(DatasetId::Imdb);
+    s.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 2 });
+    let par = s.run().unwrap();
+    s.set_schedule(SchedulePolicy::BoundAwareMixing { workers: 2 });
+    let mix = s.run().unwrap();
     assert!(
         mix.report.modeled_makespan_ns <= par.report.modeled_makespan_ns + 1.0,
         "mixing {:.0} vs parallel {:.0}",
@@ -105,9 +99,9 @@ fn mixing_beats_plain_parallel_in_model() {
 #[test]
 fn fused_schedule_distributes_fp() {
     // §5 guideline 2: no serial FP phase; projections ride inside NA tasks
-    let (hg, plan) = setup(DatasetId::Imdb);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let fused = coord.run(&plan, &hg, SchedulePolicy::FusedSubgraph { workers: 2 }).unwrap();
+    let mut s = session(DatasetId::Imdb);
+    s.set_schedule(SchedulePolicy::FusedSubgraph { workers: 2 });
+    let fused = s.run().unwrap();
     let fp_kernels = fused
         .profile
         .kernels
@@ -121,12 +115,10 @@ fn fused_schedule_distributes_fp() {
 
 #[test]
 fn single_worker_parallel_equals_sequential_makespan() {
-    let (hg, plan) = setup(DatasetId::Acm);
-    let coord = Coordinator::new(Backend::native_no_traces());
-    let seq = coord.run(&plan, &hg, SchedulePolicy::Sequential).unwrap();
-    let par1 = coord
-        .run(&plan, &hg, SchedulePolicy::InterSubgraphParallel { workers: 1 })
-        .unwrap();
+    let mut s = session(DatasetId::Acm);
+    let seq = s.run().unwrap();
+    s.set_schedule(SchedulePolicy::InterSubgraphParallel { workers: 1 });
+    let par1 = s.run().unwrap();
     let rel_diff = (seq.report.modeled_makespan_ns - par1.report.modeled_makespan_ns).abs()
         / seq.report.modeled_makespan_ns.max(1.0);
     assert!(rel_diff < 1e-9, "1-worker parallel == sequential, diff {rel_diff}");

@@ -1,24 +1,45 @@
 //! Cross-model integration: every model on every dataset it supports,
 //! checking output sanity, kernel taxonomy coverage and Table 1's stage
-//! structure.
+//! structure — all through the `Session` API.
 
 use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
 use hgnn_char::kernels::KernelType;
-use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::models::{self, ModelConfig, ModelId, ModelPlan};
 use hgnn_char::profiler::StageId;
+use hgnn_char::session::{Session, SessionRun};
 
 fn ci() -> DatasetScale {
     DatasetScale::ci()
+}
+
+/// One sequential native run of (model, dataset) at CI scale.
+fn run_model(model: ModelId, dataset: DatasetId) -> SessionRun {
+    Session::builder()
+        .dataset(dataset)
+        .scale(ci())
+        .model(model)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// One run over an explicit plan (graph cloned into the session).
+fn run_plan(hg: &hgnn_char::graph::HeteroGraph, plan: ModelPlan) -> SessionRun {
+    Session::builder()
+        .graph(hg.clone())
+        .plan(plan)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 #[test]
 fn full_matrix_runs_and_is_finite() {
     for model in ModelId::HGNNS {
         for dataset in DatasetId::HETERO {
-            let hg = datasets::build(dataset, &ci()).unwrap();
-            let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
-            let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+            let run = run_model(model, dataset);
             assert!(
                 run.output.as_slice().iter().all(|v| v.is_finite()),
                 "{model:?}/{dataset:?} produced non-finite values"
@@ -32,18 +53,13 @@ fn full_matrix_runs_and_is_finite() {
 fn table1_stage_operations() {
     // Table 1: RGCN = mean NA + sum SA (no attention kernels);
     // HAN/MAGNN = GAT NA + attention-sum SA.
-    let hg = datasets::build(DatasetId::Acm, &ci()).unwrap();
-    let cfg = ModelConfig::default();
-
-    let rgcn = models::rgcn_plan(&hg, &cfg).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&rgcn, &hg).unwrap();
+    let run = run_model(ModelId::Rgcn, DatasetId::Acm);
     let rgcn_names: std::collections::BTreeSet<&str> =
         run.profile.kernels.iter().map(|k| k.exec.name).collect();
     assert!(!rgcn_names.contains("SDDMMCoo"), "RGCN has no attention SDDMM");
     assert!(!rgcn_names.contains("edge_softmax"), "RGCN has no edge softmax");
 
-    let han = models::han_plan(&hg, &cfg).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&han, &hg).unwrap();
+    let run = run_model(ModelId::Han, DatasetId::Acm);
     let han_names: std::collections::BTreeSet<&str> =
         run.profile.kernels.iter().map(|k| k.exec.name).collect();
     for expected in ["sgemm", "SpMMCsr", "SDDMMCoo", "edge_softmax", "uEleWise", "vEleWise", "Reduce", "Concat"] {
@@ -53,9 +69,7 @@ fn table1_stage_operations() {
 
 #[test]
 fn all_four_kernel_types_appear_in_han() {
-    let hg = datasets::build(DatasetId::Imdb, &ci()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let run = run_model(ModelId::Han, DatasetId::Imdb);
     let types: std::collections::BTreeSet<KernelType> =
         run.profile.kernels.iter().map(|k| k.exec.ktype).collect();
     for t in KernelType::ALL {
@@ -68,22 +82,24 @@ fn rgcn_output_independent_of_relation_order_scale() {
     // deterministic weights => two fresh builds agree exactly
     let hg = datasets::build(DatasetId::Dblp, &ci()).unwrap();
     let cfg = ModelConfig::default();
-    let a = Engine::new(Backend::native_no_traces())
-        .run(&models::rgcn_plan(&hg, &cfg).unwrap(), &hg)
-        .unwrap();
-    let b = Engine::new(Backend::native_no_traces())
-        .run(&models::rgcn_plan(&hg, &cfg).unwrap(), &hg)
-        .unwrap();
+    let a = run_plan(&hg, models::rgcn_plan(&hg, &cfg).unwrap());
+    let b = run_plan(&hg, models::rgcn_plan(&hg, &cfg).unwrap());
     assert!(a.output.allclose(&b.output, 0.0, 0.0));
 }
 
 #[test]
 fn hidden_dim_scales_output_width() {
-    let hg = datasets::build(DatasetId::Imdb, &ci()).unwrap();
     for hidden in [16, 32, 128] {
         let cfg = ModelConfig { hidden_dim: hidden, ..ModelConfig::default() };
-        let plan = models::han_plan(&hg, &cfg).unwrap();
-        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        let run = Session::builder()
+            .dataset(DatasetId::Imdb)
+            .scale(ci())
+            .model(ModelId::Han)
+            .config(cfg)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
         assert_eq!(run.output.cols(), hidden);
     }
 }
@@ -98,7 +114,7 @@ fn more_metapaths_more_na_kernels() {
             .map(|s| hgnn_char::metapath::Metapath::parse(s).unwrap())
             .collect();
         let plan = models::han_plan_with(&hg, &cfg, &paths).unwrap();
-        let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+        let run = run_plan(&hg, plan);
         run.profile
             .kernels
             .iter()
@@ -112,9 +128,7 @@ fn more_metapaths_more_na_kernels() {
 
 #[test]
 fn gcn_has_no_semantic_stage_work() {
-    let hg = datasets::build(DatasetId::RedditSim, &ci()).unwrap();
-    let plan = models::gcn_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let run = run_model(ModelId::Gcn, DatasetId::RedditSim);
     let sa: Vec<_> = run
         .profile
         .kernels

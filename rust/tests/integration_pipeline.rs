@@ -1,23 +1,39 @@
 //! End-to-end pipeline integration at realistic (quarter-paper) scale:
-//! the paper's headline observations must hold structurally.
+//! the paper's headline observations must hold structurally — driven
+//! through the `Session` API.
 
 use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
 use hgnn_char::kernels::KernelType;
 use hgnn_char::models::{self, ModelConfig, ModelId};
 use hgnn_char::profiler::StageId;
+use hgnn_char::session::{Profiling, Session, SessionRun};
 
 fn quarter() -> DatasetScale {
     DatasetScale::factor(0.25)
+}
+
+fn run_at(
+    model: ModelId,
+    dataset: DatasetId,
+    scale: DatasetScale,
+    profiling: Profiling,
+) -> SessionRun {
+    Session::builder()
+        .dataset(dataset)
+        .scale(scale)
+        .model(model)
+        .profiling(profiling)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 #[test]
 fn na_dominates_han_dblp_at_scale() {
     // Fig 2's headline: Neighbor Aggregation takes most of HGNN time.
     // HAN on DBLP (the Table 3 configuration) at quarter scale.
-    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let run = run_at(ModelId::Han, DatasetId::Dblp, quarter(), Profiling::Counters);
     let pct = run.profile.stage_percentages();
     let na = pct[&StageId::NeighborAggregation];
     assert!(
@@ -32,9 +48,7 @@ fn na_dominates_han_dblp_at_scale() {
 #[test]
 fn fp_is_dm_dominated_na_is_tb_ew_dominated() {
     // Fig 3's claim: FP is DM-type; NA is TB+EW-type; SA contains DR.
-    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let run = run_at(ModelId::Han, DatasetId::Dblp, quarter(), Profiling::Counters);
     let ktt = run.profile.kernel_type_times();
     let share = |stage: StageId, t: KernelType| -> f64 {
         let total: f64 = KernelType::ALL
@@ -62,9 +76,7 @@ fn fp_is_dm_dominated_na_is_tb_ew_dominated() {
 #[test]
 fn spmm_is_the_na_hotspot_with_low_ai() {
     // Table 3: SpMMCsr dominates NA, with AI well below the ridge.
-    let hg = datasets::build(DatasetId::Dblp, &quarter()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let run = run_at(ModelId::Han, DatasetId::Dblp, quarter(), Profiling::Traces);
     let rows = run.profile.kernel_table(StageId::NeighborAggregation);
     let (top_name, top_metrics, top_share) = &rows[0];
     assert_eq!(top_name, "SpMMCsr", "NA hotspot: {rows:?}");
@@ -82,9 +94,7 @@ fn sgemm_compute_bound_on_big_projection() {
     // Fig 4: the FP sgemm sits above the roofline ridge. HAN on IMDB at
     // paper scale projects the dense 3066-dim movie features — a
     // [4278, 3066] x [3066, 64] sgemm that fills the T4.
-    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::paper()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native()).run(&plan, &hg).unwrap();
+    let run = run_at(ModelId::Han, DatasetId::Imdb, DatasetScale::paper(), Profiling::Traces);
     let rows = run.profile.kernel_table(StageId::FeatureProjection);
     let (_, m, _) = &rows[0];
     assert!(m.ai > 9.375, "FP sgemm AI {:.1} above ridge", m.ai);
@@ -97,13 +107,24 @@ fn magnn_na_exceeds_han_na() {
     // NA shares are the largest across models).
     let hg = datasets::build(DatasetId::Imdb, &quarter()).unwrap();
     let config = ModelConfig::default();
-    let han = models::han_plan(&hg, &config).unwrap();
-    let magnn = models::magnn_plan(&hg, &config).unwrap();
-    let mut engine = Engine::new(Backend::native_no_traces());
-    let t_han = engine.run(&han, &hg).unwrap().profile.stage_times()
-        [&StageId::NeighborAggregation];
-    let t_magnn = engine.run(&magnn, &hg).unwrap().profile.stage_times()
-        [&StageId::NeighborAggregation];
+    let t_han = Session::builder()
+        .graph(hg.clone())
+        .plan(models::han_plan(&hg, &config).unwrap())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .profile
+        .stage_times()[&StageId::NeighborAggregation];
+    let t_magnn = Session::builder()
+        .graph(hg.clone())
+        .plan(models::magnn_plan(&hg, &config).unwrap())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .profile
+        .stage_times()[&StageId::NeighborAggregation];
     assert!(t_magnn > t_han, "MAGNN NA {t_magnn} vs HAN NA {t_han}");
 }
 
@@ -133,9 +154,7 @@ fn sparsity_decreases_with_metapath_length_all_datasets() {
 
 #[test]
 fn subgraph_build_excluded_from_gpu_stages() {
-    let hg = datasets::build(DatasetId::Acm, &DatasetScale::ci()).unwrap();
-    let plan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
-    let run = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let run = run_at(ModelId::Han, DatasetId::Acm, DatasetScale::ci(), Profiling::Counters);
     assert!(run.profile.subgraph_build_nanos > 0, "SB time recorded");
     assert!(
         run.profile.kernels.iter().all(|k| k.stage != StageId::SubgraphBuild),

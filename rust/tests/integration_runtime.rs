@@ -6,16 +6,20 @@
 //! CI runs `make test`, which builds artifacts first).
 
 use hgnn_char::datasets::{self, DatasetId, DatasetScale};
-use hgnn_char::engine::{Backend, Engine};
 use hgnn_char::graph::Csr;
 use hgnn_char::metapath::{Metapath, Subgraph, SubgraphSet};
 use hgnn_char::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
-use hgnn_char::runtime::PjrtRuntime;
+use hgnn_char::runtime::{ell_inputs, PjrtRuntime};
+use hgnn_char::session::Session;
 use hgnn_char::tensor::Tensor;
 
 const ELL_K: usize = 64;
 
 fn runtime() -> Option<PjrtRuntime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without the 'pjrt' feature");
+        return None;
+    }
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !root.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
@@ -26,18 +30,18 @@ fn runtime() -> Option<PjrtRuntime> {
 
 /// ELL arrays (idx, mask) as f32 tensors for a CSR, truncated at K.
 fn ell_tensors(adj: &Csr, k: usize) -> (Tensor, Tensor, Csr) {
-    let (ell, _) = adj.to_ell(k);
-    let mut idx = Tensor::zeros(adj.n_rows, k);
-    let mut mask = Tensor::zeros(adj.n_rows, k);
-    for r in 0..adj.n_rows {
-        let (cols, valid) = ell.row_slots(r);
-        for j in 0..k {
-            idx.set(r, j, cols[j] as f32);
-            mask.set(r, j, if valid[j] { 1.0 } else { 0.0 });
-        }
-    }
-    let truncated_csr = ell.to_csr();
-    (idx, mask, truncated_csr)
+    ell_inputs(adj, k)
+}
+
+/// Native sequential run of an explicit plan through a session.
+fn native_run(hg: &hgnn_char::graph::HeteroGraph, plan: &ModelPlan) -> hgnn_char::session::SessionRun {
+    Session::builder()
+        .graph(hg.clone())
+        .plan(plan.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 fn vec_tensor(rows: usize, cols: usize, v: &[f32]) -> Tensor {
@@ -135,7 +139,7 @@ fn han_full_model_artifact_matches_native_engine() {
     let (hg, plan, ells) = han_imdb_truncated_plan();
 
     // native execution on the identical (truncated) adjacency
-    let native = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let native = native_run(&hg, &plan);
 
     // PJRT execution with the same weights + ELL tensors
     let m_ty = hg.type_by_tag('M').unwrap();
@@ -186,7 +190,7 @@ fn gcn_artifact_matches_native_engine() {
     };
     let weights = ModelWeights::init(ModelId::Gcn, &hg, &subgraphs, &config);
     let plan = ModelPlan { model: ModelId::Gcn, config, subgraphs, weights, target: 0 };
-    let native = Engine::new(Backend::native_no_traces()).run(&plan, &hg).unwrap();
+    let native = native_run(&hg, &plan);
 
     let x = hg.features(0);
     let w = &plan.weights.proj[&0];

@@ -1,11 +1,15 @@
 //! Property-based invariants over the substrate and coordinator, via the
 //! mini-proptest framework in `hgnn_char::testutil`.
 
+use hgnn_char::coordinator::lpt_assign;
+use hgnn_char::coordinator::schedule::analyze;
+use hgnn_char::gpumodel::GpuModel;
 use hgnn_char::graph::sparse::Csr;
 use hgnn_char::kernels::elementwise::{reduce_grouped_rows, softmax_vec};
 use hgnn_char::kernels::sparse_ops::{edge_softmax, sddmm_coo, spmm_csr, SpmmReduce};
-use hgnn_char::kernels::Ctx;
-use hgnn_char::coordinator::lpt_assign;
+use hgnn_char::kernels::{Ctx, KernelCounters, KernelExec, KernelType};
+use hgnn_char::profiler::{Profile, StageId};
+use hgnn_char::session::SchedulePolicy;
 use hgnn_char::tensor::Tensor;
 use hgnn_char::testutil::{check, CsrStrategy, Pair, Strategy, TensorStrategy};
 use hgnn_char::util::Pcg32;
@@ -237,5 +241,146 @@ fn prop_pair_strategy_spmm_shape_errors_detected() {
             Ok(out) => x.rows() == csr.n_cols && out.shape() == (csr.n_rows, x.cols()),
             Err(_) => x.rows() != csr.n_cols,
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ScheduleReport makespan invariants (ISSUE 1 satellite): for arbitrary
+// worker-attributed profiles, the modeled parallel makespan never
+// exceeds the modeled sequential total and never undercuts the critical
+// path through the stage barriers.
+// ---------------------------------------------------------------------------
+
+/// Random worker-attributed profile with the paper's stage/type shape:
+/// FP is DM-only and NA is TB/EW/DR-only (Fig 3) — the regime the
+/// bound-aware-mixing model is defined over. SA kernels are arbitrary.
+struct ProfileStrategy;
+
+/// (profile, workers) pair; every NA worker index is < workers.
+impl Strategy for ProfileStrategy {
+    type Value = (Profile, usize);
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+        let workers = 1 + rng.gen_range(6);
+        let mut p = Profile::default();
+        fn push(p: &mut Profile, stage: StageId, worker: usize, rng: &mut Pcg32) {
+            let ktype = match stage {
+                // Fig 3: FP is pure dense matmul
+                StageId::FeatureProjection => KernelType::DenseMatmul,
+                // Fig 3: NA is TB + EW (+ the odd DR), never DM
+                StageId::NeighborAggregation => match rng.gen_range(3) {
+                    0 => KernelType::TopologyBased,
+                    1 => KernelType::ElementWise,
+                    _ => KernelType::DataRearrange,
+                },
+                _ => match rng.gen_range(4) {
+                    0 => KernelType::DenseMatmul,
+                    1 => KernelType::TopologyBased,
+                    2 => KernelType::ElementWise,
+                    _ => KernelType::DataRearrange,
+                },
+            };
+            let exec = KernelExec {
+                name: "k",
+                ktype,
+                counters: KernelCounters {
+                    flops: 1 + rng.gen_range(50_000_000) as u64,
+                    bytes_read: 1 + rng.gen_range(80_000_000) as u64,
+                    bytes_written: 1 + rng.gen_range(8_000_000) as u64,
+                },
+                wall_nanos: 1 + rng.gen_range(1_000_000) as u64,
+                trace: None,
+            };
+            p.record(vec![exec], stage, Some("sg"), worker, 0);
+        }
+        for _ in 0..(1 + rng.gen_range(3)) {
+            push(&mut p, StageId::FeatureProjection, 0, rng);
+        }
+        for _ in 0..(1 + rng.gen_range(8)) {
+            let w = rng.gen_range(workers);
+            push(&mut p, StageId::NeighborAggregation, w, rng);
+        }
+        for _ in 0..(1 + rng.gen_range(3)) {
+            push(&mut p, StageId::SemanticAggregation, 0, rng);
+        }
+        p.attach_metrics(&GpuModel::default());
+        (p, workers)
+    }
+}
+
+/// Modeled per-stage makespan: max over workers of that worker's sum.
+fn stage_max(p: &Profile, stage: StageId) -> f64 {
+    let mut per_worker = std::collections::BTreeMap::new();
+    for k in &p.kernels {
+        if k.stage == stage {
+            let t = k.metrics.as_ref().map(|m| m.time_ns).unwrap_or(0.0);
+            *per_worker.entry(k.worker).or_insert(0.0) += t;
+        }
+    }
+    per_worker.values().cloned().fold(0.0, f64::max)
+}
+
+#[test]
+fn prop_parallel_makespan_bounded_by_serial_total() {
+    // parallel makespan <= sequential (serial-sum) total, all policies
+    check("makespan <= serial", 31, CASES, &ProfileStrategy, |(p, workers)| {
+        let w = *workers;
+        SchedulePolicy::all(w).into_iter().all(|policy| {
+            let mixing = matches!(policy, SchedulePolicy::BoundAwareMixing { .. });
+            let r = analyze(p, w, mixing, policy, &GpuModel::default());
+            r.modeled_makespan_ns <= r.modeled_serial_ns * (1.0 + 1e-9) + 1e-6
+                && r.speedup >= 1.0 - 1e-9
+        })
+    });
+}
+
+#[test]
+fn prop_makespan_at_least_critical_path() {
+    // non-mixing schedules: the barriers force
+    //   makespan >= FP_max + NA_max + SA_max   (the critical path)
+    check("makespan >= critical path", 32, CASES, &ProfileStrategy, |(p, workers)| {
+        let w = *workers;
+        let critical = stage_max(p, StageId::FeatureProjection)
+            + stage_max(p, StageId::NeighborAggregation)
+            + stage_max(p, StageId::SemanticAggregation);
+        [
+            SchedulePolicy::Sequential,
+            SchedulePolicy::InterSubgraphParallel { workers: w },
+            SchedulePolicy::FusedSubgraph { workers: w },
+        ]
+        .into_iter()
+        .all(|policy| {
+            let r = analyze(p, w, false, policy, &GpuModel::default());
+            r.modeled_makespan_ns >= critical * (1.0 - 1e-9) - 1e-6
+        })
+    });
+}
+
+#[test]
+fn prop_mixing_never_worse_than_plain_parallel() {
+    // §5 guideline 1 is an idealized overlap bound: for paper-shaped
+    // profiles (FP = DM, NA = memory-bound; what ProfileStrategy
+    // generates) it can only shrink the FP+NA window, and SA after the
+    // barrier is unchanged. (With DM kernels spread across NA workers
+    // the model's single co-scheduled compute stream could exceed the
+    // plain per-worker split — that shape does not occur in Fig 3.)
+    check("mixing <= plain parallel", 33, CASES, &ProfileStrategy, |(p, workers)| {
+        let w = *workers;
+        let plain = analyze(
+            p,
+            w,
+            false,
+            SchedulePolicy::InterSubgraphParallel { workers: w },
+            &GpuModel::default(),
+        );
+        let mixed = analyze(
+            p,
+            w,
+            true,
+            SchedulePolicy::BoundAwareMixing { workers: w },
+            &GpuModel::default(),
+        );
+        let sa = stage_max(p, StageId::SemanticAggregation);
+        mixed.modeled_makespan_ns <= plain.modeled_makespan_ns * (1.0 + 1e-9) + 1e-6
+            && mixed.modeled_makespan_ns >= sa * (1.0 - 1e-9) - 1e-6
     });
 }
