@@ -134,6 +134,10 @@ COMMANDS:
   timeline --model M --dataset D render the Fig 5c-style timeline
   artifacts [--dir artifacts]    list AOT artifacts + PJRT platform
   serve [--requests N]           demo of the batched serving loop
+      [--batch B]                  submit typed batches of B ids
+      [--fanout K]                 mini-batch metapath sampling, K
+                                   neighbors per node per layer
+      [--sample-layers L]          sampling depth (default 1)
   help                           this text
 ";
 

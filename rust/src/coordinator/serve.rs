@@ -1,9 +1,11 @@
 //! Batched inference serving loop — the end-to-end driver substrate.
 //!
 //! A minimal but real serving path in the vLLM-router mold: clients
-//! submit embedding requests for target nodes; a dispatcher thread
-//! batches them (size- and time-bounded dynamic batching) and hands each
-//! batch to an executor. The canonical executor is a
+//! submit embedding requests for target nodes — singles
+//! ([`Server::submit`]) or typed batches ([`Server::submit_batch`]) —
+//! and a dispatcher thread batches them (size- and time-bounded dynamic
+//! batching over node ids) and hands each flattened batch to an
+//! executor. The canonical executor is a
 //! [`crate::session::Session`] built *inside* the dispatcher thread via
 //! [`Server::start_session`] — any backend (native or PJRT) × any
 //! schedule policy, with the plan, weights and compiled artifacts reused
@@ -18,21 +20,34 @@ use crate::session::SessionBuilder;
 use crate::util::stats::Summary;
 use crate::{Error, Result};
 
-/// A single embedding request.
+/// An embedding request: one or more target node ids sharing a reply
+/// channel ([`Server::submit`] sends one id, [`Server::submit_batch`] a
+/// typed batch).
 #[derive(Debug)]
 pub struct Request {
-    /// Target node id to embed.
-    pub node_id: u32,
+    /// Target node ids to embed (never empty).
+    pub node_ids: Vec<u32>,
     /// Submission timestamp.
     pub submitted: Instant,
-    /// Completion channel: receives the embedding row.
-    pub reply: mpsc::Sender<Vec<f32>>,
+    /// Completion channel.
+    pub reply: Reply,
+}
+
+/// The reply side of a [`Request`].
+#[derive(Debug)]
+pub enum Reply {
+    /// One embedding row ([`Server::submit`]).
+    Single(mpsc::Sender<Vec<f32>>),
+    /// All rows of the request, in submission order
+    /// ([`Server::submit_batch`]).
+    Batch(mpsc::Sender<Vec<Vec<f32>>>),
 }
 
 /// Dynamic batching configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Maximum requests per batch.
+    /// Maximum node ids per dispatched batch (a single oversized
+    /// [`Server::submit_batch`] request still dispatches whole).
     pub max_batch: usize,
     /// Maximum time the dispatcher waits to fill a batch.
     pub flush_after: Duration,
@@ -44,18 +59,21 @@ impl Default for ServeConfig {
     }
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics. Counts are in node ids (embedding
+/// rows): a [`Server::submit_batch`] of `k` ids contributes `k` to
+/// `completed` but one latency sample.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
-    /// Completed request count.
+    /// Completed node-id count (embedding rows delivered).
     pub completed: u64,
-    /// Executed batch count.
+    /// Executed dispatch count.
     pub batches: u64,
-    /// End-to-end latency summary (nanoseconds).
+    /// End-to-end latency summary, one sample per request
+    /// (nanoseconds).
     pub latency: Summary,
-    /// Requests per second over the serving window.
+    /// Embedding rows per second over the serving window.
     pub throughput_rps: f64,
-    /// Mean batch size.
+    /// Mean node ids per dispatch.
     pub mean_batch: f64,
 }
 
@@ -130,33 +148,51 @@ impl Server {
                 } else if pending.is_empty() {
                     break;
                 }
-                // fill the batch until max_batch or flush_after expires
+                // fill the dispatch until max_batch *ids* are queued or
+                // flush_after expires; an oversized submit_batch still
+                // dispatches whole (requests are never split)
                 let deadline = Instant::now() + config.flush_after;
-                while pending.len() < config.max_batch {
+                let mut queued: usize = pending.iter().map(|r| r.node_ids.len()).sum();
+                while queued < config.max_batch {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
+                        Ok(r) => {
+                            queued += r.node_ids.len();
+                            pending.push(r);
+                        }
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                // execute
+                // execute all queued ids as one batch
                 let batch: Vec<Request> = std::mem::take(&mut pending);
-                let ids: Vec<u32> = batch.iter().map(|r| r.node_id).collect();
+                let ids: Vec<u32> =
+                    batch.iter().flat_map(|r| r.node_ids.iter().copied()).collect();
                 match executor.execute(&ids) {
                     Ok(rows) => {
                         let done = Instant::now();
                         let mut s = stats_w.lock().unwrap();
                         s.batches += 1;
-                        s.batch_sizes.push(batch.len());
-                        for (req, row) in batch.into_iter().zip(rows) {
-                            s.completed += 1;
+                        s.batch_sizes.push(ids.len());
+                        let mut rows = rows.into_iter();
+                        for req in batch {
+                            let take = req.node_ids.len();
+                            s.completed += take as u64;
                             s.latencies_ns
                                 .push(done.duration_since(req.submitted).as_nanos() as f64);
-                            let _ = req.reply.send(row);
+                            match req.reply {
+                                Reply::Single(tx) => {
+                                    if let Some(row) = rows.next() {
+                                        let _ = tx.send(row);
+                                    }
+                                }
+                                Reply::Batch(tx) => {
+                                    let _ = tx.send(rows.by_ref().take(take).collect());
+                                }
+                            }
                         }
                     }
                     Err(e) => {
@@ -176,6 +212,12 @@ impl Server {
     /// where they run; the session's plan, weights, compiled artifacts
     /// and cached embeddings are reused across batches. If the session
     /// fails to build, every batch reports the build error.
+    ///
+    /// When the builder carries a sampling spec
+    /// (`SessionBuilder::sampling`), each dispatch batches every queued
+    /// request — singles and typed batches alike — into **one** sampled
+    /// subgraph and executes only that, so serving cost tracks offered
+    /// load instead of graph size.
     pub fn start_session(config: ServeConfig, builder: SessionBuilder) -> Server {
         Self::start_with(config, move || {
             let mut session = builder.build().map_err(|e| e.to_string());
@@ -188,15 +230,41 @@ impl Server {
         })
     }
 
-    /// Submit a request; returns the reply receiver.
+    /// Submit a single-node request; returns the reply receiver.
     pub fn submit(&self, node_id: u32) -> Result<mpsc::Receiver<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
+        self.send(Request {
+            node_ids: vec![node_id],
+            submitted: Instant::now(),
+            reply: Reply::Single(reply),
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit a typed batch of node ids as one request; the returned
+    /// receiver yields all embedding rows at once, in `node_ids` order.
+    /// The whole batch rides one dispatch (it is never split), so a
+    /// client that already knows its batch pays one queue round-trip
+    /// instead of `node_ids.len()`.
+    pub fn submit_batch(&self, node_ids: &[u32]) -> Result<mpsc::Receiver<Vec<Vec<f32>>>> {
+        if node_ids.is_empty() {
+            return Err(Error::config("submit_batch: empty batch"));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.send(Request {
+            node_ids: node_ids.to_vec(),
+            submitted: Instant::now(),
+            reply: Reply::Batch(reply),
+        })?;
+        Ok(rx)
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Runtime("server stopped".into()))?
-            .send(Request { node_id, submitted: Instant::now(), reply })
-            .map_err(|_| Error::Runtime("dispatcher gone".into()))?;
-        Ok(rx)
+            .send(req)
+            .map_err(|_| Error::Runtime("dispatcher gone".into()))
     }
 
     /// Snapshot of the current statistics without stopping the server.
@@ -283,6 +351,70 @@ mod tests {
         // with a generous flush window most requests share batches
         assert!(stats.batches <= 8);
         assert!(stats.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn submit_batch_returns_rows_in_order() {
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let rx = server.submit_batch(&[4, 1, 9]).unwrap();
+        let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec![4.0, 8.0]);
+        assert_eq!(rows[1], vec![1.0, 2.0]);
+        assert_eq!(rows[2], vec![9.0, 18.0]);
+        assert!(server.submit_batch(&[]).is_err());
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.batches, 1);
+    }
+
+    #[test]
+    fn submit_batch_and_singles_share_a_dispatch() {
+        let server = Server::start(
+            ServeConfig { max_batch: 16, flush_after: Duration::from_millis(50) },
+            echo_executor,
+        );
+        let single = server.submit(7).unwrap();
+        let batch = server.submit_batch(&[1, 2, 3]).unwrap();
+        assert_eq!(single.recv_timeout(Duration::from_secs(5)).unwrap(), vec![7.0, 14.0]);
+        let rows = batch.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rows[2], vec![3.0, 6.0]);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 4);
+        // with the generous flush window both requests ride one dispatch
+        assert!(stats.batches <= 2);
+    }
+
+    #[test]
+    fn shutdown_with_pending_batches_drains_them() {
+        // shutdown immediately after queueing typed batches: every
+        // receiver must still get its full row set (drain semantics)
+        let server = Server::start(ServeConfig::default(), echo_executor);
+        let rxs: Vec<_> =
+            (0..10).map(|i| server.submit_batch(&[i, i + 100]).unwrap()).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 20);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let rows = rx.try_recv().expect("shutdown must drain pending batches");
+            assert_eq!(rows.len(), 2);
+            assert_eq!(rows[0][0], i as f32);
+            assert_eq!(rows[1][0], (i + 100) as f32);
+        }
+    }
+
+    #[test]
+    fn oversized_batch_dispatches_whole() {
+        let server = Server::start(
+            ServeConfig { max_batch: 4, flush_after: Duration::from_millis(1) },
+            echo_executor,
+        );
+        let ids: Vec<u32> = (0..13).collect();
+        let rx = server.submit_batch(&ids).unwrap();
+        let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rows.len(), 13);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 13);
+        assert_eq!(stats.batches, 1, "a request is never split across dispatches");
     }
 
     #[test]

@@ -12,9 +12,9 @@
 //!
 //! * **L3 (this crate)** — the Rust coordinator: dataset synthesis,
 //!   metapath subgraph building, the [`session`] execution surface
-//!   (schedule policies over a pluggable backend), the profiler and GPU
-//!   model, and the PJRT runtime that loads AOT-compiled JAX/Pallas
-//!   artifacts.
+//!   (schedule policies over a pluggable backend), the mini-batch
+//!   [`sampler`] behind the serving path, the profiler and GPU model,
+//!   and the PJRT runtime that loads AOT-compiled JAX/Pallas artifacts.
 //! * **L2 (`python/compile/model.py`)** — JAX stage functions lowered once
 //!   to HLO text (`make artifacts`), never on the request path.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the paper's
@@ -43,10 +43,12 @@
 //! println!("{}", run.report.summary());
 //!
 //! // Batched serving through the same session state (plan, weights and
-//! // compiled artifacts are reused across batches):
+//! // compiled artifacts are reused across batches); with a sampling
+//! // spec each dispatch executes one sampled metapath neighborhood:
 //! let server = Session::builder()
 //!     .dataset(DatasetId::Imdb)
 //!     .scale(DatasetScale::ci())
+//!     .sampling(SamplingSpec::uniform(16, 1))
 //!     .serve(ServeConfig::default());
 //! let reply = server.submit(42)?;
 //! # let _ = reply;
@@ -78,6 +80,7 @@ pub mod models;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod sampler;
 pub mod session;
 pub mod tensor;
 pub mod testutil;
@@ -139,6 +142,12 @@ impl Error {
     }
 }
 
+/// Compile the top-level README's code examples as doctests so the
+/// quickstart can never drift from the API (`cargo test --doc`).
+#[doc = include_str!("../../README.md")]
+#[cfg(doctest)]
+pub struct ReadmeDoctests;
+
 /// One-stop imports for examples, benches and downstream users.
 pub mod prelude {
     pub use crate::datasets::{self, DatasetId, DatasetScale};
@@ -147,6 +156,7 @@ pub mod prelude {
     pub use crate::metapath::{Metapath, SubgraphSet};
     pub use crate::profiler::{Profile, StageId};
     pub use crate::report;
+    pub use crate::sampler::{NeighborSampler, SampledSubgraph, SamplingSpec};
     pub use crate::tensor::Tensor;
     pub use crate::{Error, Result};
     // The execution surface: Session + backends + policies.

@@ -13,7 +13,7 @@ use hgnn_char::models::{self, ModelId};
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
 use hgnn_char::runtime::PjrtRuntime;
-use hgnn_char::session::{Profiling, SchedulePolicy, ServeConfig, Session};
+use hgnn_char::session::{Profiling, SamplingSpec, SchedulePolicy, ServeConfig, Session};
 use hgnn_char::Result;
 
 fn main() {
@@ -298,17 +298,36 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.flag_usize("requests", 64)?;
-    // the whole serving path — session construction, the one-time
-    // forward, and per-batch row gathers — lives behind the dispatcher
-    let server = Session::builder()
+    let batch = args.flag_usize("batch", 1)?.max(1);
+    let fanout = args.flag_usize("fanout", 0)?;
+    let layers = args.flag_usize("sample-layers", 1)?;
+    // the whole serving path lives behind the dispatcher: session
+    // construction, then either the one-time full-graph forward (no
+    // --fanout) or one sampled subgraph per dispatched batch (--fanout)
+    let mut builder = Session::builder()
         .dataset(DatasetId::Imdb)
         .scale(DatasetScale::ci())
         .model(ModelId::Han)
-        .schedule(policy_from(args)?)
-        .serve(ServeConfig::default());
-    let receivers: Vec<_> = (0..n as u32).map(|i| server.submit(i)).collect::<Result<_>>()?;
-    for rx in receivers {
-        let _ = rx.recv();
+        .schedule(policy_from(args)?);
+    if fanout > 0 {
+        builder = builder.sampling(SamplingSpec::uniform(fanout, layers));
+        println!("mini-batch sampling: fanout {fanout}, {layers} layer(s)");
+    }
+    let server = builder.serve(ServeConfig::default());
+    let ids: Vec<u32> = (0..n as u32).collect();
+    if batch > 1 {
+        let receivers: Vec<_> = ids
+            .chunks(batch)
+            .map(|c| server.submit_batch(c))
+            .collect::<Result<_>>()?;
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+    } else {
+        let receivers: Vec<_> = ids.iter().map(|&i| server.submit(i)).collect::<Result<_>>()?;
+        for rx in receivers {
+            let _ = rx.recv();
+        }
     }
     let stats = server.shutdown();
     println!(

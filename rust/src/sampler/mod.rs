@@ -1,0 +1,419 @@
+//! Mini-batch metapath neighbor sampling — the serving-path subsystem.
+//!
+//! The paper's serving-relevant finding is that HGNN inference is
+//! stage-wise execution over per-relation/per-metapath subgraphs, so a
+//! served batch does not need the full graph: it needs the seeds'
+//! metapath neighborhoods. [`NeighborSampler`] walks the metapaths
+//! *backward* through the plan's precomputed subgraph CSRs (stage-①
+//! output), samples up to `fanout` neighbors per node per layer, and
+//! materializes a [`SampledSubgraph`]: a compact node-id remapping,
+//! per-subgraph sub-CSRs, and gathered feature/embedding slices — a
+//! self-contained (graph, plan) pair the session executes through the
+//! ordinary [`crate::session::ExecBackend`] stage entry points. The
+//! serving hot path then scales with batch size instead of graph size
+//! (the mini-batch argument of arXiv 2408.08490 and HiHGNN's
+//! data-reusability analysis, arXiv 2307.12765).
+//!
+//! Sampling is deterministic: the kept neighbor set of a node depends
+//! only on ([`SamplingSpec::seed`], layer, subgraph, node id), so
+//! identical seed batches always materialize identical subgraphs, and a
+//! *seed's* own neighborhood (always expanded at layer 0) never depends
+//! on which other ids share its batch. Under multi-layer truncating
+//! fanouts an interior node's kept set keys on the layer it was reached
+//! at, which can differ between batches that reach it at different
+//! depths.
+//!
+//! ## Exactness
+//!
+//! Stage ② (Feature Projection) is row-local and stages ③/④ aggregate
+//! per destination row, so a seed's embedding computed on the sampled
+//! subgraph equals the full-graph embedding whenever the fanout covers
+//! every neighbor — exactly for R-GCN/GCN (mean/sum aggregation), and
+//! for HAN/MAGNN up to the semantic-attention weights `beta`, which the
+//! paper's §4.4 pipeline averages over *all* nodes of the target type.
+//! On a sampled subgraph that average runs over the sampled nodes only;
+//! deeper [`SamplingSpec::fanouts`] tighten the approximation. The
+//! integration suite pins both behaviors (see
+//! `tests/integration_sampler.rs`).
+
+use std::collections::HashMap;
+
+use crate::graph::sparse::Coo;
+use crate::graph::{HeteroGraph, HeteroGraphBuilder, NodeTypeId};
+use crate::metapath::{Subgraph, SubgraphSet};
+use crate::models::ModelPlan;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+use crate::{Error, Result};
+
+/// How a mini-batch neighborhood is sampled: one fanout per layer of
+/// backward expansion through the subgraph adjacencies.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SamplingSpec {
+    /// Per-layer neighbor cap, outermost (seed) layer first. A node's
+    /// neighbors beyond the cap are dropped by deterministic sampling
+    /// without replacement; `usize::MAX` keeps every neighbor.
+    pub fanouts: Vec<usize>,
+    /// Seed for the deterministic per-row sampling streams.
+    pub seed: u64,
+}
+
+impl SamplingSpec {
+    /// Uniform spec: the same `fanout` for `layers` expansion layers.
+    pub fn uniform(fanout: usize, layers: usize) -> SamplingSpec {
+        SamplingSpec { fanouts: vec![fanout; layers.max(1)], seed: 0x5A3D }
+    }
+
+    /// Explicit per-layer fanouts (outermost first).
+    pub fn with_fanouts(fanouts: Vec<usize>) -> SamplingSpec {
+        SamplingSpec { fanouts, seed: 0x5A3D }
+    }
+
+    /// Override the sampling seed.
+    pub fn with_seed(mut self, seed: u64) -> SamplingSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Number of expansion layers.
+    pub fn layers(&self) -> usize {
+        self.fanouts.len()
+    }
+}
+
+/// A materialized mini-batch subgraph: compacted node sets, per-subgraph
+/// sub-CSRs remapped to local ids, and gathered feature slices — packaged
+/// as a (graph, plan) pair the session executor runs unchanged.
+#[derive(Debug)]
+pub struct SampledSubgraph {
+    /// Compact graph: same node-type ids/tags as the parent, counts
+    /// shrunk to the sampled sets, features gathered row-wise. Types the
+    /// expansion never reached keep zero nodes. Carries no relations —
+    /// the plan's sub-CSRs are the only topology the stages consume.
+    pub graph: HeteroGraph,
+    /// Compact plan: same model/config/weights as the parent, subgraphs
+    /// replaced by the sampled sub-CSRs (R-GCN per-type embedding tables
+    /// are sliced to the sampled rows).
+    pub plan: ModelPlan,
+    /// Per node type, local id → parent-graph node id. For the target
+    /// type the seeds come first, in submission order.
+    pub nodes: Vec<Vec<u32>>,
+    /// The deduplicated seed ids (parent-graph ids of the target type);
+    /// seed `j` is local node `j`, and row `j` of the executed output.
+    pub seeds: Vec<u32>,
+}
+
+impl SampledSubgraph {
+    /// Total sampled nodes across all types.
+    pub fn total_nodes(&self) -> usize {
+        self.nodes.iter().map(|v| v.len()).sum()
+    }
+
+    /// Total edges across the sampled sub-CSRs.
+    pub fn total_edges(&self) -> usize {
+        self.plan.subgraphs.subgraphs.iter().map(|sg| sg.adj.nnz()).sum()
+    }
+
+    /// One-line statistics string for logs and the serving demo.
+    pub fn stats_line(&self) -> String {
+        format!(
+            "sampled batch: {} seeds -> {} nodes, {} edges over {} subgraphs",
+            self.seeds.len(),
+            self.total_nodes(),
+            self.total_edges(),
+            self.plan.subgraphs.len(),
+        )
+    }
+}
+
+/// Walks metapaths backward from seed nodes and materializes
+/// [`SampledSubgraph`]s. Stateless apart from its [`SamplingSpec`]; a
+/// session caches one and samples per served batch.
+#[derive(Debug, Clone)]
+pub struct NeighborSampler {
+    spec: SamplingSpec,
+}
+
+impl NeighborSampler {
+    /// Sampler from a spec. Fails on an empty fanout list.
+    pub fn new(spec: SamplingSpec) -> Result<NeighborSampler> {
+        if spec.fanouts.is_empty() {
+            return Err(Error::config("SamplingSpec needs at least one fanout layer"));
+        }
+        if spec.fanouts.iter().any(|&f| f == 0) {
+            return Err(Error::config("SamplingSpec fanouts must be >= 1"));
+        }
+        Ok(NeighborSampler { spec })
+    }
+
+    /// The spec this sampler applies.
+    pub fn spec(&self) -> &SamplingSpec {
+        &self.spec
+    }
+
+    /// Sample the mini-batch neighborhood of `seed_ids` (parent-graph
+    /// node ids of `plan.target`; duplicates are deduplicated, order of
+    /// first occurrence preserved) and materialize the compact
+    /// (graph, plan) pair.
+    pub fn sample(
+        &self,
+        hg: &HeteroGraph,
+        plan: &ModelPlan,
+        seed_ids: &[u32],
+    ) -> Result<SampledSubgraph> {
+        let t0 = std::time::Instant::now();
+        if seed_ids.is_empty() {
+            return Err(Error::config("sample: empty seed batch"));
+        }
+        let n_types = hg.node_types().len();
+        let target_count = hg.node_type(plan.target).count;
+
+        // local id registries, one per node type
+        let mut local: Vec<HashMap<u32, u32>> = vec![HashMap::new(); n_types];
+        let mut nodes: Vec<Vec<u32>> = vec![Vec::new(); n_types];
+        // interns `id` into type `ty`'s local id space; true when fresh
+        fn register(
+            ty: NodeTypeId,
+            id: u32,
+            local: &mut [HashMap<u32, u32>],
+            nodes: &mut [Vec<u32>],
+        ) -> (u32, bool) {
+            if let Some(&l) = local[ty].get(&id) {
+                return (l, false);
+            }
+            let l = nodes[ty].len() as u32;
+            local[ty].insert(id, l);
+            nodes[ty].push(id);
+            (l, true)
+        }
+
+        // seeds first: local ids 0..seeds.len() of the target type
+        let mut seeds = Vec::with_capacity(seed_ids.len());
+        for &id in seed_ids {
+            if id as usize >= target_count {
+                return Err(Error::config(format!(
+                    "sample: seed {id} out of range for type '{}' ({} nodes)",
+                    hg.node_type(plan.target).name,
+                    target_count
+                )));
+            }
+            let (_, fresh) = register(plan.target, id, &mut local, &mut nodes);
+            if fresh {
+                seeds.push(id);
+            }
+        }
+
+        // frontier per type: nodes registered last layer, to expand next
+        let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); n_types];
+        frontier[plan.target] = seeds.clone();
+
+        // per-subgraph edge lists in local ids
+        let p = plan.num_subgraphs();
+        let mut edges: Vec<Vec<(u32, u32)>> = vec![Vec::new(); p];
+
+        for (layer, &fanout) in self.spec.fanouts.iter().enumerate() {
+            let mut next: Vec<Vec<u32>> = vec![Vec::new(); n_types];
+            for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+                for &dst in &frontier[sg.dst_type] {
+                    let l_dst = local[sg.dst_type][&dst];
+                    let row = sg.adj.row(dst as usize);
+                    let kept = sample_row(row, fanout, self.spec.seed, layer, si, dst);
+                    for src in kept {
+                        let (l_src, fresh) =
+                            register(sg.src_type, src, &mut local, &mut nodes);
+                        if fresh {
+                            next[sg.src_type].push(src);
+                        }
+                        edges[si].push((l_dst, l_src));
+                    }
+                }
+            }
+            frontier = next;
+        }
+
+        // compact graph: same types/tags, gathered features, no relations
+        let mut gb = HeteroGraphBuilder::new(format!("{}[batch]", hg.name));
+        for (ty, t) in hg.node_types().iter().enumerate() {
+            gb.add_node_type(
+                t.name.clone(),
+                t.tag,
+                gather_rows(hg.features(ty), &nodes[ty]),
+            );
+        }
+        let graph = gb.build()?;
+
+        // compact subgraphs: sub-CSRs over the local id spaces
+        let mut subgraphs = Vec::with_capacity(p);
+        for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+            let n_rows = nodes[sg.dst_type].len();
+            let n_cols = nodes[sg.src_type].len();
+            let adj = Coo::from_edges(n_rows, n_cols, std::mem::take(&mut edges[si]))?
+                .to_csr();
+            subgraphs.push(Subgraph {
+                metapath: sg.metapath.clone(),
+                name: sg.name.clone(),
+                dst_type: sg.dst_type,
+                src_type: sg.src_type,
+                adj,
+            });
+        }
+
+        // compact plan: shared weights, sliced R-GCN embedding tables
+        let mut weights = plan.weights.clone();
+        for (&ty, embed) in &plan.weights.embed {
+            weights.embed.insert(ty, gather_rows(embed, &nodes[ty]));
+        }
+        let plan = ModelPlan {
+            model: plan.model,
+            config: plan.config.clone(),
+            subgraphs: SubgraphSet {
+                subgraphs,
+                build_nanos: t0.elapsed().as_nanos() as u64,
+            },
+            weights,
+            target: plan.target,
+        };
+        Ok(SampledSubgraph { graph, plan, nodes, seeds })
+    }
+}
+
+/// Keep up to `fanout` entries of a neighbor row, deterministically in
+/// (`seed`, `layer`, `subgraph`, `dst`): rows at or under the cap pass
+/// through untouched, longer rows are sampled without replacement.
+fn sample_row(
+    row: &[u32],
+    fanout: usize,
+    seed: u64,
+    layer: usize,
+    subgraph: usize,
+    dst: u32,
+) -> Vec<u32> {
+    if row.len() <= fanout {
+        return row.to_vec();
+    }
+    let stream = ((layer as u64) << 48) ^ ((subgraph as u64) << 40) ^ dst as u64;
+    let mut rng = Pcg32::new(seed, stream);
+    rng.choose_distinct(row.len(), fanout)
+        .into_iter()
+        .map(|i| row[i])
+        .collect()
+}
+
+/// Gather rows of `x` at `ids` into a compact `[ids.len(), cols]` tensor.
+fn gather_rows(x: &Tensor, ids: &[u32]) -> Tensor {
+    let mut out = Tensor::zeros(ids.len(), x.cols());
+    for (l, &g) in ids.iter().enumerate() {
+        out.set_row(l, x.row(g as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models::{self, ModelConfig, ModelId};
+
+    fn imdb_han() -> (HeteroGraph, ModelPlan) {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(ModelId::Han, &hg, &ModelConfig::default()).unwrap();
+        (hg, plan)
+    }
+
+    #[test]
+    fn spec_constructors_and_validation() {
+        let s = SamplingSpec::uniform(8, 2);
+        assert_eq!(s.fanouts, vec![8, 8]);
+        assert_eq!(s.layers(), 2);
+        let s = SamplingSpec::with_fanouts(vec![4, 2]).with_seed(7);
+        assert_eq!(s.seed, 7);
+        assert!(NeighborSampler::new(SamplingSpec { fanouts: vec![], seed: 0 }).is_err());
+        assert!(NeighborSampler::new(SamplingSpec { fanouts: vec![0], seed: 0 }).is_err());
+        assert!(NeighborSampler::new(SamplingSpec::uniform(1, 1)).is_ok());
+    }
+
+    #[test]
+    fn seeds_come_first_and_dedup() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(4, 1)).unwrap();
+        let s = sampler.sample(&hg, &plan, &[5, 2, 5, 9, 2]).unwrap();
+        assert_eq!(s.seeds, vec![5, 2, 9]);
+        assert_eq!(&s.nodes[plan.target][..3], &[5, 2, 9]);
+        // validity of the materialized pieces
+        s.graph.validate().unwrap();
+        for sg in &s.plan.subgraphs.subgraphs {
+            sg.adj.validate().unwrap();
+            assert_eq!(sg.adj.n_rows, s.nodes[sg.dst_type].len());
+            assert_eq!(sg.adj.n_cols, s.nodes[sg.src_type].len());
+        }
+    }
+
+    #[test]
+    fn fanout_caps_degrees_of_expanded_rows() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(3, 1)).unwrap();
+        let seeds: Vec<u32> = (0..16).collect();
+        let s = sampler.sample(&hg, &plan, &seeds).unwrap();
+        for sg in &s.plan.subgraphs.subgraphs {
+            for r in 0..seeds.len() {
+                assert!(sg.adj.degree(r) <= 3, "seed row degree {} > 3", sg.adj.degree(r));
+            }
+        }
+        // full fanout reproduces the parent rows exactly (remapped)
+        let full = NeighborSampler::new(SamplingSpec::uniform(usize::MAX, 1)).unwrap();
+        let s = full.sample(&hg, &plan, &seeds).unwrap();
+        for (sg, parent) in s.plan.subgraphs.subgraphs.iter().zip(&plan.subgraphs.subgraphs) {
+            for (r, &seed) in seeds.iter().enumerate() {
+                assert_eq!(sg.adj.degree(r), parent.adj.degree(seed as usize));
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(2, 2)).unwrap();
+        let a = sampler.sample(&hg, &plan, &[0, 1, 2, 3]).unwrap();
+        let b = sampler.sample(&hg, &plan, &[0, 1, 2, 3]).unwrap();
+        assert_eq!(a.nodes, b.nodes);
+        for (x, y) in a.plan.subgraphs.subgraphs.iter().zip(&b.plan.subgraphs.subgraphs) {
+            assert_eq!(x.adj, y.adj);
+        }
+    }
+
+    #[test]
+    fn layers_expand_the_frontier() {
+        let (hg, plan) = imdb_han();
+        let one = NeighborSampler::new(SamplingSpec::uniform(4, 1)).unwrap();
+        let two = NeighborSampler::new(SamplingSpec::uniform(4, 2)).unwrap();
+        let a = one.sample(&hg, &plan, &[0]).unwrap();
+        let b = two.sample(&hg, &plan, &[0]).unwrap();
+        assert!(b.total_nodes() >= a.total_nodes());
+        assert!(b.total_edges() >= a.total_edges());
+        assert!(b.stats_line().contains("1 seeds"));
+    }
+
+    #[test]
+    fn bad_seeds_are_rejected() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(4, 1)).unwrap();
+        assert!(sampler.sample(&hg, &plan, &[]).is_err());
+        let count = hg.node_type(plan.target).count as u32;
+        assert!(sampler.sample(&hg, &plan, &[count]).is_err());
+    }
+
+    #[test]
+    fn rgcn_embeddings_are_sliced() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(ModelId::Rgcn, &hg, &ModelConfig::default()).unwrap();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(4, 1)).unwrap();
+        let s = sampler.sample(&hg, &plan, &[1, 3]).unwrap();
+        for (&ty, embed) in &s.plan.weights.embed {
+            assert_eq!(embed.rows(), s.nodes[ty].len());
+            // sliced rows match the parent table's rows
+            for (l, &g) in s.nodes[ty].iter().enumerate() {
+                assert_eq!(embed.row(l), plan.weights.embed[&ty].row(g as usize));
+            }
+        }
+    }
+}

@@ -9,6 +9,12 @@
 //! across runs and served batches (plan, weights, compiled artifacts,
 //! kernel-context scratch) instead of rebuilding per call.
 //!
+//! The serving path additionally composes with mini-batch metapath
+//! sampling ([`SessionBuilder::sampling`]): [`Session::run_batch`] then
+//! executes the stages over a [`crate::sampler::SampledSubgraph`] of the
+//! requested seeds, so per-batch cost scales with the batch instead of
+//! the graph.
+//!
 //! ```no_run
 //! use hgnn_char::prelude::*;
 //!
@@ -37,11 +43,13 @@ use crate::graph::HeteroGraph;
 use crate::kernels::Ctx;
 use crate::models::{self, ModelConfig, ModelId, ModelPlan};
 use crate::profiler::Profile;
+use crate::sampler::{NeighborSampler, SampledSubgraph};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
 pub use backend::{BackendCaps, ExecBackend, NativeBackend, PjrtBackend, Projected, SyncExecBackend};
 pub use crate::coordinator::serve::{ServeConfig, ServeStats, Server};
+pub use crate::sampler::SamplingSpec;
 pub use exec::StagedRun;
 
 /// How the session schedules the stages.
@@ -182,6 +190,7 @@ pub struct SessionBuilder {
     policy: SchedulePolicy,
     profiling: Profiling,
     gpu: Option<GpuModel>,
+    sampling: Option<SamplingSpec>,
 }
 
 impl Default for SchedulePolicy {
@@ -258,6 +267,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable mini-batch metapath sampling for the batch/serving path:
+    /// [`Session::run_batch`] executes the FP/NA/SA stages over a
+    /// [`SampledSubgraph`] of the requested seeds instead of gathering
+    /// rows from a cached full-graph forward, so batch latency scales
+    /// with batch size rather than graph size. Whole-model backends
+    /// (fused static-shape artifacts) ignore the spec and keep the
+    /// cached full-graph path.
+    pub fn sampling(mut self, spec: SamplingSpec) -> Self {
+        self.sampling = Some(spec);
+        self
+    }
+
     /// Build the session: synthesize/adopt the graph, build the plan,
     /// instantiate the backend.
     pub fn build(self) -> Result<Session> {
@@ -291,6 +312,10 @@ impl SessionBuilder {
             BackendSpec::Custom(custom) => custom,
         };
         let scratch = backend.make_ctx();
+        let sampler = match self.sampling {
+            Some(spec) => Some(NeighborSampler::new(spec)?),
+            None => None,
+        };
         Ok(Session {
             hg,
             plan,
@@ -298,6 +323,7 @@ impl SessionBuilder {
             gpu: self.gpu.unwrap_or_default(),
             policy: self.policy,
             profiling: self.profiling,
+            sampler,
             scratch,
             cached_output: None,
             runs: 0,
@@ -325,6 +351,9 @@ pub struct Session {
     gpu: GpuModel,
     policy: SchedulePolicy,
     profiling: Profiling,
+    /// Mini-batch sampler cached by the builder; `Some` switches
+    /// [`Session::run_batch`] to sampled-subgraph execution.
+    sampler: Option<NeighborSampler>,
     /// Kernel context reused across runs (event-buffer allocation
     /// survives between runs).
     scratch: Ctx,
@@ -440,13 +469,30 @@ impl Session {
         Ok(out)
     }
 
-    /// Embedding rows for a batch of target node ids. The full-graph
-    /// forward runs (at most) once and its output is cached (moved, not
-    /// cloned) and reused across batches until [`Session::invalidate`];
-    /// ids wrap modulo the output rows, as the serving path has always
-    /// done. Plain [`Session::run`] calls do not touch this cache — the
-    /// cost of caching is paid only by the batch path that reads it.
+    /// The sampling spec in effect, if mini-batch sampling is enabled.
+    pub fn sampling(&self) -> Option<&SamplingSpec> {
+        self.sampler.as_ref().map(|s| s.spec())
+    }
+
+    /// Embedding rows for a batch of target node ids; ids wrap modulo
+    /// the target-type node count, as the serving path has always done.
+    ///
+    /// Without [`SessionBuilder::sampling`], the full-graph forward runs
+    /// (at most) once and its output is cached (moved, not cloned) and
+    /// reused across batches until [`Session::invalidate`]. Plain
+    /// [`Session::run`] calls do not touch this cache — the cost of
+    /// caching is paid only by the batch path that reads it.
+    ///
+    /// With sampling enabled (and a staged backend), every call samples
+    /// the batch's metapath neighborhood and executes the FP/NA/SA
+    /// stages over that [`SampledSubgraph`] only — embeddings are always
+    /// fresh and the cost scales with the batch, not the graph.
+    /// Whole-model backends keep the cached full-graph path: their fused
+    /// static-shape artifact subsumes any subgraph schedule.
     pub fn run_batch(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        if self.sampler.is_some() && !self.backend.caps().whole_model {
+            return self.run_batch_sampled(node_ids);
+        }
         if self.cached_output.is_none() {
             let run = self.run()?;
             self.cached_output = Some(run.output);
@@ -454,6 +500,56 @@ impl Session {
         let z = self.cached_output.as_ref().expect("populated above");
         let n = z.rows().max(1);
         Ok(node_ids.iter().map(|&i| z.row(i as usize % n).to_vec()).collect())
+    }
+
+    /// Sample the mini-batch neighborhood of `node_ids` without
+    /// executing it (ids wrap like [`Session::run_batch`]). Errors when
+    /// the session was built without [`SessionBuilder::sampling`].
+    pub fn sample_batch(&self, node_ids: &[u32]) -> Result<SampledSubgraph> {
+        let sampler = self.sampler.as_ref().ok_or_else(|| {
+            Error::config("session built without .sampling(..); nothing to sample")
+        })?;
+        sampler.sample(&self.hg, &self.plan, &self.wrap_ids(node_ids))
+    }
+
+    /// Map requested ids onto target-type node ids (wrap modulo the
+    /// node count — the serving path's long-standing id semantics).
+    fn wrap_ids(&self, node_ids: &[u32]) -> Vec<u32> {
+        let n = self.hg.node_type(self.plan.target).count.max(1) as u32;
+        node_ids.iter().map(|&i| i % n).collect()
+    }
+
+    /// The sampled batch path: one sampled subgraph per call, executed
+    /// through the ordinary [`ExecBackend`] stage entry points.
+    fn run_batch_sampled(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let sampler = self.sampler.as_ref().expect("checked by run_batch");
+        let seeds = self.wrap_ids(node_ids);
+        let sampled = sampler.sample(&self.hg, &self.plan, &seeds)?;
+        let run = exec::execute(
+            self.backend.as_ref(),
+            &self.gpu,
+            &sampled.plan,
+            &sampled.graph,
+            self.policy,
+            &mut self.scratch,
+        )?;
+        self.runs += 1;
+        // seed j is local node j of the target type, i.e. output row j;
+        // duplicate ids in the batch collapse onto the same seed row
+        let mut row_of: std::collections::HashMap<u32, usize> =
+            std::collections::HashMap::with_capacity(sampled.seeds.len());
+        for (j, &s) in sampled.seeds.iter().enumerate() {
+            row_of.insert(s, j);
+        }
+        seeds
+            .iter()
+            .map(|g| {
+                let j = *row_of
+                    .get(g)
+                    .ok_or_else(|| Error::config(format!("seed {g} lost in sampling")))?;
+                Ok(run.output.row(j).to_vec())
+            })
+            .collect()
     }
 
     /// Drop the cached embeddings (e.g. after a feature-store refresh);
@@ -576,6 +672,37 @@ mod tests {
         session.invalidate();
         let _ = session.run_batch(&[0]).unwrap();
         assert_eq!(session.runs(), 2);
+    }
+
+    #[test]
+    fn run_batch_sampled_executes_per_call() {
+        let mut session = ci_builder()
+            .sampling(crate::sampler::SamplingSpec::uniform(8, 1))
+            .build()
+            .unwrap();
+        assert!(session.sampling().is_some());
+        let rows = session.run_batch(&[0, 1, 0]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].len(), session.plan().config.hidden_dim);
+        assert_eq!(rows[0], rows[2], "duplicate ids share a seed row");
+        assert_eq!(session.runs(), 1);
+        // sampled serving never reuses a stale cache: every batch executes
+        let _ = session.run_batch(&[2]).unwrap();
+        assert_eq!(session.runs(), 2);
+    }
+
+    #[test]
+    fn sample_batch_requires_spec_and_wraps_ids() {
+        let session = ci_builder().build().unwrap();
+        assert!(session.sample_batch(&[0]).is_err());
+        let session = ci_builder()
+            .sampling(crate::sampler::SamplingSpec::uniform(4, 1))
+            .build()
+            .unwrap();
+        let n = session.graph().node_type(session.plan().target).count as u32;
+        let s = session.sample_batch(&[n + 3, 3]).unwrap();
+        // both ids wrap onto seed 3
+        assert_eq!(s.seeds, vec![3]);
     }
 
     #[test]
