@@ -1,0 +1,175 @@
+//! Bench: **cross-request reuse — served-batch latency vs request
+//! overlap × cache capacity**.
+//!
+//! The serving question the reuse caches answer: when request streams
+//! overlap (Zipfian seed popularity — the "millions of users" regime),
+//! how much of each sampled batch's stage-②/③ work is redundant, and
+//! how much capacity does it take to stop paying it? Each sweep cell
+//! runs the same deterministic batch sequence through a fresh session;
+//! only the cache capacity changes, so latency differences are the
+//! caches' doing. Expected qualitative trend: at fixed overlap,
+//! served-batch latency **monotonically improves with capacity** (more
+//! resident rows → higher hit rate → fewer sgemm/SpMM invocations),
+//! dropping toward pure gather cost as the hit rate saturates; sharper
+//! overlap (larger Zipf exponent) reaches the floor at smaller
+//! capacity. Capacity 0 is the no-cache baseline.
+//!
+//! Also reports the end-to-end serving loop (`Server::start_session`)
+//! with one shared cache across every dispatch.
+//!
+//! Run: `cargo bench --bench reuse_serving`
+
+use std::time::Instant;
+
+use hgnn_char::bench::{header, sink};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::session::{SamplingSpec, ServeConfig, Session, SessionBuilder};
+use hgnn_char::util::Pcg32;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.25)
+    }
+}
+
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(scale())
+        .model(ModelId::Han)
+        // full fanout: every row is coverage-exact, so both caches apply
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+}
+
+/// Zipfian id sampler: node id r drawn with weight 1/(r+1)^s.
+struct Zipf {
+    cdf: Vec<f64>,
+    rng: Pcg32,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64, seed: u64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        for v in cdf.iter_mut() {
+            *v /= acc;
+        }
+        Zipf { cdf, rng: Pcg32::new(seed, 0) }
+    }
+
+    fn next(&mut self) -> u32 {
+        let u = self.rng.gen_f64();
+        let i = match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i,
+        };
+        i.min(self.cdf.len() - 1) as u32
+    }
+}
+
+const BATCH: usize = 32;
+
+fn main() {
+    header(
+        "cross-request reuse: served-batch latency vs overlap x capacity",
+        "Zipfian request streams over sampled HAN batches (IMDB synth); times are wall",
+    );
+    let quick = std::env::var("QUICK_BENCH").is_ok();
+    let batches = if quick { 30 } else { 120 };
+
+    let probe = builder().build().unwrap();
+    let n = probe.graph().node_type(probe.plan().target).count;
+    let total: usize = probe.graph().node_types().iter().map(|t| t.count).sum();
+    println!(
+        "{}  (target nodes: {n}, total nodes: {total}, batch {BATCH}, {batches} timed batches)\n",
+        probe.graph().stats_line()
+    );
+    drop(probe);
+
+    let caps = [0usize, (total / 8).max(1), (total / 2).max(1), 2 * total];
+    for &(s, label) in &[(0.0f64, "uniform"), (0.8, "zipf-0.8"), (1.4, "zipf-1.4")] {
+        println!("-- request overlap: {label} (Zipf exponent {s}) --");
+        let mut base_mean: Option<f64> = None;
+        let mut prev = f64::INFINITY;
+        let mut monotone = true;
+        for &cap in &caps {
+            let mut b = builder();
+            if cap > 0 {
+                b = b.reuse(ReuseSpec::rows(cap));
+            }
+            let mut session = b.build().unwrap();
+            // identical deterministic batch sequence in every cell
+            let mut zipf = Zipf::new(n, s, 0xC0FFEE);
+            // warm-up: let the caches reach steady state before timing
+            for _ in 0..3 {
+                let ids: Vec<u32> = (0..BATCH).map(|_| zipf.next()).collect();
+                sink(session.run_batch(&ids).unwrap());
+            }
+            let t0 = Instant::now();
+            for _ in 0..batches {
+                let ids: Vec<u32> = (0..BATCH).map(|_| zipf.next()).collect();
+                sink(session.run_batch(&ids).unwrap());
+            }
+            let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / batches as f64;
+            let hit = match session.reuse_stats() {
+                Some(r) => format!(
+                    "proj hit {:>5.1}%, agg hit {:>5.1}%",
+                    100.0 * r.proj_hit_rate(),
+                    100.0 * r.agg_hit_rate()
+                ),
+                None => "no cache".to_string(),
+            };
+            let speedup = base_mean.map(|b| b / mean_ms.max(1e-9)).unwrap_or(1.0);
+            if base_mean.is_none() {
+                base_mean = Some(mean_ms);
+            }
+            println!(
+                "  cap {cap:>6} rows  {mean_ms:>9.3} ms/batch  [{hit}]  {speedup:.2}x vs no-cache"
+            );
+            // allow 10% wall noise before declaring non-monotonicity
+            if mean_ms > prev * 1.10 {
+                monotone = false;
+            }
+            prev = mean_ms;
+        }
+        println!(
+            "  -> latency non-increasing with capacity: {}\n",
+            if monotone { "yes" } else { "NO (wall noise or regression)" }
+        );
+    }
+
+    // end-to-end serving loop: one shared cache across every dispatch
+    let server = builder()
+        .reuse(ReuseSpec::rows(2 * total))
+        .serve(ServeConfig::default());
+    let mut zipf = Zipf::new(n, 1.2, 0xFEED);
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..16)
+        .map(|_| {
+            let ids: Vec<u32> = (0..BATCH).map(|_| zipf.next()).collect();
+            server.submit_batch(&ids).unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "serving loop: {} rows in {} dispatches in {:.1} ms ({:.0} rows/s)",
+        stats.completed,
+        stats.batches,
+        wall.as_secs_f64() * 1e3,
+        stats.throughput_rps,
+    );
+    if let Some(r) = &stats.reuse {
+        println!("{}", r.line());
+    }
+}

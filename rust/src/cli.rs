@@ -138,6 +138,8 @@ COMMANDS:
       [--fanout K]                 mini-batch metapath sampling, K
                                    neighbors per node per layer
       [--sample-layers L]          sampling depth (default 1)
+      [--reuse-cap N]              cross-request reuse caches, N rows
+                                   per cache (requires --fanout)
   help                           this text
 ";
 

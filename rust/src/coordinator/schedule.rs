@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use crate::gpumodel::GpuModel;
 use crate::kernels::KernelType;
 use crate::profiler::{Profile, StageId};
+use crate::reuse::ReuseStats;
 use crate::coordinator::SchedulePolicy;
 
 /// Longest-processing-time-first assignment of `costs` onto `workers`
@@ -45,18 +46,29 @@ pub struct ScheduleReport {
     pub na_makespan_ns: f64,
     /// Where (modeled ns) the NA→SA barrier falls.
     pub barrier_at_ns: f64,
+    /// Cumulative reuse-cache counters when the run executed through the
+    /// cache-aware serving path (`None` for plain runs).
+    pub reuse: Option<ReuseStats>,
 }
 
 impl ScheduleReport {
-    /// One-line summary.
+    /// One-line summary (appends cache hit rates when reuse was active).
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<22} makespan {:>12}  (serial {:>12}, speedup {:.2}x)",
             self.policy.label(),
             crate::util::human_time(self.modeled_makespan_ns),
             crate::util::human_time(self.modeled_serial_ns),
             self.speedup
-        )
+        );
+        if let Some(r) = &self.reuse {
+            line.push_str(&format!(
+                "  [proj hit {:.0}%, agg hit {:.0}%]",
+                100.0 * r.proj_hit_rate(),
+                100.0 * r.agg_hit_rate()
+            ));
+        }
+        line
     }
 }
 
@@ -139,6 +151,7 @@ pub fn analyze(
         speedup: if makespan > 0.0 { serial / makespan } else { 1.0 },
         na_makespan_ns: na,
         barrier_at_ns: na_end,
+        reuse: None,
     }
 }
 

@@ -16,7 +16,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::session::SessionBuilder;
+use crate::reuse::ReuseStats;
+use crate::session::{Session, SessionBuilder};
 use crate::util::stats::Summary;
 use crate::{Error, Result};
 
@@ -46,8 +47,14 @@ pub enum Reply {
 /// Dynamic batching configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Maximum node ids per dispatched batch (a single oversized
-    /// [`Server::submit_batch`] request still dispatches whole).
+    /// Maximum node ids per executor dispatch. The dispatcher stops
+    /// filling a batch once this many ids are queued; a flattened queue
+    /// that still exceeds it (a single oversized
+    /// [`Server::submit_batch`], or a last request overshooting the
+    /// fill) is **chunked into `max_batch`-sized dispatches** — so with
+    /// sampling configured, every executed subgraph stays batch-sized
+    /// instead of ballooning with the request. Each request's rows are
+    /// reassembled across chunks before its one reply is sent.
     pub max_batch: usize,
     /// Maximum time the dispatcher waits to fill a batch.
     pub flush_after: Duration,
@@ -75,6 +82,9 @@ pub struct ServeStats {
     pub throughput_rps: f64,
     /// Mean node ids per dispatch.
     pub mean_batch: f64,
+    /// Cumulative reuse-cache counters of the executor's session, when
+    /// it serves through cross-request reuse (`None` otherwise).
+    pub reuse: Option<ReuseStats>,
 }
 
 /// Batch executor: given the node ids of one batch, return one embedding
@@ -85,6 +95,13 @@ pub struct ServeStats {
 pub trait BatchExecutor {
     /// Execute one batch.
     fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
+
+    /// Cumulative reuse-cache counters, when the executor serves through
+    /// a session with cross-request reuse enabled. The dispatcher
+    /// snapshots this after every batch into [`ServeStats::reuse`].
+    fn reuse_stats(&self) -> Option<ReuseStats> {
+        None
+    }
 }
 
 impl<F> BatchExecutor for F
@@ -110,6 +127,7 @@ struct RawStats {
     batches: u64,
     latencies_ns: Vec<f64>,
     batch_sizes: Vec<usize>,
+    reuse: Option<ReuseStats>,
 }
 
 impl Server {
@@ -149,8 +167,7 @@ impl Server {
                     break;
                 }
                 // fill the dispatch until max_batch *ids* are queued or
-                // flush_after expires; an oversized submit_batch still
-                // dispatches whole (requests are never split)
+                // flush_after expires
                 let deadline = Instant::now() + config.flush_after;
                 let mut queued: usize = pending.iter().map(|r| r.node_ids.len()).sum();
                 while queued < config.max_batch {
@@ -167,37 +184,59 @@ impl Server {
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                // execute all queued ids as one batch
+                // execute all queued ids in max_batch-sized chunks: a
+                // flattened queue can exceed max_batch (one oversized
+                // submit_batch, or a last request overshooting the
+                // fill); chunking keeps every executor dispatch — and
+                // hence every sampled subgraph — batch-sized, and each
+                // request's rows are reassembled before its one reply
                 let batch: Vec<Request> = std::mem::take(&mut pending);
                 let ids: Vec<u32> =
                     batch.iter().flat_map(|r| r.node_ids.iter().copied()).collect();
-                match executor.execute(&ids) {
-                    Ok(rows) => {
-                        let done = Instant::now();
-                        let mut s = stats_w.lock().unwrap();
-                        s.batches += 1;
-                        s.batch_sizes.push(ids.len());
-                        let mut rows = rows.into_iter();
-                        for req in batch {
-                            let take = req.node_ids.len();
-                            s.completed += take as u64;
-                            s.latencies_ns
-                                .push(done.duration_since(req.submitted).as_nanos() as f64);
-                            match req.reply {
-                                Reply::Single(tx) => {
-                                    if let Some(row) = rows.next() {
-                                        let _ = tx.send(row);
-                                    }
-                                }
-                                Reply::Batch(tx) => {
-                                    let _ = tx.send(rows.by_ref().take(take).collect());
-                                }
-                            }
+                let cap = config.max_batch.max(1);
+                let mut rows: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
+                let mut failed = false;
+                for chunk in ids.chunks(cap) {
+                    match executor.execute(chunk) {
+                        Ok(mut r) => {
+                            let mut s = stats_w.lock().unwrap();
+                            s.batches += 1;
+                            s.batch_sizes.push(chunk.len());
+                            drop(s);
+                            rows.append(&mut r);
+                        }
+                        Err(e) => {
+                            eprintln!("serve: batch execution failed: {e}");
+                            failed = true;
+                            break;
                         }
                     }
-                    Err(e) => {
-                        eprintln!("serve: batch execution failed: {e}");
-                        // drop the batch; clients see a closed channel
+                }
+                if failed {
+                    // drop the whole flattened batch; clients see a
+                    // closed channel — but cache activity from the
+                    // chunks that did run still reaches the stats
+                    stats_w.lock().unwrap().reuse = executor.reuse_stats();
+                    continue;
+                }
+                let done = Instant::now();
+                let mut s = stats_w.lock().unwrap();
+                s.reuse = executor.reuse_stats();
+                let mut rows = rows.into_iter();
+                for req in batch {
+                    let take = req.node_ids.len();
+                    s.completed += take as u64;
+                    s.latencies_ns
+                        .push(done.duration_since(req.submitted).as_nanos() as f64);
+                    match req.reply {
+                        Reply::Single(tx) => {
+                            if let Some(row) = rows.next() {
+                                let _ = tx.send(row);
+                            }
+                        }
+                        Reply::Batch(tx) => {
+                            let _ = tx.send(rows.by_ref().take(take).collect());
+                        }
                     }
                 }
             }
@@ -216,17 +255,15 @@ impl Server {
     /// When the builder carries a sampling spec
     /// (`SessionBuilder::sampling`), each dispatch batches every queued
     /// request — singles and typed batches alike — into **one** sampled
-    /// subgraph and executes only that, so serving cost tracks offered
-    /// load instead of graph size.
+    /// subgraph (chunked at `max_batch` ids, see [`ServeConfig`]) and
+    /// executes only that, so serving cost tracks offered load instead
+    /// of graph size. With `SessionBuilder::reuse` stacked on top, the
+    /// session's reuse caches are shared across every dispatch this
+    /// server executes, and their counters surface in
+    /// [`ServeStats::reuse`].
     pub fn start_session(config: ServeConfig, builder: SessionBuilder) -> Server {
-        Self::start_with(config, move || {
-            let mut session = builder.build().map_err(|e| e.to_string());
-            move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
-                match session.as_mut() {
-                    Ok(s) => s.run_batch(ids),
-                    Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
-                }
-            }
+        Self::start_with(config, move || SessionExecutor {
+            session: builder.build().map_err(|e| e.to_string()),
         })
     }
 
@@ -284,6 +321,7 @@ impl Server {
             } else {
                 s.batch_sizes.iter().sum::<usize>() as f64 / s.batch_sizes.len() as f64
             },
+            reuse: s.reuse.clone(),
         }
     }
 
@@ -312,6 +350,27 @@ impl Drop for Server {
     /// thread, no lost replies.
     fn drop(&mut self) {
         self.stop();
+    }
+}
+
+/// The canonical executor behind [`Server::start_session`]: a session
+/// built inside the dispatcher thread (or the build error every batch
+/// will report). Exposes the session's reuse counters to the stats
+/// plumbing, which a plain closure executor cannot.
+struct SessionExecutor {
+    session: std::result::Result<Session, String>,
+}
+
+impl BatchExecutor for SessionExecutor {
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        match self.session.as_mut() {
+            Ok(s) => s.run_batch(node_ids),
+            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+        }
+    }
+
+    fn reuse_stats(&self) -> Option<ReuseStats> {
+        self.session.as_ref().ok().and_then(|s| s.reuse_stats())
     }
 }
 
@@ -403,7 +462,7 @@ mod tests {
     }
 
     #[test]
-    fn oversized_batch_dispatches_whole() {
+    fn oversized_batch_chunks_into_max_batch_dispatches() {
         let server = Server::start(
             ServeConfig { max_batch: 4, flush_after: Duration::from_millis(1) },
             echo_executor,
@@ -411,10 +470,42 @@ mod tests {
         let ids: Vec<u32> = (0..13).collect();
         let rx = server.submit_batch(&ids).unwrap();
         let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // the one reply carries every row, in submission order, even
+        // though execution was chunked
         assert_eq!(rows.len(), 13);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row[0], i as f32);
+        }
         let stats = server.shutdown();
         assert_eq!(stats.completed, 13);
-        assert_eq!(stats.batches, 1, "a request is never split across dispatches");
+        assert_eq!(
+            stats.batches, 4,
+            "13 ids at max_batch 4 execute as ceil(13/4) = 4 dispatches"
+        );
+        assert!(stats.mean_batch <= 4.0);
+    }
+
+    #[test]
+    fn executor_error_mid_chunk_drops_the_whole_batch() {
+        // executor fails on the second chunk: the client must see a
+        // closed channel, not a partial reply
+        let mut calls = 0;
+        let server = Server::start(
+            ServeConfig { max_batch: 4, flush_after: Duration::from_millis(1) },
+            move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+                calls += 1;
+                if calls > 1 {
+                    return Err(Error::Runtime("chunk 2 boom".into()));
+                }
+                Ok(ids.iter().map(|&i| vec![i as f32]).collect())
+            },
+        );
+        let ids: Vec<u32> = (0..8).collect();
+        let rx = server.submit_batch(&ids).unwrap();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 0);
+        assert!(rx.try_recv().is_err(), "failed batches drop their replies");
+        assert_eq!(stats.batches, 1, "only the successful chunk counts");
     }
 
     #[test]

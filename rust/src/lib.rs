@@ -13,7 +13,8 @@
 //! * **L3 (this crate)** — the Rust coordinator: dataset synthesis,
 //!   metapath subgraph building, the [`session`] execution surface
 //!   (schedule policies over a pluggable backend), the mini-batch
-//!   [`sampler`] behind the serving path, the profiler and GPU model,
+//!   [`sampler`] behind the serving path, the cross-request [`reuse`]
+//!   caches for served batches, the profiler and GPU model,
 //!   and the PJRT runtime that loads AOT-compiled JAX/Pallas artifacts.
 //! * **L2 (`python/compile/model.py`)** — JAX stage functions lowered once
 //!   to HLO text (`make artifacts`), never on the request path.
@@ -79,6 +80,7 @@ pub mod metapath;
 pub mod models;
 pub mod profiler;
 pub mod report;
+pub mod reuse;
 pub mod runtime;
 pub mod sampler;
 pub mod session;
@@ -156,6 +158,7 @@ pub mod prelude {
     pub use crate::metapath::{Metapath, SubgraphSet};
     pub use crate::profiler::{Profile, StageId};
     pub use crate::report;
+    pub use crate::reuse::{ReuseCache, ReuseSpec, ReuseStats};
     pub use crate::sampler::{NeighborSampler, SampledSubgraph, SamplingSpec};
     pub use crate::tensor::Tensor;
     pub use crate::{Error, Result};

@@ -301,9 +301,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.flag_usize("batch", 1)?.max(1);
     let fanout = args.flag_usize("fanout", 0)?;
     let layers = args.flag_usize("sample-layers", 1)?;
+    let reuse_cap = args.flag_usize("reuse-cap", 0)?;
     // the whole serving path lives behind the dispatcher: session
     // construction, then either the one-time full-graph forward (no
-    // --fanout) or one sampled subgraph per dispatched batch (--fanout)
+    // --fanout) or one sampled subgraph per dispatched batch (--fanout),
+    // optionally with the cross-request reuse caches (--reuse-cap)
     let mut builder = Session::builder()
         .dataset(DatasetId::Imdb)
         .scale(DatasetScale::ci())
@@ -312,6 +314,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if fanout > 0 {
         builder = builder.sampling(SamplingSpec::uniform(fanout, layers));
         println!("mini-batch sampling: fanout {fanout}, {layers} layer(s)");
+    }
+    if reuse_cap > 0 {
+        if fanout == 0 {
+            return Err(hgnn_char::Error::config(
+                "serve: --reuse-cap requires --fanout (reuse memoizes sampled-batch \
+                 stage results)",
+            ));
+        }
+        builder = builder.reuse(hgnn_char::reuse::ReuseSpec::rows(reuse_cap));
+        println!("cross-request reuse: {reuse_cap} rows per cache");
     }
     let server = builder.serve(ServeConfig::default());
     let ids: Vec<u32> = (0..n as u32).collect();
@@ -338,5 +350,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         hgnn_char::util::human_time(stats.latency.median),
         stats.throughput_rps
     );
+    if let Some(r) = &stats.reuse {
+        println!("{}", r.line());
+    }
     Ok(())
 }

@@ -88,6 +88,9 @@ pub struct Profile {
     pub kernels: Vec<ProfiledKernel>,
     /// CPU nanoseconds spent in Subgraph Build (stage ①).
     pub subgraph_build_nanos: u64,
+    /// Cumulative reuse-cache counters when the run executed through the
+    /// cache-aware serving path (`None` for plain runs).
+    pub reuse: Option<crate::reuse::ReuseStats>,
 }
 
 impl Profile {
@@ -232,6 +235,9 @@ impl Profile {
             "  (Subgraph Build on CPU: {}, excluded as in the paper)\n",
             crate::util::human_time(self.subgraph_build_nanos as f64)
         ));
+        if let Some(r) = &self.reuse {
+            out.push_str(&format!("  {}\n", r.line()));
+        }
         out
     }
 

@@ -1,0 +1,484 @@
+//! Cross-request reuse caches for served batches — memoizing the
+//! batch-invariant stage results that overlapping requests keep
+//! recomputing.
+//!
+//! The paper's stage breakdown (Fig 2: FP ≈ 19%, NA ≈ 74%, SA ≈ 7% on
+//! average) concentrates per-batch cost in the compute-bound Feature
+//! Projection sgemms and the dominant, memory-bound Neighbor
+//! Aggregation, and HiHGNN (arXiv 2307.12765) identifies *data
+//! reusability* across semantic graphs as the key software lever on
+//! top of parallelism. The serving path samples a fresh metapath
+//! neighborhood per dispatched batch (PR 2), so under overlapping
+//! request streams — the Zipfian access patterns of the ROADMAP's
+//! "millions of users" north star — the same nodes are re-projected
+//! and re-aggregated over and over. This module caches both stages'
+//! rows, behind a capacity bound:
+//!
+//! * **Projection cache** — per `(node type, parent node id)`, the
+//!   stage-② output row. FP is row-local (`h[v] = x[v] · W_ty`), so a
+//!   projected row is **seed-set independent**: it never depends on
+//!   which other nodes share the sampled subgraph, which layer the node
+//!   was reached at, or the fanout. Any sampled batch may gather a
+//!   cached row and only project the misses.
+//! * **Aggregate cache** — per `(metapath subgraph, parent destination
+//!   node)`, the stage-③ output row. NA is destination-row-local
+//!   (attention terms, edge softmax and the weighted reduce all operate
+//!   within one destination's edge segment), so the row is
+//!   batch-invariant **only at full-fanout coverage**: it is cached and
+//!   substituted only for rows whose entire parent neighbor list was
+//!   kept (`degree ≤ fanout`). Truncated rows depend on the sampling
+//!   spec and are never cached.
+//!
+//! ## Bit-identical substitution
+//!
+//! Cached rows are substituted byte-for-byte for what a cache-cold run
+//! would compute, which rests on two invariants enforced elsewhere:
+//!
+//! 1. the sampler's **canonical local ordering** (local node ids ascend
+//!    with parent ids, see [`crate::sampler`]), which pins the f32
+//!    accumulation order of every row-local kernel regardless of which
+//!    other nodes co-occupy the batch; and
+//! 2. **node-set preservation**: a cache hit removes a destination
+//!    row's *edges* from the sampled sub-CSR (the miss-only sub-CSR)
+//!    but still registers its sources, so the materialized node set —
+//!    and hence HAN/MAGNN's semantic-attention average, which runs over
+//!    all sampled nodes of the target type — is identical to a cold
+//!    run.
+//!
+//! `tests/integration_reuse.rs` pins cached-vs-cold bit-identity across
+//! overlapping batches for both the row-local models and the
+//! semantic-attention models.
+//!
+//! ## Generation-based invalidation
+//!
+//! Cached rows are functions of the weights and features they were
+//! computed from. [`ReuseCache::invalidate`] — called by
+//! `Session::invalidate` and `Session::set_weights` — clears both
+//! caches and bumps a generation counter, so stage results computed
+//! under stale parameters can never leak into post-reload batches. The
+//! generation and an invalidation count are reported in [`ReuseStats`].
+//!
+//! ## Eviction
+//!
+//! Both caches are bounded in **rows** ([`ReuseSpec`]) and evict with
+//! the clock (second-chance) policy: a hit sets a reference bit; an
+//! insert into a full cache sweeps the hand, clearing bits, and evicts
+//! the first unreferenced slot — an O(1)-amortized LRU approximation
+//! that needs no ordered index. Capacity 0 disables a cache (every
+//! lookup misses, inserts are dropped).
+
+use std::collections::HashMap;
+
+/// Capacities of the two reuse caches, in rows.
+///
+/// Sizing intuition: a projection row is `hidden_dim` f32s, an
+/// aggregate row likewise, so a capacity of `n` rows bounds each cache
+/// at `n × hidden_dim × 4` bytes. `benches/reuse_serving.rs` sweeps
+/// capacity × request overlap to locate the knee.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReuseSpec {
+    /// Capacity of the stage-② projection cache, in feature rows.
+    pub proj_rows: usize,
+    /// Capacity of the stage-③ aggregate cache, in result rows.
+    pub agg_rows: usize,
+}
+
+impl ReuseSpec {
+    /// The same capacity for both caches.
+    pub fn rows(n: usize) -> ReuseSpec {
+        ReuseSpec { proj_rows: n, agg_rows: n }
+    }
+
+    /// Explicit per-cache capacities.
+    pub fn caps(proj_rows: usize, agg_rows: usize) -> ReuseSpec {
+        ReuseSpec { proj_rows, agg_rows }
+    }
+
+    /// Projection cache only (aggregate reuse disabled) — useful under
+    /// aggressively truncating fanouts where few rows reach full
+    /// coverage anyway.
+    pub fn projection_only(n: usize) -> ReuseSpec {
+        ReuseSpec { proj_rows: n, agg_rows: 0 }
+    }
+}
+
+impl Default for ReuseSpec {
+    /// 64Ki rows per cache (16 MiB per cache at `hidden_dim = 64`).
+    fn default() -> Self {
+        ReuseSpec::rows(1 << 16)
+    }
+}
+
+/// Cumulative counters of one [`ReuseCache`] over its session lifetime.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReuseStats {
+    /// Projection-cache lookups that found a row.
+    pub proj_hits: u64,
+    /// Projection-cache lookups that missed.
+    pub proj_misses: u64,
+    /// Aggregate-cache lookups that found a row.
+    pub agg_hits: u64,
+    /// Aggregate-cache lookups that missed (fully-covered rows only;
+    /// truncated rows are never looked up).
+    pub agg_misses: u64,
+    /// Rows evicted by the clock hand across both caches.
+    pub evictions: u64,
+    /// Generation bumps ([`ReuseCache::invalidate`] calls).
+    pub invalidations: u64,
+}
+
+impl ReuseStats {
+    /// Projection hit rate in `[0, 1]` (0 when no lookups happened).
+    pub fn proj_hit_rate(&self) -> f64 {
+        rate(self.proj_hits, self.proj_misses)
+    }
+
+    /// Aggregate hit rate in `[0, 1]` (0 when no lookups happened).
+    pub fn agg_hit_rate(&self) -> f64 {
+        rate(self.agg_hits, self.agg_misses)
+    }
+
+    /// One-line human summary for the CLI and bench output.
+    pub fn line(&self) -> String {
+        format!(
+            "reuse: proj {}/{} hits ({:.1}%), agg {}/{} hits ({:.1}%), \
+             {} evictions, {} invalidations",
+            self.proj_hits,
+            self.proj_hits + self.proj_misses,
+            100.0 * self.proj_hit_rate(),
+            self.agg_hits,
+            self.agg_hits + self.agg_misses,
+            100.0 * self.agg_hit_rate(),
+            self.evictions,
+            self.invalidations,
+        )
+    }
+}
+
+fn rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// The per-batch aggregate-cache overlay the sampler hands to the
+/// executor alongside the miss-only sub-CSRs: which destination rows to
+/// fill from the cache, and which freshly computed rows to publish back.
+#[derive(Debug, Default)]
+pub struct AggOverlay {
+    /// Per subgraph: `(local dst row, cached stage-③ row)` pairs to
+    /// scatter over the NA output (those rows carry no edges in the
+    /// miss-only sub-CSR, so NA leaves them zero).
+    pub prefilled: Vec<Vec<(u32, Vec<f32>)>>,
+    /// Per subgraph: `(local dst row, parent dst id)` of rows whose full
+    /// parent neighbor list was kept this batch — exact at full-fanout
+    /// coverage, hence cacheable.
+    pub computed: Vec<Vec<(u32, u32)>>,
+}
+
+impl AggOverlay {
+    /// Empty overlay for `p` subgraphs.
+    pub fn new(p: usize) -> AggOverlay {
+        AggOverlay { prefilled: vec![Vec::new(); p], computed: vec![Vec::new(); p] }
+    }
+
+    /// Total prefilled (cache-hit) rows across subgraphs.
+    pub fn prefilled_rows(&self) -> usize {
+        self.prefilled.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// One bounded row store with clock (second-chance) eviction.
+#[derive(Debug)]
+struct RowCache {
+    cap: usize,
+    slots: Vec<Slot>,
+    index: HashMap<u64, usize>,
+    hand: usize,
+}
+
+#[derive(Debug)]
+struct Slot {
+    key: u64,
+    row: Vec<f32>,
+    referenced: bool,
+}
+
+impl RowCache {
+    fn new(cap: usize) -> RowCache {
+        RowCache { cap, slots: Vec::new(), index: HashMap::new(), hand: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn get(&mut self, key: u64) -> Option<&[f32]> {
+        match self.index.get(&key) {
+            Some(&i) => {
+                self.slots[i].referenced = true;
+                Some(&self.slots[i].row)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert (or refresh) a row; returns true when a victim was evicted.
+    fn insert(&mut self, key: u64, row: &[f32]) -> bool {
+        if self.cap == 0 {
+            return false;
+        }
+        if let Some(&i) = self.index.get(&key) {
+            self.slots[i].row.clear();
+            self.slots[i].row.extend_from_slice(row);
+            self.slots[i].referenced = true;
+            return false;
+        }
+        if self.slots.len() < self.cap {
+            self.index.insert(key, self.slots.len());
+            self.slots.push(Slot { key, row: row.to_vec(), referenced: true });
+            return false;
+        }
+        // clock sweep: clear reference bits until an unreferenced victim
+        // turns up (terminates within two sweeps of the full cache)
+        loop {
+            let i = self.hand;
+            self.hand = (self.hand + 1) % self.slots.len();
+            if self.slots[i].referenced {
+                self.slots[i].referenced = false;
+            } else {
+                self.index.remove(&self.slots[i].key);
+                self.index.insert(key, i);
+                self.slots[i] = Slot { key, row: row.to_vec(), referenced: true };
+                return true;
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.slots.clear();
+        self.index.clear();
+        self.hand = 0;
+    }
+}
+
+/// The session-owned reuse cache: bounded projection + aggregate row
+/// stores, hit/miss accounting, and generation-based invalidation. One
+/// instance is shared across every batch a session (and hence a serving
+/// dispatcher) executes.
+#[derive(Debug)]
+pub struct ReuseCache {
+    spec: ReuseSpec,
+    generation: u64,
+    proj: RowCache,
+    agg: RowCache,
+    stats: ReuseStats,
+}
+
+fn key(hi: usize, lo: u32) -> u64 {
+    ((hi as u64) << 32) | lo as u64
+}
+
+impl ReuseCache {
+    /// Empty cache with the given capacities.
+    pub fn new(spec: ReuseSpec) -> ReuseCache {
+        ReuseCache {
+            spec,
+            generation: 0,
+            proj: RowCache::new(spec.proj_rows),
+            agg: RowCache::new(spec.agg_rows),
+            stats: ReuseStats::default(),
+        }
+    }
+
+    /// The capacities this cache was built with.
+    pub fn spec(&self) -> ReuseSpec {
+        self.spec
+    }
+
+    /// Current generation; bumped by every [`ReuseCache::invalidate`].
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Whether the aggregate cache can ever hold a row. The sampler
+    /// consults this before doing per-row lookups so a
+    /// [`ReuseSpec::projection_only`] session pays no aggregate-side
+    /// overhead (and reports no phantom misses).
+    pub fn agg_enabled(&self) -> bool {
+        self.spec.agg_rows > 0
+    }
+
+    /// Whether the projection cache can ever hold a row — the mirror of
+    /// [`ReuseCache::agg_enabled`], consulted by the cache-aware FP path
+    /// so a `ReuseSpec::caps(0, n)` (aggregate-only) session pays no
+    /// projection-side lookups and reports no phantom misses.
+    pub fn proj_enabled(&self) -> bool {
+        self.spec.proj_rows > 0
+    }
+
+    /// Cumulative hit/miss/eviction counters.
+    pub fn stats(&self) -> &ReuseStats {
+        &self.stats
+    }
+
+    /// Resident projection rows.
+    pub fn proj_len(&self) -> usize {
+        self.proj.len()
+    }
+
+    /// Resident aggregate rows.
+    pub fn agg_len(&self) -> usize {
+        self.agg.len()
+    }
+
+    /// Look up the cached stage-② row of `(node type, parent node id)`.
+    pub fn proj_get(&mut self, ty: usize, node: u32) -> Option<&[f32]> {
+        let row = self.proj.get(key(ty, node));
+        if row.is_some() {
+            self.stats.proj_hits += 1;
+        } else {
+            self.stats.proj_misses += 1;
+        }
+        row
+    }
+
+    /// Publish a freshly projected row.
+    pub fn proj_insert(&mut self, ty: usize, node: u32, row: &[f32]) {
+        if self.proj.insert(key(ty, node), row) {
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Look up the cached stage-③ row of `(subgraph, parent dst id)`.
+    /// Callers must only ask for rows whose full neighbor list the
+    /// current fanout would keep (full-fanout validity).
+    pub fn agg_get(&mut self, subgraph: usize, node: u32) -> Option<&[f32]> {
+        let row = self.agg.get(key(subgraph, node));
+        if row.is_some() {
+            self.stats.agg_hits += 1;
+        } else {
+            self.stats.agg_misses += 1;
+        }
+        row
+    }
+
+    /// Publish a freshly aggregated row (fully-covered rows only).
+    pub fn agg_insert(&mut self, subgraph: usize, node: u32, row: &[f32]) {
+        if self.agg.insert(key(subgraph, node), row) {
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Drop every cached row and bump the generation — required after
+    /// any weight or feature change, since cached rows are functions of
+    /// the parameters they were computed from.
+    pub fn invalidate(&mut self) {
+        self.proj.clear();
+        self.agg.clear();
+        self.generation += 1;
+        self.stats.invalidations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_constructors() {
+        assert_eq!(ReuseSpec::rows(8), ReuseSpec { proj_rows: 8, agg_rows: 8 });
+        assert_eq!(ReuseSpec::caps(4, 2), ReuseSpec { proj_rows: 4, agg_rows: 2 });
+        let p = ReuseSpec::projection_only(16);
+        assert_eq!(p.agg_rows, 0);
+        assert_eq!(ReuseSpec::default().proj_rows, 1 << 16);
+    }
+
+    #[test]
+    fn hit_miss_accounting_and_roundtrip() {
+        let mut c = ReuseCache::new(ReuseSpec::rows(8));
+        assert!(c.proj_get(0, 1).is_none());
+        c.proj_insert(0, 1, &[1.0, 2.0]);
+        assert_eq!(c.proj_get(0, 1).unwrap(), &[1.0, 2.0]);
+        // distinct types do not collide on the same node id
+        assert!(c.proj_get(1, 1).is_none());
+        assert!(c.agg_get(0, 1).is_none());
+        c.agg_insert(0, 1, &[3.0]);
+        assert_eq!(c.agg_get(0, 1).unwrap(), &[3.0]);
+        let s = c.stats();
+        assert_eq!((s.proj_hits, s.proj_misses), (1, 2));
+        assert_eq!((s.agg_hits, s.agg_misses), (1, 1));
+        assert_eq!(s.evictions, 0);
+        assert!((s.proj_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!(s.line().contains("evictions"));
+    }
+
+    #[test]
+    fn capacity_bounds_and_clock_eviction() {
+        let mut c = ReuseCache::new(ReuseSpec::rows(3));
+        c.proj_insert(0, 0, &[0.0]);
+        c.proj_insert(0, 1, &[1.0]);
+        c.proj_insert(0, 2, &[2.0]);
+        assert_eq!(c.proj_len(), 3);
+        // all reference bits set: the sweep clears them all and evicts
+        // the first slot the hand re-reaches (node 0)
+        c.proj_insert(0, 3, &[3.0]);
+        assert_eq!(c.proj_len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.proj_get(0, 0).is_none());
+        // re-reference node 2; node 1 is now the only unreferenced
+        // resident, so the next insert must evict exactly it
+        assert!(c.proj_get(0, 2).is_some());
+        c.proj_insert(0, 4, &[4.0]);
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.proj_get(0, 1).is_none(), "unreferenced slot must be the victim");
+        assert!(c.proj_get(0, 2).is_some(), "re-referenced slot must survive");
+        assert!(c.proj_get(0, 3).is_some());
+        assert_eq!(c.proj_len(), 3);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut c = ReuseCache::new(ReuseSpec::rows(2));
+        c.agg_insert(0, 7, &[1.0]);
+        c.agg_insert(0, 7, &[9.0]);
+        assert_eq!(c.agg_len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.agg_get(0, 7).unwrap(), &[9.0]);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = ReuseCache::new(ReuseSpec::projection_only(4));
+        c.agg_insert(0, 0, &[1.0]);
+        assert_eq!(c.agg_len(), 0);
+        assert!(c.agg_get(0, 0).is_none());
+        c.proj_insert(0, 0, &[1.0]);
+        assert!(c.proj_get(0, 0).is_some());
+    }
+
+    #[test]
+    fn invalidate_clears_and_bumps_generation() {
+        let mut c = ReuseCache::new(ReuseSpec::rows(4));
+        c.proj_insert(0, 0, &[1.0]);
+        c.agg_insert(0, 0, &[2.0]);
+        assert_eq!(c.generation(), 0);
+        c.invalidate();
+        assert_eq!(c.generation(), 1);
+        assert_eq!(c.proj_len() + c.agg_len(), 0);
+        assert!(c.proj_get(0, 0).is_none());
+        assert_eq!(c.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn overlay_counts() {
+        let mut ov = AggOverlay::new(2);
+        assert_eq!(ov.prefilled_rows(), 0);
+        ov.prefilled[1].push((0, vec![1.0]));
+        assert_eq!(ov.prefilled_rows(), 1);
+        assert_eq!(ov.computed.len(), 2);
+    }
+}

@@ -23,6 +23,42 @@
 //! at, which can differ between batches that reach it at different
 //! depths.
 //!
+//! ## Canonical local ordering
+//!
+//! Within every node type, local ids ascend with parent ids (the seeds
+//! of the target type land wherever their parent ids sort;
+//! [`SampledSubgraph::seed_rows`] maps seed → output row). Because CSR
+//! construction sorts column indices, every sub-CSR row therefore
+//! accumulates its sources in *parent* order no matter which other
+//! nodes co-occupy the batch — which pins the f32 summation order of
+//! every row-local kernel. This is the invariant that lets the
+//! cross-request reuse caches ([`crate::reuse`]) substitute rows
+//! computed under one batch composition into another, bit for bit.
+//!
+//! ## Reuse integration
+//!
+//! [`NeighborSampler::sample_with_cache`] threads a
+//! [`crate::reuse::ReuseCache`] through the walk. A destination row
+//! whose **entire** parent neighbor list the fanout keeps (full-fanout
+//! coverage — the only condition under which its stage-③ aggregate is
+//! batch-invariant) is looked up in the aggregate cache:
+//!
+//! * on a **hit**, the row's edges are omitted from the sub-CSR (the
+//!   *miss-only sub-CSR*: Neighbor Aggregation cost tracks misses) and
+//!   the cached row is carried in the returned
+//!   [`crate::reuse::AggOverlay`] for the executor to scatter — but the
+//!   row's sources are **still registered**, so the materialized node
+//!   set (and HAN/MAGNN's semantic-attention average over it) is
+//!   identical to a cache-cold run;
+//! * on a **miss**, the row is marked `computed` so the executor can
+//!   publish its freshly aggregated value back to the cache.
+//!
+//! Truncated rows (degree > fanout) are never looked up or published:
+//! their aggregates depend on the sampling spec, not just the graph.
+//! Cache entries survive until evicted or invalidated by a generation
+//! bump ([`crate::reuse::ReuseCache::invalidate`]) on weight/feature
+//! change.
+//!
 //! ## Exactness
 //!
 //! Stage ② (Feature Projection) is row-local and stages ③/④ aggregate
@@ -42,6 +78,7 @@ use crate::graph::sparse::Coo;
 use crate::graph::{HeteroGraph, HeteroGraphBuilder, NodeTypeId};
 use crate::metapath::{Subgraph, SubgraphSet};
 use crate::models::ModelPlan;
+use crate::reuse::{AggOverlay, ReuseCache};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
 use crate::{Error, Result};
@@ -95,12 +132,19 @@ pub struct SampledSubgraph {
     /// replaced by the sampled sub-CSRs (R-GCN per-type embedding tables
     /// are sliced to the sampled rows).
     pub plan: ModelPlan,
-    /// Per node type, local id → parent-graph node id. For the target
-    /// type the seeds come first, in submission order.
+    /// Per node type, local id → parent-graph node id, ascending in
+    /// parent id (the canonical ordering cross-batch reuse relies on).
     pub nodes: Vec<Vec<u32>>,
-    /// The deduplicated seed ids (parent-graph ids of the target type);
-    /// seed `j` is local node `j`, and row `j` of the executed output.
+    /// The deduplicated seed ids (parent-graph ids of the target type),
+    /// in submission order.
     pub seeds: Vec<u32>,
+    /// Local row of each seed: seed `j` is local node `seed_rows[j]` of
+    /// the target type, and row `seed_rows[j]` of the executed output.
+    pub seed_rows: Vec<u32>,
+    /// Aggregate-cache overlay when the batch was sampled through
+    /// [`NeighborSampler::sample_with_cache`]: cache-hit rows to scatter
+    /// over the NA output and fresh rows to publish back.
+    pub overlay: Option<AggOverlay>,
 }
 
 impl SampledSubgraph {
@@ -109,7 +153,8 @@ impl SampledSubgraph {
         self.nodes.iter().map(|v| v.len()).sum()
     }
 
-    /// Total edges across the sampled sub-CSRs.
+    /// Total edges across the sampled sub-CSRs (with a reuse cache,
+    /// only the miss rows' edges — cache-hit rows carry none).
     pub fn total_edges(&self) -> usize {
         self.plan.subgraphs.subgraphs.iter().map(|sg| sg.adj.nnz()).sum()
     }
@@ -161,6 +206,31 @@ impl NeighborSampler {
         plan: &ModelPlan,
         seed_ids: &[u32],
     ) -> Result<SampledSubgraph> {
+        self.sample_impl(hg, plan, seed_ids, None)
+    }
+
+    /// Like [`NeighborSampler::sample`], but threads the reuse cache
+    /// through the walk: fully-covered destination rows with cached
+    /// stage-③ aggregates contribute no edges (miss-only sub-CSRs) and
+    /// come back in the [`SampledSubgraph::overlay`] instead. See the
+    /// module docs for the exactness argument.
+    pub fn sample_with_cache(
+        &self,
+        hg: &HeteroGraph,
+        plan: &ModelPlan,
+        seed_ids: &[u32],
+        cache: &mut ReuseCache,
+    ) -> Result<SampledSubgraph> {
+        self.sample_impl(hg, plan, seed_ids, Some(cache))
+    }
+
+    fn sample_impl(
+        &self,
+        hg: &HeteroGraph,
+        plan: &ModelPlan,
+        seed_ids: &[u32],
+        mut cache: Option<&mut ReuseCache>,
+    ) -> Result<SampledSubgraph> {
         let t0 = std::time::Instant::now();
         if seed_ids.is_empty() {
             return Err(Error::config("sample: empty seed batch"));
@@ -168,7 +238,8 @@ impl NeighborSampler {
         let n_types = hg.node_types().len();
         let target_count = hg.node_type(plan.target).count;
 
-        // local id registries, one per node type
+        // local id registries, one per node type (walk order; remapped
+        // to the canonical parent-ascending order below)
         let mut local: Vec<HashMap<u32, u32>> = vec![HashMap::new(); n_types];
         let mut nodes: Vec<Vec<u32>> = vec![Vec::new(); n_types];
         // interns `id` into type `ty`'s local id space; true when fresh
@@ -187,7 +258,6 @@ impl NeighborSampler {
             (l, true)
         }
 
-        // seeds first: local ids 0..seeds.len() of the target type
         let mut seeds = Vec::with_capacity(seed_ids.len());
         for &id in seed_ids {
             if id as usize >= target_count {
@@ -207,9 +277,13 @@ impl NeighborSampler {
         let mut frontier: Vec<Vec<u32>> = vec![Vec::new(); n_types];
         frontier[plan.target] = seeds.clone();
 
-        // per-subgraph edge lists in local ids
+        // per-subgraph edge lists in walk-order local ids
         let p = plan.num_subgraphs();
         let mut edges: Vec<Vec<(u32, u32)>> = vec![Vec::new(); p];
+        let mut overlay = cache.as_ref().map(|_| AggOverlay::new(p));
+        // skip per-row aggregate lookups entirely when that cache can
+        // never hold a row (ReuseSpec::projection_only)
+        let agg_on = cache.as_ref().is_some_and(|c| c.agg_enabled());
 
         for (layer, &fanout) in self.spec.fanouts.iter().enumerate() {
             let mut next: Vec<Vec<u32>> = vec![Vec::new(); n_types];
@@ -217,18 +291,73 @@ impl NeighborSampler {
                 for &dst in &frontier[sg.dst_type] {
                     let l_dst = local[sg.dst_type][&dst];
                     let row = sg.adj.row(dst as usize);
+                    // a row's aggregate is batch-invariant only when the
+                    // fanout keeps every parent neighbor; empty rows are
+                    // free to recompute (NA yields zeros), so they never
+                    // consult or occupy the bounded cache
+                    let covered = row.len() <= fanout;
+                    let mut hit = false;
+                    if covered && agg_on && !row.is_empty() {
+                        if let (Some(c), Some(ov)) = (cache.as_deref_mut(), overlay.as_mut())
+                        {
+                            if let Some(cached) = c.agg_get(si, dst) {
+                                ov.prefilled[si].push((l_dst, cached.to_vec()));
+                                hit = true;
+                            } else {
+                                ov.computed[si].push((l_dst, dst));
+                            }
+                        }
+                    }
                     let kept = sample_row(row, fanout, self.spec.seed, layer, si, dst);
                     for src in kept {
+                        // sources register even on a hit so the node set
+                        // (and the semantic-attention average over it)
+                        // matches a cache-cold run; only the hit row's
+                        // edges are dropped — the miss-only sub-CSR
                         let (l_src, fresh) =
                             register(sg.src_type, src, &mut local, &mut nodes);
                         if fresh {
                             next[sg.src_type].push(src);
                         }
-                        edges[si].push((l_dst, l_src));
+                        if !hit {
+                            edges[si].push((l_dst, l_src));
+                        }
                     }
                 }
             }
             frontier = next;
+        }
+
+        // canonical remap: within each type, local ids ascend with
+        // parent ids, pinning every row's f32 accumulation order across
+        // batch compositions
+        let mut remap: Vec<Vec<u32>> = Vec::with_capacity(n_types);
+        for list in nodes.iter_mut() {
+            let mut order: Vec<u32> = (0..list.len() as u32).collect();
+            order.sort_unstable_by_key(|&l| list[l as usize]);
+            let mut m = vec![0u32; list.len()];
+            for (new, &old) in order.iter().enumerate() {
+                m[old as usize] = new as u32;
+            }
+            let sorted: Vec<u32> = order.iter().map(|&l| list[l as usize]).collect();
+            *list = sorted;
+            remap.push(m);
+        }
+        let seed_rows: Vec<u32> = {
+            let m = &remap[plan.target];
+            let loc = &local[plan.target];
+            seeds.iter().map(|g| m[loc[g] as usize]).collect()
+        };
+        if let Some(ov) = overlay.as_mut() {
+            for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+                let m = &remap[sg.dst_type];
+                for e in ov.prefilled[si].iter_mut() {
+                    e.0 = m[e.0 as usize];
+                }
+                for e in ov.computed[si].iter_mut() {
+                    e.0 = m[e.0 as usize];
+                }
+            }
         }
 
         // compact graph: same types/tags, gathered features, no relations
@@ -242,13 +371,18 @@ impl NeighborSampler {
         }
         let graph = gb.build()?;
 
-        // compact subgraphs: sub-CSRs over the local id spaces
+        // compact subgraphs: sub-CSRs over the canonical local id spaces
         let mut subgraphs = Vec::with_capacity(p);
         for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+            let md = &remap[sg.dst_type];
+            let ms = &remap[sg.src_type];
+            let remapped: Vec<(u32, u32)> = std::mem::take(&mut edges[si])
+                .into_iter()
+                .map(|(d, s)| (md[d as usize], ms[s as usize]))
+                .collect();
             let n_rows = nodes[sg.dst_type].len();
             let n_cols = nodes[sg.src_type].len();
-            let adj = Coo::from_edges(n_rows, n_cols, std::mem::take(&mut edges[si]))?
-                .to_csr();
+            let adj = Coo::from_edges(n_rows, n_cols, remapped)?.to_csr();
             subgraphs.push(Subgraph {
                 metapath: sg.metapath.clone(),
                 name: sg.name.clone(),
@@ -273,7 +407,7 @@ impl NeighborSampler {
             weights,
             target: plan.target,
         };
-        Ok(SampledSubgraph { graph, plan, nodes, seeds })
+        Ok(SampledSubgraph { graph, plan, nodes, seeds, seed_rows, overlay })
     }
 }
 
@@ -313,6 +447,7 @@ mod tests {
     use super::*;
     use crate::datasets::{self, DatasetId, DatasetScale};
     use crate::models::{self, ModelConfig, ModelId};
+    use crate::reuse::{ReuseCache, ReuseSpec};
 
     fn imdb_han() -> (HeteroGraph, ModelPlan) {
         let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
@@ -333,12 +468,21 @@ mod tests {
     }
 
     #[test]
-    fn seeds_come_first_and_dedup() {
+    fn seeds_dedup_and_canonical_order() {
         let (hg, plan) = imdb_han();
         let sampler = NeighborSampler::new(SamplingSpec::uniform(4, 1)).unwrap();
         let s = sampler.sample(&hg, &plan, &[5, 2, 5, 9, 2]).unwrap();
         assert_eq!(s.seeds, vec![5, 2, 9]);
-        assert_eq!(&s.nodes[plan.target][..3], &[5, 2, 9]);
+        assert!(s.overlay.is_none());
+        // canonical ordering: every type's local list ascends in parent id
+        for list in &s.nodes {
+            assert!(list.windows(2).all(|w| w[0] < w[1]), "locals not canonical: {list:?}");
+        }
+        // seed_rows maps each seed onto its local row
+        assert_eq!(s.seed_rows.len(), s.seeds.len());
+        for (j, &g) in s.seeds.iter().enumerate() {
+            assert_eq!(s.nodes[plan.target][s.seed_rows[j] as usize], g);
+        }
         // validity of the materialized pieces
         s.graph.validate().unwrap();
         for sg in &s.plan.subgraphs.subgraphs {
@@ -355,16 +499,20 @@ mod tests {
         let seeds: Vec<u32> = (0..16).collect();
         let s = sampler.sample(&hg, &plan, &seeds).unwrap();
         for sg in &s.plan.subgraphs.subgraphs {
-            for r in 0..seeds.len() {
-                assert!(sg.adj.degree(r) <= 3, "seed row degree {} > 3", sg.adj.degree(r));
+            for &r in &s.seed_rows {
+                let d = sg.adj.degree(r as usize);
+                assert!(d <= 3, "seed row degree {d} > 3");
             }
         }
         // full fanout reproduces the parent rows exactly (remapped)
         let full = NeighborSampler::new(SamplingSpec::uniform(usize::MAX, 1)).unwrap();
         let s = full.sample(&hg, &plan, &seeds).unwrap();
         for (sg, parent) in s.plan.subgraphs.subgraphs.iter().zip(&plan.subgraphs.subgraphs) {
-            for (r, &seed) in seeds.iter().enumerate() {
-                assert_eq!(sg.adj.degree(r), parent.adj.degree(seed as usize));
+            for (j, &seed) in seeds.iter().enumerate() {
+                assert_eq!(
+                    sg.adj.degree(s.seed_rows[j] as usize),
+                    parent.adj.degree(seed as usize)
+                );
             }
         }
     }
@@ -376,6 +524,7 @@ mod tests {
         let a = sampler.sample(&hg, &plan, &[0, 1, 2, 3]).unwrap();
         let b = sampler.sample(&hg, &plan, &[0, 1, 2, 3]).unwrap();
         assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.seed_rows, b.seed_rows);
         for (x, y) in a.plan.subgraphs.subgraphs.iter().zip(&b.plan.subgraphs.subgraphs) {
             assert_eq!(x.adj, y.adj);
         }
@@ -415,5 +564,73 @@ mod tests {
                 assert_eq!(embed.row(l), plan.weights.embed[&ty].row(g as usize));
             }
         }
+    }
+
+    #[test]
+    fn cache_hits_build_miss_only_subcsrs() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(usize::MAX, 1)).unwrap();
+        let mut cache = ReuseCache::new(ReuseSpec::rows(1 << 12));
+        let a = sampler.sample_with_cache(&hg, &plan, &[0, 1, 2], &mut cache).unwrap();
+        let a_ov = a.overlay.as_ref().expect("cache-threaded sample carries an overlay");
+        assert_eq!(a_ov.prefilled_rows(), 0, "cold cache cannot prefill");
+        let computed: usize = a_ov.computed.iter().map(|v| v.len()).sum();
+        assert!(computed > 0, "fully-covered rows must be marked computed");
+        // publish the computed rows as the executor would
+        let stub = vec![0.5f32; plan.config.hidden_dim];
+        for (si, rows) in a_ov.computed.iter().enumerate() {
+            for &(_, parent) in rows {
+                cache.agg_insert(si, parent, &stub);
+            }
+        }
+        // same seeds again: every covered row hits, edges disappear, but
+        // the node set still matches a cache-cold sample exactly
+        let b = sampler.sample_with_cache(&hg, &plan, &[0, 1, 2], &mut cache).unwrap();
+        let b_ov = b.overlay.as_ref().unwrap();
+        assert_eq!(b_ov.prefilled_rows(), computed);
+        let cold = sampler.sample(&hg, &plan, &[0, 1, 2]).unwrap();
+        assert_eq!(b.nodes, cold.nodes);
+        assert_eq!(b.seed_rows, cold.seed_rows);
+        assert!(b.total_edges() <= cold.total_edges());
+        if cold.total_edges() > 0 {
+            assert!(b.total_edges() < cold.total_edges(), "hit rows must shed their edges");
+        }
+        assert!(cache.stats().agg_hits >= computed as u64);
+    }
+
+    #[test]
+    fn projection_only_spec_skips_aggregate_lookups() {
+        let (hg, plan) = imdb_han();
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(usize::MAX, 1)).unwrap();
+        let mut cache = ReuseCache::new(ReuseSpec::projection_only(64));
+        let s = sampler.sample_with_cache(&hg, &plan, &[0, 1, 2], &mut cache).unwrap();
+        let ov = s.overlay.as_ref().unwrap();
+        assert_eq!(ov.prefilled_rows(), 0);
+        assert!(ov.computed.iter().all(|v| v.is_empty()));
+        assert_eq!(
+            cache.stats().agg_misses,
+            0,
+            "a disabled aggregate cache must never be consulted"
+        );
+    }
+
+    #[test]
+    fn truncated_rows_bypass_the_aggregate_cache() {
+        let (hg, plan) = imdb_han();
+        // fanout 1 truncates every multi-neighbor row; only degree<=1
+        // rows may consult the cache
+        let sampler = NeighborSampler::new(SamplingSpec::uniform(1, 1)).unwrap();
+        let mut cache = ReuseCache::new(ReuseSpec::rows(1 << 12));
+        let s = sampler.sample_with_cache(&hg, &plan, &[0, 1, 2, 3], &mut cache).unwrap();
+        let ov = s.overlay.as_ref().unwrap();
+        for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+            for &(_, parent) in &ov.computed[si] {
+                assert!(sg.adj.degree(parent as usize) <= 1);
+            }
+        }
+        // lookups happened only for covered rows
+        let stats = cache.stats();
+        let covered: u64 = ov.computed.iter().map(|v| v.len() as u64).sum();
+        assert_eq!(stats.agg_misses, covered);
     }
 }

@@ -94,6 +94,24 @@ pub trait ExecBackend: std::fmt::Debug {
         ty: NodeTypeId,
     ) -> Result<Option<Tensor>>;
 
+    /// Project an explicit feature matrix `x` with the type's stage-②
+    /// weight — the row-sliced entry point the cache-aware serving path
+    /// uses to project only cache-miss rows (`x` is a gathered subset of
+    /// the type's features/embeddings, so the output row count equals
+    /// `x.rows()`, not the type's node count). Returns `Ok(None)` when
+    /// the plan has no projection weight for the type **or** the backend
+    /// has no row-sliced path (the default); callers then fall back to
+    /// projecting the whole type via [`ExecBackend::project_type`].
+    fn project_features(
+        &self,
+        _ctx: &mut Ctx,
+        _plan: &ModelPlan,
+        _ty: NodeTypeId,
+        _x: &Tensor,
+    ) -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
     /// Stage ③ for one subgraph of the plan.
     fn neighbor_aggregation(
         &self,
@@ -202,6 +220,19 @@ impl ExecBackend for NativeBackend {
                 let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
                 Ok(Some(sgemm(ctx, x, w, self.blocking)?))
             }
+        }
+    }
+
+    fn project_features(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        ty: NodeTypeId,
+        x: &Tensor,
+    ) -> Result<Option<Tensor>> {
+        match plan.weights.proj.get(&ty) {
+            None => Ok(None),
+            Some(w) => Ok(Some(sgemm(ctx, x, w, self.blocking)?)),
         }
     }
 
@@ -502,5 +533,26 @@ mod tests {
         // a type with no projection weight
         let missing = hg.node_types().len() + 7;
         assert!(b.project_type(&mut ctx, &plan, &hg, missing).unwrap().is_none());
+    }
+
+    #[test]
+    fn native_project_features_is_row_sliced_fp() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(ModelId::Han, &hg, &ModelConfig::default()).unwrap();
+        let b = NativeBackend::new();
+        let mut ctx = b.make_ctx();
+        let proj = b.feature_projection(&mut ctx, &plan, &hg).unwrap();
+        let (&ty, full) = proj.iter().next().unwrap();
+        let rows: Vec<u32> = vec![3, 0, 7];
+        let sub =
+            crate::kernels::rearrange::index_select(&mut ctx, hg.features(ty), &rows).unwrap();
+        let h = b.project_features(&mut ctx, &plan, ty, &sub).unwrap().unwrap();
+        for (k, &r) in rows.iter().enumerate() {
+            // bit-identical to the full-type projection — the property
+            // the reuse cache's substitution relies on
+            assert_eq!(h.row(k), full.row(r as usize));
+        }
+        let missing = hg.node_types().len() + 7;
+        assert!(b.project_features(&mut ctx, &plan, missing, &sub).unwrap().is_none());
     }
 }

@@ -8,15 +8,48 @@
 //! ([`ExecBackend::as_sync`]); otherwise the same worker assignment is
 //! executed on one thread ("virtual workers") and the modeled schedule
 //! analysis — the honest instrument, per DESIGN.md §4 — is identical.
+//!
+//! ## The cache-aware serving path
+//!
+//! [`execute_reuse`] is the executor behind
+//! `SessionBuilder::reuse(ReuseSpec)`: it runs a
+//! [`crate::sampler::SampledSubgraph`] with the session's
+//! [`crate::reuse::ReuseCache`] threaded through every stage.
+//!
+//! * **Stage ② (FP)** gathers cache-hit projection rows (a `ReuseGather`
+//!   DR kernel), batches the misses into one row-sliced projection per
+//!   type ([`ExecBackend::project_features`], an `IndexSelect` gather +
+//!   `sgemm` over miss rows only — valid because FP rows are
+//!   seed-set-independent), and publishes the fresh rows back.
+//! * **Stage ③ (NA)** runs the ordinary worker schedule over the
+//!   sampler's *miss-only* sub-CSRs: cache-hit destination rows carry no
+//!   edges, so per-edge kernel cost tracks misses; the cached aggregates
+//!   (valid only at full-fanout coverage — see [`crate::reuse`]) are
+//!   scattered over the result (`ReuseScatter`), and freshly computed
+//!   fully-covered rows are published.
+//! * **Stage ④ (SA)** is unchanged: its inputs are bit-identical to a
+//!   cache-cold run's, because the sampler preserves the node set and
+//!   cached rows are bit-identical substitutes.
+//!
+//! `FusedSubgraph` executes here in its inter-subgraph-parallel shape —
+//! fusing FP into per-worker NA tasks is incompatible with a shared
+//! projection cache — keeping the policy's NA worker split, and the
+//! returned `ScheduleReport` carries the *effective*
+//! (inter-subgraph-parallel) policy rather than the requested label.
+//! Whole-model backends never reach this path (the session keeps their
+//! cached full-graph route).
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::schedule::{self, lpt_assign, ScheduleReport};
 use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
-use crate::kernels::{Ctx, KernelExec};
+use crate::kernels::rearrange::index_select;
+use crate::kernels::{Ctx, KernelCounters, KernelExec, KernelType};
 use crate::models::ModelPlan;
 use crate::profiler::{Profile, StageId};
+use crate::reuse::ReuseCache;
+use crate::sampler::SampledSubgraph;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -170,6 +203,50 @@ fn run_sequential(
 
 type TaskOut = (usize, Vec<KernelExec>, Tensor);
 
+/// The shared NA-stage dispatch: LPT-assign subgraphs across workers
+/// (real threads when the backend allows), record every task's kernels
+/// under its (subgraph, worker) attribution, and hand each result to
+/// `post` — the hook where the cache-aware path scatters cached rows
+/// and publishes fresh ones — before collecting.
+fn run_na_stage(
+    backend: &dyn ExecBackend,
+    plan: &ModelPlan,
+    projected: &Projected,
+    workers: usize,
+    profile: &mut Profile,
+    mut post: impl FnMut(usize, &mut Tensor, &mut Profile, usize),
+) -> Result<Vec<Tensor>> {
+    let assignment = lpt_assign(&na_costs(plan), workers);
+    let p = plan.num_subgraphs();
+    let worker_outputs = match backend.as_sync() {
+        Some(sync) if workers > 1 => {
+            parallel_na(sync, plan, projected, &assignment, workers)?
+        }
+        _ => virtual_na(backend, plan, projected, &assignment, workers)?,
+    };
+    let mut task_outs: Vec<Option<TaskOut>> = (0..p).map(|_| None).collect();
+    for per_worker in worker_outputs {
+        for (i, events, t) in per_worker {
+            task_outs[i] = Some((i, events, t));
+        }
+    }
+    let mut na_results = Vec::with_capacity(p);
+    for (i, slot) in task_outs.into_iter().enumerate() {
+        let (_, events, mut t) = slot
+            .ok_or_else(|| Error::config(format!("subgraph {i} was never scheduled")))?;
+        profile.record(
+            events,
+            StageId::NeighborAggregation,
+            Some(plan.subgraphs.subgraphs[i].name.as_str()),
+            assignment[i],
+            0,
+        );
+        post(i, &mut t, &mut *profile, assignment[i]);
+        na_results.push(t);
+    }
+    Ok(na_results)
+}
+
 /// FP serial → NA across workers → barrier → SA.
 #[allow(clippy::too_many_arguments)]
 fn run_scheduled(
@@ -191,35 +268,9 @@ fn run_scheduled(
     let projected = backend.feature_projection(scratch, plan, hg)?;
     record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
 
-    let assignment = lpt_assign(&na_costs(plan), workers);
-    let p = plan.num_subgraphs();
-
     // ③ NA spread over workers (real threads when the backend allows)
-    let mut task_outs: Vec<Option<TaskOut>> = (0..p).map(|_| None).collect();
-    let worker_outputs = match backend.as_sync() {
-        Some(sync) if workers > 1 => {
-            parallel_na(sync, plan, &projected, &assignment, workers)?
-        }
-        _ => virtual_na(backend, plan, &projected, &assignment, workers)?,
-    };
-    for per_worker in worker_outputs {
-        for (i, events, t) in per_worker {
-            task_outs[i] = Some((i, events, t));
-        }
-    }
-    let mut na_results = Vec::with_capacity(p);
-    for (i, slot) in task_outs.into_iter().enumerate() {
-        let (_, events, t) = slot
-            .ok_or_else(|| Error::config(format!("subgraph {i} was never scheduled")))?;
-        profile.record(
-            events,
-            StageId::NeighborAggregation,
-            Some(plan.subgraphs.subgraphs[i].name.as_str()),
-            assignment[i],
-            0,
-        );
-        na_results.push(t);
-    }
+    let na_results =
+        run_na_stage(backend, plan, &projected, workers, &mut profile, |_, _, _, _| {})?;
 
     // barrier, then ④ SA on worker 0
     let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
@@ -391,6 +442,226 @@ fn parallel_fused(
             .into_iter()
             .map(|h| h.join().expect("fused worker panicked"))
             .collect()
+    })
+}
+
+/// Execute a sampled batch through the reuse caches (see the module
+/// docs): cache-aware FP, NA over the miss-only sub-CSRs with cached
+/// aggregates scattered on top, then SA. The returned profile and
+/// report carry the cache's cumulative [`crate::reuse::ReuseStats`].
+pub fn execute_reuse(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    sampled: &SampledSubgraph,
+    policy: SchedulePolicy,
+    scratch: &mut Ctx,
+    cache: &mut ReuseCache,
+) -> Result<StagedRun> {
+    scratch.events.clear();
+    let plan = &sampled.plan;
+    let hg = &sampled.graph;
+    // FusedSubgraph collapses to inter-subgraph parallel here (fusing
+    // FP into per-worker NA tasks is incompatible with a shared
+    // projection cache); the report must carry the policy that actually
+    // executed, not the requested label
+    let (workers, mixing, effective) = match policy {
+        SchedulePolicy::Sequential => (1, false, policy),
+        SchedulePolicy::InterSubgraphParallel { workers } => (workers.max(1), false, policy),
+        SchedulePolicy::FusedSubgraph { workers } => {
+            let w = workers.max(1);
+            (w, false, SchedulePolicy::InterSubgraphParallel { workers: w })
+        }
+        SchedulePolicy::BoundAwareMixing { workers } => (workers.max(1), true, policy),
+    };
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+
+    // ② FP through the projection cache (single stream, worker 0)
+    let projected =
+        reuse_feature_projection(backend, scratch, plan, hg, &sampled.nodes, cache)?;
+    record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
+
+    // ③ NA over the miss-only sub-CSRs, spread over workers; the hook
+    // overlays cached aggregates and publishes this batch's fresh rows
+    let na_results = run_na_stage(
+        backend,
+        plan,
+        &projected,
+        workers,
+        &mut profile,
+        |i, t, profile, worker| {
+            if let Some(ov) = &sampled.overlay {
+                // cache-hit rows: scatter the stored aggregates over the
+                // zero rows their edge-less sub-CSR rows produced
+                if let Some(exec) = scatter_rows(t, &ov.prefilled[i]) {
+                    profile.record(
+                        vec![exec],
+                        StageId::NeighborAggregation,
+                        Some(plan.subgraphs.subgraphs[i].name.as_str()),
+                        worker,
+                        0,
+                    );
+                }
+                // fully-covered fresh rows: publish to the cache
+                for &(l, parent) in &ov.computed[i] {
+                    cache.agg_insert(i, parent, t.row(l as usize));
+                }
+            }
+        },
+    )?;
+
+    // barrier, then ④ SA on worker 0
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+
+    profile.attach_metrics(gpu);
+    // one authoritative snapshot of the cumulative counters, carried by
+    // both the profile and the schedule report
+    let stats = cache.stats().clone();
+    profile.reuse = Some(stats.clone());
+    let mut report = schedule::analyze(&profile, workers, mixing, effective, gpu);
+    report.reuse = Some(stats);
+    Ok(StagedRun { output, na_results, profile, report })
+}
+
+/// Stage ② with the projection cache: gather cached rows (`ReuseGather`),
+/// batch the misses into one row-sliced projection per type, publish the
+/// fresh rows. Projection rows are seed-set-independent, so a row cached
+/// under any earlier batch substitutes bit-identically here.
+fn reuse_feature_projection(
+    backend: &dyn ExecBackend,
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    nodes: &[Vec<u32>],
+    cache: &mut ReuseCache,
+) -> Result<Projected> {
+    // skip per-row lookups entirely when the projection cache can never
+    // hold a row (ReuseSpec::caps(0, n), aggregate-only reuse)
+    let proj_on = cache.proj_enabled();
+    let mut projected: Projected = BTreeMap::new();
+    for (&ty, w) in &plan.weights.proj {
+        let hidden = w.cols();
+        let parents = &nodes[ty];
+        // scatter target allocated lazily, on the first cache hit only —
+        // all-miss (cold) and cache-disabled batches adopt the
+        // projection result directly, with no zero-fill or copy
+        let mut hit_rows: Option<Tensor> = None;
+        let mut miss: Vec<u32> = Vec::new();
+        if proj_on {
+            let t0 = std::time::Instant::now();
+            let mut hits = 0u64;
+            for (l, &g) in parents.iter().enumerate() {
+                match cache.proj_get(ty, g) {
+                    Some(row) => {
+                        hit_rows
+                            .get_or_insert_with(|| Tensor::zeros(parents.len(), hidden))
+                            .set_row(l, row);
+                        hits += 1;
+                    }
+                    None => miss.push(l as u32),
+                }
+            }
+            let gather_nanos = t0.elapsed().as_nanos() as u64;
+            if hits > 0 {
+                let bytes = hits * hidden as u64 * 4;
+                ctx.push(
+                    "ReuseGather",
+                    KernelType::DataRearrange,
+                    KernelCounters {
+                        flops: 0,
+                        bytes_read: bytes + hits * 4,
+                        bytes_written: bytes,
+                    },
+                    gather_nanos,
+                    None,
+                );
+            }
+        } else {
+            miss.extend(0..parents.len() as u32);
+        }
+        let out = if miss.is_empty() {
+            // every row hit (or the type has no sampled nodes)
+            hit_rows.unwrap_or_else(|| Tensor::zeros(parents.len(), hidden))
+        } else {
+            // R-GCN projects learned embeddings (already sliced to the
+            // sampled rows); the other models project raw features
+            let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
+            let no_path =
+                || Error::config(format!("reuse FP: type {ty} has no projection path"));
+            let h_miss = if miss.len() == parents.len() {
+                // every row missed (cold or disabled cache): project the
+                // already-compact input directly, no gather copy
+                match backend.project_features(ctx, plan, ty, x)? {
+                    Some(h) => h,
+                    None => backend.project_type(ctx, plan, hg, ty)?.ok_or_else(no_path)?,
+                }
+            } else {
+                let x_miss = index_select(ctx, x, &miss)?;
+                match backend.project_features(ctx, plan, ty, &x_miss)? {
+                    Some(h) => h,
+                    None => {
+                        // no row-sliced path on this backend: project the
+                        // whole type once and slice (the cache still fills)
+                        let full =
+                            backend.project_type(ctx, plan, hg, ty)?.ok_or_else(no_path)?;
+                        index_select(ctx, &full, &miss)?
+                    }
+                }
+            };
+            if h_miss.shape() != (miss.len(), hidden) {
+                return Err(Error::shape(format!(
+                    "reuse FP: projected shape {:?}, expected ({}, {hidden})",
+                    h_miss.shape(),
+                    miss.len()
+                )));
+            }
+            if proj_on {
+                for (k, &l) in miss.iter().enumerate() {
+                    cache.proj_insert(ty, parents[l as usize], h_miss.row(k));
+                }
+            }
+            match hit_rows {
+                // partial hits: scatter the fresh rows into the target
+                Some(mut o) => {
+                    for (k, &l) in miss.iter().enumerate() {
+                        o.set_row(l as usize, h_miss.row(k));
+                    }
+                    o
+                }
+                // every row fresh: the projection IS the output
+                None => h_miss,
+            }
+        };
+        projected.insert(ty, out);
+    }
+    Ok(projected)
+}
+
+/// Scatter cached stage-③ rows over an NA result; returns the DR kernel
+/// record when any row was written.
+fn scatter_rows(t: &mut Tensor, rows: &[(u32, Vec<f32>)]) -> Option<KernelExec> {
+    if rows.is_empty() {
+        return None;
+    }
+    let t0 = std::time::Instant::now();
+    for (l, row) in rows {
+        t.set_row(*l as usize, row);
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let bytes: u64 = rows.iter().map(|(_, r)| r.len() as u64 * 4).sum();
+    Some(KernelExec {
+        name: "ReuseScatter",
+        ktype: KernelType::DataRearrange,
+        counters: KernelCounters {
+            flops: 0,
+            bytes_read: bytes + rows.len() as u64 * 4,
+            bytes_written: bytes,
+        },
+        wall_nanos: nanos,
+        trace: None,
     })
 }
 

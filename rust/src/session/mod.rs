@@ -13,7 +13,11 @@
 //! sampling ([`SessionBuilder::sampling`]): [`Session::run_batch`] then
 //! executes the stages over a [`crate::sampler::SampledSubgraph`] of the
 //! requested seeds, so per-batch cost scales with the batch instead of
-//! the graph.
+//! the graph. Stacking [`SessionBuilder::reuse`] on top memoizes the
+//! batch-invariant stage results (projection rows, full-coverage
+//! aggregates) across batches — see [`crate::reuse`] — so overlapping
+//! request streams stop re-paying the dominant stages for the same
+//! nodes.
 //!
 //! ```no_run
 //! use hgnn_char::prelude::*;
@@ -41,14 +45,16 @@ use crate::datasets::{self, DatasetId, DatasetScale};
 use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
 use crate::kernels::Ctx;
-use crate::models::{self, ModelConfig, ModelId, ModelPlan};
+use crate::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
 use crate::profiler::Profile;
+use crate::reuse::{ReuseCache, ReuseStats};
 use crate::sampler::{NeighborSampler, SampledSubgraph};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
 pub use backend::{BackendCaps, ExecBackend, NativeBackend, PjrtBackend, Projected, SyncExecBackend};
 pub use crate::coordinator::serve::{ServeConfig, ServeStats, Server};
+pub use crate::reuse::ReuseSpec;
 pub use crate::sampler::SamplingSpec;
 pub use exec::StagedRun;
 
@@ -191,6 +197,7 @@ pub struct SessionBuilder {
     profiling: Profiling,
     gpu: Option<GpuModel>,
     sampling: Option<SamplingSpec>,
+    reuse: Option<ReuseSpec>,
 }
 
 impl Default for SchedulePolicy {
@@ -279,6 +286,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable the cross-request reuse caches for the sampled batch path:
+    /// [`Session::run_batch`] then memoizes stage-② projection rows per
+    /// (type, node) and stage-③ aggregate rows per (metapath, node) —
+    /// valid at full-fanout coverage — across batches, so overlapping
+    /// request streams stop re-computing the dominant stages for the
+    /// same nodes. Cached rows substitute bit-identically (see
+    /// [`crate::reuse`]); capacities bound both caches with clock
+    /// eviction, and weight/feature changes invalidate by generation
+    /// ([`Session::invalidate`], [`Session::set_weights`]). Requires
+    /// [`SessionBuilder::sampling`].
+    pub fn reuse(mut self, spec: ReuseSpec) -> Self {
+        self.reuse = Some(spec);
+        self
+    }
+
     /// Build the session: synthesize/adopt the graph, build the plan,
     /// instantiate the backend.
     pub fn build(self) -> Result<Session> {
@@ -316,6 +338,12 @@ impl SessionBuilder {
             Some(spec) => Some(NeighborSampler::new(spec)?),
             None => None,
         };
+        if self.reuse.is_some() && sampler.is_none() {
+            return Err(Error::config(
+                "SessionBuilder::reuse(..) requires .sampling(..): the reuse caches \
+                 memoize sampled-batch stage results",
+            ));
+        }
         Ok(Session {
             hg,
             plan,
@@ -324,6 +352,7 @@ impl SessionBuilder {
             policy: self.policy,
             profiling: self.profiling,
             sampler,
+            reuse: self.reuse.map(ReuseCache::new),
             scratch,
             cached_output: None,
             runs: 0,
@@ -354,6 +383,9 @@ pub struct Session {
     /// Mini-batch sampler cached by the builder; `Some` switches
     /// [`Session::run_batch`] to sampled-subgraph execution.
     sampler: Option<NeighborSampler>,
+    /// Cross-request reuse caches shared across every batch this session
+    /// (and hence a serving dispatcher) executes.
+    reuse: Option<ReuseCache>,
     /// Kernel context reused across runs (event-buffer allocation
     /// survives between runs).
     scratch: Ctx,
@@ -520,26 +552,48 @@ impl Session {
     }
 
     /// The sampled batch path: one sampled subgraph per call, executed
-    /// through the ordinary [`ExecBackend`] stage entry points.
+    /// through the ordinary [`ExecBackend`] stage entry points — with
+    /// the reuse caches threaded through sampling and execution when
+    /// [`SessionBuilder::reuse`] configured them.
     fn run_batch_sampled(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
-        let sampler = self.sampler.as_ref().expect("checked by run_batch");
         let seeds = self.wrap_ids(node_ids);
-        let sampled = sampler.sample(&self.hg, &self.plan, &seeds)?;
-        let run = exec::execute(
-            self.backend.as_ref(),
-            &self.gpu,
-            &sampled.plan,
-            &sampled.graph,
-            self.policy,
-            &mut self.scratch,
-        )?;
+        // field-disjoint borrows: sampler (shared) alongside the reuse
+        // cache (mutable) — no per-batch clone on the serving hot path
+        let sampler = self.sampler.as_ref().expect("checked by run_batch");
+        let (sampled, run) = match self.reuse.as_mut() {
+            Some(cache) => {
+                let sampled =
+                    sampler.sample_with_cache(&self.hg, &self.plan, &seeds, cache)?;
+                let run = exec::execute_reuse(
+                    self.backend.as_ref(),
+                    &self.gpu,
+                    &sampled,
+                    self.policy,
+                    &mut self.scratch,
+                    cache,
+                )?;
+                (sampled, run)
+            }
+            None => {
+                let sampled = sampler.sample(&self.hg, &self.plan, &seeds)?;
+                let run = exec::execute(
+                    self.backend.as_ref(),
+                    &self.gpu,
+                    &sampled.plan,
+                    &sampled.graph,
+                    self.policy,
+                    &mut self.scratch,
+                )?;
+                (sampled, run)
+            }
+        };
         self.runs += 1;
-        // seed j is local node j of the target type, i.e. output row j;
+        // seed j is local row seed_rows[j] of the executed output;
         // duplicate ids in the batch collapse onto the same seed row
         let mut row_of: std::collections::HashMap<u32, usize> =
             std::collections::HashMap::with_capacity(sampled.seeds.len());
         for (j, &s) in sampled.seeds.iter().enumerate() {
-            row_of.insert(s, j);
+            row_of.insert(s, sampled.seed_rows[j] as usize);
         }
         seeds
             .iter()
@@ -552,10 +606,65 @@ impl Session {
             .collect()
     }
 
-    /// Drop the cached embeddings (e.g. after a feature-store refresh);
-    /// the next [`Session::run_batch`] recomputes them.
+    /// The reuse-cache capacities in effect, if cross-request reuse is
+    /// enabled.
+    pub fn reuse_spec(&self) -> Option<ReuseSpec> {
+        self.reuse.as_ref().map(|c| c.spec())
+    }
+
+    /// Snapshot of the cumulative reuse-cache counters, if cross-request
+    /// reuse is enabled.
+    pub fn reuse_stats(&self) -> Option<ReuseStats> {
+        self.reuse.as_ref().map(|c| c.stats().clone())
+    }
+
+    /// Drop the cached embeddings and invalidate the reuse caches with a
+    /// generation bump (e.g. after a feature-store refresh); the next
+    /// [`Session::run_batch`] recomputes from scratch.
     pub fn invalidate(&mut self) {
         self.cached_output = None;
+        if let Some(cache) = self.reuse.as_mut() {
+            cache.invalidate();
+        }
+    }
+
+    /// Replace the plan's weights (e.g. after a training refresh) and
+    /// invalidate everything computed under the old ones: the cached
+    /// full-graph embeddings and — via a generation bump — every reuse
+    /// cache entry, so stale stage results can never leak into
+    /// post-reload batches.
+    ///
+    /// The replacement must be a drop-in parameter swap (same model /
+    /// config / graph shapes); an incompatible set is rejected here with
+    /// a config error instead of surfacing later as an opaque shape
+    /// error inside every served batch.
+    pub fn set_weights(&mut self, weights: ModelWeights) -> Result<()> {
+        let old = &self.plan.weights;
+        let proj_ok = weights.proj.len() == old.proj.len()
+            && weights
+                .proj
+                .iter()
+                .all(|(ty, w)| old.proj.get(ty).map(|o| o.shape()) == Some(w.shape()));
+        let embed_ok = weights.embed.len() == old.embed.len()
+            && weights
+                .embed
+                .iter()
+                .all(|(ty, e)| old.embed.get(ty).map(|o| o.shape()) == Some(e.shape()));
+        let attn_ok = weights.attn_l.len() == old.attn_l.len()
+            && weights.attn_r.len() == old.attn_r.len()
+            && weights.attn_l.iter().zip(&old.attn_l).all(|(a, b)| a.len() == b.len())
+            && weights.attn_r.iter().zip(&old.attn_r).all(|(a, b)| a.len() == b.len());
+        let sem_ok = weights.sem_w.as_ref().map(|t| t.shape())
+            == old.sem_w.as_ref().map(|t| t.shape());
+        if !(proj_ok && embed_ok && attn_ok && sem_ok) {
+            return Err(Error::config(
+                "set_weights: replacement weights are not shape-compatible with the \
+                 plan (build them from the same model, config and graph)",
+            ));
+        }
+        self.plan.weights = weights;
+        self.invalidate();
+        Ok(())
     }
 }
 
@@ -703,6 +812,55 @@ mod tests {
         let s = session.sample_batch(&[n + 3, 3]).unwrap();
         // both ids wrap onto seed 3
         assert_eq!(s.seeds, vec![3]);
+    }
+
+    #[test]
+    fn reuse_requires_sampling() {
+        assert!(ci_builder().reuse(ReuseSpec::rows(64)).build().is_err());
+        assert!(ci_builder()
+            .sampling(crate::sampler::SamplingSpec::uniform(8, 1))
+            .reuse(ReuseSpec::rows(64))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn reuse_batches_accumulate_hits_and_stay_bit_identical() {
+        let mut s = ci_builder()
+            .sampling(crate::sampler::SamplingSpec::uniform(usize::MAX, 1))
+            .reuse(ReuseSpec::rows(1 << 12))
+            .build()
+            .unwrap();
+        assert!(s.reuse_spec().is_some());
+        let a = s.run_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(s.reuse_stats().unwrap().proj_hits, 0, "cold cache cannot hit");
+        let b = s.run_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(a, b, "repeated identical batches must be bit-identical");
+        let st = s.reuse_stats().unwrap();
+        assert!(st.proj_hits > 0 && st.agg_hits > 0, "warm batch must hit: {st:?}");
+        // invalidation clears the caches; recomputation reproduces rows
+        s.invalidate();
+        assert_eq!(s.reuse_stats().unwrap().invalidations, 1);
+        let c = s.run_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn aggregate_only_spec_skips_projection_lookups() {
+        let mut s = ci_builder()
+            .sampling(crate::sampler::SamplingSpec::uniform(usize::MAX, 1))
+            .reuse(ReuseSpec::caps(0, 1 << 12))
+            .build()
+            .unwrap();
+        let _ = s.run_batch(&[0, 1, 2]).unwrap();
+        let _ = s.run_batch(&[0, 1, 2]).unwrap();
+        let st = s.reuse_stats().unwrap();
+        assert_eq!(
+            st.proj_hits + st.proj_misses,
+            0,
+            "a disabled projection cache must never be consulted: {st:?}"
+        );
+        assert!(st.agg_hits > 0, "aggregate reuse must still apply: {st:?}");
     }
 
     #[test]

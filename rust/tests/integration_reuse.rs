@@ -1,0 +1,238 @@
+//! Cross-request reuse integration (the ISSUE-3 acceptance criteria):
+//! cached `run_batch` outputs are **bit-identical** to cold execution
+//! across repeated overlapping batches, tiny capacities evict without
+//! corrupting results, weight reloads invalidate by generation, and the
+//! serving loop shares one cache across dispatches (chunking oversized
+//! requests into `max_batch`-sized sampled dispatches).
+//!
+//! Bit-identity holds for *all* models — including the
+//! semantic-attention ones — because the sampler preserves the node set
+//! on cache hits and pins accumulation order via canonical local ids;
+//! see `rust/src/reuse/` and `rust/src/sampler/` rustdoc.
+
+use std::time::Duration;
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::models::{self, ModelConfig, ModelId};
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::session::{ServeConfig, Session, SessionBuilder};
+
+fn ci_builder(model: ModelId) -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+}
+
+/// Fanout that keeps every neighbor (every row is coverage-exact).
+fn full_fanout() -> SamplingSpec {
+    SamplingSpec::uniform(usize::MAX, 1)
+}
+
+/// The headline acceptance: a reuse session and a cache-less session
+/// fed the same overlapping batch sequence produce identical bytes,
+/// for row-local (R-GCN) and semantic-attention (HAN) models alike —
+/// while the caches demonstrably hit.
+#[test]
+fn cached_batches_match_cold_execution_bit_identically() {
+    for model in [ModelId::Rgcn, ModelId::Han] {
+        let mut cold = ci_builder(model).sampling(full_fanout()).build().unwrap();
+        let mut warm = ci_builder(model)
+            .sampling(full_fanout())
+            .reuse(ReuseSpec::rows(1 << 14))
+            .build()
+            .unwrap();
+        let batches: [&[u32]; 5] = [
+            &[0, 1, 2, 3, 4, 5, 6, 7],
+            &[4, 5, 6, 7, 8, 9, 10, 11], // overlaps the first
+            &[0, 1, 2, 3, 4, 5, 6, 7],   // exact repeat
+            &[2, 9, 14, 3],              // mixed overlap, new order
+            &[20, 21, 0, 9],
+        ];
+        for ids in batches {
+            let a = cold.run_batch(ids).unwrap();
+            let b = warm.run_batch(ids).unwrap();
+            assert_eq!(a, b, "{model:?}: cached rows must be bit-identical to cold");
+        }
+        let stats = warm.reuse_stats().unwrap();
+        assert!(stats.proj_hits > 0, "{model:?}: projection cache never hit: {stats:?}");
+        assert!(stats.agg_hits > 0, "{model:?}: aggregate cache never hit: {stats:?}");
+    }
+}
+
+/// MAGNN's per-edge instance encoding goes through the same overlay
+/// path: hit rows shed their edges, cached rows substitute exactly.
+#[test]
+fn magnn_reuse_matches_cold_execution() {
+    let mut cold = ci_builder(ModelId::Magnn).sampling(full_fanout()).build().unwrap();
+    let mut warm = ci_builder(ModelId::Magnn)
+        .sampling(full_fanout())
+        .reuse(ReuseSpec::rows(1 << 14))
+        .build()
+        .unwrap();
+    for ids in [[0u32, 1, 2, 3], [2, 3, 4, 5], [0, 1, 2, 3]] {
+        assert_eq!(cold.run_batch(&ids).unwrap(), warm.run_batch(&ids).unwrap());
+    }
+    assert!(warm.reuse_stats().unwrap().agg_hits > 0);
+}
+
+/// Under a truncating fanout only fully-covered rows (degree ≤ fanout)
+/// may consult the aggregate cache, so substitution still reproduces
+/// the cache-less outputs exactly; projection reuse applies regardless.
+#[test]
+fn truncated_fanout_reuse_is_output_preserving() {
+    let spec = SamplingSpec::uniform(3, 1);
+    let mut cold = ci_builder(ModelId::Han).sampling(spec.clone()).build().unwrap();
+    let mut warm = ci_builder(ModelId::Han)
+        .sampling(spec)
+        .reuse(ReuseSpec::rows(1 << 14))
+        .build()
+        .unwrap();
+    for ids in [[0u32, 1, 2, 3, 4, 5, 6, 7], [2, 3, 4, 5, 6, 7, 8, 9], [0, 1, 2, 3, 4, 5, 6, 7]]
+    {
+        assert_eq!(cold.run_batch(&ids).unwrap(), warm.run_batch(&ids).unwrap());
+    }
+    assert!(warm.reuse_stats().unwrap().proj_hits > 0);
+}
+
+/// A 4-row cache under 60 distinct seeds churns constantly; eviction
+/// must be visible in the counters and invisible in the outputs.
+#[test]
+fn tiny_capacity_evicts_but_stays_correct() {
+    let mut cold = ci_builder(ModelId::Rgcn).sampling(full_fanout()).build().unwrap();
+    let mut warm = ci_builder(ModelId::Rgcn)
+        .sampling(full_fanout())
+        .reuse(ReuseSpec::rows(4))
+        .build()
+        .unwrap();
+    for start in (0..60u32).step_by(6) {
+        let ids: Vec<u32> = (start..start + 6).collect();
+        assert_eq!(cold.run_batch(&ids).unwrap(), warm.run_batch(&ids).unwrap());
+    }
+    let stats = warm.reuse_stats().unwrap();
+    assert!(stats.evictions > 0, "4-row caches must evict: {stats:?}");
+}
+
+/// `Session::set_weights` must clear every cached stage result (the
+/// generation bump) and the post-reload batches must match a session
+/// built cold with the new weights.
+#[test]
+fn weight_reload_invalidates_the_caches() {
+    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let cfg = ModelConfig::default();
+    let plan = models::build_plan(ModelId::Rgcn, &hg, &cfg).unwrap();
+    let mut warm = Session::builder()
+        .graph(hg)
+        .plan(plan)
+        .sampling(full_fanout())
+        .reuse(ReuseSpec::rows(1 << 14))
+        .build()
+        .unwrap();
+    let ids: Vec<u32> = (0..8).collect();
+    let before = warm.run_batch(&ids).unwrap();
+    let _ = warm.run_batch(&ids).unwrap();
+    assert!(warm.reuse_stats().unwrap().agg_hits > 0, "warm-up must hit");
+
+    // reload weights initialized from a different seed
+    let hg2 = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let cfg2 = ModelConfig { seed: 0xBEEF, ..ModelConfig::default() };
+    let plan2 = models::build_plan(ModelId::Rgcn, &hg2, &cfg2).unwrap();
+    warm.set_weights(plan2.weights.clone()).unwrap();
+    let stats = warm.reuse_stats().unwrap();
+    assert_eq!(stats.invalidations, 1, "set_weights must bump the generation");
+    // a shape-incompatible reload is rejected up front
+    let wrong = models::build_plan(ModelId::Rgcn, &hg2, &ModelConfig {
+        hidden_dim: 16,
+        ..ModelConfig::default()
+    })
+    .unwrap();
+    assert!(warm.set_weights(wrong.weights).is_err());
+
+    let after = warm.run_batch(&ids).unwrap();
+    assert_ne!(before, after, "new weights must change the embeddings");
+    // post-reload rows match a session built cold with the new weights
+    let mut cold = Session::builder()
+        .graph(hg2)
+        .plan(plan2)
+        .sampling(full_fanout())
+        .build()
+        .unwrap();
+    assert_eq!(cold.run_batch(&ids).unwrap(), after);
+}
+
+/// The serving dispatcher shares one cache across dispatches and
+/// surfaces its counters in `ServeStats::reuse`.
+#[test]
+fn serving_shares_the_cache_across_dispatches() {
+    let server = ci_builder(ModelId::Rgcn)
+        .sampling(full_fanout())
+        .reuse(ReuseSpec::rows(1 << 14))
+        .serve(ServeConfig { max_batch: 16, flush_after: Duration::from_millis(5) });
+    let rx1 = server.submit_batch(&[1, 2, 3, 4]).unwrap();
+    let rows1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
+    // second dispatch only after the first completed, so it must go
+    // through the (now warm) shared cache
+    let rx2 = server.submit_batch(&[1, 2, 3, 4]).unwrap();
+    let rows2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(rows1, rows2, "same ids across dispatches must agree bit-for-bit");
+    let stats = server.shutdown();
+    let reuse = stats.reuse.expect("session executor must surface reuse stats");
+    assert!(reuse.proj_hits > 0, "second dispatch must reuse the first's rows: {reuse:?}");
+    assert_eq!(stats.completed, 8);
+}
+
+/// `FusedSubgraph` under reuse executes (and must report) the
+/// inter-subgraph-parallel shape — fusing FP into NA tasks is
+/// incompatible with a shared projection cache — and the report carries
+/// the cache counters.
+#[test]
+fn fused_policy_under_reuse_reports_effective_policy() {
+    use hgnn_char::gpumodel::GpuModel;
+    use hgnn_char::reuse::ReuseCache;
+    use hgnn_char::sampler::NeighborSampler;
+    use hgnn_char::session::{exec, ExecBackend, NativeBackend, SchedulePolicy};
+
+    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let plan = models::build_plan(ModelId::Han, &hg, &ModelConfig::default()).unwrap();
+    let sampler = NeighborSampler::new(full_fanout()).unwrap();
+    let mut cache = ReuseCache::new(ReuseSpec::rows(1 << 12));
+    let sampled = sampler.sample_with_cache(&hg, &plan, &[0, 1, 2, 3], &mut cache).unwrap();
+    let backend = NativeBackend::new();
+    let mut ctx = backend.make_ctx();
+    let run = exec::execute_reuse(
+        &backend,
+        &GpuModel::default(),
+        &sampled,
+        SchedulePolicy::FusedSubgraph { workers: 2 },
+        &mut ctx,
+        &mut cache,
+    )
+    .unwrap();
+    assert_eq!(
+        run.report.policy,
+        SchedulePolicy::InterSubgraphParallel { workers: 2 },
+        "the report must name the policy that actually executed"
+    );
+    assert!(run.report.reuse.is_some());
+    assert!(run.profile.reuse.is_some());
+}
+
+/// An oversized typed batch is chunked into `max_batch`-sized sampled
+/// dispatches whose rows are reassembled in submission order — and for
+/// a row-local model those rows equal a single direct dispatch exactly.
+#[test]
+fn oversized_requests_chunk_into_sampled_dispatches() {
+    let server = ci_builder(ModelId::Rgcn)
+        .sampling(full_fanout())
+        .serve(ServeConfig { max_batch: 8, flush_after: Duration::from_millis(1) });
+    let ids: Vec<u32> = (0..20).collect();
+    let rx = server.submit_batch(&ids).unwrap();
+    let rows = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(rows.len(), 20);
+    let stats = server.shutdown();
+    assert_eq!(stats.batches, 3, "20 ids at max_batch 8 -> 3 sampled dispatches");
+    // chunking must not change any row
+    let mut session = ci_builder(ModelId::Rgcn).sampling(full_fanout()).build().unwrap();
+    assert_eq!(rows, session.run_batch(&ids).unwrap());
+}
