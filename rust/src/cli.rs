@@ -100,6 +100,28 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// Partition spec from `--shards K [--shard-threads T]` (default
+    /// `None`: unsharded). `--shards 0` / `--shard-threads 0` are
+    /// rejected at parse level, as is `--shard-threads` without
+    /// `--shards`; `T` defaults to `K`.
+    pub fn partition(&self) -> Result<Option<crate::partition::PartitionSpec>> {
+        if !self.has("shards") {
+            if self.has("shard-threads") {
+                return Err(Error::config("--shard-threads requires --shards"));
+            }
+            return Ok(None);
+        }
+        let shards = self.flag_usize("shards", 0)?;
+        if shards == 0 {
+            return Err(Error::config("--shards must be >= 1"));
+        }
+        let threads = self.flag_usize("shard-threads", shards)?;
+        if threads == 0 {
+            return Err(Error::config("--shard-threads must be >= 1"));
+        }
+        Ok(Some(crate::partition::PartitionSpec::new(shards).with_threads(threads)))
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -128,6 +150,9 @@ COMMANDS:
   list                           datasets, models, metapaths
   run --model M --dataset D      profile one inference run
       [--scale paper|ci|F] [--policy seq|par|fused|mix] [--workers N]
+      [--shards K]                 degree-balanced sharded execution
+                                   (subsumes --policy: FP/NA per shard)
+      [--shard-threads T]          threads driving the shards (default K)
   figure <2|3|4|5a|5b|5c|6a|6b>  regenerate a paper figure
       [--scale ...]
   table <3>                      regenerate a paper table
@@ -140,6 +165,9 @@ COMMANDS:
       [--sample-layers L]          sampling depth (default 1)
       [--reuse-cap N]              cross-request reuse caches, N rows
                                    per cache (requires --fanout)
+      [--shards K]                 shard-affine serving: batches group
+                                   by owner shard, caches go per-shard
+      [--shard-threads T]          threads driving the shards (default K)
   help                           this text
 ";
 
@@ -236,6 +264,49 @@ mod tests {
         // defaults & errors
         assert_eq!(a.flag_i64("missing", -1).unwrap(), -1);
         assert!(parse("run --shift=nope").flag_i64("shift", 0).is_err());
+    }
+
+    #[test]
+    fn shards_flag_parsing() {
+        // absent: unsharded
+        assert_eq!(parse("run").partition().unwrap(), None);
+        // present: spec with threads defaulting to shards
+        let spec = parse("run --shards 4").partition().unwrap().unwrap();
+        assert_eq!(spec.shards, 4);
+        assert_eq!(spec.threads, 4);
+        let spec = parse("run --shards=8 --shard-threads=2").partition().unwrap().unwrap();
+        assert_eq!(spec.shards, 8);
+        assert_eq!(spec.threads, 2);
+        // zero is rejected in both spellings, for both flags
+        assert!(parse("run --shards 0").partition().is_err());
+        assert!(parse("run --shards=0").partition().is_err());
+        assert!(parse("run --shards 2 --shard-threads 0").partition().is_err());
+        assert!(parse("run --shards=2 --shard-threads=0").partition().is_err());
+        // non-numeric and orphaned thread caps are rejected
+        assert!(parse("run --shards nah").partition().is_err());
+        assert!(parse("run --shard-threads 2").partition().is_err());
+    }
+
+    #[test]
+    fn shards_compose_with_serve_flags() {
+        // the full sharded-serving incantation parses with every flag
+        // bound to its own value (no token stealing between flags)
+        let a = parse(
+            "serve --requests 64 --fanout 8 --batch 4 --reuse-cap 128 \
+             --shards 2 --shard-threads 2",
+        );
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.flag_usize("requests", 0).unwrap(), 64);
+        assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
+        assert_eq!(a.flag_usize("batch", 1).unwrap(), 4);
+        assert_eq!(a.flag_usize("reuse-cap", 0).unwrap(), 128);
+        let spec = a.partition().unwrap().unwrap();
+        assert_eq!((spec.shards, spec.threads), (2, 2));
+        // '=' spelling interleaved with space spelling
+        let a = parse("serve --fanout=8 --shards 4 --reuse-cap=64");
+        assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
+        assert_eq!(a.flag_usize("reuse-cap", 0).unwrap(), 64);
+        assert_eq!(a.partition().unwrap().unwrap().shards, 4);
     }
 
     #[test]

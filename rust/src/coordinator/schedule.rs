@@ -5,12 +5,19 @@ use std::collections::BTreeMap;
 
 use crate::gpumodel::GpuModel;
 use crate::kernels::KernelType;
+use crate::partition::ShardingInfo;
 use crate::profiler::{Profile, StageId};
 use crate::reuse::ReuseStats;
 use crate::coordinator::SchedulePolicy;
 
 /// Longest-processing-time-first assignment of `costs` onto `workers`
 /// bins; returns the worker index per item.
+///
+/// This is the **canonical** LPT implementation: the modeled schedule
+/// analysis, the real NA worker dispatch (`session::exec`), and the
+/// graph partitioner ([`crate::partition`] — per-vertex shard assignment
+/// *and* shard→thread packing) all call this one function rather than
+/// keeping copies.
 pub fn lpt_assign(costs: &[f64], workers: usize) -> Vec<usize> {
     let workers = workers.max(1);
     let mut order: Vec<usize> = (0..costs.len()).collect();
@@ -49,6 +56,9 @@ pub struct ScheduleReport {
     /// Cumulative reuse-cache counters when the run executed through the
     /// cache-aware serving path (`None` for plain runs).
     pub reuse: Option<ReuseStats>,
+    /// Partition-quality summary when the run executed through the
+    /// sharded path (`None` for monolithic runs).
+    pub sharding: Option<ShardingInfo>,
 }
 
 impl ScheduleReport {
@@ -67,6 +77,9 @@ impl ScheduleReport {
                 100.0 * r.proj_hit_rate(),
                 100.0 * r.agg_hit_rate()
             ));
+        }
+        if let Some(s) = &self.sharding {
+            line.push_str(&format!("  [{}]", s.label()));
         }
         line
     }
@@ -152,6 +165,7 @@ pub fn analyze(
         na_makespan_ns: na,
         barrier_at_ns: na_end,
         reuse: None,
+        sharding: None,
     }
 }
 

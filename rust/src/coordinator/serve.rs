@@ -55,6 +55,9 @@ pub struct ServeConfig {
     /// sampling configured, every executed subgraph stays batch-sized
     /// instead of ballooning with the request. Each request's rows are
     /// reassembled across chunks before its one reply is sent.
+    /// Shard-exposing executors ([`BatchExecutor::shards`] `> 1`) bound
+    /// dispatches at `max_batch` ids *per shard* instead, so concurrent
+    /// per-shard sub-batches stay batch-sized individually.
     pub max_batch: usize,
     /// Maximum time the dispatcher waits to fill a batch.
     pub flush_after: Duration,
@@ -101,6 +104,25 @@ pub trait BatchExecutor {
     /// snapshots this after every batch into [`ServeStats::reuse`].
     fn reuse_stats(&self) -> Option<ReuseStats> {
         None
+    }
+
+    /// Number of shard-affine dispatch lanes this executor exposes.
+    /// When `> 1` the dispatcher sorts each flattened queue by
+    /// [`BatchExecutor::shard_of`] and dispatches **shard-grouped
+    /// rounds**: each `execute` call carries up to `max_batch` ids from
+    /// every shard, contiguous per shard, so a sessionized executor
+    /// splits it into per-shard sub-batches (each its own
+    /// `max_batch`-bounded sampled subgraph, each against its own
+    /// reuse-cache lane) and executes them concurrently. The default
+    /// (1) keeps plain FIFO `max_batch` chunking.
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Owning shard-lane of a node id (only consulted when
+    /// [`BatchExecutor::shards`] `> 1`).
+    fn shard_of(&self, _node_id: u32) -> usize {
+        0
     }
 }
 
@@ -184,31 +206,106 @@ impl Server {
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                // execute all queued ids in max_batch-sized chunks: a
-                // flattened queue can exceed max_batch (one oversized
-                // submit_batch, or a last request overshooting the
-                // fill); chunking keeps every executor dispatch — and
-                // hence every sampled subgraph — batch-sized, and each
-                // request's rows are reassembled before its one reply
+                // execute the queued ids: a flattened queue can exceed
+                // max_batch (one oversized submit_batch, or a last
+                // request overshooting the fill). Single-lane executors
+                // take the direct path — max_batch-sized chunks in
+                // queue order, so every sampled subgraph stays
+                // batch-sized. Shard-exposing executors get
+                // shard-grouped *rounds*: each dispatch carries up to
+                // max_batch ids from EVERY shard (ids sorted by owner),
+                // so the sessionized executor splits it into per-shard
+                // sub-batches — each its own max_batch-bounded sampled
+                // subgraph — and executes them concurrently. Either
+                // way, each request's rows are reassembled before its
+                // one reply.
                 let batch: Vec<Request> = std::mem::take(&mut pending);
                 let ids: Vec<u32> =
                     batch.iter().flat_map(|r| r.node_ids.iter().copied()).collect();
                 let cap = config.max_batch.max(1);
-                let mut rows: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
-                let mut failed = false;
-                for chunk in ids.chunks(cap) {
-                    match executor.execute(chunk) {
-                        Ok(mut r) => {
+                let lanes = executor.shards().max(1);
+                // group positions by owner shard before the executor is
+                // mutably borrowed by dispatching
+                let groups: Option<Vec<Vec<usize>>> = (lanes > 1).then(|| {
+                    let mut g: Vec<Vec<usize>> = vec![Vec::new(); lanes];
+                    for (pos, &id) in ids.iter().enumerate() {
+                        g[executor.shard_of(id).min(lanes - 1)].push(pos);
+                    }
+                    g
+                });
+                // one executor dispatch; records stats, None on failure
+                let mut run_chunk = |chunk_ids: &[u32]| -> Option<Vec<Vec<f32>>> {
+                    match executor.execute(chunk_ids) {
+                        Ok(r) if r.len() == chunk_ids.len() => {
                             let mut s = stats_w.lock().unwrap();
                             s.batches += 1;
-                            s.batch_sizes.push(chunk.len());
-                            drop(s);
-                            rows.append(&mut r);
+                            s.batch_sizes.push(chunk_ids.len());
+                            Some(r)
+                        }
+                        Ok(r) => {
+                            eprintln!(
+                                "serve: executor returned {} rows for {} ids",
+                                r.len(),
+                                chunk_ids.len()
+                            );
+                            None
                         }
                         Err(e) => {
                             eprintln!("serve: batch execution failed: {e}");
-                            failed = true;
-                            break;
+                            None
+                        }
+                    }
+                };
+                let mut rows: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
+                let mut failed = false;
+                match groups {
+                    Some(groups) => {
+                        let rounds = groups
+                            .iter()
+                            .map(|g| g.len().div_ceil(cap))
+                            .max()
+                            .unwrap_or(0);
+                        let mut slots: Vec<Option<Vec<f32>>> =
+                            ids.iter().map(|_| None).collect();
+                        for round in 0..rounds {
+                            let chunk: Vec<usize> = groups
+                                .iter()
+                                .flat_map(|g| {
+                                    g.iter().skip(round * cap).take(cap).copied()
+                                })
+                                .collect();
+                            let chunk_ids: Vec<u32> =
+                                chunk.iter().map(|&p| ids[p]).collect();
+                            match run_chunk(&chunk_ids) {
+                                Some(got) => {
+                                    for (&p, row) in chunk.iter().zip(got) {
+                                        slots[p] = Some(row);
+                                    }
+                                }
+                                None => {
+                                    failed = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if !failed {
+                            rows = slots
+                                .into_iter()
+                                .map(|r| r.expect("every position dispatched"))
+                                .collect();
+                        }
+                    }
+                    None => {
+                        // the common single-lane hot path: no grouping,
+                        // no position indirection
+                        for chunk in ids.chunks(cap) {
+                            match run_chunk(chunk) {
+                                Some(mut got) => rows.append(&mut got),
+                                None => {
+                                    failed = true;
+                                    break;
+                                }
+                            }
                         }
                     }
                 }
@@ -371,6 +468,27 @@ impl BatchExecutor for SessionExecutor {
 
     fn reuse_stats(&self) -> Option<ReuseStats> {
         self.session.as_ref().ok().and_then(|s| s.reuse_stats())
+    }
+
+    /// Shard-affine dispatch applies only on the sampled batch path: a
+    /// partitioned session without sampling serves from the cached
+    /// full-graph forward, where grouping would only fragment dispatches.
+    fn shards(&self) -> usize {
+        self.session
+            .as_ref()
+            .ok()
+            .filter(|s| s.sampling().is_some())
+            .and_then(|s| s.partition())
+            .map(|p| p.num_shards())
+            .unwrap_or(1)
+    }
+
+    fn shard_of(&self, node_id: u32) -> usize {
+        self.session
+            .as_ref()
+            .ok()
+            .and_then(|s| s.shard_of(node_id))
+            .unwrap_or(0)
     }
 }
 

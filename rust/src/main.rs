@@ -72,15 +72,29 @@ fn cmd_list() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let model = ModelId::parse(&args.flag_str("model", "han"))?;
     let dataset = DatasetId::parse(&args.flag_str("dataset", "imdb"))?;
-    let mut session = Session::builder()
+    let mut builder = Session::builder()
         .dataset(dataset)
         .scale(args.scale()?)
         .model(model)
         .schedule(policy_from(args)?)
-        .profiling(Profiling::Traces)
-        .build()?;
+        .profiling(Profiling::Traces);
+    if let Some(spec) = args.partition()? {
+        builder = builder.partition(spec);
+        if args.flag_str("policy", "seq") != "seq" {
+            println!(
+                "note: --shards subsumes --policy for the full forward \
+                 (FP/NA parallelize across the {} shard thread(s))",
+                spec.threads
+            );
+        }
+    }
+    let mut session = builder.build()?;
     println!("{}", session.graph().stats_line());
     println!("{}", session.plan().describe(session.graph()));
+    println!("\n{}", report::degree_skew_table(session.graph()));
+    if let Some(part) = session.partition() {
+        println!("partition: {}", part.info().label());
+    }
     let run = session.run()?;
     println!("\n{}", run.profile.stage_breakdown());
     println!("{}", run.report.summary());
@@ -324,6 +338,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         builder = builder.reuse(hgnn_char::reuse::ReuseSpec::rows(reuse_cap));
         println!("cross-request reuse: {reuse_cap} rows per cache");
+    }
+    if let Some(spec) = args.partition()? {
+        builder = builder.partition(spec);
+        if fanout > 0 {
+            println!(
+                "sharded serving: {} shards, {} threads (batches group by owner shard)",
+                spec.shards, spec.threads
+            );
+        } else {
+            println!(
+                "sharded forward: {} shards, {} threads (shard-affine batch grouping \
+                 needs --fanout; full-graph serving uses the cached forward)",
+                spec.shards, spec.threads
+            );
+        }
     }
     let server = builder.serve(ServeConfig::default());
     let ids: Vec<u32> = (0..n as u32).collect();

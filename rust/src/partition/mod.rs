@@ -1,0 +1,544 @@
+//! Degree-balanced heterogeneous-graph partitioning — the sharded
+//! execution subsystem.
+//!
+//! The paper's central observation is that Neighbor Aggregation
+//! dominates HGNN inference and suffers severe load imbalance from
+//! degree skew (most destination vertices have few neighbors, a few
+//! have very many), and HiHGNN (arXiv 2307.12765) shows that exploiting
+//! inter-partition parallelism is the key lever for scaling HGNN
+//! execution. This module turns those findings into a real partitioner:
+//! [`Partition::build`] splits the graph into `K` shards, **per node
+//! type**, by greedy LPT over each destination vertex's aggregation
+//! cost (its total degree across the plan's subgraph CSRs, the same
+//! `nnz`-dominated cost model the schedule analysis uses) — reusing the
+//! canonical [`lpt_assign`] from `coordinator::schedule`, not a second
+//! implementation.
+//!
+//! Each [`Shard`] materializes:
+//!
+//! * **per-shard sub-CSRs** — every subgraph restricted to the
+//!   destination rows the shard owns, in a compact local id space;
+//! * **halo tables** — the foreign-owned source nodes a shard reads
+//!   during NA (its replication/communication cost, exchanged before
+//!   the NA stage by [`crate::session::exec::execute_sharded`]);
+//! * an **owner-computes merge plan** — `(local row, global row)` pairs
+//!   per type, disjoint across shards and jointly covering every node,
+//!   which scatters per-shard NA outputs back into the global tensors
+//!   Semantic Aggregation consumes.
+//!
+//! ## Bit-identical by construction
+//!
+//! Sharded outputs must equal the unsharded forward **bit for bit**, or
+//! no serving system could ever turn sharding on. Two invariants make
+//! that hold:
+//!
+//! 1. **Owner computes.** Every destination row is aggregated by exactly
+//!    one shard, over its *complete* neighbor list (sources may be halo
+//!    nodes) — never split and re-combined, so no f32 re-association.
+//! 2. **Canonical accumulation order.** Shard-local ids ascend with
+//!    global ids (the same invariant [`crate::sampler`] pins for the
+//!    reuse caches), and CSR construction sorts column indices, so every
+//!    local row lists its sources in exactly the global row's order.
+//!    Row-local kernels therefore accumulate in the same order, and
+//!    stage-② rows are bit-identical because the projection sgemm is
+//!    row-local (pinned by `native_project_features_is_row_sliced_fp`).
+//!
+//! `tests/integration_partition.rs` pins both properties for
+//! RGCN/HAN/MAGNN across 1/2/4 shards.
+
+use std::collections::HashMap;
+
+use crate::coordinator::schedule::lpt_assign;
+use crate::graph::sparse::Coo;
+use crate::graph::HeteroGraph;
+use crate::metapath::{Subgraph, SubgraphSet};
+use crate::models::ModelPlan;
+use crate::tensor::Tensor;
+use crate::util::stats;
+use crate::{Error, Result};
+
+/// How the graph is sharded: how many shards, and how many OS threads
+/// drive them (shards are LPT-packed onto threads when `threads <
+/// shards`, again via [`lpt_assign`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionSpec {
+    /// Number of shards `K >= 1`.
+    pub shards: usize,
+    /// Concurrent shard-executor threads (defaults to `shards`).
+    pub threads: usize,
+}
+
+impl PartitionSpec {
+    /// `shards` shards driven by `shards` threads.
+    pub fn new(shards: usize) -> PartitionSpec {
+        PartitionSpec { shards, threads: shards }
+    }
+
+    /// Cap the executor thread count (oversubscribed shards are
+    /// LPT-packed onto the available threads).
+    pub fn with_threads(mut self, threads: usize) -> PartitionSpec {
+        self.threads = threads;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::config("PartitionSpec: --shards must be >= 1"));
+        }
+        if self.threads == 0 {
+            return Err(Error::config("PartitionSpec: --shard-threads must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// Partition quality summary, surfaced through
+/// [`crate::coordinator::schedule::ScheduleReport`] and the CLI so the
+/// balance/communication trade-off is observable per run.
+#[derive(Debug, Clone)]
+pub struct ShardingInfo {
+    /// Shard count `K`.
+    pub shards: usize,
+    /// Executor threads driving the shards.
+    pub threads: usize,
+    /// Total halo rows across shards and types — the feature rows
+    /// exchanged between shards before NA (replication cost).
+    pub halo_rows: usize,
+    /// max/mean modeled NA cost across shards (1.0 = perfect balance).
+    pub imbalance: f64,
+    /// Gini coefficient of the per-shard modeled NA cost (0 = equal).
+    pub cost_gini: f64,
+}
+
+impl ShardingInfo {
+    /// Compact summary fragment for report lines.
+    pub fn label(&self) -> String {
+        format!(
+            "{} shards x{} thr, halo {} rows, imbalance {:.2}",
+            self.shards, self.threads, self.halo_rows, self.imbalance
+        )
+    }
+}
+
+/// One shard: compact local node spaces, the restricted sub-CSRs
+/// packaged as an executable [`ModelPlan`], halo tables and the merge
+/// plan. All per-type vectors are indexed by [`crate::graph::NodeTypeId`].
+#[derive(Debug)]
+pub struct Shard {
+    /// Per type: local id → global id, ascending in global id (the
+    /// canonical ordering that pins f32 accumulation order). Contains
+    /// the owned nodes plus this shard's halo.
+    pub nodes: Vec<Vec<u32>>,
+    /// Per type: global ids this shard owns (ascending). Owned sets are
+    /// disjoint across shards and jointly cover every node of the type.
+    pub owned: Vec<Vec<u32>>,
+    /// Per type: global ids of *foreign-owned* nodes this shard reads as
+    /// NA sources (ascending; disjoint from `owned`).
+    pub halo: Vec<Vec<u32>>,
+    /// Per type: `(local row, global row)` of owned nodes — the
+    /// owner-computes merge plan for NA outputs.
+    pub merge: Vec<Vec<(u32, u32)>>,
+    /// The shard's executable plan: same model/config/weights as the
+    /// parent, subgraphs replaced by the local sub-CSRs (halo rows carry
+    /// no edges), R-GCN embedding tables sliced to the local rows.
+    pub plan: ModelPlan,
+}
+
+impl Shard {
+    /// Total local nodes across types (owned + halo).
+    pub fn total_nodes(&self) -> usize {
+        self.nodes.iter().map(|v| v.len()).sum()
+    }
+
+    /// Total halo rows across types.
+    pub fn halo_rows(&self) -> usize {
+        self.halo.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// The materialized K-way partition of one (graph, plan) pair, cached by
+/// `SessionBuilder::partition` and reused across every run and served
+/// batch of the session.
+#[derive(Debug)]
+pub struct Partition {
+    spec: PartitionSpec,
+    /// Per type: `owners[ty][node]` = owning shard.
+    owners: Vec<Vec<u32>>,
+    /// The materialized shards, `spec.shards` of them.
+    pub shards: Vec<Shard>,
+    /// Per-shard modeled NA cost (Σ sub-CSR nnz + rows), used to LPT-pack
+    /// shards onto executor threads.
+    costs: Vec<f64>,
+    /// Wallclock nanoseconds spent partitioning (CPU-side, one-off).
+    pub build_nanos: u64,
+}
+
+impl Partition {
+    /// Partition `hg` under `plan` into `spec.shards` degree-balanced
+    /// shards. Costs are per *destination* vertex: `1 + Σ degree` across
+    /// the plan's subgraphs targeting the vertex's type, assigned to
+    /// shards with [`lpt_assign`] per node type.
+    pub fn build(hg: &HeteroGraph, plan: &ModelPlan, spec: &PartitionSpec) -> Result<Partition> {
+        spec.validate()?;
+        let t0 = std::time::Instant::now();
+        let k = spec.shards;
+        let n_types = hg.node_types().len();
+
+        // per-destination-vertex aggregation cost over the plan subgraphs
+        let mut costs: Vec<Vec<f64>> = hg
+            .node_types()
+            .iter()
+            .map(|t| vec![1.0f64; t.count])
+            .collect();
+        for sg in &plan.subgraphs.subgraphs {
+            for d in 0..sg.adj.n_rows {
+                costs[sg.dst_type][d] += sg.adj.degree(d) as f64;
+            }
+        }
+
+        // degree-balanced owners, one LPT per node type
+        let owners: Vec<Vec<u32>> = costs
+            .iter()
+            .map(|c| lpt_assign(c, k).into_iter().map(|w| w as u32).collect())
+            .collect();
+
+        // owned sets (ascending: nodes iterated in id order)
+        let mut owned: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n_types]; k];
+        for (ty, type_owners) in owners.iter().enumerate() {
+            for (node, &s) in type_owners.iter().enumerate() {
+                owned[s as usize][ty].push(node as u32);
+            }
+        }
+
+        // halo: foreign-owned sources referenced by owned destination rows
+        let mut halo: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n_types]; k];
+        for sg in &plan.subgraphs.subgraphs {
+            for d in 0..sg.adj.n_rows {
+                let s = owners[sg.dst_type][d] as usize;
+                for &src in sg.adj.row(d) {
+                    if owners[sg.src_type][src as usize] as usize != s {
+                        halo[s][sg.src_type].push(src);
+                    }
+                }
+            }
+        }
+        for shard_halo in halo.iter_mut() {
+            for list in shard_halo.iter_mut() {
+                list.sort_unstable();
+                list.dedup();
+            }
+        }
+
+        // local node spaces (owned ∪ halo, ascending) + reverse maps
+        let mut shards = Vec::with_capacity(k);
+        for s in 0..k {
+            let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n_types);
+            let mut merge: Vec<Vec<(u32, u32)>> = Vec::with_capacity(n_types);
+            let mut local: Vec<HashMap<u32, u32>> = Vec::with_capacity(n_types);
+            for ty in 0..n_types {
+                let mut list = owned[s][ty].clone();
+                list.extend_from_slice(&halo[s][ty]);
+                list.sort_unstable();
+                let map: HashMap<u32, u32> =
+                    list.iter().enumerate().map(|(l, &g)| (g, l as u32)).collect();
+                let m: Vec<(u32, u32)> =
+                    owned[s][ty].iter().map(|&g| (map[&g], g)).collect();
+                nodes.push(list);
+                merge.push(m);
+                local.push(map);
+            }
+
+            // local sub-CSRs: owned destination rows keep their complete
+            // neighbor lists; halo rows exist but carry no edges
+            let mut subgraphs = Vec::with_capacity(plan.num_subgraphs());
+            for sg in &plan.subgraphs.subgraphs {
+                let mut edges = Vec::new();
+                for &d in &owned[s][sg.dst_type] {
+                    let l_dst = local[sg.dst_type][&d];
+                    for &src in sg.adj.row(d as usize) {
+                        edges.push((l_dst, local[sg.src_type][&src]));
+                    }
+                }
+                let adj = Coo::from_edges(
+                    nodes[sg.dst_type].len(),
+                    nodes[sg.src_type].len(),
+                    edges,
+                )?
+                .to_csr();
+                subgraphs.push(Subgraph {
+                    metapath: sg.metapath.clone(),
+                    name: sg.name.clone(),
+                    dst_type: sg.dst_type,
+                    src_type: sg.src_type,
+                    adj,
+                });
+            }
+
+            let shard_plan = ModelPlan {
+                model: plan.model,
+                config: plan.config.clone(),
+                subgraphs: SubgraphSet { subgraphs, build_nanos: 0 },
+                weights: shard_weights(plan, &nodes),
+                target: plan.target,
+            };
+            shards.push(Shard {
+                nodes,
+                owned: std::mem::take(&mut owned[s]),
+                halo: std::mem::take(&mut halo[s]),
+                merge,
+                plan: shard_plan,
+            });
+        }
+
+        let costs: Vec<f64> = shards
+            .iter()
+            .map(|sh| {
+                sh.plan
+                    .subgraphs
+                    .subgraphs
+                    .iter()
+                    .map(|sg| sg.adj.nnz() as f64 + 1.0)
+                    .sum()
+            })
+            .collect();
+
+        Ok(Partition {
+            spec: *spec,
+            owners,
+            shards,
+            costs,
+            build_nanos: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// The spec this partition was built under.
+    pub fn spec(&self) -> PartitionSpec {
+        self.spec
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Owning shard of a node.
+    pub fn owner_of(&self, ty: usize, node: u32) -> usize {
+        self.owners[ty][node as usize] as usize
+    }
+
+    /// Per-shard modeled NA costs (LPT input for thread packing).
+    pub fn shard_costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Partition quality summary.
+    pub fn info(&self) -> ShardingInfo {
+        let halo_rows = self.shards.iter().map(|s| s.halo_rows()).sum();
+        let mean = self.costs.iter().sum::<f64>() / self.costs.len().max(1) as f64;
+        let max = self.costs.iter().fold(0.0f64, |a, &b| a.max(b));
+        ShardingInfo {
+            shards: self.num_shards(),
+            threads: self.spec.threads,
+            halo_rows,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+            cost_gini: stats::gini(&self.costs),
+        }
+    }
+
+    /// Re-derive every shard plan's weights from `plan` (same shapes,
+    /// new values) after a weight reload — R-GCN embedding tables are
+    /// re-sliced to each shard's local rows. Topology is untouched.
+    pub fn refresh_weights(&mut self, plan: &ModelPlan) {
+        for shard in &mut self.shards {
+            shard.plan.weights = shard_weights(plan, &shard.nodes);
+        }
+    }
+}
+
+/// Shard-local copy of the plan weights: every field cloned except the
+/// R-GCN embedding tables, which are sliced (never cloned whole — they
+/// are the one weight object that scales with the graph) to the shard's
+/// local rows.
+fn shard_weights(plan: &ModelPlan, nodes: &[Vec<u32>]) -> crate::models::ModelWeights {
+    crate::models::ModelWeights {
+        proj: plan.weights.proj.clone(),
+        embed: plan
+            .weights
+            .embed
+            .iter()
+            .map(|(&ty, e)| (ty, gather_rows(e, &nodes[ty])))
+            .collect(),
+        attn_l: plan.weights.attn_l.clone(),
+        attn_r: plan.weights.attn_r.clone(),
+        inst_attn: plan.weights.inst_attn.clone(),
+        sem_w: plan.weights.sem_w.clone(),
+        sem_b: plan.weights.sem_b.clone(),
+        sem_q: plan.weights.sem_q.clone(),
+    }
+}
+
+/// Gather rows of `x` at `ids` into a compact `[ids.len(), cols]` tensor.
+fn gather_rows(x: &Tensor, ids: &[u32]) -> Tensor {
+    let mut out = Tensor::zeros(ids.len(), x.cols());
+    for (l, &g) in ids.iter().enumerate() {
+        out.set_row(l, x.row(g as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models::{self, ModelConfig, ModelId};
+
+    fn imdb(model: ModelId) -> (HeteroGraph, ModelPlan) {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+        (hg, plan)
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert_eq!(PartitionSpec::new(4).threads, 4);
+        assert_eq!(PartitionSpec::new(4).with_threads(2).threads, 2);
+        let (hg, plan) = imdb(ModelId::Han);
+        assert!(Partition::build(&hg, &plan, &PartitionSpec::new(0)).is_err());
+        assert!(
+            Partition::build(&hg, &plan, &PartitionSpec::new(2).with_threads(0)).is_err()
+        );
+    }
+
+    #[test]
+    fn owned_sets_are_a_disjoint_cover() {
+        for model in [ModelId::Han, ModelId::Rgcn, ModelId::Magnn] {
+            let (hg, plan) = imdb(model);
+            for k in [1, 2, 4] {
+                let part = Partition::build(&hg, &plan, &PartitionSpec::new(k)).unwrap();
+                assert_eq!(part.num_shards(), k);
+                for (ty, t) in hg.node_types().iter().enumerate() {
+                    let mut seen = vec![0u32; t.count];
+                    for shard in &part.shards {
+                        for &g in &shard.owned[ty] {
+                            seen[g as usize] += 1;
+                        }
+                    }
+                    assert!(
+                        seen.iter().all(|&c| c == 1),
+                        "{model:?} k={k}: type {ty} not a disjoint cover"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_references_only_foreign_nodes() {
+        let (hg, plan) = imdb(ModelId::Rgcn);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(3)).unwrap();
+        for (s, shard) in part.shards.iter().enumerate() {
+            for (ty, list) in shard.halo.iter().enumerate() {
+                for &g in list {
+                    assert_ne!(
+                        part.owner_of(ty, g),
+                        s,
+                        "shard {s} halo holds its own node {g} of type {ty}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owned_rows_keep_complete_neighbor_lists() {
+        let (hg, plan) = imdb(ModelId::Han);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(2)).unwrap();
+        // every owned destination row's local sources map back to exactly
+        // the global row, in ascending order
+        for shard in &part.shards {
+            for (si, sg) in shard.plan.subgraphs.subgraphs.iter().enumerate() {
+                let global = &plan.subgraphs.subgraphs[si];
+                for &(l, g) in &shard.merge[sg.dst_type] {
+                    let local_srcs: Vec<u32> = sg
+                        .adj
+                        .row(l as usize)
+                        .iter()
+                        .map(|&ls| shard.nodes[sg.src_type][ls as usize])
+                        .collect();
+                    assert_eq!(local_srcs, global.adj.row(g as usize).to_vec());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_rows_carry_no_edges() {
+        let (hg, plan) = imdb(ModelId::Han);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(2)).unwrap();
+        for (s, shard) in part.shards.iter().enumerate() {
+            for sg in &shard.plan.subgraphs.subgraphs {
+                for (l, &g) in shard.nodes[sg.dst_type].iter().enumerate() {
+                    if part.owner_of(sg.dst_type, g) != s {
+                        assert_eq!(sg.adj.degree(l), 0, "halo row {g} has edges");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_ids_ascend_with_global_ids() {
+        let (hg, plan) = imdb(ModelId::Magnn);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(4)).unwrap();
+        for shard in &part.shards {
+            for list in &shard.nodes {
+                assert!(list.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything_with_no_halo() {
+        let (hg, plan) = imdb(ModelId::Han);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(1)).unwrap();
+        let info = part.info();
+        assert_eq!(info.halo_rows, 0);
+        assert!((info.imbalance - 1.0).abs() < 1e-12);
+        for (ty, t) in hg.node_types().iter().enumerate() {
+            assert_eq!(part.shards[0].owned[ty].len(), t.count);
+        }
+    }
+
+    #[test]
+    fn costs_are_roughly_balanced() {
+        let (hg, plan) = imdb(ModelId::Han);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(4)).unwrap();
+        let info = part.info();
+        // LPT over per-vertex costs keeps the max shard within 2x of the
+        // mean on any non-degenerate graph
+        assert!(info.imbalance < 2.0, "imbalance {}", info.imbalance);
+        assert!(info.cost_gini < 0.5, "gini {}", info.cost_gini);
+        assert!(info.label().contains("4 shards"));
+    }
+
+    #[test]
+    fn rgcn_embeddings_slice_to_local_rows() {
+        let (hg, plan) = imdb(ModelId::Rgcn);
+        let mut part = Partition::build(&hg, &plan, &PartitionSpec::new(2)).unwrap();
+        for shard in &part.shards {
+            for (&ty, embed) in &shard.plan.weights.embed {
+                assert_eq!(embed.rows(), shard.nodes[ty].len());
+                for (l, &g) in shard.nodes[ty].iter().enumerate() {
+                    assert_eq!(embed.row(l), plan.weights.embed[&ty].row(g as usize));
+                }
+            }
+        }
+        // refresh re-slices from the (possibly new) parent weights
+        part.refresh_weights(&plan);
+        for shard in &part.shards {
+            for (&ty, embed) in &shard.plan.weights.embed {
+                assert_eq!(embed.rows(), shard.nodes[ty].len());
+            }
+        }
+    }
+}

@@ -107,6 +107,35 @@ pub fn bar_chart(title: &str, series: &[(String, f64)], width: usize) -> String 
     out
 }
 
+/// Per-type destination-degree skew table of a heterogeneous graph —
+/// the NA load-imbalance fingerprint (paper §4.2: skewed destination
+/// degrees serialize the dominant stage) and the quantity the
+/// degree-balanced partitioner ([`crate::partition`]) flattens across
+/// shards. Degrees are summed over every relation targeting the type.
+pub fn degree_skew_table(hg: &crate::graph::HeteroGraph) -> String {
+    let mut table = Table::new(&["type", "nodes", "mean deg", "max deg", "max/mean", "gini"]);
+    for (ty, t) in hg.node_types().iter().enumerate() {
+        let mut degrees = vec![0.0f64; t.count];
+        for rel in hg.relations() {
+            if rel.dst == ty {
+                for (d, deg) in degrees.iter_mut().enumerate() {
+                    *deg += rel.adj.degree(d) as f64;
+                }
+            }
+        }
+        let skew = crate::util::stats::degree_skew(&degrees);
+        table.row(&[
+            t.name.clone(),
+            format!("{}", t.count),
+            format!("{:.2}", skew.mean),
+            format!("{:.0}", skew.max),
+            format!("{:.2}", skew.max_mean_ratio),
+            format!("{:.3}", skew.gini),
+        ]);
+    }
+    format!("per-type degree skew (NA load-imbalance driver):\n{}", table.render())
+}
+
 /// Render the Fig 2 stage breakdown for one (model, dataset) run.
 pub fn fig2_row(model: &str, dataset: &str, profile: &Profile) -> String {
     let pct = profile.stage_percentages();
@@ -294,6 +323,21 @@ mod tests {
         }
         let total: f64 = avg.values().sum();
         assert!((total - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degree_skew_table_lists_every_type() {
+        let hg = crate::datasets::build(
+            crate::datasets::DatasetId::Imdb,
+            &crate::datasets::DatasetScale::ci(),
+        )
+        .unwrap();
+        let table = degree_skew_table(&hg);
+        for t in hg.node_types() {
+            assert!(table.contains(&t.name), "missing type {}", t.name);
+        }
+        assert!(table.contains("gini"));
+        assert!(table.contains("max/mean"));
     }
 
     #[test]

@@ -138,6 +138,21 @@ impl ReuseStats {
         rate(self.agg_hits, self.agg_misses)
     }
 
+    /// Accumulate another cache's counters into this one. The sharded
+    /// serving path keeps one [`ReuseCache`] lane per shard (each
+    /// shard-affine sub-batch touches only its seed-owner's lane, so
+    /// lanes never contend); the session aggregates the lanes through
+    /// this into the single `ReuseStats` view the stats plumbing
+    /// reports.
+    pub fn absorb(&mut self, other: &ReuseStats) {
+        self.proj_hits += other.proj_hits;
+        self.proj_misses += other.proj_misses;
+        self.agg_hits += other.agg_hits;
+        self.agg_misses += other.agg_misses;
+        self.evictions += other.evictions;
+        self.invalidations += other.invalidations;
+    }
+
     /// One-line human summary for the CLI and bench output.
     pub fn line(&self) -> String {
         format!(

@@ -159,6 +159,18 @@ impl SampledSubgraph {
         self.plan.subgraphs.subgraphs.iter().map(|sg| sg.adj.nnz()).sum()
     }
 
+    /// Seed id → executed output row, combining [`SampledSubgraph::seeds`]
+    /// and [`SampledSubgraph::seed_rows`] — the lookup both the plain and
+    /// the shard-affine batch paths use to map requested ids (duplicates
+    /// collapse onto one seed) back onto embedding rows.
+    pub fn seed_row_map(&self) -> HashMap<u32, usize> {
+        self.seeds
+            .iter()
+            .zip(&self.seed_rows)
+            .map(|(&g, &r)| (g, r as usize))
+            .collect()
+    }
+
     /// One-line statistics string for logs and the serving demo.
     pub fn stats_line(&self) -> String {
         format!(

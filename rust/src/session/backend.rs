@@ -148,6 +148,85 @@ pub trait ExecBackend: std::fmt::Debug {
 /// from multiple threads concurrently.
 pub trait SyncExecBackend: ExecBackend + Sync {}
 
+/// Adapter presenting a thread-safe backend view as a plain
+/// [`ExecBackend`]: the sharded executors run whole stage pipelines
+/// inside scoped threads, which can only capture `Sync` views, while
+/// every stage executor takes `&dyn ExecBackend`. Wrapping bridges the
+/// two without trait upcasting (which our MSRV predates) — the adapter
+/// is itself `Sync` and delegates every entry point.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncAsExec<'a>(pub &'a dyn SyncExecBackend);
+
+impl ExecBackend for SyncAsExec<'_> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn caps(&self) -> BackendCaps {
+        self.0.caps()
+    }
+
+    fn make_ctx(&self) -> Ctx {
+        self.0.make_ctx()
+    }
+
+    fn feature_projection(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+    ) -> Result<Projected> {
+        self.0.feature_projection(ctx, plan, hg)
+    }
+
+    fn project_type(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        ty: NodeTypeId,
+    ) -> Result<Option<Tensor>> {
+        self.0.project_type(ctx, plan, hg, ty)
+    }
+
+    fn project_features(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        ty: NodeTypeId,
+        x: &Tensor,
+    ) -> Result<Option<Tensor>> {
+        self.0.project_features(ctx, plan, ty, x)
+    }
+
+    fn neighbor_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        subgraph: usize,
+        projected: &Projected,
+    ) -> Result<Tensor> {
+        self.0.neighbor_aggregation(ctx, plan, subgraph, projected)
+    }
+
+    fn semantic_aggregation(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        na_results: &[Tensor],
+    ) -> Result<Tensor> {
+        self.0.semantic_aggregation(ctx, plan, na_results)
+    }
+
+    fn run_full(&self, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Option<Tensor>> {
+        self.0.run_full(plan, hg)
+    }
+
+    fn as_sync(&self) -> Option<&dyn SyncExecBackend> {
+        Some(self.0)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // NativeBackend
 // ---------------------------------------------------------------------------

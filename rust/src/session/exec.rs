@@ -31,6 +31,16 @@
 //!   cache-cold run's, because the sampler preserves the node set and
 //!   cached rows are bit-identical substitutes.
 //!
+//! ## The sharded path
+//!
+//! [`execute_sharded`] is the executor behind
+//! `SessionBuilder::partition(PartitionSpec)`: FP and NA run per shard
+//! of a degree-balanced [`crate::partition::Partition`] on scoped
+//! threads, a halo feature exchange hands foreign-owned projected rows
+//! to their readers, and an owner-computes merge reassembles the global
+//! NA tensors before SA — bit-identical to the monolithic forward (see
+//! [`crate::partition`] for the invariant argument).
+//!
 //! `FusedSubgraph` executes here in its inter-subgraph-parallel shape —
 //! fusing FP into per-worker NA tasks is incompatible with a shared
 //! projection cache — keeping the policy's NA worker split, and the
@@ -47,6 +57,7 @@ use crate::graph::HeteroGraph;
 use crate::kernels::rearrange::index_select;
 use crate::kernels::{Ctx, KernelCounters, KernelExec, KernelType};
 use crate::models::ModelPlan;
+use crate::partition::{Partition, Shard};
 use crate::profiler::{Profile, StageId};
 use crate::reuse::ReuseCache;
 use crate::sampler::SampledSubgraph;
@@ -663,6 +674,323 @@ fn scatter_rows(t: &mut Tensor, rows: &[(u32, Vec<f32>)]) -> Option<KernelExec> 
         wall_nanos: nanos,
         trace: None,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Sharded execution
+// ---------------------------------------------------------------------------
+
+/// Per-shard stage-② output: kernel events + (type, owned-row projection)
+/// pairs.
+type FpOut = (Vec<KernelExec>, Vec<(usize, Tensor)>);
+/// Per-shard stage-③ output: halo-exchange events + per-subgraph
+/// (events, NA result) pairs.
+type NaOut = (Vec<KernelExec>, Vec<(Vec<KernelExec>, Tensor)>);
+
+/// Execute the full-graph forward over a degree-balanced [`Partition`]
+/// (see `SessionBuilder::partition`): FP and NA run **per shard** on
+/// real `std::thread::scope` threads (shards LPT-packed onto
+/// `spec.threads` via the canonical [`lpt_assign`]), with an explicit
+/// halo feature-exchange step between them, then the owner-computes
+/// merge reassembles the global NA tensors and SA runs once.
+///
+/// * **② FP, owner-computes** — each shard projects only the feature
+///   rows it owns (`IndexSelect` gather + row-sliced
+///   [`ExecBackend::project_features`]; backends without that entry
+///   point fall back to whole-type projection + slice). A `ShardMerge`
+///   DR kernel scatters the disjoint row sets into the global per-type
+///   matrices.
+/// * **Halo exchange** — each shard gathers its local slice (owned ∪
+///   halo rows, ascending global order) from the merged matrices: owned
+///   rows come from its own compute, halo rows from their owners'.
+///   Recorded as a `HaloExchange` DR kernel per shard.
+/// * **③ NA** — each shard aggregates its complete owned destination
+///   rows over its local sub-CSRs. Because local ids ascend with global
+///   ids and every owned row keeps its full neighbor list, each row's
+///   f32 accumulation order is exactly the unsharded order.
+/// * **Merge + ④ SA** — owned rows scatter into global NA tensors
+///   (disjoint cover, one writer per row — another `ShardMerge`), and
+///   Semantic Aggregation runs over them unchanged. The output is
+///   **bit-identical** to the unsharded forward
+///   (`tests/integration_partition.rs` pins this for RGCN/HAN/MAGNN
+///   across 1/2/4 shards).
+///
+/// Backends without a thread-safe view ([`ExecBackend::as_sync`] =
+/// `None`) execute the same shard schedule on one thread; the modeled
+/// report is identical. The returned report carries the effective
+/// parallel shape (`InterSubgraphParallel` at the thread count) plus the
+/// partition's [`crate::partition::ShardingInfo`].
+pub fn execute_sharded(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    part: &Partition,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    scratch.events.clear();
+    let k = part.num_shards();
+    let threads = part.spec().threads.max(1).min(k);
+    let thread_of = lpt_assign(part.shard_costs(), threads);
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        ..Default::default()
+    };
+
+    // ② FP, owner-computes, spread over shard threads
+    let fp_outs: Vec<FpOut> = match backend.as_sync() {
+        Some(sync) if threads > 1 => {
+            run_shards_parallel(k, threads, &thread_of, |s| {
+                let mut ctx = sync.make_ctx();
+                let rows = fp_shard_task(sync, &part.shards[s], &mut ctx, plan, hg)?;
+                Ok((ctx.drain(), rows))
+            })?
+        }
+        _ => (0..k)
+            .map(|s| {
+                let mut ctx = backend.make_ctx();
+                let rows = fp_shard_task(backend, &part.shards[s], &mut ctx, plan, hg)?;
+                Ok((ctx.drain(), rows))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let mut shard_fp: Vec<Vec<(usize, Tensor)>> = Vec::with_capacity(k);
+    for (s, (events, rows)) in fp_outs.into_iter().enumerate() {
+        profile.record(events, StageId::FeatureProjection, None, thread_of[s], 0);
+        shard_fp.push(rows);
+    }
+
+    // barrier: scatter the disjoint owned-row projections into the
+    // global per-type matrices (the stage-② merge)
+    let t0 = std::time::Instant::now();
+    let mut projected: Projected = BTreeMap::new();
+    for (&ty, w) in &plan.weights.proj {
+        let rows = plan
+            .weights
+            .embed
+            .get(&ty)
+            .map(|e| e.rows())
+            .unwrap_or_else(|| hg.node_type(ty).count);
+        projected.insert(ty, Tensor::zeros(rows, w.cols()));
+    }
+    let mut fp_bytes = 0u64;
+    for (s, rows) in shard_fp.into_iter().enumerate() {
+        for (ty, h) in rows {
+            fp_bytes += h.bytes() as u64;
+            let target = projected
+                .get_mut(&ty)
+                .ok_or_else(|| Error::config(format!("sharded FP: unplanned type {ty}")))?;
+            for (l, &g) in part.shards[s].owned[ty].iter().enumerate() {
+                target.set_row(g as usize, h.row(l));
+            }
+        }
+    }
+    profile.record(
+        vec![dr_exec("ShardMerge", fp_bytes, t0.elapsed().as_nanos() as u64)],
+        StageId::FeatureProjection,
+        None,
+        0,
+        0,
+    );
+
+    // ③ halo exchange + NA per shard, spread over shard threads
+    let projected_ref = &projected;
+    let na_outs: Vec<NaOut> = match backend.as_sync() {
+        Some(sync) if threads > 1 => {
+            run_shards_parallel(k, threads, &thread_of, |s| {
+                na_shard_task(sync, &part.shards[s], projected_ref)
+            })?
+        }
+        _ => (0..k)
+            .map(|s| na_shard_task(backend, &part.shards[s], projected_ref))
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let mut shard_na: Vec<Vec<Tensor>> = Vec::with_capacity(k);
+    for (s, (halo_events, subs)) in na_outs.into_iter().enumerate() {
+        profile.record(halo_events, StageId::NeighborAggregation, None, thread_of[s], 0);
+        let mut outs = Vec::with_capacity(subs.len());
+        for (si, (events, t)) in subs.into_iter().enumerate() {
+            profile.record(
+                events,
+                StageId::NeighborAggregation,
+                Some(plan.subgraphs.subgraphs[si].name.as_str()),
+                thread_of[s],
+                0,
+            );
+            outs.push(t);
+        }
+        shard_na.push(outs);
+    }
+
+    // barrier: owner-computes merge of the per-shard NA rows
+    let t0 = std::time::Instant::now();
+    let p = plan.num_subgraphs();
+    let mut na_results = Vec::with_capacity(p);
+    let mut na_bytes = 0u64;
+    for si in 0..p {
+        let sg = &plan.subgraphs.subgraphs[si];
+        let cols = shard_na[0][si].cols();
+        let mut out = Tensor::zeros(sg.adj.n_rows, cols);
+        for (s, outs) in shard_na.iter().enumerate() {
+            for &(l, g) in &part.shards[s].merge[sg.dst_type] {
+                out.set_row(g as usize, outs[si].row(l as usize));
+            }
+        }
+        na_bytes += out.bytes() as u64;
+        na_results.push(out);
+    }
+    profile.record(
+        vec![dr_exec("ShardMerge", na_bytes, t0.elapsed().as_nanos() as u64)],
+        StageId::NeighborAggregation,
+        None,
+        0,
+        0,
+    );
+
+    // barrier, then ④ SA on the main thread over the merged tensors
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+
+    profile.attach_metrics(gpu);
+    let effective = SchedulePolicy::InterSubgraphParallel { workers: threads };
+    let mut report = schedule::analyze(&profile, threads, false, effective, gpu);
+    report.sharding = Some(part.info());
+    Ok(StagedRun { output, na_results, profile, report })
+}
+
+/// Run one task per shard on real scoped threads, LPT-packed onto
+/// `threads` of them (`thread_of` from [`lpt_assign`] over the shard
+/// costs). Results come back indexed by shard. Callers without a
+/// thread-safe backend view run the same shard schedule inline instead.
+fn run_shards_parallel<T: Send>(
+    k: usize,
+    threads: usize,
+    thread_of: &[usize],
+    f: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    let mut slots: Vec<Option<T>> = (0..k).map(|_| None).collect();
+    let per_thread: Vec<Result<Vec<(usize, T)>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let f = &f;
+                let mine: Vec<usize> = (0..k).filter(|&s| thread_of[s] == t).collect();
+                scope.spawn(move || -> Result<Vec<(usize, T)>> {
+                    mine.into_iter().map(|s| f(s).map(|r| (s, r))).collect()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    });
+    for r in per_thread {
+        for (s, out) in r? {
+            slots[s] = Some(out);
+        }
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(s, o)| o.ok_or_else(|| Error::config(format!("shard {s} never executed"))))
+        .collect()
+}
+
+/// Stage ② for one shard: project exactly the rows this shard owns, per
+/// planned type, through the backend's row-sliced projection entry point
+/// (whole-type projection + slice when the backend has none).
+fn fp_shard_task<B: ExecBackend + ?Sized>(
+    backend: &B,
+    shard: &Shard,
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+) -> Result<Vec<(usize, Tensor)>> {
+    let mut out = Vec::new();
+    for (&ty, w) in &plan.weights.proj {
+        let ids = &shard.owned[ty];
+        if ids.is_empty() {
+            continue;
+        }
+        let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
+        let x_rows = index_select(ctx, x, ids)?;
+        let h = match backend.project_features(ctx, plan, ty, &x_rows)? {
+            Some(h) => h,
+            None => {
+                let full = backend.project_type(ctx, plan, hg, ty)?.ok_or_else(|| {
+                    Error::config(format!("sharded FP: type {ty} has no projection path"))
+                })?;
+                index_select(ctx, &full, ids)?
+            }
+        };
+        if h.shape() != (ids.len(), w.cols()) {
+            return Err(Error::shape(format!(
+                "sharded FP: type {ty} projected {:?}, expected ({}, {})",
+                h.shape(),
+                ids.len(),
+                w.cols()
+            )));
+        }
+        out.push((ty, h));
+    }
+    Ok(out)
+}
+
+/// Stage ③ for one shard: gather the local feature slice (the halo
+/// exchange), then aggregate every subgraph's owned rows over the local
+/// sub-CSRs. Returns (halo events, per-subgraph (events, result)).
+fn na_shard_task<B: ExecBackend + ?Sized>(
+    backend: &B,
+    shard: &Shard,
+    projected: &Projected,
+) -> Result<NaOut> {
+    let mut ctx = backend.make_ctx();
+    let mut local: Projected = BTreeMap::new();
+    for (&ty, h) in projected {
+        local.insert(ty, halo_exchange(&mut ctx, h, &shard.nodes[ty]));
+    }
+    let halo_events = ctx.drain();
+    let mut subs = Vec::with_capacity(shard.plan.num_subgraphs());
+    for si in 0..shard.plan.num_subgraphs() {
+        let t = backend.neighbor_aggregation(&mut ctx, &shard.plan, si, &local)?;
+        subs.push((ctx.drain(), t));
+    }
+    Ok((halo_events, subs))
+}
+
+/// Gather a shard's local rows from a merged global matrix — owned rows
+/// from the shard's own stage-② output, halo rows from their owners'.
+fn halo_exchange(ctx: &mut Ctx, h: &Tensor, ids: &[u32]) -> Tensor {
+    let t0 = std::time::Instant::now();
+    let mut out = Tensor::zeros(ids.len(), h.cols());
+    for (l, &g) in ids.iter().enumerate() {
+        out.set_row(l, h.row(g as usize));
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let bytes = out.bytes() as u64;
+    ctx.push(
+        "HaloExchange",
+        KernelType::DataRearrange,
+        KernelCounters {
+            flops: 0,
+            bytes_read: bytes + ids.len() as u64 * 4,
+            bytes_written: bytes,
+        },
+        nanos,
+        None,
+    );
+    out
+}
+
+/// A data-rearrange kernel record for the owner-computes merges.
+fn dr_exec(name: &'static str, bytes: u64, nanos: u64) -> KernelExec {
+    KernelExec {
+        name,
+        ktype: KernelType::DataRearrange,
+        counters: KernelCounters { flops: 0, bytes_read: bytes, bytes_written: bytes },
+        wall_nanos: nanos,
+        trace: None,
+    }
 }
 
 /// Fused tasks on the calling thread with per-virtual-worker projection

@@ -46,14 +46,19 @@ use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
 use crate::kernels::Ctx;
 use crate::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
+use crate::partition::Partition;
 use crate::profiler::Profile;
 use crate::reuse::{ReuseCache, ReuseStats};
 use crate::sampler::{NeighborSampler, SampledSubgraph};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
-pub use backend::{BackendCaps, ExecBackend, NativeBackend, PjrtBackend, Projected, SyncExecBackend};
+pub use backend::{
+    BackendCaps, ExecBackend, NativeBackend, PjrtBackend, Projected, SyncAsExec,
+    SyncExecBackend,
+};
 pub use crate::coordinator::serve::{ServeConfig, ServeStats, Server};
+pub use crate::partition::PartitionSpec;
 pub use crate::reuse::ReuseSpec;
 pub use crate::sampler::SamplingSpec;
 pub use exec::StagedRun;
@@ -198,6 +203,7 @@ pub struct SessionBuilder {
     gpu: Option<GpuModel>,
     sampling: Option<SamplingSpec>,
     reuse: Option<ReuseSpec>,
+    partition: Option<PartitionSpec>,
 }
 
 impl Default for SchedulePolicy {
@@ -301,6 +307,28 @@ impl SessionBuilder {
         self
     }
 
+    /// Shard the session: the graph is split into `spec.shards`
+    /// degree-balanced shards per node type
+    /// ([`crate::partition::Partition::build`], cached here across every
+    /// run and served batch). [`Session::run`] then executes FP/NA per
+    /// shard on `spec.threads` real threads with a halo feature exchange
+    /// and an owner-computes merge — **bit-identical** to the monolithic
+    /// forward. The partition subsumes the [`SchedulePolicy`] for that
+    /// full forward (the report carries the effective
+    /// inter-subgraph-parallel shape at the thread count).
+    /// [`Session::run_batch`] (with [`SessionBuilder::sampling`]) splits
+    /// each batch by seed owner and executes the shard-affine
+    /// sub-batches concurrently — each against its own reuse-cache lane
+    /// when [`SessionBuilder::reuse`] is stacked on top, so the lanes
+    /// never contend (interior nodes sampled from several shards' seeds
+    /// are cached per lane: bounded replication for lock-freedom).
+    /// Whole-model backends ignore the spec (their fused artifact
+    /// subsumes any partition).
+    pub fn partition(mut self, spec: PartitionSpec) -> Self {
+        self.partition = Some(spec);
+        self
+    }
+
     /// Build the session: synthesize/adopt the graph, build the plan,
     /// instantiate the backend.
     pub fn build(self) -> Result<Session> {
@@ -344,6 +372,17 @@ impl SessionBuilder {
                  memoize sampled-batch stage results",
             ));
         }
+        let partition = match self.partition {
+            Some(spec) => Some(Partition::build(&hg, &plan, &spec)?),
+            None => None,
+        };
+        // one reuse-cache lane per shard (each shard-affine sub-batch
+        // touches only its own lane, so lanes never contend); one lane
+        // when the session is unpartitioned
+        let lanes = partition.as_ref().map(|p| p.num_shards()).unwrap_or(1);
+        let reuse = self
+            .reuse
+            .map(|spec| (0..lanes).map(|_| ReuseCache::new(spec)).collect::<Vec<_>>());
         Ok(Session {
             hg,
             plan,
@@ -352,7 +391,8 @@ impl SessionBuilder {
             policy: self.policy,
             profiling: self.profiling,
             sampler,
-            reuse: self.reuse.map(ReuseCache::new),
+            reuse,
+            partition,
             scratch,
             cached_output: None,
             runs: 0,
@@ -384,8 +424,13 @@ pub struct Session {
     /// [`Session::run_batch`] to sampled-subgraph execution.
     sampler: Option<NeighborSampler>,
     /// Cross-request reuse caches shared across every batch this session
-    /// (and hence a serving dispatcher) executes.
-    reuse: Option<ReuseCache>,
+    /// (and hence a serving dispatcher) executes — one lane per shard
+    /// when the session is partitioned, else one.
+    reuse: Option<Vec<ReuseCache>>,
+    /// Degree-balanced K-way partition cached by the builder; `Some`
+    /// switches [`Session::run`] to sharded execution and
+    /// [`Session::run_batch`] to shard-affine sub-batches.
+    partition: Option<Partition>,
     /// Kernel context reused across runs (event-buffer allocation
     /// survives between runs).
     scratch: Ctx,
@@ -478,14 +523,37 @@ impl Session {
     }
 
     fn run_staged(&mut self) -> Result<StagedRun> {
-        exec::execute(
-            self.backend.as_ref(),
-            &self.gpu,
-            &self.plan,
-            &self.hg,
-            self.policy,
-            &mut self.scratch,
-        )
+        match self.partition.as_ref() {
+            Some(part) => exec::execute_sharded(
+                self.backend.as_ref(),
+                &self.gpu,
+                &self.plan,
+                &self.hg,
+                part,
+                &mut self.scratch,
+            ),
+            None => exec::execute(
+                self.backend.as_ref(),
+                &self.gpu,
+                &self.plan,
+                &self.hg,
+                self.policy,
+                &mut self.scratch,
+            ),
+        }
+    }
+
+    /// The cached partition, if the session is sharded.
+    pub fn partition(&self) -> Option<&Partition> {
+        self.partition.as_ref()
+    }
+
+    /// Owning shard of a target-type node id (wraps like
+    /// [`Session::run_batch`]); `None` when the session is unpartitioned.
+    pub fn shard_of(&self, node_id: u32) -> Option<usize> {
+        let part = self.partition.as_ref()?;
+        let n = self.hg.node_type(self.plan.target).count.max(1) as u32;
+        Some(part.owner_of(self.plan.target, node_id % n))
     }
 
     /// Run only FP + NA (the Fig 5a/5b sweeps time NA in isolation).
@@ -554,13 +622,18 @@ impl Session {
     /// The sampled batch path: one sampled subgraph per call, executed
     /// through the ordinary [`ExecBackend`] stage entry points — with
     /// the reuse caches threaded through sampling and execution when
-    /// [`SessionBuilder::reuse`] configured them.
+    /// [`SessionBuilder::reuse`] configured them. On a partitioned
+    /// session the batch first splits by seed owner
+    /// ([`Session::run_batch_shard_affine`]).
     fn run_batch_sampled(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
         let seeds = self.wrap_ids(node_ids);
+        if self.partition.as_ref().is_some_and(|p| p.num_shards() > 1) {
+            return self.run_batch_shard_affine(&seeds);
+        }
         // field-disjoint borrows: sampler (shared) alongside the reuse
         // cache (mutable) — no per-batch clone on the serving hot path
         let sampler = self.sampler.as_ref().expect("checked by run_batch");
-        let (sampled, run) = match self.reuse.as_mut() {
+        let (sampled, run) = match self.reuse.as_mut().map(|lanes| &mut lanes[0]) {
             Some(cache) => {
                 let sampled =
                     sampler.sample_with_cache(&self.hg, &self.plan, &seeds, cache)?;
@@ -590,11 +663,7 @@ impl Session {
         self.runs += 1;
         // seed j is local row seed_rows[j] of the executed output;
         // duplicate ids in the batch collapse onto the same seed row
-        let mut row_of: std::collections::HashMap<u32, usize> =
-            std::collections::HashMap::with_capacity(sampled.seeds.len());
-        for (j, &s) in sampled.seeds.iter().enumerate() {
-            row_of.insert(s, sampled.seed_rows[j] as usize);
-        }
+        let row_of = sampled.seed_row_map();
         seeds
             .iter()
             .map(|g| {
@@ -606,16 +675,113 @@ impl Session {
             .collect()
     }
 
+    /// The shard-affine batch path: split the (wrapped) seeds by owner
+    /// shard, sample and execute each non-empty sub-batch — concurrently
+    /// on scoped threads when the backend is thread-safe — each against
+    /// its shard's own reuse-cache lane (contention-free because a
+    /// sub-batch only ever touches its seed-owner's lane; interior nodes
+    /// reached from several shards' seeds are cached per lane), then
+    /// reassemble rows in request order. Each sub-batch executes exactly
+    /// as an unpartitioned session would execute it, so per-sub-batch
+    /// results are bit-identical to the monolithic sampled path.
+    fn run_batch_shard_affine(&mut self, seeds: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let part = self.partition.as_ref().expect("checked by run_batch_sampled");
+        let sampler = self.sampler.as_ref().expect("checked by run_batch");
+        let k = part.num_shards();
+        let target = self.plan.target;
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for &g in seeds {
+            groups[part.owner_of(target, g)].push(g);
+        }
+        // one mutable cache lane per shard, moved into its task
+        let mut lanes: Vec<Option<&mut ReuseCache>> = match self.reuse.as_mut() {
+            Some(v) => v.iter_mut().map(Some).collect(),
+            None => (0..k).map(|_| None).collect(),
+        };
+        let hg = &self.hg;
+        let plan = &self.plan;
+        let gpu = &self.gpu;
+        let policy = self.policy;
+        let backend = self.backend.as_ref();
+        let mut work: Vec<(usize, &[u32], Option<&mut ReuseCache>)> = Vec::new();
+        for (s, lane) in lanes.iter_mut().enumerate() {
+            if !groups[s].is_empty() {
+                work.push((s, groups[s].as_slice(), lane.take()));
+            }
+        }
+        let results: Vec<Vec<(u32, Vec<f32>)>> = match self.backend.as_sync() {
+            Some(sync) if work.len() > 1 => std::thread::scope(|scope| {
+                let handles: Vec<_> = work
+                    .into_iter()
+                    .map(|(_, group, cache)| {
+                        scope.spawn(move || {
+                            shard_batch_task(
+                                &SyncAsExec(sync),
+                                hg,
+                                plan,
+                                gpu,
+                                policy,
+                                sampler,
+                                group,
+                                cache,
+                            )
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard batch worker panicked"))
+                    .collect::<Result<Vec<_>>>()
+            })?,
+            _ => work
+                .into_iter()
+                .map(|(_, group, cache)| {
+                    shard_batch_task(backend, hg, plan, gpu, policy, sampler, group, cache)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        self.runs += 1;
+        let mut row_of: std::collections::HashMap<u32, Vec<f32>> =
+            std::collections::HashMap::with_capacity(seeds.len());
+        for (g, row) in results.into_iter().flatten() {
+            row_of.insert(g, row);
+        }
+        // move each row out on its first use; only duplicate ids in the
+        // batch (which share one seed row) pay a copy
+        let mut first_at: std::collections::HashMap<u32, usize> =
+            std::collections::HashMap::with_capacity(seeds.len());
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(seeds.len());
+        for &g in seeds {
+            if let Some(row) = row_of.remove(&g) {
+                first_at.insert(g, out.len());
+                out.push(row);
+            } else if let Some(&j) = first_at.get(&g) {
+                let row = out[j].clone();
+                out.push(row);
+            } else {
+                return Err(Error::config(format!("seed {g} lost in sharded batch")));
+            }
+        }
+        Ok(out)
+    }
+
     /// The reuse-cache capacities in effect, if cross-request reuse is
-    /// enabled.
+    /// enabled (per cache lane — a partitioned session keeps one lane
+    /// per shard).
     pub fn reuse_spec(&self) -> Option<ReuseSpec> {
-        self.reuse.as_ref().map(|c| c.spec())
+        self.reuse.as_ref().map(|lanes| lanes[0].spec())
     }
 
     /// Snapshot of the cumulative reuse-cache counters, if cross-request
-    /// reuse is enabled.
+    /// reuse is enabled — aggregated across the per-shard lanes on a
+    /// partitioned session.
     pub fn reuse_stats(&self) -> Option<ReuseStats> {
-        self.reuse.as_ref().map(|c| c.stats().clone())
+        let lanes = self.reuse.as_ref()?;
+        let mut total = ReuseStats::default();
+        for lane in lanes {
+            total.absorb(lane.stats());
+        }
+        Some(total)
     }
 
     /// Drop the cached embeddings and invalidate the reuse caches with a
@@ -623,8 +789,10 @@ impl Session {
     /// [`Session::run_batch`] recomputes from scratch.
     pub fn invalidate(&mut self) {
         self.cached_output = None;
-        if let Some(cache) = self.reuse.as_mut() {
-            cache.invalidate();
+        if let Some(lanes) = self.reuse.as_mut() {
+            for lane in lanes {
+                lane.invalidate();
+            }
         }
     }
 
@@ -663,9 +831,59 @@ impl Session {
             ));
         }
         self.plan.weights = weights;
+        if let Some(part) = self.partition.as_mut() {
+            // shard plans carry their own weight copies (R-GCN embedding
+            // tables sliced to local rows) — re-derive them so no shard
+            // ever aggregates under stale parameters
+            part.refresh_weights(&self.plan);
+        }
         self.invalidate();
         Ok(())
     }
+}
+
+/// One shard-affine sub-batch of the partitioned serving path: sample
+/// the group's neighborhood (through the shard's reuse-cache lane when
+/// one is given) and execute it, returning seed → embedding-row pairs.
+/// A free function (not a closure) so the scoped-thread and inline call
+/// sites can pass differently-lived backends.
+#[allow(clippy::too_many_arguments)]
+fn shard_batch_task(
+    backend: &dyn ExecBackend,
+    hg: &HeteroGraph,
+    plan: &ModelPlan,
+    gpu: &GpuModel,
+    policy: SchedulePolicy,
+    sampler: &NeighborSampler,
+    group: &[u32],
+    cache: Option<&mut ReuseCache>,
+) -> Result<Vec<(u32, Vec<f32>)>> {
+    let mut scratch = backend.make_ctx();
+    let (sampled, run) = match cache {
+        Some(cache) => {
+            let sampled = sampler.sample_with_cache(hg, plan, group, cache)?;
+            let run = exec::execute_reuse(backend, gpu, &sampled, policy, &mut scratch, cache)?;
+            (sampled, run)
+        }
+        None => {
+            let sampled = sampler.sample(hg, plan, group)?;
+            let run = exec::execute(
+                backend,
+                gpu,
+                &sampled.plan,
+                &sampled.graph,
+                policy,
+                &mut scratch,
+            )?;
+            (sampled, run)
+        }
+    };
+    Ok(sampled
+        .seeds
+        .iter()
+        .zip(&sampled.seed_rows)
+        .map(|(&g, &r)| (g, run.output.row(r as usize).to_vec()))
+        .collect())
 }
 
 #[cfg(test)]

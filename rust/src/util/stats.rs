@@ -114,6 +114,58 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     cov / (vx.sqrt() * vy.sqrt())
 }
 
+/// Gini coefficient of a non-negative sample in `[0, 1)`: 0 = perfectly
+/// equal, →1 = one element holds everything. Returns 0 for empty,
+/// single-element or all-zero samples. The paper's NA load-imbalance
+/// observation is exactly high Gini over destination-vertex degrees; the
+/// partitioner ([`crate::partition`]) exists to flatten it across shards.
+pub fn gini(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    let total: f64 = sorted.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 =
+        sorted.iter().enumerate().map(|(i, &x)| (i + 1) as f64 * x).sum();
+    (2.0 * weighted) / (n as f64 * total) - (n as f64 + 1.0) / n as f64
+}
+
+/// Degree-skew summary of one node population — the load-imbalance
+/// fingerprint of the Neighbor Aggregation stage (paper §4.2/Obs 4:
+/// skewed destination degrees serialize the dominant stage).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeSkew {
+    /// Population size.
+    pub n: usize,
+    /// Mean degree.
+    pub mean: f64,
+    /// Maximum degree.
+    pub max: f64,
+    /// max/mean ratio (1.0 = flat; large = a few hub vertices dominate).
+    pub max_mean_ratio: f64,
+    /// Gini coefficient of the degrees.
+    pub gini: f64,
+}
+
+/// Compute the degree-skew summary of a degree sample.
+pub fn degree_skew(degrees: &[f64]) -> DegreeSkew {
+    let n = degrees.len();
+    let mean = if n > 0 { degrees.iter().sum::<f64>() / n as f64 } else { 0.0 };
+    let max = degrees.iter().fold(0.0f64, |a, &b| a.max(b));
+    DegreeSkew {
+        n,
+        mean,
+        max,
+        max_mean_ratio: if mean > 0.0 { max / mean } else { 0.0 },
+        gini: gini(degrees),
+    }
+}
+
 /// Ordinary least squares fit `y = a + b*x`; returns `(a, b, r2)`.
 pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     assert_eq!(xs.len(), ys.len());
@@ -188,6 +240,32 @@ mod tests {
         assert!((a - 1.0).abs() < 1e-12);
         assert!((b - 2.0).abs() < 1e-12);
         assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_bounds_and_known_values() {
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[5.0]), 0.0);
+        assert_eq!(gini(&[0.0, 0.0, 0.0]), 0.0);
+        assert!(gini(&[1.0, 1.0, 1.0, 1.0]).abs() < 1e-12, "equal sample is 0");
+        // one element holds everything: G = (n-1)/n
+        let g = gini(&[0.0, 0.0, 0.0, 10.0]);
+        assert!((g - 0.75).abs() < 1e-12, "got {g}");
+        // order-invariant
+        assert!((gini(&[3.0, 1.0, 2.0]) - gini(&[1.0, 2.0, 3.0])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_skew_summarizes() {
+        let s = degree_skew(&[1.0, 1.0, 1.0, 9.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.max, 9.0);
+        assert!((s.max_mean_ratio - 3.0).abs() < 1e-12);
+        assert!(s.gini > 0.0 && s.gini < 1.0);
+        let empty = degree_skew(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.max_mean_ratio, 0.0);
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Integration tests for the sharded execution subsystem: partition
+//! structure invariants end-to-end through the session, bit-identity of
+//! the sharded forward against the monolithic one, the shard-affine
+//! sampled batch path (with and without the per-shard reuse caches),
+//! and serving through a sharded session.
+//!
+//! Bit-identity here means **exact bytes** (`as_slice()` equality, not
+//! `allclose`): owner-computes + canonical accumulation order make the
+//! sharded forward produce the same f32 stream as the unsharded one, and
+//! these tests are the contract that keeps it that way.
+
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::partition::PartitionSpec;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::session::{ServeConfig, Session, SessionBuilder};
+
+fn builder(model: ModelId) -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+}
+
+#[test]
+fn sharded_forward_bit_identical_across_models_and_shard_counts() {
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let baseline = builder(model).build().unwrap().run().unwrap();
+        for shards in [1usize, 2, 4] {
+            let mut session = builder(model)
+                .partition(PartitionSpec::new(shards))
+                .build()
+                .unwrap();
+            let run = session.run().unwrap();
+            assert_eq!(
+                run.output.as_slice(),
+                baseline.output.as_slice(),
+                "{model:?} at {shards} shards is not bit-identical"
+            );
+            // the merged per-subgraph NA tensors match too (owner-computes
+            // covers every row exactly once)
+            assert_eq!(run.na_results.len(), baseline.na_results.len());
+            for (a, b) in run.na_results.iter().zip(&baseline.na_results) {
+                assert_eq!(a.as_slice(), b.as_slice());
+            }
+            let report = run.report;
+            let info = report.sharding.expect("sharded runs must report sharding");
+            assert_eq!(info.shards, shards);
+            assert!(report.summary().contains("shards"));
+        }
+    }
+}
+
+#[test]
+fn sharded_forward_with_capped_threads_stays_bit_identical() {
+    // fewer threads than shards: shards are LPT-packed onto the threads,
+    // which must change scheduling only, never results
+    let baseline = builder(ModelId::Han).build().unwrap().run().unwrap();
+    let mut session = builder(ModelId::Han)
+        .partition(PartitionSpec::new(4).with_threads(2))
+        .build()
+        .unwrap();
+    let run = session.run().unwrap();
+    assert_eq!(run.output.as_slice(), baseline.output.as_slice());
+    assert_eq!(run.report.sharding.unwrap().threads, 2);
+}
+
+#[test]
+fn sharded_profile_records_halo_and_merge_kernels() {
+    let mut session = builder(ModelId::Han)
+        .partition(PartitionSpec::new(2))
+        .build()
+        .unwrap();
+    let run = session.run().unwrap();
+    let names: Vec<&str> = run.profile.kernels.iter().map(|k| k.exec.name).collect();
+    assert!(names.contains(&"HaloExchange"), "missing halo exchange: {names:?}");
+    assert!(names.contains(&"ShardMerge"), "missing owner-computes merge: {names:?}");
+    // stage percentages still form a closed breakdown
+    let pct = run.profile.stage_percentages();
+    assert!((pct.values().sum::<f64>() - 100.0).abs() < 1e-6);
+}
+
+#[test]
+fn builder_rejects_zero_shards() {
+    assert!(builder(ModelId::Han).partition(PartitionSpec::new(0)).build().is_err());
+    assert!(builder(ModelId::Han)
+        .partition(PartitionSpec::new(2).with_threads(0))
+        .build()
+        .is_err());
+}
+
+#[test]
+fn partition_accessors_and_owner_lookup() {
+    let session = builder(ModelId::Han)
+        .partition(PartitionSpec::new(3))
+        .build()
+        .unwrap();
+    let part = session.partition().expect("partitioned session");
+    assert_eq!(part.num_shards(), 3);
+    let target = session.plan().target;
+    let n = session.graph().node_type(target).count as u32;
+    for id in 0..n.min(64) {
+        let s = session.shard_of(id).unwrap();
+        assert!(s < 3);
+        assert_eq!(part.owner_of(target, id), s);
+        // ids wrap modulo the node count, like run_batch
+        assert_eq!(session.shard_of(id + n), Some(s));
+    }
+    assert!(builder(ModelId::Han).build().unwrap().shard_of(0).is_none());
+}
+
+/// R-GCN's semantic aggregation is row-local (sum over relations), so a
+/// seed row's sampled-batch embedding is independent of which other
+/// seeds share the batch at neighbor-covering fanout — which makes even
+/// *mixed* (multi-shard) batches bit-identical between the shard-affine
+/// and the monolithic path.
+#[test]
+fn sharded_batch_path_bit_identical_rgcn_mixed_batch() {
+    let ids: Vec<u32> = (0..24).collect();
+    let mk = |shards: Option<usize>| {
+        let mut b = builder(ModelId::Rgcn).sampling(SamplingSpec::uniform(usize::MAX, 1));
+        if let Some(k) = shards {
+            b = b.partition(PartitionSpec::new(k));
+        }
+        b.build().unwrap()
+    };
+    let plain = mk(None).run_batch(&ids).unwrap();
+    for k in [1usize, 2, 4] {
+        let sharded = mk(Some(k)).run_batch(&ids).unwrap();
+        assert_eq!(plain, sharded, "RGCN mixed batch diverged at {k} shards");
+    }
+}
+
+#[test]
+fn sharded_batch_path_bit_identical_with_reuse_caches() {
+    // same comparison with the per-shard reuse caches on: cold batch,
+    // then a warm (all-hit) repeat — both must match the unsharded
+    // cache-enabled session bit for bit
+    let ids: Vec<u32> = (0..24).collect();
+    let mk = |shards: Option<usize>| {
+        let mut b = builder(ModelId::Rgcn)
+            .sampling(SamplingSpec::uniform(usize::MAX, 1))
+            .reuse(ReuseSpec::rows(1 << 12));
+        if let Some(k) = shards {
+            b = b.partition(PartitionSpec::new(k));
+        }
+        b.build().unwrap()
+    };
+    let mut plain = mk(None);
+    let cold = plain.run_batch(&ids).unwrap();
+    let warm = plain.run_batch(&ids).unwrap();
+    assert_eq!(cold, warm, "reuse substitution must be bit-identical");
+    let mut sharded = mk(Some(2));
+    assert_eq!(cold, sharded.run_batch(&ids).unwrap(), "cold sharded batch diverged");
+    assert_eq!(cold, sharded.run_batch(&ids).unwrap(), "warm sharded batch diverged");
+    let stats = sharded.reuse_stats().unwrap();
+    assert!(
+        stats.proj_hits > 0 && stats.agg_hits > 0,
+        "warm sharded batch must hit the per-shard caches: {stats:?}"
+    );
+}
+
+/// HAN's semantic attention averages scores over the whole sampled node
+/// set, so batch *composition* matters; a shard-pure batch (every seed
+/// owned by one shard) executes identically on the shard-affine and the
+/// monolithic path — the grouping the serving dispatcher performs.
+#[test]
+fn sharded_batch_path_bit_identical_han_shard_pure_batch() {
+    for reuse in [false, true] {
+        let mk = |shards: Option<usize>| {
+            let mut b =
+                builder(ModelId::Han).sampling(SamplingSpec::uniform(usize::MAX, 1));
+            if reuse {
+                b = b.reuse(ReuseSpec::rows(1 << 12));
+            }
+            if let Some(k) = shards {
+                b = b.partition(PartitionSpec::new(k));
+            }
+            b.build().unwrap()
+        };
+        let mut sharded = mk(Some(2));
+        // collect seeds owned by shard 0 — a shard-pure batch
+        let n = sharded.graph().node_type(sharded.plan().target).count as u32;
+        let pure: Vec<u32> = (0..n).filter(|&i| sharded.shard_of(i) == Some(0)).take(8).collect();
+        assert!(!pure.is_empty(), "shard 0 owns no target nodes at ci scale?");
+        let mut plain = mk(None);
+        let want = plain.run_batch(&pure).unwrap();
+        let got = sharded.run_batch(&pure).unwrap();
+        assert_eq!(want, got, "HAN shard-pure batch diverged (reuse={reuse})");
+        if reuse {
+            // repeat: warm per-shard cache must substitute bit-identically
+            assert_eq!(want, sharded.run_batch(&pure).unwrap());
+        }
+    }
+}
+
+#[test]
+fn sharded_batch_per_shard_results_match_unsharded_subbatches() {
+    // a mixed HAN batch splits into shard-affine sub-batches; each seed's
+    // row must equal the monolithic execution of its own sub-batch
+    let mut sharded = builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .partition(PartitionSpec::new(2))
+        .build()
+        .unwrap();
+    let ids: Vec<u32> = (0..16).collect();
+    let got = sharded.run_batch(&ids).unwrap();
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); 2];
+    for &i in &ids {
+        groups[sharded.shard_of(i).unwrap()].push(i);
+    }
+    let mut plain = builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .build()
+        .unwrap();
+    for group in groups.iter().filter(|g| !g.is_empty()) {
+        let want = plain.run_batch(group).unwrap();
+        for (j, &id) in group.iter().enumerate() {
+            assert_eq!(
+                want[j],
+                got[id as usize],
+                "seed {id}: shard-affine row diverged from its sub-batch"
+            );
+        }
+    }
+}
+
+#[test]
+fn set_weights_refreshes_shard_plans() {
+    // rebuild identical weights from the same seed: outputs must stay
+    // bit-identical after the swap (stale shard-plan weights would not)
+    let mut sharded = builder(ModelId::Rgcn)
+        .partition(PartitionSpec::new(2))
+        .build()
+        .unwrap();
+    let before = sharded.run().unwrap();
+    let fresh = hgnn_char::models::build_plan(
+        ModelId::Rgcn,
+        sharded.graph(),
+        &hgnn_char::models::ModelConfig::default(),
+    )
+    .unwrap()
+    .weights;
+    sharded.set_weights(fresh).unwrap();
+    let after = sharded.run().unwrap();
+    assert_eq!(before.output.as_slice(), after.output.as_slice());
+}
+
+#[test]
+fn serve_through_sharded_session() {
+    let b = builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(8, 1))
+        .reuse(ReuseSpec::rows(1 << 10))
+        .partition(PartitionSpec::new(2));
+    let server = b.serve(ServeConfig::default());
+    let rxs: Vec<_> = (0..24).map(|i| server.submit(i).unwrap()).collect();
+    for rx in rxs {
+        let row = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert!(!row.is_empty());
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+    let batch = server.submit_batch(&[3, 1, 2]).unwrap();
+    let rows = batch.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(rows.len(), 3);
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 27);
+    assert!(stats.reuse.is_some(), "sharded serving surfaces aggregated reuse stats");
+}
+
+#[test]
+fn serve_groups_dispatches_by_shard() {
+    // a mixed submit_batch through a sharded sampling session must come
+    // back in submission order even though execution grouped it by shard
+    let b = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .partition(PartitionSpec::new(2));
+    let server = b.serve(ServeConfig::default());
+    let ids: Vec<u32> = (0..12).collect();
+    let rx = server.submit_batch(&ids).unwrap();
+    let rows = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(rows.len(), ids.len());
+    // cross-check against a direct session execution of the same ids
+    let mut session = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .build()
+        .unwrap();
+    let want = session.run_batch(&ids).unwrap();
+    assert_eq!(rows, want, "served rows out of order after shard grouping");
+    server.shutdown();
+}

@@ -355,6 +355,87 @@ fn prop_makespan_at_least_critical_path() {
     });
 }
 
+/// Random two-type hetero graph from a CSR + its R-GCN plan — the input
+/// shape the partition properties quantify over.
+fn random_bipartite(
+    csr: &Csr,
+) -> (hgnn_char::graph::HeteroGraph, hgnn_char::models::ModelPlan) {
+    use hgnn_char::graph::HeteroGraphBuilder;
+    let mut b = HeteroGraphBuilder::new("prop");
+    let a = b.add_node_type("a", 'A', Tensor::full(csr.n_rows, 4, 1.0));
+    let s = b.add_node_type("b", 'B', Tensor::full(csr.n_cols, 3, 2.0));
+    b.add_relation("B-A", s, a, csr.clone());
+    b.add_relation("A-B", a, s, csr.transposed());
+    let hg = b.build().unwrap();
+    let plan = hgnn_char::models::build_plan(
+        hgnn_char::models::ModelId::Rgcn,
+        &hg,
+        &hgnn_char::models::ModelConfig::default(),
+    )
+    .unwrap();
+    (hg, plan)
+}
+
+#[test]
+fn prop_partition_is_disjoint_cover_with_foreign_halo() {
+    use hgnn_char::partition::{Partition, PartitionSpec};
+    check("partition covers, halo foreign", 41, CASES, &CsrStrategy::default(), |csr| {
+        let (hg, plan) = random_bipartite(csr);
+        [1usize, 2, 3, 5].iter().all(|&k| {
+            let part = Partition::build(&hg, &plan, &PartitionSpec::new(k)).unwrap();
+            // disjoint cover of every node type
+            let cover = hg.node_types().iter().enumerate().all(|(ty, t)| {
+                let mut seen = vec![0u8; t.count];
+                for shard in &part.shards {
+                    for &g in &shard.owned[ty] {
+                        seen[g as usize] += 1;
+                    }
+                }
+                seen.iter().all(|&c| c == 1)
+            });
+            // halo tables reference only foreign-shard nodes, and local
+            // spaces are exactly owned ∪ halo, ascending
+            let halo_ok = part.shards.iter().enumerate().all(|(s, shard)| {
+                shard.halo.iter().enumerate().all(|(ty, list)| {
+                    list.iter().all(|&g| part.owner_of(ty, g) != s)
+                }) && shard.nodes.iter().enumerate().all(|(ty, list)| {
+                    list.windows(2).all(|w| w[0] < w[1])
+                        && list.len() == shard.owned[ty].len() + shard.halo[ty].len()
+                })
+            });
+            cover && halo_ok
+        })
+    });
+}
+
+#[test]
+fn prop_sharded_forward_bit_identical_on_random_graphs() {
+    use hgnn_char::partition::PartitionSpec;
+    use hgnn_char::session::Session;
+    // fewer cases: each runs four full forwards
+    check("sharded == unsharded, bitwise", 42, 12, &CsrStrategy::default(), |csr| {
+        let (hg, plan) = random_bipartite(csr);
+        let baseline = Session::builder()
+            .graph(hg.clone())
+            .plan(plan.clone())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        [1usize, 2, 4].iter().all(|&k| {
+            let run = Session::builder()
+                .graph(hg.clone())
+                .plan(plan.clone())
+                .partition(PartitionSpec::new(k))
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            run.output.as_slice() == baseline.output.as_slice()
+        })
+    });
+}
+
 #[test]
 fn prop_mixing_never_worse_than_plain_parallel() {
     // §5 guideline 1 is an idealized overlap bound: for paper-shaped
