@@ -3,10 +3,16 @@
 //! Pallas kernels when artifacts are present.
 //!
 //! This is the before/after harness for EXPERIMENTS.md §Perf: sgemm
-//! blocking variants, SpMM over increasing density, and the AOT kernel
-//! round-trip cost.
+//! blocking variants, SpMM over increasing density, the intra-kernel
+//! thread-scaling sweep (1/2/4/8 pool threads over sgemm + SpMM, with a
+//! speedup-at-4 verdict and a bit-identity cross-check), the serve-path
+//! steady-state allocation check (the scratch arena at work, counted by
+//! a wrapping global allocator), and the AOT kernel round-trip cost.
 //!
 //! Run: `cargo bench --bench kernel_microbench`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use hgnn_char::bench::{bench, header, BenchConfig};
 use hgnn_char::datasets::{DatasetId, DatasetScale};
@@ -14,9 +20,39 @@ use hgnn_char::graph::sparse::Coo;
 use hgnn_char::kernels::dense::{sgemm_compute, sgemm_naive, GemmBlocking};
 use hgnn_char::kernels::sparse_ops::{spmm_csr, SpmmReduce};
 use hgnn_char::kernels::Ctx;
+use hgnn_char::parallel;
+use hgnn_char::sampler::SamplingSpec;
 use hgnn_char::session::Session;
 use hgnn_char::tensor::Tensor;
 use hgnn_char::util::Pcg32;
+
+/// Counting wrapper around the system allocator: the instrument behind
+/// the serve-path steady-state allocation check.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Heap allocations performed while `f` runs (process-wide; run the
+/// serving loop single-threaded for a stable count).
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    f();
+    ALLOCATIONS.load(Ordering::Relaxed) - before
+}
 
 fn main() {
     header(
@@ -69,6 +105,117 @@ fn main() {
         let gbps = (nnz * f * 4) as f64 / r.wall.median;
         println!("{}   gather {gbps:.2} GB/s", r.line());
     }
+
+    // ---------------- intra-kernel thread scaling --------------------------
+    // The worker pool's row-blocked kernels: 1/2/4/8 pool threads over
+    // the compute-bound sgemm and the memory-bound SpMM (paper §4: FP
+    // and NA saturate different resources; both carry intra-kernel data
+    // parallelism). Outputs are bit-identical at every width.
+    println!("\n--- intra-kernel thread scaling (shared worker pool) ---");
+    let (sm, sk, sn) = if quick { (256, 256, 64) } else { (1024, 1024, 128) };
+    let sa = Tensor::randn(sm, sk, 1.0, &mut rng);
+    let sb = Tensor::randn(sk, sn, 1.0, &mut rng);
+    let blk = GemmBlocking::default();
+    let snodes = if quick { 512 } else { 8192 };
+    let sf = if quick { 64 } else { 128 };
+    let sdeg = 32usize;
+    let sx = Tensor::randn(snodes, sf, 1.0, &mut rng);
+    let mut sedges = Vec::with_capacity(snodes * sdeg);
+    for d in 0..snodes as u32 {
+        for _ in 0..sdeg {
+            sedges.push((d, rng.gen_range(snodes) as u32));
+        }
+    }
+    let sadj = Coo::from_edges(snodes, snodes, sedges).unwrap().to_csr();
+    let reference_mm = parallel::with_threads(1, || sgemm_compute(&sa, &sb, blk));
+    let reference_sp = parallel::with_threads(1, || {
+        let mut ctx = Ctx::default();
+        spmm_csr(&mut ctx, &sadj, &sx, None, SpmmReduce::Sum).unwrap()
+    });
+    let mut mm_ns = Vec::new();
+    let mut sp_ns = Vec::new();
+    for t in [1usize, 2, 4, 8] {
+        parallel::with_threads(t, || {
+            let r = bench(&format!("sgemm {sm}x{sk}x{sn} threads={t}"), &cfg, || {
+                sgemm_compute(&sa, &sb, blk)
+            });
+            let gfs = 2.0 * sm as f64 * sk as f64 * sn as f64 / r.wall.median;
+            println!("{}   {gfs:.2} GF/s", r.line());
+            mm_ns.push(r.wall.median);
+            let out = sgemm_compute(&sa, &sb, blk);
+            assert!(
+                out.allclose(&reference_mm, 0.0, 0.0),
+                "sgemm at {t} threads must be bit-identical to serial"
+            );
+            let r = bench(
+                &format!("spmm n={snodes} deg={sdeg} f={sf} threads={t}"),
+                &cfg,
+                || {
+                    let mut ctx = Ctx::default();
+                    spmm_csr(&mut ctx, &sadj, &sx, None, SpmmReduce::Sum).unwrap()
+                },
+            );
+            let gbps = (sadj.nnz() * sf * 4) as f64 / r.wall.median;
+            println!("{}   gather {gbps:.2} GB/s", r.line());
+            sp_ns.push(r.wall.median);
+            let mut ctx = Ctx::default();
+            let out = spmm_csr(&mut ctx, &sadj, &sx, None, SpmmReduce::Sum).unwrap();
+            assert!(
+                out.allclose(&reference_sp, 0.0, 0.0),
+                "spmm at {t} threads must be bit-identical to serial"
+            );
+        });
+    }
+    let mm_speedup = mm_ns[0] / mm_ns[2].max(1.0);
+    let sp_speedup = sp_ns[0] / sp_ns[2].max(1.0);
+    println!(
+        "speedup at 4 threads vs 1: sgemm {mm_speedup:.2}x, spmm {sp_speedup:.2}x \
+         (outputs bit-identical at every width)"
+    );
+    if !quick {
+        println!(
+            "verdict: {} (target >= 1.5x at 4 threads for both kernels)",
+            if mm_speedup >= 1.5 && sp_speedup >= 1.5 { "PASS" } else { "MISS" }
+        );
+    }
+
+    // ---------------- serve-path steady-state allocations ------------------
+    // The scratch arena recycles the stage outputs of every served
+    // batch, so steady-state dispatches stop allocating the dominant
+    // tensors: warm dispatch allocation counts must sit well below the
+    // cold first dispatch, and arena hits must accumulate.
+    println!("\n--- serve-path steady-state allocations (scratch arena) ---");
+    let mut serve_session = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .sampling(SamplingSpec::uniform(8, 1))
+        .threads(1)
+        .build()
+        .unwrap();
+    let batch_ids: Vec<u32> = (0..32).collect();
+    let cold = allocs_during(|| {
+        serve_session.run_batch(&batch_ids).unwrap();
+    });
+    for _ in 0..3 {
+        serve_session.run_batch(&batch_ids).unwrap();
+    }
+    let warm = allocs_during(|| {
+        serve_session.run_batch(&batch_ids).unwrap();
+    });
+    let stats = serve_session.arena_stats();
+    println!(
+        "dispatch allocations: cold {cold}, warm {warm} ({:.0}% removed)",
+        100.0 * (1.0 - warm as f64 / cold.max(1) as f64)
+    );
+    println!(
+        "arena: {} hits, {} misses, {} buffers held",
+        stats.hits, stats.misses, stats.held
+    );
+    assert!(stats.hits > 0, "steady-state dispatches must draw from the arena");
+    println!(
+        "verdict: {} (warm dispatch must allocate less than cold)",
+        if warm < cold { "PASS" } else { "MISS" }
+    );
 
     // ---------------- Session repeat-run reuse -----------------------------
     // The seed rebuilt graph + plan + engine at every call site

@@ -122,6 +122,23 @@ impl Args {
         Ok(Some(crate::partition::PartitionSpec::new(shards).with_threads(threads)))
     }
 
+    /// Worker-pool width from `--threads N` (default `None`: the
+    /// process default — `HGNN_THREADS`, else available parallelism).
+    /// `--threads 0` is rejected at parse level, mirroring `--shards`.
+    /// Composes freely with `--shards`/`--shard-threads`: those split
+    /// work across shard tasks, `--threads` caps the one pool that
+    /// executes both the tasks and the intra-kernel row blocks.
+    pub fn threads(&self) -> Result<Option<usize>> {
+        if !self.has("threads") {
+            return Ok(None);
+        }
+        let t = self.flag_usize("threads", 0)?;
+        if t == 0 {
+            return Err(Error::config("--threads must be >= 1"));
+        }
+        Ok(Some(t))
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -153,6 +170,9 @@ COMMANDS:
       [--shards K]                 degree-balanced sharded execution
                                    (subsumes --policy: FP/NA per shard)
       [--shard-threads T]          threads driving the shards (default K)
+      [--threads N]                intra-kernel worker-pool width
+                                   (default: all cores; HGNN_THREADS
+                                   overrides the default)
   figure <2|3|4|5a|5b|5c|6a|6b>  regenerate a paper figure
       [--scale ...]
   table <3>                      regenerate a paper table
@@ -168,6 +188,7 @@ COMMANDS:
       [--shards K]                 shard-affine serving: batches group
                                    by owner shard, caches go per-shard
       [--shard-threads T]          threads driving the shards (default K)
+      [--threads N]                intra-kernel worker-pool width
   help                           this text
 ";
 
@@ -285,6 +306,40 @@ mod tests {
         // non-numeric and orphaned thread caps are rejected
         assert!(parse("run --shards nah").partition().is_err());
         assert!(parse("run --shard-threads 2").partition().is_err());
+    }
+
+    #[test]
+    fn threads_flag_parsing() {
+        // absent: inherit the process default
+        assert_eq!(parse("run").threads().unwrap(), None);
+        // present in both spellings
+        assert_eq!(parse("run --threads 4").threads().unwrap(), Some(4));
+        assert_eq!(parse("run --threads=8").threads().unwrap(), Some(8));
+        // zero is rejected in both spellings, like --shards
+        assert!(parse("run --threads 0").threads().is_err());
+        assert!(parse("run --threads=0").threads().is_err());
+        // non-numeric rejected
+        assert!(parse("run --threads nah").threads().is_err());
+        // bare switch (no value) rejected: "true" is not a width
+        assert!(parse("run --threads").threads().is_err());
+    }
+
+    #[test]
+    fn threads_compose_with_shards_and_serve_flags() {
+        // pool cap + shard split + serving flags all bind independently
+        let a = parse(
+            "serve --requests 64 --fanout 8 --batch 4 --reuse-cap 128 \
+             --shards 2 --shard-threads 2 --threads 4",
+        );
+        assert_eq!(a.threads().unwrap(), Some(4));
+        let spec = a.partition().unwrap().unwrap();
+        assert_eq!((spec.shards, spec.threads), (2, 2));
+        assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
+        // run spelling with '=' interleaved
+        let a = parse("run --shards=4 --threads=2 --model han");
+        assert_eq!(a.threads().unwrap(), Some(2));
+        assert_eq!(a.partition().unwrap().unwrap().shards, 4);
+        assert_eq!(a.flag_str("model", ""), "han");
     }
 
     #[test]

@@ -77,8 +77,8 @@ impl Coordinator {
         policy: SchedulePolicy,
     ) -> Result<CoordRun> {
         let mut scratch = crate::kernels::Ctx {
-            events: Vec::new(),
             record_traces: self.backend.record_traces,
+            ..Default::default()
         };
         let run = exec::execute(&self.backend, &self.gpu, plan, hg, policy, &mut scratch)?;
         Ok(CoordRun {

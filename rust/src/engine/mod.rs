@@ -96,7 +96,7 @@ impl Engine {
     /// **Deprecated:** build a [`crate::session::Session`] instead.
     pub fn new(backend: Backend) -> Engine {
         let backend = NativeBackend::from(backend);
-        let scratch = Ctx { events: Vec::new(), record_traces: backend.record_traces };
+        let scratch = Ctx { record_traces: backend.record_traces, ..Default::default() };
         Engine { backend, gpu: GpuModel::default(), scratch }
     }
 

@@ -10,7 +10,7 @@ use crate::kernels::elementwise::{
 };
 use crate::kernels::rearrange::{concat_rows, index_select};
 use crate::kernels::sparse_ops::{edge_softmax, sddmm_coo, spmm_csr, SpmmReduce};
-use crate::kernels::{timed, Ctx, KernelCounters, KernelType};
+use crate::kernels::{Ctx, KernelCounters, KernelType};
 use crate::graph::HeteroGraph;
 use crate::models::{ModelId, ModelPlan};
 use crate::tensor::Tensor;
@@ -79,7 +79,9 @@ pub fn neighbor_aggregation(
             )?;
             let weights = edge_softmax(ctx, &sg.adj, &logits)?;
             let agg = spmm_csr(ctx, &sg.adj, h_src, Some(&weights), SpmmReduce::Sum)?;
-            Ok(unary(ctx, &agg, UnaryOp::Elu))
+            let out = unary(ctx, &agg, UnaryOp::Elu);
+            ctx.arena.give(agg.into_vec());
+            Ok(out)
         }
         ModelId::Magnn => {
             // MAGNN-lite: encode each metapath instance (edge) as the mean
@@ -99,7 +101,10 @@ pub fn neighbor_aggregation(
                 &e_dst,
                 crate::kernels::elementwise::BinaryOp::Add,
             )?;
+            ctx.arena.give(e_src.into_vec());
+            ctx.arena.give(e_dst.into_vec());
             let enc = unary(ctx, &sum, UnaryOp::Scale(0.5));
+            ctx.arena.give(sum.into_vec());
             // instance attention: logits = leakyrelu(enc · w)  (EW kernels,
             // broadcast-mul + reduce, as DGL lowers it)
             let w_col: Vec<f32> = plan.weights.inst_attn[subgraph_idx].as_slice().to_vec();
@@ -109,8 +114,12 @@ pub fn neighbor_aggregation(
             let weights = edge_softmax(ctx, &sg.adj, logits.as_slice())?;
             // weighted segment-sum of encoded instances (TB)
             let scaled = scale_rows(ctx, &enc, &weights)?;
+            ctx.arena.give(enc.into_vec());
             let agg = segment_sum_edges(ctx, &sg.adj, &scaled)?;
-            Ok(unary(ctx, &agg, UnaryOp::Elu))
+            ctx.arena.give(scaled.into_vec());
+            let out = unary(ctx, &agg, UnaryOp::Elu);
+            ctx.arena.give(agg.into_vec());
+            Ok(out)
         }
     }
 }
@@ -118,6 +127,9 @@ pub fn neighbor_aggregation(
 /// Sum rows of a per-edge feature matrix `[nnz, F]` into their
 /// destination segments — DGL lowers this to the same `SpMMCsr` kernel
 /// (copy_e + sum message passing), so it is recorded under that name.
+/// Parallel over destination-row blocks like [`spmm_csr`]; each row's
+/// edge accumulation order is the serial one, so output is
+/// bit-identical at every thread count.
 pub fn segment_sum_edges(ctx: &mut Ctx, adj: &crate::graph::Csr, edge_feats: &Tensor) -> Result<Tensor> {
     if edge_feats.rows() != adj.nnz() {
         return Err(Error::shape(format!(
@@ -127,20 +139,23 @@ pub fn segment_sum_edges(ctx: &mut Ctx, adj: &crate::graph::Csr, edge_feats: &Te
         )));
     }
     let f = edge_feats.cols();
-    let (out, nanos) = timed(|| {
-        let mut out = Tensor::zeros(adj.n_rows, f);
-        for d in 0..adj.n_rows {
-            let lo = adj.indptr[d] as usize;
-            let hi = adj.indptr[d + 1] as usize;
-            let orow = out.row_mut(d);
-            for e in lo..hi {
-                for (o, &v) in orow.iter_mut().zip(edge_feats.row(e)) {
-                    *o += v;
+    let t0 = std::time::Instant::now();
+    let mut out = ctx.scratch_zeros(adj.n_rows, f);
+    if f > 0 {
+        crate::parallel::parallel_chunks_mut(out.as_mut_slice(), f, 32, |d0, block| {
+            for (r, orow) in block.chunks_mut(f).enumerate() {
+                let d = d0 + r;
+                let lo = adj.indptr[d] as usize;
+                let hi = adj.indptr[d + 1] as usize;
+                for e in lo..hi {
+                    for (o, &v) in orow.iter_mut().zip(edge_feats.row(e)) {
+                        *o += v;
+                    }
                 }
             }
-        }
-        out
-    });
+        });
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
     let nnz = adj.nnz() as u64;
     let counters = KernelCounters {
         flops: nnz * f as u64,
@@ -198,12 +213,15 @@ pub fn semantic_aggregation(
                 Error::config("SA: model has no semantic attention weights")
             })?;
             let sem_q = plan.weights.sem_q.as_ref().unwrap();
-            let t = sgemm_bias(ctx, &stacked, sem_w, &plan.weights.sem_b, blocking)?;
-            let t = unary(ctx, &t, UnaryOp::Tanh);
+            let lin = sgemm_bias(ctx, &stacked, sem_w, &plan.weights.sem_b, blocking)?;
+            let t = unary(ctx, &lin, UnaryOp::Tanh);
+            ctx.arena.give(lin.into_vec());
             // ③ sgemm: per-(metapath, node) score = T · q
             let scores = sgemm(ctx, &t, sem_q, blocking)?;
+            ctx.arena.give(t.into_vec());
             // ④ Reduce: per-metapath mean score over nodes
             let scores_pn = Tensor::from_vec(p, n, scores.as_slice().to_vec())?;
+            ctx.arena.give(scores.into_vec());
             let beta_raw = reduce_rows_mean(ctx, &scores_pn);
             // ⑤ softmax over the P metapaths
             let beta = softmax_vec(ctx, &beta_raw);
@@ -213,7 +231,10 @@ pub fn semantic_aggregation(
                 row_scale.extend(std::iter::repeat_n(b, n));
             }
             let scaled = scale_rows(ctx, &stacked, &row_scale)?;
-            reduce_grouped_rows(ctx, &scaled, p)
+            ctx.arena.give(stacked.into_vec());
+            let out = reduce_grouped_rows(ctx, &scaled, p)?;
+            ctx.arena.give(scaled.into_vec());
+            Ok(out)
         }
     }
 }

@@ -4,9 +4,14 @@
 //! (97.4% of FP time for HAN-DBLP, Table 3), and Semantic Aggregation's
 //! attention-weight computation is `sgemm` again. The native
 //! implementation here is a cache-blocked, 8-wide-unrolled matmul —
-//! the L3 perf pass iterates on the blocking (see EXPERIMENTS.md §Perf).
+//! the L3 perf pass iterates on the blocking (see EXPERIMENTS.md §Perf)
+//! — parallelized over M-dimension macro-row blocks on the
+//! [`crate::parallel`] worker pool. Each output row's k-loop order is
+//! unchanged by the blocking, so parallel results are **bit-identical**
+//! to serial ones at every thread count.
 
-use crate::kernels::{timed, Ctx, KernelCounters, KernelType};
+use crate::kernels::{Ctx, KernelCounters, KernelType};
+use crate::parallel;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -47,7 +52,10 @@ pub fn sgemm(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> R
     if ka != kb {
         return Err(Error::shape(format!("sgemm: a is {m}x{ka}, b is {kb}x{n}")));
     }
-    let (out, nanos) = timed(|| sgemm_compute(a, b, blocking));
+    let t0 = std::time::Instant::now();
+    let mut out = ctx.scratch_zeros(m, n);
+    sgemm_into(a, b, blocking, &mut out);
+    let nanos = t0.elapsed().as_nanos() as u64;
     let counters = KernelCounters {
         flops: gemm_flops(m, ka, n),
         bytes_read: (a.bytes() + b.bytes()) as u64,
@@ -73,40 +81,78 @@ pub fn sgemm_bias(
     if bias.len() != n {
         return Err(Error::shape(format!("bias len {} != n {}", bias.len(), n)));
     }
-    let (mut out, nanos) = timed(|| sgemm_compute(a, b, blocking));
-    let (_, bias_nanos) = timed(|| {
-        for r in 0..m {
-            let row = out.row_mut(r);
-            for (o, &bv) in row.iter_mut().zip(bias) {
-                *o += bv;
-            }
+    let t0 = std::time::Instant::now();
+    let mut out = ctx.scratch_zeros(m, n);
+    sgemm_into(a, b, blocking, &mut out);
+    for r in 0..m {
+        let row = out.row_mut(r);
+        for (o, &bv) in row.iter_mut().zip(bias) {
+            *o += bv;
         }
-    });
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
     let counters = KernelCounters {
         flops: gemm_flops(m, ka, n) + (m * n) as u64,
         bytes_read: (a.bytes() + b.bytes() + bias.len() * 4) as u64,
         bytes_written: out.bytes() as u64,
     };
-    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos + bias_nanos, None);
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos, None);
     Ok(out)
 }
 
 /// The blocked compute core (no instrumentation). Public so benches can
-/// compare blockings directly.
+/// compare blockings directly. Parallelized over M-dimension macro-row
+/// blocks (`blk.mc` rows per unit) on the shared worker pool; see
+/// [`sgemm_into`] for the bit-identity argument.
 pub fn sgemm_compute(a: &Tensor, b: &Tensor, blk: GemmBlocking) -> Tensor {
+    let mut out = Tensor::zeros(a.rows(), b.cols());
+    sgemm_into(a, b, blk, &mut out);
+    out
+}
+
+/// Blocked matmul into a caller-owned **zeroed** output (the arena'd
+/// entry point behind [`sgemm`]/[`sgemm_bias`]).
+///
+/// Work splits across the pool in units of `blk.mc` rows — exactly the
+/// serial loop's macro-tile boundaries — so every worker executes the
+/// same tile/pairing schedule the serial code would for its rows, and
+/// each output element's k-accumulation order is unchanged: parallel
+/// output is bit-identical to serial.
+pub fn sgemm_into(a: &Tensor, b: &Tensor, blk: GemmBlocking, out: &mut Tensor) {
     let (m, k) = a.shape();
     let n = b.cols();
-    let mut out = Tensor::zeros(m, n);
+    debug_assert_eq!(out.shape(), (m, n));
+    if m == 0 || n == 0 {
+        return;
+    }
     let av = a.as_slice();
     let bv = b.as_slice();
-    let ov = out.as_mut_slice();
+    let mc = blk.mc.max(1);
+    parallel::parallel_chunks_mut(out.as_mut_slice(), mc * n, 1, |u0, block| {
+        sgemm_panel(av, bv, block, u0 * mc, k, n, blk);
+    });
+}
 
+/// Serial macro-kernel over the row panel `[r0, r0 + block.len()/n)`;
+/// `block` is that panel of the output. The loop structure (and hence
+/// every element's f32 accumulation order) is the original serial
+/// blocked matmul, restricted to the panel's rows.
+fn sgemm_panel(
+    av: &[f32],
+    bv: &[f32],
+    block: &mut [f32],
+    r0: usize,
+    k: usize,
+    n: usize,
+    blk: GemmBlocking,
+) {
+    let r1 = r0 + block.len() / n;
     for jc in (0..n).step_by(blk.nc) {
         let nc = blk.nc.min(n - jc);
         for pc in (0..k).step_by(blk.kc) {
             let kc = blk.kc.min(k - pc);
-            for ic in (0..m).step_by(blk.mc) {
-                let mc = blk.mc.min(m - ic);
+            for ic in (r0..r1).step_by(blk.mc) {
+                let mc = blk.mc.min(r1 - ic);
                 // micro kernel: 2 rows of A at a time against the B
                 // panel — halves the O-row traffic per FMA and gives
                 // the vectorizer two independent accumulator streams.
@@ -121,8 +167,8 @@ pub fn sgemm_compute(a: &Tensor, b: &Tensor, blk: GemmBlocking) -> Tensor {
                             continue; // one-hot feature rows hit this often
                         }
                         let brow = &bv[(pc + p) * n + jc..(pc + p) * n + jc + nc];
-                        let (o0, o1) = ov.split_at_mut((i + 1) * n);
-                        let o0 = &mut o0[i * n + jc..i * n + jc + nc];
+                        let (o0, o1) = block.split_at_mut((i + 1 - r0) * n);
+                        let o0 = &mut o0[(i - r0) * n + jc..(i - r0) * n + jc + nc];
                         let o1 = &mut o1[jc..jc + nc];
                         for ((x0, x1), &b) in o0.iter_mut().zip(o1.iter_mut()).zip(brow) {
                             *x0 += v0 * b;
@@ -139,7 +185,7 @@ pub fn sgemm_compute(a: &Tensor, b: &Tensor, blk: GemmBlocking) -> Tensor {
                             continue;
                         }
                         let brow = &bv[(pc + p) * n + jc..(pc + p) * n + jc + nc];
-                        let orow = &mut ov[i * n + jc..i * n + jc + nc];
+                        let orow = &mut block[(i - r0) * n + jc..(i - r0) * n + jc + nc];
                         for (o, &b) in orow.iter_mut().zip(brow) {
                             *o += aval * b;
                         }
@@ -148,7 +194,6 @@ pub fn sgemm_compute(a: &Tensor, b: &Tensor, blk: GemmBlocking) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Naive triple-loop reference (for correctness tests and the perf
@@ -187,6 +232,25 @@ mod tests {
                 "mismatch at {m}x{k}x{n}: {}",
                 blocked.max_abs_diff(&naive).unwrap()
             );
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut rng = Pcg32::seeded(33);
+        let blk = GemmBlocking::default();
+        // shapes straddling the mc=128 macro-row boundary (ragged tails)
+        for (m, k, n) in [(3, 5, 7), (130, 64, 33), (257, 96, 17)] {
+            let a = Tensor::randn(m, k, 1.0, &mut rng);
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let serial = crate::parallel::with_threads(1, || sgemm_compute(&a, &b, blk));
+            for t in [2usize, 4] {
+                let par = crate::parallel::with_threads(t, || sgemm_compute(&a, &b, blk));
+                assert!(
+                    par.allclose(&serial, 0.0, 0.0),
+                    "threads {t} not bit-identical at {m}x{k}x{n}"
+                );
+            }
         }
     }
 

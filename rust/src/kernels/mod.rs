@@ -110,6 +110,136 @@ pub struct KernelExec {
     pub trace: Option<GatherTrace>,
 }
 
+/// Cumulative [`ScratchArena`] counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts served from a recycled buffer (no heap allocation).
+    pub hits: u64,
+    /// Checkouts that had to allocate fresh.
+    pub misses: u64,
+    /// Buffers currently parked in the free list.
+    pub held: usize,
+}
+
+/// Reusable buffer pool behind the hot-path tensor allocations: kernels
+/// check out `Tensor::zeros`-shaped buffers ([`ScratchArena::take_zeroed`])
+/// and the session executors return the stage outputs they own once a
+/// run or served batch is finished ([`ScratchArena::give`]), so
+/// steady-state `run`/`run_batch`/serve dispatches stop paying heap
+/// allocation for the dominant tensors (FP projections, NA results, the
+/// final embeddings). Checkout is best-fit by capacity; the free list
+/// is bounded so a pathological shape mix cannot hoard memory.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ScratchArena {
+    /// Most buffers the free list will park (beyond this, returned
+    /// buffers are simply dropped).
+    pub const MAX_FREE: usize = 64;
+
+    /// Byte budget for parked buffers. When a `give` pushes the total
+    /// over it, the **largest** parked buffers are evicted first — so a
+    /// one-off full-graph run cannot pin graph-scale buffers for the
+    /// lifetime of a session that afterwards serves small batches
+    /// (best-fit checkout would otherwise never touch, and never free,
+    /// the big ones).
+    pub const MAX_FREE_BYTES: usize = 256 << 20;
+
+    /// Best-fit checkout: the smallest parked buffer with capacity
+    /// `>= len`, counting a hit; `None` (a miss, counted by callers)
+    /// when nothing fits.
+    fn checkout(&mut self, len: usize) -> Option<Vec<f32>> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len
+                && best.is_none_or(|j: usize| self.free[j].capacity() > b.capacity())
+            {
+                best = Some(i);
+            }
+        }
+        best.map(|i| {
+            self.hits += 1;
+            self.free.swap_remove(i)
+        })
+    }
+
+    /// Check out a zero-filled buffer of exactly `len` elements —
+    /// recycled (best capacity fit) when possible, freshly allocated
+    /// otherwise.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.checkout(len) {
+            Some(mut b) => {
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Check out a buffer of exactly `len` elements with **unspecified
+    /// contents** (stale values from a previous checkout may remain) —
+    /// for kernels that overwrite every element anyway (pure-copy DR
+    /// kernels like `IndexSelect`), skipping the zero-fill pass that
+    /// [`ScratchArena::take_zeroed`] pays.
+    pub fn take_any(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.checkout(len) {
+            Some(mut b) => {
+                b.truncate(len);
+                if b.len() < len {
+                    // only the tail beyond the stale prefix is written
+                    b.resize(len, 0.0);
+                }
+                b
+            }
+            None => {
+                self.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Return a buffer for reuse (dropped when the free list is full or
+    /// the buffer holds no capacity; largest-first eviction keeps the
+    /// parked total under [`ScratchArena::MAX_FREE_BYTES`]).
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 || self.free.len() >= Self::MAX_FREE {
+            return;
+        }
+        self.free.push(buf);
+        let mut total: usize = self.free.iter().map(|b| b.capacity() * 4).sum();
+        while total > Self::MAX_FREE_BYTES {
+            let (i, cap) = self
+                .free
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (i, b.capacity()))
+                .max_by_key(|&(_, c)| c)
+                .expect("free list non-empty while over budget");
+            self.free.swap_remove(i);
+            total -= cap * 4;
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats { hits: self.hits, misses: self.misses, held: self.free.len() }
+    }
+}
+
 /// Collects [`KernelExec`] records during kernel execution; the engine
 /// drains it into the profiler with stage attribution.
 #[derive(Debug, Default)]
@@ -119,12 +249,30 @@ pub struct Ctx {
     /// When false, gather traces are dropped to save memory (benches that
     /// only need time breakdowns).
     pub record_traces: bool,
+    /// Reusable output-buffer pool for the hot kernels (see
+    /// [`ScratchArena`]); lives as long as the context, so a
+    /// session-held `Ctx` reuses buffers across runs and served
+    /// batches.
+    pub arena: ScratchArena,
 }
 
 impl Ctx {
     /// Context that records gather traces (needed for Table 3 / Fig 4).
     pub fn with_traces() -> Ctx {
-        Ctx { events: Vec::new(), record_traces: true }
+        Ctx { record_traces: true, ..Ctx::default() }
+    }
+
+    /// A zero-filled tensor drawn from the scratch arena.
+    pub fn scratch_zeros(&mut self, rows: usize, cols: usize) -> crate::tensor::Tensor {
+        crate::tensor::Tensor::from_vec(rows, cols, self.arena.take_zeroed(rows * cols))
+            .expect("arena buffer sized to rows*cols")
+    }
+
+    /// An arena tensor with unspecified contents, for kernels that
+    /// overwrite every element (see [`ScratchArena::take_any`]).
+    pub fn scratch_any(&mut self, rows: usize, cols: usize) -> crate::tensor::Tensor {
+        crate::tensor::Tensor::from_vec(rows, cols, self.arena.take_any(rows * cols))
+            .expect("arena buffer sized to rows*cols")
     }
 
     /// Record one kernel execution.
@@ -207,6 +355,56 @@ mod tests {
         let mut ctx2 = Ctx::with_traces();
         ctx2.push("k", KernelType::TopologyBased, KernelCounters::default(), 1, Some(trace));
         assert!(ctx2.events[0].trace.is_some());
+    }
+
+    #[test]
+    fn arena_recycles_and_zeroes() {
+        let mut arena = ScratchArena::default();
+        let mut a = arena.take_zeroed(8);
+        assert_eq!(arena.stats(), ArenaStats { hits: 0, misses: 1, held: 0 });
+        a.iter_mut().for_each(|v| *v = 7.0);
+        arena.give(a);
+        assert_eq!(arena.stats().held, 1);
+        // reuse must come back zero-filled, not holding stale values
+        let b = arena.take_zeroed(4);
+        assert_eq!(b, vec![0.0; 4]);
+        assert_eq!(arena.stats().hits, 1);
+        // a request larger than any held buffer allocates fresh
+        arena.give(b);
+        let c = arena.take_zeroed(100);
+        assert_eq!(c.len(), 100);
+        assert_eq!(arena.stats().misses, 2);
+    }
+
+    #[test]
+    fn arena_take_any_skips_zero_fill() {
+        let mut arena = ScratchArena::default();
+        let mut a = arena.take_zeroed(8);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        arena.give(a);
+        // unspecified-contents checkout keeps the stale prefix (the
+        // documented contract: callers overwrite every element)
+        let b = arena.take_any(4);
+        assert_eq!(b, vec![7.0; 4]);
+        assert_eq!(arena.stats().hits, 1);
+    }
+
+    #[test]
+    fn arena_best_fit_prefers_smallest_sufficient() {
+        let mut arena = ScratchArena::default();
+        arena.give(Vec::with_capacity(100));
+        arena.give(Vec::with_capacity(10));
+        let b = arena.take_zeroed(8);
+        assert!(b.capacity() < 100, "best fit must pick the 10-cap buffer");
+    }
+
+    #[test]
+    fn ctx_scratch_zeros_shapes() {
+        let mut ctx = Ctx::default();
+        let t = ctx.scratch_zeros(3, 4);
+        assert_eq!(t.shape(), (3, 4));
+        assert!(t.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!(ctx.arena.stats().misses, 1);
     }
 
     #[test]

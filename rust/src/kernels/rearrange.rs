@@ -66,7 +66,9 @@ pub fn split_rows(ctx: &mut Ctx, x: &Tensor, parts: usize) -> Result<Vec<Tensor>
 }
 
 /// Gather rows by index (`IndexSelect`): used when a stage reorders node
-/// features (e.g. MAGNN's metapath-instance batching).
+/// features (e.g. MAGNN's metapath-instance batching). Parallel over
+/// output-row blocks (a pure copy per row, so trivially bit-identical
+/// at every thread count).
 pub fn index_select(ctx: &mut Ctx, x: &Tensor, idx: &[u32]) -> Result<Tensor> {
     let f = x.cols();
     for &i in idx {
@@ -74,21 +76,28 @@ pub fn index_select(ctx: &mut Ctx, x: &Tensor, idx: &[u32]) -> Result<Tensor> {
             return Err(Error::shape(format!("index {i} out of {} rows", x.rows())));
         }
     }
-    let (out, nanos) = timed(|| {
-        let mut out = Tensor::zeros(idx.len(), f);
-        for (r, &i) in idx.iter().enumerate() {
-            out.set_row(r, x.row(i as usize));
-        }
-        out
-    });
+    let t0 = std::time::Instant::now();
+    // every output row is overwritten below, so skip the zero-fill pass
+    let mut out = ctx.scratch_any(idx.len(), f);
+    if f > 0 {
+        crate::parallel::parallel_chunks_mut(out.as_mut_slice(), f, 64, |r0, block| {
+            for (r, orow) in block.chunks_mut(f).enumerate() {
+                orow.copy_from_slice(x.row(idx[r0 + r] as usize));
+            }
+        });
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
     let total = out.len() as u64;
     let counters = KernelCounters {
         flops: 0,
         bytes_read: total * 4 + idx.len() as u64 * 4,
         bytes_written: total * 4,
     };
-    let trace = crate::kernels::GatherTrace { row_bytes: (f * 4) as u32, rows: idx.to_vec() };
-    ctx.push("IndexSelect", KernelType::DataRearrange, counters, nanos, Some(trace));
+    // conditional so the profiling-off hot path skips the index clone
+    let trace = ctx
+        .record_traces
+        .then(|| crate::kernels::GatherTrace { row_bytes: (f * 4) as u32, rows: idx.to_vec() });
+    ctx.push("IndexSelect", KernelType::DataRearrange, counters, nanos, trace);
     Ok(out)
 }
 

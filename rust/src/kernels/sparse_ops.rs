@@ -16,6 +16,7 @@
 
 use crate::graph::sparse::Csr;
 use crate::kernels::{timed, Ctx, GatherTrace, KernelCounters, KernelType};
+use crate::parallel;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -60,44 +61,50 @@ pub fn spmm_csr(
     }
     let f = x.cols();
     let n = adj.n_rows;
-    let (out, nanos) = timed(|| {
-        let mut out = Tensor::zeros(n, f);
+    // parallel over destination-row blocks: each destination row's
+    // per-edge accumulation order is exactly the serial loop's, so
+    // parallel output is bit-identical to serial at every thread count
+    let t0 = std::time::Instant::now();
+    let mut out = ctx.scratch_zeros(n, f);
+    if f > 0 {
         let xs = x.as_slice();
-        for d in 0..n {
-            let row = adj.row(d);
-            if row.is_empty() {
-                continue;
-            }
-            let lo = adj.indptr[d] as usize;
-            let orow = out.row_mut(d);
-            match edge_weights {
-                Some(w) => {
-                    for (j, &s) in row.iter().enumerate() {
-                        let wv = w[lo + j];
-                        let src = &xs[s as usize * f..(s as usize + 1) * f];
-                        for (o, &v) in orow.iter_mut().zip(src) {
-                            *o += wv * v;
+        parallel::parallel_chunks_mut(out.as_mut_slice(), f, 32, |d0, block| {
+            for (r, orow) in block.chunks_mut(f).enumerate() {
+                let d = d0 + r;
+                let row = adj.row(d);
+                if row.is_empty() {
+                    continue;
+                }
+                let lo = adj.indptr[d] as usize;
+                match edge_weights {
+                    Some(w) => {
+                        for (j, &s) in row.iter().enumerate() {
+                            let wv = w[lo + j];
+                            let src = &xs[s as usize * f..(s as usize + 1) * f];
+                            for (o, &v) in orow.iter_mut().zip(src) {
+                                *o += wv * v;
+                            }
+                        }
+                    }
+                    None => {
+                        for &s in row {
+                            let src = &xs[s as usize * f..(s as usize + 1) * f];
+                            for (o, &v) in orow.iter_mut().zip(src) {
+                                *o += v;
+                            }
                         }
                     }
                 }
-                None => {
-                    for &s in row {
-                        let src = &xs[s as usize * f..(s as usize + 1) * f];
-                        for (o, &v) in orow.iter_mut().zip(src) {
-                            *o += v;
-                        }
+                if reduce == SpmmReduce::Mean {
+                    let inv = 1.0 / row.len() as f32;
+                    for o in orow.iter_mut() {
+                        *o *= inv;
                     }
                 }
             }
-            if reduce == SpmmReduce::Mean {
-                let inv = 1.0 / row.len() as f32;
-                for o in orow.iter_mut() {
-                    *o *= inv;
-                }
-            }
-        }
-        out
-    });
+        });
+    }
+    let nanos = t0.elapsed().as_nanos() as u64;
 
     let nnz = adj.nnz() as u64;
     let weight_flops = if edge_weights.is_some() { nnz * f as u64 } else { 0 };
@@ -111,8 +118,12 @@ pub fn spmm_csr(
             + edge_weights.map(|w| w.len() as u64 * 4).unwrap_or(0),
         bytes_written: (n * f) as u64 * 4,
     };
-    let trace = GatherTrace { row_bytes: (f * 4) as u32, rows: adj.indices.clone() };
-    ctx.push("SpMMCsr", KernelType::TopologyBased, counters, nanos, Some(trace));
+    // trace capture is conditional so the profiling-off hot path never
+    // pays the indices clone
+    let trace = ctx
+        .record_traces
+        .then(|| GatherTrace { row_bytes: (f * 4) as u32, rows: adj.indices.clone() });
+    ctx.push("SpMMCsr", KernelType::TopologyBased, counters, nanos, trace);
     Ok(out)
 }
 
@@ -154,9 +165,10 @@ pub fn sddmm_coo(
         bytes_written: nnz * 4,
     };
     // the irregular stream is the s_src gather (s_dst is sequential);
-    // rows are 4-byte scalars
-    let trace = GatherTrace { row_bytes: 4, rows: adj.indices.clone() };
-    ctx.push("SDDMMCoo", KernelType::TopologyBased, counters, nanos, Some(trace));
+    // rows are 4-byte scalars. Conditional for the same reason as SpMM.
+    let trace =
+        ctx.record_traces.then(|| GatherTrace { row_bytes: 4, rows: adj.indices.clone() });
+    ctx.push("SDDMMCoo", KernelType::TopologyBased, counters, nanos, trace);
     Ok(logits)
 }
 
@@ -253,6 +265,51 @@ mod tests {
         let t = e.trace.as_ref().unwrap();
         assert_eq!(t.row_bytes, 8);
         assert_eq!(t.rows, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn spmm_parallel_bit_identical_to_serial() {
+        let mut rng = crate::util::Pcg32::seeded(99);
+        let nodes = 300;
+        let f = 9;
+        let mut edges = Vec::new();
+        for d in 0..nodes as u32 {
+            for _ in 0..(1 + rng.gen_range(6)) {
+                edges.push((d, rng.gen_range(nodes) as u32));
+            }
+        }
+        let adj = Coo::from_edges(nodes, nodes, edges).unwrap().to_csr();
+        let x = Tensor::randn(nodes, f, 1.0, &mut rng);
+        let w: Vec<f32> = (0..adj.nnz()).map(|_| rng.gen_f32()).collect();
+        for weights in [None, Some(w.as_slice())] {
+            for reduce in [SpmmReduce::Sum, SpmmReduce::Mean] {
+                let serial = crate::parallel::with_threads(1, || {
+                    let mut ctx = Ctx::default();
+                    spmm_csr(&mut ctx, &adj, &x, weights, reduce).unwrap()
+                });
+                for t in [2usize, 4] {
+                    let par = crate::parallel::with_threads(t, || {
+                        let mut ctx = Ctx::default();
+                        spmm_csr(&mut ctx, &adj, &x, weights, reduce).unwrap()
+                    });
+                    assert!(
+                        par.allclose(&serial, 0.0, 0.0),
+                        "threads {t} not bit-identical (weighted={}, {reduce:?})",
+                        weights.is_some()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_clone_skipped_when_profiling_off() {
+        // the hot path must not pay the indices clone: with traces off
+        // the recorded event carries no trace (and none was built)
+        let mut ctx = Ctx::default();
+        spmm_csr(&mut ctx, &adj_3x3(), &feats(), None, SpmmReduce::Sum).unwrap();
+        sddmm_coo(&mut ctx, &adj_3x3(), &[0.0; 3], &[0.0; 3], 0.1).unwrap();
+        assert!(ctx.events.iter().all(|e| e.trace.is_none()));
     }
 
     #[test]

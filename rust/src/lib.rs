@@ -78,6 +78,7 @@ pub mod graph;
 pub mod kernels;
 pub mod metapath;
 pub mod models;
+pub mod parallel;
 pub mod partition;
 pub mod profiler;
 pub mod report;
@@ -157,6 +158,7 @@ pub mod prelude {
     pub use crate::gpumodel::{GpuModel, T4Spec};
     pub use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
     pub use crate::metapath::{Metapath, SubgraphSet};
+    pub use crate::parallel::{self, PoolStats};
     pub use crate::partition::{Partition, PartitionSpec, ShardingInfo};
     pub use crate::profiler::{Profile, StageId};
     pub use crate::report;

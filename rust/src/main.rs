@@ -78,6 +78,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         .model(model)
         .schedule(policy_from(args)?)
         .profiling(Profiling::Traces);
+    if let Some(t) = args.threads()? {
+        builder = builder.threads(t);
+        println!("worker pool: {t} thread(s) (intra-kernel row blocks + task schedules)");
+    }
     if let Some(spec) = args.partition()? {
         builder = builder.partition(spec);
         if args.flag_str("policy", "seq") != "seq" {
@@ -278,13 +282,15 @@ fn cmd_timeline(args: &Args) -> Result<()> {
     let model = ModelId::parse(&args.flag_str("model", "han"))?;
     let dataset = DatasetId::parse(&args.flag_str("dataset", "dblp"))?;
     let workers = args.flag_usize("workers", 4)?;
-    let run = Session::builder()
+    let mut builder = Session::builder()
         .dataset(dataset)
         .scale(args.scale()?)
         .model(model)
-        .schedule(SchedulePolicy::InterSubgraphParallel { workers })
-        .build()?
-        .run()?;
+        .schedule(SchedulePolicy::InterSubgraphParallel { workers });
+    if let Some(t) = args.threads()? {
+        builder = builder.threads(t);
+    }
+    let run = builder.build()?.run()?;
     println!("{}", run.profile.timeline().render(96));
     println!("{}", run.report.summary());
     Ok(())
@@ -325,6 +331,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .scale(DatasetScale::ci())
         .model(ModelId::Han)
         .schedule(policy_from(args)?);
+    if let Some(t) = args.threads()? {
+        builder = builder.threads(t);
+        println!("worker pool: {t} thread(s)");
+    }
     if fanout > 0 {
         builder = builder.sampling(SamplingSpec::uniform(fanout, layers));
         println!("mini-batch sampling: fanout {fanout}, {layers} layer(s)");

@@ -1,0 +1,480 @@
+//! The intra-kernel parallel runtime: one process-wide pool of
+//! persistent `std::thread` workers driving a chunked [`parallel_for`]
+//! over row ranges.
+//!
+//! The paper's characterization shows each HGNN stage saturating a
+//! different resource — Feature Projection is compute-bound dense matmul
+//! while Neighbor Aggregation is memory-bound and irregular — and both
+//! leave data parallelism *inside* every kernel on the table. This
+//! module is the substrate that harvests it: `sgemm` parallelizes over
+//! M-dimension macro-row blocks, `SpMMCsr` over destination-row blocks,
+//! and `IndexSelect` over output rows, all through the same pool.
+//!
+//! ## Design
+//!
+//! * **Persistent workers.** Worker threads are spawned lazily on first
+//!   demand (never more than the widest job needs, hard-capped at
+//!   [`MAX_WORKERS`]) and then parked on a condvar between jobs, so
+//!   steady-state kernel dispatch never pays thread creation.
+//! * **Chunk claiming.** A job divides `n` work units into chunks; the
+//!   submitting thread *and* the woken workers claim chunks from a
+//!   shared atomic cursor (dynamic scheduling, so skewed CSR rows
+//!   balance), and the submitter blocks until every chunk is done. That
+//!   blocking is also the safety argument for the one piece of `unsafe`
+//!   here: the borrowed closure is only ever dereferenced for a claimed
+//!   chunk, and `parallel_for` cannot return before all claimed chunks
+//!   are finished.
+//! * **Bit-identity.** Chunks split the *output* rows; each row's inner
+//!   accumulation loop is byte-for-byte the serial code, so results are
+//!   bit-identical at every thread count (pinned by
+//!   `tests/integration_parallel.rs` across R-GCN/HAN/MAGNN).
+//! * **Nesting rule.** A `parallel_for` issued from inside a pool job
+//!   (or from a chunk the submitting thread is helping with) runs
+//!   inline and serial. The session's NA worker schedule and the
+//!   sharded executor run their tasks through [`parallel_map`] on this
+//!   same pool, so per-subgraph/per-shard parallelism and intra-kernel
+//!   parallelism can never multiply into oversubscription.
+//! * **Sizing.** The effective width of a job is
+//!   [`current_threads`]: a thread-local override installed by
+//!   [`with_threads`] (what `SessionBuilder::threads` / the CLI
+//!   `--threads` flag plumb through), else the process default —
+//!   the `HGNN_THREADS` env var when set, else
+//!   `std::thread::available_parallelism()`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard upper bound on pool workers (safety valve; real widths come
+/// from [`current_threads`]).
+pub const MAX_WORKERS: usize = 256;
+
+/// Target chunks per participating thread — enough slack for dynamic
+/// load balancing over skewed rows without drowning in claim traffic.
+const CHUNKS_PER_THREAD: usize = 4;
+
+thread_local! {
+    /// True while this thread is executing a pool chunk (worker threads
+    /// set it permanently) — makes nested `parallel_for` run inline.
+    static IN_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+    /// Thread-local width override installed by [`with_threads`].
+    static CAP: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// Process default width: `HGNN_THREADS` (when a positive integer — the
+/// CI lever that forces the parallel paths on small runners), else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        match std::env::var("HGNN_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    })
+}
+
+/// The width the next job submitted *from this thread* will use.
+pub fn current_threads() -> usize {
+    CAP.with(|c| c.get()).unwrap_or_else(default_threads)
+}
+
+/// True while the calling thread is executing inside a pool chunk
+/// (where any nested data-parallel call runs inline and serial).
+pub fn in_parallel_region() -> bool {
+    IN_JOB.with(|c| c.get())
+}
+
+/// Run `f` with the pool width capped at `threads` (min 1) for every
+/// job submitted from the calling thread — the scoped, thread-local
+/// knob behind `SessionBuilder::threads`. Restores the previous cap on
+/// exit (including unwinds), so concurrent sessions and tests never
+/// fight over a process global.
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            CAP.with(|c| c.set(prev));
+        }
+    }
+    let _restore = Restore(CAP.with(|c| c.replace(Some(threads.max(1)))));
+    f()
+}
+
+/// Cumulative pool counters (process lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Jobs that actually went parallel (serial fallbacks not counted).
+    pub jobs: u64,
+    /// Chunks executed across all parallel jobs.
+    pub chunks: u64,
+    /// Worker threads currently spawned.
+    pub workers: usize,
+}
+
+/// Snapshot of the global pool's counters.
+pub fn pool_stats() -> PoolStats {
+    let pool = pool();
+    PoolStats {
+        jobs: pool.jobs.load(Ordering::Relaxed),
+        chunks: pool.chunks.load(Ordering::Relaxed),
+        workers: pool.inner.lock().unwrap_or_else(|e| e.into_inner()).spawned,
+    }
+}
+
+/// Type-erased pointer to the job's borrowed chunk closure. Sharing it
+/// across threads is sound because the pointee is `Sync`, and the
+/// lifetime is enforced by protocol: `parallel_for` blocks until every
+/// claimed chunk has finished, and the pointer is only dereferenced
+/// between claiming a valid chunk and marking it done.
+struct FnPtr(*const (dyn Fn(usize, usize) + Sync));
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// One chunked data-parallel job: the closure plus claim/completion
+/// state. Queued as `Arc` clones (one per helper worker).
+struct Job {
+    f: FnPtr,
+    n: usize,
+    chunk: usize,
+    chunks: usize,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+    finished: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Job {
+    /// Claim and execute chunks until the cursor is exhausted.
+    fn run(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.chunks {
+                return;
+            }
+            let lo = c * self.chunk;
+            let hi = self.n.min(lo + self.chunk);
+            // SAFETY: see `FnPtr` — the submitter blocks in `wait()`
+            // until this chunk is marked done below, so the borrowed
+            // closure is alive for the whole call.
+            let f = unsafe { &*self.f.0 };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(lo, hi))).is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+            if self.done.fetch_add(1, Ordering::SeqCst) + 1 == self.chunks {
+                let mut fin = self.finished.lock().unwrap_or_else(|e| e.into_inner());
+                *fin = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every chunk is done.
+    fn wait(&self) {
+        let mut fin = self.finished.lock().unwrap_or_else(|e| e.into_inner());
+        while !*fin {
+            fin = self.cv.wait(fin).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+struct PoolInner {
+    queue: VecDeque<Arc<Job>>,
+    spawned: usize,
+}
+
+struct Pool {
+    inner: Mutex<PoolInner>,
+    work: Condvar,
+    jobs: AtomicU64,
+    chunks: AtomicU64,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        inner: Mutex::new(PoolInner { queue: VecDeque::new(), spawned: 0 }),
+        work: Condvar::new(),
+        jobs: AtomicU64::new(0),
+        chunks: AtomicU64::new(0),
+    })
+}
+
+impl Pool {
+    /// Enqueue `helpers` claims on the job and make sure that many
+    /// workers exist to take them. Exactly `helpers` workers can ever
+    /// join a job (each queue entry is consumed once), which is what
+    /// caps a job's width at the submitter's `current_threads()`.
+    fn submit(&self, job: &Arc<Job>, helpers: usize) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        while inner.spawned < helpers.min(MAX_WORKERS) {
+            let name = format!("hgnn-pool-{}", inner.spawned);
+            match std::thread::Builder::new().name(name).spawn(worker_loop) {
+                Ok(_) => inner.spawned += 1,
+                // spawn failure degrades gracefully: the submitting
+                // thread still drives the job to completion
+                Err(_) => break,
+            }
+        }
+        for _ in 0..helpers {
+            inner.queue.push_back(job.clone());
+        }
+        drop(inner);
+        self.work.notify_all();
+    }
+}
+
+/// Worker body: park on the condvar, pop a job claim, drain it, repeat.
+/// Workers are daemons — they live for the process and die with it.
+fn worker_loop() {
+    IN_JOB.with(|c| c.set(true));
+    let pool = pool();
+    loop {
+        let job: Arc<Job> = {
+            let mut inner = pool.inner.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(j) = inner.queue.pop_front() {
+                    break j;
+                }
+                inner = pool.work.wait(inner).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        job.run();
+    }
+}
+
+/// Chunked data-parallel loop over `0..n`: `f(lo, hi)` is called for
+/// disjoint, exhaustive ranges (never smaller than `min_chunk` units
+/// except the last). Runs inline and serial when the effective width is
+/// 1, when `n` is too small to split, or when the caller is already
+/// inside a pool chunk (the nesting rule). Panics in any chunk are
+/// caught on the executing thread and re-raised here after all chunks
+/// finish.
+pub fn parallel_for(n: usize, min_chunk: usize, f: impl Fn(usize, usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let min_chunk = min_chunk.max(1);
+    let cap = current_threads();
+    if cap <= 1 || n <= min_chunk || in_parallel_region() {
+        f(0, n);
+        return;
+    }
+    let chunks = (cap * CHUNKS_PER_THREAD).min(n.div_ceil(min_chunk));
+    if chunks <= 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(chunks);
+    let chunks = n.div_ceil(chunk);
+    let obj: &(dyn Fn(usize, usize) + Sync) = &f;
+    let job = Arc::new(Job {
+        f: FnPtr(obj as *const (dyn Fn(usize, usize) + Sync)),
+        n,
+        chunk,
+        chunks,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        finished: Mutex::new(false),
+        cv: Condvar::new(),
+    });
+    let pool = pool();
+    pool.jobs.fetch_add(1, Ordering::Relaxed);
+    pool.chunks.fetch_add(chunks as u64, Ordering::Relaxed);
+    pool.submit(&job, (cap - 1).min(chunks - 1));
+    {
+        // the submitter helps; its own nested parallel calls inline
+        struct Exit(bool);
+        impl Drop for Exit {
+            fn drop(&mut self) {
+                let prev = self.0;
+                IN_JOB.with(|c| c.set(prev));
+            }
+        }
+        let _exit = Exit(IN_JOB.with(|c| c.replace(true)));
+        job.run();
+    }
+    job.wait();
+    if job.panicked.load(Ordering::SeqCst) {
+        panic!("parallel_for task panicked");
+    }
+}
+
+/// Raw-pointer wrapper that lets disjoint sub-slices of one `&mut [T]`
+/// be written from multiple pool threads.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Parallel loop over a mutable slice viewed as consecutive units of
+/// `unit` elements (a row-major matrix's rows, a macro-block of rows,
+/// ...). `f(first_unit, block)` receives the index of its first unit
+/// and the mutable sub-slice covering its units; the final block may be
+/// ragged when `data.len()` is not a unit multiple. Blocks are disjoint
+/// and exhaustive — this is the safe mutable-output face of
+/// [`parallel_for`] that the row-blocked kernels build on.
+pub fn parallel_chunks_mut<T: Send>(
+    data: &mut [T],
+    unit: usize,
+    min_units: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if data.is_empty() || unit == 0 {
+        return;
+    }
+    let len = data.len();
+    let units = len.div_ceil(unit);
+    let base = SendPtr(data.as_mut_ptr());
+    parallel_for(units, min_units, move |u0, u1| {
+        let lo = u0 * unit;
+        let hi = len.min(u1 * unit);
+        // SAFETY: `parallel_for` hands out disjoint, in-bounds unit
+        // ranges, so these sub-slices never alias; the borrow of `data`
+        // outlives the blocking `parallel_for` call.
+        let block = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(u0, block);
+    });
+}
+
+/// Run `tasks` independent closures on the pool and collect their
+/// results in index order. This is what the session's NA worker
+/// schedule and the sharded executor dispatch through, so task-level
+/// and intra-kernel parallelism share one set of threads (tasks run
+/// with nested data parallelism inlined).
+pub fn parallel_map<T: Send>(tasks: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut slots: Vec<Option<T>> = (0..tasks).map(|_| None).collect();
+    parallel_chunks_mut(&mut slots, 1, 1, |i0, block| {
+        for (j, slot) in block.iter_mut().enumerate() {
+            *slot = Some(f(i0 + j));
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.unwrap_or_else(|| panic!("parallel_map task {i} never ran")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let marks: Vec<AtomicU32> = (0..1000).map(|_| AtomicU32::new(0)).collect();
+        with_threads(4, || {
+            parallel_for(1000, 1, |lo, hi| {
+                for m in &marks[lo..hi] {
+                    m.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+        });
+        assert!(marks.iter().all(|m| m.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn chunks_respect_min_chunk_and_tail() {
+        // n=10, unit=4 → blocks [0..4), [4..8), [8..10)
+        let mut data: Vec<u32> = vec![0; 10];
+        with_threads(4, || {
+            parallel_chunks_mut(&mut data, 4, 1, |u0, block| {
+                for (j, v) in block.iter_mut().enumerate() {
+                    *v = (u0 * 4 + j) as u32 + 1;
+                }
+            });
+        });
+        let expect: Vec<u32> = (1..=10).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn nested_parallel_runs_inline() {
+        let total = AtomicU32::new(0);
+        with_threads(4, || {
+            parallel_for(8, 1, |lo, hi| {
+                assert!(in_parallel_region() || current_threads() == 1);
+                // nested call must execute inline, still covering all
+                parallel_for(hi - lo, 1, |a, b| {
+                    total.fetch_add((b - a) as u32, Ordering::SeqCst);
+                });
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn width_one_is_serial_and_inline() {
+        let concurrent = AtomicU32::new(0);
+        let peak = AtomicU32::new(0);
+        with_threads(1, || {
+            parallel_for(64, 1, |_, _| {
+                let c = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(c, Ordering::SeqCst);
+                concurrent.fetch_sub(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn width_caps_job_participants() {
+        // at width 2 at most 2 threads (submitter + 1 helper) can ever
+        // be inside chunks of one job simultaneously
+        let concurrent = AtomicU32::new(0);
+        let peak = AtomicU32::new(0);
+        with_threads(2, || {
+            parallel_for(64, 1, |_, _| {
+                let c = concurrent.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(c, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                concurrent.fetch_sub(1, Ordering::SeqCst);
+            });
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = with_threads(4, || parallel_map(37, |i| i * i));
+        assert_eq!(out.len(), 37);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn with_threads_restores_previous_cap() {
+        let outer = current_threads();
+        with_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            with_threads(1, || assert_eq!(current_threads(), 1));
+            assert_eq!(current_threads(), 3);
+        });
+        assert_eq!(current_threads(), outer);
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_for task panicked")]
+    fn chunk_panic_propagates_to_submitter() {
+        with_threads(4, || {
+            parallel_for(16, 1, |lo, _| {
+                if lo == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+    }
+
+    #[test]
+    fn pool_stats_count_parallel_jobs() {
+        let before = pool_stats();
+        with_threads(4, || parallel_for(256, 1, |_, _| {}));
+        let after = pool_stats();
+        assert!(after.jobs > before.jobs);
+        assert!(after.chunks > before.chunks);
+    }
+}

@@ -91,6 +91,13 @@ pub struct Profile {
     /// Cumulative reuse-cache counters when the run executed through the
     /// cache-aware serving path (`None` for plain runs).
     pub reuse: Option<crate::reuse::ReuseStats>,
+    /// Worker-pool width in effect while the kernels executed (the
+    /// intra-kernel `parallel_for` cap — see [`crate::parallel`]); 0
+    /// when the producer predates the pool or did not record it. Kernel
+    /// `wall_nanos` are real elapsed wallclock around the (possibly
+    /// parallel) kernel, so this is the context that keeps wall-derived
+    /// numbers honest.
+    pub pool_threads: usize,
 }
 
 impl Profile {
@@ -235,6 +242,12 @@ impl Profile {
             "  (Subgraph Build on CPU: {}, excluded as in the paper)\n",
             crate::util::human_time(self.subgraph_build_nanos as f64)
         ));
+        if self.pool_threads > 1 {
+            out.push_str(&format!(
+                "  (native kernel wallclock measured at pool width {})\n",
+                self.pool_threads
+            ));
+        }
         if let Some(r) = &self.reuse {
             out.push_str(&format!("  {}\n", r.line()));
         }

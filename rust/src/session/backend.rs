@@ -150,7 +150,7 @@ pub trait SyncExecBackend: ExecBackend + Sync {}
 
 /// Adapter presenting a thread-safe backend view as a plain
 /// [`ExecBackend`]: the sharded executors run whole stage pipelines
-/// inside scoped threads, which can only capture `Sync` views, while
+/// inside worker-pool tasks, which can only capture `Sync` views, while
 /// every stage executor takes `&dyn ExecBackend`. Wrapping bridges the
 /// two without trait upcasting (which our MSRV predates) — the adapter
 /// is itself `Sync` and delegates every entry point.
@@ -274,7 +274,7 @@ impl ExecBackend for NativeBackend {
     }
 
     fn make_ctx(&self) -> Ctx {
-        Ctx { events: Vec::new(), record_traces: self.record_traces }
+        Ctx { record_traces: self.record_traces, ..Default::default() }
     }
 
     fn feature_projection(

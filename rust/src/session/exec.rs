@@ -9,6 +9,17 @@
 //! executed on one thread ("virtual workers") and the modeled schedule
 //! analysis — the honest instrument, per DESIGN.md §4 — is identical.
 //!
+//! Real-thread execution — the NA worker schedule here, the sharded
+//! executor's per-shard tasks, and the session's shard-affine batch
+//! split — dispatches through [`crate::parallel::parallel_map`] on the
+//! one process-wide worker pool, the same pool the kernels' intra-kernel
+//! `parallel_for` uses. Tasks running on the pool execute their kernels
+//! with nested data parallelism inlined (the pool's nesting rule), so
+//! task-level and intra-kernel parallelism never multiply into
+//! oversubscription. Single-stream stages (FP, SA, sequential NA) run
+//! on the calling thread, where the hot kernels spread over the pool
+//! internally.
+//!
 //! ## The cache-aware serving path
 //!
 //! [`execute_reuse`] is the executor behind
@@ -144,6 +155,7 @@ pub fn run_na_only(
     scratch.events.clear();
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
     let projected = backend.feature_projection(scratch, plan, hg)?;
@@ -163,6 +175,7 @@ pub fn run_na_only(
         );
         na_results.push(out);
     }
+    recycle_projected(scratch, projected);
     profile.attach_metrics(gpu);
     Ok((na_results, profile))
 }
@@ -178,6 +191,7 @@ fn run_sequential(
 ) -> Result<StagedRun> {
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
     let projected = backend.feature_projection(scratch, plan, hg)?;
@@ -206,10 +220,20 @@ fn run_sequential(
         0,
         cursor,
     );
+    recycle_projected(scratch, projected);
     profile.attach_metrics(gpu);
     let report =
         schedule::analyze(&profile, 1, false, SchedulePolicy::Sequential, gpu);
     Ok(StagedRun { output, na_results, profile, report })
+}
+
+/// Park the finished per-type projection buffers in the scratch arena so
+/// the next run or served batch checks them out instead of allocating —
+/// the stage-② half of the steady-state zero-allocation contract.
+fn recycle_projected(scratch: &mut Ctx, projected: Projected) {
+    for h in projected.into_values() {
+        scratch.arena.give(h.into_vec());
+    }
 }
 
 type TaskOut = (usize, Vec<KernelExec>, Tensor);
@@ -225,6 +249,7 @@ fn run_na_stage(
     projected: &Projected,
     workers: usize,
     profile: &mut Profile,
+    scratch: &mut Ctx,
     mut post: impl FnMut(usize, &mut Tensor, &mut Profile, usize),
 ) -> Result<Vec<Tensor>> {
     let assignment = lpt_assign(&na_costs(plan), workers);
@@ -233,7 +258,7 @@ fn run_na_stage(
         Some(sync) if workers > 1 => {
             parallel_na(sync, plan, projected, &assignment, workers)?
         }
-        _ => virtual_na(backend, plan, projected, &assignment, workers)?,
+        _ => virtual_na(backend, plan, projected, &assignment, workers, scratch)?,
     };
     let mut task_outs: Vec<Option<TaskOut>> = (0..p).map(|_| None).collect();
     for per_worker in worker_outputs {
@@ -272,6 +297,7 @@ fn run_scheduled(
 ) -> Result<StagedRun> {
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
 
@@ -280,19 +306,29 @@ fn run_scheduled(
     record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
 
     // ③ NA spread over workers (real threads when the backend allows)
-    let na_results =
-        run_na_stage(backend, plan, &projected, workers, &mut profile, |_, _, _, _| {})?;
+    let na_results = run_na_stage(
+        backend,
+        plan,
+        &projected,
+        workers,
+        &mut profile,
+        scratch,
+        |_, _, _, _| {},
+    )?;
 
     // barrier, then ④ SA on worker 0
     let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
     record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+    recycle_projected(scratch, projected);
 
     profile.attach_metrics(gpu);
     let report = schedule::analyze(&profile, workers, mixing, policy, gpu);
     Ok(StagedRun { output, na_results, profile, report })
 }
 
-/// NA tasks on real threads, one per worker.
+/// NA worker tasks dispatched through the shared worker pool, one task
+/// per worker (tasks run their kernels with nested parallelism inlined,
+/// so subgraph-level and intra-kernel parallelism share the pool).
 fn parallel_na(
     backend: &dyn SyncExecBackend,
     plan: &ModelPlan,
@@ -301,44 +337,37 @@ fn parallel_na(
     workers: usize,
 ) -> Result<Vec<Vec<TaskOut>>> {
     let p = assignment.len();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let my_subgraphs: Vec<usize> =
-                (0..p).filter(|&i| assignment[i] == w).collect();
-            handles.push(scope.spawn(move || -> Result<Vec<TaskOut>> {
-                let mut out = Vec::new();
-                for i in my_subgraphs {
-                    let mut wctx = backend.make_ctx();
-                    let t = backend.neighbor_aggregation(&mut wctx, plan, i, projected)?;
-                    out.push((i, wctx.drain(), t));
-                }
-                Ok(out)
-            }));
+    crate::parallel::parallel_map(workers, |w| -> Result<Vec<TaskOut>> {
+        let mut out = Vec::new();
+        for i in (0..p).filter(|&i| assignment[i] == w) {
+            let mut wctx = backend.make_ctx();
+            let t = backend.neighbor_aggregation(&mut wctx, plan, i, projected)?;
+            out.push((i, wctx.drain(), t));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("NA worker panicked"))
-            .collect()
+        Ok(out)
     })
+    .into_iter()
+    .collect()
 }
 
 /// NA tasks executed on the calling thread, attributed to their assigned
-/// (virtual) workers — used for backends without a thread-safe view.
+/// (virtual) workers — used for backends without a thread-safe view and
+/// for single-worker schedules, where executing through the session's
+/// `scratch` context keeps the arena'd NA outputs reusable across runs.
 fn virtual_na(
     backend: &dyn ExecBackend,
     plan: &ModelPlan,
     projected: &Projected,
     assignment: &[usize],
     workers: usize,
+    scratch: &mut Ctx,
 ) -> Result<Vec<Vec<TaskOut>>> {
     let p = assignment.len();
     let mut out: Vec<Vec<TaskOut>> = (0..workers).map(|_| Vec::new()).collect();
     for w in 0..workers {
         for i in (0..p).filter(|&i| assignment[i] == w) {
-            let mut wctx = backend.make_ctx();
-            let t = backend.neighbor_aggregation(&mut wctx, plan, i, projected)?;
-            out[w].push((i, wctx.drain(), t));
+            let t = backend.neighbor_aggregation(scratch, plan, i, projected)?;
+            out[w].push((i, scratch.drain(), t));
         }
     }
     Ok(out)
@@ -362,6 +391,7 @@ fn run_fused(
 ) -> Result<StagedRun> {
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
     let assignment = lpt_assign(&na_costs(plan), workers);
@@ -371,7 +401,7 @@ fn run_fused(
         Some(sync) if workers > 1 => {
             parallel_fused(sync, plan, hg, &assignment, workers)?
         }
-        _ => virtual_fused(backend, plan, hg, &assignment, workers)?,
+        _ => virtual_fused(backend, plan, hg, &assignment, workers, scratch)?,
     };
 
     let mut results: Vec<Option<Tensor>> = (0..p).map(|_| None).collect();
@@ -424,7 +454,8 @@ fn fused_task<B: ExecBackend + ?Sized>(
     backend.neighbor_aggregation(ctx, plan, i, local_proj)
 }
 
-/// Fused tasks on real threads.
+/// Fused (FP+NA) worker tasks dispatched through the shared worker
+/// pool, one task per worker.
 fn parallel_fused(
     backend: &dyn SyncExecBackend,
     plan: &ModelPlan,
@@ -433,27 +464,18 @@ fn parallel_fused(
     workers: usize,
 ) -> Result<Vec<Vec<TaskOut>>> {
     let p = assignment.len();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let my_subgraphs: Vec<usize> =
-                (0..p).filter(|&i| assignment[i] == w).collect();
-            handles.push(scope.spawn(move || -> Result<Vec<TaskOut>> {
-                let mut out = Vec::new();
-                let mut local_proj: Projected = BTreeMap::new();
-                for i in my_subgraphs {
-                    let mut wctx = backend.make_ctx();
-                    let t = fused_task(backend, &mut wctx, plan, hg, &mut local_proj, i)?;
-                    out.push((i, wctx.drain(), t));
-                }
-                Ok(out)
-            }));
+    crate::parallel::parallel_map(workers, |w| -> Result<Vec<TaskOut>> {
+        let mut out = Vec::new();
+        let mut local_proj: Projected = BTreeMap::new();
+        for i in (0..p).filter(|&i| assignment[i] == w) {
+            let mut wctx = backend.make_ctx();
+            let t = fused_task(backend, &mut wctx, plan, hg, &mut local_proj, i)?;
+            out.push((i, wctx.drain(), t));
         }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("fused worker panicked"))
-            .collect()
+        Ok(out)
     })
+    .into_iter()
+    .collect()
 }
 
 /// Execute a sampled batch through the reuse caches (see the module
@@ -486,6 +508,7 @@ pub fn execute_reuse(
     };
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
 
@@ -502,6 +525,7 @@ pub fn execute_reuse(
         &projected,
         workers,
         &mut profile,
+        scratch,
         |i, t, profile, worker| {
             if let Some(ov) = &sampled.overlay {
                 // cache-hit rows: scatter the stored aggregates over the
@@ -526,6 +550,7 @@ pub fn execute_reuse(
     // barrier, then ④ SA on worker 0
     let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
     record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+    recycle_projected(scratch, projected);
 
     profile.attach_metrics(gpu);
     // one authoritative snapshot of the cumulative counters, carried by
@@ -688,11 +713,12 @@ type FpOut = (Vec<KernelExec>, Vec<(usize, Tensor)>);
 type NaOut = (Vec<KernelExec>, Vec<(Vec<KernelExec>, Tensor)>);
 
 /// Execute the full-graph forward over a degree-balanced [`Partition`]
-/// (see `SessionBuilder::partition`): FP and NA run **per shard** on
-/// real `std::thread::scope` threads (shards LPT-packed onto
-/// `spec.threads` via the canonical [`lpt_assign`]), with an explicit
-/// halo feature-exchange step between them, then the owner-computes
-/// merge reassembles the global NA tensors and SA runs once.
+/// (see `SessionBuilder::partition`): FP and NA run **per shard** as
+/// tasks on the shared worker pool (shards LPT-packed onto
+/// `spec.threads` pool tasks via the canonical [`lpt_assign`]; kernel
+/// parallelism inlines inside each task), with an explicit halo
+/// feature-exchange step between them, then the owner-computes merge
+/// reassembles the global NA tensors and SA runs once.
 ///
 /// * **② FP, owner-computes** — each shard projects only the feature
 ///   rows it owns (`IndexSelect` gather + row-sliced
@@ -734,6 +760,7 @@ pub fn execute_sharded(
     let thread_of = lpt_assign(part.shard_costs(), threads);
     let mut profile = Profile {
         subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
         ..Default::default()
     };
 
@@ -850,6 +877,7 @@ pub fn execute_sharded(
     // barrier, then ④ SA on the main thread over the merged tensors
     let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
     record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+    recycle_projected(scratch, projected);
 
     profile.attach_metrics(gpu);
     let effective = SchedulePolicy::InterSubgraphParallel { workers: threads };
@@ -858,9 +886,11 @@ pub fn execute_sharded(
     Ok(StagedRun { output, na_results, profile, report })
 }
 
-/// Run one task per shard on real scoped threads, LPT-packed onto
-/// `threads` of them (`thread_of` from [`lpt_assign`] over the shard
-/// costs). Results come back indexed by shard. Callers without a
+/// Run one task per shard, LPT-packed onto `threads` worker-pool tasks
+/// (`thread_of` from [`lpt_assign`] over the shard costs). Results come
+/// back indexed by shard. Dispatching through the shared pool (instead
+/// of ad-hoc scoped threads) means shard tasks and intra-kernel
+/// `parallel_for` can never oversubscribe each other. Callers without a
 /// thread-safe backend view run the same shard schedule inline instead.
 fn run_shards_parallel<T: Send>(
     k: usize,
@@ -869,21 +899,13 @@ fn run_shards_parallel<T: Send>(
     f: impl Fn(usize) -> Result<T> + Sync,
 ) -> Result<Vec<T>> {
     let mut slots: Vec<Option<T>> = (0..k).map(|_| None).collect();
-    let per_thread: Vec<Result<Vec<(usize, T)>>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let f = &f;
-                let mine: Vec<usize> = (0..k).filter(|&s| thread_of[s] == t).collect();
-                scope.spawn(move || -> Result<Vec<(usize, T)>> {
-                    mine.into_iter().map(|s| f(s).map(|r| (s, r))).collect()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect()
-    });
+    let per_thread: Vec<Result<Vec<(usize, T)>>> =
+        crate::parallel::parallel_map(threads, |t| -> Result<Vec<(usize, T)>> {
+            (0..k)
+                .filter(|&s| thread_of[s] == t)
+                .map(|s| f(s).map(|r| (s, r)))
+                .collect()
+        });
     for r in per_thread {
         for (s, out) in r? {
             slots[s] = Some(out);
@@ -994,22 +1016,23 @@ fn dr_exec(name: &'static str, bytes: u64, nanos: u64) -> KernelExec {
 }
 
 /// Fused tasks on the calling thread with per-virtual-worker projection
-/// maps (same redundancy semantics as the threaded path).
+/// maps (same redundancy semantics as the threaded path); executes
+/// through the session `scratch` so kernel outputs draw on its arena.
 fn virtual_fused(
     backend: &dyn ExecBackend,
     plan: &ModelPlan,
     hg: &HeteroGraph,
     assignment: &[usize],
     workers: usize,
+    scratch: &mut Ctx,
 ) -> Result<Vec<Vec<TaskOut>>> {
     let p = assignment.len();
     let mut out: Vec<Vec<TaskOut>> = (0..workers).map(|_| Vec::new()).collect();
     for w in 0..workers {
         let mut local_proj: Projected = BTreeMap::new();
         for i in (0..p).filter(|&i| assignment[i] == w) {
-            let mut wctx = backend.make_ctx();
-            let t = fused_task(backend, &mut wctx, plan, hg, &mut local_proj, i)?;
-            out[w].push((i, wctx.drain(), t));
+            let t = fused_task(backend, scratch, plan, hg, &mut local_proj, i)?;
+            out[w].push((i, scratch.drain(), t));
         }
     }
     Ok(out)

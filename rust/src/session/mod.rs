@@ -204,6 +204,7 @@ pub struct SessionBuilder {
     sampling: Option<SamplingSpec>,
     reuse: Option<ReuseSpec>,
     partition: Option<PartitionSpec>,
+    threads: Option<usize>,
 }
 
 impl Default for SchedulePolicy {
@@ -311,7 +312,7 @@ impl SessionBuilder {
     /// degree-balanced shards per node type
     /// ([`crate::partition::Partition::build`], cached here across every
     /// run and served batch). [`Session::run`] then executes FP/NA per
-    /// shard on `spec.threads` real threads with a halo feature exchange
+    /// shard on `spec.threads` worker-pool tasks with a halo feature exchange
     /// and an owner-computes merge — **bit-identical** to the monolithic
     /// forward. The partition subsumes the [`SchedulePolicy`] for that
     /// full forward (the report carries the effective
@@ -326,6 +327,20 @@ impl SessionBuilder {
     /// subsumes any partition).
     pub fn partition(mut self, spec: PartitionSpec) -> Self {
         self.partition = Some(spec);
+        self
+    }
+
+    /// Cap the process-wide worker pool at `n` threads (min 1) for
+    /// everything this session executes — both the intra-kernel
+    /// `parallel_for` inside `sgemm`/`SpMMCsr`/`IndexSelect` and the
+    /// task-level NA/shard schedules, which share one pool (see
+    /// [`crate::parallel`]). The cap is installed thread-locally around
+    /// each run, so concurrent sessions with different `threads`
+    /// settings never fight over a global. Default: the process default
+    /// (`HGNN_THREADS` env var, else available parallelism). Parallel
+    /// results are bit-identical to `threads(1)` at every setting.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n.max(1));
         self
     }
 
@@ -383,6 +398,9 @@ impl SessionBuilder {
         let reuse = self
             .reuse
             .map(|spec| (0..lanes).map(|_| ReuseCache::new(spec)).collect::<Vec<_>>());
+        let shard_scratch = (0..partition.as_ref().map(|p| p.num_shards()).unwrap_or(0))
+            .map(|_| backend.make_ctx())
+            .collect();
         Ok(Session {
             hg,
             plan,
@@ -393,7 +411,9 @@ impl SessionBuilder {
             sampler,
             reuse,
             partition,
+            threads: self.threads,
             scratch,
+            shard_scratch,
             cached_output: None,
             runs: 0,
         })
@@ -431,9 +451,18 @@ pub struct Session {
     /// switches [`Session::run`] to sharded execution and
     /// [`Session::run_batch`] to shard-affine sub-batches.
     partition: Option<Partition>,
+    /// Worker-pool cap installed (thread-locally) around every run;
+    /// `None` inherits the process default.
+    threads: Option<usize>,
     /// Kernel context reused across runs (event-buffer allocation
     /// survives between runs).
     scratch: Ctx,
+    /// One persistent kernel context per shard for the shard-affine
+    /// batch path ([`Session::run_batch`] on a partitioned session), so
+    /// concurrent sub-batches keep their own scratch arenas across
+    /// dispatches instead of rebuilding a context per task. Empty when
+    /// the session is unpartitioned.
+    shard_scratch: Vec<Ctx>,
     /// Last full-graph embeddings, reused by [`Session::run_batch`].
     cached_output: Option<Tensor>,
     runs: u64,
@@ -491,6 +520,37 @@ impl Session {
         self.policy = policy;
     }
 
+    /// The worker-pool cap this session installs around its runs
+    /// ([`SessionBuilder::threads`]); `None` inherits the process
+    /// default.
+    pub fn threads(&self) -> Option<usize> {
+        self.threads
+    }
+
+    /// Counter snapshot of the session's scratch arenas (the reusable
+    /// buffer pools behind steady-state zero-allocation dispatches),
+    /// aggregated across the per-shard contexts on a partitioned
+    /// session.
+    pub fn arena_stats(&self) -> crate::kernels::ArenaStats {
+        let mut total = self.scratch.arena.stats();
+        for ctx in &self.shard_scratch {
+            let s = ctx.arena.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.held += s.held;
+        }
+        total
+    }
+
+    /// Run `f` under this session's worker-pool cap (no-op wrapper when
+    /// the session has no explicit cap).
+    fn with_pool<R>(threads: Option<usize>, f: impl FnOnce() -> R) -> R {
+        match threads {
+            Some(t) => crate::parallel::with_threads(t, f),
+            None => f(),
+        }
+    }
+
     /// Run inference under the session policy.
     ///
     /// Whole-model backends (`caps().whole_model`) execute their fused
@@ -498,6 +558,11 @@ impl Session {
     /// and report an empty kernel profile; staged backends run the full
     /// scheduler with per-kernel attribution.
     pub fn run(&mut self) -> Result<SessionRun> {
+        let threads = self.threads;
+        Self::with_pool(threads, || self.run_unscoped())
+    }
+
+    fn run_unscoped(&mut self) -> Result<SessionRun> {
         let t0 = Instant::now();
         let run = if self.backend.caps().whole_model {
             match self.backend.run_full(&self.plan, &self.hg)? {
@@ -558,13 +623,16 @@ impl Session {
 
     /// Run only FP + NA (the Fig 5a/5b sweeps time NA in isolation).
     pub fn run_na_only(&mut self) -> Result<(Vec<Tensor>, Profile)> {
-        let out = exec::run_na_only(
-            self.backend.as_ref(),
-            &self.gpu,
-            &self.plan,
-            &self.hg,
-            &mut self.scratch,
-        )?;
+        let threads = self.threads;
+        let out = Self::with_pool(threads, || {
+            exec::run_na_only(
+                self.backend.as_ref(),
+                &self.gpu,
+                &self.plan,
+                &self.hg,
+                &mut self.scratch,
+            )
+        })?;
         self.runs += 1;
         Ok(out)
     }
@@ -591,7 +659,8 @@ impl Session {
     /// static-shape artifact subsumes any subgraph schedule.
     pub fn run_batch(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
         if self.sampler.is_some() && !self.backend.caps().whole_model {
-            return self.run_batch_sampled(node_ids);
+            let threads = self.threads;
+            return Self::with_pool(threads, || self.run_batch_sampled(node_ids));
         }
         if self.cached_output.is_none() {
             let run = self.run()?;
@@ -664,20 +733,30 @@ impl Session {
         // seed j is local row seed_rows[j] of the executed output;
         // duplicate ids in the batch collapse onto the same seed row
         let row_of = sampled.seed_row_map();
-        seeds
-            .iter()
-            .map(|g| {
-                let j = *row_of
-                    .get(g)
-                    .ok_or_else(|| Error::config(format!("seed {g} lost in sampling")))?;
-                Ok(run.output.row(j).to_vec())
-            })
-            .collect()
+        let mut out = Vec::with_capacity(seeds.len());
+        for g in &seeds {
+            let j = *row_of
+                .get(g)
+                .ok_or_else(|| Error::config(format!("seed {g} lost in sampling")))?;
+            out.push(run.output.row(j).to_vec());
+        }
+        self.recycle_run(run);
+        Ok(out)
+    }
+
+    /// Park a finished batch-run's stage outputs in the scratch arena so
+    /// the next dispatch checks them out instead of allocating — the
+    /// serving half of the steady-state zero-allocation contract.
+    fn recycle_run(&mut self, run: exec::StagedRun) {
+        self.scratch.arena.give(run.output.into_vec());
+        for t in run.na_results {
+            self.scratch.arena.give(t.into_vec());
+        }
     }
 
     /// The shard-affine batch path: split the (wrapped) seeds by owner
     /// shard, sample and execute each non-empty sub-batch — concurrently
-    /// on scoped threads when the backend is thread-safe — each against
+    /// on worker-pool tasks when the backend is thread-safe — each against
     /// its shard's own reuse-cache lane (contention-free because a
     /// sub-batch only ever touches its seed-owner's lane; interior nodes
     /// reached from several shards' seeds are cached per lane), then
@@ -703,40 +782,64 @@ impl Session {
         let gpu = &self.gpu;
         let policy = self.policy;
         let backend = self.backend.as_ref();
-        let mut work: Vec<(usize, &[u32], Option<&mut ReuseCache>)> = Vec::new();
-        for (s, lane) in lanes.iter_mut().enumerate() {
+        struct ShardWork<'a> {
+            group: &'a [u32],
+            cache: Option<&'a mut ReuseCache>,
+            scratch: &'a mut Ctx,
+        }
+        let mut work: Vec<ShardWork<'_>> = Vec::new();
+        for (s, (lane, ctx)) in
+            lanes.iter_mut().zip(self.shard_scratch.iter_mut()).enumerate()
+        {
             if !groups[s].is_empty() {
-                work.push((s, groups[s].as_slice(), lane.take()));
+                work.push(ShardWork {
+                    group: groups[s].as_slice(),
+                    cache: lane.take(),
+                    scratch: ctx,
+                });
             }
         }
         let results: Vec<Vec<(u32, Vec<f32>)>> = match self.backend.as_sync() {
-            Some(sync) if work.len() > 1 => std::thread::scope(|scope| {
-                let handles: Vec<_> = work
-                    .into_iter()
-                    .map(|(_, group, cache)| {
-                        scope.spawn(move || {
-                            shard_batch_task(
-                                &SyncAsExec(sync),
-                                hg,
-                                plan,
-                                gpu,
-                                policy,
-                                sampler,
-                                group,
-                                cache,
-                            )
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard batch worker panicked"))
-                    .collect::<Result<Vec<_>>>()
-            })?,
+            // concurrent sub-batches run as tasks on the shared worker
+            // pool (their kernels inline — the pool's nesting rule);
+            // each task takes its own mutable work item through a lock
+            Some(sync) if work.len() > 1 => {
+                let tasks: Vec<std::sync::Mutex<ShardWork<'_>>> =
+                    work.into_iter().map(std::sync::Mutex::new).collect();
+                crate::parallel::parallel_map(tasks.len(), |j| {
+                    let mut guard = tasks[j].lock().unwrap_or_else(|e| e.into_inner());
+                    let item: &mut ShardWork<'_> = &mut guard;
+                    let group = item.group;
+                    let cache = item.cache.take();
+                    shard_batch_task(
+                        &SyncAsExec(sync),
+                        hg,
+                        plan,
+                        gpu,
+                        policy,
+                        sampler,
+                        group,
+                        cache,
+                        &mut *item.scratch,
+                    )
+                })
+                .into_iter()
+                .collect::<Result<Vec<_>>>()?
+            }
             _ => work
                 .into_iter()
-                .map(|(_, group, cache)| {
-                    shard_batch_task(backend, hg, plan, gpu, policy, sampler, group, cache)
+                .map(|item| {
+                    shard_batch_task(
+                        backend,
+                        hg,
+                        plan,
+                        gpu,
+                        policy,
+                        sampler,
+                        item.group,
+                        item.cache,
+                        item.scratch,
+                    )
                 })
                 .collect::<Result<Vec<_>>>()?,
         };
@@ -844,9 +947,11 @@ impl Session {
 
 /// One shard-affine sub-batch of the partitioned serving path: sample
 /// the group's neighborhood (through the shard's reuse-cache lane when
-/// one is given) and execute it, returning seed → embedding-row pairs.
-/// A free function (not a closure) so the scoped-thread and inline call
-/// sites can pass differently-lived backends.
+/// one is given) and execute it against the shard's persistent kernel
+/// context (so its scratch arena recycles stage outputs across
+/// dispatches, like the unsharded path), returning seed →
+/// embedding-row pairs. A free function (not a closure) so the pooled
+/// and inline call sites can pass differently-lived backends.
 #[allow(clippy::too_many_arguments)]
 fn shard_batch_task(
     backend: &dyn ExecBackend,
@@ -857,12 +962,12 @@ fn shard_batch_task(
     sampler: &NeighborSampler,
     group: &[u32],
     cache: Option<&mut ReuseCache>,
+    scratch: &mut Ctx,
 ) -> Result<Vec<(u32, Vec<f32>)>> {
-    let mut scratch = backend.make_ctx();
     let (sampled, run) = match cache {
         Some(cache) => {
             let sampled = sampler.sample_with_cache(hg, plan, group, cache)?;
-            let run = exec::execute_reuse(backend, gpu, &sampled, policy, &mut scratch, cache)?;
+            let run = exec::execute_reuse(backend, gpu, &sampled, policy, scratch, cache)?;
             (sampled, run)
         }
         None => {
@@ -873,17 +978,23 @@ fn shard_batch_task(
                 &sampled.plan,
                 &sampled.graph,
                 policy,
-                &mut scratch,
+                scratch,
             )?;
             (sampled, run)
         }
     };
-    Ok(sampled
+    let rows = sampled
         .seeds
         .iter()
         .zip(&sampled.seed_rows)
         .map(|(&g, &r)| (g, run.output.row(r as usize).to_vec()))
-        .collect())
+        .collect();
+    // park the finished stage outputs for the next dispatch of this shard
+    scratch.arena.give(run.output.into_vec());
+    for t in run.na_results {
+        scratch.arena.give(t.into_vec());
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]

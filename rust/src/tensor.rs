@@ -100,6 +100,13 @@ impl Tensor {
         &self.data
     }
 
+    /// Consume the tensor, returning its backing buffer (how finished
+    /// stage outputs flow back into a [`crate::kernels::ScratchArena`]).
+    #[inline]
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Mutable raw buffer.
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {

@@ -1,0 +1,164 @@
+//! Integration tests for the intra-kernel parallel runtime: the worker
+//! pool's row-blocked kernels must be **bit-identical** to serial
+//! execution across every model, thread count, and composition with
+//! reuse caching and sharding — and the session's scratch arena must
+//! actually remove steady-state allocations from the serving path.
+//!
+//! Thread widths are installed via `SessionBuilder::threads`, which
+//! scopes the cap thread-locally around each run — so these tests never
+//! race each other through a process global.
+
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::parallel;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::session::{PartitionSpec, SchedulePolicy, ServeConfig, Session, SessionBuilder};
+
+fn ci_builder(model: ModelId) -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+}
+
+#[test]
+fn forward_bit_identical_across_models_and_threads() {
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let base = ci_builder(model).threads(1).build().unwrap().run().unwrap();
+        for t in [2usize, 4] {
+            let run = ci_builder(model).threads(t).build().unwrap().run().unwrap();
+            assert!(
+                run.output.allclose(&base.output, 0.0, 0.0),
+                "{model:?} output at {t} threads diverges from serial"
+            );
+            assert_eq!(run.na_results.len(), base.na_results.len());
+            for (i, (a, b)) in run.na_results.iter().zip(&base.na_results).enumerate() {
+                assert!(
+                    a.allclose(b, 0.0, 0.0),
+                    "{model:?} NA result {i} at {t} threads diverges from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_composes_with_worker_schedules() {
+    // intra-kernel parallelism under a parallel NA schedule: the pool's
+    // nesting rule inlines kernel parallelism inside NA worker tasks,
+    // and results stay bit-identical to the serial sequential schedule
+    let base = ci_builder(ModelId::Han).threads(1).build().unwrap().run().unwrap();
+    let mut s = ci_builder(ModelId::Han)
+        .schedule(SchedulePolicy::InterSubgraphParallel { workers: 4 })
+        .threads(4)
+        .build()
+        .unwrap();
+    let run = s.run().unwrap();
+    assert!(run.output.allclose(&base.output, 0.0, 0.0));
+}
+
+#[test]
+fn parallel_composes_with_sharding() {
+    // nested pool: shard tasks dispatch through the pool, kernels
+    // inside them inline — still bit-identical to the monolithic serial
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let base = ci_builder(model).threads(1).build().unwrap().run().unwrap();
+        let run = ci_builder(model)
+            .threads(4)
+            .partition(PartitionSpec::new(2).with_threads(2))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(
+            run.output.allclose(&base.output, 0.0, 0.0),
+            "{model:?} sharded output at 4 pool threads diverges from serial monolithic"
+        );
+    }
+}
+
+fn sampled_batches(threads: usize, shards: Option<usize>) -> Vec<Vec<Vec<f32>>> {
+    let mut builder = ci_builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .reuse(ReuseSpec::rows(1 << 12))
+        .threads(threads);
+    if let Some(k) = shards {
+        builder = builder.partition(PartitionSpec::new(k).with_threads(k));
+    }
+    let mut s = builder.build().unwrap();
+    let ids = [0u32, 5, 9, 1, 5, 3];
+    // two batches: the second hits the reuse caches
+    let out = vec![s.run_batch(&ids).unwrap(), s.run_batch(&ids).unwrap()];
+    // ...and draws its stage-output buffers from the scratch arena —
+    // including the per-shard contexts on a partitioned session
+    assert!(s.arena_stats().hits > 0, "warm dispatch must reuse arena buffers");
+    out
+}
+
+#[test]
+fn sampled_reuse_batches_bit_identical_across_threads_and_shards() {
+    let base = sampled_batches(1, None);
+    assert_eq!(base[0], base[1], "warm cached batch must reproduce the cold batch");
+    for t in [2usize, 4] {
+        assert_eq!(sampled_batches(t, None), base, "{t} pool threads diverge");
+    }
+    // composed with --shards 2: shard-affine sub-batches on the pool,
+    // one reuse-cache lane per shard
+    assert_eq!(sampled_batches(4, Some(2)), base, "sharded batches diverge");
+}
+
+#[test]
+fn serve_composes_with_threads() {
+    let server = ci_builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(8, 1))
+        .threads(2)
+        .serve(ServeConfig::default());
+    let replies: Vec<_> = (0..8u32).map(|i| server.submit(i).unwrap()).collect();
+    for rx in replies {
+        assert!(rx.recv().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 8);
+}
+
+#[test]
+fn scratch_arena_removes_steady_state_allocations() {
+    let mut s = ci_builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(8, 1))
+        .threads(1)
+        .build()
+        .unwrap();
+    let ids: Vec<u32> = (0..16).collect();
+    let _ = s.run_batch(&ids).unwrap();
+    let cold = s.arena_stats();
+    let _ = s.run_batch(&ids).unwrap();
+    let warm = s.arena_stats();
+    assert!(
+        warm.hits > cold.hits,
+        "second dispatch must draw tensors from the arena: {cold:?} -> {warm:?}"
+    );
+    // identical dispatches: every checkout the first warm dispatch
+    // misses has been parked by then, so misses stop growing entirely
+    let _ = s.run_batch(&ids).unwrap();
+    let steady = s.arena_stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state dispatches must not allocate fresh tensor buffers"
+    );
+}
+
+#[test]
+fn builder_threads_knob_clamps_and_reports() {
+    let s = ci_builder(ModelId::Han).threads(0).build().unwrap();
+    assert_eq!(s.threads(), Some(1), "threads(0) clamps to 1");
+    let s = ci_builder(ModelId::Han).build().unwrap();
+    assert_eq!(s.threads(), None, "default inherits the process pool width");
+}
+
+#[test]
+fn pool_default_width_is_positive() {
+    assert!(parallel::default_threads() >= 1);
+    assert!(parallel::current_threads() >= 1);
+    assert!(!parallel::in_parallel_region());
+}

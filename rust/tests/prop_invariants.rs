@@ -216,6 +216,25 @@ fn prop_gather_trace_rows_match_csr_indices() {
 }
 
 #[test]
+fn prop_parallel_spmm_bit_identical_to_serial() {
+    // the worker pool splits destination rows into blocks but never
+    // changes a row's accumulation order — outputs are bitwise equal
+    let strat = CsrStrategy { max_rows: 40, max_cols: 40, max_density: 0.3 };
+    check("parallel spmm == serial spmm (bitwise)", 31, 40, &strat, |csr| {
+        let mut rng = Pcg32::seeded(csr.nnz() as u64 + 5);
+        let x = Tensor::randn(csr.n_cols, 8, 1.0, &mut rng);
+        let run = |threads: usize| {
+            hgnn_char::parallel::with_threads(threads, || {
+                let mut ctx = Ctx::default();
+                spmm_csr(&mut ctx, csr, &x, None, SpmmReduce::Sum).unwrap()
+            })
+        };
+        let serial = run(1);
+        run(2).allclose(&serial, 0.0, 0.0) && run(4).allclose(&serial, 0.0, 0.0)
+    });
+}
+
+#[test]
 fn prop_dropout_is_subset_with_rate() {
     check("dropout subset", 22, CASES, &CsrStrategy::default(), |csr| {
         let mut rng = Pcg32::seeded(csr.n_rows as u64);
