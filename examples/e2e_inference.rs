@@ -79,6 +79,7 @@ fn main() -> hgnn_char::Result<()> {
     let server = builder.serve(ServeConfig {
         max_batch: 32,
         flush_after: std::time::Duration::from_millis(5),
+        ..ServeConfig::default()
     });
 
     let t0 = Instant::now();

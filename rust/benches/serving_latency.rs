@@ -1,0 +1,179 @@
+//! Bench: **async serving — open-loop tail latency vs offered load ×
+//! admission policy**.
+//!
+//! The serving question the async runtime answers: as offered load
+//! sweeps through and past capacity, what happens to the p99
+//! queue-to-reply latency — and what does admission control buy? Each
+//! cell offers an *open-loop* single-id request stream (submissions are
+//! paced by a target rate, never by completions — the regime where
+//! queues actually grow) against a synthetic executor with a fixed
+//! per-id cost, so capacity is known exactly and differences between
+//! cells are the runtime's doing. Expected qualitative trends:
+//!
+//! * p99 **degrades monotonically with offered load** under either
+//!   policy (more queueing → longer tails);
+//! * without admission the overloaded cell (2× capacity) queues
+//!   unboundedly and p99 grows with the experiment length, while
+//!   **with admission** (token bucket at capacity + bounded queue) the
+//!   excess is shed as typed rejects and p99 stays near the
+//!   bounded-queue drain time.
+//!
+//! Also reports the session-backed path (`serve_async` over sampled
+//! HAN batches) with two priority classes.
+//!
+//! Run: `cargo bench --bench serving_latency`
+
+use std::time::{Duration, Instant};
+
+use hgnn_char::bench::{header, sink};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::serving::{AsyncServer, ServingConfig, SubmitOpts};
+use hgnn_char::session::Session;
+use hgnn_char::util::human_time;
+use hgnn_char::Result;
+
+/// Synthetic per-id execution cost: capacity is exactly 1e6/30 ids/s.
+const COST_PER_ID_US: u64 = 30;
+
+fn delay_exec(ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+    std::thread::sleep(Duration::from_micros(COST_PER_ID_US * ids.len() as u64));
+    Ok(ids.iter().map(|&i| vec![i as f32]).collect())
+}
+
+/// One open-loop cell: pace `requests` single-id submissions at
+/// `offered` ids/s, then drain. Returns (p50_ns, p99_ns, reject rate).
+fn open_loop_cell(config: ServingConfig, offered: f64, requests: usize) -> (u64, u64, f64) {
+    let server = AsyncServer::start(config, delay_exec);
+    let interval = Duration::from_secs_f64(1.0 / offered);
+    let mut receivers = Vec::with_capacity(requests);
+    let mut rejected = 0usize;
+    let t0 = Instant::now();
+    for i in 0..requests {
+        // open loop: the next submission is due at i*interval whether or
+        // not anything has completed — rate pressure, not lockstep
+        let due = interval * i as u32;
+        let now = t0.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        match server.submit(&[i as u32], SubmitOpts::default()) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in receivers {
+        sink(rx.recv().ok());
+    }
+    let stats = server.shutdown();
+    let c = &stats.classes[0];
+    (c.p50_ns, c.p99_ns, rejected as f64 / requests as f64)
+}
+
+fn main() {
+    header(
+        "async serving: open-loop p99 vs offered load x admission policy",
+        "paced single-id streams against a fixed-cost executor; times are wall",
+    );
+    let quick = std::env::var("QUICK_BENCH").is_ok();
+    let requests = if quick { 250 } else { 1500 };
+    let capacity = 1e6 / COST_PER_ID_US as f64;
+    println!(
+        "executor: {COST_PER_ID_US} µs/id  =>  capacity {capacity:.0} ids/s  \
+         ({requests} requests per cell)\n"
+    );
+
+    let fractions = [0.2f64, 0.5, 1.0, 2.0];
+    let mut overload_p99 = [0u64; 2]; // [no admission, admission] at 2x
+    for (p, (policy, admission)) in
+        [("no admission (unbounded queue)", false), ("admission (bucket at capacity, queue 64)", true)]
+            .into_iter()
+            .enumerate()
+    {
+        println!("-- policy: {policy} --");
+        let mut prev_p99 = 0u64;
+        let mut monotone = true;
+        for &frac in &fractions {
+            let mut config = ServingConfig {
+                max_batch: 16,
+                flush_after: Duration::from_millis(1),
+                priority_lanes: 1,
+                queue_cap: usize::MAX / 2,
+                ..Default::default()
+            };
+            if admission {
+                config.queue_cap = 64;
+                config.admission_qps = Some(capacity);
+                config.admission_burst = Some(64.0);
+            }
+            let (p50, p99, reject) = open_loop_cell(config, capacity * frac, requests);
+            println!(
+                "  offered {frac:>3.1}x capacity   p50 {:>10}   p99 {:>10}   reject {:>5.1}%",
+                human_time(p50 as f64),
+                human_time(p99 as f64),
+                100.0 * reject
+            );
+            // allow 30% wall noise before declaring non-monotonicity
+            if (p99 as f64) < prev_p99 as f64 * 0.70 {
+                monotone = false;
+            }
+            prev_p99 = prev_p99.max(p99);
+            if frac == 2.0 {
+                overload_p99[p] = p99;
+            }
+        }
+        println!(
+            "  -> p99 non-decreasing with offered load: {}\n",
+            if monotone { "yes" } else { "NO (wall noise or regression)" }
+        );
+    }
+    println!(
+        "overload (2x) p99: no-admission {} vs admission {}  ->  admission bounds the tail: {}\n",
+        human_time(overload_p99[0] as f64),
+        human_time(overload_p99[1] as f64),
+        if overload_p99[1] < overload_p99[0] { "yes" } else { "NO (wall noise or regression)" }
+    );
+
+    // ---- session-backed path: sampled HAN batches, two classes -------
+    let batches: usize = if quick { 12 } else { 48 };
+    let server = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .serve_async(ServingConfig {
+            max_batch: 16,
+            flush_after: Duration::from_millis(1),
+            priority_lanes: 2,
+            ..Default::default()
+        });
+    let t0 = Instant::now();
+    let receivers: Vec<_> = (0..batches)
+        .filter_map(|i| {
+            let ids: Vec<u32> = (0..8u32).map(|k| (i * 8 + k as usize) as u32 % 97).collect();
+            server.submit(&ids, SubmitOpts::class(i % 2)).ok()
+        })
+        .collect();
+    for rx in receivers {
+        sink(rx.recv().ok());
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "session-backed (sampled HAN, IMDB ci): {} ids in {} dispatches in {:.1} ms",
+        stats.completed,
+        stats.batches,
+        wall.as_secs_f64() * 1e3
+    );
+    for c in stats.classes.iter().filter(|c| c.requests > 0) {
+        println!(
+            "  class {}: {} reqs  p50 {:>10}  p95 {:>10}  p99 {:>10}",
+            c.class,
+            c.requests,
+            human_time(c.p50_ns as f64),
+            human_time(c.p95_ns as f64),
+            human_time(c.p99_ns as f64)
+        );
+    }
+}

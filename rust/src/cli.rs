@@ -139,6 +139,44 @@ impl Args {
         Ok(Some(t))
     }
 
+    /// Serving-runtime tuning from `--deadline-ms D --priority-lanes P
+    /// --admission-qps Q --queue-cap C` (all optional; `None`/defaults
+    /// mean "feature off" / the [`crate::serving::ServingConfig`]
+    /// default). Zero (or non-positive QPS) is rejected at parse level,
+    /// mirroring `--shards`.
+    pub fn serve_tuning(&self) -> Result<ServeTuning> {
+        let mut tuning = ServeTuning::default();
+        if self.has("deadline-ms") {
+            let d = self.flag_usize("deadline-ms", 0)?;
+            if d == 0 {
+                return Err(Error::config("--deadline-ms must be >= 1"));
+            }
+            tuning.deadline_ms = Some(d as u64);
+        }
+        if self.has("priority-lanes") {
+            let p = self.flag_usize("priority-lanes", 0)?;
+            if p == 0 {
+                return Err(Error::config("--priority-lanes must be >= 1"));
+            }
+            tuning.priority_lanes = p;
+        }
+        if self.has("admission-qps") {
+            let q = self.flag_f64("admission-qps", 0.0)?;
+            if !q.is_finite() || q <= 0.0 {
+                return Err(Error::config("--admission-qps must be > 0"));
+            }
+            tuning.admission_qps = Some(q);
+        }
+        if self.has("queue-cap") {
+            let c = self.flag_usize("queue-cap", 0)?;
+            if c == 0 {
+                return Err(Error::config("--queue-cap must be >= 1"));
+            }
+            tuning.queue_cap = Some(c);
+        }
+        Ok(tuning)
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -153,6 +191,33 @@ impl Args {
                 }
                 Ok(crate::datasets::DatasetScale::factor(f))
             }
+        }
+    }
+}
+
+/// Serving-runtime tuning knobs parsed by [`Args::serve_tuning`].
+///
+/// `None` fields inherit the [`crate::serving::ServingConfig`] defaults;
+/// `priority_lanes` defaults to 1 (a single class, legacy behavior).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeTuning {
+    /// Per-request deadline in milliseconds (`--deadline-ms`).
+    pub deadline_ms: Option<u64>,
+    /// Number of priority classes (`--priority-lanes`).
+    pub priority_lanes: usize,
+    /// Token-bucket admission rate in node-ids/sec (`--admission-qps`).
+    pub admission_qps: Option<f64>,
+    /// Bounded submit-queue depth in requests (`--queue-cap`).
+    pub queue_cap: Option<usize>,
+}
+
+impl Default for ServeTuning {
+    fn default() -> Self {
+        ServeTuning {
+            deadline_ms: None,
+            priority_lanes: 1,
+            admission_qps: None,
+            queue_cap: None,
         }
     }
 }
@@ -189,6 +254,15 @@ COMMANDS:
                                    by owner shard, caches go per-shard
       [--shard-threads T]          threads driving the shards (default K)
       [--threads N]                intra-kernel worker-pool width
+      [--deadline-ms D]            per-request deadline; late requests
+                                   get a typed DeadlineExceeded reply
+      [--priority-lanes P]         priority classes (0 = most urgent);
+                                   demo round-robins submits over them
+      [--admission-qps Q]          token-bucket admission rate in node
+                                   ids/sec; over-rate submits are
+                                   rejected with a typed Overloaded
+      [--queue-cap C]              bounded submit queue depth (default
+                                   4096); overflow rejects as QueueFull
   help                           this text
 ";
 
@@ -362,6 +436,64 @@ mod tests {
         assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
         assert_eq!(a.flag_usize("reuse-cap", 0).unwrap(), 64);
         assert_eq!(a.partition().unwrap().unwrap().shards, 4);
+    }
+
+    #[test]
+    fn serve_tuning_defaults_and_values() {
+        // absent: all knobs inherit defaults
+        let t = parse("serve").serve_tuning().unwrap();
+        assert_eq!(t, ServeTuning::default());
+        assert_eq!(t.priority_lanes, 1);
+        assert_eq!(t.deadline_ms, None);
+        // all four knobs bind, both spellings
+        let t = parse(
+            "serve --deadline-ms 50 --priority-lanes=2 \
+             --admission-qps 500.5 --queue-cap=64",
+        )
+        .serve_tuning()
+        .unwrap();
+        assert_eq!(t.deadline_ms, Some(50));
+        assert_eq!(t.priority_lanes, 2);
+        assert_eq!(t.admission_qps, Some(500.5));
+        assert_eq!(t.queue_cap, Some(64));
+    }
+
+    #[test]
+    fn serve_tuning_rejects_degenerate_values() {
+        assert!(parse("serve --deadline-ms 0").serve_tuning().is_err());
+        assert!(parse("serve --priority-lanes=0").serve_tuning().is_err());
+        assert!(parse("serve --admission-qps 0").serve_tuning().is_err());
+        assert!(parse("serve --admission-qps=-5").serve_tuning().is_err());
+        assert!(parse("serve --admission-qps nan").serve_tuning().is_err());
+        assert!(parse("serve --queue-cap 0").serve_tuning().is_err());
+        // non-numeric values are parse errors, not silent defaults
+        assert!(parse("serve --deadline-ms nah").serve_tuning().is_err());
+        assert!(parse("serve --queue-cap nah").serve_tuning().is_err());
+        // bare switch (no value) rejected: "true" is not a number
+        assert!(parse("serve --deadline-ms").serve_tuning().is_err());
+    }
+
+    #[test]
+    fn serve_tuning_composes_with_serve_flags() {
+        let a = parse(
+            "serve --requests 64 --fanout 8 --batch 4 --reuse-cap 128 \
+             --shards 2 --deadline-ms 20 --priority-lanes 2 \
+             --admission-qps 1000 --queue-cap 256",
+        );
+        let t = a.serve_tuning().unwrap();
+        assert_eq!(t.deadline_ms, Some(20));
+        assert_eq!(t.priority_lanes, 2);
+        assert_eq!(t.admission_qps, Some(1000.0));
+        assert_eq!(t.queue_cap, Some(256));
+        assert_eq!(a.partition().unwrap().unwrap().shards, 2);
+        assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn usage_mentions_serve_tuning_flags() {
+        for flag in ["--deadline-ms", "--priority-lanes", "--admission-qps", "--queue-cap"] {
+            assert!(USAGE.contains(flag), "usage missing {flag}");
+        }
     }
 
     #[test]

@@ -1,155 +1,75 @@
-//! Batched inference serving loop — the end-to-end driver substrate.
+//! Batched inference serving loop — legacy synchronous facade.
 //!
-//! A minimal but real serving path in the vLLM-router mold: clients
-//! submit embedding requests for target nodes — singles
-//! ([`Server::submit`]) or typed batches ([`Server::submit_batch`]) —
-//! and a dispatcher thread batches them (size- and time-bounded dynamic
-//! batching over node ids) and hands each flattened batch to an
-//! executor. The canonical executor is a
-//! [`crate::session::Session`] built *inside* the dispatcher thread via
-//! [`Server::start_session`] — any backend (native or PJRT) × any
-//! schedule policy, with the plan, weights and compiled artifacts reused
-//! across batches instead of rebuilt per call. Python never appears on
-//! this path.
+//! [`Server`] keeps the original blocking API (`submit` /
+//! `submit_batch` / `shutdown`) but is now a thin shim over the async
+//! serving runtime in [`crate::serving`]: continuous batching against
+//! a live queue, deadline/priority scheduling, token-bucket admission
+//! and per-class latency sketches all live there. Requests submitted
+//! through this facade ride priority class 0 with no deadline; the one
+//! behavioral addition is the bounded queue
+//! ([`ServeConfig::queue_cap`]), surfaced here as a typed
+//! [`crate::Error::Serve`] instead of silent unbounded queueing.
+//! New code should use [`crate::serving::AsyncServer`] (or
+//! `SessionBuilder::serve_async`) directly.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::reuse::ReuseStats;
-use crate::session::{Session, SessionBuilder};
-use crate::util::stats::Summary;
+use crate::serving::server::ReplyTo;
+use crate::serving::{AsyncServer, ServingConfig, SubmitOpts};
+use crate::session::SessionBuilder;
 use crate::{Error, Result};
 
-/// An embedding request: one or more target node ids sharing a reply
-/// channel ([`Server::submit`] sends one id, [`Server::submit_batch`] a
-/// typed batch).
-#[derive(Debug)]
-pub struct Request {
-    /// Target node ids to embed (never empty).
-    pub node_ids: Vec<u32>,
-    /// Submission timestamp.
-    pub submitted: Instant,
-    /// Completion channel.
-    pub reply: Reply,
-}
+pub use crate::serving::{BatchExecutor, ClassStats, ServeError, ServeStats};
 
-/// The reply side of a [`Request`].
-#[derive(Debug)]
-pub enum Reply {
-    /// One embedding row ([`Server::submit`]).
-    Single(mpsc::Sender<Vec<f32>>),
-    /// All rows of the request, in submission order
-    /// ([`Server::submit_batch`]).
-    Batch(mpsc::Sender<Vec<Vec<f32>>>),
-}
-
-/// Dynamic batching configuration.
+/// Dynamic batching configuration (legacy shape; converts into
+/// [`ServingConfig`] with one priority class and no admission rate).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Maximum node ids per executor dispatch. The dispatcher stops
-    /// filling a batch once this many ids are queued; a flattened queue
-    /// that still exceeds it (a single oversized
-    /// [`Server::submit_batch`], or a last request overshooting the
-    /// fill) is **chunked into `max_batch`-sized dispatches** — so with
-    /// sampling configured, every executed subgraph stays batch-sized
-    /// instead of ballooning with the request. Each request's rows are
-    /// reassembled across chunks before its one reply is sent.
-    /// Shard-exposing executors ([`BatchExecutor::shards`] `> 1`) bound
-    /// dispatches at `max_batch` ids *per shard* instead, so concurrent
-    /// per-shard sub-batches stay batch-sized individually.
+    /// Maximum node ids per executor dispatch. A flattened wave that
+    /// exceeds it (a single oversized [`Server::submit_batch`], or a
+    /// last request overshooting the fill) is **chunked into
+    /// `max_batch`-sized dispatches** — so with sampling configured,
+    /// every executed subgraph stays batch-sized instead of ballooning
+    /// with the request. Shard-exposing executors
+    /// ([`BatchExecutor::shards`] `> 1`) bound dispatches at
+    /// `max_batch` ids *per shard* instead, so concurrent per-shard
+    /// sub-batches stay batch-sized individually.
     pub max_batch: usize,
     /// Maximum time the dispatcher waits to fill a batch.
     pub flush_after: Duration,
+    /// Bound on queued (admitted, not yet dispatched) node ids; beyond
+    /// it submissions fail with a typed error instead of queueing
+    /// unboundedly.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 32, flush_after: Duration::from_millis(2) }
+        ServeConfig {
+            max_batch: 32,
+            flush_after: Duration::from_millis(2),
+            queue_cap: 4096,
+        }
     }
 }
 
-/// Aggregate serving statistics. Counts are in node ids (embedding
-/// rows): a [`Server::submit_batch`] of `k` ids contributes `k` to
-/// `completed` but one latency sample.
-#[derive(Debug, Clone)]
-pub struct ServeStats {
-    /// Completed node-id count (embedding rows delivered).
-    pub completed: u64,
-    /// Executed dispatch count.
-    pub batches: u64,
-    /// End-to-end latency summary, one sample per request
-    /// (nanoseconds).
-    pub latency: Summary,
-    /// Embedding rows per second over the serving window.
-    pub throughput_rps: f64,
-    /// Mean node ids per dispatch.
-    pub mean_batch: f64,
-    /// Cumulative reuse-cache counters of the executor's session, when
-    /// it serves through cross-request reuse (`None` otherwise).
-    pub reuse: Option<ReuseStats>,
-}
-
-/// Batch executor: given the node ids of one batch, return one embedding
-/// row per id. Implemented over PJRT in the e2e example. Deliberately
-/// not `Send` — the executor lives entirely inside the dispatcher thread
-/// (constructed there via [`Server::start_with`]), which is what lets
-/// PJRT executables (Rc internals) serve requests.
-pub trait BatchExecutor {
-    /// Execute one batch.
-    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
-
-    /// Cumulative reuse-cache counters, when the executor serves through
-    /// a session with cross-request reuse enabled. The dispatcher
-    /// snapshots this after every batch into [`ServeStats::reuse`].
-    fn reuse_stats(&self) -> Option<ReuseStats> {
-        None
-    }
-
-    /// Number of shard-affine dispatch lanes this executor exposes.
-    /// When `> 1` the dispatcher sorts each flattened queue by
-    /// [`BatchExecutor::shard_of`] and dispatches **shard-grouped
-    /// rounds**: each `execute` call carries up to `max_batch` ids from
-    /// every shard, contiguous per shard, so a sessionized executor
-    /// splits it into per-shard sub-batches (each its own
-    /// `max_batch`-bounded sampled subgraph, each against its own
-    /// reuse-cache lane) and executes them concurrently. The default
-    /// (1) keeps plain FIFO `max_batch` chunking.
-    fn shards(&self) -> usize {
-        1
-    }
-
-    /// Owning shard-lane of a node id (only consulted when
-    /// [`BatchExecutor::shards`] `> 1`).
-    fn shard_of(&self, _node_id: u32) -> usize {
-        0
+impl From<ServeConfig> for ServingConfig {
+    fn from(c: ServeConfig) -> ServingConfig {
+        ServingConfig {
+            max_batch: c.max_batch,
+            flush_after: c.flush_after,
+            queue_cap: c.queue_cap,
+            priority_lanes: 1,
+            ..ServingConfig::default()
+        }
     }
 }
 
-impl<F> BatchExecutor for F
-where
-    F: FnMut(&[u32]) -> Result<Vec<Vec<f32>>>,
-{
-    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
-        self(node_ids)
-    }
-}
-
-/// The serving coordinator: owns the dispatcher thread.
+/// The legacy serving coordinator: a blocking facade over
+/// [`AsyncServer`]. Owns the dispatcher thread through it.
 pub struct Server {
-    tx: Option<mpsc::Sender<Request>>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    stats: Arc<Mutex<RawStats>>,
-    started: Instant,
-}
-
-#[derive(Debug, Default)]
-struct RawStats {
-    completed: u64,
-    batches: u64,
-    latencies_ns: Vec<f64>,
-    batch_sizes: Vec<usize>,
-    reuse: Option<ReuseStats>,
+    inner: AsyncServer,
 }
 
 impl Server {
@@ -167,178 +87,7 @@ impl Server {
         E: BatchExecutor + 'static,
         F: FnOnce() -> E + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let stats = Arc::new(Mutex::new(RawStats::default()));
-        let stats_w = Arc::clone(&stats);
-        let handle = std::thread::spawn(move || {
-            let mut executor = make_executor();
-            let mut pending: Vec<Request> = Vec::new();
-            loop {
-                // block for the first request of a batch
-                let first = if pending.is_empty() {
-                    match rx.recv() {
-                        Ok(r) => Some(r),
-                        Err(_) => None, // channel closed: drain and exit
-                    }
-                } else {
-                    None
-                };
-                if let Some(r) = first {
-                    pending.push(r);
-                } else if pending.is_empty() {
-                    break;
-                }
-                // fill the dispatch until max_batch *ids* are queued or
-                // flush_after expires
-                let deadline = Instant::now() + config.flush_after;
-                let mut queued: usize = pending.iter().map(|r| r.node_ids.len()).sum();
-                while queued < config.max_batch {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(r) => {
-                            queued += r.node_ids.len();
-                            pending.push(r);
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                // execute the queued ids: a flattened queue can exceed
-                // max_batch (one oversized submit_batch, or a last
-                // request overshooting the fill). Single-lane executors
-                // take the direct path — max_batch-sized chunks in
-                // queue order, so every sampled subgraph stays
-                // batch-sized. Shard-exposing executors get
-                // shard-grouped *rounds*: each dispatch carries up to
-                // max_batch ids from EVERY shard (ids sorted by owner),
-                // so the sessionized executor splits it into per-shard
-                // sub-batches — each its own max_batch-bounded sampled
-                // subgraph — and executes them concurrently. Either
-                // way, each request's rows are reassembled before its
-                // one reply.
-                let batch: Vec<Request> = std::mem::take(&mut pending);
-                let ids: Vec<u32> =
-                    batch.iter().flat_map(|r| r.node_ids.iter().copied()).collect();
-                let cap = config.max_batch.max(1);
-                let lanes = executor.shards().max(1);
-                // group positions by owner shard before the executor is
-                // mutably borrowed by dispatching
-                let groups: Option<Vec<Vec<usize>>> = (lanes > 1).then(|| {
-                    let mut g: Vec<Vec<usize>> = vec![Vec::new(); lanes];
-                    for (pos, &id) in ids.iter().enumerate() {
-                        g[executor.shard_of(id).min(lanes - 1)].push(pos);
-                    }
-                    g
-                });
-                // one executor dispatch; records stats, None on failure
-                let mut run_chunk = |chunk_ids: &[u32]| -> Option<Vec<Vec<f32>>> {
-                    match executor.execute(chunk_ids) {
-                        Ok(r) if r.len() == chunk_ids.len() => {
-                            let mut s = stats_w.lock().unwrap();
-                            s.batches += 1;
-                            s.batch_sizes.push(chunk_ids.len());
-                            Some(r)
-                        }
-                        Ok(r) => {
-                            eprintln!(
-                                "serve: executor returned {} rows for {} ids",
-                                r.len(),
-                                chunk_ids.len()
-                            );
-                            None
-                        }
-                        Err(e) => {
-                            eprintln!("serve: batch execution failed: {e}");
-                            None
-                        }
-                    }
-                };
-                let mut rows: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
-                let mut failed = false;
-                match groups {
-                    Some(groups) => {
-                        let rounds = groups
-                            .iter()
-                            .map(|g| g.len().div_ceil(cap))
-                            .max()
-                            .unwrap_or(0);
-                        let mut slots: Vec<Option<Vec<f32>>> =
-                            ids.iter().map(|_| None).collect();
-                        for round in 0..rounds {
-                            let chunk: Vec<usize> = groups
-                                .iter()
-                                .flat_map(|g| {
-                                    g.iter().skip(round * cap).take(cap).copied()
-                                })
-                                .collect();
-                            let chunk_ids: Vec<u32> =
-                                chunk.iter().map(|&p| ids[p]).collect();
-                            match run_chunk(&chunk_ids) {
-                                Some(got) => {
-                                    for (&p, row) in chunk.iter().zip(got) {
-                                        slots[p] = Some(row);
-                                    }
-                                }
-                                None => {
-                                    failed = true;
-                                    break;
-                                }
-                            }
-                        }
-                        if !failed {
-                            rows = slots
-                                .into_iter()
-                                .map(|r| r.expect("every position dispatched"))
-                                .collect();
-                        }
-                    }
-                    None => {
-                        // the common single-lane hot path: no grouping,
-                        // no position indirection
-                        for chunk in ids.chunks(cap) {
-                            match run_chunk(chunk) {
-                                Some(mut got) => rows.append(&mut got),
-                                None => {
-                                    failed = true;
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                }
-                if failed {
-                    // drop the whole flattened batch; clients see a
-                    // closed channel — but cache activity from the
-                    // chunks that did run still reaches the stats
-                    stats_w.lock().unwrap().reuse = executor.reuse_stats();
-                    continue;
-                }
-                let done = Instant::now();
-                let mut s = stats_w.lock().unwrap();
-                s.reuse = executor.reuse_stats();
-                let mut rows = rows.into_iter();
-                for req in batch {
-                    let take = req.node_ids.len();
-                    s.completed += take as u64;
-                    s.latencies_ns
-                        .push(done.duration_since(req.submitted).as_nanos() as f64);
-                    match req.reply {
-                        Reply::Single(tx) => {
-                            if let Some(row) = rows.next() {
-                                let _ = tx.send(row);
-                            }
-                        }
-                        Reply::Batch(tx) => {
-                            let _ = tx.send(rows.by_ref().take(take).collect());
-                        }
-                    }
-                }
-            }
-        });
-        Server { tx: Some(tx), handle: Some(handle), stats, started: Instant::now() }
+        Server { inner: AsyncServer::start_with(config.into(), make_executor) }
     }
 
     /// Start the dispatcher around a [`crate::session::Session`] built
@@ -359,19 +108,17 @@ impl Server {
     /// server executes, and their counters surface in
     /// [`ServeStats::reuse`].
     pub fn start_session(config: ServeConfig, builder: SessionBuilder) -> Server {
-        Self::start_with(config, move || SessionExecutor {
-            session: builder.build().map_err(|e| e.to_string()),
-        })
+        Server { inner: AsyncServer::start_session(config.into(), builder) }
     }
 
-    /// Submit a single-node request; returns the reply receiver.
+    /// Submit a single-node request; returns the reply receiver. Fails
+    /// with [`Error::Serve`] if the bounded queue is full or the server
+    /// has stopped.
     pub fn submit(&self, node_id: u32) -> Result<mpsc::Receiver<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
-        self.send(Request {
-            node_ids: vec![node_id],
-            submitted: Instant::now(),
-            reply: Reply::Single(reply),
-        })?;
+        self.inner
+            .submit_reply(&[node_id], SubmitOpts::default(), ReplyTo::Single(reply))
+            .map_err(Error::Serve)?;
         Ok(rx)
     }
 
@@ -385,110 +132,20 @@ impl Server {
             return Err(Error::config("submit_batch: empty batch"));
         }
         let (reply, rx) = mpsc::channel();
-        self.send(Request {
-            node_ids: node_ids.to_vec(),
-            submitted: Instant::now(),
-            reply: Reply::Batch(reply),
-        })?;
+        self.inner
+            .submit_reply(node_ids, SubmitOpts::default(), ReplyTo::Rows(reply))
+            .map_err(Error::Serve)?;
         Ok(rx)
-    }
-
-    fn send(&self, req: Request) -> Result<()> {
-        self.tx
-            .as_ref()
-            .ok_or_else(|| Error::Runtime("server stopped".into()))?
-            .send(req)
-            .map_err(|_| Error::Runtime("dispatcher gone".into()))
     }
 
     /// Snapshot of the current statistics without stopping the server.
     pub fn stats_snapshot(&self) -> ServeStats {
-        let elapsed = self.started.elapsed().as_secs_f64();
-        Self::mk_stats(&self.stats.lock().unwrap(), elapsed)
-    }
-
-    fn mk_stats(s: &RawStats, elapsed: f64) -> ServeStats {
-        ServeStats {
-            completed: s.completed,
-            batches: s.batches,
-            latency: Summary::of(&s.latencies_ns),
-            throughput_rps: if elapsed > 0.0 { s.completed as f64 / elapsed } else { 0.0 },
-            mean_batch: if s.batch_sizes.is_empty() {
-                0.0
-            } else {
-                s.batch_sizes.iter().sum::<usize>() as f64 / s.batch_sizes.len() as f64
-            },
-            reuse: s.reuse.clone(),
-        }
-    }
-
-    /// Stop accepting requests, drain the queue, and join the
-    /// dispatcher. Idempotent with [`Drop`]: `shutdown` after an
-    /// implicit drop-join returns whatever completed.
-    fn stop(&mut self) {
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.inner.stats_snapshot()
     }
 
     /// Stop accepting requests, drain, and return final statistics.
-    pub fn shutdown(mut self) -> ServeStats {
-        self.stop();
-        let elapsed = self.started.elapsed().as_secs_f64();
-        let s = self.stats.lock().unwrap();
-        Self::mk_stats(&s, elapsed)
-    }
-}
-
-impl Drop for Server {
-    /// Dropping a server without calling [`Server::shutdown`] still
-    /// drains in-flight requests and joins the dispatcher — no detached
-    /// thread, no lost replies.
-    fn drop(&mut self) {
-        self.stop();
-    }
-}
-
-/// The canonical executor behind [`Server::start_session`]: a session
-/// built inside the dispatcher thread (or the build error every batch
-/// will report). Exposes the session's reuse counters to the stats
-/// plumbing, which a plain closure executor cannot.
-struct SessionExecutor {
-    session: std::result::Result<Session, String>,
-}
-
-impl BatchExecutor for SessionExecutor {
-    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
-        match self.session.as_mut() {
-            Ok(s) => s.run_batch(node_ids),
-            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
-        }
-    }
-
-    fn reuse_stats(&self) -> Option<ReuseStats> {
-        self.session.as_ref().ok().and_then(|s| s.reuse_stats())
-    }
-
-    /// Shard-affine dispatch applies only on the sampled batch path: a
-    /// partitioned session without sampling serves from the cached
-    /// full-graph forward, where grouping would only fragment dispatches.
-    fn shards(&self) -> usize {
-        self.session
-            .as_ref()
-            .ok()
-            .filter(|s| s.sampling().is_some())
-            .and_then(|s| s.partition())
-            .map(|p| p.num_shards())
-            .unwrap_or(1)
-    }
-
-    fn shard_of(&self, node_id: u32) -> usize {
-        self.session
-            .as_ref()
-            .ok()
-            .and_then(|s| s.shard_of(node_id))
-            .unwrap_or(0)
+    pub fn shutdown(self) -> ServeStats {
+        self.inner.shutdown()
     }
 }
 
@@ -515,7 +172,11 @@ mod tests {
     #[test]
     fn batches_multiple_requests() {
         let server = Server::start(
-            ServeConfig { max_batch: 8, flush_after: Duration::from_millis(50) },
+            ServeConfig {
+                max_batch: 8,
+                flush_after: Duration::from_millis(50),
+                ..ServeConfig::default()
+            },
             echo_executor,
         );
         let rxs: Vec<_> = (0..8).map(|i| server.submit(i).unwrap()).collect();
@@ -548,7 +209,11 @@ mod tests {
     #[test]
     fn submit_batch_and_singles_share_a_dispatch() {
         let server = Server::start(
-            ServeConfig { max_batch: 16, flush_after: Duration::from_millis(50) },
+            ServeConfig {
+                max_batch: 16,
+                flush_after: Duration::from_millis(50),
+                ..ServeConfig::default()
+            },
             echo_executor,
         );
         let single = server.submit(7).unwrap();
@@ -582,7 +247,11 @@ mod tests {
     #[test]
     fn oversized_batch_chunks_into_max_batch_dispatches() {
         let server = Server::start(
-            ServeConfig { max_batch: 4, flush_after: Duration::from_millis(1) },
+            ServeConfig {
+                max_batch: 4,
+                flush_after: Duration::from_millis(1),
+                ..ServeConfig::default()
+            },
             echo_executor,
         );
         let ids: Vec<u32> = (0..13).collect();
@@ -609,7 +278,11 @@ mod tests {
         // closed channel, not a partial reply
         let mut calls = 0;
         let server = Server::start(
-            ServeConfig { max_batch: 4, flush_after: Duration::from_millis(1) },
+            ServeConfig {
+                max_batch: 4,
+                flush_after: Duration::from_millis(1),
+                ..ServeConfig::default()
+            },
             move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
                 calls += 1;
                 if calls > 1 {
@@ -655,6 +328,43 @@ mod tests {
     }
 
     #[test]
+    fn queue_cap_rejects_with_typed_error() {
+        // an executor that blocks forever on a gate, so queued ids pile
+        // up; the 4th id must be refused with Error::Serve(QueueFull)
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+        let server = Server::start_with(
+            ServeConfig {
+                max_batch: 1,
+                flush_after: Duration::from_millis(1),
+                queue_cap: 3,
+            },
+            move || {
+                move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+                    let _ = entered_tx.send(());
+                    let _ = gate_rx.recv();
+                    Ok(ids.iter().map(|&i| vec![i as f32]).collect())
+                }
+            },
+        );
+        let _first = server.submit(0).unwrap();
+        entered_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        for i in 1..=3 {
+            server.submit(i).unwrap();
+        }
+        match server.submit(4) {
+            Err(Error::Serve(ServeError::QueueFull { queued: 3, cap: 3 })) => {}
+            other => panic!("expected QueueFull, got {:?}", other.err()),
+        }
+        for _ in 0..4 {
+            let _ = gate_tx.send(());
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.rejected_queue_full, 1);
+    }
+
+    #[test]
     fn throughput_accounting() {
         let server = Server::start(ServeConfig::default(), echo_executor);
         for i in 0..50 {
@@ -669,7 +379,7 @@ mod tests {
     #[test]
     fn drop_joins_dispatcher_and_drains() {
         // dropping without shutdown() must still deliver every pending
-        // reply — Drop closes the channel and joins the dispatcher
+        // reply — Drop closes the loop and joins the dispatcher
         let server = Server::start(ServeConfig::default(), echo_executor);
         let rxs: Vec<_> = (0..20).map(|i| server.submit(i).unwrap()).collect();
         drop(server);

@@ -85,6 +85,7 @@ pub mod report;
 pub mod reuse;
 pub mod runtime;
 pub mod sampler;
+pub mod serving;
 pub mod session;
 pub mod tensor;
 pub mod testutil;
@@ -101,6 +102,10 @@ pub enum Error {
     NotFound(String),
     /// PJRT runtime failures (compile/execute/transfer).
     Runtime(String),
+    /// Typed serving-runtime failures (admission rejects, deadline
+    /// expiry, stopped server) surfaced through the legacy blocking
+    /// serve API.
+    Serve(serving::ServeError),
     /// I/O failures (artifact files, report output).
     Io(std::io::Error),
 }
@@ -112,6 +117,7 @@ impl std::fmt::Display for Error {
             Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
             Error::NotFound(msg) => write!(f, "not found: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime: {msg}"),
+            Error::Serve(e) => write!(f, "serving: {e}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -121,6 +127,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::Serve(e) => Some(e),
             _ => None,
         }
     }
@@ -129,6 +136,12 @@ impl std::error::Error for Error {
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Error {
         Error::Io(e)
+    }
+}
+
+impl From<serving::ServeError> for Error {
+    fn from(e: serving::ServeError) -> Error {
+        Error::Serve(e)
     }
 }
 
@@ -159,11 +172,14 @@ pub mod prelude {
     pub use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
     pub use crate::metapath::{Metapath, SubgraphSet};
     pub use crate::parallel::{self, PoolStats};
-    pub use crate::partition::{Partition, PartitionSpec, ShardingInfo};
+    pub use crate::partition::{Partition, PartitionSpec, ShardMap, ShardingInfo};
     pub use crate::profiler::{Profile, StageId};
     pub use crate::report;
     pub use crate::reuse::{ReuseCache, ReuseSpec, ReuseStats};
     pub use crate::sampler::{NeighborSampler, SampledSubgraph, SamplingSpec};
+    pub use crate::serving::{
+        AsyncServer, BatchReply, ServeError, ServingConfig, SubmitOpts,
+    };
     pub use crate::tensor::Tensor;
     pub use crate::{Error, Result};
     // The execution surface: Session + backends + policies.
@@ -184,6 +200,18 @@ mod error_tests {
         assert_eq!(Error::shape("y").to_string(), "shape mismatch: y");
         assert_eq!(Error::NotFound("z".into()).to_string(), "not found: z");
         assert_eq!(Error::Runtime("r".into()).to_string(), "runtime: r");
+        assert_eq!(
+            Error::Serve(serving::ServeError::Stopped).to_string(),
+            "serving: server stopped"
+        );
+    }
+
+    #[test]
+    fn serve_conversion_and_source() {
+        use std::error::Error as StdError;
+        let e: Error = serving::ServeError::QueueFull { queued: 2, cap: 1 }.into();
+        assert!(matches!(&e, Error::Serve(_)));
+        assert!(e.source().is_some());
     }
 
     #[test]

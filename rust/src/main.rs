@@ -13,8 +13,12 @@ use hgnn_char::models::{self, ModelId};
 use hgnn_char::profiler::StageId;
 use hgnn_char::report;
 use hgnn_char::runtime::PjrtRuntime;
-use hgnn_char::session::{Profiling, SamplingSpec, SchedulePolicy, ServeConfig, Session};
+use hgnn_char::session::{
+    Profiling, SamplingSpec, SchedulePolicy, ServingConfig, Session, SubmitOpts,
+};
+use hgnn_char::util::human_time;
 use hgnn_char::Result;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -364,33 +368,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
-    let server = builder.serve(ServeConfig::default());
+    // serving-runtime tuning: deadlines, priority classes, admission
+    let tuning = args.serve_tuning()?;
+    let mut config = ServingConfig { priority_lanes: tuning.priority_lanes, ..Default::default() };
+    if let Some(ms) = tuning.deadline_ms {
+        config.default_deadline = Some(Duration::from_millis(ms));
+        println!("deadline: {ms} ms per request (late requests fail typed)");
+    }
+    if let Some(qps) = tuning.admission_qps {
+        config.admission_qps = Some(qps);
+        println!("admission control: token bucket at {qps:.0} ids/s");
+    }
+    if let Some(cap) = tuning.queue_cap {
+        config.queue_cap = cap;
+    }
+    if tuning.priority_lanes > 1 {
+        println!(
+            "priority classes: {} (demo round-robins submissions over them)",
+            tuning.priority_lanes
+        );
+    }
+    let server = builder.serve_async(config);
     let ids: Vec<u32> = (0..n as u32).collect();
-    if batch > 1 {
-        let receivers: Vec<_> = ids
-            .chunks(batch)
-            .map(|c| server.submit_batch(c))
-            .collect::<Result<_>>()?;
-        for rx in receivers {
-            let _ = rx.recv();
+    let mut receivers = Vec::new();
+    let (mut rejected, mut failed) = (0u64, 0u64);
+    for (i, chunk) in ids.chunks(batch).enumerate() {
+        match server.submit(chunk, SubmitOpts::class(i % tuning.priority_lanes)) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
         }
-    } else {
-        let receivers: Vec<_> = ids.iter().map(|&i| server.submit(i)).collect::<Result<_>>()?;
-        for rx in receivers {
-            let _ = rx.recv();
+    }
+    let mut ok = 0u64;
+    for rx in receivers {
+        match rx.recv() {
+            Ok(Ok(_rows)) => ok += 1,
+            _ => failed += 1,
         }
     }
     let stats = server.shutdown();
     println!(
-        "served {} requests in {} batches (mean batch {:.1}), p50 latency {}, throughput {:.0} req/s",
+        "served {} ids in {} dispatches (mean batch {:.1}), p50 latency {}, throughput {:.0} ids/s",
         stats.completed,
         stats.batches,
         stats.mean_batch,
-        hgnn_char::util::human_time(stats.latency.median),
+        human_time(stats.latency.median),
         stats.throughput_rps
     );
+    println!("requests: {ok} ok, {failed} failed, {rejected} rejected at submit");
+    if stats.rejected_overloaded + stats.rejected_queue_full + stats.expired > 0 {
+        println!(
+            "shed load: {} overloaded, {} queue-full, {} expired in queue (peak queue {})",
+            stats.rejected_overloaded, stats.rejected_queue_full, stats.expired, stats.peak_queued
+        );
+    }
+    for c in stats.classes.iter().filter(|c| c.submitted > 0 || c.rejected > 0) {
+        println!(
+            "  class {}: {} reqs, {:.0} ids/s, p50 {} / p95 {} / p99 {}",
+            c.class,
+            c.requests,
+            c.qps,
+            human_time(c.p50_ns as f64),
+            human_time(c.p95_ns as f64),
+            human_time(c.p99_ns as f64)
+        );
+    }
     if let Some(r) = &stats.reuse {
         println!("{}", r.line());
+    }
+    if !stats.reuse_lanes.is_empty() {
+        println!("{}", hgnn_char::reuse::lane_lines(&stats.reuse_lanes));
     }
     Ok(())
 }

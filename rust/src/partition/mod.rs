@@ -156,6 +156,44 @@ impl Shard {
     }
 }
 
+/// Shard ownership of one node type as a plain owner table — cheap to
+/// clone out of a [`Partition`] and safe to share across threads
+/// (unlike the partition, which is pinned to the executor thread).
+/// Node ids outside the table map to shard 0.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    owners: Vec<u32>,
+    shards: usize,
+}
+
+impl ShardMap {
+    /// Owning shard lane of `node`. Ids wrap modulo the table length —
+    /// the same wrap `Session::run_batch` (and so the serving executor)
+    /// applies — so submit-side lane accounting agrees with where the
+    /// dispatcher actually routes the id. 0 on an empty table.
+    pub fn shard_of(&self, node: u32) -> usize {
+        if self.owners.is_empty() {
+            return 0;
+        }
+        self.owners[node as usize % self.owners.len()] as usize
+    }
+
+    /// Number of shard lanes.
+    pub fn num_shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Number of nodes in the table.
+    pub fn len(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Whether the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.owners.is_empty()
+    }
+}
+
 /// The materialized K-way partition of one (graph, plan) pair, cached by
 /// `SessionBuilder::partition` and reused across every run and served
 /// batch of the session.
@@ -326,6 +364,18 @@ impl Partition {
         self.owners[ty][node as usize] as usize
     }
 
+    /// A `Send + Sync` snapshot of the ownership table for one node
+    /// type. The serving runtime publishes this from the dispatcher
+    /// thread so the *submit* side can account queued ids per shard
+    /// lane (the [`Partition`] itself lives inside the non-`Send`
+    /// executor). Out-of-range types yield an empty map.
+    pub fn shard_map(&self, ty: usize) -> ShardMap {
+        ShardMap {
+            owners: self.owners.get(ty).cloned().unwrap_or_default(),
+            shards: self.num_shards(),
+        }
+    }
+
     /// Per-shard modeled NA costs (LPT input for thread packing).
     pub fn shard_costs(&self) -> &[f64] {
         &self.costs
@@ -430,6 +480,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shard_map_mirrors_owner_of() {
+        let (hg, plan) = imdb(ModelId::Han);
+        let part = Partition::build(&hg, &plan, &PartitionSpec::new(3)).unwrap();
+        for (ty, t) in hg.node_types().iter().enumerate() {
+            let map = part.shard_map(ty);
+            assert_eq!(map.num_shards(), 3);
+            assert_eq!(map.len(), t.count);
+            for node in 0..t.count as u32 {
+                assert_eq!(map.shard_of(node), part.owner_of(ty, node));
+            }
+        }
+        // out-of-range type is total, not a panic
+        let empty = part.shard_map(999);
+        assert!(empty.is_empty());
+        assert_eq!(empty.shard_of(0), 0);
+        // ids wrap modulo the table length, like Session::run_batch
+        let map = part.shard_map(0);
+        let n = map.len() as u32;
+        assert_eq!(map.shard_of(u32::MAX), part.owner_of(0, u32::MAX % n));
+        // the map is Send + Sync (what the serving submit side needs)
+        fn assert_send_sync<T: Send + Sync>(_: &T) {}
+        assert_send_sync(&part.shard_map(0));
     }
 
     #[test]

@@ -170,6 +170,19 @@ impl ReuseStats {
     }
 }
 
+/// Render per-shard-lane counter snapshots, one line per lane — the
+/// serving runtime surfaces these so lane-level imbalance (one hot
+/// shard monopolizing its cache) is visible, not averaged away in the
+/// aggregate [`ReuseStats::line`].
+pub fn lane_lines(lanes: &[ReuseStats]) -> String {
+    lanes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("  lane {i}: {}", s.line()))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 fn rate(hits: u64, misses: u64) -> f64 {
     let total = hits + misses;
     if total == 0 {
@@ -402,6 +415,17 @@ impl ReuseCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lane_lines_renders_one_line_per_lane() {
+        let a = ReuseStats { proj_hits: 3, proj_misses: 1, ..Default::default() };
+        let b = ReuseStats { agg_hits: 2, ..Default::default() };
+        let out = lane_lines(&[a, b]);
+        assert_eq!(out.lines().count(), 2);
+        assert!(out.contains("lane 0: reuse: proj 3/4"));
+        assert!(out.contains("lane 1:"));
+        assert_eq!(lane_lines(&[]), "");
+    }
 
     #[test]
     fn spec_constructors() {

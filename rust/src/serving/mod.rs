@@ -1,0 +1,268 @@
+//! Async serving runtime: continuous batching, admission control and
+//! deadline-aware dispatch.
+//!
+//! This subsystem replaces the synchronous [`crate::coordinator::serve`]
+//! dispatcher (which still exists as a thin shim over it) with a real
+//! server loop:
+//!
+//! * **Continuous batching** — the dispatcher forms one *wave* at a
+//!   time against the live queue. A wave closes on size (enough ids to
+//!   fill every shard lane) or timeout (`flush_after` from the oldest
+//!   pending request), whichever comes first; between waves the queue
+//!   is re-read, so newly arrived or newly urgent requests join the
+//!   next wave instead of waiting out a frozen lockstep round.
+//! * **Deadline/priority scheduling** — requests carry an optional
+//!   deadline and a priority class. Classes are served in strict
+//!   priority order; within a class, earliest-deadline-first with FIFO
+//!   tie-break (so a large batch cannot be starved by later
+//!   singletons). Requests whose deadline passes while queued are
+//!   failed fast with [`ServeError::DeadlineExceeded`] instead of
+//!   wasting executor capacity.
+//! * **Admission control** — a token-bucket (metered in node ids)
+//!   plus a bounded queue and per-shard-lane in-flight accounting shed
+//!   excess load at submit time with typed errors
+//!   ([`ServeError::Overloaded`], [`ServeError::QueueFull`]) rather
+//!   than queueing unboundedly.
+//! * **Per-class telemetry** — [`ServeStats`] reports per-priority-
+//!   class QPS and p50/p95/p99 latency from a streaming
+//!   [`crate::util::stats::QuantileSketch`].
+//!
+//! Every timed decision goes through the [`Clock`] trait, so the whole
+//! loop can be driven by the deterministic `testutil::VirtualClock`.
+
+pub mod admission;
+pub mod clock;
+pub mod server;
+
+pub use admission::TokenBucket;
+pub use clock::{Clock, Nanos, SystemClock};
+pub use server::{AsyncServer, BatchExecutor, BatchReply};
+
+use crate::util::Summary;
+use std::time::Duration;
+
+/// Configuration for the async serving runtime.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Per-lane dispatch size: a wave closes once `max_batch × lanes`
+    /// ids are pending, and each executor call carries at most
+    /// `max_batch` ids.
+    pub max_batch: usize,
+    /// Maximum time a wave stays open waiting to fill, measured from
+    /// the oldest pending request's arrival.
+    pub flush_after: Duration,
+    /// Bound on queued (admitted, not yet dispatched) node ids; beyond
+    /// it submissions fail with [`ServeError::QueueFull`].
+    pub queue_cap: usize,
+    /// Bound on queued + in-flight ids per shard lane; beyond it
+    /// submissions touching that lane fail with
+    /// [`ServeError::Overloaded`]. `None` = `queue_cap` (effectively
+    /// no extra per-lane bound).
+    pub lane_cap: Option<usize>,
+    /// Token-bucket admission rate in node ids per second; `None`
+    /// disables rate admission.
+    pub admission_qps: Option<f64>,
+    /// Token-bucket burst in ids. `None` = `max(admission_qps,
+    /// max_batch)`, i.e. at least one full dispatch.
+    pub admission_burst: Option<f64>,
+    /// Number of priority classes (≥ 1). Class 0 is served first.
+    pub priority_lanes: usize,
+    /// Deadline applied to submissions that do not carry their own.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 32,
+            flush_after: Duration::from_millis(2),
+            queue_cap: 4096,
+            lane_cap: None,
+            admission_qps: None,
+            admission_burst: None,
+            priority_lanes: 2,
+            default_deadline: None,
+        }
+    }
+}
+
+/// Per-submission options: priority class and deadline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOpts {
+    /// Priority class, 0 = highest. Clamped to the configured number
+    /// of [`ServingConfig::priority_lanes`].
+    pub class: usize,
+    /// Relative deadline from submission; `None` falls back to
+    /// [`ServingConfig::default_deadline`] (or no deadline at all).
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOpts {
+    /// Options for a given priority class.
+    pub fn class(class: usize) -> SubmitOpts {
+        SubmitOpts { class, deadline: None }
+    }
+
+    /// Options with a relative deadline in milliseconds.
+    pub fn deadline_ms(ms: u64) -> SubmitOpts {
+        SubmitOpts { class: 0, deadline: Some(Duration::from_millis(ms)) }
+    }
+
+    /// Attach a relative deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> SubmitOpts {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Typed submission/serving failures surfaced to clients.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request (token bucket empty or a
+    /// shard lane saturated); retry after the hinted delay.
+    Overloaded {
+        /// Suggested client backoff in nanoseconds.
+        retry_after_ns: u64,
+    },
+    /// The bounded queue is full.
+    QueueFull {
+        /// Ids queued at rejection time.
+        queued: usize,
+        /// Configured queue capacity in ids.
+        cap: usize,
+    },
+    /// The server loop has been stopped; no further submissions.
+    Stopped,
+    /// The request's deadline passed before it could be dispatched.
+    DeadlineExceeded {
+        /// How late the request was, in nanoseconds.
+        late_ns: u64,
+    },
+    /// The executor failed while running the wave containing this
+    /// request.
+    Exec(String),
+    /// The submission itself was malformed (e.g. empty id list).
+    Invalid(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { retry_after_ns } => {
+                write!(f, "overloaded: retry after {}ns", retry_after_ns)
+            }
+            ServeError::QueueFull { queued, cap } => {
+                write!(f, "queue full: {queued} of {cap} ids queued")
+            }
+            ServeError::Stopped => write!(f, "server stopped"),
+            ServeError::DeadlineExceeded { late_ns } => {
+                write!(f, "deadline exceeded by {}ns", late_ns)
+            }
+            ServeError::Exec(msg) => write!(f, "executor failed: {msg}"),
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-priority-class serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ClassStats {
+    /// Priority class index (0 = highest).
+    pub class: usize,
+    /// Node ids admitted into the queue.
+    pub submitted: u64,
+    /// Node ids completed (rows returned).
+    pub completed: u64,
+    /// Requests completed.
+    pub requests: u64,
+    /// Requests that expired in the queue (deadline exceeded).
+    pub expired: u64,
+    /// Requests rejected at submit (`Overloaded` + `QueueFull`).
+    pub rejected: u64,
+    /// Completed ids per second of server lifetime.
+    pub qps: f64,
+    /// p50 queue-to-reply latency in nanoseconds.
+    pub p50_ns: u64,
+    /// p95 queue-to-reply latency in nanoseconds.
+    pub p95_ns: u64,
+    /// p99 queue-to-reply latency in nanoseconds.
+    pub p99_ns: u64,
+    /// Mean queue-to-reply latency in nanoseconds.
+    pub mean_ns: f64,
+    /// Max queue-to-reply latency in nanoseconds.
+    pub max_ns: u64,
+}
+
+/// Aggregate statistics for one server lifetime (also used by the
+/// legacy [`crate::coordinator::serve::Server`] shim).
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Total node ids completed.
+    pub completed: u64,
+    /// Executor dispatches issued.
+    pub batches: u64,
+    /// Per-request latency summary (submit → reply), nanoseconds.
+    pub latency: Summary,
+    /// Completed ids per second of server lifetime.
+    pub throughput_rps: f64,
+    /// Mean ids per executor dispatch.
+    pub mean_batch: f64,
+    /// Requests rejected by the token bucket or lane saturation.
+    pub rejected_overloaded: u64,
+    /// Requests rejected by the bounded queue.
+    pub rejected_queue_full: u64,
+    /// Requests that expired in the queue.
+    pub expired: u64,
+    /// Waves whose executor call failed.
+    pub exec_failures: u64,
+    /// High-water mark of queued ids.
+    pub peak_queued: usize,
+    /// Per-priority-class breakdown (indexed by class).
+    pub classes: Vec<ClassStats>,
+    /// Cross-request reuse-cache counters, when the executor exposes a
+    /// reuse cache (aggregated across shard lanes).
+    pub reuse: Option<crate::reuse::ReuseStats>,
+    /// Per-shard-lane reuse counters, when sharded reuse is active.
+    pub reuse_lanes: Vec<crate::reuse::ReuseStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = ServeError::Overloaded { retry_after_ns: 5 };
+        assert!(e.to_string().contains("retry after 5ns"));
+        let e = ServeError::QueueFull { queued: 9, cap: 8 };
+        assert!(e.to_string().contains("9 of 8"));
+        assert_eq!(ServeError::Stopped.to_string(), "server stopped");
+        let e = ServeError::DeadlineExceeded { late_ns: 3 };
+        assert!(e.to_string().contains("by 3ns"));
+        assert!(ServeError::Exec("boom".into()).to_string().contains("boom"));
+        assert!(ServeError::Invalid("empty".into()).to_string().contains("empty"));
+    }
+
+    #[test]
+    fn submit_opts_builders() {
+        let o = SubmitOpts::class(3);
+        assert_eq!(o.class, 3);
+        assert!(o.deadline.is_none());
+        let o = SubmitOpts::deadline_ms(7);
+        assert_eq!(o.deadline, Some(Duration::from_millis(7)));
+        let o = SubmitOpts::class(1).with_deadline(Duration::from_secs(1));
+        assert_eq!(o.class, 1);
+        assert_eq!(o.deadline, Some(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = ServingConfig::default();
+        assert_eq!(c.max_batch, 32);
+        assert_eq!(c.queue_cap, 4096);
+        assert!(c.priority_lanes >= 1);
+        assert!(c.admission_qps.is_none());
+    }
+}

@@ -1,0 +1,998 @@
+//! The async server loop: a dispatcher thread forming *waves* against
+//! a live priority queue.
+//!
+//! ```text
+//!  submit(ids, opts)                dispatcher thread
+//!  ───────────────►  admission ──►  ┌──────────────────────────────┐
+//!   typed errors:     · stopped?    │ loop:                        │
+//!   Overloaded        · queue cap   │   expire overdue requests    │
+//!   QueueFull         · lane cap    │   wait: size OR timeout OR   │
+//!   DeadlineExceeded  · token       │         earliest deadline    │
+//!   Stopped             bucket      │   pop wave (class, deadline, │
+//!                          │        │            age order)        │
+//!                          ▼        │   group by shard lane        │
+//!                    per-class      │   execute ≤max_batch rounds  │
+//!                    binary heaps   │   reassemble rows per request│
+//!                                   │   reply + record stats       │
+//!                                   └──────────────────────────────┘
+//! ```
+//!
+//! Unlike the old lockstep dispatcher (freeze queue → chunk → drain →
+//! repeat), the loop re-reads the queue between waves: requests that
+//! arrive while a wave executes join the next wave immediately, and a
+//! backlog left behind by a full wave closes the next wave without
+//! waiting out the flush window — shard lanes refill as they free up.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::partition::ShardMap;
+use crate::reuse::ReuseStats;
+use crate::session::{Session, SessionBuilder};
+use crate::util::stats::{QuantileSketch, Summary};
+use crate::{Error, Result};
+
+use super::admission::TokenBucket;
+use super::clock::{Clock, Nanos, SystemClock};
+use super::{ClassStats, ServeError, ServeStats, ServingConfig, SubmitOpts};
+
+/// Reply payload of one submission: all embedding rows of the request
+/// in submission order, or the typed serving failure.
+pub type BatchReply = std::result::Result<Vec<Vec<f32>>, ServeError>;
+
+/// Cap on raw latency samples kept for the legacy [`Summary`]; the
+/// per-class [`QuantileSketch`]es keep recording past it.
+const LATENCY_SAMPLE_CAP: usize = 1 << 17;
+
+/// Batch executor: given the node ids of one dispatch, return one
+/// embedding row per id. Deliberately not `Send` — the executor lives
+/// entirely inside the dispatcher thread (constructed there via
+/// [`AsyncServer::start_with`]), which is what lets PJRT executables
+/// (`Rc` internals) serve requests.
+pub trait BatchExecutor {
+    /// Execute one dispatch.
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>>;
+
+    /// Cumulative reuse-cache counters, when the executor serves
+    /// through a session with cross-request reuse enabled.
+    fn reuse_stats(&self) -> Option<ReuseStats> {
+        None
+    }
+
+    /// Per-shard-lane reuse counters, when sharded reuse is active.
+    fn reuse_lane_stats(&self) -> Option<Vec<ReuseStats>> {
+        None
+    }
+
+    /// Number of shard-affine dispatch lanes this executor exposes.
+    /// When `> 1` each wave is grouped by [`BatchExecutor::shard_of`]
+    /// and dispatched as rounds carrying up to `max_batch` ids from
+    /// every lane, contiguous per lane.
+    fn shards(&self) -> usize {
+        1
+    }
+
+    /// Owning shard-lane of a node id (only consulted when
+    /// [`BatchExecutor::shards`] `> 1`).
+    fn shard_of(&self, _node_id: u32) -> usize {
+        0
+    }
+
+    /// A `Send + Sync` snapshot of the shard ownership table, if the
+    /// executor has one. Published once by the dispatcher thread so the
+    /// *submit* side can account queued ids per lane and reject
+    /// submissions that would saturate a lane.
+    fn shard_map(&self) -> Option<ShardMap> {
+        None
+    }
+}
+
+impl<F> BatchExecutor for F
+where
+    F: FnMut(&[u32]) -> Result<Vec<Vec<f32>>>,
+{
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        self(node_ids)
+    }
+}
+
+/// Where a request's rows go once its wave completes.
+#[derive(Debug)]
+pub(crate) enum ReplyTo {
+    /// Legacy single-row reply; dropped on failure.
+    Single(mpsc::Sender<Vec<f32>>),
+    /// Legacy batch reply; dropped on failure.
+    Rows(mpsc::Sender<Vec<Vec<f32>>>),
+    /// Typed reply: always receives `Ok(rows)` or the `ServeError`.
+    Typed(mpsc::Sender<BatchReply>),
+}
+
+/// One admitted request waiting in a class heap. Ordered by
+/// `(deadline, admission sequence)` — earliest deadline first,
+/// FIFO tie-break for deadline-less requests — so a large batch
+/// admitted early cannot be starved by a stream of later singletons.
+#[derive(Debug)]
+struct PendingReq {
+    /// `(deadline or u64::MAX, admission seq)` — the heap key.
+    key: (Nanos, u64),
+    class: usize,
+    ids: Vec<u32>,
+    enqueued: Nanos,
+    deadline: Option<Nanos>,
+    /// Per-lane id counts at admission (when a shard map was
+    /// published); mirrors the exact decrement on pop/expiry.
+    lane_counts: Option<Vec<usize>>,
+    reply: ReplyTo,
+}
+
+impl PartialEq for PendingReq {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl Eq for PendingReq {}
+impl PartialOrd for PendingReq {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PendingReq {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Mutable queue state behind the submit/dispatch mutex.
+struct QueueState {
+    /// One min-heap (via `Reverse`) per priority class.
+    classes: Vec<BinaryHeap<Reverse<PendingReq>>>,
+    /// Total queued (admitted, undispatched) node ids.
+    queued_ids: usize,
+    /// Queued ids per shard lane (only maintained once a shard map is
+    /// published).
+    lane_queued: Vec<usize>,
+    /// In-flight (dispatched, not yet replied) ids per shard lane.
+    lane_inflight: Vec<usize>,
+    /// Token-bucket admission, when configured.
+    bucket: Option<TokenBucket>,
+    /// When the currently-filling wave must close: set to
+    /// `arrival + flush_after` when the queue goes non-empty, and to
+    /// "now" when a wave leaves a backlog behind (a backlog means load
+    /// ≥ capacity — no point waiting to fill).
+    fill_deadline: Option<Nanos>,
+    stopped: bool,
+    seq: u64,
+}
+
+/// Per-class raw counters.
+#[derive(Default)]
+struct RawClass {
+    submitted: u64,
+    completed: u64,
+    requests: u64,
+    expired: u64,
+    rejected_overloaded: u64,
+    rejected_queue_full: u64,
+    sketch: QuantileSketch,
+}
+
+/// Raw aggregate counters behind the stats mutex.
+struct RawStats {
+    completed: u64,
+    batches: u64,
+    batch_id_sum: u64,
+    latencies_ns: Vec<f64>,
+    exec_failures: u64,
+    peak_queued: usize,
+    reuse: Option<ReuseStats>,
+    reuse_lanes: Vec<ReuseStats>,
+    classes: Vec<RawClass>,
+}
+
+impl RawStats {
+    fn new(classes: usize) -> RawStats {
+        RawStats {
+            completed: 0,
+            batches: 0,
+            batch_id_sum: 0,
+            latencies_ns: Vec::new(),
+            exec_failures: 0,
+            peak_queued: 0,
+            reuse: None,
+            reuse_lanes: Vec::new(),
+            classes: (0..classes).map(|_| RawClass::default()).collect(),
+        }
+    }
+}
+
+/// Lane topology published once by the dispatcher thread after the
+/// executor is constructed.
+struct LaneInfo {
+    lanes: usize,
+    map: Option<ShardMap>,
+    lane_cap: usize,
+}
+
+/// State shared between the submit side and the dispatcher thread.
+/// Lock order where both are held: `state` then `stats`.
+struct Shared<C: Clock> {
+    config: ServingConfig,
+    clock: Arc<C>,
+    state: Mutex<QueueState>,
+    cv: Arc<Condvar>,
+    stats: Mutex<RawStats>,
+    lanes: OnceLock<LaneInfo>,
+    started: Nanos,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The async serving runtime: owns the dispatcher thread. Generic over
+/// the [`Clock`] so tests drive it with a deterministic virtual clock;
+/// production code uses the [`SystemClock`] default.
+pub struct AsyncServer<C: Clock = SystemClock> {
+    shared: Arc<Shared<C>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl AsyncServer<SystemClock> {
+    /// Start the dispatcher with the given (Send) executor on the wall
+    /// clock.
+    pub fn start(
+        config: ServingConfig,
+        executor: impl BatchExecutor + Send + 'static,
+    ) -> AsyncServer {
+        Self::start_with(config, move || executor)
+    }
+
+    /// Start the dispatcher, constructing the executor *inside* the
+    /// dispatcher thread (required for non-`Send` executors, e.g. PJRT
+    /// executables holding `Rc` internals).
+    pub fn start_with<E, F>(config: ServingConfig, make_executor: F) -> AsyncServer
+    where
+        E: BatchExecutor + 'static,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        Self::start_with_clock(config, Arc::new(SystemClock::new()), make_executor)
+    }
+
+    /// Start the dispatcher around a [`Session`] built from `builder`
+    /// inside the dispatcher thread — any backend × any schedule
+    /// policy, with plan/weights/artifacts reused across waves. If the
+    /// session fails to build, every wave reports the build error.
+    pub fn start_session(config: ServingConfig, builder: SessionBuilder) -> AsyncServer {
+        Self::start_with(config, move || SessionExecutor {
+            session: builder.build().map_err(|e| e.to_string()),
+        })
+    }
+}
+
+impl<C: Clock> AsyncServer<C> {
+    /// Start the dispatcher on an explicit clock (tests pass a
+    /// `testutil::VirtualClock`).
+    pub fn start_with_clock<E, F>(
+        config: ServingConfig,
+        clock: Arc<C>,
+        make_executor: F,
+    ) -> AsyncServer<C>
+    where
+        E: BatchExecutor + 'static,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let classes = config.priority_lanes.max(1);
+        let now = clock.now();
+        let bucket = config.admission_qps.map(|qps| {
+            let burst = config.admission_burst.unwrap_or(qps.max(config.max_batch as f64));
+            TokenBucket::new(qps, burst, now)
+        });
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                classes: (0..classes).map(|_| BinaryHeap::new()).collect(),
+                queued_ids: 0,
+                lane_queued: Vec::new(),
+                lane_inflight: Vec::new(),
+                bucket,
+                fill_deadline: None,
+                stopped: false,
+                seq: 0,
+            }),
+            cv: Arc::new(Condvar::new()),
+            stats: Mutex::new(RawStats::new(classes)),
+            lanes: OnceLock::new(),
+            started: now,
+            clock,
+            config,
+        });
+        shared.clock.register_waker(&shared.cv);
+        let sh = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || {
+            let mut executor = make_executor();
+            dispatch_loop(&sh, &mut executor);
+        });
+        AsyncServer { shared, handle: Some(handle) }
+    }
+
+    /// Session-backed start on an explicit clock.
+    pub fn start_session_with_clock(
+        config: ServingConfig,
+        clock: Arc<C>,
+        builder: SessionBuilder,
+    ) -> AsyncServer<C> {
+        Self::start_with_clock(config, clock, move || SessionExecutor {
+            session: builder.build().map_err(|e| e.to_string()),
+        })
+    }
+
+    /// Submit one request (any number of node ids ≥ 1). On admission
+    /// returns a receiver that yields exactly one [`BatchReply`]:
+    /// `Ok(rows)` in `node_ids` order, or the typed failure
+    /// (deadline expiry, executor error, shutdown drop). Admission
+    /// itself can refuse with [`ServeError::Overloaded`] /
+    /// [`ServeError::QueueFull`] / [`ServeError::Stopped`].
+    pub fn submit(
+        &self,
+        node_ids: &[u32],
+        opts: SubmitOpts,
+    ) -> std::result::Result<mpsc::Receiver<BatchReply>, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_reply(node_ids, opts, ReplyTo::Typed(tx))?;
+        Ok(rx)
+    }
+
+    /// Shared admission path for the typed API and the legacy shims.
+    pub(crate) fn submit_reply(
+        &self,
+        node_ids: &[u32],
+        opts: SubmitOpts,
+        reply: ReplyTo,
+    ) -> std::result::Result<(), ServeError> {
+        let sh = &self.shared;
+        if node_ids.is_empty() {
+            return Err(ServeError::Invalid("empty request: no node ids".into()));
+        }
+        let classes = sh.config.priority_lanes.max(1);
+        let class = opts.class.min(classes - 1);
+        let now = sh.clock.now();
+        let rel = opts.deadline.or(sh.config.default_deadline);
+        if rel == Some(std::time::Duration::ZERO) {
+            lock(&sh.stats).classes[class].expired += 1;
+            return Err(ServeError::DeadlineExceeded { late_ns: 0 });
+        }
+        let deadline = rel.map(|d| now.saturating_add(d.as_nanos() as Nanos));
+        let mut st = lock(&sh.state);
+        if st.stopped {
+            return Err(ServeError::Stopped);
+        }
+        // bounded queue (in ids)
+        let cap = sh.config.queue_cap.max(1);
+        if st.queued_ids + node_ids.len() > cap {
+            let queued = st.queued_ids;
+            drop(st);
+            lock(&sh.stats).classes[class].rejected_queue_full += 1;
+            return Err(ServeError::QueueFull { queued, cap });
+        }
+        // per-lane saturation (only once the dispatcher published the
+        // shard map; earlier submissions skip the lane check)
+        let lane_counts = sh.lanes.get().and_then(|li| {
+            li.map.as_ref().map(|m| {
+                let mut counts = vec![0usize; li.lanes];
+                for &id in node_ids {
+                    counts[m.shard_of(id).min(li.lanes - 1)] += 1;
+                }
+                counts
+            })
+        });
+        if let (Some(counts), Some(li)) = (&lane_counts, sh.lanes.get()) {
+            for (lane, &add) in counts.iter().enumerate() {
+                if add == 0 {
+                    continue;
+                }
+                let depth = st.lane_queued.get(lane).copied().unwrap_or(0)
+                    + st.lane_inflight.get(lane).copied().unwrap_or(0);
+                if depth + add > li.lane_cap {
+                    drop(st);
+                    lock(&sh.stats).classes[class].rejected_overloaded += 1;
+                    return Err(ServeError::Overloaded {
+                        retry_after_ns: sh.config.flush_after.as_nanos() as u64,
+                    });
+                }
+            }
+        }
+        // token-bucket admission, metered in ids; checked last so a
+        // request bounced by the caps above does not burn tokens
+        if let Some(bucket) = st.bucket.as_mut() {
+            if let Err(retry_after_ns) = bucket.try_take(node_ids.len() as f64, now) {
+                drop(st);
+                lock(&sh.stats).classes[class].rejected_overloaded += 1;
+                return Err(ServeError::Overloaded { retry_after_ns });
+            }
+        }
+        // admitted: enqueue
+        if st.queued_ids == 0 {
+            st.fill_deadline =
+                Some(now.saturating_add(sh.config.flush_after.as_nanos() as Nanos));
+        }
+        st.seq += 1;
+        let key = (deadline.unwrap_or(Nanos::MAX), st.seq);
+        st.queued_ids += node_ids.len();
+        if let Some(counts) = &lane_counts {
+            if st.lane_queued.len() < counts.len() {
+                st.lane_queued.resize(counts.len(), 0);
+            }
+            for (lane, &n) in counts.iter().enumerate() {
+                st.lane_queued[lane] += n;
+            }
+        }
+        st.classes[class].push(Reverse(PendingReq {
+            key,
+            class,
+            ids: node_ids.to_vec(),
+            enqueued: now,
+            deadline,
+            lane_counts,
+            reply,
+        }));
+        let queued = st.queued_ids;
+        drop(st);
+        {
+            let mut s = lock(&sh.stats);
+            s.peak_queued = s.peak_queued.max(queued);
+            s.classes[class].submitted += node_ids.len() as u64;
+        }
+        sh.cv.notify_all();
+        Ok(())
+    }
+
+    /// Snapshot of the current statistics without stopping the server.
+    pub fn stats_snapshot(&self) -> ServeStats {
+        self.mk_stats()
+    }
+
+    /// Stop accepting requests and join the dispatcher after it drains
+    /// the queue. Idempotent; [`Drop`] calls it too. Submissions after
+    /// `stop` fail with [`ServeError::Stopped`].
+    pub fn stop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.stopped = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop, drain, and return the final statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        self.mk_stats()
+    }
+
+    fn mk_stats(&self) -> ServeStats {
+        let sh = &self.shared;
+        let elapsed =
+            sh.clock.now().saturating_sub(sh.started) as f64 / 1e9;
+        let s = lock(&sh.stats);
+        let per_sec = |count: u64| if elapsed > 0.0 { count as f64 / elapsed } else { 0.0 };
+        ServeStats {
+            completed: s.completed,
+            batches: s.batches,
+            latency: Summary::of(&s.latencies_ns),
+            throughput_rps: per_sec(s.completed),
+            mean_batch: if s.batches == 0 {
+                0.0
+            } else {
+                s.batch_id_sum as f64 / s.batches as f64
+            },
+            rejected_overloaded: s.classes.iter().map(|c| c.rejected_overloaded).sum(),
+            rejected_queue_full: s.classes.iter().map(|c| c.rejected_queue_full).sum(),
+            expired: s.classes.iter().map(|c| c.expired).sum(),
+            exec_failures: s.exec_failures,
+            peak_queued: s.peak_queued,
+            classes: s
+                .classes
+                .iter()
+                .enumerate()
+                .map(|(class, rc)| ClassStats {
+                    class,
+                    submitted: rc.submitted,
+                    completed: rc.completed,
+                    requests: rc.requests,
+                    expired: rc.expired,
+                    rejected: rc.rejected_overloaded + rc.rejected_queue_full,
+                    qps: per_sec(rc.completed),
+                    p50_ns: rc.sketch.quantile(0.50),
+                    p95_ns: rc.sketch.quantile(0.95),
+                    p99_ns: rc.sketch.quantile(0.99),
+                    mean_ns: rc.sketch.mean(),
+                    max_ns: rc.sketch.max(),
+                })
+                .collect(),
+            reuse: s.reuse.clone(),
+            reuse_lanes: s.reuse_lanes.clone(),
+        }
+    }
+}
+
+impl<C: Clock> Drop for AsyncServer<C> {
+    /// Dropping without [`AsyncServer::shutdown`] still drains pending
+    /// requests and joins the dispatcher — no detached thread, no lost
+    /// replies.
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Earliest queued deadline across every class heap (`u64::MAX` if no
+/// queued request carries one).
+fn earliest_deadline(st: &QueueState) -> Nanos {
+    st.classes
+        .iter()
+        .filter_map(|h| h.peek().map(|Reverse(p)| p.key.0))
+        .min()
+        .unwrap_or(Nanos::MAX)
+}
+
+/// Pop every queued request whose deadline has passed, failing each
+/// with [`ServeError::DeadlineExceeded`]. Called with the state lock
+/// held (nested stats lock follows the `state → stats` order).
+fn expire<C: Clock>(sh: &Shared<C>, st: &mut QueueState, now: Nanos) {
+    for heap in st.classes.iter_mut() {
+        loop {
+            let overdue = matches!(
+                heap.peek(),
+                Some(Reverse(p)) if p.deadline.is_some_and(|d| d < now)
+            );
+            if !overdue {
+                break;
+            }
+            let Reverse(p) = heap.pop().expect("peeked");
+            st.queued_ids = st.queued_ids.saturating_sub(p.ids.len());
+            if let Some(counts) = &p.lane_counts {
+                for (lane, &n) in counts.iter().enumerate() {
+                    if let Some(q) = st.lane_queued.get_mut(lane) {
+                        *q = q.saturating_sub(n);
+                    }
+                }
+            }
+            let late_ns = now - p.deadline.expect("overdue implies deadline");
+            lock(&sh.stats).classes[p.class].expired += 1;
+            match p.reply {
+                ReplyTo::Typed(tx) => {
+                    let _ = tx.send(Err(ServeError::DeadlineExceeded { late_ns }));
+                }
+                // legacy replies drop their channel on failure
+                ReplyTo::Single(_) | ReplyTo::Rows(_) => {}
+            }
+        }
+    }
+}
+
+/// The dispatcher loop (runs on the dispatcher thread until stopped
+/// and drained).
+fn dispatch_loop<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E) {
+    let lanes = executor.shards().max(1);
+    let cap = sh.config.max_batch.max(1);
+    let budget = cap * lanes;
+    let lane_cap = sh.config.lane_cap.unwrap_or(sh.config.queue_cap.max(1));
+    let _ = sh.lanes.set(LaneInfo { lanes, map: executor.shard_map(), lane_cap });
+    {
+        let mut st = lock(&sh.state);
+        st.lane_queued.resize(lanes.max(st.lane_queued.len()), 0);
+        st.lane_inflight.resize(lanes.max(st.lane_inflight.len()), 0);
+    }
+    loop {
+        // ---- wait until a wave can close, then pop it ----
+        let wave: Vec<PendingReq> = {
+            let mut st = lock(&sh.state);
+            loop {
+                let now = sh.clock.now();
+                expire(sh, &mut st, now);
+                if st.queued_ids == 0 {
+                    st.fill_deadline = None;
+                    if st.stopped {
+                        return;
+                    }
+                    st = sh.clock.wait(&sh.cv, st);
+                    continue;
+                }
+                if st.stopped || st.queued_ids >= budget {
+                    break;
+                }
+                // close on fill timeout or the earliest queued deadline,
+                // whichever is sooner — a deadline-carrying request must
+                // not wait out a fill window it cannot afford
+                let close_at = st
+                    .fill_deadline
+                    .unwrap_or(now)
+                    .min(earliest_deadline(&st));
+                if now >= close_at {
+                    break;
+                }
+                st = sh.clock.wait_deadline(&sh.cv, st, close_at);
+            }
+            // pop in (class, deadline, age) order until the wave budget
+            // is met; requests are popped whole (a reply is one unit),
+            // so the last pop may overshoot — rounds below re-chunk
+            let mut wave = Vec::new();
+            let mut total = 0usize;
+            for heap in st.classes.iter_mut() {
+                while total < budget {
+                    match heap.pop() {
+                        Some(Reverse(p)) => {
+                            total += p.ids.len();
+                            wave.push(p);
+                        }
+                        None => break,
+                    }
+                }
+                if total >= budget {
+                    break;
+                }
+            }
+            st.queued_ids = st.queued_ids.saturating_sub(total);
+            for p in &wave {
+                if let Some(counts) = &p.lane_counts {
+                    for (lane, &n) in counts.iter().enumerate() {
+                        if let Some(q) = st.lane_queued.get_mut(lane) {
+                            *q = q.saturating_sub(n);
+                        }
+                    }
+                }
+            }
+            // a leftover backlog means load ≥ capacity: close the next
+            // wave immediately instead of waiting out the fill window
+            st.fill_deadline =
+                if st.queued_ids > 0 { Some(sh.clock.now()) } else { None };
+            wave
+        };
+        if wave.is_empty() {
+            continue;
+        }
+        // ---- flatten, lane-group, register in-flight ----
+        let ids: Vec<u32> = wave.iter().flat_map(|p| p.ids.iter().copied()).collect();
+        let groups: Option<Vec<Vec<usize>>> = (lanes > 1).then(|| {
+            let mut g: Vec<Vec<usize>> = vec![Vec::new(); lanes];
+            for (pos, &id) in ids.iter().enumerate() {
+                g[executor.shard_of(id).min(lanes - 1)].push(pos);
+            }
+            g
+        });
+        let inflight: Vec<usize> = match &groups {
+            Some(g) => g.iter().map(|lane| lane.len()).collect(),
+            None => vec![ids.len()],
+        };
+        {
+            let mut st = lock(&sh.state);
+            for (lane, &n) in inflight.iter().enumerate() {
+                if let Some(q) = st.lane_inflight.get_mut(lane) {
+                    *q += n;
+                }
+            }
+        }
+        // ---- execute as ≤max_batch rounds per lane ----
+        let mut fail_msg: Option<String> = None;
+        let mut run_chunk = |executor: &mut E, chunk_ids: &[u32]| -> Option<Vec<Vec<f32>>> {
+            match executor.execute(chunk_ids) {
+                Ok(r) if r.len() == chunk_ids.len() => {
+                    let mut s = lock(&sh.stats);
+                    s.batches += 1;
+                    s.batch_id_sum += chunk_ids.len() as u64;
+                    Some(r)
+                }
+                Ok(r) => {
+                    let msg = format!(
+                        "executor returned {} rows for {} ids",
+                        r.len(),
+                        chunk_ids.len()
+                    );
+                    eprintln!("serve: {msg}");
+                    fail_msg = Some(msg);
+                    None
+                }
+                Err(e) => {
+                    eprintln!("serve: batch execution failed: {e}");
+                    fail_msg = Some(e.to_string());
+                    None
+                }
+            }
+        };
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
+        let mut failed = false;
+        match &groups {
+            Some(groups) => {
+                let rounds =
+                    groups.iter().map(|g| g.len().div_ceil(cap)).max().unwrap_or(0);
+                let mut slots: Vec<Option<Vec<f32>>> = ids.iter().map(|_| None).collect();
+                for round in 0..rounds {
+                    let chunk: Vec<usize> = groups
+                        .iter()
+                        .flat_map(|g| g.iter().skip(round * cap).take(cap).copied())
+                        .collect();
+                    let chunk_ids: Vec<u32> = chunk.iter().map(|&p| ids[p]).collect();
+                    match run_chunk(executor, &chunk_ids) {
+                        Some(got) => {
+                            for (&p, row) in chunk.iter().zip(got) {
+                                slots[p] = Some(row);
+                            }
+                        }
+                        None => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                if !failed {
+                    rows = slots
+                        .into_iter()
+                        .map(|r| r.expect("every position dispatched"))
+                        .collect();
+                }
+            }
+            None => {
+                // the common single-lane hot path: no position indirection
+                for chunk in ids.chunks(cap) {
+                    match run_chunk(executor, chunk) {
+                        Some(mut got) => rows.append(&mut got),
+                        None => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // ---- release the lanes ----
+        {
+            let mut st = lock(&sh.state);
+            for (lane, &n) in inflight.iter().enumerate() {
+                if let Some(q) = st.lane_inflight.get_mut(lane) {
+                    *q = q.saturating_sub(n);
+                }
+            }
+        }
+        // ---- reply + record ----
+        if failed {
+            // cache activity from the chunks that did run still reaches
+            // the stats; typed clients get the error, legacy clients a
+            // dropped channel
+            {
+                let mut s = lock(&sh.stats);
+                s.exec_failures += 1;
+                s.reuse = executor.reuse_stats();
+                s.reuse_lanes = executor.reuse_lane_stats().unwrap_or_default();
+            }
+            let msg = fail_msg.unwrap_or_else(|| "execution failed".into());
+            for p in wave {
+                if let ReplyTo::Typed(tx) = p.reply {
+                    let _ = tx.send(Err(ServeError::Exec(msg.clone())));
+                }
+            }
+            continue;
+        }
+        let done = sh.clock.now();
+        let mut s = lock(&sh.stats);
+        s.reuse = executor.reuse_stats();
+        s.reuse_lanes = executor.reuse_lane_stats().unwrap_or_default();
+        let mut rows = rows.into_iter();
+        for p in wave {
+            let take = p.ids.len();
+            s.completed += take as u64;
+            let lat = done.saturating_sub(p.enqueued);
+            if s.latencies_ns.len() < LATENCY_SAMPLE_CAP {
+                s.latencies_ns.push(lat as f64);
+            }
+            let rc = &mut s.classes[p.class];
+            rc.requests += 1;
+            rc.completed += take as u64;
+            rc.sketch.record(lat);
+            match p.reply {
+                ReplyTo::Single(tx) => {
+                    if let Some(row) = rows.next() {
+                        let _ = tx.send(row);
+                    }
+                }
+                ReplyTo::Rows(tx) => {
+                    let _ = tx.send(rows.by_ref().take(take).collect());
+                }
+                ReplyTo::Typed(tx) => {
+                    let _ = tx.send(Ok(rows.by_ref().take(take).collect()));
+                }
+            }
+        }
+    }
+}
+
+/// The canonical executor behind [`AsyncServer::start_session`]: a
+/// session built inside the dispatcher thread (or the build error
+/// every wave will report).
+struct SessionExecutor {
+    session: std::result::Result<Session, String>,
+}
+
+impl BatchExecutor for SessionExecutor {
+    fn execute(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        match self.session.as_mut() {
+            Ok(s) => s.run_batch(node_ids),
+            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+        }
+    }
+
+    fn reuse_stats(&self) -> Option<ReuseStats> {
+        self.session.as_ref().ok().and_then(|s| s.reuse_stats())
+    }
+
+    fn reuse_lane_stats(&self) -> Option<Vec<ReuseStats>> {
+        self.session.as_ref().ok().and_then(|s| s.reuse_lane_stats())
+    }
+
+    /// Shard-affine dispatch applies only on the sampled batch path: a
+    /// partitioned session without sampling serves from the cached
+    /// full-graph forward, where grouping would only fragment
+    /// dispatches.
+    fn shards(&self) -> usize {
+        self.session
+            .as_ref()
+            .ok()
+            .filter(|s| s.sampling().is_some())
+            .and_then(|s| s.partition())
+            .map(|p| p.num_shards())
+            .unwrap_or(1)
+    }
+
+    fn shard_of(&self, node_id: u32) -> usize {
+        self.session.as_ref().ok().and_then(|s| s.shard_of(node_id)).unwrap_or(0)
+    }
+
+    fn shard_map(&self) -> Option<ShardMap> {
+        self.session
+            .as_ref()
+            .ok()
+            .filter(|s| s.sampling().is_some())
+            .and_then(|s| s.shard_map())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn echo(ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        Ok(ids.iter().map(|&i| vec![i as f32, 2.0 * i as f32]).collect())
+    }
+
+    fn cfg() -> ServingConfig {
+        ServingConfig { flush_after: Duration::from_millis(1), ..Default::default() }
+    }
+
+    #[test]
+    fn typed_submit_round_trips() {
+        let server = AsyncServer::start(cfg(), echo);
+        let rx = server.submit(&[3, 5], SubmitOpts::default()).unwrap();
+        let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(rows, vec![vec![3.0, 6.0], vec![5.0, 10.0]]);
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.classes[0].requests, 1);
+        assert_eq!(stats.classes[0].completed, 2);
+        assert_eq!(stats.classes[0].submitted, 2);
+    }
+
+    #[test]
+    fn empty_submit_is_invalid() {
+        let server = AsyncServer::start(cfg(), echo);
+        match server.submit(&[], SubmitOpts::default()) {
+            Err(ServeError::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_after_stop_is_typed_stopped() {
+        let mut server = AsyncServer::start(cfg(), echo);
+        server.stop();
+        match server.submit(&[1], SubmitOpts::default()) {
+            Err(ServeError::Stopped) => {}
+            other => panic!("expected Stopped, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn zero_deadline_fails_fast() {
+        let server = AsyncServer::start(cfg(), echo);
+        let err = server
+            .submit(&[1], SubmitOpts::default().with_deadline(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(err, ServeError::DeadlineExceeded { late_ns: 0 });
+        let stats = server.shutdown();
+        assert_eq!(stats.expired, 1);
+    }
+
+    #[test]
+    fn class_is_clamped_to_configured_lanes() {
+        let server =
+            AsyncServer::start(ServingConfig { priority_lanes: 2, ..cfg() }, echo);
+        let rx = server.submit(&[9], SubmitOpts::class(17)).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        let stats = server.shutdown();
+        assert_eq!(stats.classes.len(), 2);
+        assert_eq!(stats.classes[1].requests, 1, "overflow class lands in last lane");
+    }
+
+    #[test]
+    fn executor_failure_is_typed_for_async_clients() {
+        let server = AsyncServer::start(
+            cfg(),
+            |_ids: &[u32]| -> Result<Vec<Vec<f32>>> { Err(Error::Runtime("boom".into())) },
+        );
+        let rx = server.submit(&[1], SubmitOpts::default()).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            Err(ServeError::Exec(msg)) => assert!(msg.contains("boom")),
+            other => panic!("expected Exec error, got {other:?}"),
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.exec_failures, 1);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn shutdown_while_pending_drains_typed_replies() {
+        // every admitted request must resolve its receiver on shutdown
+        let server = AsyncServer::start(cfg(), echo);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| server.submit(&[i, i + 50], SubmitOpts::default()).unwrap())
+            .collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 20);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let rows = rx.try_recv().expect("drained").expect("ok");
+            assert_eq!(rows[0][0], i as f32);
+            assert_eq!(rows[1][0], (i + 50) as f32);
+        }
+    }
+
+    #[test]
+    fn queue_cap_is_enforced() {
+        // an executor that blocks until released, so the queue backs up
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let server = AsyncServer::start_with(
+            ServingConfig { max_batch: 1, queue_cap: 3, ..cfg() },
+            move || {
+                move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+                    let _ = entered_tx.send(());
+                    let _ = gate_rx.recv();
+                    Ok(ids.iter().map(|&i| vec![i as f32]).collect())
+                }
+            },
+        );
+        let first = server.submit(&[0], SubmitOpts::default()).unwrap();
+        entered_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // dispatcher now blocked in execute(); fill the queue to cap
+        let queued: Vec<_> = (1..=3)
+            .map(|i| server.submit(&[i], SubmitOpts::default()).unwrap())
+            .collect();
+        match server.submit(&[4], SubmitOpts::default()) {
+            Err(ServeError::QueueFull { queued, cap }) => {
+                assert_eq!(queued, 3);
+                assert_eq!(cap, 3);
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        for _ in 0..4 {
+            let _ = gate_tx.send(());
+        }
+        assert!(first.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        for rx in queued {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.rejected_queue_full, 1);
+        assert_eq!(stats.peak_queued, 3);
+        assert_eq!(stats.completed, 4);
+    }
+}

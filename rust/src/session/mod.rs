@@ -58,6 +58,9 @@ pub use backend::{
     SyncExecBackend,
 };
 pub use crate::coordinator::serve::{ServeConfig, ServeStats, Server};
+pub use crate::serving::{
+    AsyncServer, BatchReply, ServeError, ServingConfig, SubmitOpts,
+};
 pub use crate::partition::PartitionSpec;
 pub use crate::reuse::ReuseSpec;
 pub use crate::sampler::SamplingSpec;
@@ -427,6 +430,15 @@ impl SessionBuilder {
     /// artifacts reused across batches.
     pub fn serve(self, config: ServeConfig) -> Server {
         Server::start_session(config, self)
+    }
+
+    /// Like [`SessionBuilder::serve`], but through the async serving
+    /// runtime: continuous batching, priority classes, deadlines and
+    /// admission control, with typed [`ServeError`]s instead of silent
+    /// unbounded queueing. The session is still built inside the
+    /// dispatcher thread.
+    pub fn serve_async(self, config: ServingConfig) -> AsyncServer {
+        AsyncServer::start_session(config, self)
     }
 }
 
@@ -885,6 +897,24 @@ impl Session {
             total.absorb(lane.stats());
         }
         Some(total)
+    }
+
+    /// Per-lane reuse-cache counters (one entry per shard lane), if
+    /// cross-request reuse is enabled. The serving runtime surfaces
+    /// these so lane-level cache imbalance stays visible alongside the
+    /// aggregated [`Session::reuse_stats`].
+    pub fn reuse_lane_stats(&self) -> Option<Vec<ReuseStats>> {
+        self.reuse
+            .as_ref()
+            .map(|lanes| lanes.iter().map(|l| l.stats().clone()).collect())
+    }
+
+    /// A `Send + Sync` snapshot of target-type shard ownership, if the
+    /// session is partitioned. The async serving runtime publishes it
+    /// from the dispatcher thread so submissions can be accounted (and
+    /// shed) per shard lane before they ever reach the executor.
+    pub fn shard_map(&self) -> Option<crate::partition::ShardMap> {
+        self.partition.as_ref().map(|p| p.shard_map(self.plan.target))
     }
 
     /// Drop the cached embeddings and invalidate the reuse caches with a

@@ -7,8 +7,72 @@
 //! reproduce.
 
 use crate::graph::sparse::{Coo, Csr};
+use crate::serving::clock::{Clock, Nanos};
 use crate::tensor::Tensor;
 use crate::util::Pcg32;
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// A deterministic clock for driving the serving runtime in tests:
+/// time only moves when the test calls [`VirtualClock::advance`], so
+/// size-vs-timeout batch closing, deadline expiry and token-bucket
+/// refill are exercised without real sleeps.
+///
+/// Timed waits park on a short *real* safety timeout (so a wait issued
+/// just before an `advance` notification still re-checks its predicate
+/// promptly rather than hanging), but the predicates the serving loop
+/// re-checks after every wake depend only on virtual time — outcomes
+/// are deterministic even though wake timing is not.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now: Mutex<Nanos>,
+    wakers: Mutex<Vec<Arc<Condvar>>>,
+}
+
+impl VirtualClock {
+    /// A clock frozen at t = 0.
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Advance virtual time and wake every registered waiter.
+    pub fn advance(&self, by: Duration) {
+        {
+            let mut now = self.now.lock().unwrap_or_else(|e| e.into_inner());
+            *now += by.as_nanos() as Nanos;
+        }
+        for cv in self.wakers.lock().unwrap_or_else(|e| e.into_inner()).iter() {
+            cv.notify_all();
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Nanos {
+        *self.now.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn register_waker(&self, cv: &Arc<Condvar>) {
+        self.wakers.lock().unwrap_or_else(|e| e.into_inner()).push(Arc::clone(cv));
+    }
+
+    fn wait_deadline<'a, T>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, T>,
+        deadline: Nanos,
+    ) -> MutexGuard<'a, T> {
+        if self.now() >= deadline {
+            return guard;
+        }
+        // short real-time nap as a safety net against missed wakeups;
+        // `advance` notifies registered wakers to cut it short
+        cv.wait_timeout(guard, Duration::from_millis(20))
+            .unwrap_or_else(|e| e.into_inner())
+            .0
+    }
+}
 
 /// A generation strategy: produce a case from randomness, shrink a case
 /// toward smaller ones.
@@ -216,6 +280,25 @@ mod tests {
             assert!(t.rows() >= 1 && t.rows() <= 24);
             assert!(t.as_slice().iter().all(|v| v.abs() <= 2.0));
         }
+    }
+
+    #[test]
+    fn virtual_clock_advances_and_wakes() {
+        let clock = Arc::new(VirtualClock::new());
+        assert_eq!(clock.now(), 0);
+        clock.advance(Duration::from_millis(3));
+        assert_eq!(clock.now(), 3_000_000);
+        // a waiter registered with the clock is woken by advance
+        let cv = Arc::new(Condvar::new());
+        clock.register_waker(&cv);
+        let m = Mutex::new(());
+        let g = m.lock().unwrap();
+        // deadline already passed: returns immediately without waiting
+        let g = clock.wait_deadline(&cv, g, 1_000_000);
+        // deadline in the future: returns after the safety timeout even
+        // with no notification (bounded, not hung)
+        let _g = clock.wait_deadline(&cv, g, u64::MAX);
+        assert_eq!(clock.now(), 3_000_000, "waiting does not move virtual time");
     }
 
     #[test]

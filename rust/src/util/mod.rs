@@ -10,7 +10,7 @@ pub mod stats;
 pub use fmt::{human_bytes, human_count, human_time};
 pub use json::Json;
 pub use rng::Pcg32;
-pub use stats::Summary;
+pub use stats::{QuantileSketch, Summary};
 
 /// Round `x` up to the next multiple of `m` (m > 0).
 #[inline]

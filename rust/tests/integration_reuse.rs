@@ -168,7 +168,11 @@ fn serving_shares_the_cache_across_dispatches() {
     let server = ci_builder(ModelId::Rgcn)
         .sampling(full_fanout())
         .reuse(ReuseSpec::rows(1 << 14))
-        .serve(ServeConfig { max_batch: 16, flush_after: Duration::from_millis(5) });
+        .serve(ServeConfig {
+            max_batch: 16,
+            flush_after: Duration::from_millis(5),
+            ..ServeConfig::default()
+        });
     let rx1 = server.submit_batch(&[1, 2, 3, 4]).unwrap();
     let rows1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
     // second dispatch only after the first completed, so it must go
@@ -225,7 +229,11 @@ fn fused_policy_under_reuse_reports_effective_policy() {
 fn oversized_requests_chunk_into_sampled_dispatches() {
     let server = ci_builder(ModelId::Rgcn)
         .sampling(full_fanout())
-        .serve(ServeConfig { max_batch: 8, flush_after: Duration::from_millis(1) });
+        .serve(ServeConfig {
+            max_batch: 8,
+            flush_after: Duration::from_millis(1),
+            ..ServeConfig::default()
+        });
     let ids: Vec<u32> = (0..20).collect();
     let rx = server.submit_batch(&ids).unwrap();
     let rows = rx.recv_timeout(Duration::from_secs(60)).unwrap();

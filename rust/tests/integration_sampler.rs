@@ -125,7 +125,11 @@ fn magnn_sampled_batch_executes() {
 fn serving_loop_runs_on_sampled_subgraphs() {
     let server = ci_builder(ModelId::Rgcn)
         .sampling(full_fanout(1))
-        .serve(ServeConfig { max_batch: 32, flush_after: Duration::from_millis(20) });
+        .serve(ServeConfig {
+            max_batch: 32,
+            flush_after: Duration::from_millis(20),
+            ..ServeConfig::default()
+        });
     let single = server.submit(3).unwrap();
     let batch = server.submit_batch(&[4, 5, 6, 3]).unwrap();
     let row = single.recv_timeout(Duration::from_secs(60)).unwrap();

@@ -1,0 +1,425 @@
+//! Async serving runtime integration (the ISSUE-6 acceptance criteria):
+//! wave formation closes on size or timeout, deadline expiry and token
+//! refill are exercised deterministically on the virtual clock (no real
+//! sleeps decide an outcome), scheduling is earliest-deadline-first
+//! within a class without starving large batches, over-capacity load is
+//! shed with typed errors while the queue stays bounded, and async
+//! replies are bit-identical to the synchronous `run_batch` path across
+//! models × shards × reuse.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::partition::PartitionSpec;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::serving::{AsyncServer, ServeError, ServingConfig, SubmitOpts};
+use hgnn_char::session::{Session, SessionBuilder};
+use hgnn_char::testutil::VirtualClock;
+use hgnn_char::Result;
+
+const RECV: Duration = Duration::from_secs(60);
+
+fn echo(ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+    Ok(ids.iter().map(|&i| vec![i as f32, i as f32 + 0.5]).collect())
+}
+
+fn cfg() -> ServingConfig {
+    ServingConfig {
+        max_batch: 4,
+        flush_after: Duration::from_millis(2),
+        priority_lanes: 1,
+        ..Default::default()
+    }
+}
+
+/// A gated executor: blocks inside `execute` until the test sends on
+/// `gate`, signalling entry on `entered` and appending every dispatched
+/// chunk to `log`. Holding the gate freezes the dispatcher so the test
+/// can shape the queue, then observe the exact dispatch order.
+fn gated(
+    log: Arc<Mutex<Vec<Vec<u32>>>>,
+) -> (impl FnMut(&[u32]) -> Result<Vec<Vec<f32>>>, mpsc::Sender<()>, mpsc::Receiver<()>) {
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let exec = move |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+        let _ = entered_tx.send(());
+        let _ = gate_rx.recv();
+        log.lock().unwrap().push(ids.to_vec());
+        echo(ids)
+    };
+    (exec, gate_tx, entered_rx)
+}
+
+// ---------------------------------------------------------------- waves
+
+/// With the clock frozen, a wave can only close by size: `max_batch`
+/// singles form exactly one dispatch, no timeout involved.
+#[test]
+fn wave_closes_on_size_with_frozen_clock() {
+    let clock = Arc::new(VirtualClock::new());
+    let server = AsyncServer::start_with_clock(cfg(), clock, || echo);
+    let rxs: Vec<_> =
+        (0..4).map(|i| server.submit(&[i], SubmitOpts::default()).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let rows = rx.recv_timeout(RECV).unwrap().unwrap();
+        assert_eq!(rows, vec![vec![i as f32, i as f32 + 0.5]]);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.batches, 1, "4 singles at max_batch 4 close one wave by size");
+    assert_eq!(stats.completed, 4);
+}
+
+/// A partial wave closes only when virtual time reaches the fill
+/// deadline: one `advance(flush_after)` flushes it, no real sleeping.
+#[test]
+fn wave_closes_on_timeout_when_virtual_time_advances() {
+    let clock = Arc::new(VirtualClock::new());
+    let server = AsyncServer::start_with_clock(cfg(), Arc::clone(&clock), || echo);
+    let a = server.submit(&[7], SubmitOpts::default()).unwrap();
+    let b = server.submit(&[8], SubmitOpts::default()).unwrap();
+    // two of four budget ids queued: the wave is held open until the
+    // fill window (anchored at the first submit) passes
+    clock.advance(Duration::from_millis(2));
+    assert!(a.recv_timeout(RECV).unwrap().is_ok());
+    assert!(b.recv_timeout(RECV).unwrap().is_ok());
+    let stats = server.shutdown();
+    assert_eq!(stats.batches, 1, "both singles ride the same timed-out wave");
+    assert_eq!(stats.completed, 2);
+}
+
+// ------------------------------------------------------------- deadlines
+
+/// A queued request whose deadline passes (in virtual time) while the
+/// executor is busy fails fast with `DeadlineExceeded` instead of
+/// occupying a dispatch.
+#[test]
+fn queued_request_expires_at_its_virtual_deadline() {
+    let clock = Arc::new(VirtualClock::new());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let (exec, gate, entered) = gated(Arc::clone(&log));
+    let server = AsyncServer::start_with_clock(
+        ServingConfig { max_batch: 1, ..cfg() },
+        Arc::clone(&clock),
+        move || exec,
+    );
+    let a = server.submit(&[1], SubmitOpts::default()).unwrap();
+    entered.recv_timeout(RECV).unwrap(); // dispatcher now blocked on [1]
+    let b = server
+        .submit(&[2], SubmitOpts::default().with_deadline(Duration::from_millis(10)))
+        .unwrap();
+    clock.advance(Duration::from_millis(20));
+    for _ in 0..2 {
+        let _ = gate.send(());
+    }
+    assert!(a.recv_timeout(RECV).unwrap().is_ok());
+    match b.recv_timeout(RECV).unwrap() {
+        Err(ServeError::DeadlineExceeded { late_ns }) => {
+            assert_eq!(late_ns, 10_000_000, "expired exactly 10ms late in virtual time")
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(log.lock().unwrap().as_slice(), &[vec![1]], "the expired id never dispatched");
+}
+
+// ------------------------------------------------------------- admission
+
+/// The token bucket rejects over-rate submissions with a retry hint and
+/// refills purely from virtual time.
+#[test]
+fn token_bucket_refills_on_virtual_time() {
+    let clock = Arc::new(VirtualClock::new());
+    let config = ServingConfig {
+        admission_qps: Some(1000.0), // 1 id per virtual millisecond
+        admission_burst: Some(2.0),
+        ..cfg()
+    };
+    let server = AsyncServer::start_with_clock(config, Arc::clone(&clock), || echo);
+    let mut rxs = vec![
+        server.submit(&[0], SubmitOpts::default()).unwrap(),
+        server.submit(&[1], SubmitOpts::default()).unwrap(),
+    ];
+    match server.submit(&[2], SubmitOpts::default()) {
+        Err(ServeError::Overloaded { retry_after_ns }) => {
+            assert!(retry_after_ns > 0, "reject must carry a backoff hint");
+            assert!(retry_after_ns <= 1_000_000, "one token arrives within 1ms");
+        }
+        other => panic!("expected Overloaded, got {:?}", other.err()),
+    }
+    clock.advance(Duration::from_millis(1)); // exactly one token back
+    rxs.push(server.submit(&[3], SubmitOpts::default()).unwrap());
+    clock.advance(Duration::from_millis(2)); // flush the partial wave
+    for rx in rxs {
+        assert!(rx.recv_timeout(RECV).unwrap().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejected_overloaded, 1);
+    assert_eq!(stats.completed, 3);
+}
+
+// ------------------------------------------------------------ scheduling
+
+/// Within a class, dispatch is earliest-deadline-first: a tighter
+/// deadline submitted later overtakes an earlier, looser one.
+#[test]
+fn earliest_deadline_overtakes_within_a_class() {
+    let clock = Arc::new(VirtualClock::new());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let (exec, gate, entered) = gated(Arc::clone(&log));
+    let server = AsyncServer::start_with_clock(
+        ServingConfig { max_batch: 1, ..cfg() },
+        clock,
+        move || exec,
+    );
+    let g = server.submit(&[99], SubmitOpts::default()).unwrap();
+    entered.recv_timeout(RECV).unwrap(); // queue shaping happens while blocked
+    let loose = server
+        .submit(&[1], SubmitOpts::default().with_deadline(Duration::from_millis(100)))
+        .unwrap();
+    let tight = server
+        .submit(&[2], SubmitOpts::default().with_deadline(Duration::from_millis(10)))
+        .unwrap();
+    for _ in 0..3 {
+        let _ = gate.send(());
+    }
+    for rx in [g, tight, loose] {
+        assert!(rx.recv_timeout(RECV).unwrap().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(
+        log.lock().unwrap().as_slice(),
+        &[vec![99], vec![2], vec![1]],
+        "10ms deadline dispatches before the earlier-submitted 100ms one"
+    );
+}
+
+/// FIFO tie-break: a large deadline-less batch admitted early is served
+/// ahead of singletons submitted after it — no starvation by small
+/// requests.
+#[test]
+fn big_batch_is_not_starved_by_later_singletons() {
+    let clock = Arc::new(VirtualClock::new());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let (exec, gate, entered) = gated(Arc::clone(&log));
+    let server = AsyncServer::start_with_clock(
+        ServingConfig { max_batch: 2, ..cfg() },
+        clock,
+        move || exec,
+    );
+    // two ids so the gate wave closes by size (the clock is frozen)
+    let g = server.submit(&[98, 99], SubmitOpts::default()).unwrap();
+    entered.recv_timeout(RECV).unwrap();
+    let big = server.submit(&[10, 11, 12, 13, 14, 15], SubmitOpts::default()).unwrap();
+    let s1 = server.submit(&[20], SubmitOpts::default()).unwrap();
+    let s2 = server.submit(&[21], SubmitOpts::default()).unwrap();
+    for _ in 0..8 {
+        let _ = gate.send(());
+    }
+    assert!(g.recv_timeout(RECV).unwrap().is_ok());
+    let rows = big.recv_timeout(RECV).unwrap().unwrap();
+    assert_eq!(rows.len(), 6, "the whole batch is reassembled across rounds");
+    assert!(s1.recv_timeout(RECV).unwrap().is_ok());
+    assert!(s2.recv_timeout(RECV).unwrap().is_ok());
+    let _ = server.shutdown();
+    let flat: Vec<u32> = log.lock().unwrap().iter().flatten().copied().collect();
+    assert_eq!(
+        flat,
+        vec![98, 99, 10, 11, 12, 13, 14, 15, 20, 21],
+        "the early big batch dispatches fully before later singletons"
+    );
+}
+
+/// Class 0 is strictly more urgent: it overtakes queued class-1 work
+/// regardless of submission order.
+#[test]
+fn class_zero_overtakes_class_one() {
+    let clock = Arc::new(VirtualClock::new());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let (exec, gate, entered) = gated(Arc::clone(&log));
+    let server = AsyncServer::start_with_clock(
+        ServingConfig { max_batch: 1, priority_lanes: 2, ..cfg() },
+        clock,
+        move || exec,
+    );
+    let g = server.submit(&[99], SubmitOpts::class(1)).unwrap();
+    entered.recv_timeout(RECV).unwrap();
+    let background = server.submit(&[1], SubmitOpts::class(1)).unwrap();
+    let urgent = server.submit(&[2], SubmitOpts::class(0)).unwrap();
+    for _ in 0..3 {
+        let _ = gate.send(());
+    }
+    for rx in [g, urgent, background] {
+        assert!(rx.recv_timeout(RECV).unwrap().is_ok());
+    }
+    let stats = server.shutdown();
+    assert_eq!(
+        log.lock().unwrap().as_slice(),
+        &[vec![99], vec![2], vec![1]],
+        "class 0 dispatches before earlier class-1 work"
+    );
+    assert_eq!(stats.classes[0].requests, 1);
+    assert_eq!(stats.classes[1].requests, 2);
+}
+
+// ------------------------------------------------------------- telemetry
+
+/// On the virtual clock, throughput is exact arithmetic: 4 ids over one
+/// advanced second is 4.0 ids/s, in aggregate and in the class row.
+#[test]
+fn virtual_clock_makes_throughput_deterministic() {
+    let clock = Arc::new(VirtualClock::new());
+    let server = AsyncServer::start_with_clock(cfg(), Arc::clone(&clock), || echo);
+    let rxs: Vec<_> =
+        (0..4).map(|i| server.submit(&[i], SubmitOpts::default()).unwrap()).collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(RECV).unwrap().is_ok());
+    }
+    clock.advance(Duration::from_secs(1));
+    let stats = server.shutdown();
+    assert!((stats.throughput_rps - 4.0).abs() < 1e-9, "got {}", stats.throughput_rps);
+    assert!((stats.classes[0].qps - 4.0).abs() < 1e-9);
+    assert_eq!(stats.classes[0].submitted, 4);
+    assert_eq!(stats.classes[0].completed, 4);
+}
+
+// ------------------------------------------------------ overload shedding
+
+/// Sustained over-capacity load: the queue depth stays bounded by
+/// `queue_cap`, excess submissions shed with typed errors, every
+/// admitted request still completes, and the class percentiles come out
+/// ordered and non-degenerate. (Real clock: this is a load test, the
+/// *outcome* bounds are deterministic even though timing is not.)
+#[test]
+fn over_capacity_load_is_shed_typed_and_bounded() {
+    let config = ServingConfig {
+        max_batch: 4,
+        flush_after: Duration::from_millis(1),
+        queue_cap: 8,
+        admission_qps: Some(2000.0),
+        admission_burst: Some(8.0),
+        priority_lanes: 1,
+        ..Default::default()
+    };
+    let server = AsyncServer::start(config, |ids: &[u32]| -> Result<Vec<Vec<f32>>> {
+        std::thread::sleep(Duration::from_micros(200)); // ~capacity limiter
+        echo(ids)
+    });
+    let mut accepted = Vec::new();
+    let (mut overloaded, mut queue_full) = (0u64, 0u64);
+    for i in 0..400u32 {
+        match server.submit(&[i], SubmitOpts::default()) {
+            Ok(rx) => accepted.push(rx),
+            Err(ServeError::Overloaded { .. }) => overloaded += 1,
+            Err(ServeError::QueueFull { queued, cap }) => {
+                assert!(queued <= cap, "reject reports a within-bound depth");
+                queue_full += 1;
+            }
+            Err(other) => panic!("unexpected admission error: {other:?}"),
+        }
+    }
+    assert!(!accepted.is_empty(), "some of the offered load must be admitted");
+    assert!(overloaded + queue_full > 0, "400 rushed singles must overload admission");
+    for rx in accepted {
+        assert!(rx.recv_timeout(RECV).unwrap().is_ok(), "admitted requests complete");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.rejected_overloaded, overloaded);
+    assert_eq!(stats.rejected_queue_full, queue_full);
+    assert!(stats.peak_queued <= 8, "queue never exceeds cap: {}", stats.peak_queued);
+    let c = &stats.classes[0];
+    assert!(c.p50_ns > 0, "real-clock latencies are nonzero");
+    assert!(c.p50_ns <= c.p95_ns && c.p95_ns <= c.p99_ns, "percentiles are ordered");
+    assert!(c.max_ns >= c.p99_ns);
+}
+
+// ------------------------------------------------------------ bit-identity
+
+fn ci_builder(model: ModelId, shards: Option<usize>, reuse: bool) -> SessionBuilder {
+    let mut b = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1));
+    if let Some(k) = shards {
+        b = b.partition(PartitionSpec::new(k));
+    }
+    if reuse {
+        b = b.reuse(ReuseSpec::rows(1 << 14));
+    }
+    b
+}
+
+/// Mirror of the dispatcher's lane-grouped chunking against a plain
+/// session: group positions by owner lane, dispatch rounds of ≤`cap`
+/// ids per lane through `run_batch`, reassemble by position. With one
+/// lane this degenerates to a single `run_batch` call.
+fn sync_oracle(session: &mut Session, ids: &[u32], lanes: usize, cap: usize) -> Vec<Vec<f32>> {
+    if lanes <= 1 {
+        return session.run_batch(ids).unwrap();
+    }
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); lanes];
+    for (pos, &id) in ids.iter().enumerate() {
+        groups[session.shard_of(id).unwrap_or(0).min(lanes - 1)].push(pos);
+    }
+    let mut slots: Vec<Option<Vec<f32>>> = ids.iter().map(|_| None).collect();
+    let rounds = groups.iter().map(|g| g.len().div_ceil(cap)).max().unwrap_or(0);
+    for round in 0..rounds {
+        let chunk: Vec<usize> = groups
+            .iter()
+            .flat_map(|g| g.iter().skip(round * cap).take(cap).copied())
+            .collect();
+        let chunk_ids: Vec<u32> = chunk.iter().map(|&p| ids[p]).collect();
+        for (&p, row) in chunk.iter().zip(session.run_batch(&chunk_ids).unwrap()) {
+            slots[p] = Some(row);
+        }
+    }
+    slots.into_iter().map(|r| r.expect("every position covered")).collect()
+}
+
+/// The headline acceptance: async replies are bit-identical to the
+/// synchronous `run_batch` path for every model × shards {1,2} × reuse
+/// on/off. Requests are awaited one at a time so both sides execute the
+/// same dispatch sequence (which is what pins reuse-cache evolution).
+#[test]
+fn async_replies_match_sync_path_bit_identically() {
+    let batches: [&[u32]; 3] =
+        [&[0, 1, 2, 3, 4, 5], &[2, 3, 8, 9], &[0, 1, 2, 3, 4, 5]];
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        for shards in [None, Some(2)] {
+            for reuse in [false, true] {
+                let lanes = shards.unwrap_or(1);
+                let mut sync = ci_builder(model, shards, reuse).build().unwrap();
+                let server = ci_builder(model, shards, reuse).serve_async(ServingConfig {
+                    max_batch: 16,
+                    flush_after: Duration::from_millis(1),
+                    priority_lanes: 1,
+                    ..Default::default()
+                });
+                for ids in batches {
+                    let rx = server.submit(ids, SubmitOpts::default()).unwrap();
+                    let got = rx.recv_timeout(RECV).unwrap().unwrap();
+                    let want = sync_oracle(&mut sync, ids, lanes, 16);
+                    assert_eq!(
+                        got, want,
+                        "{model:?} shards={shards:?} reuse={reuse}: async reply \
+                         must be bit-identical to the sync path"
+                    );
+                }
+                let stats = server.shutdown();
+                assert_eq!(stats.completed, 16, "6+4+6 ids across the three batches");
+                if reuse {
+                    let r = stats.reuse.expect("reuse stats surface through serving");
+                    assert!(
+                        r.proj_hits + r.agg_hits > 0,
+                        "{model:?} shards={shards:?}: repeated batch must hit the cache"
+                    );
+                }
+            }
+        }
+    }
+}
