@@ -1,0 +1,185 @@
+//! Bench: **streaming graph updates — epoch-flip cost and served tail
+//! latency under churn**.
+//!
+//! Two questions the dynamic subsystem answers:
+//!
+//! 1. *What does a flip cost?* The barrier recomputes NA only for the
+//!    touched destination rows over compact patch sub-CSRs, so the
+//!    pause should scale with the number of touched rows — not with the
+//!    graph. The sweep grows updates-per-flip and reports the pause,
+//!    the recomputed row count and the evictions per flip.
+//! 2. *What does churn do to serving?* The same request stream is
+//!    replayed against an [`hgnn_char::serving::AsyncServer`] while an
+//!    updater applies batches and flips at increasing rates. Because
+//!    the barrier runs strictly between waves, p50 should barely move
+//!    and p99 should degrade gracefully (bounded by the flip pause),
+//!    never reject.
+//!
+//! Run: `cargo bench --bench update_throughput`
+
+use std::time::{Duration, Instant};
+
+use hgnn_char::bench::header;
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::dynamic::{DynamicSpec, GraphUpdate};
+use hgnn_char::graph::HeteroGraph;
+use hgnn_char::models::ModelId;
+use hgnn_char::serving::{ServingConfig, SubmitOpts};
+use hgnn_char::session::{Session, SessionBuilder};
+use hgnn_char::util::{human_time, Pcg32};
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.25)
+    }
+}
+
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(scale())
+        .model(ModelId::Han)
+        .dynamic(DynamicSpec::default())
+}
+
+/// `n` random updates valid against the base counts: edge inserts
+/// (duplicates are no-ops; new edges touch their destination row) mixed
+/// with feature rewrites (each evicts one projection key). No node
+/// growth, so request ids stay valid across every flip.
+fn churn(hg: &HeteroGraph, n: usize, rng: &mut Pcg32) -> Vec<GraphUpdate> {
+    (0..n)
+        .map(|i| {
+            if i % 4 == 3 {
+                let ty = rng.gen_range(hg.node_types().len());
+                let t = hg.node_type(ty);
+                GraphUpdate::SetFeatures {
+                    ty,
+                    node: rng.gen_range(t.count) as u32,
+                    features: vec![rng.gen_f32(); t.feat_dim],
+                }
+            } else {
+                let rel = rng.gen_range(hg.relations().len());
+                let r = hg.relation(rel);
+                GraphUpdate::AddEdge {
+                    relation: rel,
+                    dst: rng.gen_range(r.adj.n_rows) as u32,
+                    src: rng.gen_range(r.adj.n_cols) as u32,
+                }
+            }
+        })
+        .collect()
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[i]
+}
+
+const BATCH: usize = 16;
+
+fn main() {
+    header(
+        "streaming updates: epoch-flip cost and served tail latency under churn",
+        "HAN over IMDB synth; flips patch a materialized forward in place",
+    );
+    let quick = std::env::var("QUICK_BENCH").is_ok();
+
+    let probe = builder().build().unwrap();
+    let base = probe.graph().clone();
+    let n_target = base.node_type(probe.plan().target).count;
+    println!("{}  (target nodes: {n_target}, batch {BATCH})\n", base.stats_line());
+    drop(probe);
+
+    // -- 1: flip cost vs updates per flip ---------------------------------
+    println!("-- epoch-flip cost vs updates per flip (patching the full forward) --");
+    let mut session = builder().build().unwrap();
+    let _ = session.run().unwrap(); // materialize the NA bank the flips patch
+    let mut rng = Pcg32::new(0xD15C0, 7);
+    let mut rows_seen: Vec<usize> = Vec::new();
+    for &n in &[1usize, 8, 64, 256] {
+        let updates = churn(session.graph(), n, &mut rng);
+        session.apply_updates(updates).unwrap();
+        let t0 = Instant::now();
+        let report = session.flip_epoch().unwrap();
+        let wall = t0.elapsed();
+        rows_seen.push(report.na_rows_recomputed);
+        println!(
+            "  {n:>4} updates/flip  pause {:>9}  na rows {:>6}  evicted agg {:>5}  \
+             shards {:>2}  wall {:>9}",
+            human_time(report.pause_nanos as f64),
+            report.na_rows_recomputed,
+            report.evicted_agg,
+            report.shards_patched,
+            human_time(wall.as_nanos() as f64),
+        );
+    }
+    let scales = rows_seen.last().copied().unwrap_or(0) >= rows_seen.first().copied().unwrap_or(0);
+    println!(
+        "  -> recomputed rows grow with churn, not with the graph: {}\n",
+        if scales { "yes" } else { "NO (duplicate-heavy stream or regression)" }
+    );
+
+    // -- 2: served tail latency under a concurrent update stream ----------
+    println!("-- served p50/p99 while an updater applies batches and flips --");
+    let batches = if quick { 24 } else { 96 };
+    let sweeps: [(&str, usize, usize); 3] = [
+        ("baseline: no updates        ", 0, 0),
+        ("gentle:   8 upd every 8 waves", 8, 8),
+        ("churny:  32 upd every 2 waves", 2, 32),
+    ];
+    let mut p99_base: Option<f64> = None;
+    for &(label, every, per) in &sweeps {
+        let server = builder().serve_async(ServingConfig {
+            max_batch: BATCH,
+            flush_after: Duration::from_millis(1),
+            ..Default::default()
+        });
+        let mut rng = Pcg32::new(0xFACADE, 11);
+        let mut lat: Vec<Duration> = Vec::with_capacity(batches);
+        let mut flip_rxs = Vec::new();
+        for b in 0..batches {
+            if every > 0 && b > 0 && b % every == 0 {
+                let updates = churn(&base, per, &mut rng);
+                let _ = server.apply_updates(updates);
+                if let Ok(rx) = server.flip_epoch() {
+                    flip_rxs.push(rx);
+                }
+            }
+            let ids: Vec<u32> = (0..BATCH).map(|_| rng.gen_range(n_target) as u32).collect();
+            let t0 = Instant::now();
+            let rx = server.submit(&ids, SubmitOpts::default()).unwrap();
+            rx.recv().unwrap().unwrap();
+            lat.push(t0.elapsed());
+        }
+        let mut pauses: Vec<u64> = Vec::new();
+        for rx in flip_rxs {
+            if let Ok(Ok(report)) = rx.recv() {
+                pauses.push(report.pause_nanos);
+            }
+        }
+        let _ = server.shutdown();
+        lat.sort();
+        let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+        let pause = if pauses.is_empty() {
+            "-".to_string()
+        } else {
+            human_time(pauses.iter().sum::<u64>() as f64 / pauses.len() as f64)
+        };
+        println!(
+            "  {label}  p50 {:>9}  p99 {:>9}  flips {:>3}  mean pause {:>9}",
+            human_time(p50.as_nanos() as f64),
+            human_time(p99.as_nanos() as f64),
+            pauses.len(),
+            pause,
+        );
+        match p99_base {
+            None => p99_base = Some(p99.as_nanos() as f64),
+            Some(b0) => {
+                let ratio = p99.as_nanos() as f64 / b0.max(1.0);
+                println!("      -> p99 vs baseline: {ratio:.2}x (barrier runs between waves)");
+            }
+        }
+    }
+}

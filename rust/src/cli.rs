@@ -177,6 +177,29 @@ impl Args {
         Ok(tuning)
     }
 
+    /// Streaming-update spec from `--update-stream <file>
+    /// [--epoch-every <n>]` (default `None`: static serving).
+    /// `--epoch-every` counts served batches between epoch flips
+    /// (default 1: flip after every batch) and is rejected at parse
+    /// level when zero or orphaned, mirroring `--shard-threads`.
+    pub fn update_stream(&self) -> Result<Option<UpdateStreamSpec>> {
+        if !self.has("update-stream") {
+            if self.has("epoch-every") {
+                return Err(Error::config("--epoch-every requires --update-stream"));
+            }
+            return Ok(None);
+        }
+        let path = self.flag_str("update-stream", "");
+        if path.is_empty() || path == "true" {
+            return Err(Error::config("--update-stream needs a file path"));
+        }
+        let epoch_every = self.flag_usize("epoch-every", 1)?;
+        if epoch_every == 0 {
+            return Err(Error::config("--epoch-every must be >= 1"));
+        }
+        Ok(Some(UpdateStreamSpec { path, epoch_every }))
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -193,6 +216,17 @@ impl Args {
             }
         }
     }
+}
+
+/// Streaming-update replay parsed by [`Args::update_stream`]: a file of
+/// graph updates (see [`crate::dynamic::parse_update_stream`]) applied
+/// through the serving epoch barrier while the demo loop submits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UpdateStreamSpec {
+    /// Path to the update-stream file (`--update-stream`).
+    pub path: String,
+    /// Served batches between epoch flips (`--epoch-every`, default 1).
+    pub epoch_every: usize,
 }
 
 /// Serving-runtime tuning knobs parsed by [`Args::serve_tuning`].
@@ -263,6 +297,11 @@ COMMANDS:
                                    rejected with a typed Overloaded
       [--queue-cap C]              bounded submit queue depth (default
                                    4096); overflow rejects as QueueFull
+      [--update-stream FILE]       replay streaming graph updates from
+                                   FILE (lines: edge/node/feat) through
+                                   the epoch barrier while serving
+      [--epoch-every N]            served batches between epoch flips
+                                   (default 1; requires --update-stream)
   help                           this text
 ";
 
@@ -490,8 +529,45 @@ mod tests {
     }
 
     #[test]
+    fn update_stream_flag_parsing() {
+        // absent: static serving
+        assert_eq!(parse("serve").update_stream().unwrap(), None);
+        // present: spec with epoch-every defaulting to 1
+        let spec = parse("serve --update-stream updates.txt").update_stream().unwrap().unwrap();
+        assert_eq!(spec.path, "updates.txt");
+        assert_eq!(spec.epoch_every, 1);
+        let spec = parse("serve --update-stream=u.txt --epoch-every=4")
+            .update_stream()
+            .unwrap()
+            .unwrap();
+        assert_eq!(spec.path, "u.txt");
+        assert_eq!(spec.epoch_every, 4);
+        // degenerate values rejected at parse level
+        assert!(parse("serve --update-stream u.txt --epoch-every 0").update_stream().is_err());
+        assert!(parse("serve --update-stream u.txt --epoch-every nah").update_stream().is_err());
+        // bare switch (no path) and orphaned --epoch-every rejected
+        assert!(parse("serve --update-stream").update_stream().is_err());
+        assert!(parse("serve --update-stream=").update_stream().is_err());
+        assert!(parse("serve --epoch-every 2").update_stream().is_err());
+        // composes with the rest of the serving incantation
+        let a = parse(
+            "serve --requests 64 --fanout 8 --shards 2 \
+             --update-stream u.txt --epoch-every 8",
+        );
+        assert_eq!(a.update_stream().unwrap().unwrap().epoch_every, 8);
+        assert_eq!(a.partition().unwrap().unwrap().shards, 2);
+    }
+
+    #[test]
     fn usage_mentions_serve_tuning_flags() {
-        for flag in ["--deadline-ms", "--priority-lanes", "--admission-qps", "--queue-cap"] {
+        for flag in [
+            "--deadline-ms",
+            "--priority-lanes",
+            "--admission-qps",
+            "--queue-cap",
+            "--update-stream",
+            "--epoch-every",
+        ] {
             assert!(USAGE.contains(flag), "usage missing {flag}");
         }
     }

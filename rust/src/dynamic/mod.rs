@@ -1,0 +1,771 @@
+//! Streaming graph updates with epoch-barrier snapshot serving.
+//!
+//! The paper characterizes HGNN inference over a frozen graph, and every
+//! structure built on top of that characterization here — metapath
+//! sub-CSRs, degree-balanced partitions, reuse caches, serving lanes —
+//! inherits the freeze. This module opens the dynamic axis without
+//! giving up any of them:
+//!
+//! * An [`UpdateLog`] accepts edge/node insertions and feature/weight
+//!   updates **while serving continues** against the current immutable
+//!   snapshot (the session's graph + plan are untouched until a flip, so
+//!   snapshot isolation is structural, not locked).
+//! * An **epoch barrier** (`Session::flip_epoch`; [`EpochBarrier`] is
+//!   the serving-side control message) atomically applies the pending
+//!   log: affected sub-CSRs are re-derived, the reuse caches drop *only*
+//!   the touched `(type, node)` / `(subgraph, dst)` keys, dirty
+//!   partition shards rebuild their local CSRs and halo tables, and NA
+//!   is recomputed **only for touched destination rows** on a compact
+//!   patch sub-CSR (`session::exec::execute_patch`).
+//!
+//! The risingwave barrier/materialize pattern (`/root/related/`) is the
+//! architectural ground: updates buffer in a log, consistency points are
+//! explicit barriers, and readers always see a complete epoch.
+//!
+//! ## What "touched" means, per model
+//!
+//! Every NA variant is destination-row-local given the projected
+//! features (see [`crate::reuse`]), so the touched set of a subgraph is
+//! exactly the set of destination rows whose *inputs* changed:
+//!
+//! * **Structure** — after re-deriving an affected subgraph's adjacency
+//!   (relation clone for R-GCN's relation walk, [`walk_metapath`] for
+//!   HAN/MAGNN), rows whose neighbor lists differ from the previous
+//!   epoch's are touched; appended rows (new destination nodes) always
+//!   are. Diffing re-derived rows is exact — no over-approximation from
+//!   reasoning about hop composition.
+//! * **Features** — a rewritten feature row `(ty, v)` touches every
+//!   destination whose neighbor list contains `v` in subgraphs with
+//!   source type `ty`, plus row `v` itself in attention models (HAN and
+//!   MAGNN consume `h_dst`). R-GCN projects learned embeddings, not raw
+//!   features, so feature rewrites touch nothing there — but they are
+//!   still applied to the graph for future cold builds.
+//! * **Weights** — globally coupled: a weight swap degrades to a full
+//!   invalidation (every cached row is a function of the weights).
+//!
+//! Semantic Aggregation is recomputed in full at each flip: HAN/MAGNN's
+//! β weights average attention scores over *all* target rows, so SA is
+//! never row-local. The headline guarantee — pinned across models ×
+//! shards × reuse by `tests/integration_dynamic.rs` — is that post-flip
+//! outputs are **bit-identical** to a cold session built from the
+//! fully-applied graph.
+
+use std::collections::BTreeSet;
+
+use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
+use crate::metapath::{metapath_uses_relation, walk_metapath};
+use crate::models::{ModelId, ModelPlan, ModelWeights};
+use crate::{Error, Result};
+
+/// Configuration of a dynamic (streaming-update) session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DynamicSpec {
+    /// Maximum updates the log buffers before `apply_updates` rejects
+    /// (backpressure toward the updater, never toward serving).
+    pub max_pending: usize,
+}
+
+impl DynamicSpec {
+    /// Explicit pending-update bound.
+    pub fn pending(max_pending: usize) -> DynamicSpec {
+        DynamicSpec { max_pending }
+    }
+}
+
+impl Default for DynamicSpec {
+    /// 64Ki pending updates.
+    fn default() -> Self {
+        DynamicSpec { max_pending: 1 << 16 }
+    }
+}
+
+/// One buffered graph or parameter update.
+#[derive(Debug, Clone)]
+pub enum GraphUpdate {
+    /// Insert a directed edge `src -> dst` into a relation (duplicate
+    /// edges are no-ops, matching the CSR's set semantics).
+    AddEdge {
+        /// Relation receiving the edge.
+        relation: RelationId,
+        /// Destination node id (a row of the relation's CSR).
+        dst: u32,
+        /// Source node id (a column).
+        src: u32,
+    },
+    /// Append a node of `ty` with the given raw feature row; it becomes
+    /// addressable by subsequent updates in the same batch.
+    AddNode {
+        /// Node type to grow.
+        ty: NodeTypeId,
+        /// Raw feature row, `feat_dim` wide.
+        features: Vec<f32>,
+    },
+    /// Overwrite one node's raw feature row.
+    SetFeatures {
+        /// Node type.
+        ty: NodeTypeId,
+        /// Node id within the type.
+        node: u32,
+        /// New raw feature row, `feat_dim` wide.
+        features: Vec<f32>,
+    },
+    /// Swap the full parameter set at the barrier (degrades the flip to
+    /// a full reuse invalidation — weights couple every cached row).
+    SetWeights(Box<ModelWeights>),
+}
+
+/// The bounded buffer of not-yet-applied updates. Serving never reads
+/// it; the epoch barrier drains it.
+#[derive(Debug, Default)]
+pub struct UpdateLog {
+    pending: Vec<GraphUpdate>,
+    max_pending: usize,
+    appended: u64,
+}
+
+impl UpdateLog {
+    /// Empty log with the spec's pending bound.
+    pub fn new(spec: DynamicSpec) -> UpdateLog {
+        UpdateLog { pending: Vec::new(), max_pending: spec.max_pending, appended: 0 }
+    }
+
+    /// Buffer a batch of updates; returns the pending count after the
+    /// append, or an error (buffering nothing) when the batch would
+    /// exceed the bound.
+    pub fn append(&mut self, updates: Vec<GraphUpdate>) -> Result<usize> {
+        if self.pending.len() + updates.len() > self.max_pending {
+            return Err(Error::config(format!(
+                "update log full: {} pending + {} appended > {} max",
+                self.pending.len(),
+                updates.len(),
+                self.max_pending
+            )));
+        }
+        self.appended += updates.len() as u64;
+        self.pending.extend(updates);
+        Ok(self.pending.len())
+    }
+
+    /// Pending (not yet applied) updates.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Total updates ever appended (applied or pending).
+    pub fn total_appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Take every pending update, leaving the log empty.
+    pub fn drain(&mut self) -> Vec<GraphUpdate> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+/// An immutable description of the epoch a session currently serves:
+/// what a reader observes between barriers. Structural equality of two
+/// snapshots is the test-suite's isolation witness.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphSnapshot {
+    /// Epoch counter (0 at build; +1 per flip).
+    pub epoch: u64,
+    /// Per-type node counts.
+    pub node_counts: Vec<usize>,
+    /// Per-relation edge counts.
+    pub edge_counts: Vec<usize>,
+    /// Updates buffered but not yet visible.
+    pub pending_updates: usize,
+}
+
+impl GraphSnapshot {
+    /// Describe the epoch `hg` currently serves.
+    pub fn of(hg: &HeteroGraph, epoch: u64, pending_updates: usize) -> GraphSnapshot {
+        GraphSnapshot {
+            epoch,
+            node_counts: hg.node_types().iter().map(|t| t.count).collect(),
+            edge_counts: hg.relations().iter().map(|r| r.adj.nnz()).collect(),
+            pending_updates,
+        }
+    }
+}
+
+/// The serving-side barrier control: carried through the dispatcher's
+/// control queue and acknowledged only after in-flight waves drained and
+/// the flip completed — so every request dispatched before the barrier
+/// sees the old epoch and every request after it sees the new one.
+#[derive(Debug)]
+pub struct EpochBarrier {
+    /// Completion channel the flip's outcome is sent on.
+    pub ack: std::sync::mpsc::Sender<std::result::Result<EpochReport, String>>,
+}
+
+/// What one epoch flip did — the observability surface the bench and the
+/// kernel-count acceptance test read.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    /// Epoch after the flip.
+    pub epoch: u64,
+    /// Updates drained from the log and applied.
+    pub updates_applied: usize,
+    /// Subgraphs whose adjacency was re-derived (structure changed or
+    /// dimensions grew).
+    pub rebuilt_subgraphs: usize,
+    /// Subgraphs with a non-empty touched set (NA patch executed).
+    pub patched_subgraphs: usize,
+    /// Distinct (subgraph, dst) rows whose NA was recomputed.
+    pub na_rows_recomputed: usize,
+    /// Projection-cache keys evicted across lanes.
+    pub evicted_proj: u64,
+    /// Aggregate-cache keys evicted across lanes.
+    pub evicted_agg: u64,
+    /// Partition shards that rebuilt their local CSRs and halo tables
+    /// (0 for unpartitioned sessions).
+    pub shards_patched: usize,
+    /// True when a `SetWeights` degraded the flip to full invalidation.
+    pub full_invalidation: bool,
+    /// Wallclock the barrier held serving (the flip pause).
+    pub pause_nanos: u64,
+    /// Kernel profile of the incremental recompute (absent when the
+    /// session had no materialized full-graph forward to patch).
+    pub profile: Option<crate::profiler::Profile>,
+}
+
+impl EpochReport {
+    /// One-line human summary for the CLI and bench output.
+    pub fn line(&self) -> String {
+        format!(
+            "epoch {}: {} updates, {} subgraphs rebuilt, {} patched, \
+             {} NA rows recomputed, {}+{} cache keys evicted, {} shards patched, \
+             pause {}{}",
+            self.epoch,
+            self.updates_applied,
+            self.rebuilt_subgraphs,
+            self.patched_subgraphs,
+            self.na_rows_recomputed,
+            self.evicted_proj,
+            self.evicted_agg,
+            self.shards_patched,
+            crate::util::human_time(self.pause_nanos as f64),
+            if self.full_invalidation { " (full invalidation)" } else { "" },
+        )
+    }
+}
+
+/// The barrier-side change summary `apply_to_graph` computes while
+/// mutating the graph and plan: everything the session needs to patch
+/// caches, shards and the materialized forward.
+#[derive(Debug)]
+pub struct PatchSet {
+    /// Per subgraph: sorted distinct destination rows whose NA inputs
+    /// changed (structure diff + feature-touch scan).
+    pub touched: Vec<Vec<u32>>,
+    /// Per subgraph: whether the adjacency was re-derived.
+    pub rebuilt: Vec<bool>,
+    /// `(type, node)` feature rows rewritten (projection-cache keys).
+    pub feat_touched: Vec<(NodeTypeId, u32)>,
+    /// `(type, id)` nodes appended this flip.
+    pub new_nodes: Vec<(NodeTypeId, u32)>,
+    /// Replacement weights, applied by the session after graph growth
+    /// (last `SetWeights` in the batch wins).
+    pub new_weights: Option<Box<ModelWeights>>,
+    /// Updates applied.
+    pub updates_applied: usize,
+}
+
+impl PatchSet {
+    /// Total touched destination rows across subgraphs.
+    pub fn touched_rows(&self) -> usize {
+        self.touched.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Validate a batch against the graph without mutating it, simulating
+/// per-type counts as `AddNode`s land — so a bad update rejects the
+/// whole batch *before* any mutation and the flip stays atomic.
+pub fn validate_updates(hg: &HeteroGraph, updates: &[GraphUpdate]) -> Result<()> {
+    let mut counts: Vec<usize> = hg.node_types().iter().map(|t| t.count).collect();
+    for (i, u) in updates.iter().enumerate() {
+        let err = |msg: String| Err(Error::config(format!("update {i}: {msg}")));
+        match u {
+            GraphUpdate::AddEdge { relation, dst, src } => {
+                let Some(r) = hg.relations().get(*relation) else {
+                    return err(format!("unknown relation {relation}"));
+                };
+                if *dst as usize >= counts[r.dst] {
+                    return err(format!("dst {} >= {} {}s", dst, counts[r.dst], r.name));
+                }
+                if *src as usize >= counts[r.src] {
+                    return err(format!("src {} >= {} {}s", src, counts[r.src], r.name));
+                }
+            }
+            GraphUpdate::AddNode { ty, features } => {
+                let Some(t) = hg.node_types().get(*ty) else {
+                    return err(format!("unknown node type {ty}"));
+                };
+                if features.len() != t.feat_dim {
+                    return err(format!(
+                        "{} features for type {} (feat_dim {})",
+                        features.len(),
+                        t.name,
+                        t.feat_dim
+                    ));
+                }
+                counts[*ty] += 1;
+            }
+            GraphUpdate::SetFeatures { ty, node, features } => {
+                let Some(t) = hg.node_types().get(*ty) else {
+                    return err(format!("unknown node type {ty}"));
+                };
+                if *node as usize >= counts[*ty] {
+                    return err(format!("node {} >= {} {}s", node, counts[*ty], t.name));
+                }
+                if features.len() != t.feat_dim {
+                    return err(format!(
+                        "{} features for type {} (feat_dim {})",
+                        features.len(),
+                        t.name,
+                        t.feat_dim
+                    ));
+                }
+            }
+            GraphUpdate::SetWeights(_) => {}
+        }
+    }
+    Ok(())
+}
+
+/// Apply a validated batch to the graph and plan, re-deriving affected
+/// subgraph adjacencies and computing the exact touched sets.
+///
+/// Mutations performed here: graph edges/nodes/features, R-GCN embedding
+/// growth for appended nodes (deterministic stream extension, see
+/// [`ModelWeights::extend_embed`]), and the plan's subgraph sub-CSRs.
+/// Weight swaps are *not* applied — they are returned in the patch set
+/// for the session to route through its `set_weights` checks after
+/// graph growth.
+pub fn apply_to_graph(
+    hg: &mut HeteroGraph,
+    plan: &mut ModelPlan,
+    updates: Vec<GraphUpdate>,
+) -> Result<PatchSet> {
+    validate_updates(hg, &updates)?;
+    let updates_applied = updates.len();
+    let p = plan.num_subgraphs();
+
+    // 1. mutate the graph, recording which relations changed structurally
+    let mut rel_changed: BTreeSet<RelationId> = BTreeSet::new();
+    let mut feat_touched: Vec<(NodeTypeId, u32)> = Vec::new();
+    let mut new_nodes: Vec<(NodeTypeId, u32)> = Vec::new();
+    let mut new_weights: Option<Box<ModelWeights>> = None;
+    for u in updates {
+        match u {
+            GraphUpdate::AddEdge { relation, dst, src } => {
+                if hg.insert_edge(relation, dst, src)? {
+                    rel_changed.insert(relation);
+                }
+            }
+            GraphUpdate::AddNode { ty, features } => {
+                let id = hg.push_node(ty, &features)?;
+                new_nodes.push((ty, id));
+            }
+            GraphUpdate::SetFeatures { ty, node, features } => {
+                hg.set_feature_row(ty, node, &features)?;
+                feat_touched.push((ty, node));
+            }
+            GraphUpdate::SetWeights(w) => new_weights = Some(w),
+        }
+    }
+
+    // 2. grow R-GCN embedding tables for appended nodes (prefix-stable
+    // stream extension keeps cold-vs-incremental weights bit-identical)
+    for &(ty, _) in &new_nodes {
+        let count = hg.node_type(ty).count;
+        let config = plan.config.clone();
+        plan.weights.extend_embed(ty, count, &config);
+    }
+
+    // 3. re-derive affected subgraph adjacencies and diff rows
+    let mut touched: Vec<BTreeSet<u32>> = (0..p).map(|_| BTreeSet::new()).collect();
+    let mut rebuilt = vec![false; p];
+    for si in 0..p {
+        let sg = &plan.subgraphs.subgraphs[si];
+        let dims_grew = sg.adj.n_rows != hg.node_type(sg.dst_type).count
+            || sg.adj.n_cols != hg.node_type(sg.src_type).count;
+        let structure = match &sg.metapath {
+            // relation walk: subgraph order is relation order
+            None => rel_changed.contains(&si),
+            Some(mp) => rel_changed.iter().any(|&r| metapath_uses_relation(hg, mp, r)),
+        };
+        if !dims_grew && !structure {
+            continue;
+        }
+        rebuilt[si] = true;
+        let new_adj = match &sg.metapath {
+            None => hg.relation(si).adj.clone(),
+            Some(mp) => walk_metapath(hg, mp)?,
+        };
+        let old_adj = &sg.adj;
+        for r in 0..new_adj.n_rows {
+            if r >= old_adj.n_rows || old_adj.row(r) != new_adj.row(r) {
+                touched[si].insert(r as u32);
+            }
+        }
+        plan.subgraphs.subgraphs[si].adj = new_adj;
+    }
+
+    // 4. feature-touch scan: rewritten rows reach NA as sources
+    // everywhere, and as destinations in the attention models (HAN and
+    // MAGNN consume h_dst). R-GCN projects embeddings, not features.
+    if plan.model != ModelId::Rgcn {
+        for &(ty, v) in &feat_touched {
+            for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+                if sg.src_type == ty {
+                    for r in 0..sg.adj.n_rows {
+                        if sg.adj.row(r).binary_search(&v).is_ok() {
+                            touched[si].insert(r as u32);
+                        }
+                    }
+                }
+                if plan.model.uses_attention()
+                    && sg.dst_type == ty
+                    && (v as usize) < sg.adj.n_rows
+                {
+                    touched[si].insert(v);
+                }
+            }
+        }
+    }
+
+    Ok(PatchSet {
+        touched: touched.into_iter().map(|s| s.into_iter().collect()).collect(),
+        rebuilt,
+        feat_touched,
+        new_nodes,
+        new_weights,
+        updates_applied,
+    })
+}
+
+/// Parse a textual update stream into a batch, resolving relation and
+/// node-type *names* against the graph. One update per line:
+///
+/// ```text
+/// # comments and blank lines are skipped
+/// edge <relation-name> <dst-id> <src-id>
+/// node <type-name> <f0> <f1> ...
+/// feat <type-name> <node-id> <f0> <f1> ...
+/// ```
+///
+/// Node ids may reference nodes appended earlier in the same stream
+/// (bounds are checked at the barrier by [`validate_updates`], against
+/// the simulated growing counts).
+pub fn parse_update_stream(text: &str, hg: &HeteroGraph) -> Result<Vec<GraphUpdate>> {
+    let mut out = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let op = parts.next().unwrap_or_default();
+        let err =
+            |msg: String| Err(Error::config(format!("update stream line {}: {msg}", ln + 1)));
+        match op {
+            "edge" => {
+                let (Some(rel), Some(dst), Some(src)) =
+                    (parts.next(), parts.next(), parts.next())
+                else {
+                    return err("edge needs <relation> <dst> <src>".into());
+                };
+                let Some(relation) =
+                    hg.relations().iter().position(|r| r.name == rel)
+                else {
+                    return err(format!("unknown relation '{rel}'"));
+                };
+                let (Ok(dst), Ok(src)) = (dst.parse::<u32>(), src.parse::<u32>()) else {
+                    return err(format!("bad edge ids '{dst} {src}'"));
+                };
+                out.push(GraphUpdate::AddEdge { relation, dst, src });
+            }
+            "node" => {
+                let Some(tyname) = parts.next() else {
+                    return err("node needs <type> <features...>".into());
+                };
+                let ty = match hg.type_by_name(tyname) {
+                    Ok(ty) => ty,
+                    Err(_) => return err(format!("unknown node type '{tyname}'")),
+                };
+                let features = parse_floats(parts)
+                    .map_err(|m| Error::config(format!("update stream line {}: {m}", ln + 1)))?;
+                out.push(GraphUpdate::AddNode { ty, features });
+            }
+            "feat" => {
+                let (Some(tyname), Some(node)) = (parts.next(), parts.next()) else {
+                    return err("feat needs <type> <node> <features...>".into());
+                };
+                let ty = match hg.type_by_name(tyname) {
+                    Ok(ty) => ty,
+                    Err(_) => return err(format!("unknown node type '{tyname}'")),
+                };
+                let Ok(node) = node.parse::<u32>() else {
+                    return err(format!("bad node id '{node}'"));
+                };
+                let features = parse_floats(parts)
+                    .map_err(|m| Error::config(format!("update stream line {}: {m}", ln + 1)))?;
+                out.push(GraphUpdate::SetFeatures { ty, node, features });
+            }
+            other => return err(format!("unknown update op '{other}'")),
+        }
+    }
+    Ok(out)
+}
+
+fn parse_floats<'a>(parts: impl Iterator<Item = &'a str>) -> std::result::Result<Vec<f32>, String> {
+    parts
+        .map(|s| s.parse::<f32>().map_err(|_| format!("bad feature value '{s}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models::{self, ModelConfig};
+
+    fn imdb() -> HeteroGraph {
+        datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap()
+    }
+
+    #[test]
+    fn log_bounds_and_drain() {
+        let mut log = UpdateLog::new(DynamicSpec::pending(2));
+        let e = GraphUpdate::AddEdge { relation: 0, dst: 0, src: 0 };
+        assert_eq!(log.append(vec![e.clone()]).unwrap(), 1);
+        assert!(log.append(vec![e.clone(), e.clone()]).is_err(), "over bound rejects");
+        assert_eq!(log.len(), 1, "rejected batch buffered nothing");
+        assert_eq!(log.append(vec![e]).unwrap(), 2);
+        assert_eq!(log.total_appended(), 2);
+        let drained = log.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(log.is_empty());
+        assert_eq!(log.total_appended(), 2, "drain keeps the lifetime counter");
+    }
+
+    #[test]
+    fn validate_simulates_growing_counts() {
+        let hg = imdb();
+        let m = hg.type_by_tag('M').unwrap();
+        let dim = hg.node_type(m).feat_dim;
+        let count = hg.node_type(m).count as u32;
+        // referencing the about-to-be-added node is fine within a batch
+        let batch = vec![
+            GraphUpdate::AddNode { ty: m, features: vec![0.0; dim] },
+            GraphUpdate::SetFeatures { ty: m, node: count, features: vec![1.0; dim] },
+        ];
+        validate_updates(&hg, &batch).unwrap();
+        // but out-of-simulated-bounds still rejects
+        let bad = vec![GraphUpdate::SetFeatures { ty: m, node: count, features: vec![1.0; dim] }];
+        assert!(validate_updates(&hg, &bad).is_err());
+        assert!(validate_updates(
+            &hg,
+            &[GraphUpdate::AddEdge { relation: 99, dst: 0, src: 0 }]
+        )
+        .is_err());
+        assert!(validate_updates(&hg, &[GraphUpdate::AddNode { ty: m, features: vec![] }])
+            .is_err());
+    }
+
+    #[test]
+    fn rebuilt_adjacency_matches_cold_walk() {
+        // the patched plan's sub-CSRs must equal a cold build over the
+        // applied graph — the structural half of flip bit-identity
+        let mut hg = imdb();
+        let cfg = ModelConfig::default();
+        let mut plan = models::han_plan(&hg, &cfg).unwrap();
+        // pick a director that directs at least one movie (so the edge
+        // propagates into the composed MDM adjacency) and a movie not
+        // already in that director's row (so the insert is genuinely new)
+        let md = hg.relations().iter().position(|r| r.name == "M-D").unwrap();
+        let dm = hg.relations().iter().position(|r| r.name == "D-M").unwrap();
+        let d = (0..hg.relation(dm).adj.n_rows)
+            .filter_map(|r| hg.relation(dm).adj.row(r).first().copied())
+            .next()
+            .unwrap();
+        let row = hg.relation(md).adj.row(d as usize);
+        let c = (0..hg.relation(md).adj.n_cols as u32)
+            .find(|c| row.binary_search(c).is_err())
+            .unwrap();
+        let updates = vec![GraphUpdate::AddEdge { relation: md, dst: d, src: c }];
+        let patch = apply_to_graph(&mut hg, &mut plan, updates).unwrap();
+        assert_eq!(patch.updates_applied, 1);
+        let cold = models::han_plan(&hg, &cfg).unwrap();
+        for (sg, csg) in plan
+            .subgraphs
+            .subgraphs
+            .iter()
+            .zip(&cold.subgraphs.subgraphs)
+        {
+            assert_eq!(sg.adj, csg.adj, "{} adjacency diverged from cold walk", sg.name);
+        }
+        // MDM composes M-D: it must have been rebuilt, and every touched
+        // row's neighbor list indeed differs... while untouched rows kept
+        // their previous identity (diff-exactness)
+        assert!(patch.rebuilt.iter().any(|&b| b));
+        assert!(patch.touched_rows() > 0);
+    }
+
+    #[test]
+    fn duplicate_edge_touches_nothing() {
+        let mut hg = imdb();
+        let mut plan = models::rgcn_plan(&hg, &ModelConfig::default()).unwrap();
+        // re-insert an existing edge: structure unchanged, no touches
+        let rel = 0;
+        let adj = &hg.relation(rel).adj;
+        let (dst, src) = (0..adj.n_rows)
+            .find(|&r| !adj.row(r).is_empty())
+            .map(|r| (r as u32, adj.row(r)[0]))
+            .unwrap();
+        let patch = apply_to_graph(
+            &mut hg,
+            &mut plan,
+            vec![GraphUpdate::AddEdge { relation: rel, dst, src }],
+        )
+        .unwrap();
+        assert_eq!(patch.touched_rows(), 0);
+        assert!(patch.rebuilt.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn feature_touch_rgcn_vs_attention() {
+        // R-GCN projects embeddings: feature rewrites touch no NA rows.
+        // HAN consumes h_dst and h_src: the rewritten node's own row and
+        // every row listing it as a source are touched.
+        let mut hg = imdb();
+        let m = hg.type_by_tag('M').unwrap();
+        let dim = hg.node_type(m).feat_dim;
+        let upd = || vec![GraphUpdate::SetFeatures { ty: m, node: 0, features: vec![2.0; dim] }];
+
+        let mut rplan = models::rgcn_plan(&hg, &ModelConfig::default()).unwrap();
+        let patch = apply_to_graph(&mut hg.clone(), &mut rplan, upd()).unwrap();
+        assert_eq!(patch.touched_rows(), 0);
+        assert_eq!(patch.feat_touched, vec![(m, 0)]);
+
+        let mut hplan = models::han_plan(&hg, &ModelConfig::default()).unwrap();
+        let patch = apply_to_graph(&mut hg, &mut hplan, upd()).unwrap();
+        assert!(patch.touched_rows() > 0);
+        for (si, sg) in hplan.subgraphs.subgraphs.iter().enumerate() {
+            // node 0's own row is touched (h_dst), and so is every row
+            // whose neighbor list contains node 0
+            assert!(patch.touched[si].contains(&0));
+            for r in 0..sg.adj.n_rows {
+                let expects = sg.adj.row(r).binary_search(&0).is_ok() || r == 0;
+                assert_eq!(
+                    patch.touched[si].binary_search(&(r as u32)).is_ok(),
+                    expects,
+                    "{} row {r}",
+                    sg.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn add_node_grows_dims_and_embeds() {
+        let mut hg = imdb();
+        let cfg = ModelConfig::default();
+        let mut plan = models::rgcn_plan(&hg, &cfg).unwrap();
+        let m = hg.type_by_tag('M').unwrap();
+        let old = hg.node_type(m).count;
+        let dim = hg.node_type(m).feat_dim;
+        let patch = apply_to_graph(
+            &mut hg,
+            &mut plan,
+            vec![GraphUpdate::AddNode { ty: m, features: vec![0.5; dim] }],
+        )
+        .unwrap();
+        assert_eq!(patch.new_nodes, vec![(m, old as u32)]);
+        assert_eq!(hg.node_type(m).count, old + 1);
+        assert_eq!(plan.weights.embed[&m].rows(), old + 1);
+        // every subgraph with M rows grew and marks the appended row touched
+        for (si, sg) in plan.subgraphs.subgraphs.iter().enumerate() {
+            if sg.dst_type == m {
+                assert_eq!(sg.adj.n_rows, old + 1);
+                assert!(patch.touched[si].contains(&(old as u32)));
+            }
+        }
+        // cold plan over the applied graph agrees on every adjacency
+        let cold = models::rgcn_plan(&hg, &cfg).unwrap();
+        for (sg, csg) in plan.subgraphs.subgraphs.iter().zip(&cold.subgraphs.subgraphs) {
+            assert_eq!(sg.adj, csg.adj);
+        }
+        assert!(plan.weights.embed[&m].allclose(&cold.weights.embed[&m], 0.0, 0.0));
+    }
+
+    #[test]
+    fn snapshot_describes_epoch() {
+        let mut hg = imdb();
+        let a = GraphSnapshot::of(&hg, 0, 0);
+        assert_eq!(a, GraphSnapshot::of(&hg, 0, 0));
+        let m = hg.type_by_tag('M').unwrap();
+        let dim = hg.node_type(m).feat_dim;
+        hg.push_node(m, &vec![0.0; dim]).unwrap();
+        let b = GraphSnapshot::of(&hg, 1, 0);
+        assert_ne!(a, b);
+        assert_eq!(b.node_counts[m], a.node_counts[m] + 1);
+    }
+
+    #[test]
+    fn stream_parses_and_rejects() {
+        let hg = imdb();
+        let m_dim = hg.node_type(hg.type_by_tag('M').unwrap()).feat_dim;
+        let rel = &hg.relations()[0].name;
+        let feats = vec!["0.5"; m_dim].join(" ");
+        let text = format!(
+            "# a comment\n\nedge {rel} 0 1\nnode movie {feats}\nfeat movie 0 {feats}\n"
+        );
+        let updates = parse_update_stream(&text, &hg).unwrap();
+        assert_eq!(updates.len(), 3);
+        assert!(matches!(updates[0], GraphUpdate::AddEdge { dst: 0, src: 1, .. }));
+        assert!(matches!(updates[1], GraphUpdate::AddNode { .. }));
+        assert!(matches!(updates[2], GraphUpdate::SetFeatures { node: 0, .. }));
+        validate_updates(&hg, &updates).unwrap();
+
+        for bad in [
+            "edge nope 0 1",
+            "edge",
+            "node nobody 1.0",
+            "feat movie x 1.0",
+            "feat movie 0 zork",
+            "frobnicate 1 2",
+        ] {
+            assert!(parse_update_stream(bad, &hg).is_err(), "{bad:?} must reject");
+        }
+    }
+
+    #[test]
+    fn report_line_mentions_the_counts() {
+        let r = EpochReport {
+            epoch: 3,
+            updates_applied: 7,
+            rebuilt_subgraphs: 1,
+            patched_subgraphs: 2,
+            na_rows_recomputed: 9,
+            evicted_proj: 4,
+            evicted_agg: 5,
+            shards_patched: 1,
+            full_invalidation: false,
+            pause_nanos: 1_000,
+            profile: None,
+        };
+        let line = r.line();
+        assert!(line.contains("epoch 3"));
+        assert!(line.contains("9 NA rows"));
+        assert!(line.contains("4+5 cache keys"));
+        assert!(!line.contains("full invalidation"));
+    }
+}

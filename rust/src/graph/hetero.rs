@@ -146,6 +146,74 @@ impl HeteroGraph {
         out
     }
 
+    /// Insert a directed edge `src node -> dst node` into relation `rel`,
+    /// keeping the CSR row sorted. Returns `false` when the edge already
+    /// exists. This is the [`crate::dynamic`] update-log primitive; it is
+    /// only called at an epoch barrier, never while a snapshot is served.
+    pub fn insert_edge(&mut self, rel: RelationId, dst: u32, src: u32) -> Result<bool> {
+        let r = self
+            .relations
+            .get_mut(rel)
+            .ok_or_else(|| Error::NotFound(format!("relation id {rel}")))?;
+        r.adj.insert(dst as usize, src)
+    }
+
+    /// Append a node of type `ty` with the given raw feature row; returns
+    /// the new node id. Grows the row/column space of every relation
+    /// touching `ty` (the new node starts with no edges).
+    pub fn push_node(&mut self, ty: NodeTypeId, features: &[f32]) -> Result<u32> {
+        let t = self
+            .node_types
+            .get(ty)
+            .ok_or_else(|| Error::NotFound(format!("node type id {ty}")))?;
+        if features.len() != t.feat_dim {
+            return Err(Error::shape(format!(
+                "push_node({}): {} features, type has feat_dim {}",
+                t.name,
+                features.len(),
+                t.feat_dim
+            )));
+        }
+        let id = t.count as u32;
+        let mut data = self.features[ty].as_slice().to_vec();
+        data.extend_from_slice(features);
+        self.features[ty] = Tensor::from_vec(t.count + 1, t.feat_dim, data)?;
+        self.node_types[ty].count += 1;
+        for r in &mut self.relations {
+            if r.dst == ty {
+                r.adj.add_row();
+            }
+            if r.src == ty {
+                r.adj.add_col();
+            }
+        }
+        Ok(id)
+    }
+
+    /// Overwrite the raw feature row of one node.
+    pub fn set_feature_row(&mut self, ty: NodeTypeId, node: u32, row: &[f32]) -> Result<()> {
+        let t = self
+            .node_types
+            .get(ty)
+            .ok_or_else(|| Error::NotFound(format!("node type id {ty}")))?;
+        if node as usize >= t.count {
+            return Err(Error::shape(format!(
+                "set_feature_row({}): node {} >= count {}",
+                t.name, node, t.count
+            )));
+        }
+        if row.len() != t.feat_dim {
+            return Err(Error::shape(format!(
+                "set_feature_row({}): {} features, type has feat_dim {}",
+                t.name,
+                row.len(),
+                t.feat_dim
+            )));
+        }
+        self.features[ty].set_row(node as usize, row);
+        Ok(())
+    }
+
     /// Validate the whole container (shapes, CSR structure, index maps).
     pub fn validate(&self) -> Result<()> {
         if self.node_types.len() != self.features.len() {
@@ -307,6 +375,41 @@ mod tests {
         let adj = Csr::empty(4, 2);
         b.add_relation("bad", d, m, adj);
         assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn insert_edge_and_push_node_mutators() {
+        let mut g = tiny_graph();
+        // D-M is relation 0: rows = movies, cols = directors
+        assert!(g.insert_edge(0, 0, 1).unwrap());
+        assert!(!g.insert_edge(0, 0, 1).unwrap(), "duplicate edge is a no-op");
+        assert_eq!(g.relation(0).adj.row(0), &[0, 1]);
+        g.validate().unwrap();
+
+        // new movie: grows D-M rows and M-D cols
+        let id = g.push_node(0, &[9.0, 9.0, 9.0, 9.0]).unwrap();
+        assert_eq!(id, 3);
+        assert_eq!(g.node_type(0).count, 4);
+        assert_eq!(g.relation(0).adj.n_rows, 4);
+        assert_eq!(g.relation(1).adj.n_cols, 4);
+        assert_eq!(g.features(0).rows(), 4);
+        assert_eq!(g.features(0).row(3), &[9.0; 4]);
+        g.validate().unwrap();
+        // the new node starts edge-less and can receive edges
+        assert_eq!(g.relation(0).adj.row(3), &[] as &[u32]);
+        assert!(g.insert_edge(0, 3, 1).unwrap());
+        g.validate().unwrap();
+
+        // feature overwrite
+        g.set_feature_row(0, 3, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(g.features(0).row(3), &[1.0, 2.0, 3.0, 4.0]);
+
+        // shape / bounds errors
+        assert!(g.push_node(0, &[1.0]).is_err());
+        assert!(g.push_node(9, &[1.0]).is_err());
+        assert!(g.set_feature_row(0, 99, &[0.0; 4]).is_err());
+        assert!(g.set_feature_row(0, 0, &[0.0; 2]).is_err());
+        assert!(g.insert_edge(9, 0, 0).is_err());
     }
 
     #[test]

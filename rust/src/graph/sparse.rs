@@ -243,6 +243,43 @@ impl Csr {
         Csr { n_rows: self.n_rows, n_cols: self.n_cols, indptr, indices }
     }
 
+    /// Insert a single nonzero `(r, c)`, keeping the row's column ids
+    /// strictly sorted. Returns `false` (and leaves the matrix untouched)
+    /// when the entry is already present. The streaming-update path
+    /// ([`crate::dynamic`]) uses this to patch relation CSRs in place;
+    /// the O(nnz) tail shift is fine at update-log granularity.
+    pub fn insert(&mut self, r: usize, c: u32) -> Result<bool> {
+        if r >= self.n_rows || c as usize >= self.n_cols {
+            return Err(Error::shape(format!(
+                "insert ({r},{c}) out of bounds {}x{}",
+                self.n_rows, self.n_cols
+            )));
+        }
+        let lo = self.indptr[r] as usize;
+        let hi = self.indptr[r + 1] as usize;
+        let pos = match self.indices[lo..hi].binary_search(&c) {
+            Ok(_) => return Ok(false),
+            Err(p) => lo + p,
+        };
+        self.indices.insert(pos, c);
+        for p in &mut self.indptr[r + 1..] {
+            *p += 1;
+        }
+        Ok(true)
+    }
+
+    /// Append an empty row (a new destination node with no edges yet).
+    pub fn add_row(&mut self) {
+        self.n_rows += 1;
+        self.indptr.push(*self.indptr.last().unwrap());
+    }
+
+    /// Grow the column space by one (a new source node); purely a
+    /// dimension change, no nonzeros are added.
+    pub fn add_col(&mut self) {
+        self.n_cols += 1;
+    }
+
     /// Convert to ELL with row width `k`. Returns the ELL and the number
     /// of nonzeros truncated away (0 when `k >= max_degree`).
     pub fn to_ell(&self, k: usize) -> (Ell, usize) {
@@ -419,6 +456,39 @@ mod tests {
         let a = Csr::identity(3);
         let b = Csr::identity(4);
         assert!(a.bool_matmul(&b).is_err());
+    }
+
+    #[test]
+    fn insert_keeps_rows_sorted_unique() {
+        let mut csr = sample_csr();
+        assert!(csr.insert(0, 2).unwrap());
+        assert_eq!(csr.row(0), &[1, 2, 3]);
+        assert_eq!(csr.nnz(), 6);
+        csr.validate().unwrap();
+        // duplicate insert is a no-op
+        assert!(!csr.insert(0, 2).unwrap());
+        assert_eq!(csr.nnz(), 6);
+        // insert into a previously empty row
+        assert!(csr.insert(1, 0).unwrap());
+        assert_eq!(csr.row(1), &[0]);
+        assert_eq!(csr.row(2), &[0, 1, 2], "later rows must be unshifted");
+        csr.validate().unwrap();
+        // bounds
+        assert!(csr.insert(3, 0).is_err());
+        assert!(csr.insert(0, 4).is_err());
+    }
+
+    #[test]
+    fn add_row_and_col_grow_dims() {
+        let mut csr = sample_csr();
+        csr.add_row();
+        csr.add_col();
+        assert_eq!((csr.n_rows, csr.n_cols), (4, 5));
+        assert_eq!(csr.row(3), &[] as &[u32]);
+        csr.validate().unwrap();
+        assert!(csr.insert(3, 4).unwrap());
+        assert_eq!(csr.row(3), &[4]);
+        csr.validate().unwrap();
     }
 
     #[test]

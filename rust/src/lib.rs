@@ -72,6 +72,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod datasets;
+pub mod dynamic;
 pub mod engine;
 pub mod gpumodel;
 pub mod graph;
@@ -168,6 +169,9 @@ pub struct ReadmeDoctests;
 /// One-stop imports for examples, benches and downstream users.
 pub mod prelude {
     pub use crate::datasets::{self, DatasetId, DatasetScale};
+    pub use crate::dynamic::{
+        parse_update_stream, DynamicSpec, EpochReport, GraphSnapshot, GraphUpdate,
+    };
     pub use crate::gpumodel::{GpuModel, T4Spec};
     pub use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
     pub use crate::metapath::{Metapath, SubgraphSet};

@@ -8,6 +8,7 @@
 
 use hgnn_char::cli::{Args, USAGE};
 use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::dynamic::{parse_update_stream, DynamicSpec, GraphUpdate};
 use hgnn_char::gpumodel::{roofline, GpuModel};
 use hgnn_char::models::{self, ModelId};
 use hgnn_char::profiler::StageId;
@@ -326,6 +327,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let fanout = args.flag_usize("fanout", 0)?;
     let layers = args.flag_usize("sample-layers", 1)?;
     let reuse_cap = args.flag_usize("reuse-cap", 0)?;
+    let stream = args.update_stream()?;
     // the whole serving path lives behind the dispatcher: session
     // construction, then either the one-time full-graph forward (no
     // --fanout) or one sampled subgraph per dispatched batch (--fanout),
@@ -368,6 +370,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
+    // streaming graph updates: parse the stream against a graph built at
+    // the demo's dataset/scale (name → id resolution only; the updates
+    // themselves are validated when the dispatcher applies them), then
+    // replay it through the epoch barrier while requests are in flight
+    let mut pending_updates = std::collections::VecDeque::new();
+    if let Some(spec) = &stream {
+        let text = std::fs::read_to_string(&spec.path)?;
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci())?;
+        pending_updates.extend(parse_update_stream(&text, &hg)?);
+        builder = builder.dynamic(DynamicSpec::default());
+        println!(
+            "streaming updates: {} update(s) from {}, epoch flip every {} batch(es)",
+            pending_updates.len(),
+            spec.path,
+            spec.epoch_every
+        );
+    }
     // serving-runtime tuning: deadlines, priority classes, admission
     let tuning = args.serve_tuning()?;
     let mut config = ServingConfig { priority_lanes: tuning.priority_lanes, ..Default::default() };
@@ -391,11 +410,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = builder.serve_async(config);
     let ids: Vec<u32> = (0..n as u32).collect();
     let mut receivers = Vec::new();
+    let mut flip_rxs = Vec::new();
     let (mut rejected, mut failed) = (0u64, 0u64);
+    // updates per flip: spread the stream evenly over the flip slots the
+    // request count affords, so the whole file lands within the demo
+    let num_batches = ids.chunks(batch).len();
+    let flip_slots = stream
+        .as_ref()
+        .map(|s| (num_batches / s.epoch_every).max(1))
+        .unwrap_or(0);
+    let per_flip = if flip_slots > 0 { pending_updates.len().div_ceil(flip_slots).max(1) } else { 0 };
     for (i, chunk) in ids.chunks(batch).enumerate() {
         match server.submit(chunk, SubmitOpts::class(i % tuning.priority_lanes)) {
             Ok(rx) => receivers.push(rx),
             Err(_) => rejected += 1,
+        }
+        if let Some(spec) = &stream {
+            if (i + 1) % spec.epoch_every == 0 && !pending_updates.is_empty() {
+                let take = per_flip.min(pending_updates.len());
+                let updates: Vec<GraphUpdate> = pending_updates.drain(..take).collect();
+                // append errors surface on the flip report's receiver
+                let _ = server.apply_updates(updates);
+                if let Ok(rx) = server.flip_epoch() {
+                    flip_rxs.push(rx);
+                }
+            }
+        }
+    }
+    // leftover updates (short demo or sparse flip slots): one final flip
+    if stream.is_some() && !pending_updates.is_empty() {
+        let updates: Vec<GraphUpdate> = pending_updates.drain(..).collect();
+        let _ = server.apply_updates(updates);
+        if let Ok(rx) = server.flip_epoch() {
+            flip_rxs.push(rx);
         }
     }
     let mut ok = 0u64;
@@ -403,6 +450,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match rx.recv() {
             Ok(Ok(_rows)) => ok += 1,
             _ => failed += 1,
+        }
+    }
+    for rx in flip_rxs {
+        match rx.recv() {
+            Ok(Ok(report)) => println!("  {}", report.line()),
+            Ok(Err(e)) => println!("  epoch flip failed: {e}"),
+            Err(_) => {}
         }
     }
     let stats = server.shutdown();

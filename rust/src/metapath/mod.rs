@@ -12,7 +12,7 @@
 pub mod sparsity;
 
 use crate::graph::sparse::Csr;
-use crate::graph::{HeteroGraph, NodeTypeId};
+use crate::graph::{HeteroGraph, NodeTypeId, RelationId};
 use crate::{Error, Result};
 
 pub use sparsity::{fit_sparsity_model, SparsityModel, SparsityPoint};
@@ -115,24 +115,36 @@ impl SubgraphSet {
 pub fn walk_metapath(hg: &HeteroGraph, mp: &Metapath) -> Result<Csr> {
     let mut acc: Option<Csr> = None;
     for w in mp.tags.windows(2) {
-        let dst = hg.type_by_tag(w[0])?;
-        let src = hg.type_by_tag(w[1])?;
-        let rels = hg.relations_between(src, dst);
-        let rel = rels.first().ok_or_else(|| {
-            Error::NotFound(format!(
-                "relation {}->{} needed by metapath {}",
-                w[1],
-                w[0],
-                mp.name()
-            ))
-        })?;
-        let hop = &hg.relation(*rel).adj;
+        let rel = hop_relation(hg, mp, w[0], w[1])?;
+        let hop = &hg.relation(rel).adj;
         acc = Some(match acc {
             None => hop.clone(),
             Some(a) => a.bool_matmul(hop)?,
         });
     }
     Ok(acc.expect("metapath has >= 1 hop"))
+}
+
+/// The relation one hop `w0 ← w1` of metapath `mp` resolves to: the first
+/// relation with source type `w1` and destination type `w0` — exactly the
+/// lookup [`walk_metapath`] composes, factored out so the dynamic-graph
+/// patcher ([`crate::dynamic`]) can ask the inverse question.
+pub fn hop_relation(hg: &HeteroGraph, mp: &Metapath, w0: char, w1: char) -> Result<RelationId> {
+    let dst = hg.type_by_tag(w0)?;
+    let src = hg.type_by_tag(w1)?;
+    hg.relations_between(src, dst).first().copied().ok_or_else(|| {
+        Error::NotFound(format!("relation {w1}->{w0} needed by metapath {}", mp.name()))
+    })
+}
+
+/// True when re-walking `mp` over `hg` reads relation `rel` — i.e. an
+/// edge inserted into `rel` can change the metapath's composed adjacency.
+/// Unresolvable hops yield `false` (the walk would fail identically
+/// before and after the update).
+pub fn metapath_uses_relation(hg: &HeteroGraph, mp: &Metapath, rel: RelationId) -> bool {
+    mp.tags
+        .windows(2)
+        .any(|w| hop_relation(hg, mp, w[0], w[1]).ok() == Some(rel))
 }
 
 /// Count metapath *instances* (paths, not distinct endpoints) — the
@@ -272,6 +284,20 @@ mod tests {
         let hg = toy_hg();
         let mp = Metapath::parse("MDX").unwrap();
         assert!(walk_metapath(&hg, &mp).is_err());
+    }
+
+    #[test]
+    fn uses_relation_matches_walk_lookups() {
+        let hg = toy_hg();
+        let mdm = Metapath::parse("MDM").unwrap();
+        // MDM composes D-M (rel 0, hop M<-D) then M-D (rel 1, hop D<-M)
+        assert!(metapath_uses_relation(&hg, &mdm, 0));
+        assert!(metapath_uses_relation(&hg, &mdm, 1));
+        assert!(!metapath_uses_relation(&hg, &mdm, 2));
+        // a partially unresolvable path still matches on its resolvable hops
+        let mdx = Metapath::parse("MDX").unwrap();
+        assert!(metapath_uses_relation(&hg, &mdx, 0));
+        assert!(!metapath_uses_relation(&hg, &mdx, 1));
     }
 
     #[test]

@@ -103,6 +103,37 @@ impl ModelWeights {
         w
     }
 
+    /// Grow the R-GCN embedding table of `ty` to `new_count` rows.
+    ///
+    /// Appended rows are drawn from the *same* PCG stream cold init uses
+    /// (`0x5000 + ty`, sequential row-major fill), so row `i` of the
+    /// extended table is bit-identical to row `i` of a cold
+    /// [`ModelWeights::init`] over the grown graph — the property the
+    /// dynamic-graph flip relies on for cold-vs-incremental bit-identity.
+    /// Existing rows are kept as-is (they may have been replaced via
+    /// `Session::set_weights`); only rows `>= old count` are generated.
+    /// No-op for types without an embedding table or when the table
+    /// already has `new_count` rows.
+    pub fn extend_embed(&mut self, ty: usize, new_count: usize, config: &ModelConfig) {
+        let Some(old) = self.embed.get(&ty) else {
+            return;
+        };
+        let old_count = old.rows();
+        if new_count <= old_count {
+            return;
+        }
+        let h = config.hidden_dim;
+        let scale = (1.0 / h as f32).sqrt();
+        let mut erng = Pcg32::new(config.seed, 0x5000 + ty as u64);
+        let full = Tensor::randn(new_count, h, scale, &mut erng);
+        let mut data = self.embed[&ty].as_slice().to_vec();
+        data.extend_from_slice(&full.as_slice()[old_count * h..]);
+        self.embed.insert(
+            ty,
+            Tensor::from_vec(new_count, h, data).expect("extend_embed shape"),
+        );
+    }
+
     /// Total parameter count.
     pub fn param_count(&self) -> usize {
         let mut n = 0;
@@ -164,6 +195,26 @@ mod tests {
         let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
         let plan = models::magnn_plan(&hg, &ModelConfig::default()).unwrap();
         assert_eq!(plan.weights.inst_attn.len(), plan.num_subgraphs());
+    }
+
+    #[test]
+    fn extend_embed_matches_cold_init_prefix_and_tail() {
+        let mut hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let cfg = ModelConfig::default();
+        let mut grown = models::rgcn_plan(&hg, &cfg).unwrap().weights;
+        let m_ty = hg.type_by_tag('M').unwrap();
+        let old = hg.node_type(m_ty).count;
+        let dim = hg.node_type(m_ty).feat_dim;
+        hg.push_node(m_ty, &vec![0.0; dim]).unwrap();
+        hg.push_node(m_ty, &vec![0.0; dim]).unwrap();
+        grown.extend_embed(m_ty, old + 2, &cfg);
+        let cold = models::rgcn_plan(&hg, &cfg).unwrap().weights;
+        assert_eq!(grown.embed[&m_ty].shape(), (old + 2, cfg.hidden_dim));
+        assert!(grown.embed[&m_ty].allclose(&cold.embed[&m_ty], 0.0, 0.0));
+        // shrinking / same-size / unknown-type requests are no-ops
+        grown.extend_embed(m_ty, old, &cfg);
+        assert_eq!(grown.embed[&m_ty].rows(), old + 2);
+        grown.extend_embed(999, 10, &cfg);
     }
 
     #[test]

@@ -49,6 +49,7 @@
 use std::collections::HashMap;
 
 use crate::coordinator::schedule::lpt_assign;
+use crate::dynamic::PatchSet;
 use crate::graph::sparse::Coo;
 use crate::graph::HeteroGraph;
 use crate::metapath::{Subgraph, SubgraphSet};
@@ -270,62 +271,11 @@ impl Partition {
         // local node spaces (owned ∪ halo, ascending) + reverse maps
         let mut shards = Vec::with_capacity(k);
         for s in 0..k {
-            let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n_types);
-            let mut merge: Vec<Vec<(u32, u32)>> = Vec::with_capacity(n_types);
-            let mut local: Vec<HashMap<u32, u32>> = Vec::with_capacity(n_types);
-            for ty in 0..n_types {
-                let mut list = owned[s][ty].clone();
-                list.extend_from_slice(&halo[s][ty]);
-                list.sort_unstable();
-                let map: HashMap<u32, u32> =
-                    list.iter().enumerate().map(|(l, &g)| (g, l as u32)).collect();
-                let m: Vec<(u32, u32)> =
-                    owned[s][ty].iter().map(|&g| (map[&g], g)).collect();
-                nodes.push(list);
-                merge.push(m);
-                local.push(map);
-            }
-
-            // local sub-CSRs: owned destination rows keep their complete
-            // neighbor lists; halo rows exist but carry no edges
-            let mut subgraphs = Vec::with_capacity(plan.num_subgraphs());
-            for sg in &plan.subgraphs.subgraphs {
-                let mut edges = Vec::new();
-                for &d in &owned[s][sg.dst_type] {
-                    let l_dst = local[sg.dst_type][&d];
-                    for &src in sg.adj.row(d as usize) {
-                        edges.push((l_dst, local[sg.src_type][&src]));
-                    }
-                }
-                let adj = Coo::from_edges(
-                    nodes[sg.dst_type].len(),
-                    nodes[sg.src_type].len(),
-                    edges,
-                )?
-                .to_csr();
-                subgraphs.push(Subgraph {
-                    metapath: sg.metapath.clone(),
-                    name: sg.name.clone(),
-                    dst_type: sg.dst_type,
-                    src_type: sg.src_type,
-                    adj,
-                });
-            }
-
-            let shard_plan = ModelPlan {
-                model: plan.model,
-                config: plan.config.clone(),
-                subgraphs: SubgraphSet { subgraphs, build_nanos: 0 },
-                weights: shard_weights(plan, &nodes),
-                target: plan.target,
-            };
-            shards.push(Shard {
-                nodes,
-                owned: std::mem::take(&mut owned[s]),
-                halo: std::mem::take(&mut halo[s]),
-                merge,
-                plan: shard_plan,
-            });
+            shards.push(materialize_shard(
+                plan,
+                std::mem::take(&mut owned[s]),
+                std::mem::take(&mut halo[s]),
+            )?);
         }
 
         let costs: Vec<f64> = shards
@@ -403,6 +353,166 @@ impl Partition {
             shard.plan.weights = shard_weights(plan, &shard.nodes);
         }
     }
+
+    /// Incrementally patch the partition after an epoch flip: only the
+    /// shards owning touched destinations (plus the shards receiving
+    /// appended nodes) rematerialize their local spaces, sub-CSRs, halo
+    /// tables and weight slices — clean shards are left byte-for-byte
+    /// untouched. Returns the number of shards rebuilt.
+    ///
+    /// Existing nodes never migrate (their owner entries are stable);
+    /// appended nodes go to the shard owning the fewest nodes of their
+    /// type (ties to the lowest shard id). That greedy placement can
+    /// diverge from what a cold LPT over the grown graph would choose —
+    /// deliberately so: the bit-identity invariants at the top of this
+    /// module hold for *any* ownership (owner computes over complete
+    /// neighbor lists, canonical ascending local order), which
+    /// `tests/integration_dynamic.rs` pins by comparing a patched
+    /// sharded session against a cold unsharded one.
+    ///
+    /// `plan` must be the *post-flip* plan (its sub-CSRs already
+    /// re-derived by [`crate::dynamic::apply_to_graph`]).
+    pub fn patch(&mut self, plan: &ModelPlan, patch: &PatchSet) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        let k = self.num_shards();
+        let n_types = self.owners.len();
+        let mut dirty = vec![false; k];
+
+        // appended nodes: extend the owner tables
+        let mut counts_by_ty: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &(ty, id) in &patch.new_nodes {
+            if ty >= n_types {
+                return Err(Error::config(format!("patch: unknown node type {ty}")));
+            }
+            if id as usize != self.owners[ty].len() {
+                return Err(Error::config(format!(
+                    "patch: appended node {id} of type {ty} is not the next id ({})",
+                    self.owners[ty].len()
+                )));
+            }
+            let counts = counts_by_ty.entry(ty).or_insert_with(|| {
+                let mut c = vec![0usize; k];
+                for &o in &self.owners[ty] {
+                    c[o as usize] += 1;
+                }
+                c
+            });
+            let s = (0..k).min_by_key(|&s| counts[s]).unwrap_or(0);
+            counts[s] += 1;
+            self.owners[ty].push(s as u32);
+            dirty[s] = true;
+        }
+
+        // owners of structure/feature-touched destination rows
+        for (si, touched) in patch.touched.iter().enumerate() {
+            let ty = plan.subgraphs.subgraphs[si].dst_type;
+            for &d in touched {
+                dirty[self.owners[ty][d as usize] as usize] = true;
+            }
+        }
+
+        // rematerialize dirty shards from the patched plan
+        let mut rebuilt = 0;
+        for s in 0..k {
+            if !dirty[s] {
+                continue;
+            }
+            let owned: Vec<Vec<u32>> = (0..n_types)
+                .map(|ty| {
+                    self.owners[ty]
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &o)| o as usize == s)
+                        .map(|(g, _)| g as u32)
+                        .collect()
+                })
+                .collect();
+            let mut halo: Vec<Vec<u32>> = vec![Vec::new(); n_types];
+            for sg in &plan.subgraphs.subgraphs {
+                for &d in &owned[sg.dst_type] {
+                    for &src in sg.adj.row(d as usize) {
+                        if self.owners[sg.src_type][src as usize] as usize != s {
+                            halo[sg.src_type].push(src);
+                        }
+                    }
+                }
+            }
+            for list in halo.iter_mut() {
+                list.sort_unstable();
+                list.dedup();
+            }
+            self.shards[s] = materialize_shard(plan, owned, halo)?;
+            self.costs[s] = self.shards[s]
+                .plan
+                .subgraphs
+                .subgraphs
+                .iter()
+                .map(|sg| sg.adj.nnz() as f64 + 1.0)
+                .sum();
+            rebuilt += 1;
+        }
+        self.build_nanos += t0.elapsed().as_nanos() as u64;
+        Ok(rebuilt)
+    }
+}
+
+/// Materialize one shard from its owned and halo id lists: compact local
+/// node spaces (owned ∪ halo, ascending in global id — the canonical
+/// ordering that pins f32 accumulation order), restricted sub-CSRs
+/// (owned destination rows keep their complete neighbor lists; halo rows
+/// exist but carry no edges), the owner-computes merge plan, and the
+/// shard-local weight slices. Shared by [`Partition::build`] (all
+/// shards) and [`Partition::patch`] (dirty shards only).
+fn materialize_shard(
+    plan: &ModelPlan,
+    owned: Vec<Vec<u32>>,
+    halo: Vec<Vec<u32>>,
+) -> Result<Shard> {
+    let n_types = owned.len();
+    let mut nodes: Vec<Vec<u32>> = Vec::with_capacity(n_types);
+    let mut merge: Vec<Vec<(u32, u32)>> = Vec::with_capacity(n_types);
+    let mut local: Vec<HashMap<u32, u32>> = Vec::with_capacity(n_types);
+    for ty in 0..n_types {
+        let mut list = owned[ty].clone();
+        list.extend_from_slice(&halo[ty]);
+        list.sort_unstable();
+        let map: HashMap<u32, u32> =
+            list.iter().enumerate().map(|(l, &g)| (g, l as u32)).collect();
+        let m: Vec<(u32, u32)> = owned[ty].iter().map(|&g| (map[&g], g)).collect();
+        nodes.push(list);
+        merge.push(m);
+        local.push(map);
+    }
+
+    let mut subgraphs = Vec::with_capacity(plan.num_subgraphs());
+    for sg in &plan.subgraphs.subgraphs {
+        let mut edges = Vec::new();
+        for &d in &owned[sg.dst_type] {
+            let l_dst = local[sg.dst_type][&d];
+            for &src in sg.adj.row(d as usize) {
+                edges.push((l_dst, local[sg.src_type][&src]));
+            }
+        }
+        let adj =
+            Coo::from_edges(nodes[sg.dst_type].len(), nodes[sg.src_type].len(), edges)?
+                .to_csr();
+        subgraphs.push(Subgraph {
+            metapath: sg.metapath.clone(),
+            name: sg.name.clone(),
+            dst_type: sg.dst_type,
+            src_type: sg.src_type,
+            adj,
+        });
+    }
+
+    let shard_plan = ModelPlan {
+        model: plan.model,
+        config: plan.config.clone(),
+        subgraphs: SubgraphSet { subgraphs, build_nanos: 0 },
+        weights: shard_weights(plan, &nodes),
+        target: plan.target,
+    };
+    Ok(Shard { nodes, owned, halo, merge, plan: shard_plan })
 }
 
 /// Shard-local copy of the plan weights: every field cloned except the
@@ -594,6 +704,98 @@ mod tests {
         assert!(info.imbalance < 2.0, "imbalance {}", info.imbalance);
         assert!(info.cost_gini < 0.5, "gini {}", info.cost_gini);
         assert!(info.label().contains("4 shards"));
+    }
+
+    #[test]
+    fn patch_rebuilds_only_dirty_shards_and_keeps_invariants() {
+        use crate::dynamic::{apply_to_graph, GraphUpdate};
+        let (mut hg, mut plan) = imdb(ModelId::Han);
+        let mut part = Partition::build(&hg, &plan, &PartitionSpec::new(4)).unwrap();
+        // remember which sub-CSRs each shard held before the flip
+        let before: Vec<Vec<crate::graph::sparse::Csr>> = part
+            .shards
+            .iter()
+            .map(|sh| sh.plan.subgraphs.subgraphs.iter().map(|sg| sg.adj.clone()).collect())
+            .collect();
+
+        // one new movie node plus an edge wiring it into M-D
+        let m = hg.type_by_tag('M').unwrap();
+        let dim = hg.node_type(m).feat_dim;
+        let md = hg.relations().iter().position(|r| r.name == "M-D").unwrap();
+        let new_id = hg.node_type(m).count as u32;
+        let ps = apply_to_graph(
+            &mut hg,
+            &mut plan,
+            vec![
+                GraphUpdate::AddNode { ty: m, features: vec![0.0; dim] },
+                GraphUpdate::AddEdge { relation: md, dst: 0, src: new_id },
+            ],
+        )
+        .unwrap();
+        let rebuilt = part.patch(&plan, &ps).unwrap();
+        assert!(rebuilt >= 1 && rebuilt <= 4);
+
+        // dirty shards = owners of touched dsts + the new node's shard
+        let mut expect_dirty = vec![false; 4];
+        expect_dirty[part.owner_of(m, new_id)] = true;
+        for (si, touched) in ps.touched.iter().enumerate() {
+            let ty = plan.subgraphs.subgraphs[si].dst_type;
+            for &d in touched {
+                expect_dirty[part.owner_of(ty, d)] = true;
+            }
+        }
+        assert_eq!(rebuilt, expect_dirty.iter().filter(|&&b| b).count());
+        // clean shards kept their materialization byte-for-byte
+        for (s, shard) in part.shards.iter().enumerate() {
+            if !expect_dirty[s] {
+                for (si, sg) in shard.plan.subgraphs.subgraphs.iter().enumerate() {
+                    assert_eq!(sg.adj, before[s][si], "clean shard {s} was rebuilt");
+                }
+            }
+        }
+
+        // global invariants hold over the grown graph: disjoint cover...
+        for (ty, t) in hg.node_types().iter().enumerate() {
+            let mut seen = vec![0u32; t.count];
+            for shard in &part.shards {
+                for &g in &shard.owned[ty] {
+                    seen[g as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "type {ty} cover broken after patch");
+        }
+        // ...complete neighbor lists in canonical order on every shard
+        for shard in &part.shards {
+            for (si, sg) in shard.plan.subgraphs.subgraphs.iter().enumerate() {
+                let global = &plan.subgraphs.subgraphs[si];
+                for &(l, g) in &shard.merge[sg.dst_type] {
+                    let local_srcs: Vec<u32> = sg
+                        .adj
+                        .row(l as usize)
+                        .iter()
+                        .map(|&ls| shard.nodes[sg.src_type][ls as usize])
+                        .collect();
+                    assert_eq!(local_srcs, global.adj.row(g as usize).to_vec());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn patch_rejects_gapped_node_ids() {
+        use crate::dynamic::PatchSet;
+        let (hg, plan) = imdb(ModelId::Han);
+        let mut part = Partition::build(&hg, &plan, &PartitionSpec::new(2)).unwrap();
+        let m = hg.type_by_tag('M').unwrap();
+        let bogus = PatchSet {
+            touched: vec![Vec::new(); plan.num_subgraphs()],
+            rebuilt: vec![false; plan.num_subgraphs()],
+            feat_touched: Vec::new(),
+            new_nodes: vec![(m, hg.node_type(m).count as u32 + 5)],
+            new_weights: None,
+            updates_applied: 1,
+        };
+        assert!(part.patch(&plan, &bogus).is_err());
     }
 
     #[test]

@@ -58,6 +58,17 @@
 //! under stale parameters can never leak into post-reload batches. The
 //! generation and an invalidation count are reported in [`ReuseStats`].
 //!
+//! ## Targeted eviction at epoch barriers
+//!
+//! The streaming-update path ([`crate::dynamic`]) must *not* pay a full
+//! invalidation per epoch flip — reusability across epochs is the whole
+//! point of incremental patching. [`ReuseCache::evict_proj`] and
+//! [`ReuseCache::evict_agg`] drop exactly one `(type, node)` /
+//! `(subgraph, dst)` key, so a flip evicts only the keys whose inputs
+//! the update batch touched; untouched entries survive the flip, keep
+//! their generation, and keep hitting (`tests/prop_invariants.rs` pins
+//! this minimality).
+//!
 //! ## Eviction
 //!
 //! Both caches are bounded in **rows** ([`ReuseSpec`]) and evict with
@@ -123,6 +134,9 @@ pub struct ReuseStats {
     pub agg_misses: u64,
     /// Rows evicted by the clock hand across both caches.
     pub evictions: u64,
+    /// Rows dropped by targeted per-key eviction at epoch flips
+    /// ([`ReuseCache::evict_proj`] / [`ReuseCache::evict_agg`]).
+    pub targeted_evictions: u64,
     /// Generation bumps ([`ReuseCache::invalidate`] calls).
     pub invalidations: u64,
 }
@@ -150,6 +164,7 @@ impl ReuseStats {
         self.agg_hits += other.agg_hits;
         self.agg_misses += other.agg_misses;
         self.evictions += other.evictions;
+        self.targeted_evictions += other.targeted_evictions;
         self.invalidations += other.invalidations;
     }
 
@@ -157,7 +172,7 @@ impl ReuseStats {
     pub fn line(&self) -> String {
         format!(
             "reuse: proj {}/{} hits ({:.1}%), agg {}/{} hits ({:.1}%), \
-             {} evictions, {} invalidations",
+             {} evictions ({} targeted), {} invalidations",
             self.proj_hits,
             self.proj_hits + self.proj_misses,
             100.0 * self.proj_hit_rate(),
@@ -165,6 +180,7 @@ impl ReuseStats {
             self.agg_hits + self.agg_misses,
             100.0 * self.agg_hit_rate(),
             self.evictions,
+            self.targeted_evictions,
             self.invalidations,
         )
     }
@@ -286,6 +302,24 @@ impl RowCache {
         }
     }
 
+    /// Drop one key if resident; returns whether a row was removed. The
+    /// vacated slot is back-filled by `swap_remove`, so the store stays
+    /// dense; the clock hand is re-wrapped if it pointed past the end
+    /// (a harmless perturbation of the second-chance order).
+    fn remove(&mut self, key: u64) -> bool {
+        let Some(i) = self.index.remove(&key) else {
+            return false;
+        };
+        self.slots.swap_remove(i);
+        if i < self.slots.len() {
+            self.index.insert(self.slots[i].key, i);
+        }
+        if self.hand >= self.slots.len() {
+            self.hand = 0;
+        }
+        true
+    }
+
     fn clear(&mut self) {
         self.slots.clear();
         self.index.clear();
@@ -401,6 +435,28 @@ impl ReuseCache {
         }
     }
 
+    /// Targeted eviction of one projection key — the epoch-flip path
+    /// drops exactly the `(type, node)` keys whose raw features the
+    /// update batch rewrote, leaving the rest of the cache (and the
+    /// generation) intact. Returns whether a row was resident.
+    pub fn evict_proj(&mut self, ty: usize, node: u32) -> bool {
+        let hit = self.proj.remove(key(ty, node));
+        if hit {
+            self.stats.targeted_evictions += 1;
+        }
+        hit
+    }
+
+    /// Targeted eviction of one aggregate key — dropped for every
+    /// `(subgraph, dst)` whose NA row an epoch flip recomputes.
+    pub fn evict_agg(&mut self, subgraph: usize, node: u32) -> bool {
+        let hit = self.agg.remove(key(subgraph, node));
+        if hit {
+            self.stats.targeted_evictions += 1;
+        }
+        hit
+    }
+
     /// Drop every cached row and bump the generation — required after
     /// any weight or feature change, since cached rows are functions of
     /// the parameters they were computed from.
@@ -497,6 +553,80 @@ mod tests {
         assert!(c.agg_get(0, 0).is_none());
         c.proj_insert(0, 0, &[1.0]);
         assert!(c.proj_get(0, 0).is_some());
+    }
+
+    #[test]
+    fn targeted_eviction_spares_untouched_keys() {
+        let mut c = ReuseCache::new(ReuseSpec::rows(8));
+        c.proj_insert(0, 1, &[1.0]);
+        c.proj_insert(0, 2, &[2.0]);
+        c.agg_insert(3, 1, &[3.0]);
+        c.agg_insert(3, 2, &[4.0]);
+        assert!(c.evict_proj(0, 1));
+        assert!(!c.evict_proj(0, 1), "second eviction finds nothing");
+        assert!(c.evict_agg(3, 2));
+        assert!(!c.evict_agg(9, 9));
+        // touched keys gone, untouched keys survive, generation intact
+        assert!(c.proj_get(0, 1).is_none());
+        assert_eq!(c.proj_get(0, 2).unwrap(), &[2.0]);
+        assert_eq!(c.agg_get(3, 1).unwrap(), &[3.0]);
+        assert!(c.agg_get(3, 2).is_none());
+        assert_eq!(c.generation(), 0);
+        assert_eq!(c.stats().targeted_evictions, 2);
+        assert_eq!(c.stats().evictions, 0, "clock evictions unaffected");
+        assert_eq!(c.stats().invalidations, 0);
+        // the back-filled store still inserts and evicts normally
+        c.proj_insert(0, 5, &[5.0]);
+        assert_eq!(c.proj_get(0, 5).unwrap(), &[5.0]);
+    }
+
+    #[test]
+    fn remove_backfills_and_rewraps_hand() {
+        // fill to capacity, remove the middle slot, then force a clock
+        // sweep: the dense backfill must leave the index consistent
+        let mut c = ReuseCache::new(ReuseSpec::rows(3));
+        c.proj_insert(0, 0, &[0.0]);
+        c.proj_insert(0, 1, &[1.0]);
+        c.proj_insert(0, 2, &[2.0]);
+        assert!(c.evict_proj(0, 1));
+        assert_eq!(c.proj_len(), 2);
+        // slot of node 2 was swapped into the vacated slot; both resident
+        assert_eq!(c.proj_get(0, 0).unwrap(), &[0.0]);
+        assert_eq!(c.proj_get(0, 2).unwrap(), &[2.0]);
+        c.proj_insert(0, 3, &[3.0]);
+        c.proj_insert(0, 4, &[4.0]); // full again -> clock sweep
+        assert_eq!(c.proj_len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn absorb_sums_every_counter() {
+        // pin the lane aggregation: every field participates, so a new
+        // counter can never silently vanish from the serving stats view
+        let a = ReuseStats {
+            proj_hits: 1,
+            proj_misses: 2,
+            agg_hits: 3,
+            agg_misses: 4,
+            evictions: 5,
+            targeted_evictions: 6,
+            invalidations: 7,
+        };
+        let mut acc = a.clone();
+        acc.absorb(&a);
+        assert_eq!(
+            acc,
+            ReuseStats {
+                proj_hits: 2,
+                proj_misses: 4,
+                agg_hits: 6,
+                agg_misses: 8,
+                evictions: 10,
+                targeted_evictions: 12,
+                invalidations: 14,
+            }
+        );
+        assert!(a.line().contains("(6 targeted)"));
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
+use crate::dynamic::{EpochBarrier, EpochReport, GraphUpdate};
 use crate::partition::ShardMap;
 use crate::reuse::ReuseStats;
 use crate::session::{Session, SessionBuilder};
@@ -86,6 +87,24 @@ pub trait BatchExecutor {
     fn shard_map(&self) -> Option<ShardMap> {
         None
     }
+
+    /// Buffer graph updates for the next epoch flip (dynamic sessions
+    /// only; see [`crate::dynamic`]). Executors without streaming
+    /// support reject the control.
+    fn apply_updates(&mut self, _updates: Vec<GraphUpdate>) -> Result<usize> {
+        Err(Error::config("executor does not support streaming graph updates"))
+    }
+
+    /// Flip the epoch barrier: apply every buffered update atomically.
+    /// Only ever called between waves by the dispatcher thread.
+    fn flip_epoch(&mut self) -> Result<EpochReport> {
+        Err(Error::config("executor does not support epoch flips"))
+    }
+
+    /// The epoch the executor currently serves (0 for static executors).
+    fn epoch(&self) -> u64 {
+        0
+    }
 }
 
 impl<F> BatchExecutor for F
@@ -143,6 +162,23 @@ impl Ord for PendingReq {
     }
 }
 
+/// A control message for the dispatcher, drained only **between**
+/// waves — the epoch-barrier ordering: an in-flight wave always
+/// completes against the snapshot it was dispatched on, and every wave
+/// dispatched after the control observes its effect.
+pub(crate) enum ControlMsg {
+    /// Buffer updates in the executor's log; ack carries the pending
+    /// count or the executor's rejection.
+    Apply {
+        /// The update batch to buffer.
+        updates: Vec<GraphUpdate>,
+        /// Completion channel.
+        ack: mpsc::Sender<std::result::Result<usize, String>>,
+    },
+    /// Flip the epoch barrier ([`crate::dynamic::EpochBarrier`]).
+    Flip(EpochBarrier),
+}
+
 /// Mutable queue state behind the submit/dispatch mutex.
 struct QueueState {
     /// One min-heap (via `Reverse`) per priority class.
@@ -156,6 +192,8 @@ struct QueueState {
     lane_inflight: Vec<usize>,
     /// Token-bucket admission, when configured.
     bucket: Option<TokenBucket>,
+    /// Pending epoch-barrier controls, drained between waves.
+    controls: Vec<ControlMsg>,
     /// When the currently-filling wave must close: set to
     /// `arrival + flush_after` when the queue goes non-empty, and to
     /// "now" when a wave leaves a backlog behind (a backlog means load
@@ -295,6 +333,7 @@ impl<C: Clock> AsyncServer<C> {
                 lane_queued: Vec::new(),
                 lane_inflight: Vec::new(),
                 bucket,
+                controls: Vec::new(),
                 fill_deadline: None,
                 stopped: false,
                 seq: 0,
@@ -446,6 +485,49 @@ impl<C: Clock> AsyncServer<C> {
         Ok(())
     }
 
+    /// Queue a batch of graph updates for the executor's update log.
+    /// The dispatcher applies them between waves; the returned receiver
+    /// yields the executor's answer (number of pending updates after
+    /// the append, or the error message). Updates do not take effect
+    /// until the next [`AsyncServer::flip_epoch`].
+    pub fn apply_updates(
+        &self,
+        updates: Vec<GraphUpdate>,
+    ) -> std::result::Result<mpsc::Receiver<std::result::Result<usize, String>>, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock(&self.shared.state);
+            if st.stopped {
+                return Err(ServeError::Stopped);
+            }
+            st.controls.push(ControlMsg::Apply { updates, ack: tx });
+        }
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Queue an epoch flip. The dispatcher honours it strictly between
+    /// waves: every request admitted before the flip that made it into
+    /// an earlier wave completes on the old snapshot, and everything
+    /// still queued when the barrier runs executes on the new epoch.
+    /// The receiver yields the executor's [`EpochReport`] (or the error
+    /// message when the flip failed and was rolled back).
+    pub fn flip_epoch(
+        &self,
+    ) -> std::result::Result<mpsc::Receiver<std::result::Result<EpochReport, String>>, ServeError>
+    {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock(&self.shared.state);
+            if st.stopped {
+                return Err(ServeError::Stopped);
+            }
+            st.controls.push(ControlMsg::Flip(EpochBarrier { ack: tx }));
+        }
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
     /// Snapshot of the current statistics without stopping the server.
     pub fn stats_snapshot(&self) -> ServeStats {
         self.mk_stats()
@@ -571,6 +653,29 @@ fn expire<C: Clock>(sh: &Shared<C>, st: &mut QueueState, now: Nanos) {
     }
 }
 
+/// Drain queued epoch-barrier controls and run them against the
+/// executor. Called by the dispatcher strictly between waves, so a
+/// flip never observes a half-executed batch: the in-flight wave has
+/// fully completed on the old snapshot, and every request still queued
+/// executes on the new epoch. Controls run without the state lock —
+/// submissions keep being admitted (they just wait for the flip).
+fn handle_controls<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E) {
+    let controls = {
+        let mut st = lock(&sh.state);
+        std::mem::take(&mut st.controls)
+    };
+    for control in controls {
+        match control {
+            ControlMsg::Apply { updates, ack } => {
+                let _ = ack.send(executor.apply_updates(updates).map_err(|e| e.to_string()));
+            }
+            ControlMsg::Flip(barrier) => {
+                let _ = barrier.ack.send(executor.flip_epoch().map_err(|e| e.to_string()));
+            }
+        }
+    }
+}
+
 /// The dispatcher loop (runs on the dispatcher thread until stopped
 /// and drained).
 fn dispatch_loop<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E) {
@@ -585,15 +690,25 @@ fn dispatch_loop<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E) {
         st.lane_inflight.resize(lanes.max(st.lane_inflight.len()), 0);
     }
     loop {
+        // ---- epoch barrier: controls run strictly between waves ----
+        handle_controls(sh, executor);
         // ---- wait until a wave can close, then pop it ----
         let wave: Vec<PendingReq> = {
             let mut st = lock(&sh.state);
             loop {
                 let now = sh.clock.now();
                 expire(sh, &mut st, now);
+                // a pending control wakes an idle dispatcher: break with
+                // an empty wave so the outer loop drains it before any
+                // request admitted after the control can execute
+                if !st.controls.is_empty() {
+                    break;
+                }
                 if st.queued_ids == 0 {
                     st.fill_deadline = None;
                     if st.stopped {
+                        drop(st);
+                        handle_controls(sh, executor);
                         return;
                     }
                     st = sh.clock.wait(&sh.cv, st);
@@ -613,6 +728,13 @@ fn dispatch_loop<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E) {
                     break;
                 }
                 st = sh.clock.wait_deadline(&sh.cv, st, close_at);
+            }
+            // a pending control leaves the queue untouched: requests
+            // queued behind the barrier execute on the new epoch, only
+            // waves popped *before* the control complete on the old one
+            if !st.controls.is_empty() {
+                drop(st);
+                continue;
             }
             // pop in (class, deadline, age) order until the wave budget
             // is met; requests are popped whole (a reply is one unit),
@@ -854,6 +976,24 @@ impl BatchExecutor for SessionExecutor {
             .filter(|s| s.sampling().is_some())
             .and_then(|s| s.shard_map())
     }
+
+    fn apply_updates(&mut self, updates: Vec<GraphUpdate>) -> Result<usize> {
+        match self.session.as_mut() {
+            Ok(s) => s.apply_updates(updates),
+            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+        }
+    }
+
+    fn flip_epoch(&mut self) -> Result<EpochReport> {
+        match self.session.as_mut() {
+            Ok(s) => s.flip_epoch(),
+            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+        }
+    }
+
+    fn epoch(&self) -> u64 {
+        self.session.as_ref().ok().map(|s| s.epoch()).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -994,5 +1134,26 @@ mod tests {
         assert_eq!(stats.rejected_queue_full, 1);
         assert_eq!(stats.peak_queued, 3);
         assert_eq!(stats.completed, 4);
+    }
+
+    #[test]
+    fn static_executor_rejects_controls_through_the_server() {
+        // the control still round-trips: the dispatcher acks with the
+        // executor's refusal instead of hanging or panicking
+        let server = AsyncServer::start(cfg(), echo);
+        let rx = server.apply_updates(Vec::new()).unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("streaming graph updates"), "got: {err}");
+        let rx = server.flip_epoch().unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("epoch flips"), "got: {err}");
+        // serving still works after rejected controls
+        let rx = server.submit(&[7], SubmitOpts::default()).unwrap();
+        let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(rows, vec![vec![7.0, 14.0]]);
+        let mut server = server;
+        server.stop();
+        assert!(matches!(server.apply_updates(Vec::new()), Err(ServeError::Stopped)));
+        assert!(matches!(server.flip_epoch(), Err(ServeError::Stopped)));
     }
 }

@@ -64,6 +64,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::schedule::{self, lpt_assign, ScheduleReport};
 use crate::gpumodel::GpuModel;
+use crate::graph::sparse::Csr;
 use crate::graph::HeteroGraph;
 use crate::kernels::rearrange::index_select;
 use crate::kernels::{Ctx, KernelCounters, KernelExec, KernelType};
@@ -699,6 +700,206 @@ fn scatter_rows(t: &mut Tensor, rows: &[(u32, Vec<f32>)]) -> Option<KernelExec> 
         wall_nanos: nanos,
         trace: None,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Epoch-flip patch execution
+// ---------------------------------------------------------------------------
+
+/// What one epoch-flip patch execution produces.
+#[derive(Debug)]
+pub struct PatchRun {
+    /// Refreshed full-graph output of the target type.
+    pub output: Tensor,
+    /// Kernel-level profile of the flip (FP + compact NA + SA only).
+    pub profile: Profile,
+    /// Destination rows whose NA was actually recomputed.
+    pub na_rows: usize,
+}
+
+/// Incrementally refresh a full-graph forward after an epoch flip.
+///
+/// Stage ② re-runs in full (row-local and FP-cheap per the paper's Fig 2
+/// breakdown; features or embeddings may have changed anywhere), but
+/// stage ③ — the dominant stage — runs **only over the touched
+/// destination rows** of each patched subgraph, on a compact sub-CSR
+/// whose rows/columns are remapped to the ascending union of touched
+/// destinations and their sources. Ascending remap preserves each row's
+/// f32 accumulation order, and every NA variant is destination-row-local
+/// (see [`crate::reuse`]), so spliced rows are bit-identical to a cold
+/// full recompute. Stage ④ is globally coupled (HAN/MAGNN's β averages
+/// over all target rows) and re-runs in full over the spliced tensors.
+///
+/// `touched` holds, per subgraph, the sorted distinct destination rows to
+/// recompute (empty slices skip the subgraph entirely — no NA kernel is
+/// launched for it, the property `tests/integration_dynamic.rs` asserts
+/// via kernel counts). `na_cache` carries the previous epoch's full NA
+/// tensors and is grown/spliced in place.
+pub fn execute_patch(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    touched: &[Vec<u32>],
+    na_cache: &mut Vec<Tensor>,
+    scratch: &mut Ctx,
+) -> Result<PatchRun> {
+    scratch.events.clear();
+    if touched.len() != plan.num_subgraphs() || na_cache.len() != plan.num_subgraphs() {
+        return Err(Error::shape(format!(
+            "patch: {} touched sets / {} cached NA tensors for {} subgraphs",
+            touched.len(),
+            na_cache.len(),
+            plan.num_subgraphs()
+        )));
+    }
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
+        ..Default::default()
+    };
+
+    // ② full FP over the flipped graph
+    let projected = backend.feature_projection(scratch, plan, hg)?;
+    let mut cursor =
+        record_advance(&mut profile, scratch, StageId::FeatureProjection, None, 0, 0);
+
+    // a patch plan sharing the real weights: compact subgraphs where
+    // touched, edge-less placeholders elsewhere (never aggregated, but
+    // attention weight vectors are indexed by subgraph position, so the
+    // index space must stay aligned)
+    let mut compact: Vec<(Vec<u32>, bool)> = Vec::with_capacity(touched.len());
+    let patch_subs: Vec<crate::metapath::Subgraph> = plan
+        .subgraphs
+        .subgraphs
+        .iter()
+        .zip(touched)
+        .map(|(sg, dsts)| {
+            let (adj, local, unified) = if dsts.is_empty() {
+                (Csr::empty(0, 0), Vec::new(), false)
+            } else {
+                compact_patch_adj(&sg.adj, dsts, sg.src_type == sg.dst_type)
+            };
+            compact.push((local, unified));
+            crate::metapath::Subgraph {
+                metapath: sg.metapath.clone(),
+                name: sg.name.clone(),
+                dst_type: sg.dst_type,
+                src_type: sg.src_type,
+                adj,
+            }
+        })
+        .collect();
+    let patch_plan = ModelPlan {
+        model: plan.model,
+        config: plan.config.clone(),
+        subgraphs: crate::metapath::SubgraphSet { subgraphs: patch_subs, build_nanos: 0 },
+        weights: plan.weights.clone(),
+        target: plan.target,
+    };
+
+    // ③ compact NA per touched subgraph, spliced over the cached tensors
+    let mut na_rows = 0usize;
+    for (si, dsts) in touched.iter().enumerate() {
+        let sg = &plan.subgraphs.subgraphs[si];
+        // grow the cached tensor first: new destination nodes appended
+        // rows (always in the touched set — their rows differ from the
+        // previous epoch's nonexistent ones)
+        let cols = na_cache[si].cols();
+        if na_cache[si].rows() < sg.adj.n_rows {
+            let extra = Tensor::zeros(sg.adj.n_rows - na_cache[si].rows(), cols);
+            na_cache[si] = crate::tensor::vstack(&[&na_cache[si], &extra])?;
+        }
+        if dsts.is_empty() {
+            continue;
+        }
+        let (local, unified) = &compact[si];
+        let psg = &patch_plan.subgraphs.subgraphs[si];
+        let mut view: Projected = BTreeMap::new();
+        let h_src = projected
+            .get(&sg.src_type)
+            .ok_or_else(|| Error::config(format!("patch: type {} not projected", sg.src_type)))?;
+        view.insert(sg.src_type, index_select(scratch, h_src, local)?);
+        if !*unified && sg.dst_type != sg.src_type {
+            let h_dst = projected.get(&sg.dst_type).ok_or_else(|| {
+                Error::config(format!("patch: type {} not projected", sg.dst_type))
+            })?;
+            view.insert(sg.dst_type, index_select(scratch, h_dst, dsts)?);
+        }
+        let out = backend.neighbor_aggregation(scratch, &patch_plan, si, &view)?;
+        cursor = record_advance(
+            &mut profile,
+            scratch,
+            StageId::NeighborAggregation,
+            Some(psg.name.as_str()),
+            0,
+            cursor,
+        );
+        for &d in dsts {
+            let pos = if *unified {
+                local.binary_search(&d).expect("touched dst in unified space")
+            } else {
+                dsts.binary_search(&d).expect("touched dst in own list")
+            };
+            na_cache[si].set_row(d as usize, out.row(pos));
+        }
+        na_rows += dsts.len();
+    }
+
+    // ④ full SA over the spliced tensors
+    let output = backend.semantic_aggregation(scratch, plan, na_cache)?;
+    let _ = record_advance(
+        &mut profile,
+        scratch,
+        StageId::SemanticAggregation,
+        None,
+        0,
+        cursor,
+    );
+    recycle_projected(scratch, projected);
+    profile.attach_metrics(gpu);
+    Ok(PatchRun { output, profile, na_rows })
+}
+
+/// Build the compact patch sub-CSR for one subgraph's touched rows.
+///
+/// Returns `(adj, local, unified)`: when `same_type` (metapath
+/// subgraphs, endpoint == start), `local` is the ascending union of
+/// touched destinations and their sources, `adj` is `|local| x |local|`
+/// with untouched rows edge-less (the sampler's one-local-space shape);
+/// otherwise `local` is the ascending source set, `adj` is
+/// `|dsts| x |local|` with rows in `dsts` order.
+fn compact_patch_adj(adj: &Csr, dsts: &[u32], same_type: bool) -> (Csr, Vec<u32>, bool) {
+    let mut srcs: Vec<u32> = dsts
+        .iter()
+        .flat_map(|&d| adj.row(d as usize).iter().copied())
+        .collect();
+    if same_type {
+        srcs.extend_from_slice(dsts);
+    }
+    srcs.sort_unstable();
+    srcs.dedup();
+    let mut indptr: Vec<u32> = Vec::new();
+    let mut indices: Vec<u32> = Vec::new();
+    indptr.push(0);
+    let remap = |g: u32| srcs.binary_search(&g).expect("source in local space") as u32;
+    if same_type {
+        for &g in &srcs {
+            if dsts.binary_search(&g).is_ok() {
+                indices.extend(adj.row(g as usize).iter().map(|&s| remap(s)));
+            }
+            indptr.push(indices.len() as u32);
+        }
+        let n = srcs.len();
+        (Csr { n_rows: n, n_cols: n, indptr, indices }, srcs, true)
+    } else {
+        for &d in dsts {
+            indices.extend(adj.row(d as usize).iter().map(|&s| remap(s)));
+            indptr.push(indices.len() as u32);
+        }
+        let n_cols = srcs.len();
+        (Csr { n_rows: dsts.len(), n_cols, indptr, indices }, srcs, false)
+    }
 }
 
 // ---------------------------------------------------------------------------

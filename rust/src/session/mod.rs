@@ -42,6 +42,7 @@ use std::time::Instant;
 
 use crate::coordinator::schedule::{self, ScheduleReport};
 use crate::datasets::{self, DatasetId, DatasetScale};
+use crate::dynamic::{self, DynamicSpec, EpochReport, GraphSnapshot, GraphUpdate, UpdateLog};
 use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
 use crate::kernels::Ctx;
@@ -208,6 +209,7 @@ pub struct SessionBuilder {
     reuse: Option<ReuseSpec>,
     partition: Option<PartitionSpec>,
     threads: Option<usize>,
+    dynamic: Option<DynamicSpec>,
 }
 
 impl Default for SchedulePolicy {
@@ -347,6 +349,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable streaming graph updates with epoch-barrier snapshot
+    /// serving (see [`crate::dynamic`]): [`Session::apply_updates`]
+    /// buffers edge/node insertions and feature/weight updates in a
+    /// bounded [`UpdateLog`] while every run and served batch keeps
+    /// executing against the current immutable snapshot, and
+    /// [`Session::flip_epoch`] atomically applies the pending log —
+    /// re-deriving only the affected sub-CSRs, evicting only the touched
+    /// reuse-cache keys, patching only the dirty partition shards and
+    /// recomputing NA only for the touched destination rows. Post-flip
+    /// outputs are bit-identical to a cold session built from the
+    /// fully-applied graph.
+    pub fn dynamic(mut self, spec: DynamicSpec) -> Self {
+        self.dynamic = Some(spec);
+        self
+    }
+
     /// Build the session: synthesize/adopt the graph, build the plan,
     /// instantiate the backend.
     pub fn build(self) -> Result<Session> {
@@ -418,6 +436,12 @@ impl SessionBuilder {
             scratch,
             shard_scratch,
             cached_output: None,
+            dynamic: self.dynamic.map(|spec| DynamicState {
+                spec,
+                log: UpdateLog::new(spec),
+                epoch: 0,
+                na_cache: None,
+            }),
             runs: 0,
         })
     }
@@ -477,7 +501,25 @@ pub struct Session {
     shard_scratch: Vec<Ctx>,
     /// Last full-graph embeddings, reused by [`Session::run_batch`].
     cached_output: Option<Tensor>,
+    /// Streaming-update state ([`SessionBuilder::dynamic`]): the pending
+    /// log, the epoch counter and the materialized per-subgraph NA
+    /// results the epoch flip patches incrementally. `None` disables
+    /// [`Session::apply_updates`] / [`Session::flip_epoch`].
+    dynamic: Option<DynamicState>,
     runs: u64,
+}
+
+/// Per-session dynamic-graph state (see [`crate::dynamic`]).
+#[derive(Debug)]
+struct DynamicState {
+    spec: DynamicSpec,
+    log: UpdateLog,
+    epoch: u64,
+    /// Per-subgraph NA results of the last *full-graph* staged run —
+    /// the tensor bank [`exec::execute_patch`] splices touched rows
+    /// into at each flip. `None` until a full run materializes it, and
+    /// after any weight swap (weights couple every row).
+    na_cache: Option<Vec<Tensor>>,
 }
 
 impl Session {
@@ -590,6 +632,14 @@ impl Session {
             self.run_staged()?
         };
         self.runs += 1;
+        if let Some(state) = self.dynamic.as_mut() {
+            // materialize the NA bank the epoch flip patches; whole-model
+            // backends return no per-stage results, so flips there fall
+            // back to dropping the cached output
+            state.na_cache = (run.na_results.len() == self.plan.num_subgraphs()
+                && !run.na_results.is_empty())
+            .then(|| run.na_results.clone());
+        }
         Ok(SessionRun {
             output: run.output,
             na_results: run.na_results,
@@ -971,7 +1021,196 @@ impl Session {
             part.refresh_weights(&self.plan);
         }
         self.invalidate();
+        if let Some(state) = self.dynamic.as_mut() {
+            // every NA row is a function of the weights: the flip's
+            // splice bank is unusable until the next full run
+            state.na_cache = None;
+        }
         Ok(())
+    }
+
+    /// The dynamic spec in effect, if streaming updates are enabled.
+    pub fn dynamic_spec(&self) -> Option<DynamicSpec> {
+        self.dynamic.as_ref().map(|s| s.spec)
+    }
+
+    /// The epoch this session currently serves: 0 at build, +1 per
+    /// [`Session::flip_epoch`]. Always 0 on a non-dynamic session.
+    pub fn epoch(&self) -> u64 {
+        self.dynamic.as_ref().map(|s| s.epoch).unwrap_or(0)
+    }
+
+    /// Describe the snapshot every run and served batch currently
+    /// executes against (epoch, node/edge counts, pending updates).
+    /// Buffered updates are invisible here until a flip — the
+    /// isolation property `tests/integration_dynamic.rs` pins.
+    pub fn snapshot(&self) -> GraphSnapshot {
+        let (epoch, pending) = self
+            .dynamic
+            .as_ref()
+            .map(|s| (s.epoch, s.log.len()))
+            .unwrap_or((0, 0));
+        GraphSnapshot::of(&self.hg, epoch, pending)
+    }
+
+    /// Buffer a batch of graph/parameter updates in the session's
+    /// [`UpdateLog`] without touching the served snapshot; returns the
+    /// pending count. Ids may reference nodes appended by updates
+    /// buffered earlier (validation happens at the barrier, against the
+    /// batch-simulated counts). Errors when the session was built
+    /// without [`SessionBuilder::dynamic`] or the log is full — the
+    /// bound backpressures the updater, never the serving path.
+    pub fn apply_updates(&mut self, updates: Vec<GraphUpdate>) -> Result<usize> {
+        let state = self.dynamic.as_mut().ok_or_else(|| {
+            Error::config("Session built without .dynamic(..): no update log to append to")
+        })?;
+        state.log.append(updates)
+    }
+
+    /// The epoch barrier: atomically apply every pending update and
+    /// advance the epoch. The pending log is validated as one batch
+    /// (a bad update rejects the whole batch *before* any mutation —
+    /// the rejected batch is discarded, serving continues on the old
+    /// snapshot), then:
+    ///
+    /// 1. the graph is mutated and only the **affected** sub-CSRs are
+    ///    re-derived, yielding the exact touched destination sets
+    ///    ([`dynamic::apply_to_graph`]);
+    /// 2. only the partition shards owning touched destinations (plus
+    ///    the shards receiving appended nodes) rematerialize
+    ///    ([`crate::partition::Partition::patch`]);
+    /// 3. only the touched `(subgraph, dst)` aggregate keys and
+    ///    rewritten `(type, node)` projection keys are evicted from
+    ///    every reuse lane — untouched entries survive with their
+    ///    generation intact;
+    /// 4. a pending `SetWeights` is applied **last** (after graph
+    ///    growth, so embedding shapes line up) through the same checks
+    ///    as [`Session::set_weights`], degrading the flip to a full
+    ///    invalidation. If the replacement is rejected, the structural
+    ///    updates remain applied and serving continues on the old
+    ///    weights with the caches conservatively cleared — re-flip with
+    ///    a corrected set;
+    /// 5. when a previous full run materialized the per-subgraph NA
+    ///    bank, NA is recomputed **only for the touched rows** over
+    ///    compact patch sub-CSRs and spliced in bit-identically
+    ///    ([`exec::execute_patch`]), refreshing the cached full-graph
+    ///    output; otherwise the cached output is dropped.
+    ///
+    /// Post-flip outputs are bit-identical to a cold session built from
+    /// the fully-applied graph, across models × shards × reuse.
+    pub fn flip_epoch(&mut self) -> Result<EpochReport> {
+        let threads = self.threads;
+        Self::with_pool(threads, || self.flip_epoch_unscoped())
+    }
+
+    fn flip_epoch_unscoped(&mut self) -> Result<EpochReport> {
+        let t0 = Instant::now();
+        if self.dynamic.is_none() {
+            return Err(Error::config(
+                "Session built without .dynamic(..): no epoch to flip",
+            ));
+        }
+        if self.backend.caps().whole_model {
+            return Err(Error::config(
+                "flip_epoch: whole-model backends execute a static-shape artifact; \
+                 dynamic sessions need a staged backend",
+            ));
+        }
+        let updates = self.dynamic.as_mut().expect("checked above").log.drain();
+        let updates_applied = updates.len();
+        let mut patch = dynamic::apply_to_graph(&mut self.hg, &mut self.plan, updates)?;
+
+        let shards_patched = match self.partition.as_mut() {
+            Some(part) => part.patch(&self.plan, &patch)?,
+            None => 0,
+        };
+
+        // targeted reuse eviction: touched aggregate rows everywhere;
+        // rewritten projection rows only where FP actually reads raw
+        // features (R-GCN projects learned embeddings instead)
+        let mut evicted_proj = 0u64;
+        let mut evicted_agg = 0u64;
+        if let Some(lanes) = self.reuse.as_mut() {
+            let feats_matter = self.plan.model != crate::models::ModelId::Rgcn;
+            for lane in lanes.iter_mut() {
+                for (si, touched) in patch.touched.iter().enumerate() {
+                    for &d in touched {
+                        if lane.evict_agg(si, d) {
+                            evicted_agg += 1;
+                        }
+                    }
+                }
+                if feats_matter {
+                    for &(ty, v) in &patch.feat_touched {
+                        if lane.evict_proj(ty, v) {
+                            evicted_proj += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // weights last: graph growth already extended the embedding
+        // tables, so a shape-compatible replacement lines up
+        let full_invalidation = match patch.new_weights.take() {
+            Some(w) => match self.set_weights(*w) {
+                Ok(()) => true,
+                Err(e) => {
+                    // structural updates stay applied; drop everything
+                    // derived so stale rows can't leak, then surface the
+                    // rejection (epoch not advanced — re-flip to retry)
+                    self.cached_output = None;
+                    if let Some(state) = self.dynamic.as_mut() {
+                        state.na_cache = None;
+                    }
+                    return Err(e);
+                }
+            },
+            None => false,
+        };
+
+        // incremental NA recompute over the materialized bank
+        // (field-disjoint borrows: the dynamic state alongside the
+        // backend, plan, graph and scratch)
+        let Session { dynamic, backend, gpu, plan, hg, scratch, cached_output, .. } =
+            self;
+        let state = dynamic.as_mut().expect("checked above");
+        let (profile, na_rows) = match state.na_cache.as_mut() {
+            Some(na_cache) if patch.touched_rows() > 0 => {
+                let run = exec::execute_patch(
+                    backend.as_ref(),
+                    gpu,
+                    plan,
+                    hg,
+                    &patch.touched,
+                    na_cache,
+                    scratch,
+                )?;
+                *cached_output = Some(run.output);
+                (Some(run.profile), run.na_rows)
+            }
+            // nothing touched: the bank and cached output stay valid
+            Some(_) => (None, 0),
+            None => {
+                *cached_output = None;
+                (None, 0)
+            }
+        };
+        state.epoch += 1;
+
+        Ok(EpochReport {
+            epoch: state.epoch,
+            updates_applied,
+            rebuilt_subgraphs: patch.rebuilt.iter().filter(|&&b| b).count(),
+            patched_subgraphs: patch.touched.iter().filter(|t| !t.is_empty()).count(),
+            na_rows_recomputed: na_rows,
+            evicted_proj,
+            evicted_agg,
+            shards_patched,
+            full_invalidation,
+            pause_nanos: t0.elapsed().as_nanos() as u64,
+            profile,
+        })
     }
 }
 
@@ -1232,6 +1471,85 @@ mod tests {
         if let Ok(mut session) = err {
             assert!(session.run().is_err());
         }
+    }
+
+    #[test]
+    fn dynamic_surface_requires_the_builder_knob() {
+        let mut s = ci_builder().build().unwrap();
+        assert_eq!(s.epoch(), 0);
+        assert!(s.dynamic_spec().is_none());
+        assert!(s.apply_updates(Vec::new()).is_err());
+        assert!(s.flip_epoch().is_err());
+        let snap = s.snapshot();
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.pending_updates, 0);
+    }
+
+    #[test]
+    fn flip_epoch_patches_in_place_bit_identically() {
+        use crate::dynamic::{DynamicSpec, GraphUpdate};
+        let mut s = ci_builder().dynamic(DynamicSpec::default()).build().unwrap();
+        assert_eq!(s.dynamic_spec(), Some(DynamicSpec::default()));
+        let _ = s.run().unwrap();
+
+        // a genuinely new M-D edge from a director who already directs
+        // (so it propagates into the composed MDM adjacency)
+        let (md, dst, src) = {
+            let hg = s.graph();
+            let md = hg.relations().iter().position(|r| r.name == "M-D").unwrap();
+            let dm = hg.relations().iter().position(|r| r.name == "D-M").unwrap();
+            let d = (0..hg.relation(dm).adj.n_rows)
+                .filter_map(|r| hg.relation(dm).adj.row(r).first().copied())
+                .next()
+                .unwrap();
+            let row = hg.relation(md).adj.row(d as usize);
+            let c = (0..hg.relation(md).adj.n_cols as u32)
+                .find(|c| row.binary_search(c).is_err())
+                .unwrap();
+            (md, d, c)
+        };
+        let before = s.snapshot();
+        s.apply_updates(vec![GraphUpdate::AddEdge { relation: md, dst, src }]).unwrap();
+        // snapshot isolation: the buffered edge is invisible until the flip
+        let pending = s.snapshot();
+        assert_eq!(pending.edge_counts, before.edge_counts);
+        assert_eq!(pending.pending_updates, 1);
+
+        let report = s.flip_epoch().unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(report.updates_applied, 1);
+        assert!(report.rebuilt_subgraphs >= 1);
+        assert!(report.na_rows_recomputed > 0);
+        assert!(report.profile.is_some(), "patch recompute carries a profile");
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.snapshot().pending_updates, 0);
+
+        // the flip refreshed the cached full-graph output in place —
+        // batches read it without a new run, and the rows are
+        // bit-identical to a cold session over the fully-applied graph
+        let rows = s.run_batch(&[0, 1, 2]).unwrap();
+        assert_eq!(s.runs(), 1);
+        let mut cold = Session::builder()
+            .graph(s.graph().clone())
+            .model(ModelId::Han)
+            .build()
+            .unwrap();
+        assert_eq!(rows, cold.run_batch(&[0, 1, 2]).unwrap());
+    }
+
+    #[test]
+    fn empty_flip_advances_the_epoch_and_keeps_the_cache() {
+        use crate::dynamic::DynamicSpec;
+        let mut s = ci_builder().dynamic(DynamicSpec::default()).build().unwrap();
+        let _ = s.run_batch(&[0]).unwrap();
+        assert_eq!(s.runs(), 1);
+        let report = s.flip_epoch().unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(report.updates_applied, 0);
+        assert_eq!(report.na_rows_recomputed, 0);
+        // nothing touched: the cached output survives the barrier
+        let _ = s.run_batch(&[0]).unwrap();
+        assert_eq!(s.runs(), 1);
     }
 
     #[test]

@@ -1,0 +1,490 @@
+//! Dynamic-graph integration (the ISSUE-7 acceptance criteria): the
+//! epoch barrier applies streamed updates atomically, and the patched
+//! session is **bit-identical** to a cold session built from the
+//! fully-applied graph across models × shards {1,2} × reuse on/off;
+//! buffered updates are invisible until the flip (snapshot isolation);
+//! the serving barrier drains in-flight waves before flipping while
+//! queued requests land on the new epoch (virtual clock, no sleeps);
+//! `set_weights` bumps every reuse lane; and a flip after N single-edge
+//! updates recomputes NA only for the touched destinations (asserted
+//! via the flip profile's kernel attributions, not just the report).
+
+use std::collections::BTreeSet;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::dynamic::{DynamicSpec, EpochReport, GraphUpdate};
+use hgnn_char::graph::HeteroGraph;
+use hgnn_char::models::ModelId;
+use hgnn_char::partition::PartitionSpec;
+use hgnn_char::profiler::{Profile, StageId};
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::serving::{AsyncServer, BatchExecutor, ServingConfig, SubmitOpts};
+use hgnn_char::session::{Session, SessionBuilder};
+use hgnn_char::testutil::VirtualClock;
+use hgnn_char::Result;
+
+const RECV: Duration = Duration::from_secs(60);
+
+/// Dynamic session over CI-scale IMDB. The reuse arm stacks full-fanout
+/// sampling (reuse memoizes sampled-batch stage results); the plain arm
+/// serves the cached full-graph forward.
+fn dyn_builder(model: ModelId, shards: Option<usize>, reuse: bool) -> SessionBuilder {
+    let mut b = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+        .dynamic(DynamicSpec::default());
+    if reuse {
+        b = b.sampling(SamplingSpec::uniform(usize::MAX, 1)).reuse(ReuseSpec::rows(1 << 14));
+    }
+    if let Some(k) = shards {
+        b = b.partition(PartitionSpec::new(k));
+    }
+    b
+}
+
+/// Cold oracle: a fresh session over an already-applied graph, same
+/// model/sampling/reuse/partition stack, no dynamic machinery.
+fn cold_builder(
+    hg: HeteroGraph,
+    model: ModelId,
+    shards: Option<usize>,
+    reuse: bool,
+) -> SessionBuilder {
+    let mut b = Session::builder().graph(hg).model(model);
+    if reuse {
+        b = b.sampling(SamplingSpec::uniform(usize::MAX, 1)).reuse(ReuseSpec::rows(1 << 14));
+    }
+    if let Some(k) = shards {
+        b = b.partition(PartitionSpec::new(k));
+    }
+    b
+}
+
+/// A churn batch exercising every structural update kind: a genuinely
+/// new edge that propagates into the composed metapaths (the director
+/// already directs, the movie is new to their row), a feature rewrite,
+/// an appended node, and an edge referencing the appended node.
+fn churn(hg: &HeteroGraph) -> Vec<GraphUpdate> {
+    let md = hg.relations().iter().position(|r| r.name == "M-D").unwrap();
+    let dm = hg.relations().iter().position(|r| r.name == "D-M").unwrap();
+    let m = hg.type_by_tag('M').unwrap();
+    let dim = hg.node_type(m).feat_dim;
+    let d = (0..hg.relation(dm).adj.n_rows)
+        .find_map(|r| hg.relation(dm).adj.row(r).first().copied())
+        .unwrap();
+    let row = hg.relation(md).adj.row(d as usize);
+    let c = (0..hg.relation(md).adj.n_cols as u32).find(|c| !row.contains(c)).unwrap();
+    let new_id = hg.node_type(m).count as u32;
+    vec![
+        GraphUpdate::AddEdge { relation: md, dst: d, src: c },
+        GraphUpdate::SetFeatures { ty: m, node: 0, features: vec![0.25; dim] },
+        GraphUpdate::AddNode { ty: m, features: vec![0.75; dim] },
+        GraphUpdate::AddEdge { relation: md, dst: d, src: new_id },
+    ]
+}
+
+// ------------------------------------------------------------ bit-identity
+
+/// The headline acceptance: after a warm run, buffered churn and one
+/// flip, the patched-in-place session answers bit-identically to a cold
+/// session built from the fully-applied graph — for every model ×
+/// shards {1,2} × reuse on/off, including a batch that seeds the node
+/// appended by the flip.
+#[test]
+fn incremental_flip_matches_cold_rebuild_across_the_matrix() {
+    let ids: [u32; 6] = [0, 1, 2, 3, 4, 5];
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        for shards in [None, Some(2)] {
+            for reuse in [false, true] {
+                let label = format!("{model:?} shards={shards:?} reuse={reuse}");
+                let mut inc = dyn_builder(model, shards, reuse).build().unwrap();
+                // warm: materializes the full forward (plain arm) or the
+                // reuse caches (sampled arm) so the flip has state to patch
+                let _ = inc.run_batch(&ids).unwrap();
+                let updates = churn(inc.graph());
+                let new_id = inc.graph().node_type(inc.graph().type_by_tag('M').unwrap()).count
+                    as u32;
+                inc.apply_updates(updates.clone()).unwrap();
+                let report = inc.flip_epoch().unwrap();
+                assert_eq!(report.epoch, 1, "{label}");
+                assert_eq!(report.updates_applied, updates.len(), "{label}");
+                assert!(report.rebuilt_subgraphs > 0, "{label}: churn rebuilds sub-CSRs");
+
+                let runs_after_flip = inc.runs();
+                let mut cold =
+                    cold_builder(inc.graph().clone(), model, shards, reuse).build().unwrap();
+                for batch in [&ids[..], &[0, 2, new_id][..]] {
+                    let got = inc.run_batch(batch).unwrap();
+                    let want = cold.run_batch(batch).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{label}: post-flip replies must be bit-identical to a \
+                         cold rebuild from the applied graph"
+                    );
+                }
+                if !reuse {
+                    // plain arm: the flip refreshed the cached forward in
+                    // place — serving after it never re-ran the full model
+                    assert_eq!(
+                        inc.runs(),
+                        runs_after_flip,
+                        "{label}: patched cache must serve without a fresh full run"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ snapshot isolation
+
+/// Buffered updates are invisible: the served snapshot (counts, rows,
+/// run counter) is untouched between `apply_updates` and the flip.
+#[test]
+fn buffered_updates_are_invisible_until_the_flip() {
+    let ids: [u32; 4] = [0, 1, 2, 3];
+    let mut s = dyn_builder(ModelId::Han, None, false).build().unwrap();
+    let before = s.run_batch(&ids).unwrap();
+    let snap0 = s.snapshot();
+    assert_eq!((snap0.epoch, snap0.pending_updates), (0, 0));
+
+    let updates = churn(s.graph());
+    let pending = s.apply_updates(updates.clone()).unwrap();
+    assert_eq!(pending, updates.len());
+
+    let snap1 = s.snapshot();
+    assert_eq!(snap1.epoch, 0, "no flip yet");
+    assert_eq!(snap1.pending_updates, updates.len());
+    assert_eq!(snap1.node_counts, snap0.node_counts, "buffered AddNode invisible");
+    assert_eq!(snap1.edge_counts, snap0.edge_counts, "buffered AddEdge invisible");
+    assert_eq!(s.run_batch(&ids).unwrap(), before, "served rows still the old epoch");
+    assert_eq!(s.runs(), 1, "isolation is structural: no recompute happened");
+
+    let report = s.flip_epoch().unwrap();
+    assert_eq!(report.updates_applied, updates.len());
+    let snap2 = s.snapshot();
+    assert_eq!((snap2.epoch, snap2.pending_updates), (1, 0));
+    let m = s.graph().type_by_tag('M').unwrap();
+    assert_eq!(snap2.node_counts[m], snap0.node_counts[m] + 1, "AddNode landed");
+    assert!(
+        snap2.edge_counts.iter().sum::<usize>() > snap0.edge_counts.iter().sum::<usize>(),
+        "AddEdge landed"
+    );
+    assert_ne!(s.run_batch(&ids).unwrap(), before, "the flip changed node 0's features");
+}
+
+// ------------------------------------------------- serving barrier ordering
+
+/// Epoch-tagged gated executor: every reply row carries the epoch it
+/// executed under, `execute` blocks on `gate` (signalling `entered`),
+/// and flips are just an epoch bump — isolating the *dispatcher's*
+/// barrier ordering from real model execution.
+struct EpochEcho {
+    epoch: u64,
+    pending: usize,
+    entered: mpsc::Sender<()>,
+    gate: mpsc::Receiver<()>,
+    log: Arc<Mutex<Vec<(u64, Vec<u32>)>>>,
+}
+
+impl BatchExecutor for EpochEcho {
+    fn execute(&mut self, ids: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let _ = self.entered.send(());
+        let _ = self.gate.recv();
+        self.log.lock().unwrap().push((self.epoch, ids.to_vec()));
+        Ok(ids.iter().map(|&i| vec![self.epoch as f32, i as f32]).collect())
+    }
+
+    fn apply_updates(&mut self, updates: Vec<GraphUpdate>) -> Result<usize> {
+        self.pending += updates.len();
+        Ok(self.pending)
+    }
+
+    fn flip_epoch(&mut self) -> Result<EpochReport> {
+        self.epoch += 1;
+        let updates_applied = std::mem::take(&mut self.pending);
+        Ok(EpochReport {
+            epoch: self.epoch,
+            updates_applied,
+            rebuilt_subgraphs: 0,
+            patched_subgraphs: 0,
+            na_rows_recomputed: 0,
+            evicted_proj: 0,
+            evicted_agg: 0,
+            shards_patched: 0,
+            full_invalidation: false,
+            pause_nanos: 0,
+            profile: None,
+        })
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// The barrier runs strictly between waves: the in-flight wave finishes
+/// on the old epoch, and a request already *queued* when the flip was
+/// requested executes on the new one. Deterministic on the virtual
+/// clock — waves close by size, nothing depends on real time.
+#[test]
+fn flip_drains_inflight_waves_and_requeued_requests_see_the_new_epoch() {
+    let clock = Arc::new(VirtualClock::new());
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let exec_log = Arc::clone(&log);
+    let server = AsyncServer::start_with_clock(
+        ServingConfig {
+            max_batch: 1,
+            flush_after: Duration::from_millis(1),
+            priority_lanes: 1,
+            ..Default::default()
+        },
+        clock,
+        move || EpochEcho {
+            epoch: 0,
+            pending: 0,
+            entered: entered_tx,
+            gate: gate_rx,
+            log: exec_log,
+        },
+    );
+    let a = server.submit(&[1], SubmitOpts::default()).unwrap();
+    entered_rx.recv_timeout(RECV).unwrap(); // dispatcher blocked inside wave A
+    let updates = vec![GraphUpdate::AddEdge { relation: 0, dst: 0, src: 0 }];
+    let apply_rx = server.apply_updates(updates).unwrap();
+    let flip_rx = server.flip_epoch().unwrap();
+    let b = server.submit(&[2], SubmitOpts::default()).unwrap();
+    for _ in 0..2 {
+        let _ = gate_tx.send(());
+    }
+
+    let rows_a = a.recv_timeout(RECV).unwrap().unwrap();
+    assert_eq!(rows_a, vec![vec![0.0, 1.0]], "the in-flight wave completed on epoch 0");
+    assert_eq!(apply_rx.recv_timeout(RECV).unwrap().unwrap(), 1, "append acked");
+    let report = flip_rx.recv_timeout(RECV).unwrap().unwrap();
+    assert_eq!((report.epoch, report.updates_applied), (1, 1));
+    let rows_b = b.recv_timeout(RECV).unwrap().unwrap();
+    assert_eq!(
+        rows_b,
+        vec![vec![1.0, 2.0]],
+        "a request queued before the barrier executes on the new epoch"
+    );
+    let _ = server.shutdown();
+    assert_eq!(
+        log.lock().unwrap().as_slice(),
+        &[(0, vec![1]), (1, vec![2])],
+        "dispatch order: old-epoch wave, barrier, new-epoch wave"
+    );
+}
+
+/// End-to-end through a real dynamic session behind the dispatcher:
+/// pre-flip replies match a cold session over the base graph, the flip
+/// report round-trips, and post-flip replies match a cold session over
+/// the applied graph.
+#[test]
+fn served_replies_flip_epochs_bit_identically() {
+    let ids: [u32; 3] = [0, 1, 2];
+    let base = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let updates = churn(&base);
+
+    let server = dyn_builder(ModelId::Han, None, false).serve_async(ServingConfig {
+        max_batch: 8,
+        flush_after: Duration::from_millis(1),
+        priority_lanes: 1,
+        ..Default::default()
+    });
+    // pre-flip: awaited before the controls are queued, so this wave
+    // deterministically executes on epoch 0
+    let got0 = server
+        .submit(&ids, SubmitOpts::default())
+        .unwrap()
+        .recv_timeout(RECV)
+        .unwrap()
+        .unwrap();
+    let mut old_cold = cold_builder(base.clone(), ModelId::Han, None, false).build().unwrap();
+    assert_eq!(got0, old_cold.run_batch(&ids).unwrap(), "epoch-0 replies match cold base");
+
+    let _ = server.apply_updates(updates.clone()).unwrap();
+    let report = server
+        .flip_epoch()
+        .unwrap()
+        .recv_timeout(RECV)
+        .unwrap()
+        .expect("flip succeeds through the dispatcher");
+    assert_eq!((report.epoch, report.updates_applied), (1, updates.len()));
+    assert!(report.na_rows_recomputed > 0, "the served forward was patched in place");
+
+    // twin session applies the same batch to derive the applied graph
+    let mut twin = dyn_builder(ModelId::Han, None, false).build().unwrap();
+    twin.apply_updates(updates).unwrap();
+    twin.flip_epoch().unwrap();
+    let mut new_cold =
+        cold_builder(twin.graph().clone(), ModelId::Han, None, false).build().unwrap();
+    let got1 = server
+        .submit(&ids, SubmitOpts::default())
+        .unwrap()
+        .recv_timeout(RECV)
+        .unwrap()
+        .unwrap();
+    assert_eq!(got1, new_cold.run_batch(&ids).unwrap(), "epoch-1 replies match cold applied");
+    let _ = server.shutdown();
+}
+
+// --------------------------------------------------------- reuse lane churn
+
+/// Regression: a weight swap invalidates **every** reuse lane of a
+/// sharded session (each lane's generation bumps exactly once), and the
+/// aggregate view absorbs all lane bumps — not just lane 0's.
+#[test]
+fn set_weights_bumps_every_reuse_lane_generation() {
+    let mut s = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .reuse(ReuseSpec::rows(1 << 14))
+        .partition(PartitionSpec::new(2))
+        .build()
+        .unwrap();
+    let _ = s.run_batch(&[0, 1, 2, 3, 4, 5]).unwrap();
+    let before = s.reuse_lane_stats().unwrap();
+    assert_eq!(before.len(), 2, "one reuse lane per shard");
+    assert!(before.iter().all(|l| l.invalidations == 0));
+
+    let w = s.plan().weights.clone();
+    s.set_weights(w).unwrap();
+    let lanes = s.reuse_lane_stats().unwrap();
+    for (i, lane) in lanes.iter().enumerate() {
+        assert_eq!(lane.invalidations, 1, "lane {i} must be invalidated by set_weights");
+    }
+    // the aggregate stats view absorbs every lane's counters
+    assert_eq!(s.reuse_stats().unwrap().invalidations, lanes.len() as u64);
+}
+
+/// A flip whose batch ends in `SetWeights` degrades to a full
+/// invalidation: the report says so and every reuse lane bumps once,
+/// while outputs still match a cold session with the same weights.
+#[test]
+fn flip_with_setweights_reports_full_invalidation() {
+    let mut s = dyn_builder(ModelId::Han, Some(2), true).build().unwrap();
+    let _ = s.run_batch(&[0, 1, 2, 3]).unwrap();
+    let w = Box::new(s.plan().weights.clone());
+    s.apply_updates(vec![GraphUpdate::SetWeights(w)]).unwrap();
+    let report = s.flip_epoch().unwrap();
+    assert!(report.full_invalidation, "SetWeights degrades the flip");
+    assert_eq!(report.rebuilt_subgraphs, 0, "no structural churn in the batch");
+    let lanes = s.reuse_lane_stats().unwrap();
+    assert!(lanes.iter().all(|l| l.invalidations == 1), "every lane bumped");
+    let mut cold = cold_builder(s.graph().clone(), ModelId::Han, Some(2), true).build().unwrap();
+    assert_eq!(s.run_batch(&[0, 1, 2, 3]).unwrap(), cold.run_batch(&[0, 1, 2, 3]).unwrap());
+}
+
+// ------------------------------------------------------- incremental extent
+
+/// Bytes moved by a profile's Neighbor Aggregation kernels.
+fn na_bytes(p: &Profile) -> u64 {
+    p.kernels
+        .iter()
+        .filter(|k| k.stage == StageId::NeighborAggregation)
+        .map(|k| k.exec.counters.bytes_read + k.exec.counters.bytes_written)
+        .sum()
+}
+
+/// The kernel-count acceptance: after N single-edge updates into ONE
+/// relation, the flip recomputes NA only for the N touched destinations
+/// — exactly one subgraph's NA kernels appear in the flip profile, with
+/// strictly less NA traffic and fewer NA kernel launches than the full
+/// run that preceded it.
+#[test]
+fn flip_recomputes_na_only_for_touched_destinations() {
+    let mut s = dyn_builder(ModelId::Rgcn, None, false).build().unwrap();
+    let full = s.run().unwrap();
+
+    // N genuinely-new single edges, one per distinct destination row
+    let md = s.graph().relations().iter().position(|r| r.name == "M-D").unwrap();
+    let adj = &s.graph().relation(md).adj;
+    let n = adj.n_rows.min(3);
+    let mut updates = Vec::new();
+    for d in 0..n {
+        let row = adj.row(d);
+        let src = (0..adj.n_cols as u32).find(|c| !row.contains(c)).unwrap();
+        updates.push(GraphUpdate::AddEdge { relation: md, dst: d as u32, src });
+    }
+    s.apply_updates(updates).unwrap();
+    let report = s.flip_epoch().unwrap();
+
+    assert_eq!(report.rebuilt_subgraphs, 1, "only the M-D relation subgraph re-derives");
+    assert_eq!(report.patched_subgraphs, 1);
+    assert_eq!(report.na_rows_recomputed, n, "exactly the N touched destinations");
+
+    let flip = report.profile.expect("a materialized forward was patched");
+    let attributed: BTreeSet<&String> = flip
+        .kernels
+        .iter()
+        .filter(|k| k.stage == StageId::NeighborAggregation)
+        .filter_map(|k| k.subgraph.as_ref())
+        .collect();
+    assert_eq!(attributed.len(), 1, "NA kernels launched for one subgraph only");
+    let flip_na = flip
+        .kernels
+        .iter()
+        .filter(|k| k.stage == StageId::NeighborAggregation)
+        .count();
+    let full_na = full
+        .profile
+        .kernels
+        .iter()
+        .filter(|k| k.stage == StageId::NeighborAggregation)
+        .count();
+    assert!(flip_na < full_na, "flip NA kernels {flip_na} < full-run {full_na}");
+    assert!(
+        na_bytes(&flip) < na_bytes(&full.profile),
+        "the compact patch moves less NA data than the full forward"
+    );
+
+    // and the incremental result still matches a cold rebuild
+    let mut cold = cold_builder(s.graph().clone(), ModelId::Rgcn, None, false).build().unwrap();
+    let ids: [u32; 4] = [0, 1, 2, 3];
+    assert_eq!(s.run_batch(&ids).unwrap(), cold.run_batch(&ids).unwrap());
+}
+
+// ----------------------------------------------------------- error surface
+
+/// A batch with one bad update rejects whole at the barrier — nothing
+/// lands, serving continues on the old snapshot, and the next (valid)
+/// flip still works.
+#[test]
+fn invalid_batch_rejects_atomically_and_serving_continues() {
+    let ids: [u32; 3] = [0, 1, 2];
+    let mut s = dyn_builder(ModelId::Han, None, false).build().unwrap();
+    let before = s.run_batch(&ids).unwrap();
+    let m = s.graph().type_by_tag('M').unwrap();
+    let dim = s.graph().node_type(m).feat_dim;
+    let snap0 = s.snapshot();
+
+    // valid AddNode followed by an out-of-bounds edge: the whole batch
+    // must reject (no partial application of the AddNode)
+    let bogus = vec![
+        GraphUpdate::AddNode { ty: m, features: vec![0.5; dim] },
+        GraphUpdate::AddEdge { relation: 0, dst: u32::MAX, src: 0 },
+    ];
+    s.apply_updates(bogus).unwrap();
+    assert!(s.flip_epoch().is_err(), "validation rejects the batch at the barrier");
+    assert_eq!(s.epoch(), 0, "epoch did not advance");
+    let snap1 = s.snapshot();
+    assert_eq!(snap1.node_counts, snap0.node_counts, "the AddNode did not land");
+    assert_eq!(s.run_batch(&ids).unwrap(), before, "serving continues on the old snapshot");
+
+    // the rejected batch was discarded: a clean batch flips fine
+    let updates = churn(s.graph());
+    s.apply_updates(updates.clone()).unwrap();
+    let report = s.flip_epoch().unwrap();
+    assert_eq!(report.updates_applied, updates.len(), "only the clean batch applied");
+    assert_eq!(s.epoch(), 1);
+}

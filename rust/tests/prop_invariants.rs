@@ -484,3 +484,179 @@ fn prop_mixing_never_worse_than_plain_parallel() {
             && mixed.modeled_makespan_ns >= sa * (1.0 - 1e-9) - 1e-6
     });
 }
+
+// ---------------------------------------------------------------------------
+// Dynamic-graph properties (ISSUE 7 satellite): streamed updates converge
+// to the same state and outputs regardless of how the stream is batched
+// across epoch flips, and a flip evicts only the touched reuse entries.
+// ---------------------------------------------------------------------------
+
+/// Random, order-valid update stream for a [`random_bipartite`] graph:
+/// edges into both relations, appended nodes of both types, and feature
+/// rewrites. Edge updates draw destinations from the *running* counts,
+/// so an edge may reference a node appended earlier in the stream —
+/// exercising cross-batch references when the stream is split.
+/// Duplicate edges are valid no-ops, so no dedup is needed.
+fn random_updates(
+    hg: &hgnn_char::graph::HeteroGraph,
+    rng: &mut Pcg32,
+) -> Vec<hgnn_char::dynamic::GraphUpdate> {
+    use hgnn_char::dynamic::GraphUpdate;
+    let mut counts: Vec<usize> = hg.node_types().iter().map(|t| t.count).collect();
+    let dims: Vec<usize> = hg.node_types().iter().map(|t| t.feat_dim).collect();
+    (0..8)
+        .map(|k| match k % 4 {
+            0 | 3 => {
+                let rel = rng.gen_range(2);
+                let (dt, st) = (hg.relation(rel).dst, hg.relation(rel).src);
+                GraphUpdate::AddEdge {
+                    relation: rel,
+                    dst: rng.gen_range(counts[dt]) as u32,
+                    src: rng.gen_range(counts[st]) as u32,
+                }
+            }
+            1 => {
+                let ty = rng.gen_range(2);
+                counts[ty] += 1;
+                GraphUpdate::AddNode { ty, features: vec![rng.gen_f32(); dims[ty]] }
+            }
+            _ => {
+                let ty = rng.gen_range(2);
+                GraphUpdate::SetFeatures {
+                    ty,
+                    node: rng.gen_range(counts[ty]) as u32,
+                    features: vec![rng.gen_f32(); dims[ty]],
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_update_batching_converges_bit_identically() {
+    use hgnn_char::dynamic::DynamicSpec;
+    use hgnn_char::models::{build_plan, ModelConfig, ModelId};
+    use hgnn_char::session::Session;
+    // fewer cases: each runs several full forwards + flips
+    let strat = CsrStrategy { max_rows: 10, max_cols: 8, max_density: 0.4 };
+    check("interleaved flips == one flip == cold", 51, 10, &strat, |csr| {
+        let (hg, plan) = random_bipartite(csr);
+        if hg.node_types().iter().any(|t| t.count == 0) {
+            return true; // degenerate graph: nothing to stream against
+        }
+        let mut rng = Pcg32::seeded(csr.nnz() as u64 * 31 + csr.n_rows as u64);
+        let updates = random_updates(&hg, &mut rng);
+        let n = hg.node_type(plan.target).count.min(4) as u32;
+        let ids: Vec<u32> = (0..n).collect();
+
+        // same stream, applied as ONE batch vs. a random contiguous split
+        // with a flip after every piece (order preserved, so each prefix
+        // is valid on its own)
+        let mut one = Session::builder()
+            .graph(hg.clone())
+            .plan(plan.clone())
+            .dynamic(DynamicSpec::default())
+            .build()
+            .unwrap();
+        let mut many = Session::builder()
+            .graph(hg.clone())
+            .plan(plan.clone())
+            .dynamic(DynamicSpec::default())
+            .build()
+            .unwrap();
+        // warm both so every flip patches a materialized forward
+        let _ = one.run_batch(&ids).unwrap();
+        let _ = many.run_batch(&ids).unwrap();
+
+        one.apply_updates(updates.clone()).unwrap();
+        one.flip_epoch().unwrap();
+        let mut rest = updates;
+        while !rest.is_empty() {
+            let take = 1 + rng.gen_range(rest.len());
+            let batch: Vec<_> = rest.drain(..take).collect();
+            many.apply_updates(batch).unwrap();
+            many.flip_epoch().unwrap();
+        }
+
+        let (sa, sb) = (one.snapshot(), many.snapshot());
+        if sa.node_counts != sb.node_counts || sa.edge_counts != sb.edge_counts {
+            return false;
+        }
+        // cold oracle: a fresh session over the fully-applied graph — the
+        // plan regenerates prefix-stably, so outputs must be bitwise equal
+        let cold_plan =
+            build_plan(ModelId::Rgcn, one.graph(), &ModelConfig::default()).unwrap();
+        let mut cold =
+            Session::builder().graph(one.graph().clone()).plan(cold_plan).build().unwrap();
+        let a = one.run_batch(&ids).unwrap();
+        let b = many.run_batch(&ids).unwrap();
+        let c = cold.run_batch(&ids).unwrap();
+        a == b && b == c
+    });
+}
+
+#[test]
+fn prop_untouched_reuse_entries_survive_a_flip() {
+    use hgnn_char::dynamic::{DynamicSpec, GraphUpdate};
+    use hgnn_char::reuse::ReuseSpec;
+    use hgnn_char::sampler::SamplingSpec;
+    use hgnn_char::session::Session;
+    // the doc promise of `reuse/mod.rs`: a flip performs *targeted*
+    // eviction — no generation bump, untouched entries keep serving hits
+    let strat = CsrStrategy { max_rows: 10, max_cols: 8, max_density: 0.4 };
+    check("flip evicts only touched reuse entries", 52, 10, &strat, |csr| {
+        let (hg, plan) = random_bipartite(csr);
+        if hg.node_types().iter().any(|t| t.count == 0) {
+            return true;
+        }
+        // a genuinely-new edge in the relation aggregating INTO the
+        // target type, so the warm cache holds the key the flip evicts
+        let rel = (0..hg.relations().len())
+            .find(|&r| hg.relation(r).dst == plan.target)
+            .unwrap();
+        let adj = &hg.relation(rel).adj;
+        let Some((dst, src)) = (0..adj.n_rows).find_map(|d| {
+            (0..adj.n_cols as u32).find(|s| !adj.row(d).contains(s)).map(|s| (d as u32, s))
+        }) else {
+            return true; // relation already complete: nothing new to insert
+        };
+
+        let ids: Vec<u32> = (0..hg.node_type(plan.target).count as u32).collect();
+        let mut live = Session::builder()
+            .graph(hg.clone())
+            .plan(plan.clone())
+            .sampling(SamplingSpec::uniform(usize::MAX, 1))
+            .reuse(ReuseSpec::rows(1 << 12))
+            .dynamic(DynamicSpec::default())
+            .build()
+            .unwrap();
+        let _ = live.run_batch(&ids).unwrap();
+        let s0 = live.reuse_stats().unwrap();
+
+        live.apply_updates(vec![GraphUpdate::AddEdge { relation: rel, dst, src }]).unwrap();
+        live.flip_epoch().unwrap();
+        let s1 = live.reuse_stats().unwrap();
+        // targeted eviction, never a generation bump
+        if s1.invalidations != s0.invalidations || s1.targeted_evictions <= s0.targeted_evictions
+        {
+            return false;
+        }
+
+        // untouched entries survive: replaying the warm batch still hits
+        let again = live.run_batch(&ids).unwrap();
+        let s2 = live.reuse_stats().unwrap();
+        if s2.proj_hits + s2.agg_hits <= s1.proj_hits + s1.agg_hits {
+            return false;
+        }
+        // and the surviving entries serve rows bitwise equal to a cold
+        // session over the applied graph (same plan: no growth here)
+        let mut cold = Session::builder()
+            .graph(live.graph().clone())
+            .plan(live.plan().clone())
+            .sampling(SamplingSpec::uniform(usize::MAX, 1))
+            .reuse(ReuseSpec::rows(1 << 12))
+            .build()
+            .unwrap();
+        again == cold.run_batch(&ids).unwrap()
+    });
+}
