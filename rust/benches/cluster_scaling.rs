@@ -1,0 +1,84 @@
+//! Bench: **simulation-cluster execution — wire cost of the distributed
+//! forward**.
+//!
+//! The distributed executor runs the same owner-computes FP/NA/SA plan
+//! as the in-process sharded path, but every halo row, merge row and
+//! control message crosses the length-prefixed wire codec through the
+//! coordinator's stop-and-wait protocol. This bench quantifies that
+//! overhead: each cell builds a session with `.cluster(ClusterSpec)` at
+//! workers ∈ {1, 2, 4} over the deterministic [`SimTransport`] and
+//! times `Session::run` end-to-end, reporting the frames and payload
+//! bytes the wave moved.
+//!
+//! Expected qualitative trend: wall time *rises* with worker count —
+//! the sim transport serializes the protocol on one thread, so this
+//! sweep isolates codec + protocol cost, not parallel speedup (that is
+//! `shard_scaling`'s job). Wire bytes grow with the halo surface of the
+//! partition; frames grow roughly linearly in workers per wave.
+//!
+//! Every cell cross-checks against the monolithic forward (a cheap
+//! frob-norm fingerprint; `tests/integration_cluster.rs` pins exact
+//! bytes), so the protocol can never converge to a different answer.
+//!
+//! Run: `cargo bench --bench cluster_scaling`
+
+use hgnn_char::bench::{bench, header, BenchConfig};
+use hgnn_char::cluster::ClusterSpec;
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::session::{Session, SessionBuilder};
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.5)
+    }
+}
+
+fn builder() -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Dblp)
+        .scale(scale())
+        .model(ModelId::Han)
+}
+
+fn main() {
+    header(
+        "cluster_scaling",
+        "distributed forward over the sim cluster (HAN on synthesized DBLP): \
+         workers ∈ {1,2,4}, one shard per worker, stop-and-wait wire protocol",
+    );
+    let config = BenchConfig::from_env();
+
+    // monolithic reference output fingerprint (bit-identity smoke check)
+    let mut reference = builder().build().expect("monolithic session");
+    let ref_norm = reference.run().expect("monolithic run").output.frob_norm();
+
+    for workers in [1usize, 2, 4] {
+        let mut session = builder()
+            .cluster(ClusterSpec::new(workers))
+            .build()
+            .expect("cluster session");
+        // warm + verify against the monolithic forward
+        let warm = session.run().expect("cluster run");
+        assert!(
+            (warm.output.frob_norm() - ref_norm).abs() < 1e-9,
+            "distributed output diverged from the monolithic forward"
+        );
+        let before = session.cluster().expect("cluster").transport_stats();
+        let waves_before = session.cluster_stats().expect("stats").waves;
+        let result = bench(&format!("forward workers={workers}"), &config, || {
+            session.run().expect("cluster run")
+        });
+        let after = session.cluster().expect("cluster").transport_stats();
+        let waves = session.cluster_stats().expect("stats").waves - waves_before;
+        let frames = (after.delivered - before.delivered) / waves.max(1);
+        let bytes = (after.bytes - before.bytes) / waves.max(1);
+        println!(
+            "{}  wire/wave: {frames} frame(s), {:.1} KiB",
+            result.line(),
+            bytes as f64 / 1024.0
+        );
+    }
+}

@@ -122,6 +122,22 @@ impl Args {
         Ok(Some(crate::partition::PartitionSpec::new(shards).with_threads(threads)))
     }
 
+    /// Cluster spec from `--cluster N` (default `None`: in-process
+    /// execution). `N` is the worker count; `--cluster 0` is rejected
+    /// at parse level, mirroring `--shards`. Composes with `--shards K`
+    /// (K shards placed onto the N workers; without it the session
+    /// defaults to one shard per worker).
+    pub fn cluster(&self) -> Result<Option<crate::cluster::ClusterSpec>> {
+        if !self.has("cluster") {
+            return Ok(None);
+        }
+        let workers = self.flag_usize("cluster", 0)?;
+        if workers == 0 {
+            return Err(Error::config("--cluster must be >= 1"));
+        }
+        Ok(Some(crate::cluster::ClusterSpec::new(workers)))
+    }
+
     /// Worker-pool width from `--threads N` (default `None`: the
     /// process default — `HGNN_THREADS`, else available parallelism).
     /// `--threads 0` is rejected at parse level, mirroring `--shards`.
@@ -272,6 +288,10 @@ COMMANDS:
       [--threads N]                intra-kernel worker-pool width
                                    (default: all cores; HGNN_THREADS
                                    overrides the default)
+      [--cluster N]                distributed execution: place shards
+                                   onto N workers over the wire protocol
+                                   (sim transport by default; sockets
+                                   with --features cluster-sockets)
   figure <2|3|4|5a|5b|5c|6a|6b>  regenerate a paper figure
       [--scale ...]
   table <3>                      regenerate a paper table
@@ -567,9 +587,30 @@ mod tests {
             "--queue-cap",
             "--update-stream",
             "--epoch-every",
+            "--cluster",
         ] {
             assert!(USAGE.contains(flag), "usage missing {flag}");
         }
+    }
+
+    #[test]
+    fn cluster_flag_parsing() {
+        // absent: in-process execution
+        assert!(parse("run").cluster().unwrap().is_none());
+        // present in both spellings
+        assert_eq!(parse("run --cluster 4").cluster().unwrap().unwrap().workers, 4);
+        assert_eq!(parse("run --cluster=2").cluster().unwrap().unwrap().workers, 2);
+        // zero is rejected in both spellings, like --shards
+        assert!(parse("run --cluster 0").cluster().is_err());
+        assert!(parse("run --cluster=0").cluster().is_err());
+        // non-numeric rejected
+        assert!(parse("run --cluster nah").cluster().is_err());
+        // bare switch (no value) rejected: "true" is not a worker count
+        assert!(parse("run --cluster").cluster().is_err());
+        // composes with --shards: K shards over N workers
+        let a = parse("run --cluster 2 --shards 4");
+        assert_eq!(a.cluster().unwrap().unwrap().workers, 2);
+        assert_eq!(a.partition().unwrap().unwrap().shards, 4);
     }
 
     #[test]

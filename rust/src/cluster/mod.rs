@@ -1,0 +1,848 @@
+//! Distributed shard workers with a deterministic simulation cluster.
+//!
+//! The paper's scaling guideline — exploit inter-stage and
+//! inter-partition parallelism — stops at one device. This module
+//! promotes the owner-computes shards of [`crate::partition`] from
+//! scoped threads to isolated *workers* behind a message fabric: a
+//! coordinator places shards onto workers, ships stage requests and
+//! collects stage responses over a length-prefixed [`wire`] codec, and
+//! survives worker death by re-placing orphaned shards from its
+//! retained [`crate::partition::Partition`] and replaying the in-flight
+//! wave.
+//!
+//! The acceptance story is the test harness itself: with
+//! [`SimTransport`] every delivery, fault and timeout is a function of
+//! a seed and a [`crate::testutil::VirtualClock`], so any cluster
+//! behavior — including which heartbeat drops and which worker gets
+//! retired — reproduces exactly. The protocol is a stop-and-wait loop
+//! ([`Cluster::stage_round`]): the coordinator retransmits request
+//! frames with *unchanged* sequence numbers on a retry cadence,
+//! receivers deduplicate by `(sender, seq)`, and responses are
+//! accumulated by semantic key so a retransmitted attempt can never
+//! double-deliver a logical message.
+
+pub mod transport;
+pub mod wire;
+
+#[cfg(feature = "cluster-sockets")]
+pub mod sockets;
+
+pub use transport::{Endpoint, FaultSpec, SimTransport, Transport, TransportStats};
+pub use wire::{Frame, Message, RowBlock, COORDINATOR};
+
+#[cfg(feature = "cluster-sockets")]
+pub use sockets::SocketTransport;
+
+use crate::serving::clock::Nanos;
+use crate::{Error, Result};
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+/// Cluster shape and protocol timing. All durations are interpreted on
+/// the *transport* clock — virtual for the simulator — so none of them
+/// introduce wall-clock dependence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Number of workers shards are placed onto.
+    pub workers: usize,
+    /// How often an idle-or-busy worker emits a heartbeat.
+    pub heartbeat_interval: Duration,
+    /// Silence threshold after which the coordinator retires a worker.
+    pub heartbeat_timeout: Duration,
+    /// Retransmit cadence for unacknowledged request frames; also the
+    /// virtual-time step of one protocol iteration.
+    pub retry_interval: Duration,
+    /// Protocol-iteration bound per stage round (stall detector).
+    pub max_rounds: usize,
+    /// Seeded drop/dup/delay schedule applied by the transport.
+    pub fault: FaultSpec,
+    /// Deterministic kill schedule: worker `w` dies when wave `n`
+    /// begins (`(n, w)` entries; waves count from 1).
+    pub kill_at_wave: Vec<(u64, usize)>,
+    /// Deterministic mid-wave kill schedule: worker `w` dies as soon as
+    /// the transport's total sent-frame counter reaches `n`.
+    pub kill_after_sends: Vec<(u64, usize)>,
+}
+
+impl ClusterSpec {
+    /// Defaults: heartbeat every 50ms, retire after 200ms of silence,
+    /// retransmit every 50ms, no faults, no scheduled kills.
+    pub fn new(workers: usize) -> ClusterSpec {
+        ClusterSpec {
+            workers,
+            heartbeat_interval: Duration::from_millis(50),
+            heartbeat_timeout: Duration::from_millis(200),
+            retry_interval: Duration::from_millis(50),
+            max_rounds: 10_000,
+            fault: FaultSpec::none(),
+            kill_at_wave: Vec::new(),
+            kill_after_sends: Vec::new(),
+        }
+    }
+
+    /// Set the seeded fault schedule.
+    pub fn with_fault(mut self, fault: FaultSpec) -> ClusterSpec {
+        self.fault = fault;
+        self
+    }
+
+    /// Schedule worker `worker` to die when wave `wave` begins.
+    pub fn kill_at_wave(mut self, wave: u64, worker: usize) -> ClusterSpec {
+        self.kill_at_wave.push((wave, worker));
+        self
+    }
+
+    /// Schedule worker `worker` to die once `sends` total frames have
+    /// been sent — a deterministic way to kill *mid*-wave.
+    pub fn kill_after_sends(mut self, sends: u64, worker: usize) -> ClusterSpec {
+        self.kill_after_sends.push((sends, worker));
+        self
+    }
+}
+
+/// Coordinator-side view of one worker.
+#[derive(Debug, Clone)]
+struct WorkerState {
+    /// Whether the simulated process is running (kills clear this; the
+    /// coordinator cannot observe it directly — only via silence).
+    alive: bool,
+    /// Retired by the coordinator: shards re-placed, never reused.
+    retired: bool,
+    /// Draining: stays live for current shards but receives no
+    /// re-placements.
+    draining: bool,
+    /// Transport-clock time of the last frame received from it.
+    last_seen: Nanos,
+    /// Last heartbeat emission time (worker-side state).
+    last_heartbeat: Option<Nanos>,
+}
+
+/// Counters describing cluster-level events; all deterministic under
+/// [`SimTransport`], so tests pin them exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterStats {
+    /// Waves started via [`Cluster::begin_wave`].
+    pub waves: u64,
+    /// Shards re-placed after worker retirement.
+    pub replaced_shards: u64,
+    /// Workers retired (heartbeat timeout or explicit).
+    pub retired_workers: u64,
+    /// Heartbeat frames the coordinator accepted.
+    pub heartbeats: u64,
+    /// Request retransmission bursts.
+    pub retransmits: u64,
+}
+
+/// The coordinator plus its (simulated, in-process) workers.
+///
+/// One `Cluster` owns the placement map, the failure detector and the
+/// wire protocol; the *compute* a worker performs is supplied per stage
+/// by the caller as a closure (see [`Cluster::stage_round`]), which
+/// keeps this module free of any dependency on the execution layer.
+pub struct Cluster {
+    spec: ClusterSpec,
+    transport: Box<dyn Transport>,
+    /// shard → owning worker.
+    placement: Vec<usize>,
+    workers: Vec<WorkerState>,
+    next_seq: u64,
+    /// Coordinator-side dedup of `(from, seq)`.
+    coord_seen: BTreeSet<(u32, u64)>,
+    /// Per-worker dedup of `(from, seq)`.
+    worker_seen: Vec<BTreeSet<(u32, u64)>>,
+    stats: ClusterStats,
+    wave: u64,
+    /// Shards re-placed since the last [`Cluster::take_replacements`]
+    /// call — the session drains this to rebuild reuse-cache lanes.
+    replacements: Vec<usize>,
+}
+
+impl Cluster {
+    /// Place `num_shards` shards round-robin onto the spec's workers
+    /// and announce the placement with `Place` control frames.
+    pub fn new(
+        spec: ClusterSpec,
+        num_shards: usize,
+        transport: Box<dyn Transport>,
+    ) -> Result<Cluster> {
+        if spec.workers == 0 {
+            return Err(Error::config("cluster: at least one worker required"));
+        }
+        if num_shards == 0 {
+            return Err(Error::config("cluster: at least one shard required"));
+        }
+        let now = transport.now();
+        let mut cluster = Cluster {
+            placement: (0..num_shards).map(|s| s % spec.workers).collect(),
+            workers: vec![
+                WorkerState {
+                    alive: true,
+                    retired: false,
+                    draining: false,
+                    last_seen: now,
+                    last_heartbeat: None,
+                };
+                spec.workers
+            ],
+            worker_seen: vec![BTreeSet::new(); spec.workers],
+            transport,
+            next_seq: 0,
+            coord_seen: BTreeSet::new(),
+            stats: ClusterStats::default(),
+            wave: 0,
+            replacements: Vec::new(),
+            spec,
+        };
+        for s in 0..num_shards {
+            let w = cluster.placement[s];
+            cluster.send_control(
+                Endpoint::Worker(w as u32),
+                Message::Place { shard: s as u32, worker: w as u32 },
+            )?;
+        }
+        Ok(cluster)
+    }
+
+    /// The spec this cluster was built from.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Current shard → worker placement.
+    pub fn placement(&self) -> &[usize] {
+        &self.placement
+    }
+
+    /// Owner of `shard`.
+    pub fn worker_for(&self, shard: usize) -> usize {
+        self.placement[shard]
+    }
+
+    /// Workers that are alive and not retired, ascending.
+    pub fn live_workers(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|&w| self.workers[w].alive && !self.workers[w].retired)
+            .collect()
+    }
+
+    /// Workers not yet retired (the coordinator's optimistic view —
+    /// it cannot see `alive` directly).
+    pub fn active_workers(&self) -> Vec<usize> {
+        (0..self.workers.len()).filter(|&w| !self.workers[w].retired).collect()
+    }
+
+    /// Whether `worker` is alive and not retired.
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.workers.get(worker).map(|w| w.alive && !w.retired).unwrap_or(false)
+    }
+
+    /// Cluster event counters.
+    pub fn stats(&self) -> ClusterStats {
+        self.stats
+    }
+
+    /// Transport delivery counters (frames/bytes; dup/drop/delay).
+    pub fn transport_stats(&self) -> TransportStats {
+        self.transport.stats()
+    }
+
+    /// Current wave number (0 before the first [`Cluster::begin_wave`]).
+    pub fn wave(&self) -> u64 {
+        self.wave
+    }
+
+    /// Shards re-placed since the last call; the session layer uses
+    /// this to rebuild the affected reuse-cache lanes cold.
+    pub fn take_replacements(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.replacements)
+    }
+
+    fn seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    fn send_control(&mut self, to: Endpoint, msg: Message) -> Result<()> {
+        let frame = Frame { seq: self.seq(), from: COORDINATOR, msg };
+        self.transport.send(to, frame)
+    }
+
+    /// Start a wave: bump the counter, apply the wave-indexed kill
+    /// schedule, then broadcast `Epoch` to every non-retired worker.
+    pub fn begin_wave(&mut self) -> Result<u64> {
+        self.wave += 1;
+        self.stats.waves += 1;
+        let kills: Vec<usize> = self
+            .spec
+            .kill_at_wave
+            .iter()
+            .filter(|&&(n, _)| n == self.wave)
+            .map(|&(_, w)| w)
+            .collect();
+        for w in kills {
+            self.kill_worker(w);
+        }
+        for w in self.active_workers() {
+            self.send_control(Endpoint::Worker(w as u32), Message::Epoch { epoch: self.wave })?;
+        }
+        Ok(self.wave)
+    }
+
+    /// Simulate a worker process dying: it stops polling, computing and
+    /// heartbeating. The coordinator only learns of this via silence.
+    pub fn kill_worker(&mut self, worker: usize) {
+        if let Some(w) = self.workers.get_mut(worker) {
+            w.alive = false;
+        }
+    }
+
+    /// Mark a worker as draining: it keeps serving its current shards
+    /// but is skipped when orphans need a new home.
+    pub fn drain_worker(&mut self, worker: usize) -> Result<()> {
+        if let Some(w) = self.workers.get_mut(worker) {
+            w.draining = true;
+        }
+        self.send_control(Endpoint::Worker(worker as u32), Message::Drain { worker: worker as u32 })
+    }
+
+    /// Retire a worker and re-place its shards onto the live worker
+    /// with the fewest shards (ties → lowest id). Returns the orphaned
+    /// shards (now re-placed). Refuses to retire the last non-retired
+    /// worker — there would be nowhere to re-place.
+    pub fn retire_worker(&mut self, worker: usize) -> Result<Vec<usize>> {
+        if worker >= self.workers.len() {
+            return Err(Error::config(format!("cluster: unknown worker {worker}")));
+        }
+        if self.workers[worker].retired {
+            return Ok(Vec::new());
+        }
+        if self.active_workers().len() <= 1 {
+            return Err(Error::Runtime(format!(
+                "cluster: cannot retire worker {worker}: it is the last one standing"
+            )));
+        }
+        self.workers[worker].retired = true;
+        self.workers[worker].alive = false;
+        self.stats.retired_workers += 1;
+        self.send_control(
+            Endpoint::Worker(worker as u32),
+            Message::Retire { worker: worker as u32 },
+        )?;
+
+        let orphans: Vec<usize> =
+            (0..self.placement.len()).filter(|&s| self.placement[s] == worker).collect();
+        for &s in &orphans {
+            let target = self.replacement_target()?;
+            self.placement[s] = target;
+            self.replacements.push(s);
+            self.stats.replaced_shards += 1;
+            self.send_control(
+                Endpoint::Worker(target as u32),
+                Message::Place { shard: s as u32, worker: target as u32 },
+            )?;
+        }
+        Ok(orphans)
+    }
+
+    /// Least-loaded non-retired, non-draining worker (ties → lowest
+    /// id); falls back to draining workers rather than failing.
+    fn replacement_target(&self) -> Result<usize> {
+        let candidates: Vec<usize> = {
+            let fresh: Vec<usize> = self
+                .active_workers()
+                .into_iter()
+                .filter(|&w| !self.workers[w].draining)
+                .collect();
+            if fresh.is_empty() { self.active_workers() } else { fresh }
+        };
+        candidates
+            .into_iter()
+            .map(|w| (self.placement.iter().filter(|&&o| o == w).count(), w))
+            .min()
+            .map(|(_, w)| w)
+            .ok_or_else(|| Error::Runtime("cluster: no live worker to re-place onto".into()))
+    }
+
+    /// Run `iters` idle protocol iterations: heartbeats flow, the
+    /// failure detector runs, virtual time advances — but no stage
+    /// requests are outstanding. Returns workers retired while idle.
+    pub fn run_idle(&mut self, iters: usize) -> Result<Vec<usize>> {
+        let mut retired = Vec::new();
+        for _ in 0..iters {
+            self.pump_heartbeats()?;
+            self.coordinator_drain_control();
+            retired.extend(self.detect_failures()?);
+            self.transport.advance(self.spec.retry_interval);
+        }
+        Ok(retired)
+    }
+
+    /// Worker-side heartbeat emission (alive workers only; subject to
+    /// transport faults like any other frame).
+    fn pump_heartbeats(&mut self) -> Result<()> {
+        let now = self.transport.now();
+        let interval = self.spec.heartbeat_interval.as_nanos() as Nanos;
+        for w in 0..self.workers.len() {
+            if !self.workers[w].alive || self.workers[w].retired {
+                continue;
+            }
+            let due = match self.workers[w].last_heartbeat {
+                None => true,
+                Some(t) => now.saturating_sub(t) >= interval,
+            };
+            if due {
+                self.workers[w].last_heartbeat = Some(now);
+                let frame = Frame {
+                    seq: self.seq(),
+                    from: w as u32,
+                    msg: Message::Heartbeat { worker: w as u32 },
+                };
+                self.transport.send(Endpoint::Coordinator, frame)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the coordinator inbox outside a stage round: only control
+    /// frames (heartbeats) are expected; anything else is stale data
+    /// from a finished round and is deduped then ignored.
+    fn coordinator_drain_control(&mut self) {
+        let now = self.transport.now();
+        for frame in self.transport.poll(Endpoint::Coordinator) {
+            if !self.coord_seen.insert((frame.from, frame.seq)) {
+                continue;
+            }
+            if let Some(ws) = self.workers.get_mut(frame.from as usize) {
+                ws.last_seen = now;
+            }
+            if matches!(frame.msg, Message::Heartbeat { .. }) {
+                self.stats.heartbeats += 1;
+            }
+        }
+    }
+
+    /// Retire every non-retired worker silent past the timeout (except
+    /// the last one standing). Returns the workers retired.
+    fn detect_failures(&mut self) -> Result<Vec<usize>> {
+        let now = self.transport.now();
+        let timeout = self.spec.heartbeat_timeout.as_nanos() as Nanos;
+        let mut retired = Vec::new();
+        for w in 0..self.workers.len() {
+            if self.workers[w].retired {
+                continue;
+            }
+            if now.saturating_sub(self.workers[w].last_seen) > timeout {
+                if self.active_workers().len() <= 1 {
+                    continue; // nowhere to re-place; keep waiting
+                }
+                self.retire_worker(w)?;
+                retired.push(w);
+            }
+        }
+        Ok(retired)
+    }
+
+    fn apply_send_kills(&mut self) {
+        let sent = self.transport.stats().sent;
+        let due: Vec<usize> = self
+            .spec
+            .kill_after_sends
+            .iter()
+            .filter(|&&(n, w)| sent >= n && self.workers[w].alive && !self.workers[w].retired)
+            .map(|&(_, w)| w)
+            .collect();
+        for w in due {
+            self.kill_worker(w);
+        }
+    }
+
+    /// Run one stop-and-wait stage round over all shards.
+    ///
+    /// * `request(s)` yields the request messages for shard `s` (each
+    ///   must carry `shard == s`); an empty request skips the shard.
+    /// * `respond(s, msgs)` is the *worker-side compute*: invoked once
+    ///   per placement attempt when the full request has arrived, with
+    ///   the request messages in semantic-key order. Re-placement
+    ///   replays the wave by invoking it again on the new owner, so it
+    ///   must be deterministic and re-runnable.
+    /// * `expected(s)` is how many response messages (distinct semantic
+    ///   keys) the coordinator must collect for shard `s`.
+    ///
+    /// Returns each shard's responses in semantic-key order. The loop
+    /// retransmits stale requests with unchanged seqs, dedups receipts
+    /// by `(sender, seq)`, re-sends cached responses when a duplicate
+    /// request signals a lost reply, retires silent workers and replays
+    /// their shards — all in virtual time, bounded by
+    /// [`ClusterSpec::max_rounds`].
+    pub fn stage_round(
+        &mut self,
+        num_shards: usize,
+        request: &mut dyn FnMut(usize) -> Result<Vec<Message>>,
+        respond: &mut dyn FnMut(usize, &[Message]) -> Result<Vec<Message>>,
+        expected: &dyn Fn(usize) -> usize,
+    ) -> Result<Vec<Vec<Message>>> {
+        if num_shards != self.placement.len() {
+            return Err(Error::shape(format!(
+                "cluster: stage round over {num_shards} shards but {} placed",
+                self.placement.len()
+            )));
+        }
+        // Coordinator-side per-shard state.
+        let mut req_frames: Vec<Vec<Frame>> = Vec::with_capacity(num_shards);
+        for s in 0..num_shards {
+            let msgs = request(s)?;
+            let mut frames = Vec::with_capacity(msgs.len());
+            for msg in msgs {
+                if msg.shard() != Some(s as u32) {
+                    return Err(Error::config(format!(
+                        "cluster: request message for shard {s} carries shard {:?}",
+                        msg.shard()
+                    )));
+                }
+                frames.push(Frame { seq: self.seq(), from: COORDINATOR, msg });
+            }
+            req_frames.push(frames);
+        }
+        let want: Vec<usize> = (0..num_shards).map(|s| expected(s)).collect();
+        let mut got: Vec<BTreeMap<(u8, u64), Message>> = vec![BTreeMap::new(); num_shards];
+        let mut last_tx: Vec<Option<Nanos>> = vec![None; num_shards];
+        // Worker-side per-shard state (reset when a shard is re-placed).
+        let mut inbox: Vec<BTreeMap<(u8, u64), Message>> = vec![BTreeMap::new(); num_shards];
+        let mut resp_frames: Vec<Option<Vec<Frame>>> = vec![None; num_shards];
+
+        let retry = self.spec.retry_interval.as_nanos() as Nanos;
+        let complete = |got: &[BTreeMap<(u8, u64), Message>], want: &[usize], s: usize| {
+            req_frames[s].is_empty() || got[s].len() >= want[s]
+        };
+
+        for _round in 0..self.spec.max_rounds {
+            self.apply_send_kills();
+            let now = self.transport.now();
+
+            // Coordinator TX: first send or retransmit stale requests.
+            for s in 0..num_shards {
+                if complete(&got, &want, s) {
+                    continue;
+                }
+                let due = match last_tx[s] {
+                    None => true,
+                    Some(t) => now.saturating_sub(t) >= retry,
+                };
+                if due {
+                    if last_tx[s].is_some() {
+                        self.stats.retransmits += 1;
+                    }
+                    last_tx[s] = Some(now);
+                    let owner = self.placement[s] as u32;
+                    for frame in req_frames[s].clone() {
+                        self.transport.send(Endpoint::Worker(owner), frame)?;
+                    }
+                }
+            }
+
+            self.pump_heartbeats()?;
+
+            // Worker RX + compute.
+            for w in 0..self.workers.len() {
+                if !self.workers[w].alive || self.workers[w].retired {
+                    continue;
+                }
+                for frame in self.transport.poll(Endpoint::Worker(w as u32)) {
+                    let fresh = self.worker_seen[w].insert((frame.from, frame.seq));
+                    let Some(shard) = frame.msg.shard() else {
+                        continue; // control/broadcast frame: deduped, no inbox
+                    };
+                    let s = shard as usize;
+                    if s >= num_shards {
+                        continue;
+                    }
+                    if fresh {
+                        inbox[s].insert(frame.msg.semantic_key(), frame.msg);
+                    } else if self.placement[s] == w {
+                        // Duplicate request: our reply was likely lost —
+                        // re-send the cached response frames verbatim.
+                        if let Some(cached) = &resp_frames[s] {
+                            for f in cached.clone() {
+                                self.transport.send(Endpoint::Coordinator, f)?;
+                            }
+                        }
+                    }
+                }
+                // Compute any owned shard whose request is complete.
+                for s in 0..num_shards {
+                    if self.placement[s] != w
+                        || resp_frames[s].is_some()
+                        || req_frames[s].is_empty()
+                        || inbox[s].len() < req_frames[s].len()
+                        || complete(&got, &want, s)
+                    {
+                        continue;
+                    }
+                    let msgs: Vec<Message> = inbox[s].values().cloned().collect();
+                    let replies = respond(s, &msgs)?;
+                    let mut frames = Vec::with_capacity(replies.len());
+                    for msg in replies {
+                        frames.push(Frame { seq: self.seq(), from: w as u32, msg });
+                    }
+                    for f in &frames {
+                        self.transport.send(Endpoint::Coordinator, f.clone())?;
+                    }
+                    resp_frames[s] = Some(frames);
+                }
+            }
+
+            // Coordinator RX: collect responses by semantic key.
+            let now = self.transport.now();
+            for frame in self.transport.poll(Endpoint::Coordinator) {
+                if !self.coord_seen.insert((frame.from, frame.seq)) {
+                    continue;
+                }
+                if let Some(ws) = self.workers.get_mut(frame.from as usize) {
+                    ws.last_seen = now;
+                }
+                match &frame.msg {
+                    Message::Heartbeat { .. } => self.stats.heartbeats += 1,
+                    _ => {
+                        if let Some(shard) = frame.msg.shard() {
+                            let s = shard as usize;
+                            if s < num_shards {
+                                got[s].insert(frame.msg.semantic_key(), frame.msg);
+                            }
+                        }
+                    }
+                }
+            }
+
+            if (0..num_shards).all(|s| complete(&got, &want, s)) {
+                return Ok(got.into_iter().map(|m| m.into_values().collect()).collect());
+            }
+
+            // Failure detection: silent workers retire, their shards
+            // re-place, and the in-flight wave replays on the new owner:
+            // protocol state for a moved shard resets so the new owner
+            // starts cold and the coordinator resends immediately.
+            let before = self.placement.clone();
+            if !self.detect_failures()?.is_empty() {
+                for s in 0..num_shards {
+                    if before[s] != self.placement[s] && !complete(&got, &want, s) {
+                        inbox[s].clear();
+                        resp_frames[s] = None;
+                        last_tx[s] = None;
+                    }
+                }
+            }
+
+            self.transport.advance(self.spec.retry_interval);
+        }
+        Err(Error::Runtime(format!(
+            "cluster: stage round stalled after {} iterations (wave {}); live workers: {:?}",
+            self.spec.max_rounds,
+            self.wave,
+            self.live_workers()
+        )))
+    }
+}
+
+impl std::fmt::Debug for Cluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Cluster")
+            .field("workers", &self.spec.workers)
+            .field("placement", &self.placement)
+            .field("wave", &self.wave)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_cluster(workers: usize, shards: usize, fault: FaultSpec) -> Cluster {
+        let mut spec = ClusterSpec::new(workers);
+        spec.fault = fault.clone();
+        Cluster::new(spec, shards, Box::new(SimTransport::faulty(fault))).unwrap()
+    }
+
+    /// An echo stage: request names the shard's ids, the worker doubles
+    /// them into a response block.
+    fn echo_round(cluster: &mut Cluster, shards: usize) -> Result<Vec<Vec<Message>>> {
+        cluster.stage_round(
+            shards,
+            &mut |s| {
+                Ok(vec![Message::BatchRows {
+                    shard: s as u32,
+                    block: RowBlock::ids_only(vec![s as u32, s as u32 + 10]),
+                }])
+            },
+            &mut |s, msgs| {
+                let Message::BatchRows { block, .. } = &msgs[0] else { panic!("request shape") };
+                let data: Vec<f32> = block.ids.iter().map(|&i| i as f32 * 2.0).collect();
+                Ok(vec![Message::BatchRows {
+                    shard: s as u32,
+                    block: RowBlock { ids: block.ids.clone(), cols: 1, data },
+                }])
+            },
+            &|_| 1,
+        )
+    }
+
+    #[test]
+    fn round_robin_initial_placement() {
+        let c = sim_cluster(2, 5, FaultSpec::none());
+        assert_eq!(c.placement(), &[0, 1, 0, 1, 0]);
+        assert_eq!(c.live_workers(), vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(Cluster::new(ClusterSpec::new(0), 1, Box::new(SimTransport::new())).is_err());
+    }
+
+    #[test]
+    fn echo_round_clean_transport() {
+        let mut c = sim_cluster(2, 4, FaultSpec::none());
+        c.begin_wave().unwrap();
+        let out = echo_round(&mut c, 4).unwrap();
+        for (s, msgs) in out.iter().enumerate() {
+            assert_eq!(msgs.len(), 1);
+            let Message::BatchRows { block, .. } = &msgs[0] else { panic!() };
+            assert_eq!(block.data, vec![s as f32 * 2.0, (s + 10) as f32 * 2.0]);
+        }
+        assert_eq!(c.stats().retransmits, 0, "clean wire needs no retries");
+    }
+
+    #[test]
+    fn echo_round_survives_chaos_and_reproduces() {
+        let run = |seed: u64| {
+            let mut c = sim_cluster(2, 4, FaultSpec::chaos(seed));
+            c.begin_wave().unwrap();
+            let out = echo_round(&mut c, 4).unwrap();
+            (out, c.stats(), c.transport_stats())
+        };
+        let (o1, s1, t1) = run(7);
+        let (o2, s2, t2) = run(7);
+        assert_eq!(o1, o2, "same seed → byte-identical responses");
+        assert_eq!(s1, s2, "same seed → identical cluster events");
+        assert_eq!(t1, t2, "same seed → identical wire history");
+        assert!(t1.dropped > 0 || t1.duplicated > 0 || t1.delayed > 0, "chaos was live: {t1:?}");
+    }
+
+    #[test]
+    fn empty_requests_skip_shards() {
+        let mut c = sim_cluster(2, 3, FaultSpec::none());
+        let out = c
+            .stage_round(
+                3,
+                &mut |s| {
+                    if s == 1 {
+                        Ok(vec![Message::BatchRows {
+                            shard: 1,
+                            block: RowBlock::ids_only(vec![9]),
+                        }])
+                    } else {
+                        Ok(Vec::new())
+                    }
+                },
+                &mut |s, _| {
+                    assert_eq!(s, 1, "only the requested shard computes");
+                    Ok(vec![Message::BatchRows { shard: 1, block: RowBlock::empty() }])
+                },
+                &|s| usize::from(s == 1),
+            )
+            .unwrap();
+        assert!(out[0].is_empty() && out[2].is_empty());
+        assert_eq!(out[1].len(), 1);
+    }
+
+    #[test]
+    fn mid_round_kill_replaces_and_replays() {
+        // Kill worker 1 after the very first frames go out: its shards
+        // re-place onto worker 0 and the round still completes.
+        let mut spec = ClusterSpec::new(2);
+        spec.kill_after_sends.push((3, 1));
+        let mut c = Cluster::new(spec, 4, Box::new(SimTransport::new())).unwrap();
+        c.begin_wave().unwrap();
+        let mut computed: Vec<usize> = Vec::new();
+        let out = c
+            .stage_round(
+                4,
+                &mut |s| {
+                    Ok(vec![Message::BatchRows {
+                        shard: s as u32,
+                        block: RowBlock::ids_only(vec![s as u32]),
+                    }])
+                },
+                &mut |s, _| {
+                    computed.push(s);
+                    Ok(vec![Message::BatchRows { shard: s as u32, block: RowBlock::empty() }])
+                },
+                &|_| 1,
+            )
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(c.stats().retired_workers, 1);
+        assert_eq!(c.stats().replaced_shards, 2, "shards 1 and 3 re-placed");
+        assert_eq!(c.placement(), &[0, 0, 0, 0], "all shards on the survivor");
+        let moved = c.take_replacements();
+        assert_eq!(moved, vec![1, 3]);
+        assert!(c.take_replacements().is_empty(), "drained");
+    }
+
+    #[test]
+    fn replacement_prefers_least_loaded_and_skips_draining() {
+        let mut c = sim_cluster(3, 6, FaultSpec::none());
+        assert_eq!(c.placement(), &[0, 1, 2, 0, 1, 2]);
+        c.drain_worker(0).unwrap();
+        c.kill_worker(1);
+        let orphans = c.retire_worker(1).unwrap();
+        assert_eq!(orphans, vec![1, 4]);
+        // worker 0 is draining → both orphans land on worker 2
+        assert_eq!(c.placement(), &[0, 2, 2, 0, 2, 2]);
+    }
+
+    #[test]
+    fn last_worker_cannot_retire() {
+        let mut c = sim_cluster(2, 2, FaultSpec::none());
+        c.retire_worker(0).unwrap();
+        let err = c.retire_worker(1).unwrap_err();
+        assert!(err.to_string().contains("last one standing"), "{err}");
+    }
+
+    #[test]
+    fn idle_silence_retires_dead_worker() {
+        let mut c = sim_cluster(2, 2, FaultSpec::none());
+        c.kill_worker(1);
+        // timeout 200ms / 50ms per idle iteration → retired within 10
+        let retired = c.run_idle(10).unwrap();
+        assert_eq!(retired, vec![1]);
+        assert_eq!(c.placement(), &[0, 0]);
+        assert!(c.stats().heartbeats > 0, "survivor kept heartbeating");
+    }
+
+    #[test]
+    fn all_workers_dead_stalls_with_typed_error() {
+        let mut spec = ClusterSpec::new(1);
+        spec.max_rounds = 8;
+        let mut c = Cluster::new(spec, 1, Box::new(SimTransport::new())).unwrap();
+        c.kill_worker(0);
+        let err = echo_round(&mut c, 1).unwrap_err();
+        assert!(err.to_string().contains("stalled"), "{err}");
+    }
+
+    #[test]
+    fn wave_indexed_kills_fire_on_begin_wave() {
+        let spec = ClusterSpec::new(2).kill_at_wave(2, 0);
+        let mut c = Cluster::new(spec, 2, Box::new(SimTransport::new())).unwrap();
+        c.begin_wave().unwrap();
+        assert!(c.is_live(0), "wave 1: not yet");
+        c.begin_wave().unwrap();
+        assert!(!c.is_live(0), "wave 2: killed");
+        // the next round detects the silence and re-places shard 0
+        let out = echo_round(&mut c, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(c.placement(), &[1, 1]);
+    }
+}

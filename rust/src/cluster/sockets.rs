@@ -1,0 +1,260 @@
+//! Real socket-pair transport (feature `cluster-sockets`).
+//!
+//! One `UnixStream::pair()` per worker: the coordinator holds one end,
+//! the worker the other, and every frame genuinely traverses the kernel
+//! as the length-prefixed byte stream from [`super::wire`]. Compute
+//! still runs in-process (the protocol driver is the same
+//! single-threaded loop as the simulator), so this transport isolates
+//! exactly one variable versus [`super::SimTransport`]: the wire.
+//!
+//! Writes are staged through a userspace buffer and flushed
+//! opportunistically on every `send`/`poll`, so a full kernel socket
+//! buffer can never deadlock the single-threaded driver. Time is a
+//! logical counter bumped by `advance` — no wall-clock dependence, so
+//! heartbeat/timeout behavior matches the simulator exactly.
+
+use crate::serving::clock::Nanos;
+use crate::{Error, Result};
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::transport::{Endpoint, Transport, TransportStats};
+use super::wire::{decode_frame, encode_frame, Frame, MAX_FRAME_LEN};
+
+struct Io {
+    stream: UnixStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+}
+
+impl Io {
+    fn new(stream: UnixStream) -> Result<Io> {
+        stream.set_nonblocking(true)?;
+        Ok(Io { stream, rbuf: Vec::new(), wbuf: Vec::new() })
+    }
+
+    /// Queue encoded bytes and push as much as the kernel will take.
+    fn send(&mut self, bytes: &[u8]) -> Result<()> {
+        self.wbuf.extend_from_slice(bytes);
+        self.flush()
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        while !self.wbuf.is_empty() {
+            match self.stream.write(&self.wbuf) {
+                Ok(0) => return Err(Error::config("socket transport: peer closed")),
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the kernel receive buffer, then peel complete frames off
+    /// the reassembly buffer.
+    fn recv(&mut self) -> Result<Vec<Frame>> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => break,
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let mut frames = Vec::new();
+        loop {
+            if self.rbuf.len() < 4 {
+                break;
+            }
+            let len = u32::from_le_bytes(self.rbuf[..4].try_into().expect("4 bytes")) as usize;
+            if len > MAX_FRAME_LEN {
+                return Err(Error::config(format!(
+                    "socket transport: frame length {len} exceeds cap"
+                )));
+            }
+            if self.rbuf.len() < 4 + len {
+                break;
+            }
+            frames.push(decode_frame(&self.rbuf[4..4 + len])?);
+            self.rbuf.drain(..4 + len);
+        }
+        Ok(frames)
+    }
+}
+
+/// Socket-pair fabric: the "real wire" implementation behind
+/// `cli run --cluster N` when built with `--features cluster-sockets`.
+pub struct SocketTransport {
+    /// Coordinator-side stream per worker (index = worker id).
+    coord_side: Vec<Mutex<Io>>,
+    /// Worker-side stream per worker.
+    worker_side: Vec<Mutex<Io>>,
+    now: Mutex<Nanos>,
+    stats: Mutex<TransportStats>,
+}
+
+impl SocketTransport {
+    /// Open one socket pair per worker.
+    pub fn new(workers: usize) -> Result<SocketTransport> {
+        let mut coord_side = Vec::with_capacity(workers);
+        let mut worker_side = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (a, b) = UnixStream::pair()?;
+            coord_side.push(Mutex::new(Io::new(a)?));
+            worker_side.push(Mutex::new(Io::new(b)?));
+        }
+        Ok(SocketTransport {
+            coord_side,
+            worker_side,
+            now: Mutex::new(0),
+            stats: Mutex::new(TransportStats::default()),
+        })
+    }
+
+    fn io_for(&self, to: Endpoint, from: u32) -> Result<&Mutex<Io>> {
+        match to {
+            // Coordinator inbox: write on the sender's worker-side end.
+            Endpoint::Coordinator => self
+                .worker_side
+                .get(from as usize)
+                .ok_or_else(|| {
+                    Error::config(format!("socket transport: unknown sender worker {from}"))
+                }),
+            // Worker inbox: write on the coordinator-side end.
+            Endpoint::Worker(w) => self
+                .coord_side
+                .get(w as usize)
+                .ok_or_else(|| Error::config(format!("socket transport: unknown worker {w}"))),
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&self, to: Endpoint, frame: Frame) -> Result<()> {
+        let bytes = encode_frame(&frame);
+        {
+            let mut stats = self.stats.lock().unwrap_or_else(|e| e.into_inner());
+            stats.sent += 1;
+            stats.delivered += 1;
+            stats.bytes += bytes.len() as u64;
+        }
+        self.io_for(to, frame.from)?
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .send(&bytes)
+    }
+
+    fn poll(&self, at: Endpoint) -> Vec<Frame> {
+        // Opportunistically drain every pending userspace write first so
+        // a full kernel buffer always makes progress.
+        for io in self.coord_side.iter().chain(self.worker_side.iter()) {
+            let _ = io.lock().unwrap_or_else(|e| e.into_inner()).flush();
+        }
+        let mut frames = Vec::new();
+        match at {
+            Endpoint::Coordinator => {
+                for io in &self.coord_side {
+                    if let Ok(got) = io.lock().unwrap_or_else(|e| e.into_inner()).recv() {
+                        frames.extend(got);
+                    }
+                }
+            }
+            Endpoint::Worker(w) => {
+                if let Some(io) = self.worker_side.get(w as usize) {
+                    if let Ok(got) = io.lock().unwrap_or_else(|e| e.into_inner()).recv() {
+                        frames.extend(got);
+                    }
+                }
+            }
+        }
+        frames
+    }
+
+    fn now(&self) -> Nanos {
+        *self.now.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn advance(&self, by: Duration) {
+        *self.now.lock().unwrap_or_else(|e| e.into_inner()) += by.as_nanos() as Nanos;
+    }
+
+    fn stats(&self) -> TransportStats {
+        *self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire::{Message, RowBlock};
+    use super::*;
+
+    #[test]
+    fn frames_cross_the_kernel_both_ways() {
+        let t = SocketTransport::new(2).unwrap();
+        let down = Frame {
+            seq: 1,
+            from: super::super::wire::COORDINATOR,
+            msg: Message::Epoch { epoch: 7 },
+        };
+        let up = Frame {
+            seq: 2,
+            from: 1,
+            msg: Message::FpRows {
+                shard: 1,
+                ty: 0,
+                block: RowBlock { ids: vec![4, 8], cols: 1, data: vec![0.5, -1.5] },
+            },
+        };
+        t.send(Endpoint::Worker(1), down.clone()).unwrap();
+        t.send(Endpoint::Coordinator, up.clone()).unwrap();
+        assert!(t.poll(Endpoint::Worker(0)).is_empty(), "per-worker isolation");
+        assert_eq!(t.poll(Endpoint::Worker(1)), vec![down]);
+        assert_eq!(t.poll(Endpoint::Coordinator), vec![up]);
+        assert_eq!(t.stats().sent, 2);
+        assert!(t.stats().bytes > 0);
+    }
+
+    #[test]
+    fn large_frames_survive_partial_writes() {
+        // Bigger than the kernel socket buffer: forces the userspace
+        // write buffer + reassembly path.
+        let t = SocketTransport::new(1).unwrap();
+        let rows = 3000usize;
+        let cols = 64u32;
+        let block = RowBlock {
+            ids: (0..rows as u32).collect(),
+            cols,
+            data: (0..rows * cols as usize).map(|i| i as f32).collect(),
+        };
+        let frame = Frame {
+            seq: 9,
+            from: super::super::wire::COORDINATOR,
+            msg: Message::Halo { shard: 0, ty: 0, block },
+        };
+        t.send(Endpoint::Worker(0), frame.clone()).unwrap();
+        // Repeated polls flush pending writes and reassemble.
+        let mut got = Vec::new();
+        for _ in 0..64 {
+            got.extend(t.poll(Endpoint::Worker(0)));
+            if !got.is_empty() {
+                break;
+            }
+        }
+        assert_eq!(got, vec![frame]);
+    }
+
+    #[test]
+    fn logical_clock_only_moves_on_advance() {
+        let t = SocketTransport::new(1).unwrap();
+        assert_eq!(t.now(), 0);
+        t.advance(Duration::from_millis(5));
+        assert_eq!(t.now(), 5_000_000);
+    }
+}

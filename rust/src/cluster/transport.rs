@@ -1,0 +1,322 @@
+//! Message transports for the cluster: the object-safe [`Transport`]
+//! trait plus the deterministic in-process [`SimTransport`].
+//!
+//! `SimTransport` is the acceptance story of the whole cluster: it is
+//! driven by a [`crate::testutil::VirtualClock`] (time only moves when
+//! the protocol loop calls [`Transport::advance`]), delivers frames in
+//! `(due, send-order)` order, and injects faults — drop, duplicate,
+//! delay — from a seeded PCG schedule. Because the protocol driver is
+//! single-threaded, the fault RNG is consulted in a deterministic
+//! order, so *every* cluster behavior (including which heartbeat gets
+//! dropped and which worker gets spuriously retired) reproduces exactly
+//! from `FaultSpec::seed`.
+
+use crate::serving::clock::{Clock, Nanos};
+use crate::testutil::VirtualClock;
+use crate::util::Pcg32;
+use crate::Result;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::wire::Frame;
+
+/// A message destination: the coordinator or one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Endpoint {
+    /// The coordinator's inbox.
+    Coordinator,
+    /// Worker `w`'s inbox.
+    Worker(u32),
+}
+
+/// Seeded fault-injection schedule for [`SimTransport`]. Each `send`
+/// draws from a PCG32 stream in order: drop? duplicate? delay? — so a
+/// given seed fixes the fate of every frame in a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// RNG seed for the fault schedule.
+    pub seed: u64,
+    /// Probability a frame is silently dropped.
+    pub drop: f64,
+    /// Probability a frame is delivered twice.
+    pub dup: f64,
+    /// Probability a frame's delivery is delayed by `delay_ns`.
+    pub delay: f64,
+    /// Virtual delay applied to delayed frames, in nanoseconds.
+    pub delay_ns: u64,
+}
+
+impl FaultSpec {
+    /// No faults: every frame delivered exactly once, immediately.
+    pub fn none() -> FaultSpec {
+        FaultSpec { seed: 0, drop: 0.0, dup: 0.0, delay: 0.0, delay_ns: 0 }
+    }
+
+    /// A lossy-but-livable schedule for tests: some drops, dups and
+    /// delays, all reproducible from `seed`.
+    pub fn chaos(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            drop: 0.15,
+            dup: 0.15,
+            delay: 0.25,
+            delay_ns: Duration::from_millis(120).as_nanos() as u64,
+        }
+    }
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::none()
+    }
+}
+
+/// Delivery counters a transport maintains; the distributed executor
+/// turns the per-stage deltas into `WireTransfer` profile kernels.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frames handed to `send` (before faults).
+    pub sent: u64,
+    /// Frames actually enqueued/delivered (dup counts twice).
+    pub delivered: u64,
+    /// Frames dropped by fault injection.
+    pub dropped: u64,
+    /// Extra deliveries created by duplication.
+    pub duplicated: u64,
+    /// Frames whose delivery was delayed.
+    pub delayed: u64,
+    /// Payload bytes handed to `send` (encoded frame length).
+    pub bytes: u64,
+}
+
+/// An object-safe message fabric between the coordinator and workers.
+///
+/// The contract the protocol loop relies on:
+/// * `send` is fire-and-forget; reliability is the caller's job
+///   (retransmit with the *same* `seq`, dedup on receive).
+/// * `poll` drains every frame due at `at` by the transport's own
+///   clock, in a deterministic order.
+/// * `now`/`advance` expose that clock: virtual for [`SimTransport`]
+///   (nothing moves unless the driver advances), logical-but-real-IO
+///   for the socket transport.
+pub trait Transport: Send {
+    /// Enqueue one frame for `to`. Faults (drop/dup/delay) are applied
+    /// here, at send time, from the seeded schedule.
+    fn send(&self, to: Endpoint, frame: Frame) -> Result<()>;
+    /// Drain all frames currently deliverable at `at`.
+    fn poll(&self, at: Endpoint) -> Vec<Frame>;
+    /// Transport-clock time in nanoseconds.
+    fn now(&self) -> Nanos;
+    /// Advance the transport clock (virtual time for the simulator).
+    fn advance(&self, by: Duration);
+    /// Snapshot of delivery counters.
+    fn stats(&self) -> TransportStats;
+}
+
+struct SimInner {
+    rng: Pcg32,
+    /// Per-endpoint mailbox: (due, send-order) → frame. BTreeMap keys
+    /// give the deterministic delivery order `poll` promises.
+    queues: BTreeMap<Endpoint, BTreeMap<(Nanos, u64), Frame>>,
+    order: u64,
+    stats: TransportStats,
+}
+
+/// In-process deterministic transport over a [`VirtualClock`].
+pub struct SimTransport {
+    clock: Arc<VirtualClock>,
+    fault: FaultSpec,
+    inner: Mutex<SimInner>,
+}
+
+impl SimTransport {
+    /// A fault-free transport with its own private virtual clock.
+    pub fn new() -> SimTransport {
+        SimTransport::with_clock(Arc::new(VirtualClock::new()), FaultSpec::none())
+    }
+
+    /// A faulty transport with its own private virtual clock.
+    pub fn faulty(fault: FaultSpec) -> SimTransport {
+        SimTransport::with_clock(Arc::new(VirtualClock::new()), fault)
+    }
+
+    /// Build over a shared clock — lets a test drive the serving
+    /// runtime and the cluster fabric from one `VirtualClock`.
+    pub fn with_clock(clock: Arc<VirtualClock>, fault: FaultSpec) -> SimTransport {
+        SimTransport {
+            clock,
+            inner: Mutex::new(SimInner {
+                rng: Pcg32::new(fault.seed, 0xC1_05_7E),
+                queues: BTreeMap::new(),
+                order: 0,
+                stats: TransportStats::default(),
+            }),
+            fault,
+        }
+    }
+
+    /// The clock this transport is driven by.
+    pub fn clock(&self) -> Arc<VirtualClock> {
+        Arc::clone(&self.clock)
+    }
+}
+
+impl Default for SimTransport {
+    fn default() -> Self {
+        SimTransport::new()
+    }
+}
+
+impl Transport for SimTransport {
+    fn send(&self, to: Endpoint, frame: Frame) -> Result<()> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *inner;
+        inner.stats.sent += 1;
+        inner.stats.bytes += super::wire::encode_frame(&frame).len() as u64;
+        // One draw per fault class per send keeps the schedule stable:
+        // adding a dup never shifts whether the *next* frame drops.
+        let u_drop = inner.rng.gen_f64();
+        let u_dup = inner.rng.gen_f64();
+        let u_delay = inner.rng.gen_f64();
+        if u_drop < self.fault.drop {
+            inner.stats.dropped += 1;
+            return Ok(());
+        }
+        let due = if u_delay < self.fault.delay { now + self.fault.delay_ns } else { now };
+        if u_delay < self.fault.delay {
+            inner.stats.delayed += 1;
+        }
+        let copies = if u_dup < self.fault.dup {
+            inner.stats.duplicated += 1;
+            2
+        } else {
+            1
+        };
+        let queue = inner.queues.entry(to).or_default();
+        for _ in 0..copies {
+            let key = (due, inner.order);
+            inner.order += 1;
+            inner.stats.delivered += 1;
+            queue.insert(key, frame.clone());
+        }
+        Ok(())
+    }
+
+    fn poll(&self, at: Endpoint) -> Vec<Frame> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(queue) = inner.queues.get_mut(&at) else { return Vec::new() };
+        let pending = queue.split_off(&(now + 1, 0));
+        let due = std::mem::replace(queue, pending);
+        due.into_values().collect()
+    }
+
+    fn now(&self) -> Nanos {
+        self.clock.now()
+    }
+
+    fn advance(&self, by: Duration) {
+        self.clock.advance(by);
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire::Message;
+    use super::*;
+
+    fn frame(seq: u64) -> Frame {
+        Frame { seq, from: 0, msg: Message::Heartbeat { worker: 0 } }
+    }
+
+    #[test]
+    fn delivers_in_send_order() {
+        let t = SimTransport::new();
+        for seq in 0..5 {
+            t.send(Endpoint::Coordinator, frame(seq)).unwrap();
+        }
+        let got: Vec<u64> = t.poll(Endpoint::Coordinator).iter().map(|f| f.seq).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert!(t.poll(Endpoint::Coordinator).is_empty(), "poll drains");
+    }
+
+    #[test]
+    fn endpoints_are_isolated() {
+        let t = SimTransport::new();
+        t.send(Endpoint::Worker(0), frame(1)).unwrap();
+        t.send(Endpoint::Worker(1), frame(2)).unwrap();
+        assert_eq!(t.poll(Endpoint::Worker(0)).len(), 1);
+        assert_eq!(t.poll(Endpoint::Worker(1)).len(), 1);
+        assert!(t.poll(Endpoint::Coordinator).is_empty());
+    }
+
+    #[test]
+    fn delayed_frames_wait_for_virtual_time() {
+        let fault = FaultSpec { seed: 1, drop: 0.0, dup: 0.0, delay: 1.0, delay_ns: 1_000 };
+        let t = SimTransport::faulty(fault);
+        t.send(Endpoint::Coordinator, frame(9)).unwrap();
+        assert!(t.poll(Endpoint::Coordinator).is_empty(), "not due yet");
+        t.advance(Duration::from_nanos(999));
+        assert!(t.poll(Endpoint::Coordinator).is_empty(), "still early");
+        t.advance(Duration::from_nanos(1));
+        assert_eq!(t.poll(Endpoint::Coordinator).len(), 1, "due exactly at delay");
+        assert_eq!(t.stats().delayed, 1);
+    }
+
+    #[test]
+    fn drop_and_dup_counters() {
+        let all_drop = FaultSpec { seed: 2, drop: 1.0, dup: 0.0, delay: 0.0, delay_ns: 0 };
+        let t = SimTransport::faulty(all_drop);
+        t.send(Endpoint::Coordinator, frame(1)).unwrap();
+        assert!(t.poll(Endpoint::Coordinator).is_empty());
+        assert_eq!(t.stats().dropped, 1);
+
+        let all_dup = FaultSpec { seed: 2, drop: 0.0, dup: 1.0, delay: 0.0, delay_ns: 0 };
+        let t = SimTransport::faulty(all_dup);
+        t.send(Endpoint::Coordinator, frame(1)).unwrap();
+        let got = t.poll(Endpoint::Coordinator);
+        assert_eq!(got.len(), 2, "duplicated delivery");
+        assert_eq!(got[0], got[1], "same seq on both copies");
+        assert_eq!(t.stats().duplicated, 1);
+        assert_eq!(t.stats().delivered, 2);
+    }
+
+    #[test]
+    fn fault_schedule_reproduces_from_seed() {
+        let run = |seed: u64| -> (TransportStats, Vec<u64>) {
+            let t = SimTransport::faulty(FaultSpec::chaos(seed));
+            for seq in 0..200 {
+                t.send(Endpoint::Coordinator, frame(seq)).unwrap();
+            }
+            t.advance(Duration::from_secs(1));
+            let seqs = t.poll(Endpoint::Coordinator).iter().map(|f| f.seq).collect();
+            (t.stats(), seqs)
+        };
+        let (s1, q1) = run(42);
+        let (s2, q2) = run(42);
+        assert_eq!(s1, s2, "same seed → same fate for every frame");
+        assert_eq!(q1, q2, "same seed → same delivery order");
+        let (s3, _) = run(43);
+        assert_ne!(s1, s3, "different seed → different schedule");
+        assert!(
+            s1.dropped > 0 && s1.duplicated > 0 && s1.delayed > 0,
+            "chaos exercises all faults: {s1:?}"
+        );
+    }
+
+    #[test]
+    fn shared_clock_moves_the_transport() {
+        let clock = Arc::new(VirtualClock::new());
+        let t = SimTransport::with_clock(Arc::clone(&clock), FaultSpec::none());
+        assert_eq!(t.now(), 0);
+        clock.advance(Duration::from_millis(2));
+        assert_eq!(t.now(), 2_000_000, "external advance is visible");
+    }
+}

@@ -1,0 +1,498 @@
+//! Length-prefixed wire codec for the simulation cluster.
+//!
+//! Every frame that crosses a [`super::Transport`] is one
+//! `[u32 len][u64 seq][u32 from][u8 tag][payload]` record, little-endian
+//! throughout. `len` counts the bytes after the length word, `seq` is a
+//! coordinator-global sequence number used for receiver-side
+//! deduplication (retransmits and transport-duplicated frames carry the
+//! same `seq`), and `from` names the sender ([`COORDINATOR`] or a worker
+//! id). Row payloads ship `f32` values as raw little-endian bytes, so a
+//! tensor row survives the wire bit-identically — the property every
+//! cluster-vs-monolith test in `tests/integration_cluster.rs` pins.
+//!
+//! The codec is symmetric: [`encode_frame`]/[`decode_frame`] work on
+//! byte slices for the in-process [`super::SimTransport`], and
+//! [`write_frame`]/[`read_frame`] stream the same bytes over any
+//! `io::Write`/`io::Read` pair for the feature-gated socket transport.
+
+use crate::{Error, Result};
+
+/// Sender id used by the coordinator in frame headers.
+pub const COORDINATOR: u32 = u32::MAX;
+
+/// Upper bound on a decoded frame body; guards against allocating from
+/// a corrupt length word when reading off a real socket.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// A dense block of tensor rows keyed by global node ids: the payload
+/// of every data-plane message (halo pushes, shard-merge rows, served
+/// batch rows). `data` holds `ids.len() * cols` f32 values row-major;
+/// empty blocks (`ids` empty, `cols` 0) are first-class so a shard with
+/// no halo for some type still completes the protocol round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowBlock {
+    /// Global row ids, in the order `data` rows are laid out.
+    pub ids: Vec<u32>,
+    /// Row width in f32 values.
+    pub cols: u32,
+    /// Row-major values, `ids.len() * cols` long.
+    pub data: Vec<f32>,
+}
+
+impl RowBlock {
+    /// An empty block (zero rows, zero width).
+    pub fn empty() -> RowBlock {
+        RowBlock { ids: Vec::new(), cols: 0, data: Vec::new() }
+    }
+
+    /// Ids-only block (width 0): used for request payloads that name
+    /// rows without carrying values, e.g. a served batch's seed ids.
+    pub fn ids_only(ids: Vec<u32>) -> RowBlock {
+        RowBlock { ids, cols: 0, data: Vec::new() }
+    }
+
+    /// Internal consistency check: `data` length matches `ids × cols`.
+    pub fn validate(&self) -> Result<()> {
+        let want = self.ids.len() * self.cols as usize;
+        if self.data.len() != want {
+            return Err(Error::shape(format!(
+                "RowBlock: {} ids × {} cols wants {} values, has {}",
+                self.ids.len(),
+                self.cols,
+                want,
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Every message the cluster exchanges. Control messages (place,
+/// heartbeat, drain, retire) and broadcasts (epoch, weights) are
+/// coordinator-plane; the `RowBlock`-carrying variants are the data
+/// plane of one execution wave.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Control: shard `shard` is now owned by worker `worker`.
+    Place {
+        /// Shard index.
+        shard: u32,
+        /// Owning worker id.
+        worker: u32,
+    },
+    /// Control: liveness beacon from a worker.
+    Heartbeat {
+        /// Sending worker id.
+        worker: u32,
+    },
+    /// Control: worker should stop accepting new shards.
+    Drain {
+        /// Worker being drained.
+        worker: u32,
+    },
+    /// Control: worker is removed from the cluster.
+    Retire {
+        /// Retired worker id.
+        worker: u32,
+    },
+    /// Broadcast: an execution wave / epoch boundary.
+    Epoch {
+        /// Monotone epoch (wave) counter.
+        epoch: u64,
+    },
+    /// Broadcast: a new weight version (payload is opaque here; the
+    /// simulation cluster versions weights rather than shipping them).
+    Weights {
+        /// Monotone weight version.
+        version: u64,
+        /// Serialized weight delta (opaque to the codec).
+        payload: Vec<u8>,
+    },
+    /// Data: projected halo rows pushed to the shard that reads them.
+    Halo {
+        /// Destination shard.
+        shard: u32,
+        /// Node type the rows belong to.
+        ty: u32,
+        /// The rows (may be empty).
+        block: RowBlock,
+    },
+    /// Data: stage-② projected rows for a shard's owned nodes.
+    FpRows {
+        /// Producing shard.
+        shard: u32,
+        /// Node type the rows belong to.
+        ty: u32,
+        /// The rows.
+        block: RowBlock,
+    },
+    /// Data: stage-③ owner-computes merge rows for one subgraph.
+    NaRows {
+        /// Producing shard.
+        shard: u32,
+        /// Metapath subgraph index.
+        subgraph: u32,
+        /// The rows.
+        block: RowBlock,
+    },
+    /// Data: served batch output rows for a shard's seed group.
+    BatchRows {
+        /// Producing shard.
+        shard: u32,
+        /// The rows (ids are the seed ids).
+        block: RowBlock,
+    },
+}
+
+impl Message {
+    /// Wire tag byte for this variant.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::Place { .. } => 0,
+            Message::Heartbeat { .. } => 1,
+            Message::Drain { .. } => 2,
+            Message::Retire { .. } => 3,
+            Message::Epoch { .. } => 4,
+            Message::Weights { .. } => 5,
+            Message::Halo { .. } => 6,
+            Message::FpRows { .. } => 7,
+            Message::NaRows { .. } => 8,
+            Message::BatchRows { .. } => 9,
+        }
+    }
+
+    /// Semantic key: identifies *what* a message is about independent of
+    /// which delivery attempt carried it, so retransmitted or
+    /// transport-duplicated copies of the same logical message collapse
+    /// into one slot on the receiver. Data-plane keys combine the
+    /// per-shard stream (type / subgraph index); control keys are flat.
+    pub fn semantic_key(&self) -> (u8, u64) {
+        let sub = match self {
+            Message::Place { shard, .. } => *shard as u64,
+            Message::Heartbeat { worker }
+            | Message::Drain { worker }
+            | Message::Retire { worker } => *worker as u64,
+            Message::Epoch { .. } => 0,
+            Message::Weights { version, .. } => *version,
+            Message::Halo { ty, .. } | Message::FpRows { ty, .. } => *ty as u64,
+            Message::NaRows { subgraph, .. } => *subgraph as u64,
+            Message::BatchRows { .. } => 0,
+        };
+        (self.tag(), sub)
+    }
+
+    /// The shard a data-plane message belongs to (`None` for control
+    /// and broadcast messages).
+    pub fn shard(&self) -> Option<u32> {
+        match self {
+            Message::Halo { shard, .. }
+            | Message::FpRows { shard, .. }
+            | Message::NaRows { shard, .. }
+            | Message::BatchRows { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
+}
+
+/// One framed message: header fields plus the payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// Coordinator-global sequence number (dedup key together with
+    /// `from`; duplicates carry the same value).
+    pub seq: u64,
+    /// Sender: [`COORDINATOR`] or a worker id.
+    pub from: u32,
+    /// The message.
+    pub msg: Message,
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_block(buf: &mut Vec<u8>, b: &RowBlock) {
+    put_u32(buf, b.ids.len() as u32);
+    for id in &b.ids {
+        put_u32(buf, *id);
+    }
+    put_u32(buf, b.cols);
+    put_u32(buf, b.data.len() as u32);
+    for v in &b.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::config(format!(
+                "wire: truncated frame (want {} bytes at offset {}, have {})",
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn block(&mut self) -> Result<RowBlock> {
+        let n_ids = self.u32()? as usize;
+        let mut ids = Vec::with_capacity(n_ids.min(MAX_FRAME_LEN / 4));
+        for _ in 0..n_ids {
+            ids.push(self.u32()?);
+        }
+        let cols = self.u32()?;
+        let n_data = self.u32()? as usize;
+        let mut data = Vec::with_capacity(n_data.min(MAX_FRAME_LEN / 4));
+        for _ in 0..n_data {
+            data.push(self.f32()?);
+        }
+        let b = RowBlock { ids, cols, data };
+        b.validate()?;
+        Ok(b)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::config(format!(
+                "wire: {} trailing bytes after frame payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Encode a frame as `[u32 len][u64 seq][u32 from][u8 tag][payload]`.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, frame.seq);
+    put_u32(&mut body, frame.from);
+    body.push(frame.msg.tag());
+    match &frame.msg {
+        Message::Place { shard, worker } => {
+            put_u32(&mut body, *shard);
+            put_u32(&mut body, *worker);
+        }
+        Message::Heartbeat { worker }
+        | Message::Drain { worker }
+        | Message::Retire { worker } => put_u32(&mut body, *worker),
+        Message::Epoch { epoch } => put_u64(&mut body, *epoch),
+        Message::Weights { version, payload } => {
+            put_u64(&mut body, *version);
+            put_u32(&mut body, payload.len() as u32);
+            body.extend_from_slice(payload);
+        }
+        Message::Halo { shard, ty, block } | Message::FpRows { shard, ty, block } => {
+            put_u32(&mut body, *shard);
+            put_u32(&mut body, *ty);
+            put_block(&mut body, block);
+        }
+        Message::NaRows { shard, subgraph, block } => {
+            put_u32(&mut body, *shard);
+            put_u32(&mut body, *subgraph);
+            put_block(&mut body, block);
+        }
+        Message::BatchRows { shard, block } => {
+            put_u32(&mut body, *shard);
+            put_block(&mut body, block);
+        }
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode one frame from a body slice (the bytes *after* the length
+/// word). Rejects unknown tags, truncated payloads and trailing bytes.
+pub fn decode_frame(body: &[u8]) -> Result<Frame> {
+    let mut r = Reader::new(body);
+    let seq = r.u64()?;
+    let from = r.u32()?;
+    let tag = r.u8()?;
+    let msg = match tag {
+        0 => Message::Place { shard: r.u32()?, worker: r.u32()? },
+        1 => Message::Heartbeat { worker: r.u32()? },
+        2 => Message::Drain { worker: r.u32()? },
+        3 => Message::Retire { worker: r.u32()? },
+        4 => Message::Epoch { epoch: r.u64()? },
+        5 => {
+            let version = r.u64()?;
+            let n = r.u32()? as usize;
+            Message::Weights { version, payload: r.take(n)?.to_vec() }
+        }
+        6 => Message::Halo { shard: r.u32()?, ty: r.u32()?, block: r.block()? },
+        7 => Message::FpRows { shard: r.u32()?, ty: r.u32()?, block: r.block()? },
+        8 => Message::NaRows { shard: r.u32()?, subgraph: r.u32()?, block: r.block()? },
+        9 => Message::BatchRows { shard: r.u32()?, block: r.block()? },
+        other => return Err(Error::config(format!("wire: unknown message tag {other}"))),
+    };
+    r.done()?;
+    Ok(Frame { seq, from, msg })
+}
+
+/// Stream-encode a frame onto an `io::Write` (socket transport path).
+pub fn write_frame(w: &mut dyn std::io::Write, frame: &Frame) -> Result<()> {
+    w.write_all(&encode_frame(frame))?;
+    Ok(())
+}
+
+/// Stream-decode one frame from an `io::Read` (socket transport path):
+/// reads the length word, then exactly that many body bytes.
+pub fn read_frame(r: &mut dyn std::io::Read) -> Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::config(format!("wire: frame length {len} exceeds cap")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_frame(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let frame = Frame { seq: 7, from: 3, msg };
+        let bytes = encode_frame(&frame);
+        let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        assert_eq!(len + 4, bytes.len(), "length word covers the body");
+        let back = decode_frame(&bytes[4..]).expect("decode");
+        assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let block = RowBlock {
+            ids: vec![0, 5, 9],
+            cols: 2,
+            data: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0, 3.25, -0.0],
+        };
+        roundtrip(Message::Place { shard: 1, worker: 2 });
+        roundtrip(Message::Heartbeat { worker: 0 });
+        roundtrip(Message::Drain { worker: 4 });
+        roundtrip(Message::Retire { worker: 9 });
+        roundtrip(Message::Epoch { epoch: u64::MAX });
+        roundtrip(Message::Weights { version: 3, payload: vec![1, 2, 3] });
+        roundtrip(Message::Weights { version: 0, payload: Vec::new() });
+        roundtrip(Message::Halo { shard: 0, ty: 1, block: block.clone() });
+        roundtrip(Message::Halo { shard: 0, ty: 1, block: RowBlock::empty() });
+        roundtrip(Message::FpRows { shard: 2, ty: 0, block: block.clone() });
+        roundtrip(Message::NaRows { shard: 1, subgraph: 3, block: block.clone() });
+        roundtrip(Message::BatchRows { shard: 0, block });
+    }
+
+    #[test]
+    fn f32_payload_is_bit_exact() {
+        // NaN payloads and signed zeros must survive the wire unchanged.
+        let raw = [f32::NAN, -0.0, f32::INFINITY, 1.0e-44];
+        let block = RowBlock { ids: vec![1, 2], cols: 2, data: raw.to_vec() };
+        let frame =
+            Frame { seq: 0, from: COORDINATOR, msg: Message::BatchRows { shard: 0, block } };
+        let back = decode_frame(&encode_frame(&frame)[4..]).unwrap();
+        let Message::BatchRows { block, .. } = back.msg else { panic!("variant") };
+        for (a, b) in raw.iter().zip(&block.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact f32 transfer");
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_rejected() {
+        let frame = Frame { seq: 1, from: 0, msg: Message::Epoch { epoch: 42 } };
+        let bytes = encode_frame(&frame);
+        assert!(decode_frame(&bytes[4..bytes.len() - 1]).is_err(), "truncated");
+        let mut extra = bytes[4..].to_vec();
+        extra.push(0xFF);
+        assert!(decode_frame(&extra).is_err(), "trailing");
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.push(250);
+        assert!(decode_frame(&body).is_err());
+    }
+
+    #[test]
+    fn stream_io_roundtrip() {
+        let frames = vec![
+            Frame { seq: 1, from: COORDINATOR, msg: Message::Epoch { epoch: 1 } },
+            Frame {
+                seq: 2,
+                from: 0,
+                msg: Message::FpRows {
+                    shard: 0,
+                    ty: 0,
+                    block: RowBlock { ids: vec![3], cols: 1, data: vec![0.5] },
+                },
+            },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn semantic_keys_distinguish_streams() {
+        let b = RowBlock::empty();
+        let a = Message::Halo { shard: 0, ty: 1, block: b.clone() };
+        let c = Message::Halo { shard: 0, ty: 2, block: b.clone() };
+        assert_ne!(a.semantic_key(), c.semantic_key());
+        // same logical message from two delivery attempts → same key
+        assert_eq!(a.semantic_key(), a.clone().semantic_key());
+        assert_ne!(
+            Message::NaRows { shard: 0, subgraph: 1, block: b.clone() }.semantic_key(),
+            Message::FpRows { shard: 0, ty: 1, block: b }.semantic_key()
+        );
+    }
+
+    #[test]
+    fn row_block_validation() {
+        assert!(RowBlock::empty().validate().is_ok());
+        assert!(RowBlock::ids_only(vec![1, 2, 3]).validate().is_ok());
+        let bad = RowBlock { ids: vec![1], cols: 2, data: vec![0.0] };
+        assert!(bad.validate().is_err());
+    }
+}

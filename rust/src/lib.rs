@@ -67,9 +67,13 @@
 //!   crate builds offline with zero dependencies; without it the PJRT
 //!   paths construct and read manifests but report runtime errors on
 //!   compile/execute (call sites treat that as "artifacts unavailable").
+//! * `cluster-sockets` — a real Unix-socket-pair [`cluster::Transport`]
+//!   behind `cli run --cluster N`. Off by default; the deterministic
+//!   in-process [`cluster::SimTransport`] needs no feature.
 
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod datasets;
 pub mod dynamic;
@@ -168,6 +172,9 @@ pub struct ReadmeDoctests;
 
 /// One-stop imports for examples, benches and downstream users.
 pub mod prelude {
+    pub use crate::cluster::{
+        Cluster, ClusterSpec, ClusterStats, FaultSpec, SimTransport, Transport, TransportStats,
+    };
     pub use crate::datasets::{self, DatasetId, DatasetScale};
     pub use crate::dynamic::{
         parse_update_stream, DynamicSpec, EpochReport, GraphSnapshot, GraphUpdate,

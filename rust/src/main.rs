@@ -97,6 +97,23 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(spec) = args.cluster()? {
+        let workers = spec.workers;
+        #[cfg(feature = "cluster-sockets")]
+        {
+            let transport = hgnn_char::cluster::SocketTransport::new(workers)?;
+            builder = builder.cluster_transport(spec, Box::new(transport));
+            println!("cluster: {workers} worker(s), socket transport (length-prefixed frames)");
+        }
+        #[cfg(not(feature = "cluster-sockets"))]
+        {
+            builder = builder.cluster(spec);
+            println!(
+                "cluster: {workers} worker(s), deterministic sim transport \
+                 (build with --features cluster-sockets for real sockets)"
+            );
+        }
+    }
     let mut session = builder.build()?;
     println!("{}", session.graph().stats_line());
     println!("{}", session.plan().describe(session.graph()));
@@ -107,6 +124,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let run = session.run()?;
     println!("\n{}", run.profile.stage_breakdown());
     println!("{}", run.report.summary());
+    if let Some(stats) = session.cluster_stats() {
+        let t = session.cluster().map(|c| c.transport_stats()).unwrap_or_default();
+        println!(
+            "cluster: {} wave(s), {} frame(s) / {} bytes on the wire, \
+             {} retransmit(s), {} worker(s) retired, {} shard(s) re-placed",
+            stats.waves, t.delivered, t.bytes, stats.retransmits, stats.retired_workers,
+            stats.replaced_shards
+        );
+    }
     println!("\nkernel table (NA stage):");
     println!(
         "{}",
@@ -419,7 +445,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .as_ref()
         .map(|s| (num_batches / s.epoch_every).max(1))
         .unwrap_or(0);
-    let per_flip = if flip_slots > 0 { pending_updates.len().div_ceil(flip_slots).max(1) } else { 0 };
+    let per_flip =
+        if flip_slots > 0 { pending_updates.len().div_ceil(flip_slots).max(1) } else { 0 };
     for (i, chunk) in ids.chunks(batch).enumerate() {
         match server.submit(chunk, SubmitOpts::class(i % tuning.priority_lanes)) {
             Ok(rx) => receivers.push(rx),

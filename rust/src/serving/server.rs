@@ -105,6 +105,16 @@ pub trait BatchExecutor {
     fn epoch(&self) -> u64 {
         0
     }
+
+    /// Retire a dead cluster worker and re-place its shards (cluster
+    /// sessions only; see [`crate::cluster`]). Only ever called between
+    /// waves by the dispatcher thread — worker loss is an
+    /// epoch-barrier-style control event, so the in-flight wave
+    /// completes (replaying lost sub-batches internally) before the
+    /// placement visibly changes. Returns the number of shards moved.
+    fn handle_worker_down(&mut self, _worker: usize) -> Result<usize> {
+        Err(Error::config("executor does not support cluster workers"))
+    }
 }
 
 impl<F> BatchExecutor for F
@@ -177,6 +187,14 @@ pub(crate) enum ControlMsg {
     },
     /// Flip the epoch barrier ([`crate::dynamic::EpochBarrier`]).
     Flip(EpochBarrier),
+    /// Retire a dead cluster worker between waves; ack carries the
+    /// number of re-placed shards or the executor's rejection.
+    WorkerDown {
+        /// The worker reported dead.
+        worker: usize,
+        /// Completion channel.
+        ack: mpsc::Sender<std::result::Result<usize, String>>,
+    },
 }
 
 /// Mutable queue state behind the submit/dispatch mutex.
@@ -528,6 +546,32 @@ impl<C: Clock> AsyncServer<C> {
         Ok(rx)
     }
 
+    /// Report a cluster worker as dead. The dispatcher honours it
+    /// strictly **between waves**, exactly like an epoch flip: the
+    /// in-flight wave completes first (the cluster protocol replays any
+    /// sub-batches the dead worker was serving, so its replies are
+    /// unaffected), then the worker is retired and its shards re-placed
+    /// before the next wave dispatches. Queued requests never fail from
+    /// the loss. The receiver yields the number of shards moved, or the
+    /// executor's rejection (non-cluster sessions, last worker
+    /// standing).
+    pub fn report_worker_down(
+        &self,
+        worker: usize,
+    ) -> std::result::Result<mpsc::Receiver<std::result::Result<usize, String>>, ServeError>
+    {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = lock(&self.shared.state);
+            if st.stopped {
+                return Err(ServeError::Stopped);
+            }
+            st.controls.push(ControlMsg::WorkerDown { worker, ack: tx });
+        }
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
     /// Snapshot of the current statistics without stopping the server.
     pub fn stats_snapshot(&self) -> ServeStats {
         self.mk_stats()
@@ -671,6 +715,10 @@ fn handle_controls<C: Clock, E: BatchExecutor>(sh: &Shared<C>, executor: &mut E)
             }
             ControlMsg::Flip(barrier) => {
                 let _ = barrier.ack.send(executor.flip_epoch().map_err(|e| e.to_string()));
+            }
+            ControlMsg::WorkerDown { worker, ack } => {
+                let _ =
+                    ack.send(executor.handle_worker_down(worker).map_err(|e| e.to_string()));
             }
         }
     }
@@ -994,6 +1042,13 @@ impl BatchExecutor for SessionExecutor {
     fn epoch(&self) -> u64 {
         self.session.as_ref().ok().map(|s| s.epoch()).unwrap_or(0)
     }
+
+    fn handle_worker_down(&mut self, worker: usize) -> Result<usize> {
+        match self.session.as_mut() {
+            Ok(s) => s.handle_worker_down(worker),
+            Err(e) => Err(Error::Runtime(format!("session build failed: {e}"))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1155,5 +1210,21 @@ mod tests {
         server.stop();
         assert!(matches!(server.apply_updates(Vec::new()), Err(ServeError::Stopped)));
         assert!(matches!(server.flip_epoch(), Err(ServeError::Stopped)));
+    }
+
+    #[test]
+    fn worker_down_control_round_trips_between_waves() {
+        // a static executor rejects the control, but the ack still
+        // arrives and serving continues untouched
+        let server = AsyncServer::start(cfg(), echo);
+        let rx = server.report_worker_down(1).unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("cluster workers"), "got: {err}");
+        let rx = server.submit(&[4], SubmitOpts::default()).unwrap();
+        let rows = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(rows, vec![vec![4.0, 8.0]]);
+        let mut server = server;
+        server.stop();
+        assert!(matches!(server.report_worker_down(0), Err(ServeError::Stopped)));
     }
 }

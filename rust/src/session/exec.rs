@@ -59,9 +59,21 @@
 //! (inter-subgraph-parallel) policy rather than the requested label.
 //! Whole-model backends never reach this path (the session keeps their
 //! cached full-graph route).
+//!
+//! ## The distributed path
+//!
+//! [`execute_distributed`] is the third execution path (behind
+//! `SessionBuilder::cluster`): the same owner-computes FP/NA/SA plan as
+//! [`execute_sharded`], but each shard's compute runs on a
+//! [`crate::cluster`] worker behind a message fabric — stage requests
+//! and responses cross a [`crate::cluster::Transport`] as wire frames,
+//! workers can die mid-wave and their shards re-place, and every merge
+//! happens at the coordinator from `RowBlock` payloads that carry f32
+//! rows bit-exactly. Output is bit-identical to both other paths.
 
 use std::collections::BTreeMap;
 
+use crate::cluster::{Cluster, Message, RowBlock};
 use crate::coordinator::schedule::{self, lpt_assign, ScheduleReport};
 use crate::gpumodel::GpuModel;
 use crate::graph::sparse::Csr;
@@ -1214,6 +1226,303 @@ fn dr_exec(name: &'static str, bytes: u64, nanos: u64) -> KernelExec {
         wall_nanos: nanos,
         trace: None,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Distributed execution
+// ---------------------------------------------------------------------------
+
+/// Execute the full-graph forward over a [`Cluster`] of shard workers —
+/// the same owner-computes FP/NA/SA plan as [`execute_sharded`], with
+/// the shard boundary promoted from scoped threads to a message fabric.
+///
+/// One run is one *wave* ([`Cluster::begin_wave`]): an `Epoch`
+/// broadcast, then one [`Cluster::stage_round`] per compute stage.
+///
+/// * **② FP** — the coordinator sends each shard's owner an `FpRows`
+///   request marker; the worker runs [the same FP task][execute_sharded]
+///   over its owned rows and replies one `FpRows` block per planned
+///   type. The coordinator scatters the disjoint blocks into the global
+///   per-type matrices (`ShardMerge`).
+/// * **Halo exchange** — the coordinator gathers each shard's local
+///   slice (owned ∪ halo, ascending global ids) from the merged
+///   matrices (`HaloExchange`, exactly as the sharded path) and ships
+///   it as one `Halo` block per type.
+/// * **③ NA** — the worker rebuilds its local projection view from the
+///   received blocks (f32 rows are wire-bit-exact), aggregates every
+///   subgraph of its shard plan, and replies one `NaRows` block per
+///   subgraph carrying only its owner-computes merge rows. The
+///   coordinator scatters them into the global NA tensors
+///   (`ShardMerge`), then **④ SA** runs once at the coordinator.
+///
+/// Worker death mid-wave is handled inside the stage rounds: the
+/// heartbeat timeout retires the silent worker, its shards re-place
+/// onto survivors from the coordinator's retained [`Partition`], and
+/// the in-flight round replays on the new owner. Kernel events are
+/// slotted per shard and overwritten on replay, so the profile counts
+/// every shard's compute exactly once; per-stage `WireTransfer` DR
+/// kernels carry the transport byte deltas with zero wall time, keeping
+/// the profile's kernel set seed-deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_distributed(
+    backend: &dyn ExecBackend,
+    gpu: &GpuModel,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    part: &Partition,
+    cluster: &mut Cluster,
+    scratch: &mut Ctx,
+) -> Result<StagedRun> {
+    scratch.events.clear();
+    let k = part.num_shards();
+    if cluster.placement().len() != k {
+        return Err(Error::shape(format!(
+            "distributed: cluster places {} shards, partition has {k}",
+            cluster.placement().len()
+        )));
+    }
+    cluster.begin_wave()?;
+    let mut profile = Profile {
+        subgraph_build_nanos: plan.subgraphs.build_nanos,
+        pool_threads: crate::parallel::current_threads(),
+        ..Default::default()
+    };
+    let wire_start = cluster.transport_stats();
+
+    // ② FP round: request is a marker; the response is one FpRows block
+    // per planned type with owned rows on that shard.
+    let fp_expected: Vec<usize> = (0..k)
+        .map(|s| {
+            plan.weights
+                .proj
+                .keys()
+                .filter(|&&ty| !part.shards[s].owned[ty].is_empty())
+                .count()
+        })
+        .collect();
+    let mut fp_events: Vec<Vec<KernelExec>> = vec![Vec::new(); k];
+    let fp_replies = cluster.stage_round(
+        k,
+        &mut |s| {
+            Ok(vec![Message::FpRows {
+                shard: s as u32,
+                ty: u32::MAX, // request marker: "project your owned rows"
+                block: RowBlock::empty(),
+            }])
+        },
+        &mut |s, _req| {
+            let mut ctx = backend.make_ctx();
+            let rows = fp_shard_task(backend, &part.shards[s], &mut ctx, plan, hg)?;
+            fp_events[s] = ctx.drain(); // overwritten on replay: counted once
+            Ok(rows
+                .into_iter()
+                .map(|(ty, h)| Message::FpRows {
+                    shard: s as u32,
+                    ty: ty as u32,
+                    block: RowBlock {
+                        ids: part.shards[s].owned[ty].clone(),
+                        cols: h.cols() as u32,
+                        data: h.into_vec(),
+                    },
+                })
+                .collect())
+        },
+        &|s| fp_expected[s],
+    )?;
+    for (s, events) in fp_events.iter_mut().enumerate() {
+        profile.record(
+            std::mem::take(events),
+            StageId::FeatureProjection,
+            None,
+            cluster.worker_for(s),
+            0,
+        );
+    }
+
+    // stage-② merge at the coordinator: scatter the received blocks into
+    // the global per-type matrices.
+    let t0 = std::time::Instant::now();
+    let mut projected: Projected = BTreeMap::new();
+    for (&ty, w) in &plan.weights.proj {
+        let rows = plan
+            .weights
+            .embed
+            .get(&ty)
+            .map(|e| e.rows())
+            .unwrap_or_else(|| hg.node_type(ty).count);
+        projected.insert(ty, Tensor::zeros(rows, w.cols()));
+    }
+    let mut fp_bytes = 0u64;
+    for replies in &fp_replies {
+        for msg in replies {
+            let Message::FpRows { ty, block, .. } = msg else {
+                return Err(Error::config("distributed FP: unexpected reply variant"));
+            };
+            block.validate()?;
+            let cols = block.cols as usize;
+            fp_bytes += (block.data.len() * 4) as u64;
+            let target = projected
+                .get_mut(&(*ty as usize))
+                .ok_or_else(|| Error::config(format!("distributed FP: unplanned type {ty}")))?;
+            for (i, &g) in block.ids.iter().enumerate() {
+                target.set_row(g as usize, &block.data[i * cols..(i + 1) * cols]);
+            }
+        }
+    }
+    profile.record(
+        vec![dr_exec("ShardMerge", fp_bytes, t0.elapsed().as_nanos() as u64)],
+        StageId::FeatureProjection,
+        None,
+        0,
+        0,
+    );
+    let wire_fp = cluster.transport_stats();
+    profile.record(
+        vec![dr_exec("WireTransfer", wire_fp.bytes - wire_start.bytes, 0)],
+        StageId::FeatureProjection,
+        None,
+        0,
+        0,
+    );
+
+    // Halo exchange at the coordinator: gather each shard's local slice
+    // from the merged matrices (same kernels as the sharded path), ship
+    // the slices as the NA-round request blocks.
+    let mut halo_reqs: Vec<Vec<Message>> = Vec::with_capacity(k);
+    for s in 0..k {
+        let mut msgs = Vec::with_capacity(projected.len());
+        for (&ty, h) in &projected {
+            let ids = &part.shards[s].nodes[ty];
+            let local = halo_exchange(scratch, h, ids);
+            msgs.push(Message::Halo {
+                shard: s as u32,
+                ty: ty as u32,
+                block: RowBlock {
+                    ids: ids.clone(),
+                    cols: local.cols() as u32,
+                    data: local.into_vec(),
+                },
+            });
+        }
+        let events = scratch.drain();
+        profile.record(events, StageId::NeighborAggregation, None, cluster.worker_for(s), 0);
+        halo_reqs.push(msgs);
+    }
+
+    // ③ NA round: workers aggregate over their wire-received local view
+    // and reply only their owner-computes merge rows.
+    let p = plan.num_subgraphs();
+    let mut na_events: Vec<Vec<(usize, Vec<KernelExec>)>> = vec![Vec::new(); k];
+    let na_replies = cluster.stage_round(
+        k,
+        &mut |s| Ok(halo_reqs[s].clone()),
+        &mut |s, req| {
+            let shard = &part.shards[s];
+            let mut ctx = backend.make_ctx();
+            let mut local: Projected = BTreeMap::new();
+            for msg in req {
+                let Message::Halo { ty, block, .. } = msg else {
+                    return Err(Error::config("distributed NA: unexpected request variant"));
+                };
+                block.validate()?;
+                local.insert(
+                    *ty as usize,
+                    Tensor::from_vec(block.ids.len(), block.cols as usize, block.data.clone())?,
+                );
+            }
+            let mut events = Vec::with_capacity(p);
+            let mut out = Vec::with_capacity(p);
+            for si in 0..shard.plan.num_subgraphs() {
+                let t = backend.neighbor_aggregation(&mut ctx, &shard.plan, si, &local)?;
+                events.push((si, ctx.drain()));
+                let sg = &shard.plan.subgraphs.subgraphs[si];
+                let merge = &shard.merge[sg.dst_type];
+                let cols = t.cols();
+                let mut ids = Vec::with_capacity(merge.len());
+                let mut data = Vec::with_capacity(merge.len() * cols);
+                for &(l, g) in merge {
+                    ids.push(g);
+                    data.extend_from_slice(t.row(l as usize));
+                }
+                out.push(Message::NaRows {
+                    shard: s as u32,
+                    subgraph: si as u32,
+                    block: RowBlock { ids, cols: cols as u32, data },
+                });
+            }
+            na_events[s] = events; // overwritten on replay: counted once
+            Ok(out)
+        },
+        &|_| p,
+    )?;
+    for (s, per_sub) in na_events.iter_mut().enumerate() {
+        for (si, events) in std::mem::take(per_sub) {
+            profile.record(
+                events,
+                StageId::NeighborAggregation,
+                Some(plan.subgraphs.subgraphs[si].name.as_str()),
+                cluster.worker_for(s),
+                0,
+            );
+        }
+    }
+
+    // owner-computes merge of the received NA rows at the coordinator
+    let t0 = std::time::Instant::now();
+    let mut merged: Vec<Option<Tensor>> = (0..p).map(|_| None).collect();
+    for replies in &na_replies {
+        for msg in replies {
+            let Message::NaRows { subgraph, block, .. } = msg else {
+                return Err(Error::config("distributed NA: unexpected reply variant"));
+            };
+            block.validate()?;
+            let si = *subgraph as usize;
+            if si >= p {
+                return Err(Error::shape(format!("distributed NA: subgraph {si} out of range")));
+            }
+            let sg = &plan.subgraphs.subgraphs[si];
+            let cols = block.cols as usize;
+            let out = merged[si].get_or_insert_with(|| Tensor::zeros(sg.adj.n_rows, cols));
+            for (i, &g) in block.ids.iter().enumerate() {
+                out.set_row(g as usize, &block.data[i * cols..(i + 1) * cols]);
+            }
+        }
+    }
+    let mut na_results = Vec::with_capacity(p);
+    let mut na_bytes = 0u64;
+    for (si, slot) in merged.into_iter().enumerate() {
+        let out = slot
+            .ok_or_else(|| Error::config(format!("distributed NA: subgraph {si} never merged")))?;
+        na_bytes += out.bytes() as u64;
+        na_results.push(out);
+    }
+    profile.record(
+        vec![dr_exec("ShardMerge", na_bytes, t0.elapsed().as_nanos() as u64)],
+        StageId::NeighborAggregation,
+        None,
+        0,
+        0,
+    );
+    let wire_na = cluster.transport_stats();
+    profile.record(
+        vec![dr_exec("WireTransfer", wire_na.bytes - wire_fp.bytes, 0)],
+        StageId::NeighborAggregation,
+        None,
+        0,
+        0,
+    );
+
+    // ④ SA once, at the coordinator, over the merged tensors
+    let output = backend.semantic_aggregation(scratch, plan, &na_results)?;
+    record_advance(&mut profile, scratch, StageId::SemanticAggregation, None, 0, 0);
+    recycle_projected(scratch, projected);
+
+    profile.attach_metrics(gpu);
+    let live = cluster.live_workers().len().max(1);
+    let effective = SchedulePolicy::InterSubgraphParallel { workers: live };
+    let mut report = schedule::analyze(&profile, live, false, effective, gpu);
+    report.sharding = Some(part.info());
+    Ok(StagedRun { output, na_results, profile, report })
 }
 
 /// Fused tasks on the calling thread with per-virtual-worker projection

@@ -40,6 +40,9 @@ pub mod exec;
 use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::cluster::{
+    Cluster, ClusterSpec, ClusterStats, Message, RowBlock, SimTransport, Transport,
+};
 use crate::coordinator::schedule::{self, ScheduleReport};
 use crate::datasets::{self, DatasetId, DatasetScale};
 use crate::dynamic::{self, DynamicSpec, EpochReport, GraphSnapshot, GraphUpdate, UpdateLog};
@@ -210,6 +213,18 @@ pub struct SessionBuilder {
     partition: Option<PartitionSpec>,
     threads: Option<usize>,
     dynamic: Option<DynamicSpec>,
+    cluster: Option<ClusterSpec>,
+    cluster_transport: Option<TransportSlot>,
+}
+
+/// Builder slot for a user-supplied cluster transport; the trait object
+/// itself is not `Debug`, so the slot supplies a placeholder.
+struct TransportSlot(Box<dyn Transport>);
+
+impl std::fmt::Debug for TransportSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Box<dyn Transport>")
+    }
 }
 
 impl Default for SchedulePolicy {
@@ -335,6 +350,41 @@ impl SessionBuilder {
         self
     }
 
+    /// Distribute the sharded forward across a cluster of shard
+    /// workers behind a message fabric (see [`crate::cluster`]): a
+    /// coordinator places the partition's shards onto `spec.workers`
+    /// workers, ships the FP/NA stage requests and halo blocks over the
+    /// length-prefixed wire codec, and merges the owner-computes
+    /// responses — **bit-identical** to the monolithic and sharded
+    /// forwards. Without an explicit [`SessionBuilder::partition`] the
+    /// session defaults to one shard per worker. The transport is the
+    /// deterministic in-process [`SimTransport`] seeded from
+    /// `spec.fault`, so every delivery, fault, timeout and re-placement
+    /// reproduces exactly from the seed; use
+    /// [`SessionBuilder::cluster_transport`] for a real wire. Worker
+    /// death (scheduled via `spec`, or reported through
+    /// [`Session::handle_worker_down`]) retires the worker, re-places
+    /// its shards from the retained partition and replays the in-flight
+    /// wave. Whole-model backends ignore the spec, like any partition.
+    pub fn cluster(mut self, spec: ClusterSpec) -> Self {
+        self.cluster = Some(spec);
+        self
+    }
+
+    /// Like [`SessionBuilder::cluster`], but over a caller-supplied
+    /// [`Transport`] — e.g. the Unix-socket-pair transport built with
+    /// `--features cluster-sockets`, where every frame genuinely
+    /// traverses the kernel.
+    pub fn cluster_transport(
+        mut self,
+        spec: ClusterSpec,
+        transport: Box<dyn Transport>,
+    ) -> Self {
+        self.cluster = Some(spec);
+        self.cluster_transport = Some(TransportSlot(transport));
+        self
+    }
+
     /// Cap the process-wide worker pool at `n` threads (min 1) for
     /// everything this session executes — both the intra-kernel
     /// `parallel_for` inside `sgemm`/`SpMMCsr`/`IndexSelect` and the
@@ -408,8 +458,26 @@ impl SessionBuilder {
                  memoize sampled-batch stage results",
             ));
         }
-        let partition = match self.partition {
+        // a cluster without an explicit partition defaults to one
+        // shard per worker — every worker owns exactly one shard
+        let partition_spec = match (&self.cluster, self.partition) {
+            (Some(cs), None) => Some(PartitionSpec::new(cs.workers.max(1))),
+            (_, spec) => spec,
+        };
+        let partition = match partition_spec {
             Some(spec) => Some(Partition::build(&hg, &plan, &spec)?),
+            None => None,
+        };
+        let cluster = match self.cluster {
+            Some(spec) => {
+                let shards =
+                    partition.as_ref().map(|p| p.num_shards()).unwrap_or(spec.workers);
+                let transport: Box<dyn Transport> = match self.cluster_transport {
+                    Some(TransportSlot(t)) => t,
+                    None => Box::new(SimTransport::faulty(spec.fault.clone())),
+                };
+                Some(Cluster::new(spec, shards, transport)?)
+            }
             None => None,
         };
         // one reuse-cache lane per shard (each shard-affine sub-batch
@@ -432,6 +500,8 @@ impl SessionBuilder {
             sampler,
             reuse,
             partition,
+            cluster,
+            retired_reuse: ReuseStats::default(),
             threads: self.threads,
             scratch,
             shard_scratch,
@@ -487,6 +557,17 @@ pub struct Session {
     /// switches [`Session::run`] to sharded execution and
     /// [`Session::run_batch`] to shard-affine sub-batches.
     partition: Option<Partition>,
+    /// Distributed-execution coordinator ([`SessionBuilder::cluster`]):
+    /// owns shard placement, the failure detector and the wire
+    /// protocol. `Some` switches [`Session::run`] to
+    /// [`exec::execute_distributed`] and [`Session::run_batch`] to the
+    /// cluster batch round.
+    cluster: Option<Cluster>,
+    /// Reuse counters absorbed from cache lanes rebuilt after worker
+    /// re-placement, so [`Session::reuse_stats`] stays cumulative —
+    /// and never double-counts a dead lane — across kill/re-place
+    /// cycles.
+    retired_reuse: ReuseStats,
     /// Worker-pool cap installed (thread-locally) around every run;
     /// `None` inherits the process default.
     threads: Option<usize>,
@@ -650,24 +731,31 @@ impl Session {
     }
 
     fn run_staged(&mut self) -> Result<StagedRun> {
-        match self.partition.as_ref() {
-            Some(part) => exec::execute_sharded(
-                self.backend.as_ref(),
-                &self.gpu,
-                &self.plan,
-                &self.hg,
+        // field-disjoint borrows: the cluster (mutable, drives the wire
+        // protocol) alongside the partition, backend, plan and scratch
+        let Session { backend, gpu, plan, hg, partition, cluster, scratch, policy, .. } =
+            self;
+        let run = match (partition.as_ref(), cluster.as_mut()) {
+            (Some(part), Some(cl)) => exec::execute_distributed(
+                backend.as_ref(),
+                gpu,
+                plan,
+                hg,
                 part,
-                &mut self.scratch,
-            ),
-            None => exec::execute(
-                self.backend.as_ref(),
-                &self.gpu,
-                &self.plan,
-                &self.hg,
-                self.policy,
-                &mut self.scratch,
-            ),
-        }
+                cl,
+                scratch,
+            )?,
+            (Some(part), None) => {
+                exec::execute_sharded(backend.as_ref(), gpu, plan, hg, part, scratch)?
+            }
+            (None, _) => {
+                exec::execute(backend.as_ref(), gpu, plan, hg, *policy, scratch)?
+            }
+        };
+        // worker deaths during the wave re-placed shards: rebuild their
+        // reuse-cache lanes cold before the next batch reads them
+        self.sync_cluster_lanes();
+        Ok(run)
     }
 
     /// The cached partition, if the session is sharded.
@@ -758,6 +846,9 @@ impl Session {
     /// ([`Session::run_batch_shard_affine`]).
     fn run_batch_sampled(&mut self, node_ids: &[u32]) -> Result<Vec<Vec<f32>>> {
         let seeds = self.wrap_ids(node_ids);
+        if self.cluster.is_some() {
+            return self.run_batch_cluster(&seeds);
+        }
         if self.partition.as_ref().is_some_and(|p| p.num_shards() > 1) {
             return self.run_batch_shard_affine(&seeds);
         }
@@ -930,6 +1021,184 @@ impl Session {
         Ok(out)
     }
 
+    /// The cluster batch round: split the (wrapped) seeds by owner
+    /// shard and run **one wave** of the wire protocol — the
+    /// coordinator ships each non-empty group to its shard's worker as
+    /// a `BatchRows` request, the worker samples and executes the
+    /// sub-batch exactly as [`Session::run_batch_shard_affine`] would
+    /// (through the shard's reuse-cache lane), and the embedding rows
+    /// come back as a `BatchRows` block. Worker death mid-wave replays
+    /// the lost sub-batches on the re-placement target, so replies stay
+    /// bit-identical to the no-fault run.
+    fn run_batch_cluster(&mut self, seeds: &[u32]) -> Result<Vec<Vec<f32>>> {
+        // field-disjoint borrows: the cluster (mutable) alongside the
+        // partition, sampler, reuse lanes and per-shard scratch
+        let Session {
+            hg,
+            plan,
+            backend,
+            gpu,
+            policy,
+            sampler,
+            reuse,
+            partition,
+            shard_scratch,
+            cluster,
+            ..
+        } = self;
+        let part = partition.as_ref().expect("cluster sessions are always partitioned");
+        let cluster = cluster.as_mut().expect("checked by run_batch_sampled");
+        let sampler = sampler.as_ref().expect("checked by run_batch");
+        let backend = backend.as_ref();
+        let policy = *policy;
+        let k = part.num_shards();
+        let target = plan.target;
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for &g in seeds {
+            groups[part.owner_of(target, g)].push(g);
+        }
+        let mut lanes: Vec<Option<&mut ReuseCache>> = match reuse.as_mut() {
+            Some(v) => v.iter_mut().map(Some).collect(),
+            None => (0..k).map(|_| None).collect(),
+        };
+        let mut scratches: Vec<&mut Ctx> = shard_scratch.iter_mut().collect();
+        cluster.begin_wave()?;
+        let replies = cluster.stage_round(
+            k,
+            &mut |s| {
+                if groups[s].is_empty() {
+                    return Ok(Vec::new());
+                }
+                Ok(vec![Message::BatchRows {
+                    shard: s as u32,
+                    block: RowBlock::ids_only(groups[s].clone()),
+                }])
+            },
+            &mut |s, msgs| {
+                let ids = match msgs.first() {
+                    Some(Message::BatchRows { block, .. }) => block.ids.clone(),
+                    other => {
+                        return Err(Error::config(format!(
+                            "cluster batch: shard {s} received malformed request {other:?}"
+                        )))
+                    }
+                };
+                let rows = shard_batch_task(
+                    backend,
+                    hg,
+                    plan,
+                    gpu,
+                    policy,
+                    sampler,
+                    &ids,
+                    lanes[s].as_deref_mut(),
+                    &mut *scratches[s],
+                )?;
+                let cols = rows.first().map(|(_, r)| r.len()).unwrap_or(0) as u32;
+                let mut block = RowBlock {
+                    ids: Vec::with_capacity(rows.len()),
+                    cols,
+                    data: Vec::with_capacity(rows.len() * cols as usize),
+                };
+                for (g, row) in rows {
+                    block.ids.push(g);
+                    block.data.extend_from_slice(&row);
+                }
+                Ok(vec![Message::BatchRows { shard: s as u32, block }])
+            },
+            &|s| usize::from(!groups[s].is_empty()),
+        )?;
+        let mut row_of: std::collections::HashMap<u32, Vec<f32>> =
+            std::collections::HashMap::with_capacity(seeds.len());
+        for msgs in &replies {
+            for m in msgs {
+                if let Message::BatchRows { block, .. } = m {
+                    let cols = block.cols as usize;
+                    for (i, &g) in block.ids.iter().enumerate() {
+                        row_of.insert(g, block.data[i * cols..(i + 1) * cols].to_vec());
+                    }
+                }
+            }
+        }
+        self.runs += 1;
+        self.sync_cluster_lanes();
+        // move each row out on its first use; only duplicate ids in the
+        // batch (which share one seed row) pay a copy
+        let mut first_at: std::collections::HashMap<u32, usize> =
+            std::collections::HashMap::with_capacity(seeds.len());
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(seeds.len());
+        for &g in seeds {
+            if let Some(row) = row_of.remove(&g) {
+                first_at.insert(g, out.len());
+                out.push(row);
+            } else if let Some(&j) = first_at.get(&g) {
+                let row = out[j].clone();
+                out.push(row);
+            } else {
+                return Err(Error::config(format!("seed {g} lost in cluster batch")));
+            }
+        }
+        Ok(out)
+    }
+
+    /// The cluster coordinator, if distributed execution is enabled.
+    pub fn cluster(&self) -> Option<&Cluster> {
+        self.cluster.as_ref()
+    }
+
+    /// Mutable cluster access — tests and harnesses drive kill/drain
+    /// schedules and idle protocol iterations through it.
+    pub fn cluster_mut(&mut self) -> Option<&mut Cluster> {
+        self.cluster.as_mut()
+    }
+
+    /// Cluster event counters (waves, retirements, re-placements,
+    /// heartbeats, retransmits), if distributed execution is enabled.
+    /// Deterministic under the simulated transport.
+    pub fn cluster_stats(&self) -> Option<ClusterStats> {
+        self.cluster.as_ref().map(|c| c.stats())
+    }
+
+    /// Report a worker as dead — the serving runtime routes worker-loss
+    /// control events here between waves. The worker is killed and
+    /// retired immediately (no heartbeat-timeout wait), its shards are
+    /// re-placed onto the least-loaded live workers from the retained
+    /// partition, and the moved shards' reuse-cache lanes are rebuilt
+    /// cold (their counters absorbed into the cumulative totals
+    /// exactly once). Returns the number of shards moved. Errors when
+    /// the session has no cluster or `worker` is the last one standing.
+    pub fn handle_worker_down(&mut self, worker: usize) -> Result<usize> {
+        let cluster = self.cluster.as_mut().ok_or_else(|| {
+            Error::config("Session built without .cluster(..): no workers to retire")
+        })?;
+        cluster.kill_worker(worker);
+        let moved = cluster.retire_worker(worker)?.len();
+        self.sync_cluster_lanes();
+        Ok(moved)
+    }
+
+    /// Drain the cluster's re-placement log and rebuild the reuse-cache
+    /// lane of every moved shard cold — the dead worker's lane state
+    /// died with the worker. Each retired lane's counters are absorbed
+    /// into [`Session::reuse_stats`]'s retired total exactly once, so
+    /// the cumulative counters stay monotonic without double-counting
+    /// the dead lane against its fresh replacement.
+    fn sync_cluster_lanes(&mut self) {
+        let Some(cluster) = self.cluster.as_mut() else { return };
+        let moved = cluster.take_replacements();
+        if moved.is_empty() {
+            return;
+        }
+        if let Some(lanes) = self.reuse.as_mut() {
+            for s in moved {
+                if let Some(lane) = lanes.get_mut(s) {
+                    self.retired_reuse.absorb(lane.stats());
+                    *lane = ReuseCache::new(lane.spec());
+                }
+            }
+        }
+    }
+
     /// The reuse-cache capacities in effect, if cross-request reuse is
     /// enabled (per cache lane — a partitioned session keeps one lane
     /// per shard).
@@ -939,10 +1208,13 @@ impl Session {
 
     /// Snapshot of the cumulative reuse-cache counters, if cross-request
     /// reuse is enabled — aggregated across the per-shard lanes on a
-    /// partitioned session.
+    /// partitioned session, plus the counters of lanes retired by
+    /// cluster worker re-placement (absorbed exactly once when the lane
+    /// was rebuilt cold, so a re-placed shard's fresh lane never
+    /// double-counts its dead predecessor).
     pub fn reuse_stats(&self) -> Option<ReuseStats> {
         let lanes = self.reuse.as_ref()?;
-        let mut total = ReuseStats::default();
+        let mut total = self.retired_reuse.clone();
         for lane in lanes {
             total.absorb(lane.stats());
         }
@@ -1550,6 +1822,38 @@ mod tests {
         // nothing touched: the cached output survives the barrier
         let _ = s.run_batch(&[0]).unwrap();
         assert_eq!(s.runs(), 1);
+    }
+
+    #[test]
+    fn cluster_builder_defaults_partition_and_matches_monolith() {
+        let mut mono = ci_builder().build().unwrap();
+        let base = mono.run().unwrap();
+        let mut dist = ci_builder().cluster(ClusterSpec::new(2)).build().unwrap();
+        assert_eq!(dist.partition().map(|p| p.num_shards()), Some(2));
+        let run = dist.run().unwrap();
+        assert_eq!(
+            run.output.as_slice(),
+            base.output.as_slice(),
+            "distributed forward must be bit-identical to the monolith"
+        );
+        let stats = dist.cluster_stats().unwrap();
+        assert_eq!(stats.waves, 1);
+        assert_eq!(stats.retired_workers, 0);
+        assert!(dist.cluster().unwrap().transport_stats().bytes > 0, "rows crossed the wire");
+    }
+
+    #[test]
+    fn handle_worker_down_requires_cluster_and_replaces() {
+        let mut s = ci_builder().build().unwrap();
+        assert!(s.handle_worker_down(0).is_err());
+        let mut dist = ci_builder().cluster(ClusterSpec::new(2)).build().unwrap();
+        let moved = dist.handle_worker_down(1).unwrap();
+        assert_eq!(moved, 1, "worker 1 owned exactly one of the two shards");
+        assert_eq!(dist.cluster().unwrap().placement(), &[0, 0]);
+        // the surviving worker serves the whole forward
+        let run = dist.run().unwrap();
+        assert!(run.output.frob_norm() > 0.0);
+        assert_eq!(dist.cluster_stats().unwrap().retired_workers, 1);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! smallest failing input. Deterministic: seeded PCG, so failures
 //! reproduce.
 
+use crate::cluster::{Message, RowBlock};
 use crate::graph::sparse::{Coo, Csr};
 use crate::serving::clock::{Clock, Nanos};
 use crate::tensor::Tensor;
@@ -90,7 +91,13 @@ pub trait Strategy {
 
 /// Run `prop` over `cases` generated inputs; panics with the smallest
 /// failing case found.
-pub fn check<S: Strategy>(name: &str, seed: u64, cases: usize, strategy: &S, prop: impl Fn(&S::Value) -> bool) {
+pub fn check<S: Strategy>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> bool,
+) {
     let mut rng = Pcg32::new(seed, 0x7e57);
     for case_idx in 0..cases {
         let value = strategy.generate(&mut rng);
@@ -221,6 +228,110 @@ impl Strategy for TensorStrategy {
     }
 }
 
+/// Strategy: cluster wire [`Message`]s across **every** variant, with
+/// arbitrary payload sizes — including empty row blocks (the shape of
+/// an empty halo exchange) — and adversarial f32 payloads (NaN, ±∞,
+/// −0.0, denormals), which the codec must round-trip bit-exactly.
+#[derive(Debug, Clone)]
+pub struct MessageStrategy {
+    /// Max rows per generated block (0 rows is always possible).
+    pub max_rows: usize,
+    /// Max cols per generated block.
+    pub max_cols: usize,
+}
+
+impl Default for MessageStrategy {
+    fn default() -> Self {
+        MessageStrategy { max_rows: 12, max_cols: 8 }
+    }
+}
+
+impl MessageStrategy {
+    fn block(&self, rng: &mut Pcg32) -> RowBlock {
+        let rows = rng.gen_range(self.max_rows + 1);
+        let cols = (1 + rng.gen_range(self.max_cols)) as u32;
+        let data = (0..rows * cols as usize)
+            .map(|i| match rng.gen_range(8) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => -0.0,
+                4 => f32::MIN_POSITIVE / 2.0, // subnormal
+                _ => (rng.gen_f32() * 2.0 - 1.0) * 1e3 + i as f32,
+            })
+            .collect();
+        RowBlock {
+            ids: (0..rows).map(|_| rng.gen_range(1 << 20) as u32).collect(),
+            cols,
+            data,
+        }
+    }
+}
+
+impl Strategy for MessageStrategy {
+    type Value = Message;
+
+    fn generate(&self, rng: &mut Pcg32) -> Message {
+        let shard = rng.gen_range(64) as u32;
+        let worker = rng.gen_range(16) as u32;
+        let ty = rng.gen_range(8) as u32;
+        match rng.gen_range(10) {
+            0 => Message::Place { shard, worker },
+            1 => Message::Heartbeat { worker },
+            2 => Message::Drain { worker },
+            3 => Message::Retire { worker },
+            4 => Message::Epoch { epoch: rng.gen_range(1 << 30) as u64 },
+            5 => Message::Weights {
+                version: rng.gen_range(1 << 30) as u64,
+                payload: (0..rng.gen_range(64)).map(|_| rng.gen_range(256) as u8).collect(),
+            },
+            6 => Message::Halo { shard, ty, block: self.block(rng) },
+            7 => Message::FpRows { shard, ty, block: self.block(rng) },
+            8 => Message::NaRows { shard, subgraph: ty, block: self.block(rng) },
+            _ => Message::BatchRows { shard, block: self.block(rng) },
+        }
+    }
+
+    fn shrink(&self, value: &Message) -> Vec<Message> {
+        fn halve(b: &RowBlock) -> Option<RowBlock> {
+            if b.ids.is_empty() {
+                return None;
+            }
+            let keep = b.ids.len() / 2;
+            Some(RowBlock {
+                ids: b.ids[..keep].to_vec(),
+                cols: b.cols,
+                data: b.data[..keep * b.cols as usize].to_vec(),
+            })
+        }
+        match value {
+            Message::Halo { shard, ty, block } => halve(block)
+                .map(|block| Message::Halo { shard: *shard, ty: *ty, block })
+                .into_iter()
+                .collect(),
+            Message::FpRows { shard, ty, block } => halve(block)
+                .map(|block| Message::FpRows { shard: *shard, ty: *ty, block })
+                .into_iter()
+                .collect(),
+            Message::NaRows { shard, subgraph, block } => halve(block)
+                .map(|block| Message::NaRows { shard: *shard, subgraph: *subgraph, block })
+                .into_iter()
+                .collect(),
+            Message::BatchRows { shard, block } => halve(block)
+                .map(|block| Message::BatchRows { shard: *shard, block })
+                .into_iter()
+                .collect(),
+            Message::Weights { version, payload } if !payload.is_empty() => {
+                vec![Message::Weights {
+                    version: *version,
+                    payload: payload[..payload.len() / 2].to_vec(),
+                }]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
 /// Pair strategy combinator.
 pub struct Pair<A, B>(pub A, pub B);
 
@@ -299,6 +410,28 @@ mod tests {
         // with no notification (bounded, not hung)
         let _g = clock.wait_deadline(&cv, g, u64::MAX);
         assert_eq!(clock.now(), 3_000_000, "waiting does not move virtual time");
+    }
+
+    #[test]
+    fn message_strategy_covers_every_variant() {
+        let s = MessageStrategy::default();
+        let mut rng = Pcg32::seeded(6);
+        let mut tags = std::collections::BTreeSet::new();
+        let mut saw_empty_block = false;
+        for _ in 0..400 {
+            let m = s.generate(&mut rng);
+            tags.insert(m.tag());
+            if let Message::Halo { block, .. }
+            | Message::FpRows { block, .. }
+            | Message::NaRows { block, .. }
+            | Message::BatchRows { block, .. } = &m
+            {
+                assert!(block.validate().is_ok(), "generated blocks are well-formed");
+                saw_empty_block |= block.ids.is_empty();
+            }
+        }
+        assert_eq!(tags.len(), 10, "all wire variants generated: {tags:?}");
+        assert!(saw_empty_block, "empty halo shape must be exercised");
     }
 
     #[test]

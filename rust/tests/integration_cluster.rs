@@ -1,0 +1,350 @@
+//! Simulation-cluster integration: the distributed owner-computes
+//! executor against the monolithic session, entirely on virtual time.
+//!
+//! Everything here runs on [`SimTransport`] — no real sockets, no
+//! `sleep`, no wall-clock in any assertion. Determinism is the whole
+//! contract: the same seed and kill schedule must reproduce the same
+//! byte stream, the same frame counts, the same re-placements. The
+//! matrix covers bit-identity across models × worker counts × reuse,
+//! fault injection (drops, dups, delays, mid-wave kills at every wave
+//! index of a serve trace), worker retirement, and the reuse-accounting
+//! invariant across a kill/re-place cycle.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hgnn_char::cluster::{ClusterSpec, FaultSpec};
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::partition::PartitionSpec;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::serving::{AsyncServer, ServingConfig, SubmitOpts};
+use hgnn_char::session::{Session, SessionBuilder};
+use hgnn_char::testutil::VirtualClock;
+
+const RECV: Duration = Duration::from_secs(60);
+
+fn builder(model: ModelId) -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+}
+
+// ------------------------------------------------------- bit-identity
+
+/// The full distributed forward is bit-identical to the monolithic one
+/// for every HGNN at 1, 2 and 4 workers: owner-computes sub-CSRs pin
+/// the f32 accumulation order, and the wire codec round-trips rows
+/// bit-exactly.
+#[test]
+fn cluster_forward_bit_identical_across_models_and_worker_counts() {
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let baseline = builder(model).build().unwrap().run().unwrap();
+        for workers in [1usize, 2, 4] {
+            let mut session =
+                builder(model).cluster(ClusterSpec::new(workers)).build().unwrap();
+            let run = session.run().unwrap();
+            assert_eq!(
+                run.output.as_slice(),
+                baseline.output.as_slice(),
+                "{model:?} at {workers} workers is not bit-identical"
+            );
+            assert_eq!(run.na_results.len(), baseline.na_results.len());
+            for (a, b) in run.na_results.iter().zip(&baseline.na_results) {
+                assert_eq!(a.as_slice(), b.as_slice());
+            }
+            let stats = session.cluster_stats().unwrap();
+            assert_eq!(stats.waves, 1, "one forward is one wave");
+            assert_eq!(stats.retired_workers, 0);
+            let t = session.cluster().unwrap().transport_stats();
+            assert!(t.bytes > 0, "the forward must actually cross the wire");
+        }
+    }
+}
+
+/// More shards than workers: the coordinator packs K shards onto N
+/// workers and the result stays bit-identical to both the monolithic
+/// and the in-process sharded run.
+#[test]
+fn cluster_forward_bit_identical_with_more_shards_than_workers() {
+    let baseline = builder(ModelId::Han).build().unwrap().run().unwrap();
+    let mut session = builder(ModelId::Han)
+        .partition(PartitionSpec::new(4))
+        .cluster(ClusterSpec::new(2))
+        .build()
+        .unwrap();
+    let run = session.run().unwrap();
+    assert_eq!(run.output.as_slice(), baseline.output.as_slice());
+    assert_eq!(session.cluster().unwrap().placement().len(), 4);
+}
+
+/// The cluster batch path (serve-style sampled batches grouped by owner
+/// shard) is bit-identical to the monolithic `run_batch`, with and
+/// without the per-shard reuse caches.
+#[test]
+fn cluster_batch_path_bit_identical_with_and_without_reuse() {
+    let ids: Vec<u32> = (0..24).collect();
+    for reuse in [false, true] {
+        let mk = |workers: Option<usize>| {
+            let mut b = builder(ModelId::Rgcn).sampling(SamplingSpec::uniform(usize::MAX, 1));
+            if reuse {
+                b = b.reuse(ReuseSpec::rows(1 << 12));
+            }
+            if let Some(n) = workers {
+                b = b.cluster(ClusterSpec::new(n));
+            }
+            b.build().unwrap()
+        };
+        let mut plain = mk(None);
+        let want_cold = plain.run_batch(&ids).unwrap();
+        let want_warm = plain.run_batch(&ids).unwrap();
+        assert_eq!(want_cold, want_warm, "reuse substitution must be bit-identical");
+        for workers in [1usize, 2, 4] {
+            let mut clustered = mk(Some(workers));
+            assert_eq!(
+                want_cold,
+                clustered.run_batch(&ids).unwrap(),
+                "cold cluster batch diverged at {workers} workers (reuse={reuse})"
+            );
+            assert_eq!(
+                want_warm,
+                clustered.run_batch(&ids).unwrap(),
+                "warm cluster batch diverged at {workers} workers (reuse={reuse})"
+            );
+            assert_eq!(clustered.cluster_stats().unwrap().waves, 2);
+            if reuse {
+                let stats = clustered.reuse_stats().unwrap();
+                assert!(
+                    stats.proj_hits > 0,
+                    "warm cluster batch must hit the per-shard caches: {stats:?}"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- determinism
+
+/// Same seed + same fault schedule → byte-identical outputs, identical
+/// frame counters, identical modeled reports. This is the acceptance
+/// bar for the whole sim: two fresh sessions with `FaultSpec::chaos(7)`
+/// must replay the exact same history.
+#[test]
+fn chaotic_runs_reproduce_exactly_from_the_seed() {
+    let mk = || {
+        builder(ModelId::Han)
+            .cluster(ClusterSpec::new(2).with_fault(FaultSpec::chaos(7)))
+            .build()
+            .unwrap()
+    };
+    let (mut a, mut b) = (mk(), mk());
+    let (run_a, run_b) = (a.run().unwrap(), b.run().unwrap());
+    assert_eq!(run_a.output.as_slice(), run_b.output.as_slice());
+    assert_eq!(a.cluster_stats(), b.cluster_stats());
+    assert_eq!(
+        a.cluster().unwrap().transport_stats(),
+        b.cluster().unwrap().transport_stats()
+    );
+    assert_eq!(a.cluster().unwrap().placement(), b.cluster().unwrap().placement());
+    // the schedule report is fully modeled (counters → ns), so it must
+    // reproduce verbatim — no raw wall-clock leaks into it
+    assert_eq!(run_a.report.summary(), run_b.report.summary());
+    // and chaos must not bend the results away from the monolithic run
+    let base = builder(ModelId::Han).build().unwrap().run().unwrap();
+    assert_eq!(run_a.output.as_slice(), base.output.as_slice());
+}
+
+/// Delayed and duplicated halos are deduplicated by `(from, seq)`: a
+/// dup/delay-only fault schedule leaves the results untouched while the
+/// transport counters prove the faults actually fired.
+#[test]
+fn duplicated_and_delayed_frames_are_deduplicated() {
+    let fault = FaultSpec {
+        seed: 11,
+        drop: 0.0,
+        dup: 0.35,
+        delay: 0.35,
+        delay_ns: Duration::from_millis(120).as_nanos() as u64,
+    };
+    let base = builder(ModelId::Magnn).build().unwrap().run().unwrap();
+    let mut session = builder(ModelId::Magnn)
+        .cluster(ClusterSpec::new(2).with_fault(fault))
+        .build()
+        .unwrap();
+    let run = session.run().unwrap();
+    assert_eq!(run.output.as_slice(), base.output.as_slice());
+    let t = session.cluster().unwrap().transport_stats();
+    assert!(t.duplicated > 0, "dup probability .35 never fired? {t:?}");
+    assert!(t.delayed > 0, "delay probability .35 never fired? {t:?}");
+    assert_eq!(t.dropped, 0);
+    assert_eq!(session.cluster_stats().unwrap().retired_workers, 0);
+}
+
+// ---------------------------------------------------------- failures
+
+/// A worker killed *mid-wave* (after a fixed number of sent frames, so
+/// the kill lands between a request and its reply) is detected by
+/// heartbeat silence; its shards re-place and the wave replays to a
+/// bit-identical result.
+#[test]
+fn mid_wave_kill_recovers_bit_identically() {
+    let base = builder(ModelId::Han).build().unwrap().run().unwrap();
+    let mut session = builder(ModelId::Han)
+        .cluster(ClusterSpec::new(2).kill_after_sends(6, 1))
+        .build()
+        .unwrap();
+    let run = session.run().unwrap();
+    assert_eq!(run.output.as_slice(), base.output.as_slice());
+    let stats = session.cluster_stats().unwrap();
+    assert_eq!(stats.retired_workers, 1, "the kill must be detected, not ridden out");
+    assert!(stats.replaced_shards >= 1);
+    assert!(session.cluster().unwrap().live_workers().len() == 1);
+}
+
+/// Kill one worker at *every* wave index of a 4-wave serve trace: each
+/// schedule must converge to the exact rows the no-fault trace (and the
+/// monolithic session) produces — the in-flight wave replays on the
+/// surviving worker and the later waves run on the new placement.
+#[test]
+fn kill_at_every_wave_index_of_a_serve_trace_recovers_bit_identically() {
+    let waves: Vec<Vec<u32>> = (0..4).map(|w| (w * 8..w * 8 + 8).collect()).collect();
+    let mk = |spec: Option<ClusterSpec>| {
+        let mut b = builder(ModelId::Rgcn).sampling(SamplingSpec::uniform(usize::MAX, 1));
+        if let Some(spec) = spec {
+            b = b.cluster(spec);
+        }
+        b.build().unwrap()
+    };
+    let mut plain = mk(None);
+    let want: Vec<_> = waves.iter().map(|ids| plain.run_batch(ids).unwrap()).collect();
+    for kill_wave in 1..=4u64 {
+        let mut session = mk(Some(ClusterSpec::new(2).kill_at_wave(kill_wave, 0)));
+        for (i, ids) in waves.iter().enumerate() {
+            let got = session.run_batch(ids).unwrap();
+            assert_eq!(
+                got, want[i],
+                "wave {} diverged when worker 0 dies at wave {kill_wave}",
+                i + 1
+            );
+        }
+        let stats = session.cluster_stats().unwrap();
+        assert_eq!(stats.waves, 4);
+        assert_eq!(stats.retired_workers, 1, "kill at wave {kill_wave} undetected");
+        // every shard ended up on the surviving worker
+        assert!(session.cluster().unwrap().placement().iter().all(|&w| w == 1));
+    }
+}
+
+/// An idle worker that stops heartbeating is retired by the idle pump
+/// alone (no wave in flight), and the session keeps serving batches
+/// bit-identically afterwards.
+#[test]
+fn idle_worker_retirement_does_not_fail_later_batches() {
+    let ids: Vec<u32> = (0..16).collect();
+    let mut plain =
+        builder(ModelId::Rgcn).sampling(SamplingSpec::uniform(usize::MAX, 1)).build().unwrap();
+    let want = plain.run_batch(&ids).unwrap();
+    let mut session = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .cluster(ClusterSpec::new(2))
+        .build()
+        .unwrap();
+    assert_eq!(want, session.run_batch(&ids).unwrap());
+    // the worker dies while the cluster is idle; only heartbeat silence
+    // (pumped on virtual time) reveals it
+    let cluster = session.cluster_mut().unwrap();
+    cluster.kill_worker(0);
+    cluster.run_idle(16).unwrap();
+    assert!(!cluster.live_workers().contains(&0), "silent worker not retired");
+    assert_eq!(session.cluster_stats().unwrap().retired_workers, 1);
+    assert_eq!(want, session.run_batch(&ids).unwrap(), "post-retirement batch diverged");
+}
+
+/// `Session::handle_worker_down` — the between-waves control path the
+/// async server uses — retires the worker, re-places its shards and
+/// keeps the batch results bit-identical.
+#[test]
+fn handle_worker_down_between_waves_keeps_results_identical() {
+    let ids: Vec<u32> = (0..16).collect();
+    let mut plain =
+        builder(ModelId::Rgcn).sampling(SamplingSpec::uniform(usize::MAX, 1)).build().unwrap();
+    let want = plain.run_batch(&ids).unwrap();
+    let mut session = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .cluster(ClusterSpec::new(2))
+        .build()
+        .unwrap();
+    assert_eq!(want, session.run_batch(&ids).unwrap());
+    let moved = session.handle_worker_down(0).unwrap();
+    assert!(moved >= 1, "worker 0 owned at least one shard");
+    assert_eq!(want, session.run_batch(&ids).unwrap(), "post-re-placement batch diverged");
+    // retiring the last survivor is refused, not honored
+    assert!(session.handle_worker_down(1).is_err());
+}
+
+/// The async server treats worker loss as a between-waves control
+/// event: queued requests before and after `report_worker_down` all
+/// complete, and the ack reports the re-placed shard count.
+#[test]
+fn async_server_survives_worker_down_with_queued_requests() {
+    let clock = Arc::new(VirtualClock::new());
+    let config = ServingConfig { max_batch: 4, ..Default::default() };
+    let b = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .cluster(ClusterSpec::new(2));
+    let server = AsyncServer::start_session_with_clock(config, clock, b);
+    let before: Vec<_> =
+        (0..4).map(|i| server.submit(&[i], SubmitOpts::default()).unwrap()).collect();
+    let ack = server.report_worker_down(0).unwrap();
+    let after: Vec<_> =
+        (4..8).map(|i| server.submit(&[i], SubmitOpts::default()).unwrap()).collect();
+    for rx in before.into_iter().chain(after) {
+        let rows = rx.recv_timeout(RECV).unwrap().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].iter().all(|v| v.is_finite()));
+    }
+    let moved = ack.recv_timeout(RECV).unwrap().expect("worker-down ack");
+    assert!(moved >= 1, "shards must re-place off the dead worker");
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 8, "no queued request may be failed by the retirement");
+}
+
+// ---------------------------------------------------- reuse accounting
+
+/// Regression for the `ReuseStats::absorb` double-count: retiring a
+/// worker folds its dead lane's counters into the session exactly once,
+/// so the aggregate is unchanged by the kill itself and stays monotone
+/// as the rebuilt (cold) lane warms back up.
+#[test]
+fn reuse_counters_survive_a_kill_without_double_counting() {
+    let ids: Vec<u32> = (0..24).collect();
+    let mut session = builder(ModelId::Rgcn)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .reuse(ReuseSpec::rows(1 << 12))
+        .cluster(ClusterSpec::new(2))
+        .build()
+        .unwrap();
+    let want = session.run_batch(&ids).unwrap();
+    assert_eq!(want, session.run_batch(&ids).unwrap());
+    let before = session.reuse_stats().unwrap();
+    assert!(before.proj_hits > 0, "warm repeat must hit: {before:?}");
+
+    // the kill/re-place cycle must not change a single counter: the dead
+    // lane is absorbed once and replaced by a zeroed lane
+    session.handle_worker_down(0).unwrap();
+    let after = session.reuse_stats().unwrap();
+    assert_eq!(before, after, "retirement changed the aggregate reuse counters");
+
+    // the replacement lane starts cold for the moved shard, so a repeat
+    // adds misses (cold refill) and hits (surviving lane) monotonically
+    assert_eq!(want, session.run_batch(&ids).unwrap());
+    let warmed = session.reuse_stats().unwrap();
+    assert!(warmed.proj_hits >= after.proj_hits);
+    assert!(warmed.proj_misses >= after.proj_misses);
+    assert!(
+        warmed.proj_hits + warmed.proj_misses > after.proj_hits + after.proj_misses,
+        "the post-kill batch must perform lookups"
+    );
+}

@@ -595,6 +595,92 @@ fn prop_update_batching_converges_bit_identically() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Cluster properties (ISSUE 8 satellite): the wire codec round-trips
+// every message type bit-exactly (adversarial f32 payloads included),
+// and the coordinator's placement stays a total function onto live
+// workers through any seeded sequence of kills, drains and retirements.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_wire_codec_roundtrips_every_message_type() {
+    use hgnn_char::cluster::wire::{decode_frame, encode_frame, Frame};
+    use hgnn_char::testutil::MessageStrategy;
+    // byte-level round trip: encode → decode → re-encode must reproduce
+    // the original buffer exactly. Comparing bytes (not `==`) makes the
+    // property hold for NaN / ±0.0 / subnormal payloads too, which is
+    // precisely the bit-exactness the cluster-vs-monolith tests rely on.
+    check("wire codec roundtrip", 61, 300, &MessageStrategy::default(), |msg| {
+        let frame = Frame { seq: 9_000_000_017, from: 3, msg: msg.clone() };
+        let bytes = encode_frame(&frame);
+        // the length prefix accounts for every byte after itself
+        let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        if len != bytes.len() - 4 {
+            return false;
+        }
+        let decoded = match decode_frame(&bytes[4..]) {
+            Ok(f) => f,
+            Err(_) => return false,
+        };
+        decoded.seq == frame.seq
+            && decoded.from == frame.from
+            && decoded.msg.tag() == frame.msg.tag()
+            && decoded.msg.semantic_key() == frame.msg.semantic_key()
+            && encode_frame(&decoded) == bytes
+    });
+}
+
+#[test]
+fn prop_placement_total_onto_live_workers_under_failures() {
+    use hgnn_char::cluster::{Cluster, ClusterSpec, SimTransport};
+    /// (workers, shards, ops): each op is (kind, worker) with kind 0 =
+    /// coordinator retire, 1 = drain, 2 = kill + idle detection.
+    struct OpsStrategy;
+    impl Strategy for OpsStrategy {
+        type Value = (usize, usize, Vec<(u8, usize)>);
+        fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+            let workers = 2 + rng.gen_range(4);
+            let shards = 1 + rng.gen_range(10);
+            let ops = (0..1 + rng.gen_range(8))
+                .map(|_| (rng.gen_range(3) as u8, rng.gen_range(workers)))
+                .collect();
+            (workers, shards, ops)
+        }
+    }
+    check("placement covers live workers", 62, 40, &OpsStrategy, |(workers, shards, ops)| {
+        let spec = ClusterSpec::new(*workers);
+        let mut c = Cluster::new(spec, *shards, Box::new(SimTransport::new())).unwrap();
+        for &(kind, w) in ops {
+            match kind {
+                // the coordinator may refuse (last one standing) — that
+                // refusal is itself part of the invariant
+                0 => drop(c.retire_worker(w)),
+                1 => drop(c.drain_worker(w)),
+                // a silent death is only observable via heartbeat
+                // timeout; 8 idle pumps cross the 200ms threshold
+                _ => {
+                    c.kill_worker(w);
+                    c.run_idle(8).unwrap();
+                }
+            }
+            // after every step: placement is total over the shards and
+            // every owner is un-retired; and whenever any live worker
+            // remains, every owner is live (a dead owner may persist
+            // only in the nowhere-to-re-place endgame)
+            let active = c.active_workers();
+            let live = c.live_workers();
+            let total = c.placement().len() == *shards;
+            let unretired = c.placement().iter().all(|&o| active.contains(&o));
+            let on_live =
+                live.is_empty() || c.placement().iter().all(|&o| live.contains(&o));
+            if !(total && unretired && on_live && !active.is_empty()) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
 #[test]
 fn prop_untouched_reuse_entries_survive_a_flip() {
     use hgnn_char::dynamic::{DynamicSpec, GraphUpdate};
