@@ -1,0 +1,85 @@
+//! Bench: **mini-batch training — fused vs unfused backward schedule**.
+//!
+//! The training-side question from the kernel-fusion minibatch work:
+//! the backward pass launches a swarm of small per-relation gradient
+//! kernels (grad-SpMM per subgraph, per-metapath attention backward),
+//! and at serving-style batch sizes the dispatch overhead rivals the
+//! math. The fused schedule batches adjacent per-relation gradient
+//! kernels of a stage into one dispatch per kernel name. Each sweep
+//! cell trains one seeded epoch twice — fused and unfused — from the
+//! same initial weights, so the gradient math is bit-identical and the
+//! only difference is the dispatch count and its wall-time echo.
+//! Expected qualitative trend: fused backward dispatches are
+//! **strictly fewer** for every model × batch size, with the gap
+//! widening for models with more subgraphs (MAGNN > HAN > R-GCN) and
+//! smaller batches (more batches per epoch → more swarms to merge).
+//!
+//! Run: `cargo bench --bench train_epoch`
+
+use hgnn_char::bench::header;
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::models::ModelId;
+use hgnn_char::session::Session;
+use hgnn_char::train::{OptimizerSpec, TrainConfig};
+use hgnn_char::util::human_time;
+
+fn scale() -> DatasetScale {
+    if std::env::var("QUICK_BENCH").is_ok() {
+        DatasetScale::ci()
+    } else {
+        DatasetScale::factor(0.25)
+    }
+}
+
+fn epoch(model: ModelId, batch: usize, fused: bool) -> (f64, usize, u64) {
+    let config = TrainConfig {
+        epochs: 1,
+        batch,
+        optimizer: OptimizerSpec::sgd(0.05),
+        seed: 0x7A11,
+        classes: 4,
+        fused,
+    };
+    let mut session = Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(scale())
+        .model(model)
+        .build()
+        .unwrap();
+    session.init_weights(config.seed).unwrap();
+    let report = session.fit(&config).unwrap();
+    let e = &report.epochs[0];
+    (e.loss, e.backward_dispatches, e.epoch_nanos)
+}
+
+fn main() {
+    header(
+        "training epoch: fused vs unfused backward kernel schedule",
+        "one seeded epoch per cell, identical init; dispatch counts are exact, times are wall",
+    );
+    let batches: &[(usize, &str)] = &[(32, "32"), (128, "128"), (usize::MAX, "full")];
+    let mut all_fewer = true;
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        println!("-- {model:?} --");
+        for &(batch, label) in batches {
+            let (loss_f, disp_f, nanos_f) = epoch(model, batch, true);
+            let (loss_u, disp_u, nanos_u) = epoch(model, batch, false);
+            let fewer = disp_f < disp_u;
+            all_fewer &= fewer;
+            let bitwise = if loss_f.to_bits() == loss_u.to_bits() { "yes" } else { "NO" };
+            println!(
+                "  batch {label:>4}  fused {disp_f:>5} dispatches / {:>9}   unfused {disp_u:>5} / \
+                 {:>9}   loss bit-identical: {bitwise}",
+                human_time(nanos_f as f64),
+                human_time(nanos_u as f64),
+            );
+            if !fewer {
+                println!("     ^ fused NOT fewer ({disp_f} vs {disp_u})");
+            }
+        }
+    }
+    println!(
+        "\n-> fused backward dispatches strictly fewer in every cell: {}",
+        if all_fewer { "yes" } else { "NO (fusion regression)" }
+    );
+}

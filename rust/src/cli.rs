@@ -216,6 +216,28 @@ impl Args {
         Ok(Some(UpdateStreamSpec { path, epoch_every }))
     }
 
+    /// Training hyperparameters from `train --epochs N --lr X
+    /// --optimizer sgd|adam --batch B [--seed S] [--classes C]
+    /// [--no-fuse]`. Degenerate values (zero epochs/batch/classes,
+    /// non-positive or non-finite learning rate, unknown optimizer
+    /// name) are rejected at parse level, mirroring `--shards`.
+    pub fn train_config(&self) -> Result<crate::train::TrainConfig> {
+        let defaults = crate::train::TrainConfig::default();
+        let lr = self.flag_f64("lr", 0.05)? as f32;
+        let optimizer =
+            crate::train::OptimizerSpec::parse(&self.flag_str("optimizer", "sgd"), lr)?;
+        let config = crate::train::TrainConfig {
+            epochs: self.flag_usize("epochs", defaults.epochs)?,
+            batch: self.flag_usize("batch", defaults.batch)?,
+            optimizer,
+            seed: self.flag_usize("seed", defaults.seed as usize)? as u64,
+            classes: self.flag_usize("classes", defaults.classes)?,
+            fused: !self.has("no-fuse"),
+        };
+        config.validate()?;
+        Ok(config)
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -322,6 +344,19 @@ COMMANDS:
                                    the epoch barrier while serving
       [--epoch-every N]            served batches between epoch flips
                                    (default 1; requires --update-stream)
+  train --model M --dataset D    mini-batch training on synthetic labels
+      [--epochs N]                 epochs to run (default 3)
+      [--lr X]                     learning rate (default 0.05)
+      [--optimizer sgd|adam]       update rule (default sgd)
+      [--batch B]                  seeds per mini-batch (default 256)
+      [--seed S] [--classes C]     task seed / label classes
+      [--no-fuse]                  dispatch the backward kernel swarm
+                                   unfused (default: one dispatch per
+                                   kernel per stage)
+      [--fanout K]                 sampled mini-batches, K neighbors
+                                   per node per layer
+      [--sample-layers L]          sampling depth (default 1)
+      [--shards K] [--threads N]   compose exactly as under run
   help                           this text
 ";
 
@@ -615,9 +650,55 @@ mod tests {
 
     #[test]
     fn usage_mentions_every_command() {
-        for cmd in ["list", "run", "figure", "table", "timeline", "artifacts", "serve"] {
+        for cmd in ["list", "run", "figure", "table", "timeline", "artifacts", "serve", "train"] {
             assert!(USAGE.contains(cmd), "usage missing {cmd}");
         }
+    }
+
+    #[test]
+    fn train_config_defaults_and_values() {
+        // absent flags inherit the TrainConfig defaults (fused on)
+        let cfg = parse("train").train_config().unwrap();
+        assert_eq!(cfg.epochs, crate::train::TrainConfig::default().epochs);
+        assert!(cfg.fused);
+        assert_eq!(cfg.optimizer, crate::train::OptimizerSpec::sgd(0.05));
+        // every knob binds, both spellings
+        let cfg = parse(
+            "train --epochs 5 --lr=0.01 --optimizer adam --batch=32 \
+             --seed 9 --classes=3 --no-fuse",
+        )
+        .train_config()
+        .unwrap();
+        assert_eq!(cfg.epochs, 5);
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(cfg.optimizer, crate::train::OptimizerSpec::adam(0.01));
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.classes, 3);
+        assert!(!cfg.fused);
+    }
+
+    #[test]
+    fn train_config_rejects_degenerate_values() {
+        assert!(parse("train --epochs 0").train_config().is_err());
+        assert!(parse("train --batch=0").train_config().is_err());
+        assert!(parse("train --classes 1").train_config().is_err());
+        assert!(parse("train --lr 0").train_config().is_err());
+        assert!(parse("train --lr=-0.5").train_config().is_err());
+        assert!(parse("train --lr nan").train_config().is_err());
+        assert!(parse("train --optimizer lion").train_config().is_err());
+        // non-numeric values are parse errors, not silent defaults
+        assert!(parse("train --epochs nah").train_config().is_err());
+        // bare switch (no value) rejected: "true" is not a number
+        assert!(parse("train --lr").train_config().is_err());
+    }
+
+    #[test]
+    fn train_config_composes_with_threads_and_shards() {
+        let a = parse("train --epochs 2 --batch 16 --threads 4 --shards 2 --fanout 8");
+        assert!(a.train_config().is_ok());
+        assert_eq!(a.threads().unwrap(), Some(4));
+        assert_eq!(a.partition().unwrap().unwrap().shards, 2);
+        assert_eq!(a.flag_usize("fanout", 0).unwrap(), 8);
     }
 
     #[test]

@@ -196,6 +196,58 @@ fn sgemm_panel(
     }
 }
 
+/// `sgemm_tn`: `out = aᵀ · b` for `a: [k,m]`, `b: [k,n]`. DM-Type.
+///
+/// The backward pass's weight-gradient shape (`dW = Xᵀ·dH`). The
+/// transpose is materialized once (a DR-style repack, folded into the
+/// kernel's read bytes) and the blocked kernel reused, so every output
+/// element's k-accumulation order — and hence bit-identity across
+/// thread counts — matches [`sgemm`] exactly.
+pub fn sgemm_tn(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> Result<Tensor> {
+    let (ka, m) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb {
+        return Err(Error::shape(format!("sgemm_tn: a is {ka}x{m}, b is {kb}x{n}")));
+    }
+    let t0 = std::time::Instant::now();
+    let at = a.transposed();
+    let mut out = ctx.scratch_zeros(m, n);
+    sgemm_into(&at, b, blocking, &mut out);
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let counters = KernelCounters {
+        flops: gemm_flops(m, ka, n),
+        // A is read twice: once by the repack, once by the kernel
+        bytes_read: (2 * a.bytes() + b.bytes()) as u64,
+        bytes_written: out.bytes() as u64,
+    };
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos, None);
+    Ok(out)
+}
+
+/// `sgemm_nt`: `out = a · bᵀ` for `a: [m,k]`, `b: [n,k]`. DM-Type.
+///
+/// The backward pass's activation-gradient shape (`dX = dH·Wᵀ`); same
+/// materialize-then-reuse strategy as [`sgemm_tn`].
+pub fn sgemm_nt(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> Result<Tensor> {
+    let (m, ka) = a.shape();
+    let (n, kb) = b.shape();
+    if ka != kb {
+        return Err(Error::shape(format!("sgemm_nt: a is {m}x{ka}, b is {n}x{kb}")));
+    }
+    let t0 = std::time::Instant::now();
+    let bt = b.transposed();
+    let mut out = ctx.scratch_zeros(m, n);
+    sgemm_into(a, &bt, blocking, &mut out);
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let counters = KernelCounters {
+        flops: gemm_flops(m, ka, n),
+        bytes_read: (a.bytes() + 2 * b.bytes()) as u64,
+        bytes_written: out.bytes() as u64,
+    };
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos, None);
+    Ok(out)
+}
+
 /// Naive triple-loop reference (for correctness tests and the perf
 /// baseline in EXPERIMENTS.md §Perf).
 pub fn sgemm_naive(a: &Tensor, b: &Tensor) -> Tensor {
@@ -287,6 +339,44 @@ mod tests {
         assert_eq!(out.get(0, 0), 12.0);
         assert_eq!(out.get(1, 1), 22.0);
         assert!(sgemm_bias(&mut ctx, &a, &b, &[1.0], GemmBlocking::default()).is_err());
+    }
+
+    #[test]
+    fn transposed_variants_match_naive() {
+        let mut rng = Pcg32::seeded(44);
+        let blk = GemmBlocking::default();
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (33, 17, 9), (65, 130, 31)] {
+            let a = Tensor::randn(k, m, 1.0, &mut rng); // stored kxm
+            let b = Tensor::randn(k, n, 1.0, &mut rng);
+            let mut ctx = Ctx::default();
+            let tn = sgemm_tn(&mut ctx, &a, &b, blk).unwrap();
+            let naive = sgemm_naive(&a.transposed(), &b);
+            assert!(
+                tn.allclose(&naive, 1e-4, 1e-5),
+                "tn mismatch at {m}x{k}x{n}: {}",
+                tn.max_abs_diff(&naive).unwrap()
+            );
+
+            let a2 = Tensor::randn(m, k, 1.0, &mut rng);
+            let b2 = Tensor::randn(n, k, 1.0, &mut rng); // stored nxk
+            let nt = sgemm_nt(&mut ctx, &a2, &b2, blk).unwrap();
+            let naive = sgemm_naive(&a2, &b2.transposed());
+            assert!(
+                nt.allclose(&naive, 1e-4, 1e-5),
+                "nt mismatch at {m}x{k}x{n}: {}",
+                nt.max_abs_diff(&naive).unwrap()
+            );
+            assert!(ctx.events.iter().all(|e| e.name == "sgemm"));
+        }
+    }
+
+    #[test]
+    fn transposed_variants_reject_bad_shapes() {
+        let mut ctx = Ctx::default();
+        let a = Tensor::zeros(3, 2);
+        let b = Tensor::zeros(4, 5);
+        assert!(sgemm_tn(&mut ctx, &a, &b, GemmBlocking::default()).is_err());
+        assert!(sgemm_nt(&mut ctx, &a, &b, GemmBlocking::default()).is_err());
     }
 
     #[test]

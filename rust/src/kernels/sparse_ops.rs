@@ -216,6 +216,138 @@ pub fn edge_softmax(ctx: &mut Ctx, adj: &Csr, logits: &[f32]) -> Result<Vec<f32>
     Ok(weights)
 }
 
+/// Permutation mapping CSR nonzero order into the transposed CSR's
+/// nonzero order: original nonzero `e` of `adj` lands in slot `perm[e]`
+/// of `adj.transposed()`. Mirrors the counting-sort cursor walk of
+/// [`Csr::transposed`], so per-edge values (attention weights, edge
+/// gradients) can ride along with the topology through the backward
+/// pass's grad-SpMM: `w_t[perm[e]] = w[e]`.
+pub fn transpose_edge_perm(adj: &Csr) -> Vec<u32> {
+    let mut cursor = vec![0u32; adj.n_cols + 1];
+    for &c in &adj.indices {
+        cursor[c as usize + 1] += 1;
+    }
+    for i in 0..adj.n_cols {
+        cursor[i + 1] += cursor[i];
+    }
+    let mut perm = vec![0u32; adj.nnz()];
+    let mut e = 0usize;
+    for r in 0..adj.n_rows {
+        for &c in adj.row(r) {
+            perm[e] = cursor[c as usize];
+            cursor[c as usize] += 1;
+            e += 1;
+        }
+    }
+    perm
+}
+
+/// `SDDMMCoo` (gradient flavor): per-edge dot product between the
+/// destination node's row of `dst_feats` and the edge's own row of
+/// `edge_feats` — the attention-weight gradient `dα_e = ⟨dAgg[d_e],
+/// φ_e⟩` that the training-characterization work (arxiv 2407.11790)
+/// identifies as the SDDMM-shaped hot-spot of attention backward.
+/// Returns one scalar per nonzero in CSR order.
+pub fn sddmm_edge_dot(
+    ctx: &mut Ctx,
+    adj: &Csr,
+    dst_feats: &Tensor,
+    edge_feats: &Tensor,
+) -> Result<Vec<f32>> {
+    if dst_feats.rows() != adj.n_rows || edge_feats.rows() != adj.nnz() {
+        return Err(Error::shape(format!(
+            "sddmm_edge_dot: feats {}x{} / edge feats {}x{} vs adj {}x{} ({} nnz)",
+            dst_feats.rows(),
+            dst_feats.cols(),
+            edge_feats.rows(),
+            edge_feats.cols(),
+            adj.n_rows,
+            adj.n_cols,
+            adj.nnz()
+        )));
+    }
+    if dst_feats.cols() != edge_feats.cols() {
+        return Err(Error::shape(format!(
+            "sddmm_edge_dot: {} vs {} feature columns",
+            dst_feats.cols(),
+            edge_feats.cols()
+        )));
+    }
+    let f = dst_feats.cols();
+    let (out, nanos) = timed(|| {
+        let mut out = Vec::with_capacity(adj.nnz());
+        for d in 0..adj.n_rows {
+            let drow = dst_feats.row(d);
+            let lo = adj.indptr[d] as usize;
+            let hi = adj.indptr[d + 1] as usize;
+            for e in lo..hi {
+                let erow = edge_feats.row(e);
+                let mut acc = 0.0f32;
+                for (&x, &y) in drow.iter().zip(erow) {
+                    acc += x * y;
+                }
+                out.push(acc);
+            }
+        }
+        out
+    });
+    let nnz = adj.nnz() as u64;
+    let counters = KernelCounters {
+        flops: 2 * nnz * f as u64,
+        bytes_read: 2 * nnz * f as u64 * 4 + adj.indptr.len() as u64 * 4,
+        bytes_written: nnz * 4,
+    };
+    ctx.push("SDDMMCoo", KernelType::TopologyBased, counters, nanos, None);
+    Ok(out)
+}
+
+/// Backward of [`edge_softmax`]: given the forward's outputs `weights`
+/// (α, per nonzero in CSR order) and the upstream gradient `d_weights`
+/// (dα), produce the logit gradient per destination segment:
+/// `dlogit_e = α_e · (dα_e − Σ_{e' ∈ row(d)} α_{e'}·dα_{e'})`.
+pub fn edge_softmax_backward(
+    ctx: &mut Ctx,
+    adj: &Csr,
+    weights: &[f32],
+    d_weights: &[f32],
+) -> Result<Vec<f32>> {
+    if weights.len() != adj.nnz() || d_weights.len() != adj.nnz() {
+        return Err(Error::shape(format!(
+            "edge_softmax_backward: {} weights / {} grads for {} nonzeros",
+            weights.len(),
+            d_weights.len(),
+            adj.nnz()
+        )));
+    }
+    let (out, nanos) = timed(|| {
+        let mut out = vec![0.0f32; weights.len()];
+        for d in 0..adj.n_rows {
+            let lo = adj.indptr[d] as usize;
+            let hi = adj.indptr[d + 1] as usize;
+            if lo == hi {
+                continue;
+            }
+            let mut dot = 0.0f32;
+            for e in lo..hi {
+                dot += weights[e] * d_weights[e];
+            }
+            for e in lo..hi {
+                out[e] = weights[e] * (d_weights[e] - dot);
+            }
+        }
+        out
+    });
+    let nnz = adj.nnz() as u64;
+    let counters = KernelCounters {
+        // dot (2 ops) + sub + mul per element
+        flops: 4 * nnz,
+        bytes_read: 2 * nnz * 4 + adj.indptr.len() as u64 * 4,
+        bytes_written: nnz * 4,
+    };
+    ctx.push("edge_softmax", KernelType::TopologyBased, counters, nanos, None);
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +482,89 @@ mod tests {
         let adj = Coo::from_edges(1, 2, vec![(0, 0), (0, 1)]).unwrap().to_csr();
         let w = edge_softmax(&mut ctx, &adj, &[1000.0, 1000.0]).unwrap();
         assert!((w[0] - 0.5).abs() < 1e-6, "no overflow: {w:?}");
+    }
+
+    #[test]
+    fn transpose_edge_perm_matches_transposed_csr() {
+        // carrying a distinct value per edge through the permutation
+        // must land each value on the transposed CSR's matching nonzero
+        let mut rng = crate::util::Pcg32::seeded(7);
+        let mut edges = Vec::new();
+        for d in 0..40u32 {
+            for _ in 0..(1 + rng.gen_range(4)) {
+                edges.push((d, rng.gen_range(25) as u32));
+            }
+        }
+        let adj = Coo::from_edges(40, 25, edges).unwrap().to_csr();
+        let adj_t = adj.transposed();
+        let perm = transpose_edge_perm(&adj);
+        assert_eq!(perm.len(), adj.nnz());
+
+        // edge e of adj is (d, s); slot perm[e] of adj_t must be (s, d)
+        let mut e = 0usize;
+        for d in 0..adj.n_rows {
+            for &s in adj.row(d) {
+                let slot = perm[e] as usize;
+                assert_eq!(adj_t.indices[slot], d as u32, "edge {e}");
+                let owner = (0..adj_t.n_rows)
+                    .find(|&r| {
+                        (adj_t.indptr[r] as usize..adj_t.indptr[r + 1] as usize)
+                            .contains(&slot)
+                    })
+                    .unwrap();
+                assert_eq!(owner, s as usize, "edge {e}");
+                e += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn sddmm_edge_dot_values_and_checks() {
+        let mut ctx = Ctx::default();
+        let adj = adj_3x3();
+        // dst rows: d0=[1,0], d1=[0,2], d2=[3,3]
+        let dst = Tensor::from_vec(3, 2, vec![1.0, 0.0, 0.0, 2.0, 3.0, 3.0]).unwrap();
+        // one row per edge in CSR order: e0=(0,1), e1=(0,2), e2=(1,0)
+        let ef = Tensor::from_vec(3, 2, vec![2.0, 5.0, 4.0, 7.0, 1.0, 1.0]).unwrap();
+        let dots = sddmm_edge_dot(&mut ctx, &adj, &dst, &ef).unwrap();
+        // e0: [1,0]·[2,5]=2; e1: [1,0]·[4,7]=4; e2: [0,2]·[1,1]=2
+        assert_eq!(dots, vec![2.0, 4.0, 2.0]);
+        assert_eq!(ctx.events[0].name, "SDDMMCoo");
+        let bad = Tensor::zeros(2, 2);
+        assert!(sddmm_edge_dot(&mut ctx, &adj, &bad, &ef).is_err());
+        assert!(sddmm_edge_dot(&mut ctx, &adj, &dst, &bad).is_err());
+        let wide = Tensor::zeros(3, 5);
+        assert!(sddmm_edge_dot(&mut ctx, &adj, &dst, &wide).is_err());
+    }
+
+    #[test]
+    fn edge_softmax_backward_matches_finite_difference() {
+        let mut ctx = Ctx::default();
+        let adj = adj_3x3();
+        let logits = vec![0.3, -0.7, 1.2];
+        let d_weights = vec![0.9, -0.4, 0.25];
+        let alpha = edge_softmax(&mut ctx, &adj, &logits).unwrap();
+        let grad = edge_softmax_backward(&mut ctx, &adj, &alpha, &d_weights).unwrap();
+        // loss L = Σ d_weights[e] * softmax(logits)[e]; dL/dlogit via FD
+        let eps = 1e-3f32;
+        for e in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[e] += eps;
+            let mut lm = logits.clone();
+            lm[e] -= eps;
+            let wp = edge_softmax(&mut ctx, &adj, &lp).unwrap();
+            let wm = edge_softmax(&mut ctx, &adj, &lm).unwrap();
+            let lossp: f32 = wp.iter().zip(&d_weights).map(|(w, d)| w * d).sum();
+            let lossm: f32 = wm.iter().zip(&d_weights).map(|(w, d)| w * d).sum();
+            let fd = (lossp - lossm) / (2.0 * eps);
+            assert!(
+                (fd - grad[e]).abs() < 1e-3,
+                "edge {e}: fd {fd} vs analytic {}",
+                grad[e]
+            );
+        }
+        assert!(edge_softmax_backward(&mut ctx, &adj, &alpha[..2], &d_weights).is_err());
+        assert!(edge_softmax_backward(&mut ctx, &adj, &alpha, &d_weights[..2]).is_err());
     }
 
     #[test]

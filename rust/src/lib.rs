@@ -94,6 +94,7 @@ pub mod serving;
 pub mod session;
 pub mod tensor;
 pub mod testutil;
+pub mod train;
 pub mod util;
 
 /// Crate-wide error type.
@@ -192,6 +193,9 @@ pub mod prelude {
         AsyncServer, BatchReply, ServeError, ServingConfig, SubmitOpts,
     };
     pub use crate::tensor::Tensor;
+    pub use crate::train::{
+        EpochStats, FitReport, Optimizer, OptimizerSpec, TrainConfig, Trainer,
+    };
     pub use crate::{Error, Result};
     // The execution surface: Session + backends + policies.
     pub use crate::session::*;

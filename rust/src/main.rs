@@ -38,6 +38,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "timeline" => cmd_timeline(args),
         "artifacts" => cmd_artifacts(args),
         "serve" => cmd_serve(args),
+        "train" => cmd_train(args),
         "" | "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -344,6 +345,41 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
             e.outputs.len()
         );
     }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = ModelId::parse(&args.flag_str("model", "han"))?;
+    let dataset = DatasetId::parse(&args.flag_str("dataset", "imdb"))?;
+    let config = args.train_config()?;
+    let fanout = args.flag_usize("fanout", 0)?;
+    let layers = args.flag_usize("sample-layers", 1)?;
+    let mut builder = Session::builder().dataset(dataset).scale(args.scale()?).model(model);
+    if let Some(t) = args.threads()? {
+        builder = builder.threads(t);
+        println!("worker pool: {t} thread(s)");
+    }
+    if fanout > 0 {
+        builder = builder.sampling(SamplingSpec::uniform(fanout, layers));
+        println!("mini-batch sampling: fanout {fanout}, {layers} layer(s)");
+    }
+    if let Some(spec) = args.partition()? {
+        builder = builder.partition(spec);
+        println!("shards: {} ({} thread(s))", spec.shards, spec.threads);
+    }
+    let mut session = builder.build()?;
+    println!("{}", session.graph().stats_line());
+    println!("{}", session.plan().describe(session.graph()));
+    session.init_weights(config.seed)?;
+    println!(
+        "training: {} epoch(s), batch {}, {:?}, backward schedule {}",
+        config.epochs,
+        config.batch,
+        config.optimizer,
+        if config.fused { "fused" } else { "unfused" }
+    );
+    let report = session.fit(&config)?;
+    println!("\n{}", report::training_table(&report));
     Ok(())
 }
 

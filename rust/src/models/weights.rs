@@ -134,6 +134,66 @@ impl ModelWeights {
         );
     }
 
+    /// A structurally identical weight set with every parameter zeroed —
+    /// the shape of a gradient accumulator or an optimizer moment buffer.
+    pub fn zeros_like(&self) -> ModelWeights {
+        ModelWeights {
+            proj: self
+                .proj
+                .iter()
+                .map(|(&k, t)| (k, Tensor::zeros(t.rows(), t.cols())))
+                .collect(),
+            embed: self
+                .embed
+                .iter()
+                .map(|(&k, t)| (k, Tensor::zeros(t.rows(), t.cols())))
+                .collect(),
+            attn_l: self.attn_l.iter().map(|v| vec![0.0; v.len()]).collect(),
+            attn_r: self.attn_r.iter().map(|v| vec![0.0; v.len()]).collect(),
+            inst_attn: self
+                .inst_attn
+                .iter()
+                .map(|t| Tensor::zeros(t.rows(), t.cols()))
+                .collect(),
+            sem_w: self.sem_w.as_ref().map(|t| Tensor::zeros(t.rows(), t.cols())),
+            sem_b: vec![0.0; self.sem_b.len()],
+            sem_q: self.sem_q.as_ref().map(|t| Tensor::zeros(t.rows(), t.cols())),
+        }
+    }
+
+    /// Every parameter group as a flat slice, in a fixed deterministic
+    /// order (proj by type id, embed by type id, attn_l, attn_r,
+    /// inst_attn, sem_w, sem_b, sem_q). Two structurally identical
+    /// weight sets — e.g. weights, their gradients from
+    /// [`ModelWeights::zeros_like`], and optimizer moments — zip
+    /// group-for-group, which is what the optimizer step relies on.
+    pub fn params(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = Vec::new();
+        out.extend(self.proj.values().map(|t| t.as_slice()));
+        out.extend(self.embed.values().map(|t| t.as_slice()));
+        out.extend(self.attn_l.iter().map(|v| v.as_slice()));
+        out.extend(self.attn_r.iter().map(|v| v.as_slice()));
+        out.extend(self.inst_attn.iter().map(|t| t.as_slice()));
+        out.extend(self.sem_w.as_ref().map(|t| t.as_slice()));
+        out.push(self.sem_b.as_slice());
+        out.extend(self.sem_q.as_ref().map(|t| t.as_slice()));
+        out
+    }
+
+    /// Mutable variant of [`ModelWeights::params`], same group order.
+    pub fn params_mut(&mut self) -> Vec<&mut [f32]> {
+        let mut out: Vec<&mut [f32]> = Vec::new();
+        out.extend(self.proj.values_mut().map(|t| t.as_mut_slice()));
+        out.extend(self.embed.values_mut().map(|t| t.as_mut_slice()));
+        out.extend(self.attn_l.iter_mut().map(|v| v.as_mut_slice()));
+        out.extend(self.attn_r.iter_mut().map(|v| v.as_mut_slice()));
+        out.extend(self.inst_attn.iter_mut().map(|t| t.as_mut_slice()));
+        out.extend(self.sem_w.as_mut().map(|t| t.as_mut_slice()));
+        out.push(self.sem_b.as_mut_slice());
+        out.extend(self.sem_q.as_mut().map(|t| t.as_mut_slice()));
+        out
+    }
+
     /// Total parameter count.
     pub fn param_count(&self) -> usize {
         let mut n = 0;
@@ -215,6 +275,33 @@ mod tests {
         grown.extend_embed(m_ty, old, &cfg);
         assert_eq!(grown.embed[&m_ty].rows(), old + 2);
         grown.extend_embed(999, 10, &cfg);
+    }
+
+    #[test]
+    fn zeros_like_and_params_align() {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let cfg = ModelConfig::default();
+        for plan in [
+            models::rgcn_plan(&hg, &cfg).unwrap(),
+            models::han_plan(&hg, &cfg).unwrap(),
+            models::magnn_plan(&hg, &cfg).unwrap(),
+        ] {
+            let mut w = plan.weights.clone();
+            let z = w.zeros_like();
+            assert_eq!(z.param_count(), w.param_count());
+            assert!(z.params().iter().all(|g| g.iter().all(|&v| v == 0.0)));
+            // group-for-group zip: same count, same lengths, fixed order
+            let wp = w.params();
+            let zp = z.params();
+            assert_eq!(wp.len(), zp.len());
+            for (a, b) in wp.iter().zip(&zp) {
+                assert_eq!(a.len(), b.len());
+            }
+            let total: usize = wp.iter().map(|g| g.len()).sum();
+            assert_eq!(total, w.param_count());
+            drop(wp);
+            assert_eq!(w.params_mut().len(), zp.len());
+        }
     }
 
     #[test]

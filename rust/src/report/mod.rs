@@ -235,6 +235,29 @@ pub fn sweep_series(title: &str, xlabel: &str, ylabel: &str, pts: &[(f64, f64)])
     out
 }
 
+/// Per-epoch training table (loss, accuracy, backward dispatches,
+/// wall time) — the `cli train` output and the fused-schedule evidence
+/// the training bench prints.
+pub fn training_table(report: &crate::train::FitReport) -> String {
+    let mut t = Table::new(&["epoch", "loss", "accuracy", "batches", "bwd dispatches", "time"]);
+    for e in &report.epochs {
+        t.row(&[
+            format!("{}", e.epoch),
+            format!("{:.4}", e.loss),
+            format!("{:.3}", e.accuracy),
+            format!("{}", e.batches),
+            format!("{}", e.backward_dispatches),
+            crate::util::fmt::human_time(e.epoch_nanos as f64),
+        ]);
+    }
+    let trend = if report.monotonic_loss() {
+        "monotonically decreasing"
+    } else {
+        "non-monotone"
+    };
+    format!("per-epoch training metrics:\n{}loss trend: {trend}\n", t.render())
+}
+
 /// Group modeled stage times over several runs into a map for averaging.
 pub fn average_stage_pct(profiles: &[&Profile]) -> BTreeMap<StageId, f64> {
     let mut acc: BTreeMap<StageId, f64> = BTreeMap::new();
@@ -323,6 +346,25 @@ mod tests {
         }
         let total: f64 = avg.values().sum();
         assert!((total - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn training_table_lists_epochs_and_trend() {
+        let e = |epoch: usize, loss: f64| crate::train::EpochStats {
+            epoch,
+            loss,
+            accuracy: 0.5,
+            batches: 2,
+            examples: 8,
+            backward_dispatches: 12,
+            epoch_nanos: 1_500,
+        };
+        let report = crate::train::FitReport { epochs: vec![e(1, 1.4), e(2, 1.2)] };
+        let s = training_table(&report);
+        assert!(s.contains("1.4000") && s.contains("1.2000"));
+        assert!(s.contains("monotonically decreasing"));
+        let bad = crate::train::FitReport { epochs: vec![e(1, 1.0), e(2, 1.1)] };
+        assert!(training_table(&bad).contains("non-monotone"));
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::kernels::Ctx;
 use crate::models::ModelPlan;
 use crate::runtime::{ell_inputs, ArtifactEntry, CompiledArtifact, PjrtRuntime};
 use crate::tensor::Tensor;
+use crate::train::backward::{self, Grads, Tape};
 use crate::{Error, Result};
 
 /// Per-type projected features (stage-② output), keyed by node type id.
@@ -136,6 +137,56 @@ pub trait ExecBackend: std::fmt::Debug {
         Ok(None)
     }
 
+    /// Training forward: run stages ②–④ saving the activations the
+    /// backward stages need. Backends without a backward path (the
+    /// default) report a config error; training then requires the
+    /// native backend.
+    fn forward_tape(&self, _ctx: &mut Ctx, _plan: &ModelPlan, _hg: &HeteroGraph) -> Result<Tape> {
+        Err(Error::config("backend has no backward path"))
+    }
+
+    /// Stage-④ backward: fold `d_out` through semantic aggregation,
+    /// accumulating semantic-weight gradients and returning one
+    /// per-subgraph NA-output gradient.
+    fn backward_semantic(
+        &self,
+        _ctx: &mut Ctx,
+        _plan: &ModelPlan,
+        _tape: &Tape,
+        _d_out: &Tensor,
+        _grads: &mut Grads,
+    ) -> Result<Vec<Tensor>> {
+        Err(Error::config("backend has no backward path"))
+    }
+
+    /// Stage-③ backward for one subgraph: grad-SpMM over the transposed
+    /// sub-CSR plus attention backward, accumulating attention-weight
+    /// and projected-feature gradients.
+    fn backward_neighbor(
+        &self,
+        _ctx: &mut Ctx,
+        _plan: &ModelPlan,
+        _subgraph: usize,
+        _tape: &Tape,
+        _d_na: &Tensor,
+        _grads: &mut Grads,
+    ) -> Result<()> {
+        Err(Error::config("backend has no backward path"))
+    }
+
+    /// Stage-② backward: projection-weight gradients as sgemm against
+    /// the input features (and embedding-table gradients where the type
+    /// is learned).
+    fn backward_projection(
+        &self,
+        _ctx: &mut Ctx,
+        _plan: &ModelPlan,
+        _hg: &HeteroGraph,
+        _grads: &mut Grads,
+    ) -> Result<()> {
+        Err(Error::config("backend has no backward path"))
+    }
+
     /// Thread-safe view of this backend, used by real-thread parallel
     /// schedules. `None` (the default) makes the session fall back to
     /// virtual-worker execution for parallel policies.
@@ -220,6 +271,43 @@ impl ExecBackend for SyncAsExec<'_> {
 
     fn run_full(&self, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Option<Tensor>> {
         self.0.run_full(plan, hg)
+    }
+
+    fn forward_tape(&self, ctx: &mut Ctx, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Tape> {
+        self.0.forward_tape(ctx, plan, hg)
+    }
+
+    fn backward_semantic(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        tape: &Tape,
+        d_out: &Tensor,
+        grads: &mut Grads,
+    ) -> Result<Vec<Tensor>> {
+        self.0.backward_semantic(ctx, plan, tape, d_out, grads)
+    }
+
+    fn backward_neighbor(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        subgraph: usize,
+        tape: &Tape,
+        d_na: &Tensor,
+        grads: &mut Grads,
+    ) -> Result<()> {
+        self.0.backward_neighbor(ctx, plan, subgraph, tape, d_na, grads)
+    }
+
+    fn backward_projection(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        grads: &mut Grads,
+    ) -> Result<()> {
+        self.0.backward_projection(ctx, plan, hg, grads)
     }
 
     fn as_sync(&self) -> Option<&dyn SyncExecBackend> {
@@ -332,6 +420,43 @@ impl ExecBackend for NativeBackend {
         na_results: &[Tensor],
     ) -> Result<Tensor> {
         stages::semantic_aggregation(ctx, plan, na_results, self.blocking)
+    }
+
+    fn forward_tape(&self, ctx: &mut Ctx, plan: &ModelPlan, hg: &HeteroGraph) -> Result<Tape> {
+        backward::forward_tape(ctx, plan, hg, self.blocking)
+    }
+
+    fn backward_semantic(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        tape: &Tape,
+        d_out: &Tensor,
+        grads: &mut Grads,
+    ) -> Result<Vec<Tensor>> {
+        backward::backward_semantic(ctx, plan, tape, d_out, grads, self.blocking)
+    }
+
+    fn backward_neighbor(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        subgraph: usize,
+        tape: &Tape,
+        d_na: &Tensor,
+        grads: &mut Grads,
+    ) -> Result<()> {
+        backward::backward_neighbor(ctx, plan, subgraph, tape, d_na, grads, self.blocking)
+    }
+
+    fn backward_projection(
+        &self,
+        ctx: &mut Ctx,
+        plan: &ModelPlan,
+        hg: &HeteroGraph,
+        grads: &mut Grads,
+    ) -> Result<()> {
+        backward::backward_projection(ctx, plan, hg, grads, self.blocking)
     }
 
     fn as_sync(&self) -> Option<&dyn SyncExecBackend> {

@@ -55,6 +55,8 @@ use crate::profiler::Profile;
 use crate::reuse::{ReuseCache, ReuseStats};
 use crate::sampler::{NeighborSampler, SampledSubgraph};
 use crate::tensor::Tensor;
+use crate::train::{self, EpochStats, FitReport, TrainConfig, Trainer};
+use crate::util::Pcg32;
 use crate::{Error, Result};
 
 pub use backend::{
@@ -1299,6 +1301,161 @@ impl Session {
             state.na_cache = None;
         }
         Ok(())
+    }
+
+    /// Re-initialize the plan's weights deterministically from a seed
+    /// (the same PCG streams as plan construction, so two sessions
+    /// seeded alike start bit-identical). Routed through
+    /// [`Session::set_weights`], so cached outputs and reuse lanes
+    /// invalidate like any other weight swap.
+    pub fn init_weights(&mut self, seed: u64) -> Result<()> {
+        let config = ModelConfig { seed, ..self.plan.config.clone() };
+        let weights =
+            ModelWeights::init(self.plan.model, &self.hg, &self.plan.subgraphs, &config);
+        self.set_weights(weights)
+    }
+
+    /// Build a [`Trainer`] for this session's model (validates the
+    /// config and seeds the classifier head + optimizer state).
+    pub fn trainer(&self, config: TrainConfig) -> Result<Trainer> {
+        Trainer::new(config, &self.plan.weights, self.plan.config.hidden_dim)
+    }
+
+    /// Run one mini-batch training epoch under the session's worker-pool
+    /// cap: a seeded shuffle of the target nodes, chunked into batches;
+    /// each batch runs forward (through the [`NeighborSampler`] when the
+    /// session has one, full-graph otherwise), softmax cross-entropy
+    /// over the trainer's classifier head, the staged backward
+    /// (fused per [`TrainConfig::fused`]), and an optimizer step applied
+    /// via [`Session::set_weights`] — so the reuse caches invalidate
+    /// exactly as on any weight swap. Loss/accuracy are measured before
+    /// each step.
+    pub fn train_epoch(&mut self, tr: &mut Trainer) -> Result<EpochStats> {
+        let threads = self.threads;
+        Self::with_pool(threads, || self.train_epoch_unscoped(tr))
+    }
+
+    fn train_epoch_unscoped(&mut self, tr: &mut Trainer) -> Result<EpochStats> {
+        let t0 = Instant::now();
+        // training events are counted per batch, never drained into a
+        // profile — drop the previous epoch's so scratch stays bounded
+        self.scratch.events.clear();
+        let cfg = tr.config().clone();
+        let count = self.hg.node_type(self.plan.target).count;
+        if count == 0 {
+            return Err(Error::config("train: target type has no nodes"));
+        }
+        let mut order: Vec<u32> = (0..count as u32).collect();
+        Pcg32::new(cfg.seed, 0x8000 + tr.epoch() as u64).shuffle(&mut order);
+        let bsz = cfg.batch.min(count);
+
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut examples = 0usize;
+        let mut batches = 0usize;
+        let mut dispatches = 0usize;
+
+        for batch in order.chunks(bsz) {
+            // forward + loss + staged backward under field-disjoint
+            // borrows; the optimizer step below needs `self` whole again
+            let (loss, acc, n, disp, full_grads, head_grad) = {
+                let Session { backend, plan, hg, sampler, scratch, .. } = &mut *self;
+                match sampler.as_ref() {
+                    Some(sampler) => {
+                        let sampled = sampler.sample(hg, plan, batch)?;
+                        let labels: Vec<u32> = sampled
+                            .seeds
+                            .iter()
+                            .map(|&g| train::synthetic_label(cfg.seed, g, cfg.classes))
+                            .collect();
+                        let res = train::run_batch(
+                            backend.as_ref(),
+                            scratch,
+                            &sampled.plan,
+                            &sampled.graph,
+                            tr.head(),
+                            &sampled.seed_rows,
+                            &labels,
+                            cfg.fused,
+                        )?;
+                        // batch gradients are shaped like the sampled
+                        // plan (embedding rows are batch-local): scatter
+                        // them onto full-model shapes for the optimizer
+                        let mut full = plan.weights.zeros_like();
+                        train::fold_grads(&mut full, &res.grads.weights, Some(&sampled.nodes))?;
+                        (
+                            res.loss,
+                            res.accuracy,
+                            res.examples,
+                            res.backward_dispatches,
+                            full,
+                            res.head_grad,
+                        )
+                    }
+                    None => {
+                        let labels: Vec<u32> = batch
+                            .iter()
+                            .map(|&g| train::synthetic_label(cfg.seed, g, cfg.classes))
+                            .collect();
+                        let res = train::run_batch(
+                            backend.as_ref(),
+                            scratch,
+                            plan,
+                            hg,
+                            tr.head(),
+                            batch,
+                            &labels,
+                            cfg.fused,
+                        )?;
+                        (
+                            res.loss,
+                            res.accuracy,
+                            res.examples,
+                            res.backward_dispatches,
+                            res.grads.weights,
+                            res.head_grad,
+                        )
+                    }
+                }
+            };
+
+            let mut new_w = self.plan.weights.clone();
+            {
+                let Trainer { head, opt, .. } = tr;
+                opt.step(&mut new_w, head, &full_grads, &head_grad)?;
+            }
+            self.set_weights(new_w)?;
+
+            loss_sum += loss * n as f64;
+            acc_sum += acc * n as f64;
+            examples += n;
+            batches += 1;
+            dispatches += disp;
+        }
+
+        tr.epoch += 1;
+        Ok(EpochStats {
+            epoch: tr.epoch,
+            loss: loss_sum / examples as f64,
+            accuracy: acc_sum / examples as f64,
+            batches,
+            examples,
+            backward_dispatches: dispatches,
+            epoch_nanos: t0.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// Train for [`TrainConfig::epochs`] epochs with a fresh trainer,
+    /// returning per-epoch loss/accuracy/dispatch stats. Deterministic
+    /// for a fixed seed: bit-identical at every thread count and shard
+    /// layout.
+    pub fn fit(&mut self, config: &TrainConfig) -> Result<FitReport> {
+        let mut tr = self.trainer(config.clone())?;
+        let mut report = FitReport::default();
+        for _ in 0..config.epochs {
+            report.epochs.push(self.train_epoch(&mut tr)?);
+        }
+        Ok(report)
     }
 
     /// The dynamic spec in effect, if streaming updates are enabled.

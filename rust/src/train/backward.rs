@@ -1,0 +1,663 @@
+//! Staged backward pass mirroring the forward stages of
+//! [`crate::engine::stages`].
+//!
+//! The training-characterization companion work (arxiv 2407.11790)
+//! shows the backward pass has its own stage mix: grad-SpMM over the
+//! *transposed* sub-CSR dominates, with attention backward adding
+//! SDDMM-shaped kernels. Every backward kernel here is expressed in the
+//! same substrate as the forward — `sgemm`(+`_tn`/`_nt`) for the dense
+//! gradients, `SpMMCsr` over [`Csr::transposed`] sub-CSRs for the
+//! aggregation gradients, `SDDMMCoo`/`edge_softmax` for attention
+//! backward — so profiles attribute training time with the same kernel
+//! taxonomy (DM/TB/EW/DR), and every kernel keeps the serial per-row
+//! accumulation order: gradients are **bit-identical at every thread
+//! count**.
+//!
+//! [`Csr::transposed`]: crate::graph::Csr::transposed
+
+use std::collections::BTreeMap;
+
+use crate::engine::stages::{self, segment_sum_edges};
+use crate::graph::HeteroGraph;
+use crate::kernels::dense::{sgemm, sgemm_bias, sgemm_nt, sgemm_tn, GemmBlocking};
+use crate::kernels::elementwise::{
+    reduce_rows_mean, rowwise_dot, scale_rows, softmax_vec, unary, BinaryOp, UnaryOp,
+};
+use crate::kernels::rearrange::{concat_rows, index_select};
+use crate::kernels::sparse_ops::{
+    edge_softmax, edge_softmax_backward, sddmm_coo, sddmm_edge_dot, spmm_csr,
+    transpose_edge_perm, SpmmReduce,
+};
+use crate::kernels::Ctx;
+use crate::models::{ModelId, ModelPlan, ModelWeights};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Per-subgraph Neighbor Aggregation intermediates saved by the forward
+/// pass; the post-activation output itself lives in
+/// [`Tape::na_results`].
+#[derive(Debug)]
+pub enum NaTape {
+    /// R-GCN/GCN mean aggregation: nothing beyond topology is needed.
+    Mean,
+    /// HAN GAT-style attention: per-node attention terms and the edge
+    /// softmax output `alpha` (CSR nonzero order).
+    Han {
+        /// Destination-side attention terms `h_dst · attn_l`.
+        s_dst: Vec<f32>,
+        /// Source-side attention terms `h_src · attn_r`.
+        s_src: Vec<f32>,
+        /// Edge softmax weights, CSR nonzero order.
+        alpha: Vec<f32>,
+    },
+    /// MAGNN instance attention: encoded instances, raw (pre-LeakyReLU)
+    /// instance scores and the edge softmax output.
+    Magnn {
+        /// Encoded metapath instances `[nnz, hidden]`.
+        enc: Tensor,
+        /// Raw instance scores `enc · w` (pre-LeakyReLU), nonzero order.
+        scores: Vec<f32>,
+        /// Edge softmax weights, CSR nonzero order.
+        alpha: Vec<f32>,
+    },
+}
+
+/// Semantic Aggregation intermediates saved by the forward pass.
+#[derive(Debug)]
+pub enum SaTape {
+    /// GCN passthrough / R-GCN relation sum: no learned parameters.
+    Passthrough,
+    /// HAN/MAGNN semantic attention pipeline.
+    Attention {
+        /// Concatenated NA results `[P*N, hidden]`.
+        stacked: Tensor,
+        /// `tanh(stacked · W + b)`, `[P*N, semantic_dim]`.
+        t: Tensor,
+        /// Softmax-normalized per-metapath weights, length `P`.
+        beta: Vec<f32>,
+    },
+}
+
+/// Saved activations of one forward pass, enough to run the staged
+/// backward without recomputation (the memory-for-compute trade the
+/// training characterization measures).
+#[derive(Debug)]
+pub struct Tape {
+    /// Stage-② outputs per node type.
+    pub projected: BTreeMap<usize, Tensor>,
+    /// Per-subgraph stage-③ intermediates.
+    pub na: Vec<NaTape>,
+    /// Per-subgraph stage-③ outputs (post-activation).
+    pub na_results: Vec<Tensor>,
+    /// Stage-④ intermediates.
+    pub sa: SaTape,
+    /// Final embeddings `[target_count, hidden]`.
+    pub output: Tensor,
+}
+
+/// Gradient accumulator for one backward pass: weight gradients shaped
+/// like the plan's weights ([`ModelWeights::zeros_like`]) plus the
+/// intermediate per-type projected-activation gradients that stage-③
+/// backward produces and stage-② backward consumes.
+#[derive(Debug)]
+pub struct Grads {
+    /// Weight gradients, same shapes/groups as the plan's weights.
+    pub weights: ModelWeights,
+    /// `dL/d(projected[ty])`, filled by NA backward, consumed by FP
+    /// backward.
+    pub d_projected: BTreeMap<usize, Tensor>,
+}
+
+impl Grads {
+    /// Zeroed accumulator for a plan's weight set.
+    pub fn zeros(weights: &ModelWeights) -> Grads {
+        Grads { weights: weights.zeros_like(), d_projected: BTreeMap::new() }
+    }
+}
+
+/// Elementwise `dst += src` (gradient accumulation glue).
+fn add_into(dst: &mut Tensor, src: &Tensor) -> Result<()> {
+    if dst.shape() != src.shape() {
+        return Err(Error::shape(format!(
+            "grad accumulate: {:?} += {:?}",
+            dst.shape(),
+            src.shape()
+        )));
+    }
+    for (d, &s) in dst.as_mut_slice().iter_mut().zip(src.as_slice()) {
+        *d += s;
+    }
+    Ok(())
+}
+
+/// Accumulate a per-type activation gradient (first write moves, later
+/// writes add).
+fn accumulate(map: &mut BTreeMap<usize, Tensor>, ty: usize, t: Tensor) -> Result<()> {
+    match map.entry(ty) {
+        std::collections::btree_map::Entry::Occupied(mut e) => add_into(e.get_mut(), &t),
+        std::collections::btree_map::Entry::Vacant(v) => {
+            v.insert(t);
+            Ok(())
+        }
+    }
+}
+
+/// `dL/dAgg` from `dL/dOut` through the ELU: `ELU'(x) = 1` for `x ≥ 0`,
+/// else `exp(x) = ELU(x) + 1` — recoverable from the saved *output*.
+fn elu_backward(d_out: &Tensor, out: &Tensor) -> Tensor {
+    let mut g = d_out.clone();
+    for (gv, &o) in g.as_mut_slice().iter_mut().zip(out.as_slice()) {
+        *gv *= if o >= 0.0 { 1.0 } else { o + 1.0 };
+    }
+    g
+}
+
+/// Forward pass with saved activations: identical kernel sequence to
+/// [`stages::feature_projection`] / [`stages::neighbor_aggregation`] /
+/// [`stages::semantic_aggregation`] (the output is bit-identical to the
+/// inference path), keeping the intermediates the backward needs.
+pub fn forward_tape(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    blocking: GemmBlocking,
+) -> Result<Tape> {
+    let projected = stages::feature_projection(ctx, plan, hg, blocking)?;
+    let mut na = Vec::with_capacity(plan.num_subgraphs());
+    let mut na_results = Vec::with_capacity(plan.num_subgraphs());
+    for i in 0..plan.num_subgraphs() {
+        let (t, out) = na_forward_tape(ctx, plan, i, &projected)?;
+        na.push(t);
+        na_results.push(out);
+    }
+    let (sa, output) = sa_forward_tape(ctx, plan, &na_results, blocking)?;
+    Ok(Tape { projected, na, na_results, sa, output })
+}
+
+/// Stage-③ forward for one subgraph, saving backward intermediates.
+fn na_forward_tape(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    i: usize,
+    projected: &BTreeMap<usize, Tensor>,
+) -> Result<(NaTape, Tensor)> {
+    let sg = &plan.subgraphs.subgraphs[i];
+    let h_src = projected
+        .get(&sg.src_type)
+        .ok_or_else(|| Error::config(format!("NA backward: type {} not projected", sg.src_type)))?;
+    match plan.model {
+        ModelId::Rgcn | ModelId::Gcn => {
+            let out = spmm_csr(ctx, &sg.adj, h_src, None, SpmmReduce::Mean)?;
+            Ok((NaTape::Mean, out))
+        }
+        ModelId::Han => {
+            let h_dst = projected.get(&sg.dst_type).unwrap_or(h_src);
+            let s_dst = rowwise_dot(ctx, h_dst, &plan.weights.attn_l[i])?;
+            let s_src = rowwise_dot(ctx, h_src, &plan.weights.attn_r[i])?;
+            let logits = sddmm_coo(ctx, &sg.adj, &s_dst, &s_src, plan.config.leaky_slope)?;
+            let alpha = edge_softmax(ctx, &sg.adj, &logits)?;
+            let agg = spmm_csr(ctx, &sg.adj, h_src, Some(&alpha), SpmmReduce::Sum)?;
+            let out = unary(ctx, &agg, UnaryOp::Elu);
+            ctx.arena.give(agg.into_vec());
+            Ok((NaTape::Han { s_dst, s_src, alpha }, out))
+        }
+        ModelId::Magnn => {
+            let h_dst = projected.get(&sg.dst_type).unwrap_or(h_src);
+            let src_rows: Vec<u32> = sg.adj.indices.clone();
+            let mut dst_rows = Vec::with_capacity(sg.adj.nnz());
+            for d in 0..sg.adj.n_rows {
+                dst_rows.extend(std::iter::repeat_n(d as u32, sg.adj.degree(d)));
+            }
+            let e_src = index_select(ctx, h_src, &src_rows)?;
+            let e_dst = index_select(ctx, h_dst, &dst_rows)?;
+            let sum = crate::kernels::elementwise::binary(ctx, &e_src, &e_dst, BinaryOp::Add)?;
+            ctx.arena.give(e_src.into_vec());
+            ctx.arena.give(e_dst.into_vec());
+            let enc = unary(ctx, &sum, UnaryOp::Scale(0.5));
+            ctx.arena.give(sum.into_vec());
+            let w_col: Vec<f32> = plan.weights.inst_attn[i].as_slice().to_vec();
+            let scores = rowwise_dot(ctx, &enc, &w_col)?;
+            let scores_t = Tensor::from_vec(scores.len(), 1, scores.clone())?;
+            let logits = unary(ctx, &scores_t, UnaryOp::LeakyRelu(plan.config.leaky_slope));
+            let alpha = edge_softmax(ctx, &sg.adj, logits.as_slice())?;
+            let scaled = scale_rows(ctx, &enc, &alpha)?;
+            let agg = segment_sum_edges(ctx, &sg.adj, &scaled)?;
+            ctx.arena.give(scaled.into_vec());
+            let out = unary(ctx, &agg, UnaryOp::Elu);
+            ctx.arena.give(agg.into_vec());
+            Ok((NaTape::Magnn { enc, scores, alpha }, out))
+        }
+    }
+}
+
+/// Stage-④ forward saving backward intermediates.
+fn sa_forward_tape(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    na_results: &[Tensor],
+    blocking: GemmBlocking,
+) -> Result<(SaTape, Tensor)> {
+    if na_results.is_empty() {
+        return Err(Error::config("SA backward: no NA results"));
+    }
+    match plan.model {
+        ModelId::Gcn | ModelId::Rgcn => {
+            let out = stages::semantic_aggregation(ctx, plan, na_results, blocking)?;
+            Ok((SaTape::Passthrough, out))
+        }
+        ModelId::Han | ModelId::Magnn => {
+            let p = na_results.len();
+            let n = na_results[0].rows();
+            let refs: Vec<&Tensor> = na_results.iter().collect();
+            let stacked = concat_rows(ctx, &refs)?;
+            let sem_w = plan
+                .weights
+                .sem_w
+                .as_ref()
+                .ok_or_else(|| Error::config("SA backward: no semantic attention weights"))?;
+            let sem_q = plan.weights.sem_q.as_ref().unwrap();
+            let lin = sgemm_bias(ctx, &stacked, sem_w, &plan.weights.sem_b, blocking)?;
+            let t = unary(ctx, &lin, UnaryOp::Tanh);
+            ctx.arena.give(lin.into_vec());
+            let scores = sgemm(ctx, &t, sem_q, blocking)?;
+            let scores_pn = Tensor::from_vec(p, n, scores.as_slice().to_vec())?;
+            ctx.arena.give(scores.into_vec());
+            let beta_raw = reduce_rows_mean(ctx, &scores_pn);
+            let beta = softmax_vec(ctx, &beta_raw);
+            let mut row_scale = Vec::with_capacity(p * n);
+            for &b in &beta {
+                row_scale.extend(std::iter::repeat_n(b, n));
+            }
+            let scaled = scale_rows(ctx, &stacked, &row_scale)?;
+            let out = crate::kernels::elementwise::reduce_grouped_rows(ctx, &scaled, p)?;
+            ctx.arena.give(scaled.into_vec());
+            Ok((SaTape::Attention { stacked, t, beta }, out))
+        }
+    }
+}
+
+/// Stage-④ backward: from `dL/dOut` to per-subgraph `dL/dNA_i` plus the
+/// semantic-attention weight gradients.
+pub fn backward_semantic(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    tape: &Tape,
+    d_out: &Tensor,
+    grads: &mut Grads,
+    blocking: GemmBlocking,
+) -> Result<Vec<Tensor>> {
+    match plan.model {
+        ModelId::Gcn => Ok(vec![d_out.clone()]),
+        ModelId::Rgcn => {
+            // forward summed the relations targeting the output type:
+            // those pass dOut through, the others get a zero gradient
+            Ok(plan
+                .subgraphs
+                .subgraphs
+                .iter()
+                .zip(&tape.na_results)
+                .map(|(sg, na)| {
+                    if sg.dst_type == plan.target {
+                        d_out.clone()
+                    } else {
+                        Tensor::zeros(na.rows(), na.cols())
+                    }
+                })
+                .collect())
+        }
+        ModelId::Han | ModelId::Magnn => {
+            let SaTape::Attention { stacked, t, beta } = &tape.sa else {
+                return Err(Error::config("SA backward: tape missing attention state"));
+            };
+            let p = tape.na_results.len();
+            let n = tape.na_results[0].rows();
+            let sem_w = plan.weights.sem_w.as_ref().unwrap();
+            let sem_q = plan.weights.sem_q.as_ref().unwrap();
+
+            // out = Σ_i β_i·Z_i  ⇒  dβ_i = ⟨dOut, Z_i⟩_F
+            let dbeta: Vec<f32> = tape
+                .na_results
+                .iter()
+                .map(|z| {
+                    d_out
+                        .as_slice()
+                        .iter()
+                        .zip(z.as_slice())
+                        .map(|(&a, &b)| a * b)
+                        .sum::<f32>()
+                })
+                .collect();
+            // softmax backward over the P metapath weights
+            let dot: f32 = beta.iter().zip(&dbeta).map(|(&b, &d)| b * d).sum();
+            let dbeta_raw: Vec<f32> =
+                beta.iter().zip(&dbeta).map(|(&b, &d)| b * (d - dot)).collect();
+            // mean backward: score (i, n) contributed 1/N to β_raw_i
+            let mut ds = Vec::with_capacity(p * n);
+            for &g in &dbeta_raw {
+                ds.extend(std::iter::repeat_n(g / n as f32, n));
+            }
+            let dscores = Tensor::from_vec(p * n, 1, ds)?;
+
+            // scores = T·q  ⇒  dT = dscores·qᵀ, dq = Tᵀ·dscores
+            let dt = sgemm_nt(ctx, &dscores, sem_q, blocking)?;
+            let dq = sgemm_tn(ctx, t, &dscores, blocking)?;
+
+            // T = tanh(lin)  ⇒  dlin = dT ⊙ (1 − T²)
+            let mut dlin = dt;
+            for (g, &tv) in dlin.as_mut_slice().iter_mut().zip(t.as_slice()) {
+                *g *= 1.0 - tv * tv;
+            }
+
+            // lin = stacked·W + b
+            let dw = sgemm_tn(ctx, stacked, &dlin, blocking)?;
+            let s = dlin.cols();
+            let mut db = vec![0.0f32; s];
+            for r in 0..dlin.rows() {
+                for (bc, &v) in db.iter_mut().zip(dlin.row(r)) {
+                    *bc += v;
+                }
+            }
+            let mut dstacked = sgemm_nt(ctx, &dlin, sem_w, blocking)?;
+            ctx.arena.give(dlin.into_vec());
+
+            // the direct β-weighted path: block i of dstacked += β_i·dOut
+            let h = d_out.cols();
+            let dov = d_out.as_slice();
+            let dsv = dstacked.as_mut_slice();
+            for (i, &b) in beta.iter().enumerate() {
+                let block = &mut dsv[i * n * h..(i + 1) * n * h];
+                for (g, &v) in block.iter_mut().zip(dov) {
+                    *g += b * v;
+                }
+            }
+
+            add_into(grads.weights.sem_w.as_mut().unwrap(), &dw)?;
+            ctx.arena.give(dw.into_vec());
+            for (g, &v) in grads.weights.sem_b.iter_mut().zip(&db) {
+                *g += v;
+            }
+            add_into(grads.weights.sem_q.as_mut().unwrap(), &dq)?;
+            ctx.arena.give(dq.into_vec());
+
+            (0..p).map(|i| dstacked.slice_rows(i * n, (i + 1) * n)).collect()
+        }
+    }
+}
+
+/// Stage-③ backward for one subgraph: from `dL/dNA_i` to attention
+/// weight gradients and `dL/d(projected)` contributions — the
+/// grad-SpMM-over-transposed-CSR stage the training characterization
+/// identifies as dominant.
+pub fn backward_neighbor(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    i: usize,
+    tape: &Tape,
+    d_na: &Tensor,
+    grads: &mut Grads,
+    blocking: GemmBlocking,
+) -> Result<()> {
+    let sg = &plan.subgraphs.subgraphs[i];
+    let h_src = tape
+        .projected
+        .get(&sg.src_type)
+        .ok_or_else(|| Error::config(format!("NA backward: type {} not projected", sg.src_type)))?;
+    // forward used projected[dst] when present, else fell back to h_src;
+    // the dst-side gradient must flow to the same tensor
+    let has_dst = tape.projected.contains_key(&sg.dst_type);
+    let dst_ty = if has_dst { sg.dst_type } else { sg.src_type };
+    let h_dst = if has_dst { &tape.projected[&sg.dst_type] } else { h_src };
+
+    match (&tape.na[i], plan.model) {
+        (NaTape::Mean, ModelId::Rgcn | ModelId::Gcn) => {
+            // out[d] = (1/deg d)·Σ h_src[s]: grad-SpMM over the transposed
+            // sub-CSR, edge weight 1/deg of the original destination
+            let adj_t = sg.adj.transposed();
+            let w_t: Vec<f32> = adj_t
+                .indices
+                .iter()
+                .map(|&d| 1.0 / sg.adj.degree(d as usize) as f32)
+                .collect();
+            let dh = spmm_csr(ctx, &adj_t, d_na, Some(&w_t), SpmmReduce::Sum)?;
+            accumulate(&mut grads.d_projected, sg.src_type, dh)
+        }
+        (NaTape::Han { s_dst, s_src, alpha }, ModelId::Han) => {
+            let dagg = elu_backward(d_na, &tape.na_results[i]);
+
+            // ① agg = Σ_e α_e·h_src[s_e]: grad w.r.t. h_src is the same
+            // weighted SpMM over the transposed CSR (α carried along the
+            // edge permutation)
+            let adj_t = sg.adj.transposed();
+            let perm = transpose_edge_perm(&sg.adj);
+            let mut alpha_t = vec![0.0f32; alpha.len()];
+            for (e, &slot) in perm.iter().enumerate() {
+                alpha_t[slot as usize] = alpha[e];
+            }
+            let dh_src_spmm = spmm_csr(ctx, &adj_t, &dagg, Some(&alpha_t), SpmmReduce::Sum)?;
+
+            // ② dα_e = ⟨dAgg[d_e], h_src[s_e]⟩ (SDDMM-shaped)
+            let e_src = index_select(ctx, h_src, &sg.adj.indices)?;
+            let dalpha = sddmm_edge_dot(ctx, &sg.adj, &dagg, &e_src)?;
+            ctx.arena.give(e_src.into_vec());
+
+            // ③ softmax backward, then LeakyReLU backward on the raw
+            // logit sign (recomputed from the saved attention terms)
+            let dlogits = edge_softmax_backward(ctx, &sg.adj, alpha, &dalpha)?;
+            let slope = plan.config.leaky_slope;
+            let mut ds_dst = vec![0.0f32; sg.adj.n_rows];
+            let mut ds_src = vec![0.0f32; sg.adj.n_cols];
+            let mut e = 0usize;
+            for d in 0..sg.adj.n_rows {
+                for &s in sg.adj.row(d) {
+                    let z = s_dst[d] + s_src[s as usize];
+                    let dz = dlogits[e] * if z >= 0.0 { 1.0 } else { slope };
+                    ds_dst[d] += dz;
+                    ds_src[s as usize] += dz;
+                    e += 1;
+                }
+            }
+
+            // ④ s = h·a rowwise dots: dh += ds ⊗ a (outer), da = hᵀ·ds
+            let h = h_src.cols();
+            let ds_dst_t = Tensor::from_vec(sg.adj.n_rows, 1, ds_dst)?;
+            let ds_src_t = Tensor::from_vec(sg.adj.n_cols, 1, ds_src)?;
+            let al = Tensor::from_vec(1, h, plan.weights.attn_l[i].clone())?;
+            let ar = Tensor::from_vec(1, h, plan.weights.attn_r[i].clone())?;
+            let dh_dst = sgemm(ctx, &ds_dst_t, &al, blocking)?;
+            let mut dh_src = sgemm(ctx, &ds_src_t, &ar, blocking)?;
+            let da_l = sgemm_tn(ctx, h_dst, &ds_dst_t, blocking)?;
+            let da_r = sgemm_tn(ctx, h_src, &ds_src_t, blocking)?;
+            for (g, &v) in grads.weights.attn_l[i].iter_mut().zip(da_l.as_slice()) {
+                *g += v;
+            }
+            for (g, &v) in grads.weights.attn_r[i].iter_mut().zip(da_r.as_slice()) {
+                *g += v;
+            }
+            ctx.arena.give(da_l.into_vec());
+            ctx.arena.give(da_r.into_vec());
+
+            add_into(&mut dh_src, &dh_src_spmm)?;
+            ctx.arena.give(dh_src_spmm.into_vec());
+            accumulate(&mut grads.d_projected, sg.src_type, dh_src)?;
+            accumulate(&mut grads.d_projected, dst_ty, dh_dst)
+        }
+        (NaTape::Magnn { enc, scores, alpha }, ModelId::Magnn) => {
+            let dagg = elu_backward(d_na, &tape.na_results[i]);
+            let nnz = sg.adj.nnz();
+
+            // ① agg[d] = Σ_e α_e·enc_e: dα_e = ⟨dAgg[d_e], enc_e⟩ and
+            // dEnc_e = α_e·dAgg[d_e]
+            let dalpha = sddmm_edge_dot(ctx, &sg.adj, &dagg, enc)?;
+            let mut dst_rows = Vec::with_capacity(nnz);
+            for d in 0..sg.adj.n_rows {
+                dst_rows.extend(std::iter::repeat_n(d as u32, sg.adj.degree(d)));
+            }
+            let gathered = index_select(ctx, &dagg, &dst_rows)?;
+            let mut denc = scale_rows(ctx, &gathered, alpha)?;
+            ctx.arena.give(gathered.into_vec());
+
+            // ② softmax backward, LeakyReLU backward on saved raw scores
+            let dlogits = edge_softmax_backward(ctx, &sg.adj, alpha, &dalpha)?;
+            let slope = plan.config.leaky_slope;
+            let dscore: Vec<f32> = dlogits
+                .iter()
+                .zip(scores)
+                .map(|(&dl, &sc)| dl * if sc >= 0.0 { 1.0 } else { slope })
+                .collect();
+
+            // ③ score_e = enc_e·w: dEnc += dscore ⊗ wᵀ, dw = encᵀ·dscore
+            let h = enc.cols();
+            let dscore_t = Tensor::from_vec(nnz, 1, dscore)?;
+            let w_row = Tensor::from_vec(1, h, plan.weights.inst_attn[i].as_slice().to_vec())?;
+            let denc_w = sgemm(ctx, &dscore_t, &w_row, blocking)?;
+            add_into(&mut denc, &denc_w)?;
+            ctx.arena.give(denc_w.into_vec());
+            let dw = sgemm_tn(ctx, enc, &dscore_t, blocking)?;
+            add_into(&mut grads.weights.inst_attn[i], &dw)?;
+            ctx.arena.give(dw.into_vec());
+
+            // ④ enc_e = ½(h_src[s_e] + h_dst[d_e]): halve, then
+            // segment-sum per destination (forward CSR) and per source
+            // (transposed CSR, edge gradients permuted along)
+            let dhalf = unary(ctx, &denc, UnaryOp::Scale(0.5));
+            ctx.arena.give(denc.into_vec());
+            let dh_dst = segment_sum_edges(ctx, &sg.adj, &dhalf)?;
+            let adj_t = sg.adj.transposed();
+            let perm = transpose_edge_perm(&sg.adj);
+            let mut inv = vec![0u32; nnz];
+            for (e, &slot) in perm.iter().enumerate() {
+                inv[slot as usize] = e as u32;
+            }
+            let dhalf_t = index_select(ctx, &dhalf, &inv)?;
+            ctx.arena.give(dhalf.into_vec());
+            let dh_src = segment_sum_edges(ctx, &adj_t, &dhalf_t)?;
+            ctx.arena.give(dhalf_t.into_vec());
+
+            accumulate(&mut grads.d_projected, sg.src_type, dh_src)?;
+            accumulate(&mut grads.d_projected, dst_ty, dh_dst)
+        }
+        (saved, model) => Err(Error::config(format!(
+            "NA backward: tape {saved:?} does not match model {model:?}"
+        ))),
+    }
+}
+
+/// Stage-② backward: per-type weight gradients (`dW = Xᵀ·dH`, sgemm
+/// against the gathered input activations) and, for R-GCN, the learned
+/// embedding gradients (`dX = dH·Wᵀ`).
+pub fn backward_projection(
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    grads: &mut Grads,
+    blocking: GemmBlocking,
+) -> Result<()> {
+    for (&ty, w) in &plan.weights.proj {
+        let Some(dh) = grads.d_projected.get(&ty) else {
+            continue; // type projected but unused by any subgraph grad
+        };
+        let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
+        let dw = sgemm_tn(ctx, x, dh, blocking)?;
+        add_into(grads.weights.proj.get_mut(&ty).unwrap(), &dw)?;
+        ctx.arena.give(dw.into_vec());
+        if plan.weights.embed.contains_key(&ty) {
+            let dx = sgemm_nt(ctx, dh, w, blocking)?;
+            add_into(grads.weights.embed.get_mut(&ty).unwrap(), &dx)?;
+            ctx.arena.give(dx.into_vec());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetId, DatasetScale};
+    use crate::models::{self, ModelConfig};
+
+    fn setup(model: ModelId) -> (HeteroGraph, ModelPlan) {
+        let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+        let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+        (hg, plan)
+    }
+
+    #[test]
+    fn tape_output_matches_inference_forward_bitwise() {
+        for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn, ModelId::Gcn] {
+            let (hg, plan) = setup(model);
+            let blk = GemmBlocking::default();
+            let mut ctx = Ctx::default();
+            let tape = forward_tape(&mut ctx, &plan, &hg, blk).unwrap();
+            let mut ctx2 = Ctx::default();
+            let proj = stages::feature_projection(&mut ctx2, &plan, &hg, blk).unwrap();
+            let na: Vec<Tensor> = (0..plan.num_subgraphs())
+                .map(|i| stages::neighbor_aggregation(&mut ctx2, &plan, i, &proj, blk).unwrap())
+                .collect();
+            let out = stages::semantic_aggregation(&mut ctx2, &plan, &na, blk).unwrap();
+            assert!(
+                tape.output.allclose(&out, 0.0, 0.0),
+                "{model:?}: tape forward diverged from the inference path"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_fills_every_weight_group() {
+        for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+            let (hg, plan) = setup(model);
+            let blk = GemmBlocking::default();
+            let mut ctx = Ctx::default();
+            let tape = forward_tape(&mut ctx, &plan, &hg, blk).unwrap();
+            let mut grads = Grads::zeros(&plan.weights);
+            let d_out = Tensor::full(tape.output.rows(), tape.output.cols(), 1e-2);
+            let d_na = backward_semantic(&mut ctx, &plan, &tape, &d_out, &mut grads, blk).unwrap();
+            assert_eq!(d_na.len(), plan.num_subgraphs());
+            for i in 0..plan.num_subgraphs() {
+                backward_neighbor(&mut ctx, &plan, i, &tape, &d_na[i], &mut grads, blk).unwrap();
+            }
+            backward_projection(&mut ctx, &plan, &hg, &mut grads, blk).unwrap();
+            // every parameter group sees a nonzero gradient somewhere
+            let nonzero = grads
+                .weights
+                .params()
+                .iter()
+                .filter(|g| g.iter().any(|&v| v != 0.0))
+                .count();
+            assert!(
+                nonzero >= grads.weights.params().len().saturating_sub(1),
+                "{model:?}: only {nonzero} of {} groups touched",
+                grads.weights.params().len()
+            );
+        }
+    }
+
+    #[test]
+    fn backward_is_bit_identical_across_threads() {
+        for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+            let (hg, plan) = setup(model);
+            let blk = GemmBlocking::default();
+            let run = |threads: usize| {
+                crate::parallel::with_threads(threads, || {
+                    let mut ctx = Ctx::default();
+                    let tape = forward_tape(&mut ctx, &plan, &hg, blk).unwrap();
+                    let mut grads = Grads::zeros(&plan.weights);
+                    let d_out = Tensor::full(tape.output.rows(), tape.output.cols(), 1e-2);
+                    let d_na =
+                        backward_semantic(&mut ctx, &plan, &tape, &d_out, &mut grads, blk)
+                            .unwrap();
+                    for i in 0..plan.num_subgraphs() {
+                        backward_neighbor(&mut ctx, &plan, i, &tape, &d_na[i], &mut grads, blk)
+                            .unwrap();
+                    }
+                    backward_projection(&mut ctx, &plan, &hg, &mut grads, blk).unwrap();
+                    grads
+                })
+            };
+            let serial = run(1);
+            let wide = run(4);
+            for (a, b) in serial.weights.params().iter().zip(wide.weights.params()) {
+                assert_eq!(*a, b, "{model:?}: gradients differ across thread counts");
+            }
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! Mini-batch training subsystem: staged backward pass, optimizers and
+//! a fused backward kernel schedule.
+//!
+//! Completes the train/serve lifecycle on top of the inference stack:
+//! the forward runs through the same stage kernels (saving a [`Tape`]
+//! of activations), the loss is a softmax cross-entropy over a linear
+//! classifier head, and the backward walks the stages in reverse —
+//! Semantic Aggregation (④), per-subgraph Neighbor Aggregation (③,
+//! grad-SpMM over transposed sub-CSRs), Feature Projection (②) — into a
+//! [`Grads`] accumulator an [`Optimizer`] applies through
+//! `Session::set_weights` (which bumps the reuse-cache generation, so
+//! training invalidates served state exactly like any weight swap).
+//!
+//! The per-relation backward kernel swarm can be dispatched **fused**:
+//! adjacent same-name kernels across the per-subgraph backward passes
+//! merge into one dispatch per kernel per stage
+//! ([`coalesce_events`]) — the mini-batch-training speedup of arxiv
+//! 2408.08490, measurable here as a strictly lower dispatch count in
+//! [`BatchResult::backward_dispatches`].
+//!
+//! Determinism: every kernel (forward and backward) keeps serial
+//! per-row accumulation order, the batch order is a seeded shuffle, and
+//! the optimizer is elementwise — a training epoch is **bit-identical**
+//! for a given seed at every thread count.
+
+pub mod backward;
+pub mod optim;
+
+pub use backward::{forward_tape, Grads, NaTape, SaTape, Tape};
+pub use optim::{Optimizer, OptimizerSpec};
+
+use crate::graph::HeteroGraph;
+use crate::kernels::dense::{sgemm, GemmBlocking};
+use crate::kernels::dense::{sgemm_nt, sgemm_tn};
+use crate::kernels::rearrange::index_select;
+use crate::kernels::{Ctx, KernelExec};
+use crate::models::{ModelPlan, ModelWeights};
+use crate::session::ExecBackend;
+use crate::tensor::Tensor;
+use crate::util::stats;
+use crate::util::Pcg32;
+use crate::{Error, Result};
+
+/// Training hyperparameters. The learning rate lives inside
+/// [`OptimizerSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Number of epochs a `fit` runs.
+    pub epochs: usize,
+    /// Seeds per mini-batch (clamped to the target-type node count).
+    pub batch: usize,
+    /// Update rule and learning rate.
+    pub optimizer: OptimizerSpec,
+    /// Seed for weight init, label synthesis and batch shuffling.
+    pub seed: u64,
+    /// Number of classes of the synthetic node-classification task.
+    pub classes: usize,
+    /// Fuse the per-relation backward kernel swarm into one dispatch
+    /// per kernel per stage.
+    pub fused: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 3,
+            batch: 256,
+            optimizer: OptimizerSpec::sgd(0.05),
+            seed: 0x7A11,
+            classes: 4,
+            fused: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Reject degenerate hyperparameters (zero epochs/batch/classes,
+    /// non-positive or non-finite learning rate, momentum outside
+    /// `[0, 1)`).
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            return Err(Error::config("train: epochs must be >= 1"));
+        }
+        if self.batch == 0 {
+            return Err(Error::config("train: batch size must be >= 1"));
+        }
+        if self.classes < 2 {
+            return Err(Error::config("train: need at least 2 classes"));
+        }
+        let lr = match self.optimizer {
+            OptimizerSpec::Sgd { lr, .. } | OptimizerSpec::Adam { lr, .. } => lr,
+        };
+        if !lr.is_finite() || lr <= 0.0 {
+            return Err(Error::config(format!("train: learning rate {lr} must be positive")));
+        }
+        if let OptimizerSpec::Sgd { momentum, .. } = self.optimizer {
+            if !(0.0..1.0).contains(&momentum) {
+                return Err(Error::config(format!(
+                    "train: momentum {momentum} must be in [0, 1)"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Driver state for mini-batch training: the classifier head, the
+/// optimizer moments and the epoch counter. Built once per `fit` (or
+/// via `Session::trainer`) and fed to `Session::train_epoch`.
+#[derive(Debug)]
+pub struct Trainer {
+    pub(crate) config: TrainConfig,
+    pub(crate) head: Tensor,
+    pub(crate) opt: Optimizer,
+    pub(crate) epoch: usize,
+}
+
+impl Trainer {
+    /// Build a trainer for a model's weight template: a seeded
+    /// `[hidden, classes]` classifier head (PCG stream `0x6000`, like
+    /// the model's own weight streams) and zeroed optimizer state.
+    pub fn new(config: TrainConfig, template: &ModelWeights, hidden: usize) -> Result<Trainer> {
+        config.validate()?;
+        if hidden == 0 {
+            return Err(Error::config("train: hidden dim must be >= 1"));
+        }
+        let mut rng = Pcg32::new(config.seed, 0x6000);
+        let scale = (1.0 / hidden as f32).sqrt();
+        let head = Tensor::randn(hidden, config.classes, scale, &mut rng);
+        let opt = Optimizer::new(config.optimizer, template, head.len());
+        Ok(Trainer { config, head, opt, epoch: 0 })
+    }
+
+    /// The training hyperparameters.
+    pub fn config(&self) -> &TrainConfig {
+        &self.config
+    }
+
+    /// The classifier head `[hidden, classes]`.
+    pub fn head(&self) -> &Tensor {
+        &self.head
+    }
+
+    /// Completed epochs.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+}
+
+/// Per-epoch training metrics (loss/accuracy are averaged over the
+/// epoch's batches *before* each optimizer step).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochStats {
+    /// 1-based epoch number.
+    pub epoch: usize,
+    /// Mean cross-entropy over the epoch's examples.
+    pub loss: f64,
+    /// Fraction of examples classified correctly.
+    pub accuracy: f64,
+    /// Mini-batches executed.
+    pub batches: usize,
+    /// Examples (seed nodes) consumed.
+    pub examples: usize,
+    /// Backward-pass kernel dispatches recorded across the epoch
+    /// (strictly lower under the fused schedule).
+    pub backward_dispatches: usize,
+    /// Wall time of the epoch.
+    pub epoch_nanos: u64,
+}
+
+/// The result of `Session::fit`: one [`EpochStats`] per epoch.
+#[derive(Debug, Clone, Default)]
+pub struct FitReport {
+    /// Per-epoch metrics, in order.
+    pub epochs: Vec<EpochStats>,
+}
+
+impl FitReport {
+    /// Loss of the last epoch (NaN when no epochs ran).
+    pub fn final_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.loss).unwrap_or(f64::NAN)
+    }
+
+    /// True when the per-epoch loss strictly decreases.
+    pub fn monotonic_loss(&self) -> bool {
+        self.epochs.windows(2).all(|w| w[1].loss < w[0].loss)
+    }
+}
+
+/// One mini-batch's forward + loss + staged backward, before the
+/// optimizer step.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// Mean cross-entropy over the batch.
+    pub loss: f64,
+    /// Fraction of the batch classified correctly.
+    pub accuracy: f64,
+    /// Seeds in the batch.
+    pub examples: usize,
+    /// Weight gradients (shaped like the executed plan's weights — for
+    /// a sampled batch the embedding rows are plan-local; see
+    /// [`fold_grads`]).
+    pub grads: Grads,
+    /// Classifier-head gradient `[hidden, classes]`.
+    pub head_grad: Tensor,
+    /// Kernel dispatches recorded by the backward stages.
+    pub backward_dispatches: usize,
+}
+
+/// Deterministic synthetic label for a target node: a pure function of
+/// (seed, global node id), so every shard, thread and sampled batch
+/// sees the same task.
+pub fn synthetic_label(seed: u64, node: u32, classes: usize) -> u32 {
+    Pcg32::new(seed, 0x9000 + node as u64).gen_range(classes) as u32
+}
+
+/// Merge a backward kernel swarm into one dispatch per kernel name,
+/// preserving first-seen order and summing counters/wall time — the
+/// fused schedule of arxiv 2408.08490. Gather traces are dropped (a
+/// fused dispatch has no single gather stream).
+pub fn coalesce_events(events: Vec<KernelExec>) -> Vec<KernelExec> {
+    let mut out: Vec<KernelExec> = Vec::new();
+    for e in events {
+        if let Some(m) = out.iter_mut().find(|m| m.name == e.name) {
+            m.counters.merge(&e.counters);
+            m.wall_nanos += e.wall_nanos;
+        } else {
+            out.push(KernelExec { trace: None, ..e });
+        }
+    }
+    out
+}
+
+/// Softmax cross-entropy gradient: `dlogits = (softmax(logits) −
+/// onehot(label)) / B`, row-serial and f64-stable like the loss.
+fn softmax_xent_grad(logits: &Tensor, labels: &[u32]) -> Result<Tensor> {
+    let (b, c) = logits.shape();
+    if labels.len() != b {
+        return Err(Error::shape(format!("{} labels for {b} logit rows", labels.len())));
+    }
+    let mut out = Tensor::zeros(b, c);
+    let inv_b = 1.0 / b as f64;
+    for r in 0..b {
+        let row = logits.row(r);
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += (v as f64 - maxv).exp();
+        }
+        let orow = out.row_mut(r);
+        for (j, &v) in row.iter().enumerate() {
+            let p = (v as f64 - maxv).exp() / denom;
+            let y = if labels[r] as usize == j { 1.0 } else { 0.0 };
+            orow[j] = ((p - y) * inv_b) as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// One mini-batch step, loss included, through a backend's backward
+/// stage entry points: forward with saved activations, softmax
+/// cross-entropy over the head at `rows`, then staged backward
+/// (SA → per-subgraph NA → FP). The per-subgraph NA backward swarm runs
+/// into staging contexts and lands in `ctx` either verbatim (`fused =
+/// false`) or coalesced to one dispatch per kernel ([`coalesce_events`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_batch(
+    backend: &dyn ExecBackend,
+    ctx: &mut Ctx,
+    plan: &ModelPlan,
+    hg: &HeteroGraph,
+    head: &Tensor,
+    rows: &[u32],
+    labels: &[u32],
+    fused: bool,
+) -> Result<BatchResult> {
+    if rows.is_empty() || rows.len() != labels.len() {
+        return Err(Error::config(format!(
+            "train batch: {} rows vs {} labels",
+            rows.len(),
+            labels.len()
+        )));
+    }
+    let classes = head.cols();
+    let blocking = GemmBlocking::default();
+
+    // forward with saved activations, then the classifier head
+    let tape = backend.forward_tape(ctx, plan, hg)?;
+    let sel = index_select(ctx, &tape.output, rows)?;
+    let logits = sgemm(ctx, &sel, head, blocking)?;
+    let loss = stats::cross_entropy(logits.as_slice(), classes, labels)?;
+    let accuracy = stats::accuracy(logits.as_slice(), classes, labels)?;
+
+    // loss backward into the head and the selected embedding rows
+    let dlogits = softmax_xent_grad(&logits, labels)?;
+    let head_grad = sgemm_tn(ctx, &sel, &dlogits, blocking)?;
+    let d_sel = sgemm_nt(ctx, &dlogits, head, blocking)?;
+    ctx.arena.give(sel.into_vec());
+    let mut d_out = Tensor::zeros(tape.output.rows(), tape.output.cols());
+    for (j, &r) in rows.iter().enumerate() {
+        for (o, &v) in d_out.row_mut(r as usize).iter_mut().zip(d_sel.row(j)) {
+            *o += v;
+        }
+    }
+    ctx.arena.give(d_sel.into_vec());
+
+    // staged backward; the NA swarm goes through staging contexts so
+    // the fused schedule can batch adjacent per-relation grad kernels
+    let bwd_start = ctx.events.len();
+    let mut grads = Grads::zeros(&plan.weights);
+    let d_na = backend.backward_semantic(ctx, plan, &tape, &d_out, &mut grads)?;
+    if d_na.len() != plan.num_subgraphs() {
+        return Err(Error::config(format!(
+            "SA backward returned {} gradients for {} subgraphs",
+            d_na.len(),
+            plan.num_subgraphs()
+        )));
+    }
+    let mut swarm = Vec::new();
+    for (i, d) in d_na.iter().enumerate() {
+        let mut sub = backend.make_ctx();
+        backend.backward_neighbor(&mut sub, plan, i, &tape, d, &mut grads)?;
+        swarm.extend(sub.drain());
+    }
+    let staged = if fused { coalesce_events(swarm) } else { swarm };
+    for e in staged {
+        ctx.push(e.name, e.ktype, e.counters, e.wall_nanos, e.trace);
+    }
+    backend.backward_projection(ctx, plan, hg, &mut grads)?;
+    let backward_dispatches = ctx.events.len() - bwd_start;
+
+    Ok(BatchResult {
+        loss,
+        accuracy,
+        examples: rows.len(),
+        grads,
+        head_grad,
+        backward_dispatches,
+    })
+}
+
+/// Accumulate a batch's weight gradients into full-model-shaped
+/// gradients. With `nodes` given (a sampled batch's per-type local→
+/// parent id maps), embedding-row gradients scatter onto their parent
+/// rows; every other group adds one-to-one.
+pub fn fold_grads(
+    full: &mut ModelWeights,
+    batch: &ModelWeights,
+    nodes: Option<&[Vec<u32>]>,
+) -> Result<()> {
+    fn add(dst: &mut [f32], src: &[f32], what: &str) -> Result<()> {
+        if dst.len() != src.len() {
+            return Err(Error::shape(format!(
+                "fold_grads: {what} {} vs {}",
+                dst.len(),
+                src.len()
+            )));
+        }
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+        Ok(())
+    }
+    for (ty, g) in &batch.proj {
+        let dst = full
+            .proj
+            .get_mut(ty)
+            .ok_or_else(|| Error::shape(format!("fold_grads: no proj group for type {ty}")))?;
+        add(dst.as_mut_slice(), g.as_slice(), "proj")?;
+    }
+    for (ty, g) in &batch.embed {
+        let dst = full
+            .embed
+            .get_mut(ty)
+            .ok_or_else(|| Error::shape(format!("fold_grads: no embed group for type {ty}")))?;
+        match nodes {
+            Some(map) => {
+                let rows = map.get(*ty).ok_or_else(|| {
+                    Error::shape(format!("fold_grads: no node map for type {ty}"))
+                })?;
+                if rows.len() != g.rows() || dst.cols() != g.cols() {
+                    return Err(Error::shape(format!(
+                        "fold_grads: embed {}x{} via {} rows into {}x{}",
+                        g.rows(),
+                        g.cols(),
+                        rows.len(),
+                        dst.rows(),
+                        dst.cols()
+                    )));
+                }
+                for (local, &global) in rows.iter().enumerate() {
+                    add(dst.row_mut(global as usize), g.row(local), "embed row")?;
+                }
+            }
+            None => add(dst.as_mut_slice(), g.as_slice(), "embed")?,
+        }
+    }
+    if batch.attn_l.len() != full.attn_l.len() || batch.attn_r.len() != full.attn_r.len() {
+        return Err(Error::shape("fold_grads: attention group count mismatch"));
+    }
+    for (dst, g) in full.attn_l.iter_mut().zip(&batch.attn_l) {
+        add(dst, g, "attn_l")?;
+    }
+    for (dst, g) in full.attn_r.iter_mut().zip(&batch.attn_r) {
+        add(dst, g, "attn_r")?;
+    }
+    for (dst, g) in full.inst_attn.iter_mut().zip(&batch.inst_attn) {
+        add(dst.as_mut_slice(), g.as_slice(), "inst_attn")?;
+    }
+    if let (Some(dst), Some(g)) = (full.sem_w.as_mut(), batch.sem_w.as_ref()) {
+        add(dst.as_mut_slice(), g.as_slice(), "sem_w")?;
+    }
+    add(&mut full.sem_b, &batch.sem_b, "sem_b")?;
+    if let (Some(dst), Some(g)) = (full.sem_q.as_mut(), batch.sem_q.as_ref()) {
+        add(dst.as_mut_slice(), g.as_slice(), "sem_q")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelCounters, KernelType};
+
+    fn exec(name: &'static str, nanos: u64) -> KernelExec {
+        KernelExec {
+            name,
+            ktype: KernelType::TopologyBased,
+            counters: KernelCounters { flops: 1, bytes_read: 2, bytes_written: 3 },
+            wall_nanos: nanos,
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerates() {
+        assert!(TrainConfig::default().validate().is_ok());
+        assert!(TrainConfig { epochs: 0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { batch: 0, ..Default::default() }.validate().is_err());
+        assert!(TrainConfig { classes: 1, ..Default::default() }.validate().is_err());
+        for lr in [0.0, -0.1, f32::NAN, f32::INFINITY] {
+            let cfg = TrainConfig { optimizer: OptimizerSpec::sgd(lr), ..Default::default() };
+            assert!(cfg.validate().is_err(), "lr {lr} must be rejected");
+        }
+        let cfg = TrainConfig {
+            optimizer: OptimizerSpec::Sgd { lr: 0.1, momentum: 1.0 },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn coalesce_merges_by_name_keeping_order() {
+        let merged = coalesce_events(vec![
+            exec("SpMMCsr", 10),
+            exec("SDDMMCoo", 5),
+            exec("SpMMCsr", 7),
+            exec("edge_softmax", 1),
+            exec("SDDMMCoo", 2),
+        ]);
+        assert_eq!(
+            merged.iter().map(|e| e.name).collect::<Vec<_>>(),
+            vec!["SpMMCsr", "SDDMMCoo", "edge_softmax"]
+        );
+        assert_eq!(merged[0].wall_nanos, 17);
+        assert_eq!(merged[0].counters.flops, 2);
+        assert_eq!(merged[1].counters.bytes_read, 4);
+        assert!(coalesce_events(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn synthetic_labels_are_deterministic_and_in_range() {
+        for node in 0..200u32 {
+            let a = synthetic_label(7, node, 4);
+            assert_eq!(a, synthetic_label(7, node, 4));
+            assert!(a < 4);
+        }
+        // different seeds give a different task
+        let diff = (0..200u32)
+            .filter(|&n| synthetic_label(7, n, 4) != synthetic_label(8, n, 4))
+            .count();
+        assert!(diff > 0);
+    }
+
+    #[test]
+    fn softmax_grad_rows_sum_to_zero() {
+        let logits = Tensor::from_vec(2, 3, vec![1.0, 2.0, 0.5, -1.0, 0.0, 3.0]).unwrap();
+        let g = softmax_xent_grad(&logits, &[1, 2]).unwrap();
+        for r in 0..2 {
+            let s: f32 = g.row(r).iter().sum();
+            assert!(s.abs() < 1e-6, "row {r} sums to {s}");
+        }
+        // the true-label entry is negative (p − 1 < 0)
+        assert!(g.get(0, 1) < 0.0);
+        assert!(g.get(1, 2) < 0.0);
+        assert!(softmax_xent_grad(&logits, &[0]).is_err());
+    }
+
+    #[test]
+    fn monotonic_loss_detection() {
+        let e = |epoch: usize, loss: f64| EpochStats {
+            epoch,
+            loss,
+            accuracy: 0.0,
+            batches: 1,
+            examples: 1,
+            backward_dispatches: 0,
+            epoch_nanos: 0,
+        };
+        let mut r = FitReport { epochs: vec![e(1, 1.0), e(2, 0.8), e(3, 0.7)] };
+        assert!(r.monotonic_loss());
+        assert!((r.final_loss() - 0.7).abs() < 1e-12);
+        r.epochs.push(e(4, 0.9));
+        assert!(!r.monotonic_loss());
+        assert!(FitReport::default().final_loss().is_nan());
+        assert!(FitReport::default().monotonic_loss());
+    }
+}

@@ -1,0 +1,236 @@
+//! First-order optimizers over the model's weight set.
+//!
+//! Both optimizers walk the weights, gradients and moment buffers
+//! through [`ModelWeights::params_mut`]'s fixed deterministic group
+//! order, so a step is a pure elementwise function of (weights, grads,
+//! moments) — bit-identical regardless of thread count or batch
+//! scheduling.
+
+use crate::models::ModelWeights;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Which update rule to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerSpec {
+    /// SGD with classical momentum: `v ← μ·v + g`, `w ← w − lr·v`.
+    Sgd {
+        /// Learning rate.
+        lr: f32,
+        /// Momentum coefficient μ (0 disables the velocity term).
+        momentum: f32,
+    },
+    /// Adam (Kingma & Ba) with bias-corrected moments.
+    Adam {
+        /// Learning rate.
+        lr: f32,
+        /// First-moment decay β₁.
+        beta1: f32,
+        /// Second-moment decay β₂.
+        beta2: f32,
+        /// Denominator fuzz ε.
+        eps: f32,
+    },
+}
+
+impl OptimizerSpec {
+    /// SGD with the repo's default momentum of 0.9.
+    pub fn sgd(lr: f32) -> OptimizerSpec {
+        OptimizerSpec::Sgd { lr, momentum: 0.9 }
+    }
+
+    /// Adam with the standard (0.9, 0.999, 1e-8) constants.
+    pub fn adam(lr: f32) -> OptimizerSpec {
+        OptimizerSpec::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    /// Parse a CLI name (`sgd` / `adam`).
+    pub fn parse(name: &str, lr: f32) -> Result<OptimizerSpec> {
+        match name {
+            "sgd" => Ok(OptimizerSpec::sgd(lr)),
+            "adam" => Ok(OptimizerSpec::adam(lr)),
+            other => Err(Error::config(format!(
+                "unknown optimizer '{other}' (expected sgd|adam)"
+            ))),
+        }
+    }
+}
+
+/// Optimizer state: first/second moment buffers shaped like the model's
+/// weights plus the classifier head.
+#[derive(Debug)]
+pub struct Optimizer {
+    spec: OptimizerSpec,
+    /// SGD velocity / Adam first moment, per weight group.
+    m: ModelWeights,
+    /// Adam second moment (unused by SGD).
+    v: ModelWeights,
+    head_m: Vec<f32>,
+    head_v: Vec<f32>,
+    /// Step counter for Adam bias correction.
+    t: u64,
+}
+
+impl Optimizer {
+    /// Fresh (zeroed) state for a weight template and head size.
+    pub fn new(spec: OptimizerSpec, template: &ModelWeights, head_len: usize) -> Optimizer {
+        Optimizer {
+            spec,
+            m: template.zeros_like(),
+            v: template.zeros_like(),
+            head_m: vec![0.0; head_len],
+            head_v: vec![0.0; head_len],
+            t: 0,
+        }
+    }
+
+    /// The configured update rule.
+    pub fn spec(&self) -> OptimizerSpec {
+        self.spec
+    }
+
+    /// Apply one update step in place.
+    ///
+    /// `weights`/`grads` and `head`/`head_grad` must be structurally
+    /// identical to the template the state was built from.
+    pub fn step(
+        &mut self,
+        weights: &mut ModelWeights,
+        head: &mut Tensor,
+        grads: &ModelWeights,
+        head_grad: &Tensor,
+    ) -> Result<()> {
+        if head.shape() != head_grad.shape() || head.len() != self.head_m.len() {
+            return Err(Error::shape(format!(
+                "optimizer: head {:?} vs grad {:?} vs state {}",
+                head.shape(),
+                head_grad.shape(),
+                self.head_m.len()
+            )));
+        }
+        self.t += 1;
+        let t = self.t;
+        let spec = self.spec;
+
+        let mut w_groups = weights.params_mut();
+        let g_groups = grads.params();
+        let mut m_groups = self.m.params_mut();
+        let mut v_groups = self.v.params_mut();
+        if w_groups.len() != g_groups.len()
+            || w_groups.len() != m_groups.len()
+            || w_groups.iter().zip(&g_groups).any(|(w, g)| w.len() != g.len())
+        {
+            return Err(Error::shape("optimizer: weight/gradient group mismatch"));
+        }
+        for (((w, g), m), v) in w_groups
+            .iter_mut()
+            .zip(&g_groups)
+            .zip(m_groups.iter_mut())
+            .zip(v_groups.iter_mut())
+        {
+            update_group(spec, t, w, g, m, v);
+        }
+        update_group(
+            spec,
+            t,
+            head.as_mut_slice(),
+            head_grad.as_slice(),
+            &mut self.head_m,
+            &mut self.head_v,
+        );
+        Ok(())
+    }
+}
+
+/// Elementwise update of one parameter group.
+fn update_group(
+    spec: OptimizerSpec,
+    t: u64,
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+) {
+    match spec {
+        OptimizerSpec::Sgd { lr, momentum } => {
+            for ((w, &g), m) in w.iter_mut().zip(g).zip(m.iter_mut()) {
+                *m = momentum * *m + g;
+                *w -= lr * *m;
+            }
+        }
+        OptimizerSpec::Adam { lr, beta1, beta2, eps } => {
+            let bc1 = 1.0 - beta1.powi(t as i32);
+            let bc2 = 1.0 - beta2.powi(t as i32);
+            for (((w, &g), m), v) in w.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+                *m = beta1 * *m + (1.0 - beta1) * g;
+                *v = beta2 * *v + (1.0 - beta2) * g * g;
+                let mhat = *m / bc1;
+                let vhat = *v / bc2;
+                *w -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (ModelWeights, Tensor) {
+        let mut w = ModelWeights { sem_b: vec![1.0], ..Default::default() };
+        w.proj.insert(0, Tensor::full(2, 2, 1.0));
+        w.attn_l.push(vec![1.0, 1.0]);
+        (w, Tensor::full(2, 3, 0.5))
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates_velocity() {
+        let (mut w, mut head) = toy();
+        let mut g = w.zeros_like();
+        for group in g.params_mut() {
+            group.fill(1.0);
+        }
+        let hg = Tensor::zeros(2, 3);
+        let mut opt = Optimizer::new(OptimizerSpec::Sgd { lr: 0.1, momentum: 0.5 }, &w, head.len());
+        opt.step(&mut w, &mut head, &g, &hg).unwrap();
+        // v=1, w = 1 - 0.1
+        assert!((w.proj[&0].get(0, 0) - 0.9).abs() < 1e-6);
+        opt.step(&mut w, &mut head, &g, &hg).unwrap();
+        // v = 0.5 + 1 = 1.5, w = 0.9 - 0.15
+        assert!((w.proj[&0].get(0, 0) - 0.75).abs() < 1e-6);
+        assert!((w.sem_b[0] - 0.75).abs() < 1e-6);
+        // zero head grad leaves the head untouched
+        assert_eq!(head.get(0, 0), 0.5);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        let (mut w, mut head) = toy();
+        let mut g = w.zeros_like();
+        for group in g.params_mut() {
+            group.fill(0.3);
+        }
+        let hg = Tensor::full(2, 3, 0.3);
+        let mut opt = Optimizer::new(OptimizerSpec::adam(0.01), &w, head.len());
+        opt.step(&mut w, &mut head, &g, &hg).unwrap();
+        // bias-corrected first Adam step ≈ lr for any uniform gradient
+        assert!((w.proj[&0].get(0, 0) - (1.0 - 0.01)).abs() < 1e-4);
+        assert!((head.get(0, 0) - (0.5 - 0.01)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn spec_parse_and_mismatch_rejected() {
+        assert_eq!(OptimizerSpec::parse("sgd", 0.1).unwrap(), OptimizerSpec::sgd(0.1));
+        assert_eq!(OptimizerSpec::parse("adam", 0.1).unwrap(), OptimizerSpec::adam(0.1));
+        assert!(OptimizerSpec::parse("lion", 0.1).is_err());
+
+        let (mut w, mut head) = toy();
+        let g = w.zeros_like();
+        let mut opt = Optimizer::new(OptimizerSpec::sgd(0.1), &w, head.len());
+        let bad_head = Tensor::zeros(1, 1);
+        assert!(opt.step(&mut w, &mut head, &g, &bad_head).is_err());
+        let bad_g = ModelWeights::default();
+        let hg = Tensor::zeros(2, 3);
+        assert!(opt.step(&mut w, &mut head, &bad_g, &hg).is_err());
+    }
+}

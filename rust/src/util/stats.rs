@@ -1,5 +1,8 @@
-//! Statistics helpers used by the bench harness and the profiler:
-//! mean / median / percentiles / MAD over timing samples.
+//! Statistics helpers used by the bench harness and the profiler
+//! (mean / median / percentiles / MAD over timing samples) plus the
+//! classification metrics the training subsystem reports.
+
+use crate::{Error, Result};
 
 /// Summary statistics over a sample of f64 values (e.g. nanoseconds).
 #[derive(Debug, Clone, PartialEq)]
@@ -316,6 +319,67 @@ pub fn ols(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     (a, b, r2)
 }
 
+/// Validate a flat row-major `[rows, classes]` logit buffer against its
+/// labels; returns the row count.
+fn check_logits(logits: &[f32], classes: usize, labels: &[u32]) -> Result<usize> {
+    if classes == 0 || logits.len() % classes != 0 {
+        return Err(Error::shape(format!(
+            "{} logits do not tile into rows of {classes}",
+            logits.len()
+        )));
+    }
+    let rows = logits.len() / classes;
+    if rows != labels.len() {
+        return Err(Error::shape(format!("{rows} logit rows vs {} labels", labels.len())));
+    }
+    if let Some(&bad) = labels.iter().find(|&&l| l as usize >= classes) {
+        return Err(Error::config(format!("label {bad} out of range for {classes} classes")));
+    }
+    if rows == 0 {
+        return Err(Error::shape("no logit rows"));
+    }
+    Ok(rows)
+}
+
+/// Mean softmax cross-entropy of row-major `[rows, classes]` logits
+/// against integer labels, accumulated in f64 with a log-sum-exp per
+/// row (numerically stable for any logit scale).
+pub fn cross_entropy(logits: &[f32], classes: usize, labels: &[u32]) -> Result<f64> {
+    let rows = check_logits(logits, classes, labels)?;
+    let mut total = 0.0f64;
+    for (r, &label) in labels.iter().enumerate() {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += (v as f64 - maxv).exp();
+        }
+        // −log softmax[label] = log Σ exp(z − max) − (z_label − max)
+        total += denom.ln() - (row[label as usize] as f64 - maxv);
+    }
+    Ok(total / rows as f64)
+}
+
+/// Fraction of rows whose argmax logit equals the label (ties resolve
+/// to the lowest class index, deterministically).
+pub fn accuracy(logits: &[f32], classes: usize, labels: &[u32]) -> Result<f64> {
+    let rows = check_logits(logits, classes, labels)?;
+    let mut correct = 0usize;
+    for (r, &label) in labels.iter().enumerate() {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[arg] {
+                arg = j;
+            }
+        }
+        if arg == label as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / rows as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -497,5 +561,40 @@ mod tests {
         let s = Summary::of(&[1.0, 1.0, 1.0, 1.0, 1000.0]);
         assert!(s.mad < 1.0, "MAD should ignore the outlier, got {}", s.mad);
         assert!(s.stddev > 100.0, "stddev should see the outlier");
+    }
+
+    #[test]
+    fn cross_entropy_uniform_and_confident() {
+        // uniform logits → ln(C) regardless of labels
+        let ce = cross_entropy(&[0.0; 8], 4, &[0, 3]).unwrap();
+        assert!((ce - (4.0f64).ln()).abs() < 1e-12, "uniform CE {ce}");
+        // strongly correct logits → near-zero loss
+        let ce = cross_entropy(&[20.0, 0.0, 0.0, 20.0], 2, &[0, 1]).unwrap();
+        assert!(ce < 1e-6, "confident CE {ce}");
+        // strongly wrong logits → ≈ the logit margin
+        let ce = cross_entropy(&[20.0, 0.0], 2, &[1]).unwrap();
+        assert!((ce - 20.0).abs() < 1e-6, "wrong CE {ce}");
+        // stable at scales that overflow a naive f32 exp
+        let ce = cross_entropy(&[120.0, 0.0], 2, &[0]).unwrap();
+        assert!(ce.is_finite() && ce >= 0.0);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_matches() {
+        let logits = [1.0, 2.0, /* row 1 */ 5.0, -1.0, /* row 2 */ 0.0, 0.0];
+        // ties resolve to class 0
+        let acc = accuracy(&logits, 2, &[1, 0, 0]).unwrap();
+        assert!((acc - 1.0).abs() < 1e-12);
+        let acc = accuracy(&logits, 2, &[0, 0, 1]).unwrap();
+        assert!((acc - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metric_shape_validation() {
+        assert!(cross_entropy(&[1.0, 2.0, 3.0], 2, &[0]).is_err());
+        assert!(cross_entropy(&[1.0, 2.0], 2, &[0, 1]).is_err());
+        assert!(cross_entropy(&[1.0, 2.0], 2, &[2]).is_err());
+        assert!(cross_entropy(&[], 2, &[]).is_err());
+        assert!(accuracy(&[1.0], 0, &[]).is_err());
     }
 }

@@ -1,0 +1,365 @@
+//! Training-subsystem integration (the ISSUE-9 acceptance criteria):
+//! finite-difference gradient checks per backward stage (FP / NA / SA)
+//! across the models, fused-vs-unfused backward equivalence with a
+//! strictly lower dispatch count, seeded-epoch determinism across
+//! thread counts and shard layouts, and a monotonically decreasing
+//! full-batch fit.
+
+use hgnn_char::datasets::{self, DatasetId, DatasetScale};
+use hgnn_char::graph::HeteroGraph;
+use hgnn_char::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
+use hgnn_char::partition::PartitionSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::session::{ExecBackend, NativeBackend, Session, SessionBuilder};
+use hgnn_char::tensor::Tensor;
+use hgnn_char::train::{self, OptimizerSpec, TrainConfig};
+use hgnn_char::util::Pcg32;
+
+fn setup(model: ModelId) -> (HeteroGraph, ModelPlan) {
+    let hg = datasets::build(DatasetId::Imdb, &DatasetScale::ci()).unwrap();
+    let plan = models::build_plan(model, &hg, &ModelConfig::default()).unwrap();
+    (hg, plan)
+}
+
+/// A deterministic classifier head + batch + labels for loss checks.
+fn task(plan: &ModelPlan, hg: &HeteroGraph) -> (Tensor, Vec<u32>, Vec<u32>) {
+    let hidden = plan.config.hidden_dim;
+    let classes = 4;
+    let mut rng = Pcg32::new(7, 1);
+    let head = Tensor::randn(hidden, classes, (1.0 / hidden as f32).sqrt(), &mut rng);
+    let count = hg.node_type(plan.target).count;
+    let rows: Vec<u32> = (0..count.min(16) as u32).collect();
+    let labels: Vec<u32> = rows.iter().map(|&g| train::synthetic_label(5, g, classes)).collect();
+    (head, rows, labels)
+}
+
+fn loss_of(plan: &ModelPlan, hg: &HeteroGraph, head: &Tensor, rows: &[u32], labels: &[u32]) -> f64 {
+    let backend = NativeBackend::new();
+    let mut ctx = backend.make_ctx();
+    train::run_batch(&backend, &mut ctx, plan, hg, head, rows, labels, true).unwrap().loss
+}
+
+/// Stage tag per parameter group, in [`ModelWeights::params`] order
+/// (proj + embed = FP, attention vectors = NA, semantic MLP = SA).
+fn stage_tags(w: &ModelWeights) -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = Vec::new();
+    for _ in 0..w.proj.len() + w.embed.len() {
+        v.push("FP");
+    }
+    for _ in 0..w.attn_l.len() + w.attn_r.len() + w.inst_attn.len() {
+        v.push("NA");
+    }
+    if w.sem_w.is_some() {
+        v.push("SA");
+    }
+    v.push("SA");
+    if w.sem_q.is_some() {
+        v.push("SA");
+    }
+    v
+}
+
+/// Central finite difference along the analytic gradient direction of
+/// one backward stage: perturbing every parameter of the stage by
+/// `±eps·g/‖g‖` must change the loss by `±eps·‖g‖` to first order, so
+/// the measured slope pins both the direction and the magnitude of the
+/// stage's gradients.
+fn fd_check_stages(model: ModelId) {
+    let (hg, plan) = setup(model);
+    let (head, rows, labels) = task(&plan, &hg);
+    let backend = NativeBackend::new();
+    let mut ctx = backend.make_ctx();
+    let res =
+        train::run_batch(&backend, &mut ctx, &plan, &hg, &head, &rows, &labels, true).unwrap();
+    let tags = stage_tags(&plan.weights);
+    let eps = 2e-2f64;
+
+    let mut checked = 0;
+    for stage in ["FP", "NA", "SA"] {
+        let g_groups = res.grads.weights.params();
+        assert_eq!(g_groups.len(), tags.len(), "{model:?}: tag/group arity");
+        let idxs: Vec<usize> = (0..tags.len())
+            .filter(|&i| tags[i] == stage && !g_groups[i].is_empty())
+            .collect();
+        if idxs.is_empty() {
+            continue; // e.g. R-GCN has no NA/SA parameters
+        }
+        let norm: f64 = idxs
+            .iter()
+            .map(|&i| g_groups[i].iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        assert!(norm > 1e-6, "{model:?} {stage}: gradient is (near) zero — stage not wired?");
+
+        let perturbed = |sign: f64| -> f64 {
+            let mut w = plan.weights.clone();
+            {
+                let mut groups = w.params_mut();
+                for &i in &idxs {
+                    for (x, &g) in groups[i].iter_mut().zip(g_groups[i]) {
+                        *x += (sign * eps * (g as f64) / norm) as f32;
+                    }
+                }
+            }
+            let p = ModelPlan { weights: w, ..plan.clone() };
+            loss_of(&p, &hg, &head, &rows, &labels)
+        };
+        let fd = (perturbed(1.0) - perturbed(-1.0)) / (2.0 * eps);
+        let rel = (fd - norm).abs() / norm.max(fd.abs()).max(1e-3);
+        assert!(
+            rel <= 1e-3,
+            "{model:?} {stage}: FD slope {fd:.6e} vs analytic ‖g‖ {norm:.6e} (rel {rel:.2e})"
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "{model:?}: no stage had parameters to check");
+}
+
+#[test]
+fn fd_gradients_rgcn() {
+    fd_check_stages(ModelId::Rgcn);
+}
+
+#[test]
+fn fd_gradients_han() {
+    fd_check_stages(ModelId::Han);
+}
+
+#[test]
+fn fd_gradients_magnn() {
+    fd_check_stages(ModelId::Magnn);
+}
+
+/// The classifier-head gradient from the loss backward obeys the same
+/// finite-difference identity.
+#[test]
+fn fd_gradient_classifier_head() {
+    let (hg, plan) = setup(ModelId::Han);
+    let (head, rows, labels) = task(&plan, &hg);
+    let backend = NativeBackend::new();
+    let mut ctx = backend.make_ctx();
+    let res =
+        train::run_batch(&backend, &mut ctx, &plan, &hg, &head, &rows, &labels, true).unwrap();
+    let g = res.head_grad;
+    let norm: f64 = g.as_slice().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    assert!(norm > 1e-6);
+    let eps = 2e-2f64;
+    let perturbed = |sign: f64| -> f64 {
+        let mut h = head.clone();
+        for (x, &d) in h.as_mut_slice().iter_mut().zip(g.as_slice()) {
+            *x += (sign * eps * (d as f64) / norm) as f32;
+        }
+        loss_of(&plan, &hg, &h, &rows, &labels)
+    };
+    let fd = (perturbed(1.0) - perturbed(-1.0)) / (2.0 * eps);
+    let rel = (fd - norm).abs() / norm.max(fd.abs()).max(1e-3);
+    assert!(rel <= 1e-3, "head: FD {fd:.6e} vs ‖g‖ {norm:.6e} (rel {rel:.2e})");
+}
+
+/// Fusing the backward kernel swarm must not change a single gradient
+/// bit — only the dispatch count, which drops strictly below the
+/// unfused count whenever the model has more than one subgraph.
+#[test]
+fn fused_backward_matches_unfused_with_fewer_dispatches() {
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let (hg, plan) = setup(model);
+        let (head, rows, labels) = task(&plan, &hg);
+        let backend = NativeBackend::new();
+        let mut ctx = backend.make_ctx();
+        let fused =
+            train::run_batch(&backend, &mut ctx, &plan, &hg, &head, &rows, &labels, true).unwrap();
+        let unfused = train::run_batch(&backend, &mut ctx, &plan, &hg, &head, &rows, &labels, false)
+            .unwrap();
+        assert_eq!(fused.loss.to_bits(), unfused.loss.to_bits(), "{model:?} loss");
+        for (a, b) in
+            fused.grads.weights.params().iter().zip(unfused.grads.weights.params().iter())
+        {
+            assert_eq!(a, b, "{model:?}: fused/unfused gradients diverge");
+        }
+        assert!(
+            fused.backward_dispatches < unfused.backward_dispatches,
+            "{model:?}: fused {} !< unfused {} backward dispatches",
+            fused.backward_dispatches,
+            unfused.backward_dispatches
+        );
+    }
+}
+
+fn ci_builder(model: ModelId) -> SessionBuilder {
+    Session::builder().dataset(DatasetId::Imdb).scale(DatasetScale::ci()).model(model)
+}
+
+fn weights_equal(a: &ModelWeights, b: &ModelWeights) -> bool {
+    let (ga, gb) = (a.params(), b.params());
+    ga.len() == gb.len() && ga.iter().zip(&gb).all(|(x, y)| x == y)
+}
+
+/// Seeded weight init is a pure function of the seed: two sessions
+/// seeded alike produce bit-identical weights and outputs; a different
+/// seed produces different weights.
+#[test]
+fn init_weights_is_seed_deterministic() {
+    let mut a = ci_builder(ModelId::Han).build().unwrap();
+    let mut b = ci_builder(ModelId::Han).build().unwrap();
+    a.init_weights(42).unwrap();
+    b.init_weights(42).unwrap();
+    assert!(weights_equal(&a.plan().weights, &b.plan().weights));
+    let (ra, rb) = (a.run().unwrap(), b.run().unwrap());
+    assert!(ra.output.allclose(&rb.output, 0.0, 0.0));
+    b.init_weights(43).unwrap();
+    assert!(!weights_equal(&a.plan().weights, &b.plan().weights));
+}
+
+/// A seeded 3-epoch full-batch fit decreases the loss monotonically
+/// (plain gradient descent: momentum off, small step, one batch per
+/// epoch, loss measured before each step).
+#[test]
+fn full_batch_fit_decreases_loss_monotonically() {
+    let config = TrainConfig {
+        epochs: 3,
+        batch: usize::MAX,
+        optimizer: OptimizerSpec::Sgd { lr: 0.01, momentum: 0.0 },
+        seed: 0xBEEF,
+        classes: 4,
+        fused: true,
+    };
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let mut session = ci_builder(model).build().unwrap();
+        session.init_weights(config.seed).unwrap();
+        let report = session.fit(&config).unwrap();
+        assert_eq!(report.epochs.len(), 3);
+        let losses: Vec<f64> = report.epochs.iter().map(|e| e.loss).collect();
+        assert!(
+            report.monotonic_loss(),
+            "{model:?}: loss not monotonically decreasing: {losses:?}"
+        );
+        assert!(report.epochs.iter().all(|e| e.loss.is_finite() && e.backward_dispatches > 0));
+    }
+}
+
+/// One seeded training run is bit-identical at every thread count —
+/// the backward stages keep the serial per-row accumulation order of
+/// the forward kernels.
+#[test]
+fn training_is_bit_identical_across_thread_counts() {
+    let config = TrainConfig {
+        epochs: 2,
+        batch: 8,
+        optimizer: OptimizerSpec::sgd(0.05),
+        seed: 0x51ED,
+        classes: 4,
+        fused: true,
+    };
+    let mut reports = Vec::new();
+    let mut finals = Vec::new();
+    for threads in [1usize, 4] {
+        let mut session = ci_builder(ModelId::Han).threads(threads).build().unwrap();
+        session.init_weights(config.seed).unwrap();
+        reports.push(session.fit(&config).unwrap());
+        finals.push(session.plan().weights.clone());
+    }
+    for (a, b) in reports[0].epochs.iter().zip(&reports[1].epochs) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {} loss", a.epoch);
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.backward_dispatches, b.backward_dispatches);
+    }
+    assert!(weights_equal(&finals[0], &finals[1]), "weights diverge across thread counts");
+}
+
+/// Training composes with `--shards`: the sharded session trains on the
+/// same full-graph math, so losses and final weights stay bit-identical
+/// between shard counts {1, 2}, and post-training inference still runs
+/// through the sharded forward.
+#[test]
+fn training_is_bit_identical_across_shard_layouts() {
+    let config = TrainConfig {
+        epochs: 2,
+        batch: 8,
+        optimizer: OptimizerSpec::sgd(0.05),
+        seed: 0x51ED,
+        classes: 4,
+        fused: true,
+    };
+    let mut mono = ci_builder(ModelId::Han).build().unwrap();
+    mono.init_weights(config.seed).unwrap();
+    let report_mono = mono.fit(&config).unwrap();
+
+    let mut sharded = ci_builder(ModelId::Han).partition(PartitionSpec::new(2)).build().unwrap();
+    sharded.init_weights(config.seed).unwrap();
+    let report_sharded = sharded.fit(&config).unwrap();
+
+    for (a, b) in report_mono.epochs.iter().zip(&report_sharded.epochs) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {} loss", a.epoch);
+    }
+    assert!(weights_equal(&mono.plan().weights, &sharded.plan().weights));
+    // the sharded forward serves the trained weights bit-identically
+    let (rm, rs) = (mono.run().unwrap(), sharded.run().unwrap());
+    assert!(rm.output.allclose(&rs.output, 0.0, 0.0));
+}
+
+/// Training through the neighbor sampler: with neighbor-covering fanout
+/// and one full-coverage batch, the sampled path reproduces the
+/// full-graph epoch loss, and the gradients flow through the sampled
+/// plan's sliced embedding tables (R-GCN) without shape errors.
+#[test]
+fn sampled_training_matches_full_graph_at_full_coverage() {
+    let config = TrainConfig {
+        epochs: 1,
+        batch: usize::MAX,
+        optimizer: OptimizerSpec::sgd(0.05),
+        seed: 0xAB,
+        classes: 4,
+        fused: true,
+    };
+    for model in [ModelId::Han, ModelId::Rgcn] {
+        let mut full = ci_builder(model).build().unwrap();
+        full.init_weights(config.seed).unwrap();
+        let report_full = full.fit(&config).unwrap();
+
+        let mut sampled = ci_builder(model)
+            .sampling(SamplingSpec::uniform(usize::MAX, 1))
+            .build()
+            .unwrap();
+        sampled.init_weights(config.seed).unwrap();
+        let report_sampled = sampled.fit(&config).unwrap();
+
+        let (a, b) = (report_full.epochs[0].loss, report_sampled.epochs[0].loss);
+        assert!(
+            (a - b).abs() < 1e-5,
+            "{model:?}: sampled epoch loss {b} diverges from full-graph {a}"
+        );
+    }
+}
+
+/// Degenerate train configs are rejected before any work happens.
+#[test]
+fn fit_rejects_degenerate_configs() {
+    let mut session = ci_builder(ModelId::Han).build().unwrap();
+    let bad = TrainConfig { epochs: 0, ..Default::default() };
+    assert!(session.fit(&bad).is_err());
+    let bad = TrainConfig { optimizer: OptimizerSpec::sgd(-1.0), ..Default::default() };
+    assert!(session.fit(&bad).is_err());
+}
+
+/// Adam also trains: loss after 3 epochs ends below the ln(C) level of
+/// an uninformed classifier.
+#[test]
+fn adam_fit_reduces_loss_below_chance() {
+    let config = TrainConfig {
+        epochs: 3,
+        batch: usize::MAX,
+        optimizer: OptimizerSpec::adam(0.01),
+        seed: 0xBEEF,
+        classes: 4,
+        fused: true,
+    };
+    let mut session = ci_builder(ModelId::Han).build().unwrap();
+    session.init_weights(config.seed).unwrap();
+    let report = session.fit(&config).unwrap();
+    let chance = (4.0f64).ln();
+    assert!(
+        report.final_loss() < chance,
+        "final loss {} not below chance {chance}",
+        report.final_loss()
+    );
+}
