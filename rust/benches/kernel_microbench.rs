@@ -3,11 +3,14 @@
 //! Pallas kernels when artifacts are present.
 //!
 //! This is the before/after harness for EXPERIMENTS.md §Perf: sgemm
-//! blocking variants, SpMM over increasing density, the intra-kernel
-//! thread-scaling sweep (1/2/4/8 pool threads over sgemm + SpMM, with a
-//! speedup-at-4 verdict and a bit-identity cross-check), the serve-path
-//! steady-state allocation check (the scratch arena at work, counted by
-//! a wrapping global allocator), and the AOT kernel round-trip cost.
+//! blocking variants, packed-vs-unpacked sgemm at the Fig 4 FP roofline
+//! sizes (with a >= 1.3x-at-large-size verdict), SpMM over increasing
+//! density, SIMD-vs-scalar SpMM at the Fig 4 NA sizes (same verdict
+//! scheme, bitwise cross-checked), the intra-kernel thread-scaling
+//! sweep (1/2/4/8 pool threads over sgemm + SpMM, with a speedup-at-4
+//! verdict and a bit-identity cross-check), the serve-path steady-state
+//! allocation check (the scratch arena at work, counted by a wrapping
+//! global allocator), and the AOT kernel round-trip cost.
 //!
 //! Run: `cargo bench --bench kernel_microbench`
 
@@ -17,7 +20,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use hgnn_char::bench::{bench, header, BenchConfig};
 use hgnn_char::datasets::{DatasetId, DatasetScale};
 use hgnn_char::graph::sparse::Coo;
-use hgnn_char::kernels::dense::{sgemm_compute, sgemm_naive, GemmBlocking};
+use hgnn_char::kernels::dense::{
+    sgemm_compute, sgemm_naive, sgemm_packed_compute, GemmBlocking, PackedB,
+};
 use hgnn_char::kernels::sparse_ops::{spmm_csr, SpmmReduce};
 use hgnn_char::kernels::Ctx;
 use hgnn_char::parallel;
@@ -84,6 +89,53 @@ fn main() {
         println!("{}   {:.2} GF/s", r.line(), gflops(r.wall.median));
     }
 
+    // ---------------- packed vs unpacked sgemm (fig4 FP sizes) -------------
+    // B-panel packing: the weight matrix is packed once into contiguous
+    // (kc x nc) tiles and reused across calls (`PackCache` on `Ctx`), so
+    // the inner microkernel streams B sequentially instead of striding.
+    // Sizes follow the paper's Fig 4 FP operands (HAN-DBLP: [N x feat]
+    // x [feat x hidden], N up to 4057, feat 334, hidden 64).
+    println!("\n--- packed vs unpacked sgemm (fig4 FP roofline sizes) ---");
+    let blk = GemmBlocking::default();
+    let fp_sizes: &[(usize, usize, usize)] = if quick {
+        &[(256, 334, 64)]
+    } else {
+        &[(256, 334, 64), (1024, 334, 64), (4057, 334, 64)]
+    };
+    let mut pack_ratio_at_large = 0.0f64;
+    for &(pm, pk, pn) in fp_sizes {
+        let pa = Tensor::randn(pm, pk, 1.0, &mut rng);
+        let pb = Tensor::randn(pk, pn, 1.0, &mut rng);
+        let r_unpacked = bench(&format!("sgemm unpacked {pm}x{pk}x{pn}"), &cfg, || {
+            sgemm_compute(&pa, &pb, blk)
+        });
+        let packed = PackedB::pack(&pb, blk);
+        let r_packed = bench(&format!("sgemm packed   {pm}x{pk}x{pn}"), &cfg, || {
+            sgemm_packed_compute(&pa, &packed)
+        });
+        let gf = |nanos: f64| 2.0 * pm as f64 * pk as f64 * pn as f64 / nanos;
+        pack_ratio_at_large = r_unpacked.wall.median / r_packed.wall.median.max(1.0);
+        println!(
+            "{}   {:.2} GF/s",
+            r_unpacked.line(),
+            gf(r_unpacked.wall.median)
+        );
+        println!(
+            "{}   {:.2} GF/s   ({pack_ratio_at_large:.2}x vs unpacked)",
+            r_packed.line(),
+            gf(r_packed.wall.median)
+        );
+        let bitwise = sgemm_packed_compute(&pa, &packed)
+            .allclose(&sgemm_compute(&pa, &pb, blk), 0.0, 0.0);
+        assert!(bitwise, "packed sgemm must be bit-identical to unpacked");
+    }
+    if !quick {
+        println!(
+            "verdict: {} (target >= 1.3x packed-vs-unpacked at the large FP size)",
+            if pack_ratio_at_large >= 1.3 { "PASS" } else { "MISS" }
+        );
+    }
+
     // ---------------- SpMM density sweep ----------------------------------
     println!("\n--- SpMMCsr: density sweep (n=4096 nodes, f=64) ---");
     let nodes = if quick { 512 } else { 4096 };
@@ -104,6 +156,64 @@ fn main() {
         });
         let gbps = (nnz * f * 4) as f64 / r.wall.median;
         println!("{}   gather {gbps:.2} GB/s", r.line());
+    }
+
+    // ---------------- SIMD vs scalar SpMM (fig4 NA sizes) ------------------
+    // The lane-array accumulators in `spmm_csr` vs a deliberately scalar
+    // per-element gather loop — same edge order, bit-identical output;
+    // the paper's NA kernels are memory-bound, so the win caps at the
+    // gather bandwidth rather than lane count.
+    println!("\n--- SIMD vs scalar SpMM (fig4 NA roofline sizes) ---");
+    let simd_nodes = if quick { 512 } else { 4096 };
+    let mut simd_ratio_at_large = 0.0f64;
+    let mut large_label = String::new();
+    for &(avg_deg, f) in if quick {
+        &[(8usize, 64usize)][..]
+    } else {
+        &[(8usize, 64usize), (32, 64), (32, 256)][..]
+    } {
+        let x = Tensor::randn(simd_nodes, f, 1.0, &mut rng);
+        let mut edges = Vec::with_capacity(simd_nodes * avg_deg);
+        for d in 0..simd_nodes as u32 {
+            for _ in 0..avg_deg {
+                edges.push((d, rng.gen_range(simd_nodes) as u32));
+            }
+        }
+        let adj = Coo::from_edges(simd_nodes, simd_nodes, edges).unwrap().to_csr();
+        let xs = x.as_slice();
+        let scalar = || {
+            let mut out = vec![0.0f32; simd_nodes * f];
+            for d in 0..simd_nodes {
+                let (lo, hi) = (adj.indptr[d] as usize, adj.indptr[d + 1] as usize);
+                for e in lo..hi {
+                    let s = adj.indices[e] as usize * f;
+                    for j in 0..f {
+                        out[d * f + j] += xs[s + j];
+                    }
+                }
+            }
+            out
+        };
+        let r_scalar = bench(&format!("spmm scalar deg={avg_deg} f={f}"), &cfg, &scalar);
+        let r_simd = parallel::with_threads(1, || {
+            bench(&format!("spmm simd   deg={avg_deg} f={f}"), &cfg, || {
+                let mut ctx = Ctx::default();
+                spmm_csr(&mut ctx, &adj, &x, None, SpmmReduce::Sum).unwrap()
+            })
+        });
+        simd_ratio_at_large = r_scalar.wall.median / r_simd.wall.median.max(1.0);
+        large_label = format!("deg={avg_deg} f={f}");
+        println!("{}", r_scalar.line());
+        println!("{}   ({simd_ratio_at_large:.2}x vs scalar)", r_simd.line());
+        let mut ctx = Ctx::default();
+        let simd_out = spmm_csr(&mut ctx, &adj, &x, None, SpmmReduce::Sum).unwrap();
+        assert_eq!(simd_out.as_slice(), &scalar()[..], "SIMD spmm must match scalar bitwise");
+    }
+    if !quick {
+        println!(
+            "verdict: {} (target >= 1.3x SIMD-vs-scalar at the large NA size, {large_label})",
+            if simd_ratio_at_large >= 1.3 { "PASS" } else { "MISS" }
+        );
     }
 
     // ---------------- intra-kernel thread scaling --------------------------

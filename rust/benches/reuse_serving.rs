@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use hgnn_char::bench::{header, sink};
 use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::kernels::quant::QuantSpec;
 use hgnn_char::models::ModelId;
 use hgnn_char::reuse::ReuseSpec;
 use hgnn_char::session::{SamplingSpec, ServeConfig, Session, SessionBuilder};
@@ -144,6 +145,60 @@ fn main() {
             if monotone { "yes" } else { "NO (wall noise or regression)" }
         );
     }
+
+    // quantized reuse serving: same Zipf stream with cache rows stored as
+    // f16/int8 (and fake-quantized FP weights); reports latency alongside
+    // the logit error the smaller formats buy it with
+    println!("-- quantized reuse serving (cap {} rows, zipf-1.2) --", 2 * total);
+    let qbatches = if quick { 10 } else { 40 };
+    let formats: [(Option<QuantSpec>, &str); 3] =
+        [(None, "f32"), (Some(QuantSpec::F16), "f16"), (Some(QuantSpec::Int8), "int8")];
+    let mut f32_out: Vec<Vec<f32>> = Vec::new();
+    let mut f32_ms = 0.0f64;
+    for &(spec, name) in &formats {
+        let mut b = builder().reuse(ReuseSpec::rows(2 * total));
+        if let Some(spec) = spec {
+            b = b.quantize(spec);
+        }
+        let mut session = b.build().unwrap();
+        // identical deterministic batch sequence in every cell
+        let mut zipf = Zipf::new(n, 1.2, 0xBEEF);
+        for _ in 0..3 {
+            let ids: Vec<u32> = (0..BATCH).map(|_| zipf.next()).collect();
+            sink(session.run_batch(&ids).unwrap());
+        }
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let t0 = Instant::now();
+        for _ in 0..qbatches {
+            let ids: Vec<u32> = (0..BATCH).map(|_| zipf.next()).collect();
+            outs.extend(session.run_batch(&ids).unwrap());
+        }
+        let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / qbatches as f64;
+        if spec.is_none() {
+            println!("  {name:>4}  {mean_ms:>9.3} ms/batch  (f32 reference)");
+            f32_out = outs;
+            f32_ms = mean_ms;
+        } else {
+            let mut max_err = 0.0f64;
+            let mut sum_err = 0.0f64;
+            let mut count = 0u64;
+            for (a, b) in f32_out.iter().zip(&outs) {
+                for (&x, &y) in a.iter().zip(b) {
+                    let e = (f64::from(x) - f64::from(y)).abs();
+                    max_err = max_err.max(e);
+                    sum_err += e;
+                    count += 1;
+                }
+            }
+            let mean_err = sum_err / count.max(1) as f64;
+            println!(
+                "  {name:>4}  {mean_ms:>9.3} ms/batch  ({:.2}x vs f32)  \
+                 max abs logit err {max_err:.3e}, mean {mean_err:.3e}",
+                f32_ms / mean_ms.max(1e-9)
+            );
+        }
+    }
+    println!();
 
     // end-to-end serving loop: one shared cache across every dispatch
     let server = builder()

@@ -238,6 +238,20 @@ impl Args {
         Ok(config)
     }
 
+    /// Quantized feature-projection format from `--quantize f16|int8`
+    /// (default `None`: the all-f32 path). A bare `--quantize` switch
+    /// or an unknown format name is rejected at parse level, mirroring
+    /// `--threads`.
+    pub fn quantize(&self) -> Result<Option<crate::kernels::quant::QuantSpec>> {
+        match self.flags.get("quantize") {
+            None => Ok(None),
+            Some(v) => match crate::kernels::quant::QuantSpec::parse(v) {
+                Some(spec) => Ok(Some(spec)),
+                None => Err(Error::config(format!("--quantize '{v}': expected f16 or int8"))),
+            },
+        }
+    }
+
     /// Dataset scale from `--scale paper|ci|<factor>` (default paper).
     pub fn scale(&self) -> Result<crate::datasets::DatasetScale> {
         match self.flag_str("scale", "paper").as_str() {
@@ -314,6 +328,10 @@ COMMANDS:
                                    onto N workers over the wire protocol
                                    (sim transport by default; sockets
                                    with --features cluster-sockets)
+      [--quantize f16|int8]        quantized feature projection: FP
+                                   weights stored round-tripped through
+                                   the format; prints the accuracy
+                                   delta vs an f32 baseline run
   figure <2|3|4|5a|5b|5c|6a|6b>  regenerate a paper figure
       [--scale ...]
   table <3>                      regenerate a paper table
@@ -344,6 +362,9 @@ COMMANDS:
                                    the epoch barrier while serving
       [--epoch-every N]            served batches between epoch flips
                                    (default 1; requires --update-stream)
+      [--quantize f16|int8]        quantized serving: FP weights and
+                                   reuse-cache rows stored in the
+                                   format (2-4x smaller residency)
   train --model M --dataset D    mini-batch training on synthetic labels
       [--epochs N]                 epochs to run (default 3)
       [--lr X]                     learning rate (default 0.05)
@@ -623,9 +644,28 @@ mod tests {
             "--update-stream",
             "--epoch-every",
             "--cluster",
+            "--quantize",
         ] {
             assert!(USAGE.contains(flag), "usage missing {flag}");
         }
+    }
+
+    #[test]
+    fn quantize_flag_parsing() {
+        use crate::kernels::quant::QuantSpec;
+        // absent: the default all-f32 path
+        assert_eq!(parse("run").quantize().unwrap(), None);
+        // both formats, both spellings
+        assert_eq!(parse("run --quantize f16").quantize().unwrap(), Some(QuantSpec::F16));
+        assert_eq!(parse("serve --quantize=int8").quantize().unwrap(), Some(QuantSpec::Int8));
+        // unknown formats and the bare switch are rejected
+        assert!(parse("run --quantize fp8").quantize().is_err());
+        assert!(parse("run --quantize").quantize().is_err());
+        assert!(parse("run --quantize=").quantize().is_err());
+        // composes with the serving incantation
+        let a = parse("serve --fanout 8 --reuse-cap 128 --quantize f16 --shards 2");
+        assert_eq!(a.quantize().unwrap(), Some(QuantSpec::F16));
+        assert_eq!(a.partition().unwrap().unwrap().shards, 2);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::kernels::dense::{sgemm, sgemm_bias, GemmBlocking};
+use crate::kernels::dense::{sgemm, sgemm_bias, sgemm_cached, GemmBlocking, PackKey};
 use crate::kernels::elementwise::{
     reduce_grouped_rows, reduce_rows_mean, scale_rows, softmax_vec, unary, UnaryOp,
 };
@@ -18,7 +18,10 @@ use crate::{Error, Result};
 
 /// Feature Projection: project every node type the plan touches into the
 /// hidden space with a type-specific linear transformation (one `sgemm`
-/// per type — the paper's DM-dominated stage).
+/// per type — the paper's DM-dominated stage). Each type's weight
+/// matrix goes through the packed-panel cache ([`sgemm_cached`] keyed
+/// by [`PackKey::Proj`]), so a ctx that lives across batches or
+/// training steps packs each weight once per weights generation.
 pub fn feature_projection(
     ctx: &mut Ctx,
     plan: &ModelPlan,
@@ -38,7 +41,7 @@ pub fn feature_projection(
                 w.rows()
             )));
         }
-        let h = sgemm(ctx, x, w, blocking)?;
+        let h = sgemm_cached(ctx, x, w, PackKey::Proj(ty), blocking)?;
         projected.insert(ty, h);
     }
     Ok(projected)
@@ -148,9 +151,7 @@ pub fn segment_sum_edges(ctx: &mut Ctx, adj: &crate::graph::Csr, edge_feats: &Te
                 let lo = adj.indptr[d] as usize;
                 let hi = adj.indptr[d + 1] as usize;
                 for e in lo..hi {
-                    for (o, &v) in orow.iter_mut().zip(edge_feats.row(e)) {
-                        *o += v;
-                    }
+                    crate::kernels::simd::add_assign(orow, edge_feats.row(e));
                 }
             }
         });

@@ -3,20 +3,37 @@
 //! The paper's Feature Projection stage is almost entirely `sgemm`
 //! (97.4% of FP time for HAN-DBLP, Table 3), and Semantic Aggregation's
 //! attention-weight computation is `sgemm` again. The native
-//! implementation here is a cache-blocked, 8-wide-unrolled matmul —
-//! the L3 perf pass iterates on the blocking (see EXPERIMENTS.md §Perf)
-//! — parallelized over M-dimension macro-row blocks on the
-//! [`crate::parallel`] worker pool. Each output row's k-loop order is
-//! unchanged by the blocking, so parallel results are **bit-identical**
-//! to serial ones at every thread count.
+//! implementation here is a cache-blocked matmul whose 2-row inner loop
+//! runs on the explicit-width SIMD microkernels of
+//! [`crate::kernels::simd`] — the L3 perf pass iterates on the blocking
+//! (see EXPERIMENTS.md §Perf) — parallelized over M-dimension macro-row
+//! blocks on the [`crate::parallel`] worker pool. Each output row's
+//! k-loop order is unchanged by the blocking, so parallel results are
+//! **bit-identical** to serial ones at every thread count.
+//!
+//! On top of the blocked core sits a **packed-B tier**: [`PackedB`]
+//! lays the weight operand out as contiguous (kc × nc) panel tiles in
+//! exactly the order the macro-kernel walks them, so the inner loop
+//! streams B sequentially instead of striding `n` floats between rows.
+//! [`PackCache`] (one per [`Ctx`], keyed by [`PackKey`]) packs each
+//! weight matrix once per weights generation and reuses the panels
+//! across served batches and training steps; [`sgemm_cached`] is the
+//! instrumented entry point. The packed macro-kernel replays the exact
+//! tile walk and per-element accumulation order of the unpacked one, so
+//! packed results are bit-identical to unpacked — and [`sgemm_tn`] /
+//! [`sgemm_nt`] share the same packed-panel core.
 
-use crate::kernels::{Ctx, KernelCounters, KernelType};
+use std::collections::HashMap;
+
+use crate::kernels::{simd, Ctx, KernelCounters, KernelType};
 use crate::parallel;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
 /// Cache-blocking parameters for [`sgemm`]. Tuned in the perf pass.
-#[derive(Debug, Clone, Copy)]
+/// Equality matters: [`PackCache::ensure`] repacks when the blocking a
+/// panel was packed under differs from the one requested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmBlocking {
     /// Rows of A per macro-tile.
     pub mc: usize,
@@ -170,10 +187,7 @@ fn sgemm_panel(
                         let (o0, o1) = block.split_at_mut((i + 1 - r0) * n);
                         let o0 = &mut o0[(i - r0) * n + jc..(i - r0) * n + jc + nc];
                         let o1 = &mut o1[jc..jc + nc];
-                        for ((x0, x1), &b) in o0.iter_mut().zip(o1.iter_mut()).zip(brow) {
-                            *x0 += v0 * b;
-                            *x1 += v1 * b;
-                        }
+                        simd::axpy2(o0, o1, v0, v1, brow);
                     }
                     i += 2;
                 }
@@ -186,9 +200,281 @@ fn sgemm_panel(
                         }
                         let brow = &bv[(pc + p) * n + jc..(pc + p) * n + jc + nc];
                         let orow = &mut block[(i - r0) * n + jc..(i - r0) * n + jc + nc];
-                        for (o, &b) in orow.iter_mut().zip(brow) {
-                            *o += aval * b;
+                        simd::axpy(orow, aval, brow);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The B operand of a blocked matmul, re-laid-out as contiguous
+/// (kc × nc) panel tiles in exactly the order [`sgemm_panel`] walks
+/// them (jc-major, then pc). Inside a tile, row `p` holds
+/// `B[pc + p, jc..jc + nc]` contiguously, so the packed macro-kernel
+/// streams B sequentially instead of striding `n` floats between
+/// k-rows. Packing is a pure re-layout — the packed kernel consumes the
+/// identical values in the identical order, so results are
+/// bit-identical to the unpacked path.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    blk: GemmBlocking,
+    data: Vec<f32>,
+    /// Tile start offsets in `data`, `n_jc * n_pc + 1` entries
+    /// (jc-major), last one a sentinel at `data.len()`.
+    tile_off: Vec<usize>,
+    n_pc: usize,
+}
+
+impl PackedB {
+    /// Pack a row-major `b: [k, n]` under `blk`.
+    pub fn pack(b: &Tensor, blk: GemmBlocking) -> PackedB {
+        let (k, n) = b.shape();
+        let bv = b.as_slice();
+        Self::pack_rows(k, n, blk, |pc_p, jc, nc, data| {
+            data.extend_from_slice(&bv[pc_p * n + jc..pc_p * n + jc + nc]);
+        })
+    }
+
+    /// Pack the **transpose** of a row-major `bt: [n, k]` — i.e. the
+    /// logical B is `btᵀ: [k, n]` — without materializing the
+    /// transposed matrix ([`sgemm_nt`]'s shape).
+    pub fn pack_transposed(bt: &Tensor, blk: GemmBlocking) -> PackedB {
+        let (n, k) = bt.shape();
+        let bv = bt.as_slice();
+        Self::pack_rows(k, n, blk, |pc_p, jc, nc, data| {
+            data.extend((0..nc).map(|j| bv[(jc + j) * k + pc_p]));
+        })
+    }
+
+    fn pack_rows(
+        k: usize,
+        n: usize,
+        blk: GemmBlocking,
+        mut copy_row: impl FnMut(usize, usize, usize, &mut Vec<f32>),
+    ) -> PackedB {
+        let n_pc = k.div_ceil(blk.kc.max(1));
+        let n_jc = n.div_ceil(blk.nc.max(1));
+        let mut data = Vec::with_capacity(k * n);
+        let mut tile_off = Vec::with_capacity(n_jc * n_pc + 1);
+        tile_off.push(0);
+        for jc in (0..n).step_by(blk.nc) {
+            let nc = blk.nc.min(n - jc);
+            for pc in (0..k).step_by(blk.kc) {
+                let kc = blk.kc.min(k - pc);
+                for p in 0..kc {
+                    copy_row(pc + p, jc, nc, &mut data);
+                }
+                tile_off.push(data.len());
+            }
+        }
+        PackedB { k, n, blk, data, tile_off, n_pc }
+    }
+
+    /// The (jc_idx, pc_idx) tile as a flat slice of `kc_eff` rows of
+    /// `nc_eff` contiguous elements.
+    #[inline]
+    fn tile(&self, jc_idx: usize, pc_idx: usize) -> &[f32] {
+        let t = jc_idx * self.n_pc + pc_idx;
+        &self.data[self.tile_off[t]..self.tile_off[t + 1]]
+    }
+
+    /// K extent of the packed operand.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// N extent of the packed operand.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The blocking this panel was packed under.
+    pub fn blocking(&self) -> GemmBlocking {
+        self.blk
+    }
+
+    /// Bytes held by the packed layout.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4 + self.tile_off.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Identity of a packed weight panel in a [`PackCache`] — which weight
+/// matrix of the plan it holds, not where it lives in memory (pointer
+/// keys would alias across reallocated tensors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PackKey {
+    /// Per-type Feature Projection weight `W_ty` (keyed by node type id).
+    Proj(usize),
+    /// Semantic Aggregation attention weight `sem_w`.
+    SemW,
+    /// Semantic Aggregation attention query `sem_q`.
+    SemQ,
+}
+
+/// Per-[`Ctx`] cache of packed B panels: each weight matrix is packed
+/// once per (weights-generation, blocking) and the panel reused across
+/// served batches and training steps. Generations are detected two
+/// ways: `Session::invalidate` clears the cache on every weight swap,
+/// and [`PackCache::ensure`] re-fingerprints the source matrix (an
+/// FNV-1a fold over the element bits — O(k·n), negligible next to the
+/// O(m·k·n) matmul) so a stale panel can never be consumed even through
+/// call paths that bypass the session.
+#[derive(Debug, Default)]
+pub struct PackCache {
+    entries: HashMap<PackKey, (u64, PackedB)>,
+}
+
+fn content_fingerprint(values: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in values {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl PackCache {
+    /// Make sure `key` holds a current pack of `b` under `blk`,
+    /// repacking if the entry is absent, shaped differently, packed
+    /// under another blocking, or holds different values.
+    pub fn ensure(&mut self, key: PackKey, b: &Tensor, blk: GemmBlocking) {
+        let fp = content_fingerprint(b.as_slice());
+        let fresh = self.entries.get(&key).is_some_and(|(old_fp, p)| {
+            *old_fp == fp && (p.k, p.n) == b.shape() && p.blk == blk
+        });
+        if !fresh {
+            self.entries.insert(key, (fp, PackedB::pack(b, blk)));
+        }
+    }
+
+    /// The packed panel under `key`, if present.
+    pub fn get(&self, key: PackKey) -> Option<&PackedB> {
+        self.entries.get(&key).map(|(_, p)| p)
+    }
+
+    /// Drop every packed panel (weights generation changed).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Number of cached panels.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes held by all cached panels.
+    pub fn bytes(&self) -> usize {
+        self.entries.values().map(|(_, p)| p.bytes()).sum()
+    }
+}
+
+/// [`sgemm`] against a packed-and-cached B panel: the weight matrix is
+/// packed once per weights generation into `ctx.packs` under `key` and
+/// the panel reused on every subsequent call. Output, event name and
+/// counters are identical to [`sgemm`] (packing is a layout change, not
+/// a semantic one), so profiles and the pinned kernel-sequence tests
+/// see no difference.
+pub fn sgemm_cached(
+    ctx: &mut Ctx,
+    a: &Tensor,
+    b: &Tensor,
+    key: PackKey,
+    blocking: GemmBlocking,
+) -> Result<Tensor> {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    if ka != kb {
+        return Err(Error::shape(format!("sgemm: a is {m}x{ka}, b is {kb}x{n}")));
+    }
+    let t0 = std::time::Instant::now();
+    ctx.packs.ensure(key, b, blocking);
+    let mut out = ctx.scratch_zeros(m, n);
+    let pb = ctx.packs.get(key).expect("panel packed by ensure");
+    sgemm_packed_into(a, pb, &mut out);
+    let nanos = t0.elapsed().as_nanos() as u64;
+    let counters = KernelCounters {
+        flops: gemm_flops(m, ka, n),
+        bytes_read: (a.bytes() + b.bytes()) as u64,
+        bytes_written: out.bytes() as u64,
+    };
+    ctx.push("sgemm", KernelType::DenseMatmul, counters, nanos, None);
+    Ok(out)
+}
+
+/// Packed-core compute entry (no instrumentation), for benches and
+/// bit-identity tests: `out = a · B` where `pb` packs B.
+pub fn sgemm_packed_compute(a: &Tensor, pb: &PackedB) -> Tensor {
+    let mut out = Tensor::zeros(a.rows(), pb.n);
+    sgemm_packed_into(a, pb, &mut out);
+    out
+}
+
+/// Packed-core matmul into a caller-owned **zeroed** output. Same
+/// parallel split and bit-identity argument as [`sgemm_into`].
+pub fn sgemm_packed_into(a: &Tensor, pb: &PackedB, out: &mut Tensor) {
+    let (m, k) = a.shape();
+    let n = pb.n;
+    debug_assert_eq!(k, pb.k);
+    debug_assert_eq!(out.shape(), (m, n));
+    if m == 0 || n == 0 {
+        return;
+    }
+    let av = a.as_slice();
+    let mc = pb.blk.mc.max(1);
+    parallel::parallel_chunks_mut(out.as_mut_slice(), mc * n, 1, |u0, block| {
+        sgemm_panel_packed(av, pb, block, u0 * mc, k, n);
+    });
+}
+
+/// [`sgemm_panel`] against a packed B: identical jc/pc/ic tile walk and
+/// 2-row pairing — only the B-row addressing changes (contiguous tile
+/// rows instead of strided matrix rows) — so every output element's
+/// accumulation order, and hence its bits, match the unpacked panel.
+fn sgemm_panel_packed(av: &[f32], pb: &PackedB, block: &mut [f32], r0: usize, k: usize, n: usize) {
+    let blk = pb.blk;
+    let r1 = r0 + block.len() / n;
+    for (jc_idx, jc) in (0..n).step_by(blk.nc).enumerate() {
+        let nc = blk.nc.min(n - jc);
+        for (pc_idx, pc) in (0..k).step_by(blk.kc).enumerate() {
+            let kc = blk.kc.min(k - pc);
+            let tile = pb.tile(jc_idx, pc_idx);
+            for ic in (r0..r1).step_by(blk.mc) {
+                let mc = blk.mc.min(r1 - ic);
+                let mut i = ic;
+                while i + 1 < ic + mc {
+                    let (a0, a1) = (&av[i * k + pc..], &av[(i + 1) * k + pc..]);
+                    for p in 0..kc {
+                        let (v0, v1) = (a0[p], a1[p]);
+                        if v0 == 0.0 && v1 == 0.0 {
+                            continue; // one-hot feature rows hit this often
                         }
+                        let brow = &tile[p * nc..(p + 1) * nc];
+                        let (o0, o1) = block.split_at_mut((i + 1 - r0) * n);
+                        let o0 = &mut o0[(i - r0) * n + jc..(i - r0) * n + jc + nc];
+                        let o1 = &mut o1[jc..jc + nc];
+                        simd::axpy2(o0, o1, v0, v1, brow);
+                    }
+                    i += 2;
+                }
+                // odd tail row
+                if i < ic + mc {
+                    let arow = &av[i * k + pc..i * k + pc + kc];
+                    for (p, &aval) in arow.iter().enumerate() {
+                        if aval == 0.0 {
+                            continue;
+                        }
+                        let brow = &tile[p * nc..(p + 1) * nc];
+                        let orow = &mut block[(i - r0) * n + jc..(i - r0) * n + jc + nc];
+                        simd::axpy(orow, aval, brow);
                     }
                 }
             }
@@ -199,10 +485,10 @@ fn sgemm_panel(
 /// `sgemm_tn`: `out = aᵀ · b` for `a: [k,m]`, `b: [k,n]`. DM-Type.
 ///
 /// The backward pass's weight-gradient shape (`dW = Xᵀ·dH`). The
-/// transpose is materialized once (a DR-style repack, folded into the
-/// kernel's read bytes) and the blocked kernel reused, so every output
-/// element's k-accumulation order — and hence bit-identity across
-/// thread counts — matches [`sgemm`] exactly.
+/// transpose of A is materialized once (a DR-style repack, folded into
+/// the kernel's read bytes) and B goes through the shared packed-panel
+/// core, so every output element's k-accumulation order — and hence
+/// bit-identity across thread counts — matches [`sgemm`] exactly.
 pub fn sgemm_tn(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> Result<Tensor> {
     let (ka, m) = a.shape();
     let (kb, n) = b.shape();
@@ -211,8 +497,9 @@ pub fn sgemm_tn(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -
     }
     let t0 = std::time::Instant::now();
     let at = a.transposed();
+    let pb = PackedB::pack(b, blocking);
     let mut out = ctx.scratch_zeros(m, n);
-    sgemm_into(&at, b, blocking, &mut out);
+    sgemm_packed_into(&at, &pb, &mut out);
     let nanos = t0.elapsed().as_nanos() as u64;
     let counters = KernelCounters {
         flops: gemm_flops(m, ka, n),
@@ -226,8 +513,10 @@ pub fn sgemm_tn(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -
 
 /// `sgemm_nt`: `out = a · bᵀ` for `a: [m,k]`, `b: [n,k]`. DM-Type.
 ///
-/// The backward pass's activation-gradient shape (`dX = dH·Wᵀ`); same
-/// materialize-then-reuse strategy as [`sgemm_tn`].
+/// The backward pass's activation-gradient shape (`dX = dH·Wᵀ`). B's
+/// transpose is **not** materialized: [`PackedB::pack_transposed`]
+/// gathers it straight into panel layout, and the shared packed core
+/// does the rest.
 pub fn sgemm_nt(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -> Result<Tensor> {
     let (m, ka) = a.shape();
     let (n, kb) = b.shape();
@@ -235,9 +524,9 @@ pub fn sgemm_nt(ctx: &mut Ctx, a: &Tensor, b: &Tensor, blocking: GemmBlocking) -
         return Err(Error::shape(format!("sgemm_nt: a is {m}x{ka}, b is {n}x{kb}")));
     }
     let t0 = std::time::Instant::now();
-    let bt = b.transposed();
+    let pb = PackedB::pack_transposed(b, blocking);
     let mut out = ctx.scratch_zeros(m, n);
-    sgemm_into(a, &bt, blocking, &mut out);
+    sgemm_packed_into(a, &pb, &mut out);
     let nanos = t0.elapsed().as_nanos() as u64;
     let counters = KernelCounters {
         flops: gemm_flops(m, ka, n),
@@ -388,5 +677,109 @@ mod tests {
         let blocked = sgemm_compute(&a, &b, GemmBlocking::default());
         let naive = sgemm_naive(&a, &b);
         assert!(blocked.allclose(&naive, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn packed_matches_unpacked_bitwise() {
+        let mut rng = Pcg32::seeded(55);
+        // small blockings force multiple ragged tiles; shapes include
+        // K and N that are not multiples of the SIMD lane width (8)
+        let blockings = [
+            GemmBlocking::default(),
+            GemmBlocking { mc: 2, nc: 3, kc: 5 },
+            GemmBlocking { mc: 7, nc: 8, kc: 16 },
+        ];
+        for blk in blockings {
+            for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (65, 130, 31)] {
+                let a = Tensor::randn(m, k, 1.0, &mut rng);
+                let b = Tensor::randn(k, n, 1.0, &mut rng);
+                let unpacked = sgemm_compute(&a, &b, blk);
+                let packed = sgemm_packed_compute(&a, &PackedB::pack(&b, blk));
+                assert!(
+                    packed.allclose(&unpacked, 0.0, 0.0),
+                    "packed not bit-identical at {m}x{k}x{n} blk {blk:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_transposed_equals_pack_of_transpose() {
+        let mut rng = Pcg32::seeded(56);
+        let blk = GemmBlocking { mc: 4, nc: 6, kc: 10 };
+        let bt = Tensor::randn(13, 21, 1.0, &mut rng); // stored n x k
+        let direct = PackedB::pack_transposed(&bt, blk);
+        let via_materialize = PackedB::pack(&bt.transposed(), blk);
+        assert_eq!(direct.data, via_materialize.data);
+        assert_eq!(direct.tile_off, via_materialize.tile_off);
+        assert_eq!((direct.k(), direct.n()), (21, 13));
+    }
+
+    #[test]
+    fn sgemm_cached_matches_sgemm_bitwise_with_same_event() {
+        let mut rng = Pcg32::seeded(57);
+        let a = Tensor::randn(37, 19, 1.0, &mut rng);
+        let b = Tensor::randn(19, 23, 1.0, &mut rng);
+        let blk = GemmBlocking::default();
+        let mut ctx_plain = Ctx::default();
+        let plain = sgemm(&mut ctx_plain, &a, &b, blk).unwrap();
+        let mut ctx = Ctx::default();
+        let first = sgemm_cached(&mut ctx, &a, &b, PackKey::Proj(0), blk).unwrap();
+        assert_eq!(ctx.packs.len(), 1);
+        let again = sgemm_cached(&mut ctx, &a, &b, PackKey::Proj(0), blk).unwrap();
+        assert_eq!(ctx.packs.len(), 1, "second call must reuse the panel");
+        assert!(first.allclose(&plain, 0.0, 0.0));
+        assert!(again.allclose(&plain, 0.0, 0.0));
+        // instrumentation contract is byte-for-byte the sgemm one
+        assert_eq!(ctx.events.len(), 2);
+        for e in &ctx.events {
+            assert_eq!(e.name, "sgemm");
+            assert_eq!(e.ktype, KernelType::DenseMatmul);
+            assert_eq!(e.counters, ctx_plain.events[0].counters);
+        }
+        // shape mismatch still rejected
+        let bad = Tensor::zeros(5, 2);
+        assert!(sgemm_cached(&mut ctx, &a, &bad, PackKey::Proj(0), blk).is_err());
+    }
+
+    #[test]
+    fn pack_cache_repacks_on_new_values_blocking_or_shape() {
+        let mut rng = Pcg32::seeded(58);
+        let a = Tensor::randn(9, 6, 1.0, &mut rng);
+        let b1 = Tensor::randn(6, 4, 1.0, &mut rng);
+        let b2 = Tensor::randn(6, 4, 1.0, &mut rng); // same shape, new values
+        let blk = GemmBlocking::default();
+        let mut ctx = Ctx::default();
+        let key = PackKey::SemW;
+        let o1 = sgemm_cached(&mut ctx, &a, &b1, key, blk).unwrap();
+        assert!(o1.allclose(&sgemm_naive(&a, &b1), 1e-4, 1e-5));
+        // swapping the weight under the same key must not serve stale panels
+        let o2 = sgemm_cached(&mut ctx, &a, &b2, key, blk).unwrap();
+        assert!(o2.allclose(&sgemm_naive(&a, &b2), 1e-4, 1e-5));
+        assert_eq!(ctx.packs.len(), 1, "same key is replaced in place");
+        // a different blocking repacks too
+        let blk2 = GemmBlocking { mc: 2, nc: 2, kc: 2 };
+        let o3 = sgemm_cached(&mut ctx, &a, &b2, key, blk2).unwrap();
+        assert!(o3.allclose(&sgemm_naive(&a, &b2), 1e-4, 1e-5));
+        assert_eq!(ctx.packs.get(key).unwrap().blocking(), blk2);
+        // and clear() empties the cache
+        assert!(ctx.packs.bytes() > 0);
+        ctx.packs.clear();
+        assert!(ctx.packs.is_empty());
+        assert_eq!(ctx.packs.bytes(), 0);
+    }
+
+    #[test]
+    fn packed_parallel_matches_serial_bitwise() {
+        let mut rng = Pcg32::seeded(59);
+        let blk = GemmBlocking::default();
+        let a = Tensor::randn(257, 96, 1.0, &mut rng);
+        let b = Tensor::randn(96, 17, 1.0, &mut rng);
+        let pb = PackedB::pack(&b, blk);
+        let serial = crate::parallel::with_threads(1, || sgemm_packed_compute(&a, &pb));
+        for t in [2usize, 4] {
+            let par = crate::parallel::with_threads(t, || sgemm_packed_compute(&a, &pb));
+            assert!(par.allclose(&serial, 0.0, 0.0), "threads {t} not bit-identical");
+        }
     }
 }

@@ -19,7 +19,9 @@
 
 pub mod dense;
 pub mod elementwise;
+pub mod quant;
 pub mod rearrange;
+pub mod simd;
 pub mod sparse_ops;
 
 /// The paper's four kernel classes (§4.1).
@@ -254,6 +256,15 @@ pub struct Ctx {
     /// session-held `Ctx` reuses buffers across runs and served
     /// batches.
     pub arena: ScratchArena,
+    /// Packed sgemm B-panels keyed per weight matrix (see
+    /// [`dense::PackCache`]); like the arena, lives as long as the
+    /// context, so a session-held `Ctx` packs each projection weight
+    /// once per weights generation and reuses the panels across served
+    /// batches and training steps. `Session::invalidate` clears it on
+    /// weight swaps; [`dense::PackCache::ensure`] additionally
+    /// fingerprints the source matrix so a stale panel can never be
+    /// consumed through any other call path.
+    pub packs: dense::PackCache,
 }
 
 impl Ctx {

@@ -1,0 +1,461 @@
+//! Quantized storage for the opt-in low-precision feature-projection
+//! path (`SessionBuilder::quantize`, `--quantize f16|int8`).
+//!
+//! Motivated by SiHGNN's observation that the semantic-graph stages are
+//! capacity-bound: projection weights and reuse-cache rows dominate the
+//! resident footprint of a serving session, and both tolerate reduced
+//! precision because the downstream aggregation stages are
+//! averaging/softmax pipelines. Two formats are supported:
+//!
+//! * [`QuantSpec::F16`] — IEEE 754 binary16 with round-to-nearest-even,
+//!   2 bytes/element, no calibration state;
+//! * [`QuantSpec::Int8`] — symmetric int8 with a per-column scale for
+//!   weight matrices ([`QuantMatrix`]) and a per-row scale for cached
+//!   activation rows ([`QuantRow`]), 1 byte/element (+ scales).
+//!
+//! The compute path stays f32: weights are **fake-quantized** (stored
+//! quantized, dequantized once per weights generation into the f32
+//! working copy the packed sgemm panels consume) and reuse-cache rows
+//! are dequantized on fetch, so every kernel keeps its exact-counter and
+//! event-name contract. Accuracy deltas versus the f32 path are
+//! reported by `report::quant_delta_table`.
+
+use crate::tensor::Tensor;
+
+/// Quantization format selector, parsed from `--quantize f16|int8`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantSpec {
+    /// IEEE 754 binary16, round-to-nearest-even.
+    F16,
+    /// Symmetric int8: per-column scales in [`QuantMatrix`], a per-row
+    /// scale in [`QuantRow`]; values clamp to ±127 (no −128, so the
+    /// grid is symmetric and negation is exact).
+    Int8,
+}
+
+impl QuantSpec {
+    /// Parse a CLI spelling. Accepts exactly `f16` and `int8`.
+    pub fn parse(s: &str) -> Option<QuantSpec> {
+        match s {
+            "f16" => Some(QuantSpec::F16),
+            "int8" => Some(QuantSpec::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling (`f16` / `int8`).
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantSpec::F16 => "f16",
+            QuantSpec::Int8 => "int8",
+        }
+    }
+
+    /// Stored bytes per element (excluding scales).
+    pub fn bytes_per_element(self) -> usize {
+        match self {
+            QuantSpec::F16 => 2,
+            QuantSpec::Int8 => 1,
+        }
+    }
+}
+
+/// Convert an f32 to IEEE 754 binary16 bits with round-to-nearest-even.
+/// Overflow saturates to ±infinity; NaN stays NaN (payload truncated,
+/// quiet bit forced if truncation would make it infinity); subnormal
+/// halves and the underflow-to-zero boundary round correctly.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN
+        let mut m = (mant >> 13) as u16;
+        if mant != 0 && m == 0 {
+            m = 0x200; // keep NaN a NaN after payload truncation
+        }
+        return sign | 0x7c00 | m;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // normal half: drop 13 mantissa bits with round-to-nearest-even
+        let mut half_exp = (unbiased + 15) as u32;
+        let mut half_mant = mant >> 13;
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+            half_mant += 1;
+            if half_mant == 0x400 {
+                half_mant = 0;
+                half_exp += 1;
+                if half_exp >= 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((half_exp as u16) << 10) | half_mant as u16;
+    }
+    if unbiased >= -25 && exp != 0 {
+        // subnormal half: shift the full 24-bit significand down with RNE
+        let full_mant = mant | 0x0080_0000;
+        let shift = (13 + (-14 - unbiased)) as u32;
+        let mut hm = full_mant >> shift;
+        let rem = full_mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (hm & 1) == 1) {
+            hm += 1; // may carry into the smallest normal (0x0400) — valid bits
+        }
+        return sign | hm as u16;
+    }
+    sign // underflow (incl. f32 subnormals) → signed zero
+}
+
+/// Smallest positive binary16 subnormal (2⁻²⁴) as an exact f32.
+const F16_SUBNORMAL_UNIT: f32 = 5.960_464_5e-8;
+
+/// Convert IEEE 754 binary16 bits back to f32. Exact (every binary16
+/// value is representable in binary32); NaN payloads shift up 13 bits.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        if mant == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        let v = (mant as f32) * F16_SUBNORMAL_UNIT; // exact: mant ≤ 1023
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (mant << 13))
+}
+
+/// Round-trip an f32 through binary16 (the fake-quantization step for
+/// [`QuantSpec::F16`]).
+pub fn f16_roundtrip(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+fn int8_scale(max_abs: f32) -> f32 {
+    if max_abs == 0.0 {
+        1.0 // all-zero column/row: any scale reproduces it exactly
+    } else {
+        max_abs / 127.0
+    }
+}
+
+fn int8_quantize(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// A weight matrix stored quantized. Dequantizes back to a [`Tensor`]
+/// once per weights generation; the f32 working copy is what the packed
+/// sgemm panels consume.
+#[derive(Debug, Clone)]
+pub enum QuantMatrix {
+    /// binary16 elements, row-major.
+    F16 {
+        /// Row count of the source matrix.
+        rows: usize,
+        /// Column count of the source matrix.
+        cols: usize,
+        /// Row-major binary16 bits.
+        data: Vec<u16>,
+    },
+    /// Symmetric int8 with one scale per column (weights vary far more
+    /// across output columns than within one, so per-column scales keep
+    /// the max-abs error an order of magnitude under a per-tensor scale).
+    Int8 {
+        /// Row count of the source matrix.
+        rows: usize,
+        /// Column count of the source matrix.
+        cols: usize,
+        /// Row-major quantized elements.
+        data: Vec<i8>,
+        /// One dequantization scale per column (`cols` entries).
+        scales: Vec<f32>,
+    },
+}
+
+impl QuantMatrix {
+    /// Quantize a weight matrix under `spec`.
+    pub fn quantize(t: &Tensor, spec: QuantSpec) -> QuantMatrix {
+        let (rows, cols) = t.shape();
+        match spec {
+            QuantSpec::F16 => QuantMatrix::F16 {
+                rows,
+                cols,
+                data: t.as_slice().iter().map(|&v| f32_to_f16_bits(v)).collect(),
+            },
+            QuantSpec::Int8 => {
+                let mut max_abs = vec![0.0f32; cols];
+                for r in 0..rows {
+                    for (m, &v) in max_abs.iter_mut().zip(t.row(r)) {
+                        *m = m.max(v.abs());
+                    }
+                }
+                let scales: Vec<f32> = max_abs.into_iter().map(int8_scale).collect();
+                let mut data = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    for (&s, &v) in scales.iter().zip(t.row(r)) {
+                        data.push(int8_quantize(v, s));
+                    }
+                }
+                QuantMatrix::Int8 { rows, cols, data, scales }
+            }
+        }
+    }
+
+    /// Dequantize into a fresh f32 tensor.
+    pub fn dequantize(&self) -> Tensor {
+        match self {
+            QuantMatrix::F16 { rows, cols, data } => Tensor::from_vec(
+                *rows,
+                *cols,
+                data.iter().map(|&b| f16_bits_to_f32(b)).collect(),
+            )
+            .expect("quantized matrix dims are consistent"),
+            QuantMatrix::Int8 { rows, cols, data, scales } => {
+                let mut out = Vec::with_capacity(rows * cols);
+                for row in data.chunks(*cols) {
+                    for (&q, &s) in row.iter().zip(scales) {
+                        out.push(q as f32 * s);
+                    }
+                }
+                Tensor::from_vec(*rows, *cols, out)
+                    .expect("quantized matrix dims are consistent")
+            }
+        }
+    }
+
+    /// Rows of the source matrix.
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantMatrix::F16 { rows, .. } | QuantMatrix::Int8 { rows, .. } => *rows,
+        }
+    }
+
+    /// Columns of the source matrix.
+    pub fn cols(&self) -> usize {
+        match self {
+            QuantMatrix::F16 { cols, .. } | QuantMatrix::Int8 { cols, .. } => *cols,
+        }
+    }
+
+    /// The format this matrix is stored in.
+    pub fn spec(&self) -> QuantSpec {
+        match self {
+            QuantMatrix::F16 { .. } => QuantSpec::F16,
+            QuantMatrix::Int8 { .. } => QuantSpec::Int8,
+        }
+    }
+
+    /// Stored bytes (elements + scales), for footprint reports.
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantMatrix::F16 { data, .. } => data.len() * 2,
+            QuantMatrix::Int8 { data, scales, .. } => data.len() + scales.len() * 4,
+        }
+    }
+}
+
+/// One cached activation row stored quantized (the reuse-cache storage
+/// format when `SessionBuilder::quantize` is set). Int8 uses a single
+/// per-row max-abs scale — activation rows are produced by one node's
+/// projection, so their dynamic range is narrow.
+#[derive(Debug, Clone)]
+pub enum QuantRow {
+    /// binary16 elements.
+    F16(Vec<u16>),
+    /// Symmetric int8 elements with one per-row scale.
+    Int8 {
+        /// Quantized elements.
+        data: Vec<i8>,
+        /// Dequantization scale for the whole row.
+        scale: f32,
+    },
+}
+
+impl QuantRow {
+    /// Quantize one row under `spec`.
+    pub fn quantize(row: &[f32], spec: QuantSpec) -> QuantRow {
+        match spec {
+            QuantSpec::F16 => {
+                QuantRow::F16(row.iter().map(|&v| f32_to_f16_bits(v)).collect())
+            }
+            QuantSpec::Int8 => {
+                let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = int8_scale(max_abs);
+                QuantRow::Int8 {
+                    data: row.iter().map(|&v| int8_quantize(v, scale)).collect(),
+                    scale,
+                }
+            }
+        }
+    }
+
+    /// Dequantize into `out` (cleared first).
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        match self {
+            QuantRow::F16(data) => out.extend(data.iter().map(|&b| f16_bits_to_f32(b))),
+            QuantRow::Int8 { data, scale } => {
+                out.extend(data.iter().map(|&q| q as f32 * *scale))
+            }
+        }
+    }
+
+    /// Element count of the row.
+    pub fn len(&self) -> usize {
+        match self {
+            QuantRow::F16(data) => data.len(),
+            QuantRow::Int8 { data, .. } => data.len(),
+        }
+    }
+
+    /// True when the row has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored bytes (elements + scale).
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantRow::F16(data) => data.len() * 2,
+            QuantRow::Int8 { data, .. } => data.len() + 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn f16_roundtrip_is_identity_for_all_bit_patterns() {
+        // every binary16 value is exactly representable in f32, so
+        // f16 → f32 → f16 must reproduce the original bits — including
+        // ±0, ±inf, subnormals and NaNs (payload shifted up then down).
+        for h in 0..=u16::MAX {
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f32_to_f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half
+        // (1 + 2^-10); ties go to the even mantissa (1.0).
+        let halfway = 1.0 + (2f32).powi(-11);
+        assert_eq!(f16_roundtrip(halfway), 1.0);
+        // one ulp above halfway rounds up
+        let above = f32::from_bits(halfway.to_bits() + 1);
+        assert_eq!(f16_roundtrip(above), 1.0 + (2f32).powi(-10));
+        // overflow saturates to inf, sign preserved
+        assert_eq!(f16_roundtrip(70000.0), f32::INFINITY);
+        assert_eq!(f16_roundtrip(-70000.0), f32::NEG_INFINITY);
+        // underflow hits signed zero
+        assert_eq!(f16_roundtrip(1e-9).to_bits(), 0.0f32.to_bits());
+        assert_eq!(f16_roundtrip(-1e-9).to_bits(), (-0.0f32).to_bits());
+        assert!(f16_roundtrip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = Pcg32::seeded(7);
+        let t = Tensor::randn(40, 17, 3.0, &mut rng);
+        for &v in t.as_slice() {
+            let r = f16_roundtrip(v);
+            let err = (r - v).abs();
+            // binary16 has 11 significand bits → rel err ≤ 2^-11
+            assert!(err <= v.abs() * 4.9e-4 + 1e-7, "{v} → {r}");
+        }
+    }
+
+    #[test]
+    fn int8_matrix_error_bounded_by_half_step_per_column() {
+        let mut rng = Pcg32::seeded(11);
+        let t = Tensor::randn(33, 9, 1.5, &mut rng);
+        let q = QuantMatrix::quantize(&t, QuantSpec::Int8);
+        let d = q.dequantize();
+        assert_eq!(d.shape(), t.shape());
+        // per-column max-abs scale → error ≤ scale/2 everywhere
+        let scales = match &q {
+            QuantMatrix::Int8 { scales, .. } => scales.clone(),
+            _ => unreachable!(),
+        };
+        for r in 0..t.rows() {
+            for c in 0..t.cols() {
+                let err = (d.get(r, c) - t.get(r, c)).abs();
+                assert!(err <= scales[c] * 0.5 + 1e-6, "({r},{c}): err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_all_zero_column_is_exact() {
+        let t = Tensor::from_vec(3, 2, vec![0.0, 1.0, 0.0, -2.0, 0.0, 0.5]).unwrap();
+        let q = QuantMatrix::quantize(&t, QuantSpec::Int8);
+        let d = q.dequantize();
+        for r in 0..3 {
+            assert_eq!(d.get(r, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn quant_matrix_metadata_and_bytes() {
+        let t = Tensor::full(6, 5, 0.25);
+        let f = QuantMatrix::quantize(&t, QuantSpec::F16);
+        assert_eq!((f.rows(), f.cols()), (6, 5));
+        assert_eq!(f.spec(), QuantSpec::F16);
+        assert_eq!(f.bytes(), 6 * 5 * 2);
+        let i = QuantMatrix::quantize(&t, QuantSpec::Int8);
+        assert_eq!(i.spec(), QuantSpec::Int8);
+        assert_eq!(i.bytes(), 6 * 5 + 5 * 4);
+        // 0.25 everywhere survives both formats exactly (power of two /
+        // full-scale point)
+        assert!(f.dequantize().allclose(&t, 0.0, 0.0));
+        assert!(i.dequantize().allclose(&t, 1e-7, 0.0));
+    }
+
+    #[test]
+    fn quant_row_roundtrip_error_bounded() {
+        let mut rng = Pcg32::seeded(23);
+        let t = Tensor::randn(1, 67, 2.0, &mut rng);
+        let row = t.as_slice();
+        let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let mut dq = Vec::new();
+        let q8 = QuantRow::quantize(row, QuantSpec::Int8);
+        assert_eq!(q8.len(), 67);
+        assert!(!q8.is_empty());
+        assert_eq!(q8.bytes(), 67 + 4);
+        q8.dequantize_into(&mut dq);
+        for (&v, &d) in row.iter().zip(&dq) {
+            assert!((v - d).abs() <= max_abs / 127.0 * 0.5 + 1e-6);
+        }
+        let qh = QuantRow::quantize(row, QuantSpec::F16);
+        assert_eq!(qh.bytes(), 67 * 2);
+        qh.dequantize_into(&mut dq);
+        for (&v, &d) in row.iter().zip(&dq) {
+            assert!((v - d).abs() <= v.abs() * 4.9e-4 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn spec_parse_and_names() {
+        assert_eq!(QuantSpec::parse("f16"), Some(QuantSpec::F16));
+        assert_eq!(QuantSpec::parse("int8"), Some(QuantSpec::Int8));
+        assert_eq!(QuantSpec::parse("fp16"), None);
+        assert_eq!(QuantSpec::parse("true"), None);
+        assert_eq!(QuantSpec::F16.name(), "f16");
+        assert_eq!(QuantSpec::Int8.name(), "int8");
+        assert_eq!(QuantSpec::F16.bytes_per_element(), 2);
+        assert_eq!(QuantSpec::Int8.bytes_per_element(), 1);
+    }
+}

@@ -1,0 +1,249 @@
+//! Explicit-width SIMD microkernel helpers.
+//!
+//! Every inner loop in the hot kernels ([`crate::kernels::dense`],
+//! [`crate::kernels::sparse_ops`], [`crate::engine::stages`]) funnels
+//! through the primitives here. They are written in the
+//! fixed-lane-array style that stable Rust's autovectorizer compiles to
+//! packed SIMD without any `std::arch` intrinsics or nightly features:
+//! the slice is walked in [`LANES`]-wide chunks via `chunks_exact`, each
+//! chunk is processed through a `[f32; LANES]` temporary with one
+//! straight-line operation per lane, and the sub-lane tail falls back to
+//! the scalar loop.
+//!
+//! # Bit-identity contract
+//!
+//! [`axpy`], [`axpy2`], [`add_assign`] and [`scale`] are **element-wise**:
+//! every output element is produced by exactly the same float operations,
+//! in the same per-element order, as the scalar loop they replace
+//! (`out[i] += s * x[i]` etc.). Lanes never exchange values, so the
+//! results are bit-identical to the scalar path at every slice length —
+//! including lengths that are not multiples of [`LANES`] — and therefore
+//! at every `--threads` / `--shards` setting. The integration suite
+//! (`tests/integration_simd.rs`) pins this with `allclose(_, 0.0, 0.0)`
+//! against serial oracles.
+//!
+//! [`dot_tree`] is the one horizontal reduction: it keeps [`LANES`]
+//! partial sums and folds them through a fixed pairwise tree, so the
+//! result is deterministic (identical on every run and thread count) but
+//! **not** bit-identical to a sequential left-to-right sum — use it only
+//! where the consumer tolerates reassociation, e.g. the quantized-path
+//! diagnostics.
+
+/// Vector width of the lane-array temporaries: 8 × f32 = 256 bits, one
+/// AVX2 register, two NEON registers. Not a tuning knob for callers —
+/// the tail loops make every slice length correct regardless.
+pub const LANES: usize = 8;
+
+/// `out[i] += s * x[i]` — the axpy inner loop of sgemm panels and
+/// weighted SpMM rows. Bit-identical to the scalar loop (see module
+/// docs). Panics in debug builds if lengths differ; in release the
+/// shorter slice bounds the work.
+#[inline]
+pub fn axpy(out: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (o, v) in oc.by_ref().zip(xc.by_ref()) {
+        let mut lane = [0.0f32; LANES];
+        for (l, &b) in lane.iter_mut().zip(v) {
+            *l = s * b;
+        }
+        for (o, l) in o.iter_mut().zip(lane) {
+            *o += l;
+        }
+    }
+    for (o, &b) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += s * b;
+    }
+}
+
+/// Two-row axpy sharing one loaded `x` chunk:
+/// `o0[i] += s0 * x[i]; o1[i] += s1 * x[i]` — the register-blocked
+/// (2-row) sgemm panel core, halving B-row traffic versus two [`axpy`]
+/// calls. Bit-identical to the scalar pair loop.
+#[inline]
+pub fn axpy2(o0: &mut [f32], o1: &mut [f32], s0: f32, s1: f32, x: &[f32]) {
+    debug_assert_eq!(o0.len(), x.len());
+    debug_assert_eq!(o1.len(), x.len());
+    let mut c0 = o0.chunks_exact_mut(LANES);
+    let mut c1 = o1.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for ((a, b), v) in c0.by_ref().zip(c1.by_ref()).zip(xc.by_ref()) {
+        let mut l0 = [0.0f32; LANES];
+        let mut l1 = [0.0f32; LANES];
+        for ((p, q), &b) in l0.iter_mut().zip(l1.iter_mut()).zip(v) {
+            *p = s0 * b;
+            *q = s1 * b;
+        }
+        for ((x0, x1), (p, q)) in a.iter_mut().zip(b.iter_mut()).zip(l0.into_iter().zip(l1)) {
+            *x0 += p;
+            *x1 += q;
+        }
+    }
+    for ((x0, x1), &b) in c0
+        .into_remainder()
+        .iter_mut()
+        .zip(c1.into_remainder().iter_mut())
+        .zip(xc.remainder())
+    {
+        *x0 += s0 * b;
+        *x1 += s1 * b;
+    }
+}
+
+/// `out[i] += x[i]` — the unweighted accumulate of `SpMMCsr` sum/mean
+/// rows and `segment_sum_edges`. Bit-identical to the scalar loop.
+#[inline]
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (o, v) in oc.by_ref().zip(xc.by_ref()) {
+        let mut lane = [0.0f32; LANES];
+        for (l, &b) in lane.iter_mut().zip(v) {
+            *l = b;
+        }
+        for (o, l) in o.iter_mut().zip(lane) {
+            *o += l;
+        }
+    }
+    for (o, &b) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += b;
+    }
+}
+
+/// `out[i] *= s` — the mean-rescale pass of `SpMMCsr`. Bit-identical to
+/// the scalar loop.
+#[inline]
+pub fn scale(out: &mut [f32], s: f32) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    for o in oc.by_ref() {
+        for v in o.iter_mut() {
+            *v *= s;
+        }
+    }
+    for v in oc.into_remainder().iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Dot product with a deterministic reduction tree: [`LANES`] lane
+/// accumulators (`acc[l] += a[i] * b[i]` with `l = i % LANES`), folded
+/// pairwise `(0+4)+(2+6)` / `(1+5)+(3+7)`, scalar tail added last. The
+/// result is identical on every run and thread count, but reassociated
+/// relative to a sequential sum — reserve it for paths that already
+/// tolerate rounding (quantized diagnostics, bench verdicts), never for
+/// the bit-identity-pinned f32 kernels.
+#[inline]
+pub fn dot_tree(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+        for ((s, &x), &y) in acc.iter_mut().zip(av).zip(bv) {
+            *s += x * y;
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    let q0 = (acc[0] + acc[4]) + (acc[2] + acc[6]);
+    let q1 = (acc[1] + acc[5]) + (acc[3] + acc[7]);
+    (q0 + q1) + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, base: f32) -> Vec<f32> {
+        (0..n).map(|i| base + (i as f32) * 0.37 - (i % 5) as f32).collect()
+    }
+
+    #[test]
+    fn axpy_bit_identical_to_scalar_all_lengths() {
+        for n in [0, 1, 7, 8, 9, 15, 16, 17, 63, 64, 100] {
+            let x = seq(n, 0.5);
+            let mut got = seq(n, -2.0);
+            let mut want = got.clone();
+            axpy(&mut got, 1.7, &x);
+            for (o, &b) in want.iter_mut().zip(&x) {
+                *o += 1.7 * b;
+            }
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy2_bit_identical_to_scalar_pair() {
+        for n in [0, 3, 8, 13, 16, 29] {
+            let x = seq(n, 1.25);
+            let mut g0 = seq(n, 4.0);
+            let mut g1 = seq(n, -1.0);
+            let mut w0 = g0.clone();
+            let mut w1 = g1.clone();
+            axpy2(&mut g0, &mut g1, 0.3, -2.5, &x);
+            for ((a, b), &v) in w0.iter_mut().zip(w1.iter_mut()).zip(&x) {
+                *a += 0.3 * v;
+                *b += -2.5 * v;
+            }
+            assert_eq!(g0, w0, "n={n}");
+            assert_eq!(g1, w1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy2_matches_two_axpys_bitwise() {
+        // the 2-row core must produce exactly what two 1-row calls do
+        let x = seq(21, 0.75);
+        let (mut a0, mut a1) = (seq(21, 2.0), seq(21, 3.0));
+        let (mut b0, mut b1) = (a0.clone(), a1.clone());
+        axpy2(&mut a0, &mut a1, 1.1, -0.4, &x);
+        axpy(&mut b0, 1.1, &x);
+        axpy(&mut b1, -0.4, &x);
+        assert_eq!(a0, b0);
+        assert_eq!(a1, b1);
+    }
+
+    #[test]
+    fn add_assign_and_scale_bit_identical() {
+        for n in [0, 5, 8, 19, 32] {
+            let x = seq(n, -0.5);
+            let mut got = seq(n, 9.0);
+            let mut want = got.clone();
+            add_assign(&mut got, &x);
+            for (o, &v) in want.iter_mut().zip(&x) {
+                *o += v;
+            }
+            assert_eq!(got, want, "add n={n}");
+            scale(&mut got, 0.125);
+            for v in want.iter_mut() {
+                *v *= 0.125;
+            }
+            assert_eq!(got, want, "scale n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_tree_deterministic_and_close() {
+        let a = seq(1003, 0.1);
+        let b = seq(1003, -0.2);
+        let d1 = dot_tree(&a, &b);
+        let d2 = dot_tree(&a, &b);
+        assert_eq!(d1, d2, "tree reduction must be run-to-run deterministic");
+        let serial: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+        let denom = serial.abs().max(1.0);
+        assert!((d1 - serial).abs() / denom < 1e-4, "tree {d1} vs serial {serial}");
+    }
+
+    #[test]
+    fn dot_tree_short_inputs() {
+        assert_eq!(dot_tree(&[], &[]), 0.0);
+        assert_eq!(dot_tree(&[2.0], &[3.0]), 6.0);
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot_tree(&a, &b), 32.0);
+    }
+}

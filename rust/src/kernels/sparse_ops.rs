@@ -15,7 +15,7 @@
 //! gathers, in access order, for the T4 L2 model.
 
 use crate::graph::sparse::Csr;
-use crate::kernels::{timed, Ctx, GatherTrace, KernelCounters, KernelType};
+use crate::kernels::{simd, timed, Ctx, GatherTrace, KernelCounters, KernelType};
 use crate::parallel;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
@@ -81,25 +81,18 @@ pub fn spmm_csr(
                         for (j, &s) in row.iter().enumerate() {
                             let wv = w[lo + j];
                             let src = &xs[s as usize * f..(s as usize + 1) * f];
-                            for (o, &v) in orow.iter_mut().zip(src) {
-                                *o += wv * v;
-                            }
+                            simd::axpy(orow, wv, src);
                         }
                     }
                     None => {
                         for &s in row {
                             let src = &xs[s as usize * f..(s as usize + 1) * f];
-                            for (o, &v) in orow.iter_mut().zip(src) {
-                                *o += v;
-                            }
+                            simd::add_assign(orow, src);
                         }
                     }
                 }
                 if reduce == SpmmReduce::Mean {
-                    let inv = 1.0 / row.len() as f32;
-                    for o in orow.iter_mut() {
-                        *o *= inv;
-                    }
+                    simd::scale(orow, 1.0 / row.len() as f32);
                 }
             }
         });

@@ -115,6 +115,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
     }
+    let quant = args.quantize()?;
+    if let Some(spec) = quant {
+        builder = builder.quantize(spec);
+        println!(
+            "quantized feature projection: {} (FP weights round-tripped through the format)",
+            spec.name()
+        );
+    }
     let mut session = builder.build()?;
     println!("{}", session.graph().stats_line());
     println!("{}", session.plan().describe(session.graph()));
@@ -142,6 +150,21 @@ fn cmd_run(args: &Args) -> Result<()> {
             &run.profile.kernel_table(StageId::NeighborAggregation)
         )
     );
+    if let Some(spec) = quant {
+        // f32 baseline for the accuracy delta: the forward is
+        // bit-identical across schedules/shards/threads, so a plain
+        // sequential session yields the exact f32 reference logits
+        let baseline = Session::builder()
+            .dataset(dataset)
+            .scale(args.scale()?)
+            .model(model)
+            .build()?
+            .run()?;
+        println!(
+            "\n{}",
+            report::quant_delta_table(spec.name(), &baseline.output, &run.output)
+        );
+    }
     Ok(())
 }
 
@@ -416,6 +439,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         builder = builder.reuse(hgnn_char::reuse::ReuseSpec::rows(reuse_cap));
         println!("cross-request reuse: {reuse_cap} rows per cache");
+    }
+    if let Some(spec) = args.quantize()? {
+        builder = builder.quantize(spec);
+        println!(
+            "quantized serving: {} (FP weights + reuse-cache rows stored in the format)",
+            spec.name()
+        );
     }
     if let Some(spec) = args.partition()? {
         builder = builder.partition(spec);

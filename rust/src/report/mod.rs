@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use crate::gpumodel::KernelMetrics;
 use crate::kernels::KernelType;
 use crate::profiler::{Profile, StageId};
+use crate::tensor::Tensor;
 use crate::util::fmt::{pad_left, pad_right};
 
 /// A simple ASCII table builder.
@@ -258,6 +259,60 @@ pub fn training_table(report: &crate::train::FitReport) -> String {
     format!("per-epoch training metrics:\n{}loss trend: {trend}\n", t.render())
 }
 
+/// Accuracy-delta table for the quantized feature-projection path
+/// (`SessionBuilder::quantize`): compares the quantized session's output
+/// logits against the f32 baseline's, row for row — max-abs and mean-abs
+/// logit error plus argmax (predicted-label) agreement. The two tensors
+/// must be the same shape (same graph, model and seeds).
+pub fn quant_delta_table(spec_name: &str, f32_out: &Tensor, quant_out: &Tensor) -> String {
+    assert_eq!(
+        f32_out.shape(),
+        quant_out.shape(),
+        "quant_delta_table: baseline and quantized outputs must be the same shape"
+    );
+    let (rows, cols) = f32_out.shape();
+    let mut max_abs = 0.0f64;
+    let mut sum_abs = 0.0f64;
+    let mut agree = 0usize;
+    for r in 0..rows {
+        let (a, b) = (f32_out.row(r), quant_out.row(r));
+        for (&x, &y) in a.iter().zip(b) {
+            let d = (x as f64 - y as f64).abs();
+            max_abs = max_abs.max(d);
+            sum_abs += d;
+        }
+        if argmax(a) == argmax(b) {
+            agree += 1;
+        }
+    }
+    let n = (rows * cols).max(1) as f64;
+    let mut t = Table::new(&[
+        "format",
+        "rows",
+        "max abs logit err",
+        "mean abs logit err",
+        "label agreement",
+    ]);
+    t.row(&[
+        spec_name.to_string(),
+        format!("{rows}"),
+        format!("{:.6}", max_abs),
+        format!("{:.6}", sum_abs / n),
+        format!("{:.2}%", 100.0 * agree as f64 / rows.max(1) as f64),
+    ]);
+    format!("quantized-projection accuracy delta vs f32:\n{}", t.render())
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Group modeled stage times over several runs into a map for averaging.
 pub fn average_stage_pct(profiles: &[&Profile]) -> BTreeMap<StageId, f64> {
     let mut acc: BTreeMap<StageId, f64> = BTreeMap::new();
@@ -303,6 +358,20 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.contains("\"x,y\""));
         assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    fn quant_delta_table_reports_errors_and_agreement() {
+        let base = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 0.0]).unwrap();
+        // row 0 keeps its argmax (col 1), row 1 flips to col 1
+        let quant = Tensor::from_vec(2, 2, vec![1.1, 2.0, 3.0, 3.5]).unwrap();
+        let s = quant_delta_table("int8", &base, &quant);
+        assert!(s.contains("int8"));
+        assert!(s.contains("3.500000"), "max abs err is |0.0 - 3.5|: {s}");
+        assert!(s.contains("50.00%"), "one of two rows agrees: {s}");
+        let exact = quant_delta_table("f16", &base, &base);
+        assert!(exact.contains("0.000000"));
+        assert!(exact.contains("100.00%"));
     }
 
     #[test]

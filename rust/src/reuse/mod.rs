@@ -80,6 +80,8 @@
 
 use std::collections::HashMap;
 
+use crate::kernels::quant::{QuantRow, QuantSpec};
+
 /// Capacities of the two reuse caches, in rows.
 ///
 /// Sizing intuition: a projection row is `hidden_dim` f32s, an
@@ -236,24 +238,46 @@ impl AggOverlay {
 }
 
 /// One bounded row store with clock (second-chance) eviction.
+/// Rows are stored as plain f32 by default; with a [`QuantSpec`] they
+/// are stored quantized ([`QuantRow`]) and dequantized on fetch into a
+/// store-owned scratch row, so residency shrinks 2× (f16) or ~4× (int8)
+/// at the cost of a decode per hit.
 #[derive(Debug)]
 struct RowCache {
     cap: usize,
+    quant: Option<QuantSpec>,
     slots: Vec<Slot>,
     index: HashMap<u64, usize>,
     hand: usize,
+    /// Dequantization scratch handed out by `get` in quantized mode —
+    /// valid until the next call that takes `&mut self`.
+    dq: Vec<f32>,
 }
 
 #[derive(Debug)]
 struct Slot {
     key: u64,
-    row: Vec<f32>,
+    row: Stored,
     referenced: bool,
 }
 
+/// Storage format of one cached row.
+#[derive(Debug)]
+enum Stored {
+    F32(Vec<f32>),
+    Quant(QuantRow),
+}
+
+fn encode(quant: Option<QuantSpec>, row: &[f32]) -> Stored {
+    match quant {
+        None => Stored::F32(row.to_vec()),
+        Some(spec) => Stored::Quant(QuantRow::quantize(row, spec)),
+    }
+}
+
 impl RowCache {
-    fn new(cap: usize) -> RowCache {
-        RowCache { cap, slots: Vec::new(), index: HashMap::new(), hand: 0 }
+    fn new(cap: usize, quant: Option<QuantSpec>) -> RowCache {
+        RowCache { cap, quant, slots: Vec::new(), index: HashMap::new(), hand: 0, dq: Vec::new() }
     }
 
     fn len(&self) -> usize {
@@ -261,12 +285,14 @@ impl RowCache {
     }
 
     fn get(&mut self, key: u64) -> Option<&[f32]> {
-        match self.index.get(&key) {
-            Some(&i) => {
-                self.slots[i].referenced = true;
-                Some(&self.slots[i].row)
+        let &i = self.index.get(&key)?;
+        self.slots[i].referenced = true;
+        match &self.slots[i].row {
+            Stored::F32(v) => Some(v),
+            Stored::Quant(q) => {
+                q.dequantize_into(&mut self.dq);
+                Some(&self.dq)
             }
-            None => None,
         }
     }
 
@@ -276,14 +302,18 @@ impl RowCache {
             return false;
         }
         if let Some(&i) = self.index.get(&key) {
-            self.slots[i].row.clear();
-            self.slots[i].row.extend_from_slice(row);
+            if let Stored::F32(v) = &mut self.slots[i].row {
+                v.clear();
+                v.extend_from_slice(row);
+            } else {
+                self.slots[i].row = encode(self.quant, row);
+            }
             self.slots[i].referenced = true;
             return false;
         }
         if self.slots.len() < self.cap {
             self.index.insert(key, self.slots.len());
-            self.slots.push(Slot { key, row: row.to_vec(), referenced: true });
+            self.slots.push(Slot { key, row: encode(self.quant, row), referenced: true });
             return false;
         }
         // clock sweep: clear reference bits until an unreferenced victim
@@ -296,7 +326,7 @@ impl RowCache {
             } else {
                 self.index.remove(&self.slots[i].key);
                 self.index.insert(key, i);
-                self.slots[i] = Slot { key, row: row.to_vec(), referenced: true };
+                self.slots[i] = Slot { key, row: encode(self.quant, row), referenced: true };
                 return true;
             }
         }
@@ -334,6 +364,7 @@ impl RowCache {
 #[derive(Debug)]
 pub struct ReuseCache {
     spec: ReuseSpec,
+    quant: Option<QuantSpec>,
     generation: u64,
     proj: RowCache,
     agg: RowCache,
@@ -345,13 +376,23 @@ fn key(hi: usize, lo: u32) -> u64 {
 }
 
 impl ReuseCache {
-    /// Empty cache with the given capacities.
+    /// Empty cache with the given capacities storing rows as plain f32.
     pub fn new(spec: ReuseSpec) -> ReuseCache {
+        ReuseCache::with_quant(spec, None)
+    }
+
+    /// Empty cache whose resident rows are stored quantized per `quant`
+    /// (f32 when `None`). Quantized rows are dequantized on every hit,
+    /// so hits return values that differ from the originally inserted
+    /// f32 rows by the format's rounding error — callers opt in via
+    /// `SessionBuilder::quantize` and accept tolerance-based checks.
+    pub fn with_quant(spec: ReuseSpec, quant: Option<QuantSpec>) -> ReuseCache {
         ReuseCache {
             spec,
+            quant,
             generation: 0,
-            proj: RowCache::new(spec.proj_rows),
-            agg: RowCache::new(spec.agg_rows),
+            proj: RowCache::new(spec.proj_rows, quant),
+            agg: RowCache::new(spec.agg_rows, quant),
             stats: ReuseStats::default(),
         }
     }
@@ -359,6 +400,23 @@ impl ReuseCache {
     /// The capacities this cache was built with.
     pub fn spec(&self) -> ReuseSpec {
         self.spec
+    }
+
+    /// The row-storage quantization format, if any.
+    pub fn quant(&self) -> Option<QuantSpec> {
+        self.quant
+    }
+
+    /// Bytes one resident row of `len` f32 values occupies in this
+    /// cache's storage format (int8 includes its per-row scale). Used
+    /// by the executor's `ReuseGather` counters so profiled traffic
+    /// reflects the quantized footprint.
+    pub fn stored_row_bytes(&self, len: usize) -> u64 {
+        match self.quant {
+            None => len as u64 * 4,
+            Some(QuantSpec::F16) => len as u64 * 2,
+            Some(QuantSpec::Int8) => len as u64 + 4,
+        }
     }
 
     /// Current generation; bumped by every [`ReuseCache::invalidate`].
@@ -649,5 +707,47 @@ mod tests {
         ov.prefilled[1].push((0, vec![1.0]));
         assert_eq!(ov.prefilled_rows(), 1);
         assert_eq!(ov.computed.len(), 2);
+    }
+
+    #[test]
+    fn quantized_rows_roundtrip_within_format_error() {
+        let row: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.37).collect();
+        for (quant, tol) in [(QuantSpec::F16, 1e-3_f32), (QuantSpec::Int8, 0.05_f32)] {
+            let mut c = ReuseCache::with_quant(ReuseSpec::rows(8), Some(quant));
+            assert_eq!(c.quant(), Some(quant));
+            c.proj_insert(0, 1, &row);
+            c.agg_insert(2, 3, &row);
+            let max_abs = row.iter().fold(0.0_f32, |m, v| m.max(v.abs()));
+            for got in [c.proj_get(0, 1).unwrap().to_vec(), c.agg_get(2, 3).unwrap().to_vec()] {
+                assert_eq!(got.len(), row.len());
+                for (g, w) in got.iter().zip(&row) {
+                    assert!((g - w).abs() <= tol * max_abs, "{quant:?}: {g} vs {w}");
+                }
+            }
+            // refresh-in-place re-quantizes the new values
+            let row2: Vec<f32> = row.iter().map(|v| -v).collect();
+            c.proj_insert(0, 1, &row2);
+            let got = c.proj_get(0, 1).unwrap();
+            assert!((got[0] - row2[0]).abs() <= tol * max_abs);
+        }
+    }
+
+    #[test]
+    fn f32_mode_stays_bit_exact() {
+        let mut c = ReuseCache::with_quant(ReuseSpec::rows(2), None);
+        assert_eq!(c.quant(), None);
+        let row = [0.1_f32, -2.5e-30, 3.0e30];
+        c.proj_insert(0, 0, &row);
+        assert_eq!(c.proj_get(0, 0).unwrap(), &row);
+    }
+
+    #[test]
+    fn stored_row_bytes_reflects_format() {
+        let f32c = ReuseCache::new(ReuseSpec::rows(1));
+        let f16c = ReuseCache::with_quant(ReuseSpec::rows(1), Some(QuantSpec::F16));
+        let i8c = ReuseCache::with_quant(ReuseSpec::rows(1), Some(QuantSpec::Int8));
+        assert_eq!(f32c.stored_row_bytes(64), 256);
+        assert_eq!(f16c.stored_row_bytes(64), 128);
+        assert_eq!(i8c.stored_row_bytes(64), 68); // 64 i8 + one f32 scale
     }
 }

@@ -26,7 +26,7 @@ use std::path::{Path, PathBuf};
 
 use crate::engine::stages;
 use crate::graph::{HeteroGraph, NodeTypeId};
-use crate::kernels::dense::{sgemm, GemmBlocking};
+use crate::kernels::dense::{sgemm_cached, GemmBlocking, PackKey};
 use crate::kernels::Ctx;
 use crate::models::ModelPlan;
 use crate::runtime::{ell_inputs, ArtifactEntry, CompiledArtifact, PjrtRuntime};
@@ -385,7 +385,7 @@ impl ExecBackend for NativeBackend {
             None => Ok(None),
             Some(w) => {
                 let x = plan.weights.embed.get(&ty).unwrap_or_else(|| hg.features(ty));
-                Ok(Some(sgemm(ctx, x, w, self.blocking)?))
+                Ok(Some(sgemm_cached(ctx, x, w, PackKey::Proj(ty), self.blocking)?))
             }
         }
     }
@@ -399,7 +399,7 @@ impl ExecBackend for NativeBackend {
     ) -> Result<Option<Tensor>> {
         match plan.weights.proj.get(&ty) {
             None => Ok(None),
-            Some(w) => Ok(Some(sgemm(ctx, x, w, self.blocking)?)),
+            Some(w) => Ok(Some(sgemm_cached(ctx, x, w, PackKey::Proj(ty), self.blocking)?)),
         }
     }
 

@@ -615,14 +615,18 @@ fn reuse_feature_projection(
             }
             let gather_nanos = t0.elapsed().as_nanos() as u64;
             if hits > 0 {
-                let bytes = hits * hidden as u64 * 4;
+                // read side reflects the cache's storage format (f16 and
+                // int8 rows occupy 2-4x less than f32); the scatter side
+                // always writes dequantized f32 rows
+                let stored = hits * cache.stored_row_bytes(hidden);
+                let written = hits * hidden as u64 * 4;
                 ctx.push(
                     "ReuseGather",
                     KernelType::DataRearrange,
                     KernelCounters {
                         flops: 0,
-                        bytes_read: bytes + hits * 4,
-                        bytes_written: bytes,
+                        bytes_read: stored + hits * 4,
+                        bytes_written: written,
                     },
                     gather_nanos,
                     None,

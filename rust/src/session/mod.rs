@@ -48,6 +48,7 @@ use crate::datasets::{self, DatasetId, DatasetScale};
 use crate::dynamic::{self, DynamicSpec, EpochReport, GraphSnapshot, GraphUpdate, UpdateLog};
 use crate::gpumodel::GpuModel;
 use crate::graph::HeteroGraph;
+use crate::kernels::quant::{QuantMatrix, QuantSpec};
 use crate::kernels::Ctx;
 use crate::models::{self, ModelConfig, ModelId, ModelPlan, ModelWeights};
 use crate::partition::Partition;
@@ -213,6 +214,7 @@ pub struct SessionBuilder {
     sampling: Option<SamplingSpec>,
     reuse: Option<ReuseSpec>,
     partition: Option<PartitionSpec>,
+    quantize: Option<QuantSpec>,
     threads: Option<usize>,
     dynamic: Option<DynamicSpec>,
     cluster: Option<ClusterSpec>,
@@ -387,6 +389,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Opt into the quantized feature-projection path: the plan's FP
+    /// weight matrices are round-tripped through `spec`'s storage
+    /// format (f16, or int8 with per-column scales) at build time and
+    /// on every [`Session::set_weights`], and any reuse-cache rows
+    /// ([`SessionBuilder::reuse`]) are stored quantized and dequantized
+    /// on aggregate — shrinking weight and cache residency 2× (f16) or
+    /// ~4× (int8). Off by default; outputs then differ from the f32
+    /// session by the format's rounding error, so bit-identity
+    /// guarantees (warm-vs-cold, quantized-vs-f32) no longer hold —
+    /// quantify the drift with [`crate::report::quant_delta_table`].
+    pub fn quantize(mut self, spec: QuantSpec) -> Self {
+        self.quantize = Some(spec);
+        self
+    }
+
     /// Cap the process-wide worker pool at `n` threads (min 1) for
     /// everything this session executes — both the intra-kernel
     /// `parallel_for` inside `sgemm`/`SpMMCsr`/`IndexSelect` and the
@@ -431,13 +448,18 @@ impl SessionBuilder {
                 ))
             }
         };
-        let plan = match self.plan {
+        let mut plan = match self.plan {
             Some(plan) => plan,
             None => {
                 let model = self.model.unwrap_or(ModelId::Han);
                 models::build_plan(model, &hg, &self.config)?
             }
         };
+        // fake-quantize the FP weights before the partition copies them,
+        // so shard plans and the monolithic plan agree exactly
+        if let Some(spec) = self.quantize {
+            quantize_proj_weights(&mut plan.weights, spec);
+        }
         let backend: Box<dyn ExecBackend> = match self.backend {
             BackendSpec::Native(native) => {
                 // the profiling level can only *add* trace recording to a
@@ -486,9 +508,9 @@ impl SessionBuilder {
         // touches only its own lane, so lanes never contend); one lane
         // when the session is unpartitioned
         let lanes = partition.as_ref().map(|p| p.num_shards()).unwrap_or(1);
-        let reuse = self
-            .reuse
-            .map(|spec| (0..lanes).map(|_| ReuseCache::new(spec)).collect::<Vec<_>>());
+        let reuse = self.reuse.map(|spec| {
+            (0..lanes).map(|_| ReuseCache::with_quant(spec, self.quantize)).collect::<Vec<_>>()
+        });
         let shard_scratch = (0..partition.as_ref().map(|p| p.num_shards()).unwrap_or(0))
             .map(|_| backend.make_ctx())
             .collect();
@@ -504,6 +526,7 @@ impl SessionBuilder {
             partition,
             cluster,
             retired_reuse: ReuseStats::default(),
+            quant: self.quantize,
             threads: self.threads,
             scratch,
             shard_scratch,
@@ -570,6 +593,11 @@ pub struct Session {
     /// and never double-counts a dead lane — across kill/re-place
     /// cycles.
     retired_reuse: ReuseStats,
+    /// Quantized feature-projection format
+    /// ([`SessionBuilder::quantize`]): FP weights are round-tripped
+    /// through this format on every swap and reuse-cache rows are
+    /// stored in it. `None` keeps the default all-f32 path.
+    quant: Option<QuantSpec>,
     /// Worker-pool cap installed (thread-locally) around every run;
     /// `None` inherits the process default.
     threads: Option<usize>,
@@ -603,6 +631,18 @@ struct DynamicState {
     /// into at each flip. `None` until a full run materializes it, and
     /// after any weight swap (weights couple every row).
     na_cache: Option<Vec<Tensor>>,
+}
+
+/// Round-trip the FP projection weights through `spec`'s storage format
+/// in place (fake quantization): the working copies every compute path
+/// consumes — including the packed sgemm panels derived from them — are
+/// exactly the dequantized values, so the f32 kernels, counters and
+/// event stream stay untouched while the numerics match a genuinely
+/// quantized weight store.
+fn quantize_proj_weights(weights: &mut ModelWeights, spec: QuantSpec) {
+    for w in weights.proj.values_mut() {
+        *w = QuantMatrix::quantize(w, spec).dequantize();
+    }
 }
 
 impl Session {
@@ -1195,7 +1235,7 @@ impl Session {
             for s in moved {
                 if let Some(lane) = lanes.get_mut(s) {
                     self.retired_reuse.absorb(lane.stats());
-                    *lane = ReuseCache::new(lane.spec());
+                    *lane = ReuseCache::with_quant(lane.spec(), lane.quant());
                 }
             }
         }
@@ -1243,7 +1283,11 @@ impl Session {
 
     /// Drop the cached embeddings and invalidate the reuse caches with a
     /// generation bump (e.g. after a feature-store refresh); the next
-    /// [`Session::run_batch`] recomputes from scratch.
+    /// [`Session::run_batch`] recomputes from scratch. Also drops every
+    /// packed sgemm B-panel ([`crate::kernels::dense::PackCache`]) held
+    /// by the session's kernel contexts, so no panel packed under the
+    /// old weights can outlive them (the pack cache's own content
+    /// fingerprint is the second line of defense).
     pub fn invalidate(&mut self) {
         self.cached_output = None;
         if let Some(lanes) = self.reuse.as_mut() {
@@ -1251,6 +1295,25 @@ impl Session {
                 lane.invalidate();
             }
         }
+        self.scratch.packs.clear();
+        for ctx in &mut self.shard_scratch {
+            ctx.packs.clear();
+        }
+    }
+
+    /// The quantized feature-projection format in effect, if any
+    /// ([`SessionBuilder::quantize`]).
+    pub fn quantize(&self) -> Option<QuantSpec> {
+        self.quant
+    }
+
+    /// Number of packed sgemm B-panels currently resident across the
+    /// session's kernel contexts — observability for the panel-reuse
+    /// tier (and the invalidation tests: [`Session::set_weights`] must
+    /// drop this to zero).
+    pub fn packed_panels(&self) -> usize {
+        self.scratch.packs.len()
+            + self.shard_scratch.iter().map(|c| c.packs.len()).sum::<usize>()
     }
 
     /// Replace the plan's weights (e.g. after a training refresh) and
@@ -1288,6 +1351,12 @@ impl Session {
             ));
         }
         self.plan.weights = weights;
+        if let Some(spec) = self.quant {
+            // keep the quantization invariant across swaps: training
+            // steps and weight reloads land in the same storage format
+            // the session was built with, before any shard plan copies
+            quantize_proj_weights(&mut self.plan.weights, spec);
+        }
         if let Some(part) = self.partition.as_mut() {
             // shard plans carry their own weight copies (R-GCN embedding
             // tables sliced to local rows) — re-derive them so no shard

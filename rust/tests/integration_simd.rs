@@ -1,0 +1,330 @@
+//! Integration tests for the raw-speed kernel tier: the SIMD lane-array
+//! microkernels and the packed-B sgemm core must be **bit-identical** to
+//! the scalar/naive oracles for every model, thread count and shard
+//! count — including feature widths that are not multiples of the SIMD
+//! lane width — and the packed-panel cache must invalidate on weight
+//! swaps. The opt-in quantized feature-projection path trades that
+//! bit-identity for bounded, measured logit error, verified here at both
+//! the row level (property) and the session level (integration).
+
+use hgnn_char::datasets::{DatasetId, DatasetScale};
+use hgnn_char::graph::Csr;
+use hgnn_char::kernels::dense::{sgemm, sgemm_cached, sgemm_naive, GemmBlocking, PackKey};
+use hgnn_char::kernels::quant::{QuantRow, QuantSpec};
+use hgnn_char::kernels::simd;
+use hgnn_char::kernels::sparse_ops::{spmm_csr, SpmmReduce};
+use hgnn_char::kernels::Ctx;
+use hgnn_char::models::ModelId;
+use hgnn_char::parallel;
+use hgnn_char::reuse::ReuseSpec;
+use hgnn_char::sampler::SamplingSpec;
+use hgnn_char::session::{PartitionSpec, Session, SessionBuilder};
+use hgnn_char::tensor::Tensor;
+use hgnn_char::util::Pcg32;
+
+fn ci_builder(model: ModelId) -> SessionBuilder {
+    Session::builder()
+        .dataset(DatasetId::Imdb)
+        .scale(DatasetScale::ci())
+        .model(model)
+}
+
+/// The tentpole contract: SIMD-ized kernels change nothing observable in
+/// f32 — every model's forward is bitwise identical across thread counts
+/// {1, 4} and shard counts {1, 2}.
+#[test]
+fn forward_bit_identical_across_models_threads_and_shards() {
+    for model in [ModelId::Rgcn, ModelId::Han, ModelId::Magnn] {
+        let base = ci_builder(model).threads(1).build().unwrap().run().unwrap();
+        for t in [1usize, 4] {
+            for shards in [None, Some(2usize)] {
+                let mut b = ci_builder(model).threads(t);
+                if let Some(k) = shards {
+                    b = b.partition(PartitionSpec::new(k).with_threads(k));
+                }
+                let run = b.build().unwrap().run().unwrap();
+                assert!(
+                    run.output.allclose(&base.output, 0.0, 0.0),
+                    "{model:?} output at {t} thread(s), {shards:?} shards diverges"
+                );
+            }
+        }
+    }
+}
+
+/// Lane-array microkernels vs inline scalar oracles at feature widths
+/// that straddle the 8-lane boundary (9 and 13 exercise the remainder
+/// loops; 16 the exact-multiple path).
+#[test]
+fn simd_microkernels_bit_identical_to_scalar_at_ragged_widths() {
+    let mut rng = Pcg32::seeded(41);
+    for f in [9usize, 13, 16] {
+        let x: Vec<f32> = (0..f).map(|_| rng.gen_f32() - 0.5).collect();
+        let s = rng.gen_f32() + 0.5;
+        let init: Vec<f32> = (0..f).map(|_| rng.gen_f32()).collect();
+
+        let mut got = init.clone();
+        simd::axpy(&mut got, s, &x);
+        let mut want = init.clone();
+        for (o, &b) in want.iter_mut().zip(&x) {
+            *o += s * b;
+        }
+        assert_eq!(got, want, "axpy f={f}");
+
+        let mut got = init.clone();
+        simd::add_assign(&mut got, &x);
+        let mut want = init.clone();
+        for (o, &b) in want.iter_mut().zip(&x) {
+            *o += b;
+        }
+        assert_eq!(got, want, "add_assign f={f}");
+
+        let mut got = init.clone();
+        simd::scale(&mut got, s);
+        let want: Vec<f32> = init.iter().map(|&v| v * s).collect();
+        assert_eq!(got, want, "scale f={f}");
+
+        let (mut g0, mut g1) = (init.clone(), x.clone());
+        simd::axpy2(&mut g0, &mut g1, s, 2.0 * s, &x);
+        let (mut w0, mut w1) = (init.clone(), x.clone());
+        for ((o0, o1), &b) in w0.iter_mut().zip(w1.iter_mut()).zip(&x) {
+            *o0 += s * b;
+            *o1 += 2.0 * s * b;
+        }
+        assert_eq!(g0, w0, "axpy2 row0 f={f}");
+        assert_eq!(g1, w1, "axpy2 row1 f={f}");
+    }
+}
+
+/// `sgemm` (SIMD panel) vs `sgemm_naive` at K/N that are not multiples
+/// of the lane width, serial and at 4 pool threads — bitwise, because
+/// the lane temporaries replay the scalar per-element operation order.
+#[test]
+fn sgemm_bit_identical_to_naive_at_ragged_shapes_and_threads() {
+    let mut rng = Pcg32::seeded(42);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (17, 13, 9), (33, 16, 29), (65, 130, 31)] {
+        let a = Tensor::randn(m, k, 1.0, &mut rng);
+        let b = Tensor::randn(k, n, 1.0, &mut rng);
+        let want = sgemm_naive(&a, &b);
+        for t in [1usize, 4] {
+            let got = parallel::with_threads(t, || {
+                let mut ctx = Ctx::default();
+                sgemm(&mut ctx, &a, &b, GemmBlocking::default()).unwrap()
+            });
+            assert!(
+                got.allclose(&want, 0.0, 0.0),
+                "sgemm {m}x{k}x{n} at {t} thread(s) diverges from naive"
+            );
+        }
+    }
+}
+
+/// `spmm_csr` (SIMD accumulation) vs an inline scalar oracle at ragged
+/// feature widths, weighted and unweighted, serial and parallel.
+#[test]
+fn spmm_bit_identical_to_scalar_oracle_at_ragged_widths() {
+    let mut rng = Pcg32::seeded(43);
+    let n = 37usize;
+    // ring + a skip edge per node: deterministic, degree 2
+    let mut indptr = vec![0u32];
+    let mut indices = Vec::new();
+    for d in 0..n {
+        indices.push(((d + 1) % n) as u32);
+        indices.push(((d + 7) % n) as u32);
+        indptr.push(indices.len() as u32);
+    }
+    let adj = Csr { n_rows: n, n_cols: n, indptr, indices };
+    let weights: Vec<f32> = (0..adj.nnz()).map(|_| rng.gen_f32() + 0.1).collect();
+    for f in [9usize, 13] {
+        let x = Tensor::randn(n, f, 1.0, &mut rng);
+        let xs = x.as_slice();
+        // scalar oracle: same edge order, same accumulation order
+        let mut want = Tensor::zeros(n, f);
+        for d in 0..n {
+            let (lo, hi) = (adj.indptr[d] as usize, adj.indptr[d + 1] as usize);
+            for e in lo..hi {
+                let s = adj.indices[e] as usize;
+                for j in 0..f {
+                    let v = want.get(d, j) + weights[e] * xs[s * f + j];
+                    want.set(d, j, v);
+                }
+            }
+        }
+        for t in [1usize, 4] {
+            let got = parallel::with_threads(t, || {
+                let mut ctx = Ctx::default();
+                spmm_csr(&mut ctx, &adj, &x, Some(&weights), SpmmReduce::Sum).unwrap()
+            });
+            assert!(
+                got.allclose(&want, 0.0, 0.0),
+                "weighted spmm f={f} at {t} thread(s) diverges from scalar oracle"
+            );
+        }
+    }
+}
+
+/// The packed-panel cache serves repeat projections without repacking
+/// and matches the unpacked kernel bitwise at ragged shapes.
+#[test]
+fn packed_sgemm_cache_bit_identical_and_reused() {
+    let mut rng = Pcg32::seeded(44);
+    let a = Tensor::randn(23, 13, 1.0, &mut rng);
+    let b = Tensor::randn(13, 9, 1.0, &mut rng);
+    let mut ctx = Ctx::default();
+    let blk = GemmBlocking::default();
+    let want = sgemm(&mut ctx, &a, &b, blk).unwrap();
+    let o1 = sgemm_cached(&mut ctx, &a, &b, PackKey::Proj(0), blk).unwrap();
+    let o2 = sgemm_cached(&mut ctx, &a, &b, PackKey::Proj(0), blk).unwrap();
+    assert!(o1.allclose(&want, 0.0, 0.0));
+    assert!(o2.allclose(&want, 0.0, 0.0));
+    assert_eq!(ctx.packs.len(), 1, "repeat call must reuse the resident panel");
+}
+
+/// Weight swaps must drop every resident packed panel
+/// (`Session::set_weights` -> `Session::invalidate`), and the post-swap
+/// forward must match a cold session built under the new weights.
+#[test]
+fn packed_panels_invalidate_on_set_weights() {
+    let mut s = ci_builder(ModelId::Han).build().unwrap();
+    let _ = s.run().unwrap();
+    assert!(s.packed_panels() > 0, "the forward must leave FP panels resident");
+    s.init_weights(1234).unwrap();
+    assert_eq!(s.packed_panels(), 0, "set_weights must drop every packed panel");
+    let run = s.run().unwrap();
+    assert!(s.packed_panels() > 0);
+    let mut cold = ci_builder(ModelId::Han).build().unwrap();
+    cold.init_weights(1234).unwrap();
+    let cold_run = cold.run().unwrap();
+    assert!(
+        run.output.allclose(&cold_run.output, 0.0, 0.0),
+        "post-swap forward diverges from a cold session with the same weights"
+    );
+}
+
+/// Property: one quantization round-trip keeps every row element within
+/// the format's worst-case step (int8: half a per-row step; f16: 2^-10
+/// relative).
+#[test]
+fn quant_row_roundtrip_error_bounded_property() {
+    let mut rng = Pcg32::seeded(45);
+    let mut dq = Vec::new();
+    for len in [1usize, 7, 64, 129] {
+        for trial in 0..20 {
+            let row: Vec<f32> = (0..len).map(|_| (rng.gen_f32() - 0.5) * 20.0).collect();
+            let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            QuantRow::quantize(&row, QuantSpec::Int8).dequantize_into(&mut dq);
+            let step = max_abs / 127.0;
+            for (g, w) in dq.iter().zip(&row) {
+                assert!(
+                    (g - w).abs() <= 0.5 * step + 1e-6,
+                    "int8 len={len} trial={trial}: |{g} - {w}| > step/2 ({step})"
+                );
+            }
+            QuantRow::quantize(&row, QuantSpec::F16).dequantize_into(&mut dq);
+            for (g, w) in dq.iter().zip(&row) {
+                assert!(
+                    (g - w).abs() <= w.abs() * 9.8e-4 + 1e-7,
+                    "f16 len={len} trial={trial}: |{g} - {w}| too large"
+                );
+            }
+        }
+    }
+}
+
+/// Integration thresholds for the quantized feature-projection path:
+/// the session-level logit error vs the f32 baseline stays within 2%
+/// (f16) / 20% (int8) of the baseline's max logit magnitude — orders of
+/// magnitude above the per-weight rounding error, so the bound is loose
+/// enough to be robust yet tight enough to catch a broken scale or a
+/// double-quantized panel.
+#[test]
+fn quantized_forward_logit_error_bounded() {
+    let base = ci_builder(ModelId::Han).build().unwrap().run().unwrap();
+    let base_max = base
+        .output
+        .as_slice()
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()))
+        .max(1.0);
+    for (spec, rel) in [(QuantSpec::F16, 0.02f32), (QuantSpec::Int8, 0.2f32)] {
+        let run = ci_builder(ModelId::Han).quantize(spec).build().unwrap().run().unwrap();
+        assert_eq!(run.output.shape(), base.output.shape());
+        let max_err = run.output.max_abs_diff(&base.output);
+        assert!(
+            max_err <= rel * base_max,
+            "{spec:?}: max logit err {max_err} exceeds {rel} x base max {base_max}"
+        );
+        assert!(
+            max_err > 0.0,
+            "{spec:?}: quantization changed nothing — the path is not wired"
+        );
+        // determinism: quantized weights are a fixed function of the f32
+        // weights, so a second quantized session reproduces exactly
+        let again = ci_builder(ModelId::Han).quantize(spec).build().unwrap().run().unwrap();
+        assert!(again.output.allclose(&run.output, 0.0, 0.0));
+        // the report renders the delta without panicking
+        let table = hgnn_char::report::quant_delta_table(spec.name(), &base.output, &run.output);
+        assert!(table.contains(spec.name()));
+    }
+}
+
+fn quant_batches(
+    quant: Option<QuantSpec>,
+    threads: usize,
+    shards: Option<usize>,
+) -> Vec<Vec<Vec<f32>>> {
+    let mut builder = ci_builder(ModelId::Han)
+        .sampling(SamplingSpec::uniform(usize::MAX, 1))
+        .reuse(ReuseSpec::rows(1 << 12))
+        .threads(threads);
+    if let Some(spec) = quant {
+        builder = builder.quantize(spec);
+    }
+    if let Some(k) = shards {
+        builder = builder.partition(PartitionSpec::new(k).with_threads(k));
+    }
+    let mut s = builder.build().unwrap();
+    let ids = [0u32, 5, 9, 1, 5, 3];
+    vec![s.run_batch(&ids).unwrap(), s.run_batch(&ids).unwrap()]
+}
+
+/// Quantized serving composed with reuse caching and sharding: cold and
+/// warm batches stay deterministic across threads {1, 4} and shards
+/// {1, 2} (quantization is a fixed function of the cached values), and
+/// the warm batch — which substitutes dequantized cache rows — stays
+/// within the integration error bound of the f32 session instead of
+/// being bit-identical.
+#[test]
+fn quantized_serving_composes_with_reuse_and_shards() {
+    let f32_base = quant_batches(None, 1, None);
+    assert_eq!(f32_base[0], f32_base[1], "f32 warm batch must stay bit-identical");
+    let base = quant_batches(Some(QuantSpec::Int8), 1, None);
+    for t in [1usize, 4] {
+        for shards in [None, Some(2usize)] {
+            let got = quant_batches(Some(QuantSpec::Int8), t, shards);
+            assert_eq!(
+                got, base,
+                "int8 serving at {t} thread(s), {shards:?} shards must be deterministic"
+            );
+        }
+    }
+    let flat_max = |b: &Vec<Vec<Vec<f32>>>| {
+        b.iter()
+            .flatten()
+            .flatten()
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+            .max(1.0)
+    };
+    let bound = 0.2 * flat_max(&f32_base);
+    for (batch, (q, f)) in base.iter().zip(&f32_base).enumerate() {
+        for (qr, fr) in q.iter().zip(f) {
+            for (a, b) in qr.iter().zip(fr) {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "int8 batch {batch} drifts {} from f32 (bound {bound})",
+                    (a - b).abs()
+                );
+            }
+        }
+    }
+}
